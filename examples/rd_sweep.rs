@@ -1,0 +1,55 @@
+//! Rate–distortion sweep: the flexibility claim of the paper — compress a
+//! model, post-training, to ANY user-specified rate (2.0 … 6.0 bits) and
+//! trace the rate–distortion curve (perplexity vs bits/weight).
+//!
+//! ```bash
+//! cargo run --release --offline --example rd_sweep
+//! ```
+
+use radio::coordinator::{NativeProvider, Radio};
+use radio::eval::perplexity;
+use radio::exp;
+use radio::report;
+use radio::util::bench::Table;
+
+fn main() {
+    let weights = exp::trained_model("ropt-nano", exp::default_steps("ropt-nano"));
+    let (calib, _) = exp::corpora();
+    let (calib_train, _, test) = calib.split();
+
+    let ppl_fp = perplexity(&weights, &test, exp::EVAL_SEQ, exp::EVAL_WINDOWS);
+    println!("FP32 PPL: {ppl_fp:.3}\n");
+    println!("{:<8} {:>12} {:>10} {:>10}", "target", "achieved", "PPL", "pruned %");
+
+    let mut table = Table::new(&["target bits", "achieved bits", "PPL", "pruned %"]);
+    let mut provider = NativeProvider;
+    let mut last_ppl = f64::INFINITY;
+    for target in [2.0, 2.4, 2.8, 3.2, 4.0, 5.0, 6.0] {
+        let (qm, _) = Radio::new(exp::radio_cfg(target, 32, 10)).quantize(
+            &weights,
+            &calib_train,
+            &mut provider,
+            None,
+        );
+        let ppl = perplexity(&qm.to_weights(), &test, exp::EVAL_SEQ, exp::EVAL_WINDOWS);
+        println!(
+            "{target:<8.1} {:>12.4} {ppl:>10.3} {:>10.2}",
+            qm.avg_bits(),
+            100.0 * qm.pruned_fraction()
+        );
+        table.row(vec![
+            format!("{target:.1}"),
+            format!("{:.4}", qm.avg_bits()),
+            format!("{ppl:.3}"),
+            format!("{:.2}", 100.0 * qm.pruned_fraction()),
+        ]);
+        last_ppl = ppl;
+    }
+    println!("\n(PPL should approach the FP32 value {ppl_fp:.3} as rate grows — final: {last_ppl:.3})");
+    report::write_report(
+        "rd_sweep",
+        "Rate–distortion sweep (Radio, ropt-nano)",
+        &[("PPL vs target rate", &table)],
+        &format!("FP32 PPL {ppl_fp:.3}."),
+    );
+}

@@ -1,0 +1,120 @@
+"""AOT lowering: JAX/Pallas (L2+L1) → HLO text artifacts for the Rust
+runtime. Runs ONCE at build time (`make artifacts`); Python is never on
+the request path.
+
+Emits (for the configured model preset):
+  model_fwd.hlo.txt      (tokens, θ…) → (logits,)
+  model_loss.hlo.txt     (tokens, targets, θ…) → (loss,)
+  model_gradvar.hlo.txt  (tokens, u, s, θ…) → (∂c/∂Θ…, X̄…, Z)
+  quantize_kernel.hlo.txt  standalone Pallas compand-quantize (B=3)
+  matvec_kernel.hlo.txt    standalone Pallas LUT matvec
+  model_config.json      config echo for the Rust loader
+
+HLO *text* (not .serialize()): jax ≥ 0.5 emits 64-bit-id protos that
+xla_extension 0.5.1 rejects; the text parser reassigns ids.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.quantize import compand_quantize
+from .kernels.matvec import quantized_matvec
+from .kernels.ref import make_companded_luts
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(cfg: model.Config, batch: int, seq: int, out_dir: str):
+    spec = model.weight_spec(cfg)
+    wshapes = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in spec]
+    tok = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    uvec = jax.ShapeDtypeStruct((cfg.dim,), jnp.float32)
+    svec = jax.ShapeDtypeStruct((batch * seq,), jnp.float32)
+
+    fwd = functools.partial(model.forward_logits, cfg=cfg, use_pallas=True)
+    lowered = jax.jit(fwd).lower(tok, *wshapes)
+    _write(out_dir, "model_fwd.hlo.txt", to_hlo_text(lowered))
+
+    loss = functools.partial(model.loss_fn, cfg=cfg)
+    lowered = jax.jit(loss).lower(tok, tok, *wshapes)
+    _write(out_dir, "model_loss.hlo.txt", to_hlo_text(lowered))
+
+    gradvar = functools.partial(model.gradvar_fn, cfg=cfg)
+    lowered = jax.jit(gradvar).lower(tok, uvec, svec, *wshapes)
+    _write(out_dir, "model_gradvar.hlo.txt", to_hlo_text(lowered))
+
+
+def lower_kernels(out_dir: str):
+    # Companded quantizer: 64 groups × 256 weights, 3 bits.
+    theta = jax.ShapeDtypeStruct((64, 256), jnp.float32)
+    gvec = jax.ShapeDtypeStruct((64,), jnp.float32)
+    qfn = functools.partial(compand_quantize, bits=3)
+    lowered = jax.jit(lambda t, s, m: (qfn(t, s, m),)).lower(theta, gvec, gvec)
+    _write(out_dir, "quantize_kernel.hlo.txt", to_hlo_text(lowered))
+
+    # LUT matvec: K=512 rows, M=256 cols, G=8 groups.
+    k, m, g = 512, 256, 8
+    codes = jax.ShapeDtypeStruct((k, m), jnp.int32)
+    x = jax.ShapeDtypeStruct((k,), jnp.float32)
+    gid = jax.ShapeDtypeStruct((k,), jnp.int32)
+    bits = jax.ShapeDtypeStruct((g,), jnp.int32)
+    sc = jax.ShapeDtypeStruct((g,), jnp.float32)
+    luts = make_companded_luts(8)
+
+    def mv(codes, x, gid, bits, scales, means):
+        return (quantized_matvec(codes, x, gid, bits, scales, means, luts),)
+
+    lowered = jax.jit(mv).lower(codes, x, gid, bits, sc, sc)
+    _write(out_dir, "matvec_kernel.hlo.txt", to_hlo_text(lowered))
+
+
+def _write(out_dir: str, name: str, text: str):
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"[aot] wrote {path} ({len(text)} chars)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--model", default="ropt-small")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cfg = model.PRESETS[args.model]
+    lower_model(cfg, args.batch, args.seq, args.out)
+    lower_kernels(args.out)
+    meta = {
+        "model": args.model,
+        "vocab": cfg.vocab,
+        "dim": cfg.dim,
+        "heads": cfg.heads,
+        "layers": cfg.layers,
+        "mlp": cfg.mlp,
+        "max_seq": cfg.max_seq,
+        "batch": args.batch,
+        "seq": args.seq,
+    }
+    with open(os.path.join(args.out, "model_config.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print("[aot] wrote model_config.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""L1 Pallas kernel: tiled matmul for the model's MLP layers.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): BlockSpec expresses the
+HBM↔VMEM schedule; each grid step (i, j, k) loads a (TN, TK) tile of x and
+a (TK, TM) tile of w into VMEM and feeds the MXU via `jnp.dot`, with the
+output tile accumulated across the K grid dimension — the canonical Pallas
+reduction replacing the CUDA kernel's atomicAdd.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; real-TPU numbers are estimated in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+
+def _pick_tile(dim: int, pref: int) -> int:
+    """Largest divisor of `dim` that is ≤ pref (keeps BlockSpecs exact)."""
+    t = min(pref, dim)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=())
+def tiled_matmul(x, w):
+    """x (N,K) @ w (K,M) via the Pallas kernel (interpret mode)."""
+    n, k = x.shape
+    k2, m = w.shape
+    assert k == k2
+    tn = _pick_tile(n, 128)
+    tk = _pick_tile(k, 128)
+    tm = _pick_tile(m, 128)
+    grid = (n // tn, m // tm, k // tk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tm), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tn, tm), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def vmem_estimate_bytes(tn=128, tk=128, tm=128, dtype_bytes=4):
+    """VMEM footprint of one grid step (double-buffered), for §Perf."""
+    tiles = tn * tk + tk * tm + tn * tm
+    return 2 * tiles * dtype_bytes  # ×2: double buffering

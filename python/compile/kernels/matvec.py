@@ -1,0 +1,76 @@
+"""L1 Pallas kernel: mixed-depth LUT-dequant matvec — the paper's
+Appendix-A CUDA kernel rethought for TPU (DESIGN.md §Hardware-Adaptation).
+
+CUDA → Pallas mapping:
+- thread block (256×256)      → BlockSpec (K, TM) tile over output columns
+- per-thread column walk      → vectorized (K, TM) dequant on the VPU
+- __shared__ LUT              → VMEM-resident (9, 256) LUT table, gathered
+- divergence-free 4-row depth → per-row group_id with uniform depth inside
+                                a group (vector lanes stay contiguous)
+- atomicAdd reduction         → full-K dot per grid step (no reduction
+                                race exists: each step owns its columns)
+
+Codes arrive unpacked (one int32 per weight) because interpret mode is a
+functional check, not a bandwidth measurement; the bandwidth story is
+measured by the Rust kernel (infer::matvec) and estimated for TPU in
+EXPERIMENTS.md §Perf.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matvec_kernel(codes_ref, x_ref, gid_ref, bits_ref, scale_ref, mean_ref, lut_ref, o_ref):
+    codes = codes_ref[...]          # (K, TM) int32
+    x = x_ref[...]                  # (K, 1)
+    gid = gid_ref[...][:, 0]        # (K,)
+    bits = bits_ref[...][:, 0]      # (G,)
+    scales = scale_ref[...][:, 0]   # (G,)
+    means = mean_ref[...][:, 0]     # (G,)
+    luts = lut_ref[...]             # (9, 256)
+    b_k = bits[gid]                 # (K,)
+    std = luts[b_k[:, None], codes]  # gather: standardized dequant values
+    w = means[gid][:, None] + scales[gid][:, None] * std
+    o_ref[...] = jnp.sum(x * w, axis=0, keepdims=True)
+
+
+def _pick_tile(dim: int, pref: int) -> int:
+    t = min(pref, dim)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+def quantized_matvec(codes, x, group_id, bits, scales, means, luts):
+    """y (M,) from codes (K,M) int32, x (K,), per-row group_id (K,),
+    per-group bits/scales/means (G,), luts (9, 256)."""
+    k, m = codes.shape
+    g = bits.shape[0]
+    tm = _pick_tile(m, 256)
+    grid = (m // tm,)
+    y = pl.pallas_call(
+        _matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k, tm), lambda j: (0, j)),
+            pl.BlockSpec((k, 1), lambda j: (0, 0)),
+            pl.BlockSpec((k, 1), lambda j: (0, 0)),
+            pl.BlockSpec((g, 1), lambda j: (0, 0)),
+            pl.BlockSpec((g, 1), lambda j: (0, 0)),
+            pl.BlockSpec((g, 1), lambda j: (0, 0)),
+            pl.BlockSpec((9, 256), lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tm), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, m), jnp.float32),
+        interpret=True,
+    )(
+        codes.astype(jnp.int32),
+        x.astype(jnp.float32).reshape(k, 1),
+        group_id.astype(jnp.int32).reshape(k, 1),
+        bits.astype(jnp.int32).reshape(g, 1),
+        scales.astype(jnp.float32).reshape(g, 1),
+        means.astype(jnp.float32).reshape(g, 1),
+        luts.astype(jnp.float32),
+    )
+    return y.reshape(m)

@@ -1,0 +1,61 @@
+"""L1 Pallas kernel: companded quantize-dequantize (paper Eq. 8).
+
+One grid step processes a block of groups: each group row is companded
+with its own (scale, mean), uniformly quantized to 2^bits levels, and
+expanded back. Pure VPU elementwise work; the per-group parameters ride
+along as (G,1) blocks.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SQRT2 = 1.4142135623730951
+
+
+def _quantize_kernel(theta_ref, scale_ref, mean_ref, o_ref, *, bits: int):
+    theta = theta_ref[...]
+    s = scale_ref[...]  # (G, 1)
+    m = mean_ref[...]
+    levels = float(1 << bits)
+    d = theta - m
+    t = 0.5 + 0.5 * jnp.sign(d) * (1.0 - jnp.exp(-(SQRT2 * jnp.abs(d)) / (3.0 * s)))
+    code = jnp.clip(jnp.floor(t * levels), 0.0, levels - 1.0)
+    tq = (code + 0.5) / levels
+    dq = tq - 0.5
+    mag = jnp.maximum(1.0 - 2.0 * jnp.abs(dq), 1e-12)
+    o_ref[...] = m - (3.0 * s / SQRT2) * jnp.sign(dq) * jnp.log(mag)
+
+
+def _pick_tile(dim: int, pref: int) -> int:
+    t = min(pref, dim)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def compand_quantize(theta, scale, mean, bits: int):
+    """theta (G,N), scale (G,), mean (G,) → dequantized (G,N)."""
+    g, n = theta.shape
+    tg = _pick_tile(g, 64)
+    tn = _pick_tile(n, 256)
+    grid = (g // tg, n // tn)
+    return pl.pallas_call(
+        functools.partial(_quantize_kernel, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tg, tn), lambda i, j: (i, j)),
+            pl.BlockSpec((tg, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((tg, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tg, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((g, n), jnp.float32),
+        interpret=True,
+    )(
+        theta.astype(jnp.float32),
+        scale.astype(jnp.float32).reshape(g, 1),
+        mean.astype(jnp.float32).reshape(g, 1),
+    )

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each `ref_*` function computes the same mathematical result as its Pallas
+counterpart using plain jax.numpy; pytest (with hypothesis sweeps) asserts
+allclose between the two across shapes and dtypes.
+"""
+
+import jax.numpy as jnp
+
+SQRT2 = 1.4142135623730951
+
+
+def ref_matmul(x, w):
+    """x (N,K) @ w (K,M)."""
+    return x @ w
+
+
+def compand(theta, scale, mean):
+    """Laplace compander σ(θ) ∈ (0,1) (paper Eq. 8, expanded form)."""
+    d = theta - mean
+    mag = 1.0 - jnp.exp(-(SQRT2 * jnp.abs(d)) / (3.0 * scale))
+    return 0.5 + 0.5 * jnp.sign(d) * mag
+
+
+def expand(t, scale, mean):
+    """Inverse compander."""
+    d = t - 0.5
+    mag = jnp.maximum(1.0 - 2.0 * jnp.abs(d), 1e-12)
+    return mean - (3.0 * scale / SQRT2) * jnp.sign(d) * jnp.log(mag)
+
+
+def ref_compand_quantize(theta, scale, mean, bits: int):
+    """Companded quantize-dequantize. theta (G,N); scale/mean (G,)."""
+    levels = float(1 << bits)
+    s = scale[:, None]
+    m = mean[:, None]
+    t = compand(theta, s, m)
+    code = jnp.clip(jnp.floor(t * levels), 0.0, levels - 1.0)
+    return expand((code + 0.5) / levels, s, m)
+
+
+def ref_lut_matvec(codes, x, group_id, bits, scales, means, luts):
+    """Mixed-depth LUT-dequant matvec (the Appendix-A kernel's math):
+
+    y[j] = Σ_k x[k] · (means[g(k)] + scales[g(k)] · luts[bits[g(k)], codes[k, j]])
+    """
+    b_k = bits[group_id]            # (K,)
+    deq = luts[b_k[:, None], codes]  # (K, M) standardized values
+    w = means[group_id][:, None] + scales[group_id][:, None] * deq
+    return x @ w
+
+
+def make_companded_luts(max_bits: int = 8):
+    """Standardized (µ=0, S=1) dequant LUTs per depth, padded to 2^max."""
+    size = 1 << max_bits
+    rows = []
+    for b in range(max_bits + 1):
+        if b == 0:
+            rows.append(jnp.zeros((size,), jnp.float32))
+            continue
+        levels = 1 << b
+        t = (jnp.arange(levels, dtype=jnp.float32) + 0.5) / levels
+        vals = expand(t, 1.0, 0.0)
+        rows.append(jnp.pad(vals, (0, size - levels)))
+    return jnp.stack(rows)  # (max_bits+1, 2^max_bits)

@@ -1,0 +1,192 @@
+"""L2: the Radio transformer in JAX — numerically identical to the Rust
+substrate (`rust/src/model/transformer.rs`): pre-LN GPT, `X @ W + b`
+convention with W stored (d_in, d_out), tanh-GELU, tied embedding head,
+LN eps 1e-5.
+
+Three build-time graphs are lowered by `aot.py`:
+
+- ``forward``   (tokens, θ…) → logits            — evaluation/serving path;
+                MLP matmuls run through the Pallas tiled-matmul kernel
+                (interpret mode) so the L1 kernel is on the artifact path.
+- ``loss``      (tokens, targets, θ…) → scalar   — perplexity evaluation.
+- ``gradvar``   (tokens, u, s, θ…) → (∂c/∂Θ_n …, X̄_n …, Z) with
+                c = sᵀ(Z·u) — Algorithm 1's stochastic gradient sample.
+
+Python never runs at inference time; these functions exist only to be
+lowered once to HLO text.
+"""
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+LN_EPS = 1e-5
+GELU_A = 0.7978845608028654  # sqrt(2/pi)
+GELU_C = 0.044715
+
+ROLES = ("q_proj", "k_proj", "v_proj", "o_proj", "mlp_up", "mlp_down")
+
+
+@dataclass(frozen=True)
+class Config:
+    vocab: int
+    dim: int
+    heads: int
+    layers: int
+    mlp: int
+    max_seq: int
+
+    @property
+    def head_dim(self) -> int:
+        assert self.dim % self.heads == 0
+        return self.dim // self.heads
+
+
+PRESETS = {
+    "ropt-nano": Config(256, 64, 2, 2, 256, 64),
+    "ropt-micro": Config(256, 96, 3, 3, 384, 64),
+    "ropt-small": Config(256, 128, 4, 4, 512, 64),
+    "ropt-med": Config(256, 192, 6, 6, 768, 64),
+    "ropt-large": Config(256, 256, 8, 8, 1024, 64),
+    "ropt-xl": Config(256, 384, 8, 10, 1536, 64),
+}
+
+
+def weight_spec(cfg: Config) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Canonical (name, shape) list — EXACTLY the order of
+    `Weights::param_slices_mut` on the Rust side."""
+    e, f = cfg.dim, cfg.mlp
+    spec = [("embed", (cfg.vocab, e)), ("pos", (cfg.max_seq, e))]
+    for l in range(cfg.layers):
+        spec += [
+            (f"l{l}.ln1_g", (e,)),
+            (f"l{l}.ln1_b", (e,)),
+            (f"l{l}.wq", (e, e)),
+            (f"l{l}.bq", (e,)),
+            (f"l{l}.wk", (e, e)),
+            (f"l{l}.bk", (e,)),
+            (f"l{l}.wv", (e, e)),
+            (f"l{l}.bv", (e,)),
+            (f"l{l}.wo", (e, e)),
+            (f"l{l}.bo", (e,)),
+            (f"l{l}.ln2_g", (e,)),
+            (f"l{l}.ln2_b", (e,)),
+            (f"l{l}.w1", (e, f)),
+            (f"l{l}.b1", (f,)),
+            (f"l{l}.w2", (f, e)),
+            (f"l{l}.b2", (e,)),
+        ]
+    spec += [("lnf_g", (e,)), ("lnf_b", (e,))]
+    return spec
+
+
+def quant_matrix_names(cfg: Config) -> List[str]:
+    """The 6·L quantizable matrices, in Rust `matrix_ids()` order."""
+    names = []
+    for l in range(cfg.layers):
+        names += [f"l{l}.wq", f"l{l}.wk", f"l{l}.wv", f"l{l}.wo", f"l{l}.w1", f"l{l}.w2"]
+    return names
+
+
+def _ln(x, g, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return g * (x - mu) / jnp.sqrt(var + LN_EPS) + b
+
+
+def _gelu(x):
+    return 0.5 * x * (1.0 + jnp.tanh(GELU_A * (x + GELU_C * x * x * x)))
+
+
+def _attention(q, k, v, cfg: Config):
+    """Causal multi-head attention. q/k/v: (B, T, E)."""
+    bsz, t, e = q.shape
+    h, dh = cfg.heads, cfg.head_dim
+    qh = q.reshape(bsz, t, h, dh).transpose(0, 2, 1, 3)  # (B,H,T,dh)
+    kh = k.reshape(bsz, t, h, dh).transpose(0, 2, 1, 3)
+    vh = v.reshape(bsz, t, h, dh).transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / jnp.sqrt(float(dh))
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, vh)
+    return ctx.transpose(0, 2, 1, 3).reshape(bsz, t, e)
+
+
+def _matmul(x, w, use_pallas: bool):
+    if use_pallas:
+        from .kernels.matmul import tiled_matmul
+
+        b, t, din = x.shape
+        y = tiled_matmul(x.reshape(b * t, din), w)
+        return y.reshape(b, t, w.shape[1])
+    return x @ w
+
+
+def forward_intermediates(tokens, weights, cfg: Config, use_pallas: bool = False):
+    """Forward pass. Returns (Z, logits, inputs) where `inputs[name]` is the
+    (B,T,·) activation feeding quantizable matrix `name`."""
+    names = [n for n, _ in weight_spec(cfg)]
+    w = dict(zip(names, weights))
+    bsz, t = tokens.shape
+    x = w["embed"][tokens] + w["pos"][:t][None, :, :]
+    inputs = {}
+    for l in range(cfg.layers):
+        p = f"l{l}."
+        a = _ln(x, w[p + "ln1_g"], w[p + "ln1_b"])
+        inputs[p + "wq"] = a
+        inputs[p + "wk"] = a
+        inputs[p + "wv"] = a
+        q = a @ w[p + "wq"] + w[p + "bq"]
+        k = a @ w[p + "wk"] + w[p + "bk"]
+        v = a @ w[p + "wv"] + w[p + "bv"]
+        ctx = _attention(q, k, v, cfg)
+        inputs[p + "wo"] = ctx
+        x = x + ctx @ w[p + "wo"] + w[p + "bo"]
+        bn = _ln(x, w[p + "ln2_g"], w[p + "ln2_b"])
+        inputs[p + "w1"] = bn
+        u = _matmul(bn, w[p + "w1"], use_pallas) + w[p + "b1"]
+        hmat = _gelu(u)
+        inputs[p + "w2"] = hmat
+        x = x + _matmul(hmat, w[p + "w2"], use_pallas) + w[p + "b2"]
+    z = _ln(x, w["lnf_g"], w["lnf_b"])
+    logits = z @ w["embed"].T
+    return z, logits, inputs
+
+
+def forward_logits(tokens, *weights, cfg: Config, use_pallas: bool = True):
+    _, logits, _ = forward_intermediates(tokens, list(weights), cfg, use_pallas)
+    return (logits,)
+
+
+def loss_fn(tokens, targets, *weights, cfg: Config):
+    _, logits, _ = forward_intermediates(tokens, list(weights), cfg, use_pallas=False)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return (jnp.mean(nll),)
+
+
+def gradvar_fn(tokens, u, s, *weights, cfg: Config):
+    """Gradient sample for Algorithm 1: grads of c = Σ_bt s_bt (Z_bt·u)
+    with respect to each quantizable matrix; plus per-matrix input means
+    (X̄ numerators) and Z itself (for PCA refresh)."""
+    weights = list(weights)
+    names = [n for n, _ in weight_spec(cfg)]
+    qnames = quant_matrix_names(cfg)
+    qidx = [names.index(n) for n in qnames]
+
+    def c_of(qmats):
+        wfull = list(weights)
+        for i, qi in enumerate(qidx):
+            wfull[qi] = qmats[i]
+        z, _, inputs = forward_intermediates(tokens, wfull, cfg, use_pallas=False)
+        proj = jnp.einsum("bte,e->bt", z, u)
+        c = jnp.sum(proj * s.reshape(proj.shape))
+        means = [jnp.mean(inputs[n], axis=(0, 1)) for n in qnames]
+        return c, (means, z)
+
+    qmats = [weights[i] for i in qidx]
+    grads, (means, z) = jax.grad(c_of, has_aux=True)(qmats)
+    return tuple(grads) + tuple(means) + (z,)

@@ -1,0 +1,129 @@
+"""L1 correctness: every Pallas kernel against its pure-jnp oracle,
+with hypothesis sweeping shapes/values — the core kernel signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.matmul import tiled_matmul
+from compile.kernels.matvec import quantized_matvec
+from compile.kernels.quantize import compand_quantize
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ------------------------------------------------------------ tiled matmul
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.sampled_from([16, 48, 128]),
+    k=st.sampled_from([32, 96, 128]),
+    m=st.sampled_from([16, 64, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(n, k, m, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, k)).astype(np.float32)
+    w = rng.normal(size=(k, m)).astype(np.float32)
+    got = np.asarray(tiled_matmul(jnp.asarray(x), jnp.asarray(w)))
+    want = np.asarray(ref.ref_matmul(jnp.asarray(x), jnp.asarray(w)))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_matmul_odd_divisor_shapes():
+    # Shapes whose divisors are odd — exercises the tile picker.
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(18, 30)).astype(np.float32)
+    w = rng.normal(size=(30, 42)).astype(np.float32)
+    got = np.asarray(tiled_matmul(jnp.asarray(x), jnp.asarray(w)))
+    np.testing.assert_allclose(got, x @ w, rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------------- companded quantization
+@settings(max_examples=12, deadline=None)
+@given(
+    g=st.sampled_from([8, 64]),
+    n=st.sampled_from([32, 256]),
+    bits=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_compand_quantize_matches_ref(g, n, bits, seed):
+    rng = np.random.default_rng(seed)
+    theta = rng.laplace(scale=0.4, size=(g, n)).astype(np.float32)
+    scale = (0.1 + rng.random(g)).astype(np.float32)
+    mean = rng.normal(scale=0.05, size=g).astype(np.float32)
+    got = np.asarray(compand_quantize(jnp.asarray(theta), jnp.asarray(scale), jnp.asarray(mean), bits))
+    want = np.asarray(ref.ref_compand_quantize(jnp.asarray(theta), jnp.asarray(scale), jnp.asarray(mean), bits))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_compand_quantize_error_shrinks_with_bits():
+    rng = np.random.default_rng(1)
+    theta = rng.laplace(scale=1.0, size=(16, 512)).astype(np.float32)
+    scale = np.ones(16, np.float32)
+    mean = np.zeros(16, np.float32)
+    errs = []
+    for bits in (2, 4, 6):
+        deq = np.asarray(compand_quantize(jnp.asarray(theta), jnp.asarray(scale), jnp.asarray(mean), bits))
+        errs.append(float(np.mean((deq - theta) ** 2)))
+    assert errs[0] > errs[1] > errs[2]
+
+
+# ----------------------------------------------------------- LUT matvec
+def _random_matvec_case(rng, k, m, g):
+    group_id = rng.integers(0, g, size=k).astype(np.int32)
+    bits = rng.integers(1, 9, size=g).astype(np.int32)
+    # Codes must be < 2^bits of their row's group.
+    codes = np.zeros((k, m), np.int32)
+    for i in range(k):
+        codes[i] = rng.integers(0, 1 << bits[group_id[i]], size=m)
+    x = rng.normal(size=k).astype(np.float32)
+    scales = (0.1 + rng.random(g)).astype(np.float32)
+    means = rng.normal(scale=0.05, size=g).astype(np.float32)
+    return codes, x, group_id, bits, scales, means
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    k=st.sampled_from([32, 128]),
+    m=st.sampled_from([64, 256]),
+    g=st.sampled_from([2, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quantized_matvec_matches_ref(k, m, g, seed):
+    rng = np.random.default_rng(seed)
+    codes, x, gid, bits, scales, means = _random_matvec_case(rng, k, m, g)
+    luts = ref.make_companded_luts(8)
+    got = np.asarray(
+        quantized_matvec(
+            jnp.asarray(codes), jnp.asarray(x), jnp.asarray(gid),
+            jnp.asarray(bits), jnp.asarray(scales), jnp.asarray(means), luts,
+        )
+    )
+    want = np.asarray(
+        ref.ref_lut_matvec(
+            jnp.asarray(codes), jnp.asarray(x), jnp.asarray(gid),
+            jnp.asarray(bits), jnp.asarray(scales), jnp.asarray(means), luts,
+        )
+    )
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+def test_compander_roundtrip():
+    t = jnp.linspace(-3, 3, 101)
+    c = ref.compand(t, 1.3, -0.2)
+    back = ref.expand(c, 1.3, -0.2)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(t), rtol=1e-4, atol=1e-4)
+
+
+def test_luts_match_quantizer_centers():
+    luts = np.asarray(ref.make_companded_luts(8))
+    for b in (1, 3, 5):
+        levels = 1 << b
+        t = (np.arange(levels) + 0.5) / levels
+        want = np.asarray(ref.expand(jnp.asarray(t), 1.0, 0.0))
+        np.testing.assert_allclose(luts[b, :levels], want, rtol=1e-5)
+    # Padding is zero.
+    assert luts[1, 2:].max() == 0.0

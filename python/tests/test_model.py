@@ -1,0 +1,118 @@
+"""L2 model checks: shapes, causality, gradvar structure, and consistency
+between the Pallas-backed and plain forward paths."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = model.Config(vocab=32, dim=16, heads=2, layers=2, mlp=32, max_seq=8)
+
+
+def random_weights(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.normal(scale=0.05, size=s).astype(np.float32))
+            if len(s) > 1 or not n.endswith("_g")
+            else jnp.ones(s, jnp.float32)
+            for n, s in model.weight_spec(cfg)]
+
+
+def test_forward_shapes():
+    w = random_weights(CFG)
+    toks = jnp.zeros((2, 6), jnp.int32)
+    z, logits, inputs = model.forward_intermediates(toks, w, CFG)
+    assert z.shape == (2, 6, CFG.dim)
+    assert logits.shape == (2, 6, CFG.vocab)
+    assert inputs["l0.wq"].shape == (2, 6, CFG.dim)
+    assert inputs["l1.w2"].shape == (2, 6, CFG.mlp)
+
+
+def test_causality():
+    w = random_weights(CFG, seed=1)
+    rng = np.random.default_rng(2)
+    toks = rng.integers(0, CFG.vocab, size=(1, 6)).astype(np.int32)
+    z1, _, _ = model.forward_intermediates(jnp.asarray(toks), w, CFG)
+    toks2 = toks.copy()
+    toks2[0, -1] = (toks2[0, -1] + 1) % CFG.vocab
+    z2, _, _ = model.forward_intermediates(jnp.asarray(toks2), w, CFG)
+    np.testing.assert_allclose(np.asarray(z1)[0, :5], np.asarray(z2)[0, :5], atol=1e-5)
+    assert np.abs(np.asarray(z1)[0, 5] - np.asarray(z2)[0, 5]).sum() > 1e-4
+
+
+def test_pallas_and_plain_forward_agree():
+    w = random_weights(CFG, seed=3)
+    rng = np.random.default_rng(4)
+    toks = jnp.asarray(rng.integers(0, CFG.vocab, size=(2, 8)).astype(np.int32))
+    (lp,) = model.forward_logits(toks, *w, cfg=CFG, use_pallas=True)
+    (ld,) = model.forward_logits(toks, *w, cfg=CFG, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(ld), rtol=2e-4, atol=2e-4)
+
+
+def test_loss_of_uniform_model():
+    # Zero weights → uniform logits → loss = ln(vocab).
+    w = [jnp.zeros(s, jnp.float32) for _, s in model.weight_spec(CFG)]
+    toks = jnp.zeros((1, 4), jnp.int32)
+    (loss,) = model.loss_fn(toks, toks, *w, cfg=CFG)
+    np.testing.assert_allclose(float(loss), np.log(CFG.vocab), rtol=1e-5)
+
+
+def test_gradvar_outputs():
+    w = random_weights(CFG, seed=5)
+    rng = np.random.default_rng(6)
+    toks = jnp.asarray(rng.integers(0, CFG.vocab, size=(2, 8)).astype(np.int32))
+    u = jnp.asarray(rng.normal(size=CFG.dim).astype(np.float32))
+    s = jnp.asarray(rng.choice([0.0, 1.0], size=16).astype(np.float32))
+    outs = model.gradvar_fn(toks, u, s, *w, cfg=CFG)
+    nq = 6 * CFG.layers
+    assert len(outs) == 2 * nq + 1
+    # Grad shapes match matrix shapes; means match input dims.
+    qnames = model.quant_matrix_names(CFG)
+    spec = dict(model.weight_spec(CFG))
+    for i, name in enumerate(qnames):
+        assert outs[i].shape == spec[name]
+        assert outs[nq + i].shape == (spec[name][0],)
+    assert outs[-1].shape == (2, 8, CFG.dim)
+    # Nonzero gradients when s has support.
+    assert float(jnp.sum(outs[0] ** 2)) > 0
+
+
+def test_gradvar_zero_mask_gives_zero_grads():
+    w = random_weights(CFG, seed=7)
+    toks = jnp.zeros((1, 8), jnp.int32)
+    u = jnp.ones(CFG.dim, jnp.float32)
+    s = jnp.zeros(8, jnp.float32)
+    outs = model.gradvar_fn(toks, u, s, *w, cfg=CFG)
+    for i in range(6 * CFG.layers):
+        assert float(jnp.sum(outs[i] ** 2)) == 0.0
+
+
+def test_gradvar_matches_manual_fd():
+    # Central finite difference on one weight entry.
+    w = random_weights(CFG, seed=8)
+    rng = np.random.default_rng(9)
+    toks = jnp.asarray(rng.integers(0, CFG.vocab, size=(1, 6)).astype(np.int32))
+    u = jnp.asarray(rng.normal(size=CFG.dim).astype(np.float32))
+    s = jnp.asarray(np.ones(6, np.float32))
+    names = [n for n, _ in model.weight_spec(CFG)]
+    wq_idx = names.index("l0.wq")
+
+    def c_value(wlist):
+        z, _, _ = model.forward_intermediates(toks, wlist, CFG)
+        return float(jnp.sum(jnp.einsum("bte,e->bt", z, u) * s.reshape(1, 6)))
+
+    outs = model.gradvar_fn(toks, u, s, *w, cfg=CFG)
+    analytic = float(outs[0][1, 2])  # l0.wq grad at (1,2)
+
+    eps = 1e-3
+    wp = list(w)
+    wp[wq_idx] = w[wq_idx].at[1, 2].add(eps)
+    cp = c_value(wp)
+    wp[wq_idx] = w[wq_idx].at[1, 2].add(-eps)
+    cm = c_value(wp)
+    fd = (cp - cm) / (2 * eps)
+    assert abs(fd - analytic) / max(abs(fd), abs(analytic), 1e-4) < 0.05

@@ -1,0 +1,82 @@
+//! Figure 2: companding quantization — quantization error of uniform vs
+//! companded 4-bit quantizers on Gaussian and Laplace weights, plus the
+//! per-magnitude error profile showing companding shrinks bins where the
+//! density is high.
+
+use radio::quant::companding;
+use radio::quant::rtn;
+use radio::report;
+use radio::util::bench::Table;
+use radio::util::rng::Rng;
+
+fn mse_uniform(xs: &[f32], bits: u8) -> f64 {
+    let d = rtn::range_step(xs, bits, 0.0);
+    rtn::mse_for_step(xs, bits, d, 0.0)
+}
+
+fn mse_companded(xs: &[f32], bits: u8) -> f64 {
+    let mut v = xs.to_vec();
+    companding::quantize_dequantize(&mut v, bits, 1.0, 0.0)
+}
+
+fn main() {
+    let n = 200_000;
+    let mut rng = Rng::new(0xF16_2);
+    let mut gauss = vec![0f32; n];
+    let mut lap = vec![0f32; n];
+    rng.fill_gauss(&mut gauss, 0.0, 1.0);
+    rng.fill_laplace(&mut lap, 0.0, 1.0);
+
+    let mut t = Table::new(&["bits", "uniform MSE (Laplace)", "companded MSE (Laplace)", "gain ×", "uniform (Gauss)", "companded (Gauss)"]);
+    for bits in 2..=6u8 {
+        let (mu_l, mc_l) = (mse_uniform(&lap, bits), mse_companded(&lap, bits));
+        let (mu_g, mc_g) = (mse_uniform(&gauss, bits), mse_companded(&gauss, bits));
+        println!(
+            "{bits} bits: Laplace uniform {mu_l:.5} vs companded {mc_l:.5} ({:.2}×); Gauss {mu_g:.5} vs {mc_g:.5}",
+            mu_l / mc_l
+        );
+        t.row(vec![
+            bits.to_string(),
+            format!("{mu_l:.5}"),
+            format!("{mc_l:.5}"),
+            format!("{:.2}", mu_l / mc_l),
+            format!("{mu_g:.5}"),
+            format!("{mc_g:.5}"),
+        ]);
+    }
+
+    // Per-magnitude error profile at 4 bits (the figure's visual claim:
+    // smaller bins near the mode).
+    let mut profile = Table::new(&["|θ| bucket", "uniform |err|", "companded |err|"]);
+    let bits = 4u8;
+    let d = rtn::range_step(&lap, bits, 0.0);
+    let mut buckets = vec![(0f64, 0f64, 0usize); 8];
+    for &x in &lap {
+        let b = ((x.abs() / 0.75) as usize).min(7);
+        let eu = (x - rtn::dequantize_code(rtn::quantize_code(x, bits, d, 0.0), d, 0.0)).abs();
+        let code = companding::quantize_code(x, bits, 1.0, 0.0);
+        let ec = (x - companding::dequantize_code(code, bits, 1.0, 0.0)).abs();
+        buckets[b].0 += eu as f64;
+        buckets[b].1 += ec as f64;
+        buckets[b].2 += 1;
+    }
+    for (i, (eu, ec, cnt)) in buckets.iter().enumerate() {
+        if *cnt == 0 {
+            continue;
+        }
+        let lo = 0.75 * i as f64;
+        println!("|θ|∈[{lo:.2},{:.2}): uniform {:.4}, companded {:.4}  (n={cnt})", lo + 0.75, eu / *cnt as f64, ec / *cnt as f64);
+        profile.row(vec![
+            format!("[{lo:.2},{:.2})", lo + 0.75),
+            format!("{:.4}", eu / *cnt as f64),
+            format!("{:.4}", ec / *cnt as f64),
+        ]);
+    }
+    println!("\n(companded error smaller near 0 — where the density mass is — larger in the tails)");
+    report::write_report(
+        "fig2_companding",
+        "Figure 2: companded vs uniform quantization",
+        &[("MSE vs bits", &t), ("per-magnitude profile @4b", &profile)],
+        "Companding (Laplace-CDF^(1/3) transform) reduces error for probable weights.",
+    );
+}

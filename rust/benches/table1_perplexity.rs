@@ -1,0 +1,87 @@
+//! Table 1 + Table 5: perplexity of quantized models at 3 and 4 bits
+//! across the `ropt` model family × {RTN, GPTQ, OWQ, AWQ, Radio}, on both
+//! the shifted test domain (WikiText2 analogue, Table 1) and the
+//! calibration-domain validation split (C4 analogue, Table 5).
+//!
+//! Expected shape (vs the paper): Radio ≤ GPTQ/AWQ/OWQ ≤ RTN at 3 bits,
+//! with the gap shrinking at 4 bits and for larger models.
+
+use radio::coordinator::gradients::NativeProvider;
+use radio::coordinator::pipeline::run_method;
+use radio::eval::perplexity;
+use radio::exp;
+use radio::report;
+use radio::util::bench::Table;
+
+fn main() {
+    let quick = std::env::var("RADIO_BENCH_FULL").is_err();
+    // Model axis (small subset in quick mode — full grid takes ~hour).
+    let presets: &[&str] = if quick {
+        &["ropt-nano", "ropt-micro"]
+    } else {
+        &["ropt-nano", "ropt-micro", "ropt-small", "ropt-med"]
+    };
+    let (calib, shifted) = exp::corpora();
+    let (calib_train, calib_val, _) = calib.split();
+    let (_, _, shifted_test) = shifted.split();
+
+    let mut t1 = Table::new(&{
+        let mut h = vec!["Wiki-test PPL (↓)"];
+        h.extend(presets.iter().copied());
+        h
+    });
+    let mut t5 = Table::new(&{
+        let mut h = vec!["C4-val PPL (↓)"];
+        h.extend(presets.iter().copied());
+        h
+    });
+
+    // FP32 row.
+    let models: Vec<_> = presets
+        .iter()
+        .map(|p| exp::trained_model(p, exp::default_steps(p)))
+        .collect();
+    let mut row1 = vec!["FP32".to_string()];
+    let mut row5 = vec!["FP32".to_string()];
+    for w in &models {
+        row1.push(format!("{:.3}", perplexity(w, &shifted_test, exp::EVAL_SEQ, exp::EVAL_WINDOWS)));
+        row5.push(format!("{:.3}", perplexity(w, &calib_val, exp::EVAL_SEQ, exp::EVAL_WINDOWS)));
+    }
+    t1.row(row1);
+    t5.row(row5);
+
+    let iters = if quick { 10 } else { 24 };
+    for bits in [4u8, 3u8] {
+        for method in exp::method_grid(bits, 64, iters) {
+            let mut row1 = vec![format!("{} @{}b", method.name(), bits)];
+            let mut row5 = vec![format!("{} @{}b", method.name(), bits)];
+            for w in &models {
+                let mut provider = NativeProvider;
+                let r = run_method(&method, w, &calib_train, &mut provider);
+                let wq = r.model.to_weights();
+                row1.push(format!(
+                    "{:.3}",
+                    perplexity(&wq, &shifted_test, exp::EVAL_SEQ, exp::EVAL_WINDOWS)
+                ));
+                row5.push(format!(
+                    "{:.3}",
+                    perplexity(&wq, &calib_val, exp::EVAL_SEQ, exp::EVAL_WINDOWS)
+                ));
+            }
+            println!("done: {} @{}b", method.name(), bits);
+            t1.row(row1);
+            t5.row(row5);
+        }
+    }
+
+    println!("\nTable 1 analogue — WikiText-like (shifted-domain) test perplexity:");
+    t1.print();
+    println!("\nTable 5 analogue — C4-like (calibration-domain) validation perplexity:");
+    t5.print();
+    report::write_report(
+        "table1_table5_perplexity",
+        "Tables 1 & 5: quantized perplexity across models × methods",
+        &[("Table 1 (shifted test)", &t1), ("Table 5 (calib val)", &t5)],
+        "Set RADIO_BENCH_FULL=1 for the full model grid.",
+    );
+}

@@ -1,0 +1,75 @@
+//! Table 2: sensitivity of Radio-quantized model accuracy to the
+//! optimization hyperparameters — (a) minibatch size, (b) subsampled
+//! token count — and (c) the quantization group size.
+//!
+//! Expected shape: (a) and (b) flat over a wide range; (c) smaller groups
+//! help at 3 bits more than at 4.
+
+use radio::coordinator::{NativeProvider, Radio};
+use radio::eval::perplexity;
+use radio::exp;
+use radio::report;
+use radio::util::bench::Table;
+
+fn main() {
+    let preset = "ropt-nano";
+    let weights = exp::trained_model(preset, exp::default_steps(preset));
+    let (calib, _) = exp::corpora();
+    let (calib_train, calib_val, _) = calib.split();
+    let fp = perplexity(&weights, &calib_val, exp::EVAL_SEQ, exp::EVAL_WINDOWS);
+
+    let eval_radio = |mutate: &dyn Fn(&mut radio::coordinator::RadioConfig)| -> (f64, f64) {
+        let mut results = (0.0, 0.0);
+        for (i, bits) in [4.0, 3.0].iter().enumerate() {
+            let mut cfg = exp::radio_cfg(*bits, 32, 10);
+            mutate(&mut cfg);
+            let mut provider = NativeProvider;
+            let (qm, _) = Radio::new(cfg).quantize(&weights, &calib_train, &mut provider, None);
+            let ppl = perplexity(&qm.to_weights(), &calib_val, exp::EVAL_SEQ, exp::EVAL_WINDOWS);
+            if i == 0 {
+                results.0 = ppl;
+            } else {
+                results.1 = ppl;
+            }
+        }
+        results
+    };
+
+    // (a) minibatch size.
+    let mut ta = Table::new(&["batch size", "PPL @4b", "PPL @3b"]);
+    ta.row(vec!["FP32".into(), format!("{fp:.3}"), format!("{fp:.3}")]);
+    for batch in [2usize, 4, 8, 16] {
+        let (p4, p3) = eval_radio(&|c| c.batch = batch);
+        println!("batch {batch}: {p4:.3} / {p3:.3}");
+        ta.row(vec![batch.to_string(), format!("{p4:.3}"), format!("{p3:.3}")]);
+    }
+
+    // (b) token count.
+    let mut tb = Table::new(&["tokens/seq", "PPL @4b", "PPL @3b"]);
+    for toks in [3usize, 5, 9, 17, 33] {
+        let (p4, p3) = eval_radio(&|c| c.tokens_per_seq = toks);
+        println!("tokens {toks}: {p4:.3} / {p3:.3}");
+        tb.row(vec![toks.to_string(), format!("{p4:.3}"), format!("{p3:.3}")]);
+    }
+
+    // (c) group size.
+    let mut tc = Table::new(&["group size", "PPL @4b", "PPL @3b"]);
+    for group in [8usize, 16, 32, 64] {
+        let (p4, p3) = eval_radio(&|c| c.rows_per_group = group);
+        println!("group {group}: {p4:.3} / {p3:.3}");
+        tc.row(vec![group.to_string(), format!("{p4:.3}"), format!("{p3:.3}")]);
+    }
+
+    println!("\n(a) minibatch size:");
+    ta.print();
+    println!("\n(b) subsampled tokens per sequence:");
+    tb.print();
+    println!("\n(c) group size (rows per group):");
+    tc.print();
+    report::write_report(
+        "table2_hyperparams",
+        "Table 2: hyperparameter sensitivity",
+        &[("(a) batch size", &ta), ("(b) token count", &tb), ("(c) group size", &tc)],
+        &format!("FP32 PPL {fp:.3} on the C4-like validation split ({preset})."),
+    );
+}

@@ -1,0 +1,83 @@
+//! Table 3: (a) component ablation — RTN → +MMSE step sizes → +mixed
+//! precision depths → +companding = Radio; (b) pruned weights % vs group
+//! size; (c) overhead bits % vs group size.
+
+use radio::coordinator::{NativeProvider, Radio};
+use radio::eval::perplexity;
+use radio::exp;
+use radio::quant::{QuantMode, ScaleRule};
+use radio::report;
+use radio::util::bench::Table;
+
+fn main() {
+    let preset = "ropt-nano";
+    let weights = exp::trained_model(preset, exp::default_steps(preset));
+    let (calib, _) = exp::corpora();
+    let (calib_train, calib_val, _) = calib.split();
+    let fp = perplexity(&weights, &calib_val, exp::EVAL_SEQ, exp::EVAL_WINDOWS);
+
+    // ---- (a) Component ablation at 4 and 3 bits.
+    let variants: Vec<(&str, QuantMode, ScaleRule, bool)> = vec![
+        ("RTN (range steps)", QuantMode::Uniform, ScaleRule::Range, false),
+        ("+ MMSE step sizes", QuantMode::Uniform, ScaleRule::Mmse, false),
+        ("+ Mixed precision depths", QuantMode::Uniform, ScaleRule::Mmse, true),
+        ("+ Companding (= Radio)", QuantMode::Companded, ScaleRule::Mmse, true),
+    ];
+    let mut ta = Table::new(&["variant", "PPL @4b", "PPL @3b"]);
+    ta.row(vec!["FP32".into(), format!("{fp:.3}"), format!("{fp:.3}")]);
+    for (name, mode, rule, mixed) in variants {
+        let mut cells = vec![name.to_string()];
+        for bits in [4.0, 3.0] {
+            let mut cfg = exp::radio_cfg(bits, 32, 10);
+            cfg.mode = mode;
+            cfg.scale_rule = rule;
+            cfg.mixed_depth = mixed;
+            if !mixed {
+                cfg.iters = 1; // flat allocation needs no optimization loop
+            }
+            let mut provider = NativeProvider;
+            let (qm, _) = Radio::new(cfg).quantize(&weights, &calib_train, &mut provider, None);
+            let ppl = perplexity(&qm.to_weights(), &calib_val, exp::EVAL_SEQ, exp::EVAL_WINDOWS);
+            cells.push(format!("{ppl:.3}"));
+        }
+        println!("{name}: {} / {}", cells[1], cells[2]);
+        ta.row(cells);
+    }
+
+    // ---- (b) + (c): pruning and overhead vs group size at 4 bits.
+    let mut tb = Table::new(&["group size", "pruned % @4b", "pruned % @3b"]);
+    let mut tc = Table::new(&["group size", "overhead % @4b"]);
+    for group in [8usize, 16, 32, 64] {
+        let mut row_b = vec![group.to_string()];
+        let mut overhead4 = 0.0;
+        for bits in [4.0, 3.0] {
+            let mut provider = NativeProvider;
+            let (qm, _) = Radio::new(exp::radio_cfg(bits, group, 8)).quantize(
+                &weights,
+                &calib_train,
+                &mut provider,
+                None,
+            );
+            row_b.push(format!("{:.2}", 100.0 * qm.pruned_fraction()));
+            if bits == 4.0 {
+                overhead4 = 100.0 * qm.overhead_fraction();
+            }
+        }
+        println!("group {group}: pruned {} / {}, overhead {overhead4:.2}%", row_b[1], row_b[2]);
+        tb.row(row_b);
+        tc.row(vec![group.to_string(), format!("{overhead4:.2}")]);
+    }
+
+    println!("\n(a) component ablation:");
+    ta.print();
+    println!("\n(b) pruned weights:");
+    tb.print();
+    println!("\n(c) overhead bits:");
+    tc.print();
+    report::write_report(
+        "table3_ablations",
+        "Table 3: ablations, pruning, overhead",
+        &[("(a) components", &ta), ("(b) pruned %", &tb), ("(c) overhead %", &tc)],
+        &format!("FP32 PPL {fp:.3} ({preset}). Overhead halves as group size doubles (paper Table 3c shape)."),
+    );
+}

@@ -1,0 +1,7 @@
+//! Baseline quantizers the paper compares against, implemented from
+//! scratch: GPTQ (OBS error compensation), AWQ (activation-aware
+//! scaling), OWQ (FP16 outlier rows). RTN lives in `quant::rtn`.
+
+pub mod awq;
+pub mod gptq;
+pub mod owq;

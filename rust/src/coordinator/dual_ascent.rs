@@ -1,0 +1,315 @@
+//! The dual-ascent bit-depth allocator (paper Eq. 6 and Figure 1).
+//!
+//! Given per-group rate–distortion states `(P_n, G_n², S_n²)` and a target
+//! average bit rate R, alternately update
+//!
+//! ```text
+//! B_n ← clamp(½·log2(2 ln2 · G_n²S_n² / V), 0, B_max)
+//! V   ← V + β(Σ P_n B_n − (Σ P_n)·R)
+//! ```
+//!
+//! until the rate constraint is met (tolerance 1e-6 bit, β=2 as in the
+//! paper). A bisection fallback guards pathological β choices. Integer
+//! assignments for the actual quantizer are produced by rounding plus a
+//! greedy marginal-distortion fix-up that hits the bit budget *exactly*
+//! (the paper's "Radio (3.0000 bits)" rows).
+
+use crate::stats::distortion::GroupRd;
+
+#[derive(Clone, Copy, Debug)]
+pub struct DualAscentConfig {
+    pub bmax: f64,
+    /// Dual step size β (paper: 2; normalized internally by total weights).
+    pub beta: f64,
+    pub tol_bits: f64,
+    pub max_iters: usize,
+}
+
+impl Default for DualAscentConfig {
+    fn default() -> Self {
+        Self { bmax: 8.0, beta: 2.0, tol_bits: 1e-6, max_iters: 10_000 }
+    }
+}
+
+/// Result of the continuous allocation.
+#[derive(Clone, Debug)]
+pub struct Allocation {
+    pub bits: Vec<f64>,
+    pub dual: f64,
+    pub iters: usize,
+    pub rate: f64,
+}
+
+/// Continuous dual ascent (Eq. 6). `groups` with zero sensitivity get 0
+/// bits. Returns the allocation at the meeting point of the rate curve.
+pub fn solve_continuous(groups: &[GroupRd], target_rate: f64, cfg: &DualAscentConfig) -> Allocation {
+    assert!(!groups.is_empty());
+    let total_w: f64 = groups.iter().map(|g| g.count as f64).sum();
+    let mut v = 1e-6f64;
+    let mut bits = vec![0f64; groups.len()];
+    let mut iters = 0;
+    // Normalized dual step: the raw paper update (β times a bit *count*
+    // surplus) explodes for large models, so scale by total weights —
+    // identical fixed point, stable step.
+    let beta = cfg.beta / total_w;
+    let mut rate = 0.0;
+    for it in 0..cfg.max_iters {
+        iters = it + 1;
+        let mut used = 0f64;
+        for (b, g) in bits.iter_mut().zip(groups) {
+            *b = g.optimal_bits(v, cfg.bmax);
+            used += *b * g.count as f64;
+        }
+        rate = used / total_w;
+        let surplus = used - total_w * target_rate;
+        if (surplus / total_w).abs() < cfg.tol_bits {
+            return Allocation { bits, dual: v, iters, rate };
+        }
+        v = (v + beta * surplus / total_w * v.max(1e-12)).max(1e-18);
+        // The multiplicative form keeps V positive; fall through to
+        // bisection if oscillating.
+        if it == cfg.max_iters / 2 {
+            // Bisection fallback: rate(V) is monotone nonincreasing.
+            let (mut lo, mut hi) = (1e-18f64, 1e18f64);
+            for _ in 0..200 {
+                let mid = (lo.ln() + hi.ln()).mul_add(0.5, 0.0).exp();
+                let r: f64 = groups
+                    .iter()
+                    .map(|g| g.optimal_bits(mid, cfg.bmax) * g.count as f64)
+                    .sum::<f64>()
+                    / total_w;
+                if r > target_rate {
+                    lo = mid;
+                } else {
+                    hi = mid;
+                }
+            }
+            v = hi;
+        }
+    }
+    Allocation { bits, dual: v, iters, rate }
+}
+
+/// Integer bit assignment meeting the budget `⌊R·ΣP⌋` exactly (when
+/// feasible): continuous solve → floor → greedy refill by best marginal
+/// distortion decrease per bit.
+pub fn solve_integer(groups: &[GroupRd], target_rate: f64, cfg: &DualAscentConfig) -> Vec<u8> {
+    let total_w: usize = groups.iter().map(|g| g.count).sum();
+    let budget: i64 = (target_rate * total_w as f64).floor() as i64;
+    let cont = solve_continuous(groups, target_rate, cfg);
+    let bmax = cfg.bmax as u8;
+    let mut bits: Vec<u8> = cont.bits.iter().map(|&b| b.floor() as u8).collect();
+    let mut used: i64 = bits
+        .iter()
+        .zip(groups)
+        .map(|(&b, g)| b as i64 * g.count as i64)
+        .sum();
+
+    // Marginal gain of adding one bit to group i at current depth b:
+    // Δd = d(b) − d(b+1) = ¾·d(b); per weight-bit: Δd / P.
+    let gain = |g: &GroupRd, b: u8| -> f64 {
+        if b >= bmax {
+            return f64::NEG_INFINITY;
+        }
+        0.75 * g.distortion(b as f64) / g.count as f64
+    };
+    let loss = |g: &GroupRd, b: u8| -> f64 {
+        if b == 0 {
+            return f64::INFINITY;
+        }
+        // Distortion increase from removing a bit, per weight-bit.
+        3.0 * g.distortion(b as f64) / g.count as f64
+    };
+
+    // Greedy refill while under budget.
+    loop {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, g) in groups.iter().enumerate() {
+            if used + g.count as i64 > budget {
+                continue;
+            }
+            let gn = gain(g, bits[i]);
+            if gn.is_finite() && best.map(|(_, bg)| gn > bg).unwrap_or(true) {
+                best = Some((i, gn));
+            }
+        }
+        match best {
+            Some((i, _)) => {
+                bits[i] += 1;
+                used += groups[i].count as i64;
+            }
+            None => break,
+        }
+    }
+    // Greedy spill while over budget (can happen if floor() still
+    // overshoots for degenerate inputs).
+    while used > budget {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, g) in groups.iter().enumerate() {
+            if bits[i] == 0 {
+                continue;
+            }
+            let ls = loss(g, bits[i]);
+            if best.map(|(_, bl)| ls < bl).unwrap_or(true) {
+                best = Some((i, ls));
+            }
+        }
+        match best {
+            Some((i, _)) => {
+                used -= groups[i].count as i64;
+                bits[i] -= 1;
+            }
+            None => break,
+        }
+    }
+    bits
+}
+
+/// Average rate of an integer assignment.
+pub fn integer_rate(groups: &[GroupRd], bits: &[u8]) -> f64 {
+    let total_w: usize = groups.iter().map(|g| g.count).sum();
+    let used: i64 = bits
+        .iter()
+        .zip(groups)
+        .map(|(&b, g)| b as i64 * g.count as i64)
+        .sum();
+    used as f64 / total_w as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::Checker;
+    use crate::util::rng::Rng;
+
+    fn random_groups(rng: &mut Rng, n: usize) -> Vec<GroupRd> {
+        (0..n)
+            .map(|_| {
+                GroupRd::new(
+                    8 + rng.below(512),
+                    (rng.normal(0.0, 2.0)).exp(),
+                    (rng.normal(0.0, 2.0)).exp(),
+                    1.0,
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn continuous_meets_rate_constraint() {
+        let mut rng = Rng::new(101);
+        let groups = random_groups(&mut rng, 64);
+        for target in [2.0, 3.0, 4.0, 6.0] {
+            let a = solve_continuous(&groups, target, &DualAscentConfig::default());
+            assert!(
+                (a.rate - target).abs() < 1e-4,
+                "target {target}: rate {}",
+                a.rate
+            );
+        }
+    }
+
+    #[test]
+    fn continuous_equalizes_marginal_distortion() {
+        // Optimality: unclamped groups share the same −d'(B)/P = V.
+        let mut rng = Rng::new(102);
+        let groups = random_groups(&mut rng, 32);
+        let cfg = DualAscentConfig::default();
+        let a = solve_continuous(&groups, 4.0, &cfg);
+        for (g, &b) in groups.iter().zip(&a.bits) {
+            if b > 1e-9 && b < cfg.bmax - 1e-9 {
+                let md = g.neg_derivative_per_weight(b);
+                assert!(
+                    (md / a.dual - 1.0).abs() < 1e-3,
+                    "marginal {md} vs dual {}",
+                    a.dual
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn more_sensitive_groups_get_more_bits() {
+        let groups = vec![
+            GroupRd::new(100, 1e-4, 1.0, 1.0),
+            GroupRd::new(100, 1.0, 1.0, 1.0),
+            GroupRd::new(100, 1e4, 1.0, 1.0),
+        ];
+        let a = solve_continuous(&groups, 4.0, &DualAscentConfig::default());
+        assert!(a.bits[0] < a.bits[1] && a.bits[1] < a.bits[2]);
+        // ½log2(1e4) ≈ 6.64-bit spacing before clamping ⇒ the solution
+        // clamps the extremes to [0, 8] and centers the middle at 4 to
+        // meet the 4-bit average.
+        assert!(a.bits[0] < 0.1, "low-sensitivity group ~0 bits: {}", a.bits[0]);
+        assert!(a.bits[2] > 7.9, "high-sensitivity group ~8 bits: {}", a.bits[2]);
+        assert!((a.bits[1] - 4.0).abs() < 0.1, "middle group ~4 bits: {}", a.bits[1]);
+    }
+
+    #[test]
+    fn integer_assignment_hits_budget_exactly() {
+        let rng = Rng::new(103);
+        Checker::new(24, 0xA110C).run("integer-budget", |rng_inner, size| {
+            let groups = random_groups(rng_inner, 2 + size.min(64));
+            let target = 1.0 + rng_inner.uniform() * 5.0;
+            let bits = solve_integer(&groups, target, &DualAscentConfig::default());
+            let total_w: usize = groups.iter().map(|g| g.count).sum();
+            let budget = (target * total_w as f64).floor() as i64;
+            let used: i64 = bits
+                .iter()
+                .zip(&groups)
+                .map(|(&b, g)| b as i64 * g.count as i64)
+                .sum();
+            crate::prop_assert!(used <= budget, "over budget: {used} > {budget}");
+            // Within one max-group-size of the budget (greedy can't always
+            // land exactly when counts are lumpy).
+            let max_count = groups.iter().map(|g| g.count).max().unwrap() as i64;
+            crate::prop_assert!(
+                budget - used < max_count,
+                "underfilled: used {used}, budget {budget}"
+            );
+            // All depths clamped.
+            crate::prop_assert!(bits.iter().all(|&b| b <= 8), "depth above 8");
+            Ok(())
+        });
+        let _ = rng;
+    }
+
+    #[test]
+    fn integer_equal_groups_get_exact_rate() {
+        // With equal group sizes and divisible budgets the assignment is
+        // exact — the "Radio (3.0000 bits)" property.
+        let groups: Vec<GroupRd> = (0..16)
+            .map(|i| GroupRd::new(256, (i as f64 * 0.3).exp(), 1.0, 1.0))
+            .collect();
+        let bits = solve_integer(&groups, 3.0, &DualAscentConfig::default());
+        assert!((integer_rate(&groups, &bits) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_sensitivity_groups_are_pruned() {
+        let groups = vec![
+            GroupRd::new(100, 0.0, 0.0, 1.0),
+            GroupRd::new(100, 1.0, 1.0, 1.0),
+        ];
+        let bits = solve_integer(&groups, 2.0, &DualAscentConfig::default());
+        assert_eq!(bits[0], 0, "dead group should receive 0 bits");
+        assert_eq!(bits[1], 4, "live group should take the whole budget");
+    }
+
+    #[test]
+    fn integer_beats_uniform_assignment_in_model_distortion() {
+        let mut rng = Rng::new(104);
+        let groups = random_groups(&mut rng, 48);
+        let bits = solve_integer(&groups, 3.0, &DualAscentConfig::default());
+        let d_opt: f64 = groups
+            .iter()
+            .zip(&bits)
+            .map(|(g, &b)| g.distortion(b as f64))
+            .sum();
+        let d_unif: f64 = groups.iter().map(|g| g.distortion(3.0)).sum();
+        assert!(
+            d_opt < d_unif,
+            "allocated {d_opt} should beat uniform {d_unif}"
+        );
+    }
+}

@@ -1,0 +1,143 @@
+//! Gradient providers for Algorithm 1's stochastic variance accumulation.
+//!
+//! Radio needs, per iteration, the gradient of the PCA-projected,
+//! token-subsampled output scalar `c = sᵀ(Z·u)` with respect to every
+//! quantizable matrix, evaluated at the *quantized* weights, plus the
+//! per-matrix input means for bias correction. Two interchangeable
+//! implementations exist:
+//!
+//! - [`NativeProvider`] — the in-repo manual backprop
+//!   (`model::transformer`), always available;
+//! - `runtime::XlaProvider` — executes the AOT-compiled JAX/Pallas
+//!   `model_gradvar` artifact via PJRT (L2+L1 of the three-layer stack).
+//!
+//! An integration test asserts the two agree.
+
+use crate::model::tensor::Tensor;
+use crate::model::transformer;
+use crate::model::weights::{MatId, Weights};
+
+/// One stochastic gradient observation.
+pub struct GradSample {
+    /// Raw (not squared) gradients per quantizable matrix.
+    pub grads: Vec<(MatId, Tensor)>,
+    /// Column means of the input activations per matrix (X̄ numerators).
+    pub input_means: Vec<(MatId, Vec<f32>)>,
+    /// Model output Z (stacked (B·T)×E), for PCA refresh.
+    pub z: Tensor,
+}
+
+/// Source of gradients/outputs for the Radio loop.
+pub trait GradientProvider {
+    /// Evaluate c = sᵀ(Z·u) at weights `w` on one minibatch and return
+    /// ∂c/∂Θ_n for every quantizable matrix plus input means.
+    fn grad_sample(
+        &mut self,
+        w: &Weights,
+        tokens: &[u32],
+        batch: usize,
+        seq: usize,
+        u: &[f32],
+        s: &[f32],
+    ) -> GradSample;
+
+    /// Forward-only outputs Z (for PCA fitting).
+    fn outputs(&mut self, w: &Weights, tokens: &[u32], batch: usize, seq: usize) -> Tensor;
+
+    /// Short name for logs/reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Manual-backprop provider (pure Rust).
+#[derive(Default)]
+pub struct NativeProvider;
+
+impl GradientProvider for NativeProvider {
+    fn grad_sample(
+        &mut self,
+        w: &Weights,
+        tokens: &[u32],
+        batch: usize,
+        seq: usize,
+        u: &[f32],
+        s: &[f32],
+    ) -> GradSample {
+        let n = batch * seq;
+        assert_eq!(u.len(), w.config.dim);
+        assert_eq!(s.len(), n);
+        let cache = transformer::forward(w, tokens, batch, seq);
+        // dZ = s·uᵀ (outer product): ∂c/∂Z[r][j] with c = Σ_r s_r (Z_r·u).
+        let mut dz = Tensor::zeros(n, w.config.dim);
+        for r in 0..n {
+            if s[r] == 0.0 {
+                continue;
+            }
+            let row = dz.row_mut(r);
+            for (jv, &uj) in row.iter_mut().zip(u) {
+                *jv = s[r] * uj;
+            }
+        }
+        let g = transformer::backward_from_dz(w, &cache, &dz);
+        let ids = w.matrix_ids();
+        let grads = ids.iter().map(|&id| (id, g.matrix(id).clone())).collect();
+        let input_means = ids
+            .iter()
+            .map(|&id| (id, cache.input_means(id.layer, id.role)))
+            .collect();
+        GradSample { grads, input_means, z: cache.z }
+    }
+
+    fn outputs(&mut self, w: &Weights, tokens: &[u32], batch: usize, seq: usize) -> Tensor {
+        transformer::forward(w, tokens, batch, seq).z
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn grad_sample_shapes_cover_all_matrices() {
+        let cfg = ModelConfig { vocab: 13, dim: 8, heads: 2, layers: 2, mlp: 16, max_seq: 8 };
+        let mut rng = Rng::new(111);
+        let w = Weights::init_training(cfg, &mut rng);
+        let toks: Vec<u32> = (0..16).map(|_| rng.below(13) as u32).collect();
+        let mut u = vec![0f32; 8];
+        rng.fill_gauss(&mut u, 0.0, 1.0);
+        let mut s = vec![0f32; 16];
+        rng.fill_sign(&mut s);
+        let mut p = NativeProvider;
+        let sample = p.grad_sample(&w, &toks, 2, 8, &u, &s);
+        assert_eq!(sample.grads.len(), 12);
+        for (id, g) in &sample.grads {
+            let m = w.matrix(*id);
+            assert_eq!((g.rows, g.cols), (m.rows, m.cols), "{id}");
+        }
+        for (id, mu) in &sample.input_means {
+            assert_eq!(mu.len(), w.matrix(*id).rows, "{id}");
+        }
+        assert_eq!(sample.z.rows, 16);
+    }
+
+    #[test]
+    fn subsampling_mask_restricts_gradient() {
+        // With s = 0 everywhere, gradients vanish.
+        let cfg = ModelConfig { vocab: 13, dim: 8, heads: 2, layers: 1, mlp: 16, max_seq: 8 };
+        let mut rng = Rng::new(112);
+        let w = Weights::init_training(cfg, &mut rng);
+        let toks: Vec<u32> = (0..8).map(|_| rng.below(13) as u32).collect();
+        let u = vec![1f32; 8];
+        let s = vec![0f32; 8];
+        let mut p = NativeProvider;
+        let sample = p.grad_sample(&w, &toks, 1, 8, &u, &s);
+        for (id, g) in &sample.grads {
+            assert!(g.frob2() < 1e-20, "{id} should be zero");
+        }
+    }
+}

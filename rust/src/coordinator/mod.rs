@@ -1,0 +1,12 @@
+//! The L3 coordinator: Algorithm 1 (Radio), its dual-ascent allocator,
+//! gradient providers (native backprop / XLA artifacts), and the
+//! quantization pipeline that dispatches Radio and the baselines.
+
+pub mod dual_ascent;
+pub mod gradients;
+pub mod pipeline;
+pub mod radio;
+
+pub use gradients::{GradientProvider, NativeProvider};
+pub use pipeline::{run_method, Method, PipelineResult};
+pub use radio::{Radio, RadioConfig, RadioReport};

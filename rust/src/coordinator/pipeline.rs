@@ -1,0 +1,142 @@
+//! The quantization pipeline: a single entry point that dispatches every
+//! method the paper compares (RTN, GPTQ, AWQ, OWQ, Radio) over a model +
+//! calibration corpus, with wall-clock accounting (Table 6).
+
+use crate::baselines::awq::{awq_quantize, AwqConfig};
+use crate::baselines::gptq::{gptq_quantize, GptqConfig};
+use crate::baselines::owq::{owq_quantize, OwqConfig};
+use crate::coordinator::gradients::GradientProvider;
+use crate::coordinator::radio::{Radio, RadioConfig};
+use crate::model::corpus::Corpus;
+use crate::model::weights::{MatId, Weights};
+use crate::quant::format::QuantizedModel;
+use crate::quant::{rtn_quantize, ScaleRule};
+
+/// Every quantization method in the paper's comparison grid.
+#[derive(Clone, Debug)]
+pub enum Method {
+    Rtn { bits: u8, rows_per_group: usize },
+    Gptq(GptqConfig),
+    Awq(AwqConfig),
+    Owq(OwqConfig),
+    Radio(RadioConfig),
+}
+
+impl Method {
+    pub fn name(&self) -> String {
+        match self {
+            Method::Rtn { bits, .. } => format!("RTN({bits}b)"),
+            Method::Gptq(c) => format!("GPTQ/{}({}b)", c.rows_per_group, c.bits),
+            Method::Awq(c) => format!("AWQ/{}({}b)", c.rows_per_group, c.bits),
+            Method::Owq(c) => format!("OWQ({:.2}b)", c.target_bits),
+            Method::Radio(c) => format!("Radio({:.1}b)", c.target_bits),
+        }
+    }
+}
+
+/// Outcome of one pipeline run.
+pub struct PipelineResult {
+    pub method: String,
+    pub model: QuantizedModel,
+    pub seconds: f64,
+}
+
+/// RTN over a whole model (per-matrix, contiguous row groups).
+pub fn rtn_quantize_model(w: &Weights, bits: u8, rows_per_group: usize) -> QuantizedModel {
+    let packed: Vec<(MatId, crate::quant::PackedMatrix)> = w
+        .matrix_ids()
+        .into_iter()
+        .map(|id| {
+            let m = w.matrix(id);
+            (id, rtn_quantize(m, bits, rows_per_group.min(m.rows), ScaleRule::Range))
+        })
+        .collect();
+    QuantizedModel { base: w.clone(), packed }
+}
+
+/// Run one method end to end.
+pub fn run_method(
+    method: &Method,
+    w: &Weights,
+    corpus: &Corpus,
+    provider: &mut dyn GradientProvider,
+) -> PipelineResult {
+    let t0 = std::time::Instant::now();
+    let model = match method {
+        Method::Rtn { bits, rows_per_group } => rtn_quantize_model(w, *bits, *rows_per_group),
+        Method::Gptq(cfg) => gptq_quantize(w, corpus, cfg),
+        Method::Awq(cfg) => awq_quantize(w, corpus, cfg),
+        Method::Owq(cfg) => owq_quantize(w, corpus, cfg),
+        Method::Radio(cfg) => Radio::new(*cfg).quantize(w, corpus, provider, None).0,
+    };
+    PipelineResult {
+        method: method.name(),
+        model,
+        seconds: t0.elapsed().as_secs_f64(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::gradients::NativeProvider;
+    use crate::model::config::ModelConfig;
+    use crate::model::corpus::Domain;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn all_methods_run_on_tiny_model() {
+        let mcfg = ModelConfig { vocab: 256, dim: 16, heads: 2, layers: 1, mlp: 32, max_seq: 16 };
+        let mut rng = Rng::new(161);
+        let w = Weights::init_pretrained_like(mcfg, &mut rng);
+        let corpus = Corpus::synthetic(162, Domain::Calib, 4 * 1024);
+        let mut provider = NativeProvider;
+
+        let methods = vec![
+            Method::Rtn { bits: 4, rows_per_group: 8 },
+            Method::Gptq(GptqConfig {
+                bits: 4,
+                rows_per_group: 8,
+                calib_batches: 1,
+                batch: 2,
+                seq: 16,
+                ..Default::default()
+            }),
+            Method::Awq(AwqConfig {
+                bits: 4,
+                rows_per_group: 8,
+                calib_batches: 1,
+                batch: 2,
+                seq: 16,
+                grid: 4,
+                ..Default::default()
+            }),
+            Method::Owq(OwqConfig {
+                bits: 4,
+                target_bits: 4.2,
+                rows_per_group: 8,
+                calib_batches: 1,
+                batch: 2,
+                seq: 16,
+                ..Default::default()
+            }),
+            Method::Radio(RadioConfig {
+                target_bits: 4.0,
+                rows_per_group: 8,
+                batch: 2,
+                seq: 16,
+                tokens_per_seq: 4,
+                iters: 2,
+                pca_k: 2,
+                ..Default::default()
+            }),
+        ];
+        for m in methods {
+            let r = run_method(&m, &w, &corpus, &mut provider);
+            assert_eq!(r.model.packed.len(), 6, "{}", r.method);
+            let bits = r.model.avg_bits();
+            assert!(bits > 3.0 && bits < 5.0, "{}: bits {bits}", r.method);
+            assert!(r.seconds >= 0.0);
+        }
+    }
+}

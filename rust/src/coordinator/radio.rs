@@ -1,0 +1,448 @@
+//! Algorithm 1 — the Radio quantizer.
+//!
+//! Orchestrates the full stochastic rate–distortion optimization:
+//! EMA accumulation of per-group gradient variances (G²) via PCA-projected
+//! token-subsampled backprops, EMA layer-input means (X̄) for bias
+//! correction, dual-ascent bit-depth allocation at the user's target rate,
+//! companded requantization, and the final packed model.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::dual_ascent::{self, DualAscentConfig};
+use crate::coordinator::gradients::GradientProvider;
+use crate::model::corpus::Corpus;
+use crate::model::weights::{MatId, Weights};
+use crate::quant::format::QuantizedModel;
+use crate::quant::grouping::Grouping;
+use crate::quant::{quantize_matrix, QuantMode, ScaleRule};
+use crate::quant::bias::corrected_bias;
+use crate::stats::distortion::GroupRd;
+use crate::stats::moments;
+use crate::stats::pca::PcaBasis;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct RadioConfig {
+    /// Target average bits per weight R (fractional allowed: 2.1, 3.0 …).
+    pub target_bits: f64,
+    pub bmax: u8,
+    /// Rows per quantization sub-group (paper's "group size").
+    pub rows_per_group: usize,
+    /// Calibration minibatch size (paper default 16).
+    pub batch: usize,
+    pub seq: usize,
+    /// Subsampled tokens per sequence for the backprop sketch (paper 17).
+    pub tokens_per_seq: usize,
+    /// Optimization iterations (paper max 64; ~20–30 suffice).
+    pub iters: usize,
+    /// EMA factor α for G² and X̄.
+    pub ema_alpha: f64,
+    /// PCA components cycled through (one coefficient per minibatch).
+    pub pca_k: usize,
+    /// Quantizer family (Companded = Radio; Uniform for ablations).
+    pub mode: QuantMode,
+    /// Scale selection (Mmse = Radio; Range for ablations).
+    pub scale_rule: ScaleRule,
+    /// Mixed-precision depths via dual ascent (false = flat R bits).
+    pub mixed_depth: bool,
+    pub bias_correct: bool,
+    pub seed: u64,
+}
+
+impl Default for RadioConfig {
+    fn default() -> Self {
+        Self {
+            target_bits: 4.0,
+            bmax: 8,
+            rows_per_group: 64,
+            batch: 16,
+            seq: 64,
+            tokens_per_seq: 17,
+            iters: 24,
+            ema_alpha: 0.25,
+            pca_k: 8,
+            mode: QuantMode::Companded,
+            scale_rule: ScaleRule::Mmse,
+            mixed_depth: true,
+            bias_correct: true,
+            seed: 0xAD10,
+        }
+    }
+}
+
+/// Per-iteration trace entry (drives Figure 4/5).
+#[derive(Clone, Debug)]
+pub struct IterTrace {
+    pub iter: usize,
+    pub rate: f64,
+    /// Modeled total distortion Σ d_n(B_n) under current statistics.
+    pub model_distortion: f64,
+}
+
+#[derive(Debug)]
+pub struct RadioReport {
+    pub iters_run: usize,
+    pub final_rate: f64,
+    pub trace: Vec<IterTrace>,
+    pub seconds: f64,
+    pub pca_explained: f64,
+}
+
+/// Per-matrix optimization state.
+struct MatState {
+    grouping: Grouping,
+    /// Fixed per-group weight variances S² (original weights).
+    s2: Vec<f64>,
+    /// EMA per-group gradient second moments G².
+    g2: Vec<f64>,
+    /// EMA input means (length = rows).
+    xbar: Vec<f64>,
+    xbar_init: bool,
+}
+
+/// The Radio quantizer (Algorithm 1 driver).
+pub struct Radio {
+    pub cfg: RadioConfig,
+}
+
+impl Radio {
+    pub fn new(cfg: RadioConfig) -> Radio {
+        Radio { cfg }
+    }
+
+    /// Quantize `w` against calibration `corpus` using `provider` for
+    /// gradients. `on_iter` (optional) observes each intermediate model —
+    /// used by the Figure 4/5 bench to track perplexity across iterations.
+    pub fn quantize(
+        &self,
+        w: &Weights,
+        corpus: &Corpus,
+        provider: &mut dyn GradientProvider,
+        mut on_iter: Option<&mut dyn FnMut(usize, &QuantizedModel)>,
+    ) -> (QuantizedModel, RadioReport) {
+        let t0 = std::time::Instant::now();
+        let cfg = &self.cfg;
+        let mut rng = Rng::new(cfg.seed);
+        let _ids = w.matrix_ids();
+
+        // ---- Warmup: one full-precision gradient sample to seed G² and
+        // build the sensitivity-ranked groupings.
+        let (toks, _) = corpus.sample_batch(&mut rng, cfg.batch, cfg.seq);
+        let mut u0 = vec![0f32; w.config.dim];
+        rng.fill_gauss(&mut u0, 0.0, 1.0);
+        let s0 = subsample_mask(&mut rng, cfg.batch, cfg.seq, cfg.tokens_per_seq);
+        let warm = provider.grad_sample(w, &toks, cfg.batch, cfg.seq, &u0, &s0);
+
+        // PCA basis from warmup outputs.
+        let pca = PcaBasis::fit(
+            &warm.z.data,
+            warm.z.rows,
+            warm.z.cols,
+            cfg.pca_k.min(w.config.dim),
+        );
+
+        let mut states: BTreeMap<MatId, MatState> = BTreeMap::new();
+        for (id, grad) in &warm.grads {
+            let m = w.matrix(*id);
+            // Row score = G_r²·S_r² (row grad second moment × row weight var).
+            let scores: Vec<f64> = (0..m.rows)
+                .map(|r| {
+                    let g2r = moments::mean_square(grad.row(r));
+                    let s2r = moments::variance(m.row(r));
+                    g2r * s2r
+                })
+                .collect();
+            let grouping = Grouping::build(m.rows, m.cols, cfg.rows_per_group, &scores);
+            let mut s2 = vec![0f64; grouping.num_groups()];
+            let mut g2 = vec![0f64; grouping.num_groups()];
+            for col in 0..grouping.cols {
+                for sub in 0..grouping.m {
+                    let gi = grouping.group_index(col, sub);
+                    let vals = grouping.gather(m, col, sub);
+                    s2[gi] = moments::variance(&vals).max(1e-30);
+                    let gvals = grouping.gather(grad, col, sub);
+                    g2[gi] = moments::mean_square(&gvals);
+                }
+            }
+            states.insert(
+                *id,
+                MatState { grouping, s2, g2, xbar: vec![0.0; m.rows], xbar_init: false },
+            );
+        }
+        update_xbar(&mut states, &warm.input_means, cfg.ema_alpha);
+
+        // ---- Iterate: quantize → re-estimate gradients at the quantized
+        // point → reallocate.
+        let mut trace = Vec::with_capacity(cfg.iters);
+        let mut qm = self.requantize(w, &states);
+        if let Some(cb) = on_iter.as_deref_mut() {
+            cb(0, &qm);
+        }
+        for iter in 1..=cfg.iters {
+            let wq = qm.to_weights();
+            let (toks, _) = corpus.sample_batch(&mut rng, cfg.batch, cfg.seq);
+            // Cycle PCA coefficients; fresh token subsample each iteration.
+            let u = pca.component((iter - 1) % pca.k).to_vec();
+            let s = subsample_mask(&mut rng, cfg.batch, cfg.seq, cfg.tokens_per_seq);
+            let sample = provider.grad_sample(&wq, &toks, cfg.batch, cfg.seq, &u, &s);
+
+            // EMA updates.
+            for (id, grad) in &sample.grads {
+                let st = states.get_mut(id).unwrap();
+                for col in 0..st.grouping.cols {
+                    for sub in 0..st.grouping.m {
+                        let gi = st.grouping.group_index(col, sub);
+                        let gvals = st.grouping.gather(grad, col, sub);
+                        let obs = moments::mean_square(&gvals);
+                        st.g2[gi] = (1.0 - cfg.ema_alpha) * st.g2[gi] + cfg.ema_alpha * obs;
+                    }
+                }
+            }
+            update_xbar(&mut states, &sample.input_means, cfg.ema_alpha);
+
+            // Reallocate + requantize.
+            qm = self.requantize(w, &states);
+
+            // Trace.
+            let (rate, dist) = self.modeled_stats(&states);
+            trace.push(IterTrace { iter, rate, model_distortion: dist });
+            if let Some(cb) = on_iter.as_deref_mut() {
+                cb(iter, &qm);
+            }
+        }
+
+        let final_rate = qm.avg_bits();
+        let report = RadioReport {
+            iters_run: cfg.iters,
+            final_rate,
+            trace,
+            seconds: t0.elapsed().as_secs_f64(),
+            pca_explained: pca.explained_fraction(),
+        };
+        (qm, report)
+    }
+
+    /// Allocate depths from current statistics and requantize every matrix
+    /// from the ORIGINAL weights (Radio never fine-tunes weights).
+    fn requantize(&self, w: &Weights, states: &BTreeMap<MatId, MatState>) -> QuantizedModel {
+        let cfg = &self.cfg;
+        // Global allocation across *all* groups of *all* matrices.
+        let mut group_rd: Vec<GroupRd> = Vec::new();
+        let mut owners: Vec<(MatId, usize)> = Vec::new();
+        for (id, st) in states {
+            for gi in 0..st.grouping.num_groups() {
+                let sub = gi % st.grouping.m;
+                group_rd.push(GroupRd::new(
+                    st.grouping.group_len(sub),
+                    st.g2[gi],
+                    st.s2[gi],
+                    1.0,
+                ));
+                owners.push((*id, gi));
+            }
+        }
+        let bits: Vec<u8> = if cfg.mixed_depth {
+            dual_ascent::solve_integer(
+                &group_rd,
+                cfg.target_bits,
+                &DualAscentConfig { bmax: cfg.bmax as f64, ..Default::default() },
+            )
+        } else {
+            // Flat allocation at round(R) bits (ablation).
+            vec![cfg.target_bits.round() as u8; group_rd.len()]
+        };
+
+        let mut per_mat_bits: BTreeMap<MatId, Vec<u8>> = BTreeMap::new();
+        for ((id, gi), &b) in owners.iter().zip(&bits) {
+            let st = &states[id];
+            per_mat_bits
+                .entry(*id)
+                .or_insert_with(|| vec![0u8; st.grouping.num_groups()])[*gi] = b;
+        }
+
+        let mut base = w.clone();
+        let mut packed = Vec::with_capacity(states.len());
+        for (id, st) in states {
+            let theta = w.matrix(*id);
+            let pm = quantize_matrix(
+                theta,
+                &st.grouping,
+                &per_mat_bits[id],
+                cfg.mode,
+                cfg.scale_rule,
+            );
+            if cfg.bias_correct {
+                let deq = pm.unpack();
+                let xbar: Vec<f32> = st.xbar.iter().map(|&x| x as f32).collect();
+                let nb = corrected_bias(w.bias(*id), theta, &deq, &xbar);
+                *base.bias_mut(*id) = nb;
+            }
+            packed.push((*id, pm));
+        }
+        QuantizedModel { base, packed }
+    }
+
+    fn modeled_stats(&self, states: &BTreeMap<MatId, MatState>) -> (f64, f64) {
+        // Recompute the allocation to report modeled rate/distortion.
+        let mut group_rd: Vec<GroupRd> = Vec::new();
+        for st in states.values() {
+            for gi in 0..st.grouping.num_groups() {
+                let sub = gi % st.grouping.m;
+                group_rd.push(GroupRd::new(st.grouping.group_len(sub), st.g2[gi], st.s2[gi], 1.0));
+            }
+        }
+        let bits = dual_ascent::solve_integer(
+            &group_rd,
+            self.cfg.target_bits,
+            &DualAscentConfig { bmax: self.cfg.bmax as f64, ..Default::default() },
+        );
+        let rate = dual_ascent::integer_rate(&group_rd, &bits);
+        let dist: f64 = group_rd
+            .iter()
+            .zip(&bits)
+            .map(|(g, &b)| g.distortion(b as f64))
+            .sum();
+        (rate, dist)
+    }
+}
+
+/// Token-subsampling sketch vector: `tokens_per_seq` ones per sequence.
+fn subsample_mask(rng: &mut Rng, batch: usize, seq: usize, k: usize) -> Vec<f32> {
+    let mut s = vec![0f32; batch * seq];
+    for b in 0..batch {
+        for idx in rng.sample_indices(seq, k.min(seq)) {
+            s[b * seq + idx] = 1.0;
+        }
+    }
+    s
+}
+
+fn update_xbar(
+    states: &mut BTreeMap<MatId, MatState>,
+    input_means: &[(MatId, Vec<f32>)],
+    alpha: f64,
+) {
+    for (id, mu) in input_means {
+        let st = states.get_mut(id).unwrap();
+        if st.xbar_init {
+            for (x, &m) in st.xbar.iter_mut().zip(mu) {
+                *x = (1.0 - alpha) * *x + alpha * m as f64;
+            }
+        } else {
+            for (x, &m) in st.xbar.iter_mut().zip(mu) {
+                *x = m as f64;
+            }
+            st.xbar_init = true;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::gradients::NativeProvider;
+    use crate::model::config::ModelConfig;
+    use crate::model::corpus::Domain;
+
+    fn tiny_setup() -> (Weights, Corpus) {
+        let cfg = ModelConfig { vocab: 256, dim: 16, heads: 2, layers: 2, mlp: 32, max_seq: 16 };
+        let mut rng = Rng::new(121);
+        let w = Weights::init_pretrained_like(cfg, &mut rng);
+        let corpus = Corpus::synthetic(122, Domain::Calib, 8 * 1024);
+        (w, corpus)
+    }
+
+    fn quick_cfg(bits: f64) -> RadioConfig {
+        RadioConfig {
+            target_bits: bits,
+            rows_per_group: 8,
+            batch: 2,
+            seq: 16,
+            tokens_per_seq: 5,
+            iters: 3,
+            pca_k: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn radio_hits_target_rate() {
+        let (w, corpus) = tiny_setup();
+        let radio = Radio::new(quick_cfg(3.0));
+        let mut provider = NativeProvider;
+        let (qm, report) = radio.quantize(&w, &corpus, &mut provider, None);
+        assert!(
+            (qm.avg_bits() - 3.0).abs() < 0.05,
+            "rate {} != 3.0",
+            qm.avg_bits()
+        );
+        assert_eq!(report.iters_run, 3);
+        assert!(report.trace.len() == 3);
+        assert!(report.pca_explained > 0.0);
+    }
+
+    #[test]
+    fn radio_fractional_rate() {
+        let (w, corpus) = tiny_setup();
+        let radio = Radio::new(quick_cfg(2.4));
+        let mut provider = NativeProvider;
+        let (qm, _) = radio.quantize(&w, &corpus, &mut provider, None);
+        assert!((qm.avg_bits() - 2.4).abs() < 0.05, "rate {}", qm.avg_bits());
+    }
+
+    #[test]
+    fn radio_beats_flat_allocation_in_output_distortion() {
+        let (w, corpus) = tiny_setup();
+        let mut provider = NativeProvider;
+        let mut mixed_cfg = quick_cfg(3.0);
+        mixed_cfg.iters = 4;
+        let (qm_mixed, _) = Radio::new(mixed_cfg).quantize(&w, &corpus, &mut provider, None);
+        let mut flat_cfg = quick_cfg(3.0);
+        flat_cfg.mixed_depth = false;
+        flat_cfg.iters = 1;
+        let (qm_flat, _) = Radio::new(flat_cfg).quantize(&w, &corpus, &mut provider, None);
+
+        // Compare end-to-end output distortion on held-out batch.
+        let mut rng = Rng::new(123);
+        let (toks, _) = corpus.sample_batch(&mut rng, 2, 16);
+        let z_ref = crate::model::transformer::forward(&w, &toks, 2, 16).z;
+        let dist = |qm: &QuantizedModel| {
+            let wq = qm.to_weights();
+            let z = crate::model::transformer::forward(&wq, &toks, 2, 16).z;
+            let mut d = 0f64;
+            for (a, b) in z.data.iter().zip(&z_ref.data) {
+                d += ((a - b) as f64).powi(2);
+            }
+            d
+        };
+        let (dm, df) = (dist(&qm_mixed), dist(&qm_flat));
+        assert!(
+            dm < df * 1.1,
+            "mixed-depth {dm} should not be much worse than flat {df}"
+        );
+    }
+
+    #[test]
+    fn callback_sees_every_iteration() {
+        let (w, corpus) = tiny_setup();
+        let mut provider = NativeProvider;
+        let mut seen = Vec::new();
+        let mut cb = |it: usize, qm: &QuantizedModel| {
+            seen.push((it, qm.avg_bits()));
+        };
+        Radio::new(quick_cfg(4.0)).quantize(&w, &corpus, &mut provider, Some(&mut cb));
+        assert_eq!(seen.len(), 4); // iter 0 (warmup quant) + 3 iters
+        assert_eq!(seen[0].0, 0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (w, corpus) = tiny_setup();
+        let run = || {
+            let mut p = NativeProvider;
+            let (qm, _) = Radio::new(quick_cfg(3.0)).quantize(&w, &corpus, &mut p, None);
+            qm.to_weights().layers[0].wq.data.clone()
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,8 @@
+//! Evaluation harnesses: perplexity (next-token prediction) and the
+//! synthetic downstream-task suite.
+
+pub mod perplexity;
+pub mod tasks;
+
+pub use perplexity::{perplexity, perplexity_quantized};
+pub use tasks::{average_score, score_task, Task};

@@ -1,0 +1,63 @@
+//! Perplexity evaluation over deterministic corpus windows — the paper's
+//! headline metric (Tables 1, 2, 4, 5; Figures 4–5).
+
+use crate::model::corpus::Corpus;
+use crate::model::transformer;
+use crate::model::weights::Weights;
+use crate::util::threadpool::parallel_map;
+
+/// Perplexity of `w` on non-overlapping windows of `corpus`:
+/// exp(mean NLL per token). `max_windows` caps evaluation cost.
+pub fn perplexity(w: &Weights, corpus: &Corpus, seq: usize, max_windows: usize) -> f64 {
+    let windows = corpus.eval_windows(seq, max_windows);
+    assert!(!windows.is_empty(), "corpus too small for evaluation");
+    // Each window is independent; parallelize across windows (the matmul
+    // inside is itself threaded, so use coarse chunks).
+    let losses: Vec<f64> = parallel_map(windows.len(), 4, |i| {
+        let (toks, tgts) = &windows[i];
+        transformer::loss_only(w, toks, tgts, 1, seq)
+    });
+    let mean = losses.iter().sum::<f64>() / losses.len() as f64;
+    mean.exp()
+}
+
+/// Perplexity from a quantized model (dequantize once, then evaluate).
+pub fn perplexity_quantized(
+    qm: &crate::quant::format::QuantizedModel,
+    corpus: &Corpus,
+    seq: usize,
+    max_windows: usize,
+) -> f64 {
+    perplexity(&qm.to_weights(), corpus, seq, max_windows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+    use crate::model::corpus::Domain;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn random_model_ppl_near_vocab_size() {
+        // An untrained model ≈ uniform predictor: PPL ≈ vocab (256) —
+        // a calibration check for the metric itself.
+        let cfg = ModelConfig { vocab: 256, dim: 16, heads: 2, layers: 1, mlp: 32, max_seq: 32 };
+        let mut rng = Rng::new(201);
+        let w = Weights::init_training(cfg, &mut rng);
+        let corpus = Corpus::synthetic(202, Domain::Calib, 8 * 1024);
+        let ppl = perplexity(&w, &corpus, 32, 8);
+        assert!(ppl > 120.0 && ppl < 400.0, "ppl {ppl}");
+    }
+
+    #[test]
+    fn ppl_is_deterministic() {
+        let cfg = ModelConfig { vocab: 256, dim: 16, heads: 2, layers: 1, mlp: 32, max_seq: 32 };
+        let mut rng = Rng::new(203);
+        let w = Weights::init_training(cfg, &mut rng);
+        let corpus = Corpus::synthetic(204, Domain::Calib, 8 * 1024);
+        let a = perplexity(&w, &corpus, 32, 6);
+        let b = perplexity(&w, &corpus, 32, 6);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,147 @@
+//! Shared experiment plumbing for the bench binaries and examples:
+//! standard corpora, cached trained checkpoints, and the method grids the
+//! paper's tables sweep. Keeping this in the library means every bench
+//! regenerates a table with a few lines of code and identical settings.
+
+use std::path::PathBuf;
+
+use crate::baselines::awq::AwqConfig;
+use crate::baselines::gptq::GptqConfig;
+use crate::baselines::owq::OwqConfig;
+use crate::coordinator::pipeline::Method;
+use crate::coordinator::radio::RadioConfig;
+use crate::model::corpus::{Corpus, Domain};
+use crate::model::train::{train, TrainConfig};
+use crate::model::weights::Weights;
+use crate::model::ModelConfig;
+use crate::util::rng::Rng;
+
+/// Corpus sizes used across experiments.
+pub const CORPUS_BYTES: usize = 256 * 1024;
+
+/// The two evaluation corpora: "C4-like" (calibration domain) and
+/// "WikiText-like" (shifted domain). Deterministic.
+pub fn corpora() -> (Corpus, Corpus) {
+    (
+        Corpus::synthetic(0xC4, Domain::Calib, CORPUS_BYTES),
+        Corpus::synthetic(0x21C1, Domain::Shifted, CORPUS_BYTES / 4),
+    )
+}
+
+/// Cache directory for trained checkpoints.
+fn cache_dir() -> PathBuf {
+    let p = PathBuf::from(
+        std::env::var("RADIO_CACHE_DIR").unwrap_or_else(|_| "artifacts/bench_cache".into()),
+    );
+    let _ = std::fs::create_dir_all(&p);
+    p
+}
+
+/// Get a trained checkpoint for `preset`, training (and caching) it on
+/// first use. Training budget scales down for larger models so benches
+/// stay minutes-scale; the *relative* quantization behaviour is what the
+/// tables compare.
+pub fn trained_model(preset: &str, steps: usize) -> Weights {
+    let path = cache_dir().join(format!("{preset}_{steps}.weights"));
+    if path.exists() {
+        if let Ok(w) = Weights::load(&path) {
+            return w;
+        }
+    }
+    let cfg = ModelConfig::preset(preset).unwrap_or_else(|| panic!("unknown preset {preset}"));
+    let (calib, _) = corpora();
+    let (train_split, _, _) = calib.split();
+    let mut rng = Rng::new(0x7EA1_u64 ^ preset.len() as u64);
+    let mut w = Weights::init_training(cfg, &mut rng);
+    let tcfg = TrainConfig { steps, ..Default::default() };
+    crate::log_info!("training {preset} for {steps} steps (cached at {})", path.display());
+    let report = train(&mut w, &train_split, &tcfg, 0x5EED);
+    crate::log_info!("{preset}: final train loss {:.4} in {:.1}s", report.final_loss, report.seconds);
+    let _ = w.save(&path);
+    w
+}
+
+/// Default training budget per preset (keeps total bench time bounded).
+pub fn default_steps(preset: &str) -> usize {
+    match preset {
+        "ropt-nano" => 300,
+        "ropt-micro" => 250,
+        "ropt-small" => 220,
+        "ropt-med" => 150,
+        "ropt-large" => 100,
+        _ => 80,
+    }
+}
+
+/// The paper's Table-1 method grid at a given bit depth / group size.
+pub fn method_grid(bits: u8, group: usize, iters: usize) -> Vec<Method> {
+    vec![
+        Method::Rtn { bits, rows_per_group: group },
+        Method::Gptq(GptqConfig {
+            bits,
+            rows_per_group: group,
+            calib_batches: 4,
+            batch: 4,
+            seq: 64,
+            ..Default::default()
+        }),
+        Method::Awq(AwqConfig {
+            bits,
+            rows_per_group: group,
+            calib_batches: 2,
+            batch: 4,
+            seq: 64,
+            grid: 10,
+            ..Default::default()
+        }),
+        Method::Owq(OwqConfig {
+            bits,
+            target_bits: bits as f64 + 0.01,
+            rows_per_group: group,
+            calib_batches: 2,
+            batch: 4,
+            seq: 64,
+            ..Default::default()
+        }),
+        Method::Radio(radio_cfg(bits as f64, group, iters)),
+    ]
+}
+
+/// Standard Radio configuration for experiments.
+pub fn radio_cfg(target_bits: f64, group: usize, iters: usize) -> RadioConfig {
+    RadioConfig {
+        target_bits,
+        rows_per_group: group,
+        batch: 8,
+        seq: 64,
+        tokens_per_seq: 17,
+        iters,
+        pca_k: 8,
+        ..Default::default()
+    }
+}
+
+/// Quick perplexity evaluation settings shared by benches.
+pub const EVAL_SEQ: usize = 64;
+pub const EVAL_WINDOWS: usize = 48;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpora_are_distinct_domains() {
+        let (a, b) = corpora();
+        assert_eq!(a.domain, Domain::Calib);
+        assert_eq!(b.domain, Domain::Shifted);
+    }
+
+    #[test]
+    fn method_grid_has_all_five() {
+        let g = method_grid(3, 64, 8);
+        assert_eq!(g.len(), 5);
+        let names: Vec<String> = g.iter().map(|m| m.name()).collect();
+        assert!(names.iter().any(|n| n.starts_with("RTN")));
+        assert!(names.iter().any(|n| n.starts_with("Radio")));
+    }
+}

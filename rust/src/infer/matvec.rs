@@ -1,0 +1,472 @@
+//! Mixed-precision quantized matrix–vector multiply — the paper's
+//! Appendix-A CUDA kernel rethought for CPU (see DESIGN.md
+//! §Hardware-Adaptation for the TPU/Pallas variant).
+//!
+//! The kernel computes `y[j] = Σ_i x[i]·W[i,j]` directly from the packed
+//! code stream, never materializing the dense matrix:
+//!
+//! - codes stream sequentially per column (the packed layout is
+//!   column-major), so memory traffic is `bits/32` of the FP32 baseline —
+//!   the memory-bound speedup the paper's Table 7 measures;
+//! - dequantization is one LUT lookup + FMA: `deq = mean + scale·lut[code]`;
+//! - the per-group mean term factors out: `Σ_{i∈g} x_i·mean_g =
+//!   mean_g·(Σ_{i∈g} x_i)`, and the per-sub-group partial sums of `x` are
+//!   shared by *every* column, so they're computed once per call;
+//! - depth changes only at sub-group boundaries (the CPU analogue of the
+//!   CUDA kernel's divergence-free per-4-row depth schedule).
+
+use crate::model::tensor::Tensor;
+use crate::quant::bitpack::PackedMatrix;
+use crate::util::threadpool::parallel_for_chunks;
+
+/// Precomputed decode plan for repeated matvecs against one packed
+/// matrix. Owns only derived data, so it can live beside the matrix in
+/// an engine without self-referential borrows.
+pub struct MatvecPlan {
+    /// Dequant LUTs per bit depth (index 0 unused).
+    luts: Vec<Vec<f32>>,
+    /// group_rows flattened in sub order (matches the code stream order).
+    flat_rows: Vec<u32>,
+    /// Start of each sub-group in `flat_rows`.
+    sub_offsets: Vec<usize>,
+    /// Copy of the code words padded with one zero word, so the decoder
+    /// can always load a full 128-bit window without bounds branches.
+    padded_words: Vec<u64>,
+    rows: usize,
+    cols: usize,
+}
+
+/// Borrow-based convenience wrapper (plan + matrix).
+pub struct QuantMatvec<'a> {
+    pm: &'a PackedMatrix,
+    plan: MatvecPlan,
+}
+
+impl MatvecPlan {
+    pub fn new(pm: &PackedMatrix) -> MatvecPlan {
+        let luts: Vec<Vec<f32>> = (0..=8u8).map(|b| pm.mode.base_lut(b)).collect();
+        let mut flat_rows = Vec::with_capacity(pm.rows);
+        let mut sub_offsets = Vec::with_capacity(pm.grouping.m + 1);
+        let mut is_fp = vec![false; pm.rows];
+        for (r, _) in &pm.fp_rows {
+            is_fp[*r as usize] = true;
+        }
+        for sub in 0..pm.grouping.m {
+            sub_offsets.push(flat_rows.len());
+            for &r in &pm.grouping.group_rows[sub] {
+                if !is_fp[r as usize] {
+                    flat_rows.push(r);
+                }
+            }
+        }
+        sub_offsets.push(flat_rows.len());
+        let mut padded_words = pm.words.clone();
+        padded_words.push(0);
+        padded_words.push(0);
+        MatvecPlan { luts, flat_rows, sub_offsets, padded_words, rows: pm.rows, cols: pm.cols }
+    }
+
+    /// y[j] = Σ_i x[i]·W[i,j], decoding from the packed stream. `pm` must
+    /// be the matrix this plan was built from.
+    ///
+    /// §Perf hot path. The inner loop uses a *bin-accumulation* identity:
+    /// `Σ_i x_i·lut[c_i] = Σ_c lut[c]·(Σ_{i: c_i=c} x_i)` — per weight it
+    /// costs one bit-extract and one add into a 2^B-entry L1-resident bin
+    /// array, deferring all LUT multiplies to 2^B FMAs per group. The
+    /// gathered x values are pre-permuted once per call into code-stream
+    /// order, so the per-column loop is fully sequential.
+    pub fn matvec(&self, pm: &PackedMatrix, x: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(pm.rows, self.rows);
+        debug_assert_eq!(pm.cols, self.cols);
+        assert_eq!(x.len(), pm.rows);
+        let m = pm.grouping.m;
+        // Permute x into code-stream order (and fold the AWQ row scale),
+        // once per call, shared by all columns.
+        let mut x_perm = vec![0f32; self.flat_rows.len()];
+        match &pm.row_scale {
+            Some(s) => {
+                for (dst, &r) in x_perm.iter_mut().zip(&self.flat_rows) {
+                    *dst = x[r as usize] / s[r as usize];
+                }
+            }
+            None => {
+                for (dst, &r) in x_perm.iter_mut().zip(&self.flat_rows) {
+                    *dst = x[r as usize];
+                }
+            }
+        }
+        // Per-sub-group partial sums of x (for the mean term).
+        let mut sum_x = vec![0f32; m];
+        for sub in 0..m {
+            sum_x[sub] = x_perm[self.sub_offsets[sub]..self.sub_offsets[sub + 1]]
+                .iter()
+                .sum();
+        }
+
+        let mut y = vec![0f32; pm.cols];
+        let y_ptr = SendMut(y.as_mut_ptr());
+        let words = &self.padded_words;
+        #[cfg(target_arch = "x86_64")]
+        let simd_ok = std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma");
+        parallel_for_chunks(pm.cols, 128, |c0, c1| {
+            let y_ptr = y_ptr;
+            for col in c0..c1 {
+                let mut pos = pm.col_bit_offset[col];
+                let mut acc = 0f32;
+                for sub in 0..m {
+                    let gm = pm.meta[col * m + sub];
+                    if gm.bits == 0 {
+                        continue; // pruned: contributes nothing
+                    }
+                    let xs = &x_perm[self.sub_offsets[sub]..self.sub_offsets[sub + 1]];
+                    let bits = gm.bits as usize;
+                    let mask = ((1u64 << bits) - 1) as u128;
+                    let lut = &self.luts[bits][..];
+                    // AVX2 fast path: for B ≤ 3 the whole LUT fits one YMM
+                    // register and `vpermps` performs 8 dequantizations per
+                    // instruction — the CPU analogue of the CUDA kernel's
+                    // shared-memory LUT.
+                    #[cfg(target_arch = "x86_64")]
+                    if bits >= 1 && bits <= 3 && simd_ok && xs.len() >= 16 {
+                        let (dot, npos) =
+                            unsafe { dot_avx2_small_lut(words, pos, xs, bits, lut) };
+                        pos = npos;
+                        acc += gm.scale * dot + gm.mean * sum_x[sub];
+                        continue;
+                    }
+                    // Window decode: one 128-bit load yields k = 64/bits
+                    // codes with *independent* shifts (no serial cursor
+                    // dependency); 4 accumulators keep FMA ports busy.
+                    let k = 64 / bits;
+                    let (mut d0, mut d1, mut d2, mut d3) = (0f32, 0f32, 0f32, 0f32);
+                    let mut i = 0usize;
+                    while i + k <= xs.len() {
+                        let wi = pos >> 6;
+                        let off = pos & 63;
+                        // SAFETY: padded_words has 2 spare words.
+                        let lo = unsafe { *words.get_unchecked(wi) } as u128;
+                        let hi = unsafe { *words.get_unchecked(wi + 1) } as u128;
+                        let win = (lo | (hi << 64)) >> off;
+                        let mut j = 0;
+                        while j + 4 <= k {
+                            let c0i = ((win >> (j * bits)) & mask) as usize;
+                            let c1i = ((win >> ((j + 1) * bits)) & mask) as usize;
+                            let c2i = ((win >> ((j + 2) * bits)) & mask) as usize;
+                            let c3i = ((win >> ((j + 3) * bits)) & mask) as usize;
+                            // SAFETY: codes are < 2^bits = lut.len().
+                            unsafe {
+                                d0 += xs.get_unchecked(i + j) * lut.get_unchecked(c0i);
+                                d1 += xs.get_unchecked(i + j + 1) * lut.get_unchecked(c1i);
+                                d2 += xs.get_unchecked(i + j + 2) * lut.get_unchecked(c2i);
+                                d3 += xs.get_unchecked(i + j + 3) * lut.get_unchecked(c3i);
+                            }
+                            j += 4;
+                        }
+                        while j < k {
+                            let c = ((win >> (j * bits)) & mask) as usize;
+                            unsafe {
+                                d0 += xs.get_unchecked(i + j) * lut.get_unchecked(c);
+                            }
+                            j += 1;
+                        }
+                        pos += k * bits;
+                        i += k;
+                    }
+                    // Tail.
+                    let mut cur = Cursor::new(words, pos);
+                    while i < xs.len() {
+                        let c = cur.next(gm.bits as u32, mask as u64);
+                        d0 += xs[i] * lut[c];
+                        i += 1;
+                    }
+                    pos = cur.pos;
+                    let dot = (d0 + d1) + (d2 + d3);
+                    acc += gm.scale * dot + gm.mean * sum_x[sub];
+                }
+                // SAFETY: disjoint column ranges.
+                unsafe { *y_ptr.0.add(col) = acc };
+            }
+        });
+        // FP16 exception rows: dense contribution with the ORIGINAL x.
+        for (r, vals) in &pm.fp_rows {
+            let xv = x[*r as usize];
+            if xv == 0.0 {
+                continue;
+            }
+            for (j, &wv) in vals.iter().enumerate() {
+                y[j] += xv * wv;
+            }
+        }
+        y
+    }
+}
+
+impl<'a> QuantMatvec<'a> {
+    pub fn new(pm: &'a PackedMatrix) -> QuantMatvec<'a> {
+        QuantMatvec { pm, plan: MatvecPlan::new(pm) }
+    }
+
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        self.plan.matvec(self.pm, x)
+    }
+}
+
+/// AVX2 dot product for B ≤ 3 bit groups: per 8 weights, broadcast a
+/// 32-bit code window into a YMM register, variable-shift each lane into
+/// place (`vpsrlvd`), mask, and dequantize all 8 via one `vpermps` LUT
+/// permute, then FMA against the activations. Returns (dot, new bit pos).
+///
+/// # Safety
+/// Caller must guarantee AVX2+FMA, `lut.len() >= 8`… wait — lut has
+/// 2^bits ≤ 8 entries; it is padded to 8 below. `words` must be the
+/// zero-padded plan copy (2 spare words).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot_avx2_small_lut(
+    words: &[u64],
+    mut pos: usize,
+    xs: &[f32],
+    bits: usize,
+    lut: &[f32],
+) -> (f32, usize) {
+    use std::arch::x86_64::*;
+    debug_assert!(bits >= 1 && bits <= 3);
+    let mut lut8 = [0f32; 8];
+    lut8[..lut.len()].copy_from_slice(lut);
+    let lutv = _mm256_loadu_ps(lut8.as_ptr());
+    let b = bits as i32;
+    let shifts = _mm256_setr_epi32(0, b, 2 * b, 3 * b, 4 * b, 5 * b, 6 * b, 7 * b);
+    let maskv = _mm256_set1_epi32(((1u32 << bits) - 1) as i32);
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let step = 8 * bits;
+    let mut i = 0usize;
+    // 16 weights per iteration (two independent FMA chains).
+    while i + 16 <= xs.len() {
+        let w0 = load_window32(words, pos);
+        let w1 = load_window32(words, pos + step);
+        let idx0 = _mm256_and_si256(_mm256_srlv_epi32(_mm256_set1_epi32(w0 as i32), shifts), maskv);
+        let idx1 = _mm256_and_si256(_mm256_srlv_epi32(_mm256_set1_epi32(w1 as i32), shifts), maskv);
+        let wv0 = _mm256_permutevar8x32_ps(lutv, idx0);
+        let wv1 = _mm256_permutevar8x32_ps(lutv, idx1);
+        let xv0 = _mm256_loadu_ps(xs.as_ptr().add(i));
+        let xv1 = _mm256_loadu_ps(xs.as_ptr().add(i + 8));
+        acc0 = _mm256_fmadd_ps(xv0, wv0, acc0);
+        acc1 = _mm256_fmadd_ps(xv1, wv1, acc1);
+        pos += 2 * step;
+        i += 16;
+    }
+    // Horizontal sum.
+    let accv = _mm256_add_ps(acc0, acc1);
+    let hi = _mm256_extractf128_ps(accv, 1);
+    let lo = _mm256_castps256_ps128(accv);
+    let s = _mm_add_ps(lo, hi);
+    let s = _mm_hadd_ps(s, s);
+    let s = _mm_hadd_ps(s, s);
+    let mut dot = _mm_cvtss_f32(s);
+    // Scalar tail.
+    let mask = (1u64 << bits) - 1;
+    let mut cur = Cursor::new(words, pos);
+    while i < xs.len() {
+        let c = cur.next(bits as u32, mask);
+        dot += xs[i] * lut[c];
+        i += 1;
+    }
+    (dot, cur.pos)
+}
+
+/// Load 32 bits of code stream starting at bit `pos` (words are padded).
+#[cfg(target_arch = "x86_64")]
+#[inline(always)]
+unsafe fn load_window32(words: &[u64], pos: usize) -> u32 {
+    let wi = pos >> 6;
+    let off = pos & 63;
+    let lo = *words.get_unchecked(wi);
+    if off == 0 {
+        lo as u32
+    } else {
+        let hi = *words.get_unchecked(wi + 1);
+        ((lo >> off) | (hi << (64 - off))) as u32
+    }
+}
+
+/// Minimal LSB-first bit cursor for the decode hot loop (inlined; the
+/// cross-word branch predicts near-perfectly for fixed-depth runs).
+struct Cursor<'a> {
+    words: &'a [u64],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    #[inline(always)]
+    fn new(words: &'a [u64], pos: usize) -> Self {
+        Cursor { words, pos }
+    }
+
+    #[inline(always)]
+    fn next(&mut self, bits: u32, mask: u64) -> usize {
+        let wi = self.pos >> 6;
+        let off = (self.pos & 63) as u32;
+        let mut v = unsafe { *self.words.get_unchecked(wi) } >> off;
+        if off + bits > 64 {
+            v |= unsafe { *self.words.get_unchecked(wi + 1) } << (64 - off);
+        }
+        self.pos += bits as usize;
+        (v & mask) as usize
+    }
+}
+
+struct SendMut<T>(*mut T);
+impl<T> Clone for SendMut<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendMut<T> {}
+unsafe impl<T> Send for SendMut<T> {}
+unsafe impl<T> Sync for SendMut<T> {}
+
+/// Dense f32 matvec baseline (the paper's FP16/cuBLAS stand-in):
+/// y[j] = Σ_i x[i]·W[i,j], streaming W row-by-row.
+pub fn dense_matvec(w: &Tensor, x: &[f32]) -> Vec<f32> {
+    assert_eq!(x.len(), w.rows);
+    let mut y = vec![0f32; w.cols];
+    let y_ptr = SendMut(y.as_mut_ptr());
+    // Parallelize over column blocks to match the quantized kernel's
+    // threading (fair Table 7 comparison).
+    parallel_for_chunks(w.cols, 256, |c0, c1| {
+        let y_ptr = y_ptr;
+        let yslice = unsafe { std::slice::from_raw_parts_mut(y_ptr.0.add(c0), c1 - c0) };
+        for (i, &xv) in x.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let row = &w.row(i)[c0..c1];
+            for (yj, &wv) in yslice.iter_mut().zip(row) {
+                *yj += xv * wv;
+            }
+        }
+    });
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::grouping::Grouping;
+    use crate::quant::{quantize_matrix, QuantMode, ScaleRule};
+    use crate::util::rng::Rng;
+
+    fn random_packed(
+        rng: &mut Rng,
+        rows: usize,
+        cols: usize,
+        bits: u8,
+        mode: QuantMode,
+    ) -> (Tensor, PackedMatrix) {
+        let mut w = Tensor::zeros(rows, cols);
+        rng.fill_laplace(&mut w.data, 0.05, 0.5);
+        let scores: Vec<f64> = (0..rows).map(|_| rng.uniform()).collect();
+        let grouping = Grouping::build(rows, cols, (rows / 4).max(1), &scores);
+        // Mixed depths across groups to exercise the mixed-precision path.
+        let bvec: Vec<u8> = (0..grouping.num_groups())
+            .map(|i| match i % 4 {
+                0 => bits,
+                1 => bits.saturating_sub(1).max(1),
+                2 => (bits + 1).min(8),
+                _ => bits,
+            })
+            .collect();
+        let pm = quantize_matrix(&w, &grouping, &bvec, mode, ScaleRule::Range);
+        (w, pm)
+    }
+
+    #[test]
+    fn quantized_matvec_matches_unpacked_dense() {
+        let mut rng = Rng::new(171);
+        for mode in [QuantMode::Companded, QuantMode::Uniform] {
+            let (_, pm) = random_packed(&mut rng, 96, 40, 3, mode);
+            let mut x = vec![0f32; 96];
+            rng.fill_gauss(&mut x, 0.0, 1.0);
+            let qmv = QuantMatvec::new(&pm);
+            let y_kernel = qmv.matvec(&x);
+            let y_ref = dense_matvec(&pm.unpack(), &x);
+            for (a, b) in y_kernel.iter().zip(&y_ref) {
+                assert!((a - b).abs() < 1e-3 * b.abs().max(1.0), "{mode:?}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_matvec_matches_naive() {
+        let mut rng = Rng::new(172);
+        let (rows, cols) = (33, 17);
+        let mut w = Tensor::zeros(rows, cols);
+        rng.fill_gauss(&mut w.data, 0.0, 1.0);
+        let mut x = vec![0f32; rows];
+        rng.fill_gauss(&mut x, 0.0, 1.0);
+        let y = dense_matvec(&w, &x);
+        for j in 0..cols {
+            let want: f32 = (0..rows).map(|i| x[i] * w.get(i, j)).sum();
+            assert!((y[j] - want).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn kernel_handles_pruned_groups() {
+        let mut rng = Rng::new(173);
+        let (rows, cols) = (32, 8);
+        let mut w = Tensor::zeros(rows, cols);
+        rng.fill_gauss(&mut w.data, 0.0, 1.0);
+        let grouping = Grouping::build(rows, cols, 8, &vec![0.0; rows]);
+        let mut bvec = vec![3u8; grouping.num_groups()];
+        for (i, b) in bvec.iter_mut().enumerate() {
+            if i % 3 == 0 {
+                *b = 0;
+            }
+        }
+        let pm = quantize_matrix(&w, &grouping, &bvec, QuantMode::Companded, ScaleRule::Range);
+        let mut x = vec![0f32; rows];
+        rng.fill_gauss(&mut x, 0.0, 1.0);
+        let y = QuantMatvec::new(&pm).matvec(&x);
+        let y_ref = dense_matvec(&pm.unpack(), &x);
+        for (a, b) in y.iter().zip(&y_ref) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn kernel_handles_row_scale_and_fp_rows() {
+        let mut rng = Rng::new(174);
+        let (rows, cols) = (24, 10);
+        let mut w = Tensor::zeros(rows, cols);
+        rng.fill_laplace(&mut w.data, 0.0, 0.4);
+        let grouping = Grouping::build(rows, cols, 8, &vec![0.0; rows]);
+        let metas: Vec<crate::quant::GroupMeta> = (0..grouping.num_groups())
+            .map(|gi| {
+                let col = gi / grouping.m;
+                let sub = gi % grouping.m;
+                let vals = grouping.gather(&w, col, sub);
+                crate::quant::group_meta(&vals, 3, QuantMode::Uniform, ScaleRule::Range)
+            })
+            .collect();
+        let scale: Vec<f32> = (0..rows).map(|_| 0.5 + rng.uniform_f32()).collect();
+        let fp = vec![2u32, 11, 17];
+        let pm = crate::quant::bitpack::PackedMatrix::pack_full(
+            &w,
+            &grouping,
+            &metas,
+            QuantMode::Uniform,
+            Some(scale),
+            &fp,
+        );
+        let mut x = vec![0f32; rows];
+        rng.fill_gauss(&mut x, 0.0, 1.0);
+        let y = QuantMatvec::new(&pm).matvec(&x);
+        let y_ref = dense_matvec(&pm.unpack(), &x);
+        for (a, b) in y.iter().zip(&y_ref) {
+            assert!((a - b).abs() < 2e-3 * b.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+}

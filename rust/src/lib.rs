@@ -1,0 +1,38 @@
+//! # Radio: Rate–Distortion Optimization for LLM Compression
+//!
+//! A three-layer (Rust + JAX + Pallas, AOT via PJRT) reproduction of
+//! *Radio: Rate-Distortion Optimization for Large Language Model
+//! Compression* (Sean I. Young, ICML 2025).
+//!
+//! - **L3 (this crate):** the coordinator — Algorithm 1's dual-ascent bit
+//!   allocation, companded quantization, grouping/bit-packing, baselines
+//!   (RTN/GPTQ/AWQ/OWQ), a transformer substrate with manual backprop, a
+//!   mixed-precision quantized inference engine, and evaluation harnesses.
+//! - **L2 (python/compile/model.py):** the same transformer in JAX,
+//!   AOT-lowered to HLO text artifacts that L3 loads via PJRT.
+//! - **L1 (python/compile/kernels/):** Pallas kernels for companded
+//!   quantization and mixed-depth matvec, verified against `ref.py`.
+//!
+//! See DESIGN.md for the system inventory and per-experiment index.
+
+pub mod util;
+
+pub mod stats;
+
+pub mod model;
+
+pub mod quant;
+
+pub mod coordinator;
+
+pub mod baselines;
+
+pub mod infer;
+
+pub mod eval;
+
+pub mod runtime;
+
+pub mod report;
+
+pub mod exp;

@@ -1,0 +1,209 @@
+//! `radio` — the L3 coordinator CLI.
+//!
+//! ```text
+//! radio train    --model ropt-small --steps 400 --out ckpt.weights
+//! radio quantize ckpt.weights --method radio --bits 3.0 --group 64 --out model.radio
+//!                [--provider xla]          # use the AOT JAX/Pallas artifacts
+//! radio eval     model.radio  [--domain shifted] [--weights ckpt.weights]
+//! radio serve    model.radio  --requests 32 --workers 4 --max-new 24
+//! radio info     model.radio
+//! ```
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use radio::coordinator::gradients::{GradientProvider, NativeProvider};
+use radio::coordinator::pipeline::{run_method, Method};
+use radio::eval::perplexity;
+use radio::exp;
+use radio::infer::{serve, Engine, Request};
+use radio::model::corpus::{Corpus, Domain};
+use radio::model::train::{train, TrainConfig};
+use radio::model::weights::Weights;
+use radio::model::ModelConfig;
+use radio::quant::format::QuantizedModel;
+use radio::runtime::XlaProvider;
+use radio::util::cli::Args;
+use radio::util::rng::Rng;
+
+fn main() -> ExitCode {
+    let args = Args::from_env();
+    let result = match args.subcommand() {
+        Some("train") => cmd_train(&args),
+        Some("quantize") => cmd_quantize(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            eprintln!("usage: radio <train|quantize|eval|serve|info> [options]");
+            eprintln!("see `rust/src/main.rs` header for the full synopsis");
+            return ExitCode::from(2);
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let preset = args.get_or("model", "ropt-small");
+    let steps = args.get_usize("steps", 400);
+    let out = PathBuf::from(args.get_or("out", "artifacts/model.weights"));
+    let cfg = ModelConfig::preset(preset)
+        .ok_or_else(|| anyhow::anyhow!("unknown preset {preset:?} (see ModelConfig::family)"))?;
+    let corpus = Corpus::synthetic(args.get_u64("corpus-seed", 0xC4), Domain::Calib, exp::CORPUS_BYTES);
+    let (train_split, val, _) = corpus.split();
+    let mut rng = Rng::new(args.get_u64("seed", 0x7EA1));
+    let mut w = Weights::init_training(cfg, &mut rng);
+    let tcfg = TrainConfig { steps, ..Default::default() };
+    let report = train(&mut w, &train_split, &tcfg, args.get_u64("seed", 0x7EA1) ^ 0xDEAD);
+    let ppl = perplexity(&w, &val, exp::EVAL_SEQ, exp::EVAL_WINDOWS);
+    println!(
+        "trained {preset} ({} params) for {steps} steps in {:.1}s: final loss {:.4}, val PPL {:.3}",
+        cfg.total_params(),
+        report.seconds,
+        report.final_loss,
+        ppl
+    );
+    if let Some(dir) = out.parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    w.save(&out)?;
+    println!("saved weights to {}", out.display());
+    Ok(())
+}
+
+fn parse_method(args: &Args) -> anyhow::Result<Method> {
+    let bits_f = args.get_f64("bits", 4.0);
+    let bits = bits_f.round().clamp(1.0, 8.0) as u8;
+    let group = args.get_usize("group", 64);
+    let iters = args.get_usize("iters", 24);
+    Ok(match args.get_or("method", "radio") {
+        "rtn" => Method::Rtn { bits, rows_per_group: group },
+        "gptq" => Method::Gptq(radio::baselines::gptq::GptqConfig {
+            bits,
+            rows_per_group: group,
+            ..Default::default()
+        }),
+        "awq" => Method::Awq(radio::baselines::awq::AwqConfig {
+            bits,
+            rows_per_group: group,
+            ..Default::default()
+        }),
+        "owq" => Method::Owq(radio::baselines::owq::OwqConfig {
+            bits,
+            target_bits: bits_f.max(bits as f64),
+            rows_per_group: group,
+            ..Default::default()
+        }),
+        "radio" => Method::Radio(exp::radio_cfg(bits_f, group, iters)),
+        other => anyhow::bail!("unknown method {other:?} (rtn|gptq|awq|owq|radio)"),
+    })
+}
+
+fn cmd_quantize(args: &Args) -> anyhow::Result<()> {
+    let wpath = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("usage: radio quantize <weights> [options]"))?;
+    let w = Weights::load(Path::new(wpath))?;
+    let corpus = Corpus::synthetic(0xC4, Domain::Calib, exp::CORPUS_BYTES);
+    let (calib, _, _) = corpus.split();
+    let method = parse_method(args)?;
+
+    let use_xla = args.get_or("provider", "native") == "xla";
+    let mut xla_holder;
+    let mut native = NativeProvider;
+    let provider: &mut dyn GradientProvider = if use_xla {
+        xla_holder = XlaProvider::load(&XlaProvider::default_dir())?;
+        anyhow::ensure!(
+            xla_holder.config == w.config,
+            "artifacts were compiled for a different model config; re-run `make artifacts`"
+        );
+        &mut xla_holder
+    } else {
+        &mut native
+    };
+
+    let result = run_method(&method, &w, &calib, provider);
+    let out = PathBuf::from(args.get_or("out", "artifacts/model.radio"));
+    if let Some(dir) = out.parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    result.model.save(&out)?;
+    println!(
+        "{}: {:.4} bits/weight, overhead {:.2}%, pruned {:.2}%, {:.1}s → {}",
+        result.method,
+        result.model.avg_bits(),
+        100.0 * result.model.overhead_fraction(),
+        100.0 * result.model.pruned_fraction(),
+        result.seconds,
+        out.display()
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("usage: radio eval <model.radio|weights> [--domain shifted]"))?;
+    let domain = match args.get_or("domain", "calib") {
+        "shifted" => Domain::Shifted,
+        _ => Domain::Calib,
+    };
+    let corpus = Corpus::synthetic(
+        if domain == Domain::Calib { 0xC4 } else { 0x21C1 },
+        domain,
+        exp::CORPUS_BYTES / 4,
+    );
+    let (_, _, test) = corpus.split();
+    let w = if path.ends_with(".radio") {
+        let qm = QuantizedModel::load(Path::new(path))?;
+        println!("quantized model: {:.4} bits/weight", qm.avg_bits());
+        qm.to_weights()
+    } else {
+        Weights::load(Path::new(path))?
+    };
+    let ppl = perplexity(&w, &test, exp::EVAL_SEQ, exp::EVAL_WINDOWS);
+    println!("perplexity ({domain:?} test split): {ppl:.4}");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("usage: radio serve <model.radio> [options]"))?;
+    let qm = QuantizedModel::load(Path::new(path))?;
+    let engine = Engine::from_quantized(&qm);
+    let n = args.get_usize("requests", 16);
+    let workers = args.get_usize("workers", 4);
+    let max_new = args.get_usize("max-new", 16);
+    let corpus = Corpus::synthetic(0xC4, Domain::Calib, 64 * 1024);
+    let mut rng = Rng::new(0x5E7E);
+    let requests: Vec<Request> = (0..n)
+        .map(|id| {
+            let (toks, _) = corpus.sample_batch(&mut rng, 1, 16);
+            Request { id, prompt: toks, max_new }
+        })
+        .collect();
+    let (_, stats) = serve(&engine, requests, workers);
+    println!("{stats}");
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("usage: radio info <model.radio>"))?;
+    let qm = QuantizedModel::load(Path::new(path))?;
+    println!("config: {:?}", qm.config());
+    println!("{}", qm.summary_json().to_pretty());
+    Ok(())
+}

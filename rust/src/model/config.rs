@@ -1,0 +1,134 @@
+//! Model configuration and the `ropt` scaling family — the in-repo stand-in
+//! for the paper's OPT/Llama-2 model grid (see DESIGN.md §Substitutions).
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelConfig {
+    /// Vocabulary size (char-level: 256).
+    pub vocab: usize,
+    /// Embedding dimension E.
+    pub dim: usize,
+    /// Attention heads (must divide `dim`).
+    pub heads: usize,
+    /// Transformer blocks.
+    pub layers: usize,
+    /// MLP hidden width F (usually 4·E).
+    pub mlp: usize,
+    /// Maximum sequence length (positional table size).
+    pub max_seq: usize,
+}
+
+impl ModelConfig {
+    /// Named presets mirroring the paper's model grid at laptop scale.
+    pub fn preset(name: &str) -> Option<ModelConfig> {
+        let c = |dim, heads, layers, mlp| ModelConfig {
+            vocab: 256,
+            dim,
+            heads,
+            layers,
+            mlp,
+            max_seq: 64,
+        };
+        Some(match name {
+            // param counts below count transformer-block weights only
+            "ropt-nano" => c(64, 2, 2, 256),    // ~0.15M
+            "ropt-micro" => c(96, 3, 3, 384),   // ~0.5M
+            "ropt-small" => c(128, 4, 4, 512),  // ~1.1M
+            "ropt-med" => c(192, 6, 6, 768),    // ~3.7M
+            "ropt-large" => c(256, 8, 8, 1024), // ~8.7M
+            "ropt-xl" => c(384, 8, 10, 1536),   // ~24.5M
+            _ => return None,
+        })
+    }
+
+    /// All preset names in ascending size order.
+    pub fn family() -> &'static [&'static str] {
+        &["ropt-nano", "ropt-micro", "ropt-small", "ropt-med", "ropt-large", "ropt-xl"]
+    }
+
+    pub fn head_dim(&self) -> usize {
+        debug_assert_eq!(self.dim % self.heads, 0);
+        self.dim / self.heads
+    }
+
+    /// Number of quantizable (transformer-block) weight parameters.
+    pub fn block_params(&self) -> usize {
+        // per layer: 4 E×E attention mats + E×F + F×E
+        self.layers * (4 * self.dim * self.dim + 2 * self.dim * self.mlp)
+    }
+
+    /// Total parameters including embeddings/LN/biases.
+    pub fn total_params(&self) -> usize {
+        let e = self.dim;
+        let embed = self.vocab * e + self.max_seq * e;
+        let per_layer = 4 * e * e + 2 * e * self.mlp // matrices
+            + 4 * e + self.mlp + e                   // biases (q,k,v,o,b1,b2)
+            + 4 * e; // ln1/ln2 gains+biases
+        embed + self.layers * per_layer + 2 * e // final LN
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("vocab", Json::num(self.vocab as f64)),
+            ("dim", Json::num(self.dim as f64)),
+            ("heads", Json::num(self.heads as f64)),
+            ("layers", Json::num(self.layers as f64)),
+            ("mlp", Json::num(self.mlp as f64)),
+            ("max_seq", Json::num(self.max_seq as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ModelConfig, String> {
+        let grab = |k: &str| {
+            j.get(k)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| format!("config missing field {k:?}"))
+        };
+        let cfg = ModelConfig {
+            vocab: grab("vocab")?,
+            dim: grab("dim")?,
+            heads: grab("heads")?,
+            layers: grab("layers")?,
+            mlp: grab("mlp")?,
+            max_seq: grab("max_seq")?,
+        };
+        if cfg.dim % cfg.heads != 0 {
+            return Err("heads must divide dim".into());
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve_and_divide() {
+        for name in ModelConfig::family() {
+            let c = ModelConfig::preset(name).unwrap();
+            assert_eq!(c.dim % c.heads, 0, "{name}");
+            assert!(c.block_params() > 0);
+        }
+        assert!(ModelConfig::preset("bogus").is_none());
+    }
+
+    #[test]
+    fn family_sizes_ascend() {
+        let sizes: Vec<usize> = ModelConfig::family()
+            .iter()
+            .map(|n| ModelConfig::preset(n).unwrap().block_params())
+            .collect();
+        for w in sizes.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = ModelConfig::preset("ropt-small").unwrap();
+        let back = ModelConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, back);
+    }
+}

@@ -1,0 +1,14 @@
+//! The model substrate: a decoder-only transformer with manual backprop,
+//! an Adam trainer, synthetic corpora, and the `ropt` scaling family —
+//! everything the paper sources from HuggingFace/PyTorch, built in-repo.
+
+pub mod config;
+pub mod corpus;
+pub mod tensor;
+pub mod train;
+pub mod transformer;
+pub mod weights;
+
+pub use config::ModelConfig;
+pub use tensor::Tensor;
+pub use weights::{MatId, Role, Weights};

@@ -1,0 +1,202 @@
+//! A minimal row-major 2-D tensor. Deliberately small: the heavy lifting
+//! (threaded matmul, Gram, transpose) lives in [`crate::stats::linalg`];
+//! `Tensor` is the ownership/shape wrapper used for model weights and
+//! activations.
+
+use crate::stats::linalg;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(rows: usize, cols: usize) -> Tensor {
+        Tensor { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Tensor {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Tensor { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// self[rows×cols] · other[cols×n]
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let data = linalg::matmul(&self.data, &other.data, self.rows, self.cols, other.cols);
+        Tensor { rows: self.rows, cols: other.cols, data }
+    }
+
+    /// selfᵀ · other  (self[k×m]ᵀ → m×k, other[k×n]) without materializing
+    /// the transpose.
+    pub fn t_matmul(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.rows, other.rows, "t_matmul shape mismatch");
+        let t = linalg::transpose(&self.data, self.rows, self.cols);
+        let data = linalg::matmul(&t, &other.data, self.cols, self.rows, other.cols);
+        Tensor { rows: self.cols, cols: other.cols, data }
+    }
+
+    /// self · otherᵀ (other[n×cols]).
+    pub fn matmul_t(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.cols, other.cols, "matmul_t shape mismatch");
+        let t = linalg::transpose(&other.data, other.rows, other.cols);
+        let data = linalg::matmul(&self.data, &t, self.rows, self.cols, other.rows);
+        Tensor { rows: self.rows, cols: other.rows, data }
+    }
+
+    pub fn transpose(&self) -> Tensor {
+        Tensor {
+            rows: self.cols,
+            cols: self.rows,
+            data: linalg::transpose(&self.data, self.rows, self.cols),
+        }
+    }
+
+    /// Add a row-vector bias to every row.
+    pub fn add_bias(&mut self, bias: &[f32]) {
+        assert_eq!(bias.len(), self.cols);
+        for r in 0..self.rows {
+            for (x, &b) in self.row_mut(r).iter_mut().zip(bias) {
+                *x += b;
+            }
+        }
+    }
+
+    /// Elementwise in-place add.
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.data.len(), other.data.len());
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// Elementwise in-place scaled add: self += alpha * other.
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        assert_eq!(self.data.len(), other.data.len());
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for x in self.data.iter_mut() {
+            *x *= s;
+        }
+    }
+
+    /// Column slice [c0, c1) as a new tensor.
+    pub fn cols_slice(&self, c0: usize, c1: usize) -> Tensor {
+        assert!(c0 <= c1 && c1 <= self.cols);
+        let w = c1 - c0;
+        let mut out = Tensor::zeros(self.rows, w);
+        for r in 0..self.rows {
+            out.row_mut(r).copy_from_slice(&self.row(r)[c0..c1]);
+        }
+        out
+    }
+
+    /// Write `src` into columns [c0, c0+src.cols).
+    pub fn set_cols(&mut self, c0: usize, src: &Tensor) {
+        assert_eq!(self.rows, src.rows);
+        assert!(c0 + src.cols <= self.cols);
+        for r in 0..self.rows {
+            let dst = &mut self.data[r * self.cols + c0..r * self.cols + c0 + src.cols];
+            dst.copy_from_slice(src.row(r));
+        }
+    }
+
+    /// Accumulate `src` into columns [c0, ..).
+    pub fn add_cols(&mut self, c0: usize, src: &Tensor) {
+        assert_eq!(self.rows, src.rows);
+        assert!(c0 + src.cols <= self.cols);
+        for r in 0..self.rows {
+            for j in 0..src.cols {
+                self.data[r * self.cols + c0 + j] += src.get(r, j);
+            }
+        }
+    }
+
+    pub fn frob2(&self) -> f64 {
+        linalg::frob2(&self.data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identities() {
+        let a = Tensor::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let mut eye = Tensor::zeros(3, 3);
+        for i in 0..3 {
+            eye.set(i, i, 1.0);
+        }
+        assert_eq!(a.matmul(&eye), a);
+    }
+
+    #[test]
+    fn t_matmul_matches_explicit() {
+        let a = Tensor::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Tensor::from_vec(3, 2, vec![1., 0., 0., 1., 1., 1.]);
+        let left = a.t_matmul(&b);
+        let explicit = a.transpose().matmul(&b);
+        assert_eq!(left, explicit);
+    }
+
+    #[test]
+    fn matmul_t_matches_explicit() {
+        let a = Tensor::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Tensor::from_vec(4, 3, (0..12).map(|x| x as f32).collect());
+        assert_eq!(a.matmul_t(&b), a.matmul(&b.transpose()));
+    }
+
+    #[test]
+    fn col_slicing_roundtrip() {
+        let a = Tensor::from_vec(2, 4, (0..8).map(|x| x as f32).collect());
+        let s = a.cols_slice(1, 3);
+        assert_eq!(s.data, vec![1., 2., 5., 6.]);
+        let mut b = Tensor::zeros(2, 4);
+        b.set_cols(1, &s);
+        assert_eq!(b.get(0, 1), 1.0);
+        assert_eq!(b.get(1, 2), 6.0);
+    }
+
+    #[test]
+    fn bias_add() {
+        let mut a = Tensor::zeros(2, 3);
+        a.add_bias(&[1.0, 2.0, 3.0]);
+        assert_eq!(a.row(1), &[1.0, 2.0, 3.0]);
+    }
+}

@@ -1,0 +1,784 @@
+//! Decoder-only transformer substrate: forward pass, cross-entropy loss
+//! and full manual reverse-mode backprop (the offline registry has no
+//! autograd — and the paper's Algorithm 1 needs gradients of arbitrary
+//! projections of the output, not just the loss).
+//!
+//! Layout: pre-LN GPT. `X @ W + b` convention with W stored (d_in×d_out).
+//! A batch of B sequences of length T is processed as a stacked
+//! (B·T)×E activation matrix; attention runs per (sequence, head).
+//!
+//! Gradients are returned in a `Weights`-shaped container (`Grads`), so
+//! the Adam trainer and the Radio gradient-variance accumulator share the
+//! same plumbing.
+
+use crate::model::tensor::Tensor;
+use crate::model::weights::{Role, Weights};
+
+/// Gradient container: same shape as the weights.
+pub type Grads = Weights;
+
+const LN_EPS: f32 = 1e-5;
+
+/// Per-layer forward cache needed by backward.
+pub struct LayerCache {
+    /// Residual-stream input to the block (pre-LN1), (N×E).
+    pub x_in: Tensor,
+    /// LN1 output = input to Q/K/V projections.
+    pub a: Tensor,
+    pub ln1_xhat: Tensor,
+    pub ln1_rstd: Vec<f32>,
+    pub q: Tensor,
+    pub k: Tensor,
+    pub v: Tensor,
+    /// Softmax probabilities per (batch, head): B·H tensors of T×T.
+    pub probs: Vec<Tensor>,
+    /// Concatenated attention context (input to Wo), (N×E).
+    pub ctx: Tensor,
+    /// After attention residual (pre-LN2), (N×E).
+    pub x_mid: Tensor,
+    /// LN2 output = input to W1.
+    pub bn: Tensor,
+    pub ln2_xhat: Tensor,
+    pub ln2_rstd: Vec<f32>,
+    /// Pre-GELU activations, (N×F).
+    pub u: Tensor,
+    /// Post-GELU = input to W2, (N×F).
+    pub h: Tensor,
+}
+
+/// Whole-model forward cache.
+pub struct Cache {
+    pub batch: usize,
+    pub seq: usize,
+    pub tokens: Vec<u32>,
+    pub layers: Vec<LayerCache>,
+    /// Input to the final LN (N×E).
+    pub x_final: Tensor,
+    pub lnf_xhat: Tensor,
+    pub lnf_rstd: Vec<f32>,
+    /// Final LN output Z (the paper's next-token embeddings), (N×E).
+    pub z: Tensor,
+}
+
+impl Cache {
+    /// Column means of the input activations feeding the given matrix —
+    /// the `X̄_n` of the paper's bias correction.
+    pub fn input_means(&self, layer: usize, role: Role) -> Vec<f32> {
+        let t = match role {
+            Role::Q | Role::K | Role::V => &self.layers[layer].a,
+            Role::O => &self.layers[layer].ctx,
+            Role::Up => &self.layers[layer].bn,
+            Role::Down => &self.layers[layer].h,
+        };
+        let mut mu = vec![0f32; t.cols];
+        for r in 0..t.rows {
+            for (m, &x) in mu.iter_mut().zip(t.row(r)) {
+                *m += x;
+            }
+        }
+        let inv = 1.0 / t.rows as f32;
+        for m in mu.iter_mut() {
+            *m *= inv;
+        }
+        mu
+    }
+}
+
+// ---------------------------------------------------------------- forward
+
+fn layer_norm(x: &Tensor, g: &[f32], b: &[f32]) -> (Tensor, Tensor, Vec<f32>) {
+    let (n, e) = (x.rows, x.cols);
+    let mut out = Tensor::zeros(n, e);
+    let mut xhat = Tensor::zeros(n, e);
+    let mut rstd = vec![0f32; n];
+    for r in 0..n {
+        let row = x.row(r);
+        let mu = row.iter().sum::<f32>() / e as f32;
+        let var = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / e as f32;
+        let rs = 1.0 / (var + LN_EPS).sqrt();
+        rstd[r] = rs;
+        let xh = xhat.row_mut(r);
+        let o = &mut out.data[r * e..(r + 1) * e];
+        for j in 0..e {
+            let h = (row[j] - mu) * rs;
+            xh[j] = h;
+            o[j] = g[j] * h + b[j];
+        }
+    }
+    (out, xhat, rstd)
+}
+
+fn layer_norm_backward(
+    dy: &Tensor,
+    xhat: &Tensor,
+    rstd: &[f32],
+    g: &[f32],
+    dg: &mut [f32],
+    db: &mut [f32],
+) -> Tensor {
+    let (n, e) = (dy.rows, dy.cols);
+    let mut dx = Tensor::zeros(n, e);
+    for r in 0..n {
+        let dyr = dy.row(r);
+        let xh = xhat.row(r);
+        let mut sum_gdy = 0f32;
+        let mut sum_gdy_xh = 0f32;
+        for j in 0..e {
+            let gd = g[j] * dyr[j];
+            sum_gdy += gd;
+            sum_gdy_xh += gd * xh[j];
+            dg[j] += dyr[j] * xh[j];
+            db[j] += dyr[j];
+        }
+        let inv_e = 1.0 / e as f32;
+        let dxr = dx.row_mut(r);
+        for j in 0..e {
+            let gd = g[j] * dyr[j];
+            dxr[j] = (gd - sum_gdy * inv_e - xh[j] * sum_gdy_xh * inv_e) * rstd[r];
+        }
+    }
+    dx
+}
+
+const GELU_A: f32 = 0.797_884_6; // sqrt(2/pi)
+const GELU_C: f32 = 0.044_715;
+
+#[inline]
+fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + (GELU_A * (x + GELU_C * x * x * x)).tanh())
+}
+
+#[inline]
+fn gelu_grad(x: f32) -> f32 {
+    let t = (GELU_A * (x + GELU_C * x * x * x)).tanh();
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * GELU_A * (1.0 + 3.0 * GELU_C * x * x)
+}
+
+/// Copy the (batch b, head h) block of a stacked (B·T)×E matrix into T×dh.
+fn head_block(x: &Tensor, b: usize, h: usize, t: usize, dh: usize) -> Tensor {
+    let mut out = Tensor::zeros(t, dh);
+    for i in 0..t {
+        let src = &x.row(b * t + i)[h * dh..(h + 1) * dh];
+        out.row_mut(i).copy_from_slice(src);
+    }
+    out
+}
+
+fn add_head_block(x: &mut Tensor, src: &Tensor, b: usize, h: usize, t: usize, dh: usize) {
+    for i in 0..t {
+        let dst = &mut x.row_mut(b * t + i)[h * dh..(h + 1) * dh];
+        for (d, &s) in dst.iter_mut().zip(src.row(i)) {
+            *d += s;
+        }
+    }
+}
+
+/// Causal softmax(QKᵀ/√dh)·V for one (batch, head); returns (ctx, probs).
+fn attention_head(q: &Tensor, k: &Tensor, v: &Tensor) -> (Tensor, Tensor) {
+    let (t, dh) = (q.rows, q.cols);
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut probs = Tensor::zeros(t, t);
+    for i in 0..t {
+        // scores for j <= i
+        let qi = q.row(i);
+        let mut maxs = f32::NEG_INFINITY;
+        let mut scores = vec![0f32; i + 1];
+        for (j, sj) in scores.iter_mut().enumerate() {
+            let s = crate::stats::linalg::dot(qi, k.row(j)) as f32 * scale;
+            *sj = s;
+            maxs = maxs.max(s);
+        }
+        let mut denom = 0f32;
+        for s in scores.iter_mut() {
+            *s = (*s - maxs).exp();
+            denom += *s;
+        }
+        let pr = probs.row_mut(i);
+        for (j, &s) in scores.iter().enumerate() {
+            pr[j] = s / denom;
+        }
+    }
+    let ctx = probs.matmul(v);
+    (ctx, probs)
+}
+
+fn attention_head_backward(
+    dctx: &Tensor,
+    probs: &Tensor,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+) -> (Tensor, Tensor, Tensor) {
+    let (t, dh) = (q.rows, q.cols);
+    let scale = 1.0 / (dh as f32).sqrt();
+    // dP = dctx·Vᵀ ; dV = Pᵀ·dctx
+    let dp = dctx.matmul_t(v);
+    let dv = probs.t_matmul(dctx);
+    // softmax backward, row-wise (masked entries have P = 0 ⇒ dS = 0).
+    let mut ds = Tensor::zeros(t, t);
+    for i in 0..t {
+        let pr = probs.row(i);
+        let dpr = dp.row(i);
+        let dot: f32 = pr.iter().zip(dpr).map(|(&p, &d)| p * d).sum();
+        let dsr = ds.row_mut(i);
+        for j in 0..=i {
+            dsr[j] = pr[j] * (dpr[j] - dot);
+        }
+    }
+    // dQ = dS·K·scale ; dK = dSᵀ·Q·scale
+    let mut dq = ds.matmul(k);
+    dq.scale(scale);
+    let mut dk = ds.t_matmul(q);
+    dk.scale(scale);
+    (dq, dk, dv)
+}
+
+/// Run the model forward, returning the final-LN output `Z` (the paper's
+/// next-token embedding matrix, stacked (B·T)×E) and the cache.
+pub fn forward(w: &Weights, tokens: &[u32], batch: usize, seq: usize) -> Cache {
+    let cfg = &w.config;
+    assert_eq!(tokens.len(), batch * seq);
+    assert!(seq <= cfg.max_seq, "sequence longer than positional table");
+    let (e, hds, dh) = (cfg.dim, cfg.heads, cfg.head_dim());
+    let n = batch * seq;
+
+    // Embedding + positions.
+    let mut x = Tensor::zeros(n, e);
+    for (i, &tok) in tokens.iter().enumerate() {
+        let trow = w.embed.row(tok as usize % cfg.vocab);
+        let prow = w.pos.row(i % seq);
+        let dst = x.row_mut(i);
+        for j in 0..e {
+            dst[j] = trow[j] + prow[j];
+        }
+    }
+
+    let mut layer_caches = Vec::with_capacity(cfg.layers);
+    for l in &w.layers {
+        let x_in = x.clone();
+        let (a, ln1_xhat, ln1_rstd) = layer_norm(&x, &l.ln1_g, &l.ln1_b);
+        let mut q = a.matmul(&l.wq);
+        q.add_bias(&l.bq);
+        let mut k = a.matmul(&l.wk);
+        k.add_bias(&l.bk);
+        let mut v = a.matmul(&l.wv);
+        v.add_bias(&l.bv);
+
+        let mut ctx = Tensor::zeros(n, e);
+        let mut probs = Vec::with_capacity(batch * hds);
+        for b in 0..batch {
+            for h in 0..hds {
+                let qh = head_block(&q, b, h, seq, dh);
+                let kh = head_block(&k, b, h, seq, dh);
+                let vh = head_block(&v, b, h, seq, dh);
+                let (ctx_h, p) = attention_head(&qh, &kh, &vh);
+                add_head_block(&mut ctx, &ctx_h, b, h, seq, dh);
+                probs.push(p);
+            }
+        }
+        let mut attn_out = ctx.matmul(&l.wo);
+        attn_out.add_bias(&l.bo);
+        x.add_assign(&attn_out);
+        let x_mid = x.clone();
+
+        let (bn, ln2_xhat, ln2_rstd) = layer_norm(&x, &l.ln2_g, &l.ln2_b);
+        let mut u = bn.matmul(&l.w1);
+        u.add_bias(&l.b1);
+        let mut hmat = u.clone();
+        for vv in hmat.data.iter_mut() {
+            *vv = gelu(*vv);
+        }
+        let mut mlp_out = hmat.matmul(&l.w2);
+        mlp_out.add_bias(&l.b2);
+        x.add_assign(&mlp_out);
+
+        layer_caches.push(LayerCache {
+            x_in,
+            a,
+            ln1_xhat,
+            ln1_rstd,
+            q,
+            k,
+            v,
+            probs,
+            ctx,
+            x_mid,
+            bn,
+            ln2_xhat,
+            ln2_rstd,
+            u,
+            h: hmat,
+        });
+    }
+
+    let x_final = x.clone();
+    let (z, lnf_xhat, lnf_rstd) = layer_norm(&x, &w.lnf_g, &w.lnf_b);
+    Cache {
+        batch,
+        seq,
+        tokens: tokens.to_vec(),
+        layers: layer_caches,
+        x_final,
+        lnf_xhat,
+        lnf_rstd,
+        z,
+    }
+}
+
+/// Logits via the tied head: Z @ Wembᵀ, (B·T)×V.
+pub fn logits(w: &Weights, z: &Tensor) -> Tensor {
+    z.matmul_t(&w.embed)
+}
+
+/// Mean cross-entropy over all positions + gradient wrt logits.
+pub fn cross_entropy(logits: &Tensor, targets: &[u32]) -> (f64, Tensor) {
+    let (n, v) = (logits.rows, logits.cols);
+    assert_eq!(targets.len(), n);
+    let mut dlogits = Tensor::zeros(n, v);
+    let mut loss = 0f64;
+    let invn = 1.0 / n as f32;
+    for r in 0..n {
+        let row = logits.row(r);
+        let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0f64;
+        for &x in row {
+            denom += ((x - maxv) as f64).exp();
+        }
+        let tgt = targets[r] as usize % v;
+        let logp = (row[tgt] - maxv) as f64 - denom.ln();
+        loss -= logp;
+        let dr = dlogits.row_mut(r);
+        for j in 0..v {
+            let p = (((row[j] - maxv) as f64).exp() / denom) as f32;
+            dr[j] = (p - if j == tgt { 1.0 } else { 0.0 }) * invn;
+        }
+    }
+    (loss / n as f64, dlogits)
+}
+
+/// Backprop from an arbitrary `dZ` (gradient wrt the final-LN output) down
+/// to every parameter. Used directly by Radio's gradient-variance pass.
+pub fn backward_from_dz(w: &Weights, cache: &Cache, dz: &Tensor) -> Grads {
+    let cfg = &w.config;
+    let (e, hds, dh) = (cfg.dim, cfg.heads, cfg.head_dim());
+    let (batch, seq) = (cache.batch, cache.seq);
+    let n = batch * seq;
+    let mut g = Grads::zeros(*cfg);
+    // Zero the LN gains that `zeros` initializes to one — this is a
+    // gradient container.
+    for l in g.layers.iter_mut() {
+        l.ln1_g.fill(0.0);
+        l.ln2_g.fill(0.0);
+    }
+    g.lnf_g.fill(0.0);
+
+    // Final LN.
+    let mut dx = layer_norm_backward(
+        dz,
+        &cache.lnf_xhat,
+        &cache.lnf_rstd,
+        &w.lnf_g,
+        &mut g.lnf_g,
+        &mut g.lnf_b,
+    );
+
+    for (li, l) in w.layers.iter().enumerate().rev() {
+        let lc = &cache.layers[li];
+        let gl = &mut g.layers[li];
+
+        // ---- MLP branch: x = x_mid + W2·gelu(W1·LN2(x_mid)+b1)+b2
+        // dx flows to both the residual and the MLP path.
+        let dmlp_out = &dx; // (N×E)
+        // W2: h (N×F) → out (N×E)
+        let dw2 = lc.h.t_matmul(dmlp_out);
+        gl.w2.add_assign(&dw2);
+        for r in 0..n {
+            for (bj, &d) in gl.b2.iter_mut().zip(dmlp_out.row(r)) {
+                *bj += d;
+            }
+        }
+        let mut dh_mat = dmlp_out.matmul_t(&l.w2); // (N×F)
+        // GELU
+        for (d, &uu) in dh_mat.data.iter_mut().zip(&lc.u.data) {
+            *d *= gelu_grad(uu);
+        }
+        // W1: bn (N×E) → u (N×F)
+        let dw1 = lc.bn.t_matmul(&dh_mat);
+        gl.w1.add_assign(&dw1);
+        for r in 0..n {
+            for (bj, &d) in gl.b1.iter_mut().zip(dh_mat.row(r)) {
+                *bj += d;
+            }
+        }
+        let dbn = dh_mat.matmul_t(&l.w1); // (N×E)
+        let dx_ln2 = layer_norm_backward(
+            &dbn,
+            &lc.ln2_xhat,
+            &lc.ln2_rstd,
+            &l.ln2_g,
+            &mut gl.ln2_g,
+            &mut gl.ln2_b,
+        );
+        // Residual join: d(x_mid) = dx (residual) + dx_ln2 (MLP path).
+        dx.add_assign(&dx_ln2);
+
+        // ---- Attention branch: x_mid = x_in + Wo·ctx + bo
+        let dattn_out = &dx;
+        let dwo = lc.ctx.t_matmul(dattn_out);
+        gl.wo.add_assign(&dwo);
+        for r in 0..n {
+            for (bj, &d) in gl.bo.iter_mut().zip(dattn_out.row(r)) {
+                *bj += d;
+            }
+        }
+        let dctx = dattn_out.matmul_t(&l.wo); // (N×E)
+
+        let mut dq = Tensor::zeros(n, e);
+        let mut dk = Tensor::zeros(n, e);
+        let mut dv = Tensor::zeros(n, e);
+        for b in 0..batch {
+            for h in 0..hds {
+                let p = &lc.probs[b * hds + h];
+                let qh = head_block(&lc.q, b, h, seq, dh);
+                let kh = head_block(&lc.k, b, h, seq, dh);
+                let vh = head_block(&lc.v, b, h, seq, dh);
+                let dctx_h = head_block(&dctx, b, h, seq, dh);
+                let (dqh, dkh, dvh) = attention_head_backward(&dctx_h, p, &qh, &kh, &vh);
+                add_head_block(&mut dq, &dqh, b, h, seq, dh);
+                add_head_block(&mut dk, &dkh, b, h, seq, dh);
+                add_head_block(&mut dv, &dvh, b, h, seq, dh);
+            }
+        }
+
+        // Projections Q/K/V from A.
+        let dwq = lc.a.t_matmul(&dq);
+        gl.wq.add_assign(&dwq);
+        let dwk = lc.a.t_matmul(&dk);
+        gl.wk.add_assign(&dwk);
+        let dwv = lc.a.t_matmul(&dv);
+        gl.wv.add_assign(&dwv);
+        for r in 0..n {
+            for (bj, &d) in gl.bq.iter_mut().zip(dq.row(r)) {
+                *bj += d;
+            }
+            for (bj, &d) in gl.bk.iter_mut().zip(dk.row(r)) {
+                *bj += d;
+            }
+            for (bj, &d) in gl.bv.iter_mut().zip(dv.row(r)) {
+                *bj += d;
+            }
+        }
+        let mut da = dq.matmul_t(&l.wq);
+        da.add_assign(&dk.matmul_t(&l.wk));
+        da.add_assign(&dv.matmul_t(&l.wv));
+        let dx_ln1 = layer_norm_backward(
+            &da,
+            &lc.ln1_xhat,
+            &lc.ln1_rstd,
+            &l.ln1_g,
+            &mut gl.ln1_g,
+            &mut gl.ln1_b,
+        );
+        dx.add_assign(&dx_ln1);
+        // dx now is the gradient wrt this block's input x_in; continue down.
+    }
+
+    // Embedding + positional gradients.
+    for (i, &tok) in cache.tokens.iter().enumerate() {
+        let drow = dx.row(i);
+        let erow = g.embed.row_mut(tok as usize % cfg.vocab);
+        for j in 0..e {
+            erow[j] += drow[j];
+        }
+        let prow = g.pos.row_mut(i % seq);
+        for j in 0..e {
+            prow[j] += drow[j];
+        }
+    }
+    g
+}
+
+/// Full training step gradient: forward, tied-head logits, cross-entropy,
+/// backward. Returns (loss, grads).
+pub fn loss_and_grads(
+    w: &Weights,
+    tokens: &[u32],
+    targets: &[u32],
+    batch: usize,
+    seq: usize,
+) -> (f64, Grads) {
+    let cache = forward(w, tokens, batch, seq);
+    let lg = logits(w, &cache.z);
+    let (loss, dlogits) = cross_entropy(&lg, targets);
+    // Head (tied): logits = Z·Wembᵀ ⇒ dZ = dlogits·Wemb, dWemb += dlogitsᵀ·Z.
+    let dz = dlogits.matmul(&w.embed);
+    let mut g = backward_from_dz(w, &cache, &dz);
+    let dwemb = dlogits.t_matmul(&cache.z);
+    g.embed.add_assign(&dwemb);
+    (loss, g)
+}
+
+/// Evaluation-time loss (no gradients).
+pub fn loss_only(w: &Weights, tokens: &[u32], targets: &[u32], batch: usize, seq: usize) -> f64 {
+    let cache = forward(w, tokens, batch, seq);
+    let lg = logits(w, &cache.z);
+    let (n, v) = (lg.rows, lg.cols);
+    let mut loss = 0f64;
+    for r in 0..n {
+        let row = lg.row(r);
+        let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0f64;
+        for &x in row {
+            denom += ((x - maxv) as f64).exp();
+        }
+        let tgt = targets[r] as usize % v;
+        loss -= (row[tgt] - maxv) as f64 - denom.ln();
+    }
+    loss / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+    use crate::util::rng::Rng;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig { vocab: 17, dim: 8, heads: 2, layers: 2, mlp: 16, max_seq: 6 }
+    }
+
+    fn rand_tokens(rng: &mut Rng, n: usize, vocab: usize) -> Vec<u32> {
+        (0..n).map(|_| rng.below(vocab) as u32).collect()
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(1);
+        let w = Weights::init_training(cfg, &mut rng);
+        let toks = rand_tokens(&mut rng, 2 * 5, cfg.vocab);
+        let cache = forward(&w, &toks, 2, 5);
+        assert_eq!(cache.z.rows, 10);
+        assert_eq!(cache.z.cols, cfg.dim);
+        let lg = logits(&w, &cache.z);
+        assert_eq!(lg.cols, cfg.vocab);
+    }
+
+    #[test]
+    fn causality_future_tokens_do_not_affect_past() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(2);
+        let w = Weights::init_training(cfg, &mut rng);
+        let mut t1 = rand_tokens(&mut rng, 6, cfg.vocab);
+        let c1 = forward(&w, &t1, 1, 6);
+        // Change the last token; logits for earlier positions must not move.
+        t1[5] = (t1[5] + 1) % cfg.vocab as u32;
+        let c2 = forward(&w, &t1, 1, 6);
+        for pos in 0..5 {
+            for j in 0..cfg.dim {
+                assert!(
+                    (c1.z.get(pos, j) - c2.z.get(pos, j)).abs() < 1e-6,
+                    "pos {pos} leaked future info"
+                );
+            }
+        }
+        // Position 5 itself should change.
+        let diff: f32 = (0..cfg.dim)
+            .map(|j| (c1.z.get(5, j) - c2.z.get(5, j)).abs())
+            .sum();
+        assert!(diff > 1e-4);
+    }
+
+    #[test]
+    fn cross_entropy_of_uniform_logits() {
+        let n = 4;
+        let v = 10;
+        let lg = Tensor::zeros(n, v);
+        let targets = vec![3u32; n];
+        let (loss, dlg) = cross_entropy(&lg, &targets);
+        assert!((loss - (v as f64).ln()).abs() < 1e-9);
+        // Gradient sums to zero per row.
+        for r in 0..n {
+            let s: f32 = dlg.row(r).iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+    }
+
+    /// The critical test: analytic gradients vs central finite differences
+    /// through the entire model (loss path), for a sample of parameters
+    /// from every tensor class.
+    #[test]
+    fn grad_check_finite_difference() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(3);
+        let mut w = Weights::init_training(cfg, &mut rng);
+        // Make LN params non-trivial so their grads are exercised.
+        for l in w.layers.iter_mut() {
+            for v in l.ln1_g.iter_mut() {
+                *v = 1.0 + rng.normal(0.0, 0.1) as f32;
+            }
+            for v in l.ln2_b.iter_mut() {
+                *v = rng.normal(0.0, 0.1) as f32;
+            }
+        }
+        let (batch, seq) = (2, 4);
+        let toks = rand_tokens(&mut rng, batch * seq, cfg.vocab);
+        let tgts = rand_tokens(&mut rng, batch * seq, cfg.vocab);
+
+        let (_, grads) = loss_and_grads(&w, &toks, &tgts, batch, seq);
+
+        // Probe a handful of coordinates in each parameter tensor.
+        let eps = 1e-3f32;
+        let mut check = |get: &dyn Fn(&Weights) -> f32,
+                         set: &dyn Fn(&mut Weights, f32),
+                         analytic: f32,
+                         label: &str| {
+            let orig = get(&w);
+            let mut wp = w.clone();
+            set(&mut wp, orig + eps);
+            let lp = loss_only(&wp, &toks, &tgts, batch, seq);
+            set(&mut wp, orig - eps);
+            let lm = loss_only(&wp, &toks, &tgts, batch, seq);
+            let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            let denom = fd.abs().max(analytic.abs()).max(1e-4);
+            assert!(
+                (fd - analytic).abs() / denom < 0.08,
+                "{label}: fd {fd} vs analytic {analytic}"
+            );
+        };
+
+        // Attention weight.
+        check(
+            &|w| w.layers[0].wq.get(1, 2),
+            &|w, v| w.layers[0].wq.set(1, 2, v),
+            grads.layers[0].wq.get(1, 2),
+            "wq[1,2]",
+        );
+        // MLP down-projection in the last layer.
+        check(
+            &|w| w.layers[1].w2.get(3, 1),
+            &|w, v| w.layers[1].w2.set(3, 1, v),
+            grads.layers[1].w2.get(3, 1),
+            "w2[3,1]",
+        );
+        // Output projection.
+        check(
+            &|w| w.layers[0].wo.get(0, 5),
+            &|w, v| w.layers[0].wo.set(0, 5, v),
+            grads.layers[0].wo.get(0, 5),
+            "wo[0,5]",
+        );
+        // Value projection.
+        check(
+            &|w| w.layers[1].wv.get(2, 2),
+            &|w, v| w.layers[1].wv.set(2, 2, v),
+            grads.layers[1].wv.get(2, 2),
+            "wv[2,2]",
+        );
+        // Key projection.
+        check(
+            &|w| w.layers[0].wk.get(4, 4),
+            &|w, v| w.layers[0].wk.set(4, 4, v),
+            grads.layers[0].wk.get(4, 4),
+            "wk[4,4]",
+        );
+        // MLP up bias.
+        check(
+            &|w| w.layers[0].b1[3],
+            &|w, v| w.layers[0].b1[3] = v,
+            grads.layers[0].b1[3],
+            "b1[3]",
+        );
+        // LN gain and bias.
+        check(
+            &|w| w.layers[0].ln1_g[2],
+            &|w, v| w.layers[0].ln1_g[2] = v,
+            grads.layers[0].ln1_g[2],
+            "ln1_g[2]",
+        );
+        check(
+            &|w| w.lnf_b[1],
+            &|w, v| w.lnf_b[1] = v,
+            grads.lnf_b[1],
+            "lnf_b[1]",
+        );
+        // Embedding row used by a token in the batch.
+        let tok = toks[0] as usize;
+        check(
+            &|w| w.embed.get(tok, 0),
+            &|w, v| {
+                let c = w.embed.cols;
+                w.embed.data[tok * c] = v;
+            },
+            grads.embed.get(tok, 0),
+            "embed[tok,0]",
+        );
+        // Positional embedding.
+        check(
+            &|w| w.pos.get(1, 3),
+            &|w, v| w.pos.set(1, 3, v),
+            grads.pos.get(1, 3),
+            "pos[1,3]",
+        );
+    }
+
+    #[test]
+    fn backward_from_dz_matches_projection_fd() {
+        // Gradient of c = sᵀ·(Z·u) — exactly the Radio gradvar scalar —
+        // checked against finite differences on one weight.
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(4);
+        let w = Weights::init_training(cfg, &mut rng);
+        let (batch, seq) = (1, 5);
+        let toks = rand_tokens(&mut rng, batch * seq, cfg.vocab);
+        let mut u = vec![0f32; cfg.dim];
+        let mut s = vec![0f32; batch * seq];
+        rng.fill_gauss(&mut u, 0.0, 1.0);
+        rng.fill_sign(&mut s);
+
+        let scalar = |w: &Weights| -> f64 {
+            let c = forward(w, &toks, batch, seq);
+            let mut acc = 0f64;
+            for r in 0..c.z.rows {
+                let zu: f64 = c.z.row(r).iter().zip(&u).map(|(&z, &uu)| (z * uu) as f64).sum();
+                acc += s[r] as f64 * zu;
+            }
+            acc
+        };
+
+        let cache = forward(&w, &toks, batch, seq);
+        // dZ[r][j] = s[r]·u[j]
+        let mut dz = Tensor::zeros(batch * seq, cfg.dim);
+        for r in 0..batch * seq {
+            for j in 0..cfg.dim {
+                dz.set(r, j, s[r] * u[j]);
+            }
+        }
+        let grads = backward_from_dz(&w, &cache, &dz);
+
+        let eps = 1e-3f32;
+        let mut wp = w.clone();
+        let orig = wp.layers[0].w1.get(2, 7);
+        wp.layers[0].w1.set(2, 7, orig + eps);
+        let cp = scalar(&wp);
+        wp.layers[0].w1.set(2, 7, orig - eps);
+        let cm = scalar(&wp);
+        let fd = ((cp - cm) / (2.0 * eps as f64)) as f32;
+        let an = grads.layers[0].w1.get(2, 7);
+        assert!(
+            (fd - an).abs() / fd.abs().max(an.abs()).max(1e-4) < 0.08,
+            "fd {fd} vs analytic {an}"
+        );
+    }
+
+    #[test]
+    fn input_means_shapes() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(5);
+        let w = Weights::init_training(cfg, &mut rng);
+        let toks = rand_tokens(&mut rng, 6, cfg.vocab);
+        let cache = forward(&w, &toks, 1, 6);
+        assert_eq!(cache.input_means(0, Role::Q).len(), cfg.dim);
+        assert_eq!(cache.input_means(1, Role::Down).len(), cfg.mlp);
+    }
+}

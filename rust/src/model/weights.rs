@@ -1,0 +1,394 @@
+//! Model weights: container, named access to the quantizable matrices,
+//! initialization (training init and statistically-shaped synthetic
+//! "pretrained-like" weights for scaling studies), and binary save/load.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::model::config::ModelConfig;
+use crate::model::tensor::Tensor;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Role of a quantizable matrix within its transformer block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Role {
+    Q,
+    K,
+    V,
+    O,
+    Up,
+    Down,
+}
+
+impl Role {
+    pub const ALL: [Role; 6] = [Role::Q, Role::K, Role::V, Role::O, Role::Up, Role::Down];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Role::Q => "q_proj",
+            Role::K => "k_proj",
+            Role::V => "v_proj",
+            Role::O => "o_proj",
+            Role::Up => "mlp_up",
+            Role::Down => "mlp_down",
+        }
+    }
+}
+
+/// Identifier of one quantizable weight matrix: (block index, role).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct MatId {
+    pub layer: usize,
+    pub role: Role,
+}
+
+impl std::fmt::Display for MatId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "block{}.{}", self.layer, self.role.name())
+    }
+}
+
+/// One transformer block's parameters. Weight matrices are stored
+/// (d_in × d_out) so that forward is `X @ W + b`.
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    pub ln1_g: Vec<f32>,
+    pub ln1_b: Vec<f32>,
+    pub wq: Tensor,
+    pub bq: Vec<f32>,
+    pub wk: Tensor,
+    pub bk: Vec<f32>,
+    pub wv: Tensor,
+    pub bv: Vec<f32>,
+    pub wo: Tensor,
+    pub bo: Vec<f32>,
+    pub ln2_g: Vec<f32>,
+    pub ln2_b: Vec<f32>,
+    pub w1: Tensor,
+    pub b1: Vec<f32>,
+    pub w2: Tensor,
+    pub b2: Vec<f32>,
+}
+
+impl LayerWeights {
+    pub fn zeros(cfg: &ModelConfig) -> LayerWeights {
+        let e = cfg.dim;
+        let f = cfg.mlp;
+        LayerWeights {
+            ln1_g: vec![1.0; e],
+            ln1_b: vec![0.0; e],
+            wq: Tensor::zeros(e, e),
+            bq: vec![0.0; e],
+            wk: Tensor::zeros(e, e),
+            bk: vec![0.0; e],
+            wv: Tensor::zeros(e, e),
+            bv: vec![0.0; e],
+            wo: Tensor::zeros(e, e),
+            bo: vec![0.0; e],
+            ln2_g: vec![1.0; e],
+            ln2_b: vec![0.0; e],
+            w1: Tensor::zeros(e, f),
+            b1: vec![0.0; f],
+            w2: Tensor::zeros(f, e),
+            b2: vec![0.0; e],
+        }
+    }
+
+    pub fn matrix(&self, role: Role) -> &Tensor {
+        match role {
+            Role::Q => &self.wq,
+            Role::K => &self.wk,
+            Role::V => &self.wv,
+            Role::O => &self.wo,
+            Role::Up => &self.w1,
+            Role::Down => &self.w2,
+        }
+    }
+
+    pub fn matrix_mut(&mut self, role: Role) -> &mut Tensor {
+        match role {
+            Role::Q => &mut self.wq,
+            Role::K => &mut self.wk,
+            Role::V => &mut self.wv,
+            Role::O => &mut self.wo,
+            Role::Up => &mut self.w1,
+            Role::Down => &mut self.w2,
+        }
+    }
+
+    pub fn bias(&self, role: Role) -> &Vec<f32> {
+        match role {
+            Role::Q => &self.bq,
+            Role::K => &self.bk,
+            Role::V => &self.bv,
+            Role::O => &self.bo,
+            Role::Up => &self.b1,
+            Role::Down => &self.b2,
+        }
+    }
+
+    pub fn bias_mut(&mut self, role: Role) -> &mut Vec<f32> {
+        match role {
+            Role::Q => &mut self.bq,
+            Role::K => &mut self.bk,
+            Role::V => &mut self.bv,
+            Role::O => &mut self.bo,
+            Role::Up => &mut self.b1,
+            Role::Down => &mut self.b2,
+        }
+    }
+}
+
+/// Full model parameters.
+#[derive(Clone, Debug)]
+pub struct Weights {
+    pub config: ModelConfig,
+    /// Token embedding (V×E); the prediction head is tied to it.
+    pub embed: Tensor,
+    /// Positional embedding (max_seq×E).
+    pub pos: Tensor,
+    pub layers: Vec<LayerWeights>,
+    pub lnf_g: Vec<f32>,
+    pub lnf_b: Vec<f32>,
+}
+
+impl Weights {
+    pub fn zeros(cfg: ModelConfig) -> Weights {
+        Weights {
+            config: cfg,
+            embed: Tensor::zeros(cfg.vocab, cfg.dim),
+            pos: Tensor::zeros(cfg.max_seq, cfg.dim),
+            layers: (0..cfg.layers).map(|_| LayerWeights::zeros(&cfg)).collect(),
+            lnf_g: vec![1.0; cfg.dim],
+            lnf_b: vec![0.0; cfg.dim],
+        }
+    }
+
+    /// GPT-2-style training initialization.
+    pub fn init_training(cfg: ModelConfig, rng: &mut Rng) -> Weights {
+        let mut w = Weights::zeros(cfg);
+        let std = 0.02f32;
+        rng.fill_gauss(&mut w.embed.data, 0.0, std);
+        rng.fill_gauss(&mut w.pos.data, 0.0, std * 0.5);
+        let resid_scale = 1.0 / (2.0 * cfg.layers as f32).sqrt();
+        for l in w.layers.iter_mut() {
+            rng.fill_gauss(&mut l.wq.data, 0.0, std);
+            rng.fill_gauss(&mut l.wk.data, 0.0, std);
+            rng.fill_gauss(&mut l.wv.data, 0.0, std);
+            rng.fill_gauss(&mut l.wo.data, 0.0, std * resid_scale);
+            rng.fill_gauss(&mut l.w1.data, 0.0, std);
+            rng.fill_gauss(&mut l.w2.data, 0.0, std * resid_scale);
+        }
+        w
+    }
+
+    /// Statistically-shaped synthetic "pretrained-like" weights for
+    /// scaling studies: Laplace-ish heavy-tailed entries with per-channel
+    /// scale variation and a few outlier channels, mimicking published
+    /// LLM weight statistics (Zhao et al., 2019). Deterministic per seed.
+    pub fn init_pretrained_like(cfg: ModelConfig, rng: &mut Rng) -> Weights {
+        let mut w = Weights::init_training(cfg, rng);
+        for l in w.layers.iter_mut() {
+            for role in Role::ALL {
+                let m = l.matrix_mut(role);
+                let (rows, cols) = (m.rows, m.cols);
+                // Per-output-channel log-normal scale + sparse outliers.
+                let base = 0.03 / (rows as f32).sqrt() * 8.0;
+                let scales: Vec<f32> = (0..cols)
+                    .map(|_| base * (rng.normal(0.0, 0.8)).exp() as f32)
+                    .collect();
+                for r in 0..rows {
+                    for c in 0..cols {
+                        m.data[r * cols + c] = rng.laplace(0.0, scales[c] as f64) as f32;
+                    }
+                }
+                // ~0.5% outlier channels with 8× scale.
+                let n_out = (cols / 200).max(1);
+                for _ in 0..n_out {
+                    let c = rng.below(cols);
+                    for r in 0..rows {
+                        m.data[r * cols + c] *= 8.0;
+                    }
+                }
+            }
+        }
+        w
+    }
+
+    /// Enumerate the quantizable matrices in block order.
+    pub fn matrix_ids(&self) -> Vec<MatId> {
+        let mut ids = Vec::with_capacity(self.layers.len() * 6);
+        for layer in 0..self.layers.len() {
+            for role in Role::ALL {
+                ids.push(MatId { layer, role });
+            }
+        }
+        ids
+    }
+
+    pub fn matrix(&self, id: MatId) -> &Tensor {
+        self.layers[id.layer].matrix(id.role)
+    }
+
+    pub fn matrix_mut(&mut self, id: MatId) -> &mut Tensor {
+        self.layers[id.layer].matrix_mut(id.role)
+    }
+
+    pub fn bias(&self, id: MatId) -> &Vec<f32> {
+        self.layers[id.layer].bias(id.role)
+    }
+
+    pub fn bias_mut(&mut self, id: MatId) -> &mut Vec<f32> {
+        self.layers[id.layer].bias_mut(id.role)
+    }
+
+    /// Iterate over all parameter slices (for the optimizer).
+    pub fn param_slices_mut(&mut self) -> Vec<&mut [f32]> {
+        let mut v: Vec<&mut [f32]> = Vec::new();
+        v.push(&mut self.embed.data);
+        v.push(&mut self.pos.data);
+        for l in self.layers.iter_mut() {
+            v.push(&mut l.ln1_g);
+            v.push(&mut l.ln1_b);
+            v.push(&mut l.wq.data);
+            v.push(&mut l.bq);
+            v.push(&mut l.wk.data);
+            v.push(&mut l.bk);
+            v.push(&mut l.wv.data);
+            v.push(&mut l.bv);
+            v.push(&mut l.wo.data);
+            v.push(&mut l.bo);
+            v.push(&mut l.ln2_g);
+            v.push(&mut l.ln2_b);
+            v.push(&mut l.w1.data);
+            v.push(&mut l.b1);
+            v.push(&mut l.w2.data);
+            v.push(&mut l.b2);
+        }
+        v.push(&mut self.lnf_g);
+        v.push(&mut self.lnf_b);
+        v
+    }
+
+    /// Save to a binary container: magic, JSON config, then raw f32 LE
+    /// tensors in `param_slices_mut` order.
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        let mut me = self.clone();
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(b"RADIOWT1")?;
+        let cfg = self.config.to_json().to_string();
+        f.write_all(&(cfg.len() as u32).to_le_bytes())?;
+        f.write_all(cfg.as_bytes())?;
+        for s in me.param_slices_mut() {
+            let bytes: Vec<u8> = s.iter().flat_map(|x| x.to_le_bytes()).collect();
+            f.write_all(&(s.len() as u64).to_le_bytes())?;
+            f.write_all(&bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> std::io::Result<Weights> {
+        let mut f = std::fs::File::open(path)?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != b"RADIOWT1" {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "bad magic: not a radio weights file",
+            ));
+        }
+        let mut len4 = [0u8; 4];
+        f.read_exact(&mut len4)?;
+        let clen = u32::from_le_bytes(len4) as usize;
+        let mut cbuf = vec![0u8; clen];
+        f.read_exact(&mut cbuf)?;
+        let cfg_json = Json::parse(std::str::from_utf8(&cbuf).map_err(err_inv)?)
+            .map_err(err_inv)?;
+        let cfg = ModelConfig::from_json(&cfg_json).map_err(err_inv)?;
+        let mut w = Weights::zeros(cfg);
+        for s in w.param_slices_mut() {
+            let mut len8 = [0u8; 8];
+            f.read_exact(&mut len8)?;
+            let n = u64::from_le_bytes(len8) as usize;
+            if n != s.len() {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("tensor length mismatch: file {n}, expected {}", s.len()),
+                ));
+            }
+            let mut buf = vec![0u8; n * 4];
+            f.read_exact(&mut buf)?;
+            for (i, x) in s.iter_mut().enumerate() {
+                *x = f32::from_le_bytes(buf[i * 4..i * 4 + 4].try_into().unwrap());
+            }
+        }
+        Ok(w)
+    }
+}
+
+fn err_inv<E: std::fmt::Display>(e: E) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_ids_cover_all_blocks() {
+        let cfg = ModelConfig::preset("ropt-nano").unwrap();
+        let w = Weights::zeros(cfg);
+        let ids = w.matrix_ids();
+        assert_eq!(ids.len(), cfg.layers * 6);
+        let total: usize = ids.iter().map(|&id| w.matrix(id).len()).sum();
+        assert_eq!(total, cfg.block_params());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let cfg = ModelConfig::preset("ropt-nano").unwrap();
+        let mut rng = Rng::new(42);
+        let w = Weights::init_training(cfg, &mut rng);
+        let dir = std::env::temp_dir().join("radio_test_weights.bin");
+        w.save(&dir).unwrap();
+        let back = Weights::load(&dir).unwrap();
+        assert_eq!(w.embed.data, back.embed.data);
+        assert_eq!(w.layers[1].w2.data, back.layers[1].w2.data);
+        assert_eq!(w.lnf_g, back.lnf_g);
+        let _ = std::fs::remove_file(dir);
+    }
+
+    #[test]
+    fn load_rejects_bad_magic() {
+        let p = std::env::temp_dir().join("radio_bad_magic.bin");
+        std::fs::write(&p, b"NOTRADIO123456").unwrap();
+        assert!(Weights::load(&p).is_err());
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn pretrained_like_is_heavy_tailed() {
+        let cfg = ModelConfig::preset("ropt-nano").unwrap();
+        let mut rng = Rng::new(7);
+        let w = Weights::init_pretrained_like(cfg, &mut rng);
+        let m = &w.layers[0].wq.data;
+        // Kurtosis should exceed Gaussian's 3 (log-normal channel scales +
+        // Laplace entries + outliers).
+        let mean: f64 = m.iter().map(|&x| x as f64).sum::<f64>() / m.len() as f64;
+        let var: f64 =
+            m.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / m.len() as f64;
+        let k: f64 = m.iter().map(|&x| (x as f64 - mean).powi(4)).sum::<f64>()
+            / m.len() as f64
+            / (var * var);
+        assert!(k > 4.0, "kurtosis {k}");
+    }
+
+    #[test]
+    fn param_slices_count_matches_total() {
+        let cfg = ModelConfig::preset("ropt-nano").unwrap();
+        let mut w = Weights::zeros(cfg);
+        let total: usize = w.param_slices_mut().iter().map(|s| s.len()).sum();
+        assert_eq!(total, cfg.total_params());
+    }
+}

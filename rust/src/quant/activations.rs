@@ -1,0 +1,226 @@
+//! Activation quantization (paper §1/§5): because Radio determines bit
+//! depths analytically and quantizes with an integer-rounding heuristic —
+//! no weight fine-tuning — the same machinery applies to *activations*
+//! at inference time, where OBS-style methods would stall the pipeline.
+//!
+//! Activations are quantized per (token, channel-group) with companded
+//! quantizers whose (S, µ) come from running calibration statistics, and
+//! bit depths from the same dual-ascent allocator driven by per-channel
+//! sensitivity (output-gradient second moments).
+
+use crate::coordinator::dual_ascent::{solve_integer, DualAscentConfig};
+use crate::model::tensor::Tensor;
+use crate::quant::companding;
+use crate::stats::distortion::GroupRd;
+use crate::stats::moments::EmaVec;
+
+/// Per-channel-group activation quantizer for one layer boundary.
+#[derive(Clone, Debug)]
+pub struct ActQuantizer {
+    /// Channels per group.
+    pub group: usize,
+    /// Per-group bit depths.
+    pub bits: Vec<u8>,
+    /// Per-group compander scale/mean (from calibration EMA).
+    pub scale: Vec<f32>,
+    pub mean: Vec<f32>,
+}
+
+/// Streaming calibration state for one activation tensor (dim channels).
+pub struct ActCalibrator {
+    dim: usize,
+    group: usize,
+    mean: EmaVec,
+    sq: EmaVec,
+    /// Per-channel sensitivity (gradient second moments); uniform if the
+    /// caller has no gradient signal.
+    g2: Vec<f64>,
+    samples: usize,
+}
+
+impl ActCalibrator {
+    pub fn new(dim: usize, group: usize, alpha: f64) -> ActCalibrator {
+        ActCalibrator {
+            dim,
+            group: group.max(1).min(dim),
+            mean: EmaVec::new(dim, alpha),
+            sq: EmaVec::new(dim, alpha),
+            g2: vec![1.0; dim],
+            samples: 0,
+        }
+    }
+
+    /// Observe a batch of activations (N×dim).
+    pub fn observe(&mut self, x: &Tensor) {
+        assert_eq!(x.cols, self.dim);
+        let mut mu = vec![0f32; self.dim];
+        let mut sq = vec![0f32; self.dim];
+        for r in 0..x.rows {
+            for (j, &v) in x.row(r).iter().enumerate() {
+                mu[j] += v;
+                sq[j] += v * v;
+            }
+        }
+        let inv = 1.0 / x.rows as f32;
+        for j in 0..self.dim {
+            mu[j] *= inv;
+            sq[j] *= inv;
+        }
+        self.mean.update(&mu);
+        self.sq.update(&sq);
+        self.samples += 1;
+    }
+
+    /// Optional per-channel sensitivity from output gradients.
+    pub fn set_sensitivity(&mut self, g2: Vec<f64>) {
+        assert_eq!(g2.len(), self.dim);
+        self.g2 = g2;
+    }
+
+    /// Finalize: allocate bit depths at `target_bits` via dual ascent and
+    /// freeze the per-group companders.
+    pub fn build(&self, target_bits: f64) -> ActQuantizer {
+        assert!(self.samples > 0, "no calibration data observed");
+        let ngroups = self.dim.div_ceil(self.group);
+        let mut scale = Vec::with_capacity(ngroups);
+        let mut mean = Vec::with_capacity(ngroups);
+        let mut rd = Vec::with_capacity(ngroups);
+        let mu = self.mean.get();
+        let sq = self.sq.get();
+        for g in 0..ngroups {
+            let lo = g * self.group;
+            let hi = ((g + 1) * self.group).min(self.dim);
+            let count = hi - lo;
+            let gm = mu[lo..hi].iter().sum::<f64>() / count as f64;
+            let gsq = sq[lo..hi].iter().sum::<f64>() / count as f64;
+            let var = (gsq - gm * gm).max(1e-12);
+            let g2 = self.g2[lo..hi].iter().sum::<f64>() / count as f64;
+            scale.push(var.sqrt() as f32);
+            mean.push(gm as f32);
+            rd.push(GroupRd::new(count, g2, var, 1.0));
+        }
+        let bits = solve_integer(&rd, target_bits, &DualAscentConfig::default());
+        ActQuantizer { group: self.group, bits, scale, mean }
+    }
+}
+
+impl ActQuantizer {
+    /// Quantize-dequantize one activation vector in place; returns MSE.
+    pub fn apply(&self, x: &mut [f32]) -> f64 {
+        let mut mse = 0f64;
+        let mut n = 0usize;
+        for (g, chunk) in x.chunks_mut(self.group).enumerate() {
+            let b = self.bits[g];
+            if b == 0 {
+                for v in chunk.iter_mut() {
+                    mse += (*v as f64) * (*v as f64);
+                    *v = 0.0;
+                }
+            } else {
+                for v in chunk.iter_mut() {
+                    let code = companding::quantize_code(*v, b, self.scale[g], self.mean[g]);
+                    let deq = companding::dequantize_code(code, b, self.scale[g], self.mean[g]);
+                    mse += ((*v - deq) as f64).powi(2);
+                    *v = deq;
+                }
+            }
+            n += chunk.len();
+        }
+        mse / n.max(1) as f64
+    }
+
+    /// Average bits per activation element.
+    pub fn avg_bits(&self, dim: usize) -> f64 {
+        let mut total = 0f64;
+        for (g, &b) in self.bits.iter().enumerate() {
+            let lo = g * self.group;
+            let hi = ((g + 1) * self.group).min(dim);
+            total += b as f64 * (hi - lo) as f64;
+        }
+        total / dim as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn calibrated(rng: &mut Rng, dim: usize, group: usize, hot: &[usize]) -> ActCalibrator {
+        let mut cal = ActCalibrator::new(dim, group, 0.3);
+        for _ in 0..8 {
+            let mut x = Tensor::zeros(16, dim);
+            rng.fill_laplace(&mut x.data, 0.2, 0.5);
+            // Hot channels with 8× larger magnitude.
+            for r in 0..16 {
+                for &h in hot {
+                    let v = x.get(r, h);
+                    x.set(r, h, v * 8.0);
+                }
+            }
+            cal.observe(&x);
+        }
+        cal
+    }
+
+    #[test]
+    fn allocator_gives_hot_channels_more_bits() {
+        let mut rng = Rng::new(0xAC7);
+        let (dim, group) = (64, 8);
+        let cal = calibrated(&mut rng, dim, group, &[3, 4, 5]); // all in group 0
+        let q = cal.build(4.0);
+        assert!((q.avg_bits(dim) - 4.0).abs() < 0.13, "rate {}", q.avg_bits(dim));
+        // Group 0 (hot) should get at least as many bits as the median.
+        let mut sorted = q.bits.clone();
+        sorted.sort_unstable();
+        assert!(q.bits[0] >= sorted[sorted.len() / 2], "hot group bits {:?}", q.bits);
+    }
+
+    #[test]
+    fn apply_reduces_to_low_error_at_8_bits() {
+        let mut rng = Rng::new(0xAC8);
+        let cal = calibrated(&mut rng, 32, 8, &[]);
+        let q = cal.build(8.0);
+        let mut x = vec![0f32; 32];
+        rng.fill_laplace(&mut x, 0.2, 0.5);
+        let orig = x.clone();
+        let mse = q.apply(&mut x);
+        let var = crate::stats::moments::variance(&orig);
+        assert!(mse < var * 0.01, "mse {mse} vs var {var}");
+    }
+
+    #[test]
+    fn quantized_activations_preserve_matvec_output() {
+        // End use-case: quantize activations before a linear layer; the
+        // output error should shrink as the activation rate grows.
+        let mut rng = Rng::new(0xAC9);
+        let (dim, dout) = (48, 24);
+        let mut w = Tensor::zeros(dim, dout);
+        rng.fill_gauss(&mut w.data, 0.0, 0.3);
+        let cal = calibrated(&mut rng, dim, 8, &[]);
+        let mut errs = Vec::new();
+        for bits in [2.0, 4.0, 6.0] {
+            let q = cal.build(bits);
+            let mut x = vec![0f32; dim];
+            rng.fill_laplace(&mut x, 0.2, 0.5);
+            let y_ref = crate::infer::dense_matvec(&w, &x);
+            let mut xq = x.clone();
+            q.apply(&mut xq);
+            let y_q = crate::infer::dense_matvec(&w, &xq);
+            let err: f64 = y_ref
+                .iter()
+                .zip(&y_q)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum();
+            errs.push(err);
+        }
+        assert!(errs[0] > errs[1] && errs[1] > errs[2], "errors {errs:?}");
+    }
+
+    #[test]
+    #[should_panic(expected = "no calibration data")]
+    fn build_without_observation_panics() {
+        let cal = ActCalibrator::new(16, 4, 0.3);
+        let _ = cal.build(4.0);
+    }
+}

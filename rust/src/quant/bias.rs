@@ -1,0 +1,102 @@
+//! Bias correction (paper §3.2): quantization errors are not zero-mean in
+//! practice, producing a systematic output shift. Every time a matrix is
+//! (re)quantized, the layer bias is updated as
+//!
+//! ```text
+//! b^q = b − (Θ^q − Θ)ᵀ · X̄
+//! ```
+//!
+//! where X̄ is the running mean of the layer's inputs (accumulated on the
+//! forward pass, exactly like G² on the backward pass). Note: Algorithm 1
+//! prints `b + (Θ^q − Θ)X̄`; cancelling the induced output shift
+//! `(Θ^q − Θ)ᵀX̄` requires the minus sign (equivalently, the paper's Δ is
+//! Θ − Θ^q). The linear-layer test below pins the correct orientation.
+
+use crate::model::tensor::Tensor;
+
+/// Compute the corrected bias from the ORIGINAL bias (not cumulative):
+/// `b_corrected[j] = b[j] − Σ_i (Θq − Θ)[i,j] · x̄[i]`.
+pub fn corrected_bias(
+    orig_bias: &[f32],
+    theta: &Tensor,
+    theta_q: &Tensor,
+    xbar: &[f32],
+) -> Vec<f32> {
+    assert_eq!(theta.rows, theta_q.rows);
+    assert_eq!(theta.cols, theta_q.cols);
+    assert_eq!(xbar.len(), theta.rows);
+    assert_eq!(orig_bias.len(), theta.cols);
+    let mut out = orig_bias.to_vec();
+    for i in 0..theta.rows {
+        let x = xbar[i];
+        if x == 0.0 {
+            continue;
+        }
+        let ro = theta.row(i);
+        let rq = theta_q.row(i);
+        for j in 0..theta.cols {
+            out[j] -= (rq[j] - ro[j]) * x;
+        }
+    }
+    out
+}
+
+/// Mean output shift ‖(Θq−Θ)ᵀx̄‖² — diagnostic for how much bias
+/// correction is compensating.
+pub fn output_shift_norm2(theta: &Tensor, theta_q: &Tensor, xbar: &[f32]) -> f64 {
+    let b0 = vec![0.0; theta.cols];
+    let shift = corrected_bias(&b0, theta, theta_q, xbar);
+    shift.iter().map(|&s| (s as f64) * (s as f64)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn correction_cancels_mean_shift_exactly_for_linear_layer() {
+        // For a linear layer y = xΘ + b with constant input x = x̄, the
+        // corrected bias makes the quantized layer output *exactly* equal
+        // the original: x̄Θ + b == x̄Θq + b^q.
+        let mut rng = Rng::new(71);
+        let (din, dout) = (12, 7);
+        let mut theta = Tensor::zeros(din, dout);
+        rng.fill_gauss(&mut theta.data, 0.0, 1.0);
+        let mut theta_q = theta.clone();
+        // Arbitrary perturbation standing in for quantization error.
+        for v in theta_q.data.iter_mut() {
+            *v += rng.normal(0.01, 0.05) as f32;
+        }
+        let mut xbar = vec![0f32; din];
+        rng.fill_gauss(&mut xbar, 0.5, 1.0);
+        let bias: Vec<f32> = (0..dout).map(|_| rng.normal(0.0, 0.3) as f32).collect();
+
+        let bq = corrected_bias(&bias, &theta, &theta_q, &xbar);
+
+        // y_orig[j] = Σ x̄[i]Θ[i,j] + b[j] ; y_quant[j] = Σ x̄[i]Θq[i,j] + bq[j]
+        for j in 0..dout {
+            let yo: f32 = (0..din).map(|i| xbar[i] * theta.get(i, j)).sum::<f32>() + bias[j];
+            let yq: f32 =
+                (0..din).map(|i| xbar[i] * theta_q.get(i, j)).sum::<f32>() + bq[j];
+            assert!((yo - yq).abs() < 1e-4, "col {j}: {yo} vs {yq}");
+        }
+    }
+
+    #[test]
+    fn zero_error_means_no_correction() {
+        let theta = Tensor::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let bias = vec![0.5, -0.5];
+        let bq = corrected_bias(&bias, &theta, &theta, &[1.0, 1.0]);
+        assert_eq!(bq, bias);
+    }
+
+    #[test]
+    fn shift_norm_positive_for_biased_error() {
+        let theta = Tensor::zeros(3, 2);
+        let mut theta_q = theta.clone();
+        theta_q.data.fill(0.1); // systematic positive error
+        let n = output_shift_norm2(&theta, &theta_q, &[1.0, 1.0, 1.0]);
+        assert!(n > 0.0);
+    }
+}

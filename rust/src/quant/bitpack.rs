@@ -1,0 +1,719 @@
+//! Bit-packed storage for mixed-precision quantized matrices — the
+//! repository's on-disk/in-memory analogue of the paper's Appendix-A
+//! format: per-group bit depths (4 b), FP16 scale/mean per group, per-row
+//! sub-group indices, and a dense LSB-first code stream per column.
+//!
+//! Both quantizer families factor dequantization as
+//! `deq = mean + scale · lut[bits][code]`, so the matvec kernel
+//! (infer::matvec) only ever does a table lookup and a fused multiply-add:
+//! - companded: lut = standardized inverse-compander bin midpoints,
+//! - uniform:   lut[c] = c − 2^(B−1) + 0.5 (scale = step D).
+
+use crate::model::tensor::Tensor;
+use crate::quant::companding;
+use crate::quant::grouping::Grouping;
+
+/// Round-trip f32 → IEEE 754 half → f32 (storage emulation for group
+/// scales/means, matching the paper's FP16 signaling overhead).
+pub fn f16_round(x: f32) -> f32 {
+    f16_to_f32(f32_to_f16(x))
+}
+
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let mut exp = ((bits >> 23) & 0xFF) as i32 - 127 + 15;
+    let mant = bits & 0x7F_FFFF;
+    if exp >= 31 {
+        // Overflow → inf (or NaN preserved).
+        return sign | 0x7C00 | if mant != 0 && ((bits >> 23) & 0xFF) == 0xFF { 0x200 } else { 0 };
+    }
+    if exp <= 0 {
+        // Subnormal / underflow.
+        if exp < -10 {
+            return sign;
+        }
+        let m = (mant | 0x80_0000) >> (1 - exp);
+        return sign | ((m + 0x1000) >> 13) as u16;
+    }
+    let mut half = sign | ((exp as u16) << 10) | ((mant >> 13) as u16);
+    // Round to nearest even.
+    if mant & 0x1FFF > 0x1000 || (mant & 0x1FFF == 0x1000 && half & 1 == 1) {
+        half = half.wrapping_add(1);
+        if half & 0x7C00 == 0x7C00 {
+            exp += 1;
+            let _ = exp;
+        }
+    }
+    half
+}
+
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x3FF) as u32;
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // Subnormal: value = mant · 2⁻²⁴; normalize so bit 10 is set
+            // after k shifts ⇒ unbiased exponent = −14 − k.
+            let mut k = 0i32;
+            let mut m = mant;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                k += 1;
+            }
+            sign | (((127 - 14 - k) as u32) << 23) | ((m & 0x3FF) << 13)
+        }
+    } else if exp == 31 {
+        sign | 0x7F80_0000 | (mant << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// LSB-first bit stream writer.
+#[derive(Default, Clone, Debug)]
+pub struct BitWriter {
+    pub words: Vec<u64>,
+    pub bit_len: usize,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn push(&mut self, code: u32, bits: u8) {
+        debug_assert!(bits <= 32);
+        if bits == 0 {
+            return;
+        }
+        debug_assert!(bits == 32 || code < (1u32 << bits));
+        let word = self.bit_len >> 6;
+        let off = self.bit_len & 63;
+        if word >= self.words.len() {
+            self.words.push(0);
+        }
+        self.words[word] |= (code as u64) << off;
+        let spill = off + bits as usize;
+        if spill > 64 {
+            self.words.push((code as u64) >> (64 - off));
+        }
+        self.bit_len += bits as usize;
+    }
+}
+
+/// LSB-first bit stream reader.
+#[derive(Clone, Copy)]
+pub struct BitReader<'a> {
+    words: &'a [u64],
+    pos: usize,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(words: &'a [u64], bit_pos: usize) -> Self {
+        Self { words, pos: bit_pos }
+    }
+
+    #[inline]
+    pub fn read(&mut self, bits: u8) -> u32 {
+        if bits == 0 {
+            return 0;
+        }
+        let word = self.pos >> 6;
+        let off = self.pos & 63;
+        let mut v = self.words[word] >> off;
+        if off + bits as usize > 64 {
+            v |= self.words[word + 1] << (64 - off);
+        }
+        self.pos += bits as usize;
+        (v & ((1u64 << bits) - 1)) as u32
+    }
+
+    pub fn bit_pos(&self) -> usize {
+        self.pos
+    }
+}
+
+/// Quantizer family used for a packed matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantMode {
+    /// Laplace-companded (Radio's default).
+    Companded,
+    /// Mid-rise uniform (RTN / ablations).
+    Uniform,
+}
+
+impl QuantMode {
+    pub fn tag(&self) -> u8 {
+        match self {
+            QuantMode::Companded => 0,
+            QuantMode::Uniform => 1,
+        }
+    }
+
+    pub fn from_tag(t: u8) -> Option<QuantMode> {
+        match t {
+            0 => Some(QuantMode::Companded),
+            1 => Some(QuantMode::Uniform),
+            _ => None,
+        }
+    }
+
+    /// Standardized dequant LUT for this family at `bits`.
+    pub fn base_lut(&self, bits: u8) -> Vec<f32> {
+        match self {
+            QuantMode::Companded => companding::base_lut(bits),
+            QuantMode::Uniform => {
+                let half = (1i64 << bits) / 2;
+                (0..(1i64 << bits))
+                    .map(|c| (c - half) as f32 + 0.5)
+                    .collect()
+            }
+        }
+    }
+}
+
+/// Per-group quantization parameters (scale/mean FP16-rounded on pack).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GroupMeta {
+    pub bits: u8,
+    pub scale: f32,
+    pub mean: f32,
+}
+
+/// A bit-packed mixed-precision quantized matrix.
+///
+/// Two baseline-supporting extensions beyond the plain Radio format:
+/// - `row_scale` (AWQ): weights were scaled per input row before
+///   quantization, `W[i][j] = deq[i][j] / row_scale[i]`;
+/// - `fp_rows` (OWQ): outlier input rows kept in FP16, bypassing the
+///   quantizer entirely (counted at 16 bits/weight in the rate).
+#[derive(Clone, Debug)]
+pub struct PackedMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub grouping: Grouping,
+    /// cols × m metas, indexed `col * m + sub`.
+    pub meta: Vec<GroupMeta>,
+    pub mode: QuantMode,
+    /// Code stream; per-column starting bit offsets in `col_bit_offset`.
+    pub words: Vec<u64>,
+    pub col_bit_offset: Vec<usize>,
+    /// AWQ-style per-input-row scale applied before quantization.
+    pub row_scale: Option<Vec<f32>>,
+    /// OWQ-style full-precision rows: (row index, FP16-rounded values).
+    pub fp_rows: Vec<(u32, Vec<f32>)>,
+}
+
+impl PackedMatrix {
+    /// Quantize and pack `w` with the given grouping and per-group metas.
+    /// Scales/means are FP16-rounded (overhead-faithful). Returns the
+    /// packed matrix; use [`PackedMatrix::unpack`] for the dequantized
+    /// tensor.
+    pub fn pack(w: &Tensor, grouping: &Grouping, meta_in: &[GroupMeta], mode: QuantMode) -> PackedMatrix {
+        Self::pack_full(w, grouping, meta_in, mode, None, &[])
+    }
+
+    /// Full-featured pack with optional AWQ row scales (applied to `w`
+    /// before coding) and OWQ full-precision exception rows.
+    pub fn pack_full(
+        w: &Tensor,
+        grouping: &Grouping,
+        meta_in: &[GroupMeta],
+        mode: QuantMode,
+        row_scale: Option<Vec<f32>>,
+        fp_row_idx: &[u32],
+    ) -> PackedMatrix {
+        assert_eq!(w.rows, grouping.rows);
+        assert_eq!(w.cols, grouping.cols);
+        assert_eq!(meta_in.len(), grouping.num_groups());
+        let mut meta: Vec<GroupMeta> = meta_in
+            .iter()
+            .map(|g| GroupMeta {
+                bits: g.bits.min(8),
+                scale: f16_round(g.scale),
+                mean: f16_round(g.mean),
+            })
+            .collect();
+        // Guard degenerate scales.
+        for g in meta.iter_mut() {
+            if !(g.scale.is_finite()) || g.scale <= 0.0 {
+                g.scale = 1e-6;
+            }
+            if !g.mean.is_finite() {
+                g.mean = 0.0;
+            }
+        }
+        let mut is_fp = vec![false; w.rows];
+        for &r in fp_row_idx {
+            is_fp[r as usize] = true;
+        }
+        // Scale weights per input row before coding if requested.
+        let scaled;
+        let w_eff: &Tensor = if let Some(s) = &row_scale {
+            assert_eq!(s.len(), w.rows);
+            let mut t = w.clone();
+            for r in 0..w.rows {
+                let sc = s[r];
+                for v in t.row_mut(r) {
+                    *v *= sc;
+                }
+            }
+            scaled = t;
+            &scaled
+        } else {
+            w
+        };
+        let mut writer = BitWriter::new();
+        let mut col_bit_offset = Vec::with_capacity(w.cols + 1);
+        for col in 0..w.cols {
+            col_bit_offset.push(writer.bit_len);
+            for sub in 0..grouping.m {
+                let gm = meta[col * grouping.m + sub];
+                if gm.bits == 0 {
+                    continue; // pruned group: no codes
+                }
+                for &r in &grouping.group_rows[sub] {
+                    if is_fp[r as usize] {
+                        continue; // FP16 exception row: no codes
+                    }
+                    let x = w_eff.get(r as usize, col);
+                    let code = match mode {
+                        QuantMode::Companded => {
+                            companding::quantize_code(x, gm.bits, gm.scale, gm.mean)
+                        }
+                        QuantMode::Uniform => {
+                            let half = 1i64 << (gm.bits - 1);
+                            (crate::quant::rtn::quantize_code(x, gm.bits, gm.scale, gm.mean)
+                                as i64
+                                + half) as u32
+                        }
+                    };
+                    writer.push(code, gm.bits);
+                }
+            }
+        }
+        col_bit_offset.push(writer.bit_len);
+        let fp_rows: Vec<(u32, Vec<f32>)> = fp_row_idx
+            .iter()
+            .map(|&r| {
+                (
+                    r,
+                    // FP16-rounded ORIGINAL (unscaled) values.
+                    w.row(r as usize).iter().map(|&x| f16_round(x)).collect(),
+                )
+            })
+            .collect();
+        PackedMatrix {
+            rows: w.rows,
+            cols: w.cols,
+            grouping: grouping.clone(),
+            meta,
+            mode,
+            words: writer.words,
+            col_bit_offset,
+            row_scale,
+            fp_rows,
+        }
+    }
+
+    /// Dequantize to a dense tensor.
+    pub fn unpack(&self) -> Tensor {
+        let mut out = Tensor::zeros(self.rows, self.cols);
+        let mut is_fp = vec![false; self.rows];
+        for (r, _) in &self.fp_rows {
+            is_fp[*r as usize] = true;
+        }
+        // Cache LUTs per bit depth.
+        let luts: Vec<Vec<f32>> = (0..=8u8).map(|b| self.mode.base_lut(b)).collect();
+        for col in 0..self.cols {
+            let mut rd = BitReader::new(&self.words, self.col_bit_offset[col]);
+            for sub in 0..self.grouping.m {
+                let gm = self.meta[col * self.grouping.m + sub];
+                if gm.bits == 0 {
+                    // pruned → zero (bias correction holds the mean)
+                    continue;
+                }
+                let lut = &luts[gm.bits as usize];
+                for &r in &self.grouping.group_rows[sub] {
+                    if is_fp[r as usize] {
+                        continue;
+                    }
+                    let code = rd.read(gm.bits);
+                    out.set(r as usize, col, gm.mean + gm.scale * lut[code as usize]);
+                }
+            }
+        }
+        // Undo AWQ row scaling.
+        if let Some(s) = &self.row_scale {
+            for r in 0..self.rows {
+                let inv = 1.0 / s[r];
+                for v in out.row_mut(r) {
+                    *v *= inv;
+                }
+            }
+        }
+        // FP16 exception rows (stored unscaled).
+        for (r, vals) in &self.fp_rows {
+            out.row_mut(*r as usize).copy_from_slice(vals);
+        }
+        out
+    }
+
+    /// Code bits (packed payload only, excluding FP16 exception rows).
+    pub fn code_bits(&self) -> usize {
+        *self.col_bit_offset.last().unwrap()
+    }
+
+    /// Full payload bits: packed codes + FP16 exception rows.
+    pub fn payload_bits(&self) -> usize {
+        self.code_bits() + self.fp_rows.len() * self.cols * 16
+    }
+
+    /// Signaling overhead bits: per-row sub-group indices, per-group
+    /// depth/scale/mean, plus AWQ row scales (FP16 each) and OWQ
+    /// exception-row indices (32 b each).
+    pub fn overhead_bits(&self) -> usize {
+        self.grouping.overhead_bits()
+            + self.row_scale.as_ref().map_or(0, |s| s.len() * 16)
+            + self.fp_rows.len() * 32
+    }
+
+    /// Average payload bits per weight (FP16 exception rows at 16 b).
+    pub fn avg_bits_per_weight(&self) -> f64 {
+        self.payload_bits() as f64 / (self.rows * self.cols) as f64
+    }
+
+    /// Fraction of weights quantized to zero via 0-bit groups (pruning,
+    /// Table 3b).
+    pub fn pruned_fraction(&self) -> f64 {
+        let mut pruned = 0usize;
+        for col in 0..self.cols {
+            for sub in 0..self.grouping.m {
+                if self.meta[col * self.grouping.m + sub].bits == 0 {
+                    pruned += self.grouping.group_len(sub);
+                }
+            }
+        }
+        pruned as f64 / (self.rows * self.cols) as f64
+    }
+
+    // ------------------------------------------------------ serialization
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        let push_u32 = |out: &mut Vec<u8>, v: u32| out.extend_from_slice(&v.to_le_bytes());
+        push_u32(&mut out, self.rows as u32);
+        push_u32(&mut out, self.cols as u32);
+        push_u32(&mut out, self.grouping.m as u32);
+        out.push(self.mode.tag());
+        for &g in &self.grouping.row_to_group {
+            push_u32(&mut out, g);
+        }
+        for gm in &self.meta {
+            out.push(gm.bits);
+            out.extend_from_slice(&f32_to_f16(gm.scale).to_le_bytes());
+            out.extend_from_slice(&f32_to_f16(gm.mean).to_le_bytes());
+        }
+        push_u32(&mut out, self.words.len() as u32);
+        for &w in &self.words {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        for &o in &self.col_bit_offset {
+            out.extend_from_slice(&(o as u64).to_le_bytes());
+        }
+        // AWQ row scales (flag + FP16 values).
+        match &self.row_scale {
+            Some(s) => {
+                out.push(1);
+                for &v in s {
+                    out.extend_from_slice(&f32_to_f16(v).to_le_bytes());
+                }
+            }
+            None => out.push(0),
+        }
+        // OWQ exception rows.
+        push_u32(&mut out, self.fp_rows.len() as u32);
+        for (r, vals) in &self.fp_rows {
+            push_u32(&mut out, *r);
+            for &v in vals {
+                out.extend_from_slice(&f32_to_f16(v).to_le_bytes());
+            }
+        }
+        out
+    }
+
+    pub fn from_bytes(buf: &[u8]) -> Result<(PackedMatrix, usize), String> {
+        let mut pos = 0usize;
+        let rd_u32 = |buf: &[u8], pos: &mut usize| -> Result<u32, String> {
+            let b = buf
+                .get(*pos..*pos + 4)
+                .ok_or("truncated packed matrix")?;
+            *pos += 4;
+            Ok(u32::from_le_bytes(b.try_into().unwrap()))
+        };
+        let rows = rd_u32(buf, &mut pos)? as usize;
+        let cols = rd_u32(buf, &mut pos)? as usize;
+        let m = rd_u32(buf, &mut pos)? as usize;
+        let mode = QuantMode::from_tag(*buf.get(pos).ok_or("truncated")?)
+            .ok_or("bad quant mode tag")?;
+        pos += 1;
+        let mut row_to_group = Vec::with_capacity(rows);
+        for _ in 0..rows {
+            row_to_group.push(rd_u32(buf, &mut pos)?);
+        }
+        let mut group_rows: Vec<Vec<u32>> = vec![Vec::new(); m];
+        for (r, &g) in row_to_group.iter().enumerate() {
+            group_rows
+                .get_mut(g as usize)
+                .ok_or("row group out of range")?
+                .push(r as u32);
+        }
+        let grouping = Grouping { rows, cols, m, row_to_group, group_rows };
+        let mut meta = Vec::with_capacity(cols * m);
+        for _ in 0..cols * m {
+            let bits = *buf.get(pos).ok_or("truncated meta")?;
+            pos += 1;
+            let s = u16::from_le_bytes(
+                buf.get(pos..pos + 2).ok_or("truncated")?.try_into().unwrap(),
+            );
+            pos += 2;
+            let mu = u16::from_le_bytes(
+                buf.get(pos..pos + 2).ok_or("truncated")?.try_into().unwrap(),
+            );
+            pos += 2;
+            meta.push(GroupMeta { bits, scale: f16_to_f32(s), mean: f16_to_f32(mu) });
+        }
+        let nwords = rd_u32(buf, &mut pos)? as usize;
+        let mut words = Vec::with_capacity(nwords);
+        for _ in 0..nwords {
+            let w = u64::from_le_bytes(
+                buf.get(pos..pos + 8).ok_or("truncated words")?.try_into().unwrap(),
+            );
+            pos += 8;
+            words.push(w);
+        }
+        let mut col_bit_offset = Vec::with_capacity(cols + 1);
+        for _ in 0..cols + 1 {
+            let o = u64::from_le_bytes(
+                buf.get(pos..pos + 8).ok_or("truncated offsets")?.try_into().unwrap(),
+            );
+            pos += 8;
+            col_bit_offset.push(o as usize);
+        }
+        let rd_f16 = |buf: &[u8], pos: &mut usize| -> Result<f32, String> {
+            let b = buf.get(*pos..*pos + 2).ok_or("truncated f16")?;
+            *pos += 2;
+            Ok(f16_to_f32(u16::from_le_bytes(b.try_into().unwrap())))
+        };
+        let has_scale = *buf.get(pos).ok_or("truncated row_scale flag")?;
+        pos += 1;
+        let row_scale = if has_scale == 1 {
+            let mut s = Vec::with_capacity(rows);
+            for _ in 0..rows {
+                s.push(rd_f16(buf, &mut pos)?);
+            }
+            Some(s)
+        } else {
+            None
+        };
+        let n_fp = rd_u32(buf, &mut pos)? as usize;
+        let mut fp_rows = Vec::with_capacity(n_fp);
+        for _ in 0..n_fp {
+            let r = rd_u32(buf, &mut pos)?;
+            if r as usize >= rows {
+                return Err("fp row index out of range".into());
+            }
+            let mut vals = Vec::with_capacity(cols);
+            for _ in 0..cols {
+                vals.push(rd_f16(buf, &mut pos)?);
+            }
+            fp_rows.push((r, vals));
+        }
+        Ok((
+            PackedMatrix {
+                rows,
+                cols,
+                grouping,
+                meta,
+                mode,
+                words,
+                col_bit_offset,
+                row_scale,
+                fp_rows,
+            },
+            pos,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::Checker;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn f16_roundtrip_accuracy() {
+        for &x in &[0.0f32, 1.0, -1.0, 0.1234, 65504.0, -3.75] {
+            let r = f16_round(x);
+            assert!((r - x).abs() <= x.abs() * 1e-3 + 1e-7, "{x} -> {r}");
+        }
+        // Subnormal range: spacing is 2^-24, so tolerance is absolute.
+        for &x in &[1e-5f32, -4e-5, 6e-8] {
+            let r = f16_round(x);
+            assert!((r - x).abs() <= 2.0 * 5.96e-8, "{x} -> {r}");
+        }
+        // Idempotence (required for serialization roundtrips).
+        for &x in &[0.1234f32, 1e-5, -4e-5, 65504.0] {
+            assert_eq!(f16_round(f16_round(x)), f16_round(x), "{x}");
+        }
+        assert_eq!(f16_round(0.0), 0.0);
+        assert!(f16_round(1e9).is_infinite()); // overflow behaviour
+    }
+
+    #[test]
+    fn bitstream_roundtrip_mixed_widths() {
+        let mut w = BitWriter::new();
+        let entries: Vec<(u32, u8)> = vec![
+            (5, 3),
+            (0, 1),
+            (255, 8),
+            (1, 2),
+            (127, 7),
+            (9, 4),
+            (63, 6),
+            (31, 5),
+        ];
+        for &(c, b) in &entries {
+            w.push(c, b);
+        }
+        let mut r = BitReader::new(&w.words, 0);
+        for &(c, b) in &entries {
+            assert_eq!(r.read(b), c);
+        }
+    }
+
+    #[test]
+    fn bitstream_property_roundtrip() {
+        Checker::new(64, 0x8817).run("bitstream-roundtrip", |rng, size| {
+            let n = 1 + size;
+            let entries: Vec<(u32, u8)> = (0..n)
+                .map(|_| {
+                    let b = 1 + rng.below(8) as u8;
+                    (rng.below(1 << b) as u32, b)
+                })
+                .collect();
+            let mut w = BitWriter::new();
+            for &(c, b) in &entries {
+                w.push(c, b);
+            }
+            let mut r = BitReader::new(&w.words, 0);
+            for (i, &(c, b)) in entries.iter().enumerate() {
+                let got = r.read(b);
+                crate::prop_assert!(got == c, "entry {i}: wrote {c} read {got}");
+            }
+            Ok(())
+        });
+    }
+
+    fn random_meta(rng: &mut Rng, n: usize, allow_zero: bool) -> Vec<GroupMeta> {
+        (0..n)
+            .map(|_| GroupMeta {
+                bits: if allow_zero { rng.below(9) as u8 } else { 1 + rng.below(8) as u8 },
+                scale: 0.1 + rng.uniform_f32(),
+                mean: rng.normal(0.0, 0.1) as f32,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn pack_unpack_error_bounded() {
+        let mut rng = Rng::new(61);
+        let (rows, cols) = (32, 12);
+        let mut w = Tensor::zeros(rows, cols);
+        rng.fill_laplace(&mut w.data, 0.0, 0.5);
+        let scores: Vec<f64> = (0..rows).map(|_| rng.uniform()).collect();
+        let grouping = Grouping::build(rows, cols, 8, &scores);
+        // High bit depth → small error.
+        let meta: Vec<GroupMeta> = (0..grouping.num_groups())
+            .map(|_| GroupMeta { bits: 8, scale: 0.5, mean: 0.0 })
+            .collect();
+        let packed = PackedMatrix::pack(&w, &grouping, &meta, QuantMode::Companded);
+        let deq = packed.unpack();
+        let mut err = 0f64;
+        for (a, b) in w.data.iter().zip(&deq.data) {
+            err += ((a - b) as f64).powi(2);
+        }
+        err /= w.data.len() as f64;
+        assert!(err < 1e-3, "mse {err}");
+    }
+
+    #[test]
+    fn packed_roundtrip_is_quantizer_fixed_point() {
+        // unpack(pack(unpack(pack(w)))) == unpack(pack(w)) — idempotence.
+        let mut rng = Rng::new(62);
+        let (rows, cols) = (24, 6);
+        let mut w = Tensor::zeros(rows, cols);
+        rng.fill_gauss(&mut w.data, 0.0, 1.0);
+        let grouping = Grouping::build(rows, cols, 8, &vec![0.0; rows]);
+        let meta = random_meta(&mut rng, grouping.num_groups(), false);
+        for mode in [QuantMode::Companded, QuantMode::Uniform] {
+            let p1 = PackedMatrix::pack(&w, &grouping, &meta, mode);
+            let d1 = p1.unpack();
+            let p2 = PackedMatrix::pack(&d1, &grouping, &meta, mode);
+            let d2 = p2.unpack();
+            for (a, b) in d1.data.iter().zip(&d2.data) {
+                assert!((a - b).abs() < 1e-5, "{mode:?}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let mut rng = Rng::new(63);
+        let (rows, cols) = (16, 5);
+        let mut w = Tensor::zeros(rows, cols);
+        rng.fill_gauss(&mut w.data, 0.0, 1.0);
+        let scores: Vec<f64> = (0..rows).map(|_| rng.uniform()).collect();
+        let grouping = Grouping::build(rows, cols, 4, &scores);
+        let meta = random_meta(&mut rng, grouping.num_groups(), true);
+        let p = PackedMatrix::pack(&w, &grouping, &meta, QuantMode::Uniform);
+        let bytes = p.to_bytes();
+        let (q, used) = PackedMatrix::from_bytes(&bytes).unwrap();
+        assert_eq!(used, bytes.len());
+        assert_eq!(p.unpack().data, q.unpack().data);
+        assert_eq!(p.code_bits(), q.code_bits());
+    }
+
+    #[test]
+    fn avg_bits_and_pruning_accounting() {
+        let (rows, cols) = (16, 4);
+        let w = Tensor::zeros(rows, cols);
+        let grouping = Grouping::build(rows, cols, 8, &vec![0.0; rows]); // m=2
+        // Half the groups at 4 bits, half pruned.
+        let meta: Vec<GroupMeta> = (0..grouping.num_groups())
+            .map(|i| GroupMeta { bits: if i % 2 == 0 { 4 } else { 0 }, scale: 1.0, mean: 0.0 })
+            .collect();
+        let p = PackedMatrix::pack(&w, &grouping, &meta, QuantMode::Companded);
+        assert!((p.avg_bits_per_weight() - 2.0).abs() < 1e-9);
+        assert!((p.pruned_fraction() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn from_bytes_rejects_truncated() {
+        let mut rng = Rng::new(64);
+        let mut w = Tensor::zeros(8, 2);
+        rng.fill_gauss(&mut w.data, 0.0, 1.0);
+        let grouping = Grouping::whole_columns(8, 2);
+        let meta = random_meta(&mut rng, 2, false);
+        let bytes = PackedMatrix::pack(&w, &grouping, &meta, QuantMode::Companded).to_bytes();
+        assert!(PackedMatrix::from_bytes(&bytes[..bytes.len() / 2]).is_err());
+        assert!(PackedMatrix::from_bytes(&[]).is_err());
+    }
+}

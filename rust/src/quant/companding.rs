@@ -1,0 +1,191 @@
+//! Companded quantization (paper §3.2, Eq. 8, Appendix C).
+//!
+//! Weights are passed through the asymptotically-optimal compander for a
+//! Laplace source — the normalized cube-root-density integral, i.e. a
+//! rescaled Laplace CDF — mapped to (0,1), quantized uniformly with 2^B
+//! levels, and inverted on dequantization. The printed Eq. 8 folds the
+//! two branches; expanded, with mean µ and standard deviation S
+//! (Laplace scale b = S/√2, cube-root scale 3b = 3S/√2):
+//!
+//! ```text
+//! σ(θ) = ½ + ½·sgn(θ−µ)·(1 − exp(−√2·|θ−µ| / (3S)))
+//! σ⁻¹(t) = µ + (3S/√2)·sgn(t−½)·(−ln(1 − 2|t−½|))
+//! ```
+//!
+//! Because S enters only as a linear stretch of σ⁻¹ around µ, dequantized
+//! values decompose as `µ + S·lut[B][code]` — the property the LUT-based
+//! matvec kernel (Appendix A / infer::matvec) relies on.
+
+/// Forward compander: weight → (0,1).
+#[inline]
+pub fn compand(theta: f32, scale: f32, mean: f32) -> f32 {
+    debug_assert!(scale > 0.0);
+    let d = theta - mean;
+    let mag = 1.0 - (-(std::f32::consts::SQRT_2 * d.abs()) / (3.0 * scale)).exp();
+    0.5 + 0.5 * d.signum() * mag
+}
+
+/// Inverse compander: (0,1) → weight.
+#[inline]
+pub fn expand(t: f32, scale: f32, mean: f32) -> f32 {
+    let d = t - 0.5;
+    let mag = (1.0 - 2.0 * d.abs()).max(1e-12);
+    mean - (3.0 * scale / std::f32::consts::SQRT_2) * d.signum() * mag.ln()
+}
+
+/// Quantize one value with a B-bit companded quantizer; returns the code.
+#[inline]
+pub fn quantize_code(theta: f32, bits: u8, scale: f32, mean: f32) -> u32 {
+    debug_assert!(bits >= 1);
+    let levels = 1u32 << bits;
+    let t = compand(theta, scale, mean);
+    let q = (t * levels as f32).floor() as i64;
+    q.clamp(0, levels as i64 - 1) as u32
+}
+
+/// Dequantize a code (bin midpoint in companded domain).
+#[inline]
+pub fn dequantize_code(code: u32, bits: u8, scale: f32, mean: f32) -> f32 {
+    let levels = (1u32 << bits) as f32;
+    expand((code as f32 + 0.5) / levels, scale, mean)
+}
+
+/// The per-bit-depth base lookup table: dequantized values for a
+/// *standardized* compander (µ=0, S=1). Real values are `µ + S·lut[code]`.
+pub fn base_lut(bits: u8) -> Vec<f32> {
+    let levels = 1usize << bits;
+    (0..levels)
+        .map(|c| expand((c as f32 + 0.5) / levels as f32, 1.0, 0.0))
+        .collect()
+}
+
+/// Quantize-dequantize a slice in place (codes discarded); returns MSE.
+pub fn quantize_dequantize(xs: &mut [f32], bits: u8, scale: f32, mean: f32) -> f64 {
+    if bits == 0 {
+        // 0-bit group: pruned to zero (paper §4 "Pruning Due to
+        // Quantization"); the bias correction absorbs the lost mean.
+        let mse = xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() / xs.len().max(1) as f64;
+        xs.fill(0.0);
+        return mse;
+    }
+    let mut mse = 0f64;
+    for x in xs.iter_mut() {
+        let code = quantize_code(*x, bits, scale, mean);
+        let deq = dequantize_code(code, bits, scale, mean);
+        mse += ((*x - deq) as f64).powi(2);
+        *x = deq;
+    }
+    mse / xs.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn compander_is_monotone_and_bounded() {
+        let (s, mu) = (0.7, 0.2);
+        let mut prev = -1.0f32;
+        for i in -100..=100 {
+            let theta = i as f32 * 0.05;
+            let t = compand(theta, s, mu);
+            assert!((0.0..=1.0).contains(&t), "t={t}");
+            assert!(t >= prev, "not monotone at {theta}");
+            prev = t;
+        }
+        assert!((compand(mu, s, mu) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn expand_inverts_compand() {
+        let (s, mu) = (1.3, -0.4);
+        for i in -50..=50 {
+            let theta = i as f32 * 0.1;
+            let t = compand(theta, s, mu);
+            let back = expand(t, s, mu);
+            assert!((theta - back).abs() < 1e-3 * theta.abs().max(1.0), "{theta} -> {t} -> {back}");
+        }
+    }
+
+    #[test]
+    fn dequantized_code_roundtrips_to_same_code() {
+        // Quantizer idempotence: Q(deQ(c)) == c.
+        let (s, mu) = (0.9, 0.1);
+        for bits in 1..=8u8 {
+            for code in 0..(1u32 << bits) {
+                let deq = dequantize_code(code, bits, s, mu);
+                assert_eq!(quantize_code(deq, bits, s, mu), code, "bits {bits} code {code}");
+            }
+        }
+    }
+
+    #[test]
+    fn lut_linearity_matches_direct_dequant() {
+        // deq(code; B,S,µ) == µ + S·base_lut[B][code]
+        let (s, mu) = (2.3f32, -0.7f32);
+        for bits in 1..=6u8 {
+            let lut = base_lut(bits);
+            for code in 0..(1u32 << bits) {
+                let direct = dequantize_code(code, bits, s, mu);
+                let via_lut = mu + s * lut[code as usize];
+                assert!(
+                    (direct - via_lut).abs() < 1e-4 * direct.abs().max(1.0),
+                    "bits {bits} code {code}: {direct} vs {via_lut}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mse_decreases_about_4x_per_bit_on_laplace() {
+        // The rate–distortion premise: each extra bit quarters the error.
+        let mut rng = Rng::new(31);
+        let mut base = vec![0f32; 50_000];
+        rng.fill_laplace(&mut base, 0.0, 1.0);
+        let mut prev_mse = f64::INFINITY;
+        for bits in 2..=6u8 {
+            let mut xs = base.clone();
+            let mse = quantize_dequantize(&mut xs, bits, 1.0, 0.0);
+            let ratio = prev_mse / mse;
+            if bits > 2 {
+                assert!(ratio > 2.8 && ratio < 5.5, "bits {bits}: ratio {ratio}");
+            }
+            prev_mse = mse;
+        }
+    }
+
+    #[test]
+    fn companding_beats_uniform_on_laplace_at_low_bits() {
+        // Figure 2's claim, tested numerically at 3 bits.
+        let mut rng = Rng::new(32);
+        let mut xs = vec![0f32; 50_000];
+        rng.fill_laplace(&mut xs, 0.0, 1.0);
+        // Companded MSE.
+        let mut cq = xs.clone();
+        let mse_comp = quantize_dequantize(&mut cq, 3, 1.0, 0.0);
+        // Uniform mid-rise covering the full range (classic RTN).
+        let maxabs = xs.iter().fold(0f32, |a, &x| a.max(x.abs()));
+        let d = 2.0 * maxabs / 8.0;
+        let mse_unif: f64 = xs
+            .iter()
+            .map(|&x| {
+                let q = (x / d).floor().clamp(-4.0, 3.0);
+                let deq = d * (q + 0.5);
+                ((x - deq) as f64).powi(2)
+            })
+            .sum::<f64>()
+            / xs.len() as f64;
+        assert!(
+            mse_comp < mse_unif * 0.8,
+            "companded {mse_comp} vs uniform {mse_unif}"
+        );
+    }
+
+    #[test]
+    fn zero_bits_prunes() {
+        let mut xs = vec![0.5f32, -0.25, 0.1];
+        quantize_dequantize(&mut xs, 0, 1.0, 0.0);
+        assert_eq!(xs, vec![0.0, 0.0, 0.0]);
+    }
+}

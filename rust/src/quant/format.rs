@@ -1,0 +1,258 @@
+//! The `.radio` quantized-model container: packed transformer-block
+//! matrices + full-precision "side" parameters (embeddings, LNs,
+//! corrected biases), with save/load and dequantization back into a
+//! `Weights` for evaluation.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::model::config::ModelConfig;
+use crate::model::weights::{MatId, Role, Weights};
+use crate::quant::bitpack::PackedMatrix;
+use crate::util::json::Json;
+
+/// A fully quantized model: the paper's deliverable artifact.
+#[derive(Clone, Debug)]
+pub struct QuantizedModel {
+    /// Full-precision parameters with block matrices still present (they
+    /// are *replaced* by `packed` on dequantization); biases are the
+    /// corrected `b^q`.
+    pub base: Weights,
+    /// One packed matrix per quantizable MatId, in `matrix_ids()` order.
+    pub packed: Vec<(MatId, PackedMatrix)>,
+}
+
+impl QuantizedModel {
+    /// Dequantize into dense weights for evaluation.
+    pub fn to_weights(&self) -> Weights {
+        let mut w = self.base.clone();
+        for (id, p) in &self.packed {
+            *w.matrix_mut(*id) = p.unpack();
+        }
+        w
+    }
+
+    /// Average payload bits/weight across all packed matrices.
+    pub fn avg_bits(&self) -> f64 {
+        let (mut bits, mut count) = (0f64, 0usize);
+        for (_, p) in &self.packed {
+            bits += p.payload_bits() as f64;
+            count += p.rows * p.cols;
+        }
+        bits / count as f64
+    }
+
+    /// Overhead bits as a fraction of payload bits (Table 3c).
+    pub fn overhead_fraction(&self) -> f64 {
+        let payload: usize = self.packed.iter().map(|(_, p)| p.payload_bits()).sum();
+        let overhead: usize = self.packed.iter().map(|(_, p)| p.overhead_bits()).sum();
+        overhead as f64 / payload.max(1) as f64
+    }
+
+    /// Fraction of block weights pruned to zero (Table 3b).
+    pub fn pruned_fraction(&self) -> f64 {
+        let (mut pruned, mut count) = (0f64, 0usize);
+        for (_, p) in &self.packed {
+            pruned += p.pruned_fraction() * (p.rows * p.cols) as f64;
+            count += p.rows * p.cols;
+        }
+        pruned / count as f64
+    }
+
+    /// Compressed model size in bytes (payload + overhead + FP16 side
+    /// params), vs the FP16 dense size.
+    pub fn compression_summary(&self) -> (f64, f64) {
+        let payload: usize = self.packed.iter().map(|(_, p)| p.payload_bits()).sum();
+        let overhead: usize = self.packed.iter().map(|(_, p)| p.overhead_bits()).sum();
+        let block_weights: usize = self.packed.iter().map(|(_, p)| p.rows * p.cols).sum();
+        let compressed_bits = payload + overhead;
+        let fp16_bits = block_weights * 16;
+        (
+            compressed_bits as f64 / 8.0,
+            fp16_bits as f64 / compressed_bits as f64,
+        )
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        let tmp_weights = std::env::temp_dir().join(format!(
+            "radio_qsave_{}.tmp",
+            std::process::id()
+        ));
+        self.base.save(&tmp_weights)?;
+        let base_bytes = std::fs::read(&tmp_weights)?;
+        let _ = std::fs::remove_file(&tmp_weights);
+
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(b"RADIOQM1")?;
+        f.write_all(&(base_bytes.len() as u64).to_le_bytes())?;
+        f.write_all(&base_bytes)?;
+        f.write_all(&(self.packed.len() as u32).to_le_bytes())?;
+        for (id, p) in &self.packed {
+            f.write_all(&(id.layer as u32).to_le_bytes())?;
+            f.write_all(&[role_tag(id.role)])?;
+            let bytes = p.to_bytes();
+            f.write_all(&(bytes.len() as u64).to_le_bytes())?;
+            f.write_all(&bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> std::io::Result<QuantizedModel> {
+        let mut f = std::fs::File::open(path)?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != b"RADIOQM1" {
+            return Err(inv("bad magic: not a .radio quantized model"));
+        }
+        let mut l8 = [0u8; 8];
+        f.read_exact(&mut l8)?;
+        let blen = u64::from_le_bytes(l8) as usize;
+        let mut bbytes = vec![0u8; blen];
+        f.read_exact(&mut bbytes)?;
+        let tmp = std::env::temp_dir().join(format!("radio_qload_{}.tmp", std::process::id()));
+        std::fs::write(&tmp, &bbytes)?;
+        let base = Weights::load(&tmp)?;
+        let _ = std::fs::remove_file(&tmp);
+
+        let mut l4 = [0u8; 4];
+        f.read_exact(&mut l4)?;
+        let n = u32::from_le_bytes(l4) as usize;
+        let mut packed = Vec::with_capacity(n);
+        for _ in 0..n {
+            f.read_exact(&mut l4)?;
+            let layer = u32::from_le_bytes(l4) as usize;
+            let mut tag = [0u8; 1];
+            f.read_exact(&mut tag)?;
+            let role = role_from_tag(tag[0]).ok_or_else(|| inv("bad role tag"))?;
+            f.read_exact(&mut l8)?;
+            let plen = u64::from_le_bytes(l8) as usize;
+            let mut pbytes = vec![0u8; plen];
+            f.read_exact(&mut pbytes)?;
+            let (pm, used) = PackedMatrix::from_bytes(&pbytes).map_err(inv)?;
+            if used != plen {
+                return Err(inv("packed matrix trailing bytes"));
+            }
+            packed.push((MatId { layer, role }, pm));
+        }
+        Ok(QuantizedModel { base, packed })
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.base.config
+    }
+
+    /// Human-readable summary as JSON (for reports).
+    pub fn summary_json(&self) -> Json {
+        let (bytes, ratio) = self.compression_summary();
+        Json::obj(vec![
+            ("avg_bits", Json::num(self.avg_bits())),
+            ("overhead_fraction", Json::num(self.overhead_fraction())),
+            ("pruned_fraction", Json::num(self.pruned_fraction())),
+            ("compressed_bytes", Json::num(bytes)),
+            ("ratio_vs_fp16", Json::num(ratio)),
+        ])
+    }
+}
+
+fn role_tag(r: Role) -> u8 {
+    match r {
+        Role::Q => 0,
+        Role::K => 1,
+        Role::V => 2,
+        Role::O => 3,
+        Role::Up => 4,
+        Role::Down => 5,
+    }
+}
+
+fn role_from_tag(t: u8) -> Option<Role> {
+    Some(match t {
+        0 => Role::Q,
+        1 => Role::K,
+        2 => Role::V,
+        3 => Role::O,
+        4 => Role::Up,
+        5 => Role::Down,
+        _ => return None,
+    })
+}
+
+fn inv<E: std::fmt::Display>(e: E) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{quantize_matrix, Grouping, QuantMode, ScaleRule};
+    use crate::util::rng::Rng;
+
+    fn quantize_all(w: &Weights, bits: u8) -> QuantizedModel {
+        let packed = w
+            .matrix_ids()
+            .into_iter()
+            .map(|id| {
+                let m = w.matrix(id);
+                let grouping = Grouping::whole_columns(m.rows, m.cols);
+                let bvec = vec![bits; grouping.num_groups()];
+                (
+                    id,
+                    quantize_matrix(m, &grouping, &bvec, QuantMode::Companded, ScaleRule::Range),
+                )
+            })
+            .collect();
+        QuantizedModel { base: w.clone(), packed }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let cfg = ModelConfig::preset("ropt-nano").unwrap();
+        let mut rng = Rng::new(91);
+        let w = Weights::init_training(cfg, &mut rng);
+        let qm = quantize_all(&w, 4);
+        let path = std::env::temp_dir().join("radio_test_qm.radio");
+        qm.save(&path).unwrap();
+        let back = QuantizedModel::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(qm.to_weights().layers[0].wq.data, back.to_weights().layers[0].wq.data);
+        assert!((qm.avg_bits() - back.avg_bits()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn avg_bits_matches_requested() {
+        let cfg = ModelConfig::preset("ropt-nano").unwrap();
+        let mut rng = Rng::new(92);
+        let w = Weights::init_training(cfg, &mut rng);
+        let qm = quantize_all(&w, 3);
+        assert!((qm.avg_bits() - 3.0).abs() < 1e-9);
+        let (_, ratio) = qm.compression_summary();
+        assert!(ratio > 4.0, "compression vs fp16 should exceed 4x at 3 bits, got {ratio}");
+    }
+
+    #[test]
+    fn dequantized_model_close_at_8_bits() {
+        let cfg = ModelConfig::preset("ropt-nano").unwrap();
+        let mut rng = Rng::new(93);
+        let w = Weights::init_training(cfg, &mut rng);
+        let qm = quantize_all(&w, 8);
+        let wq = qm.to_weights();
+        let err: f64 = w.layers[0]
+            .wq
+            .data
+            .iter()
+            .zip(&wq.layers[0].wq.data)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / w.layers[0].wq.data.len() as f64;
+        let var = crate::stats::moments::variance(&w.layers[0].wq.data);
+        assert!(err < var * 0.01, "relative err {}", err / var);
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let p = std::env::temp_dir().join("radio_qm_garbage.radio");
+        std::fs::write(&p, b"garbage file contents").unwrap();
+        assert!(QuantizedModel::load(&p).is_err());
+        let _ = std::fs::remove_file(p);
+    }
+}

@@ -1,0 +1,206 @@
+//! Weight grouping (paper §3.3): each matrix is quantized per *group*,
+//! where a group is (one column) × (one of M row sub-groups). Rows are
+//! assigned to sub-groups by ranking their total row sensitivity
+//! G_r²·S_r², and the same row partition applies to every column, so the
+//! grouping costs only ⌈log₂M⌉ bits per row to signal (Figure 4 of the
+//! paper). Eq. 9's Jensen-gap bit saving is computed here too (Figure 3).
+
+use crate::model::tensor::Tensor;
+
+/// Row partition of one weight matrix into M sensitivity-ranked
+/// sub-groups shared by all columns.
+#[derive(Clone, Debug)]
+pub struct Grouping {
+    pub rows: usize,
+    pub cols: usize,
+    /// Number of row sub-groups M.
+    pub m: usize,
+    /// Sub-group id per row.
+    pub row_to_group: Vec<u32>,
+    /// Rows belonging to each sub-group (ascending row order within).
+    pub group_rows: Vec<Vec<u32>>,
+}
+
+impl Grouping {
+    /// Build a grouping with sub-groups of at most `rows_per_group` rows,
+    /// ranking rows by `row_scores` (total row sensitivity; pass uniform
+    /// scores for contiguous chunking).
+    pub fn build(
+        rows: usize,
+        cols: usize,
+        rows_per_group: usize,
+        row_scores: &[f64],
+    ) -> Grouping {
+        assert_eq!(row_scores.len(), rows);
+        assert!(rows_per_group >= 1);
+        let m = rows.div_ceil(rows_per_group);
+        let mut order: Vec<u32> = (0..rows as u32).collect();
+        order.sort_by(|&a, &b| {
+            row_scores[a as usize]
+                .partial_cmp(&row_scores[b as usize])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        let mut row_to_group = vec![0u32; rows];
+        let mut group_rows: Vec<Vec<u32>> = vec![Vec::new(); m];
+        for (rank, &row) in order.iter().enumerate() {
+            let g = (rank * m / rows).min(m - 1);
+            row_to_group[row as usize] = g as u32;
+            group_rows[g].push(row);
+        }
+        for g in group_rows.iter_mut() {
+            g.sort_unstable();
+        }
+        Grouping { rows, cols, m, row_to_group, group_rows }
+    }
+
+    /// Whole-matrix grouping (M = 1): every column is one group.
+    pub fn whole_columns(rows: usize, cols: usize) -> Grouping {
+        Grouping::build(rows, cols, rows, &vec![0.0; rows])
+    }
+
+    /// Total number of (column × sub-group) quantization groups.
+    pub fn num_groups(&self) -> usize {
+        self.cols * self.m
+    }
+
+    /// Flat group index for (column, sub-group).
+    #[inline]
+    pub fn group_index(&self, col: usize, sub: usize) -> usize {
+        col * self.m + sub
+    }
+
+    /// Number of weights in sub-group `sub` (same for every column).
+    pub fn group_len(&self, sub: usize) -> usize {
+        self.group_rows[sub].len()
+    }
+
+    /// Gather the weights of group (col, sub) from a matrix.
+    pub fn gather(&self, w: &Tensor, col: usize, sub: usize) -> Vec<f32> {
+        self.group_rows[sub]
+            .iter()
+            .map(|&r| w.get(r as usize, col))
+            .collect()
+    }
+
+    /// Scatter values back into group (col, sub).
+    pub fn scatter(&self, w: &mut Tensor, col: usize, sub: usize, vals: &[f32]) {
+        assert_eq!(vals.len(), self.group_rows[sub].len());
+        for (&r, &v) in self.group_rows[sub].iter().zip(vals) {
+            w.set(r as usize, col, v);
+        }
+    }
+
+    /// Signaling overhead in bits (Table 3c): per-row sub-group index +
+    /// per-group bit depth (4 b) and FP16 scale and mean.
+    pub fn overhead_bits(&self) -> usize {
+        let row_index_bits = if self.m > 1 {
+            self.rows * (usize::BITS - (self.m - 1).leading_zeros()) as usize
+        } else {
+            0
+        };
+        row_index_bits + self.num_groups() * (4 + 16 + 16)
+    }
+}
+
+/// Eq. 9: the average bit-depth saving from splitting a pooled source of
+/// sensitivity `pooled = G²S²` into units with sensitivities `parts`
+/// (weighted by element counts). Non-negative by Jensen's inequality.
+pub fn jensen_gain_bits(parts: &[(usize, f64)]) -> f64 {
+    let total: usize = parts.iter().map(|&(n, _)| n).sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let eps = 1e-30;
+    // Pooled second moment = element-weighted mean of part moments.
+    let pooled: f64 =
+        parts.iter().map(|&(n, v)| n as f64 * v).sum::<f64>() / total as f64;
+    let mean_log: f64 = parts
+        .iter()
+        .map(|&(n, v)| n as f64 * (v.max(eps)).log2())
+        .sum::<f64>()
+        / total as f64;
+    0.5 * (pooled.max(eps).log2() - mean_log)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn build_partitions_all_rows() {
+        let scores: Vec<f64> = (0..100).map(|i| (i * 37 % 100) as f64).collect();
+        let g = Grouping::build(100, 8, 32, &scores);
+        assert_eq!(g.m, 4);
+        let total: usize = g.group_rows.iter().map(|v| v.len()).sum();
+        assert_eq!(total, 100);
+        // Every row assigned exactly once, consistent with row_to_group.
+        for (sub, rows) in g.group_rows.iter().enumerate() {
+            for &r in rows {
+                assert_eq!(g.row_to_group[r as usize], sub as u32);
+            }
+        }
+        // Groups are similarly sized.
+        for rows in &g.group_rows {
+            assert!(rows.len() == 25);
+        }
+    }
+
+    #[test]
+    fn grouping_ranks_by_score() {
+        // Low-score rows land in sub-group 0, high-score in the last.
+        let scores: Vec<f64> = (0..64).map(|i| i as f64).collect();
+        let g = Grouping::build(64, 4, 16, &scores);
+        assert!(g.group_rows[0].iter().all(|&r| r < 16));
+        assert!(g.group_rows[3].iter().all(|&r| r >= 48));
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let mut rng = Rng::new(51);
+        let mut w = Tensor::zeros(32, 8);
+        rng.fill_gauss(&mut w.data, 0.0, 1.0);
+        let scores: Vec<f64> = (0..32).map(|_| rng.uniform()).collect();
+        let g = Grouping::build(32, 8, 8, &scores);
+        let orig = w.clone();
+        for col in 0..8 {
+            for sub in 0..g.m {
+                let vals = g.gather(&w, col, sub);
+                g.scatter(&mut w, col, sub, &vals);
+            }
+        }
+        assert_eq!(w.data, orig.data);
+    }
+
+    #[test]
+    fn overhead_matches_paper_scaling() {
+        // Table 3c shape: halving group size doubles the per-group
+        // overhead share. 512 rows, group 64 → m=8 → 3 bits/row.
+        let g64 = Grouping::build(512, 512, 64, &vec![0.0; 512]);
+        let g512 = Grouping::build(512, 512, 512, &vec![0.0; 512]);
+        assert!(g64.overhead_bits() > 4 * g512.overhead_bits());
+        // Whole-column grouping has no row-index overhead.
+        assert_eq!(
+            g512.overhead_bits(),
+            512 * (4 + 16 + 16)
+        );
+    }
+
+    #[test]
+    fn jensen_gain_nonnegative_and_zero_for_identical() {
+        let same = vec![(10usize, 2.0f64); 8];
+        assert!(jensen_gain_bits(&same).abs() < 1e-12);
+        let mixed = vec![(10, 0.01), (10, 1.0), (10, 100.0)];
+        let g = jensen_gain_bits(&mixed);
+        assert!(g > 0.5, "gain {g}");
+    }
+
+    #[test]
+    fn jensen_gain_matches_hand_computation() {
+        // Two equal-size parts with variances 1 and 16:
+        // pooled = 8.5, gain = ½(log2 8.5 − (0 + 4)/2) = ½(3.087 − 2) ≈ 0.544
+        let g = jensen_gain_bits(&[(5, 1.0), (5, 16.0)]);
+        assert!((g - 0.5 * ((8.5f64).log2() - 2.0)).abs() < 1e-9);
+    }
+}

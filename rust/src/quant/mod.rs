@@ -1,0 +1,158 @@
+//! Quantization core: uniform (Eq. 2) and companded (Eq. 8) scalar
+//! quantizers, MMSE step sizes, sensitivity-ranked weight grouping
+//! (§3.3), mixed-precision bit-packing, bias correction (§3.2), and the
+//! `.radio` quantized-model container.
+
+pub mod activations;
+pub mod bias;
+pub mod bitpack;
+pub mod companding;
+pub mod format;
+pub mod grouping;
+pub mod rtn;
+
+pub use bitpack::{GroupMeta, PackedMatrix, QuantMode};
+pub use grouping::Grouping;
+
+use crate::model::tensor::Tensor;
+use crate::stats::moments;
+
+/// How per-group scales (step size / compander scale) are chosen.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleRule {
+    /// Range-covering step (classic RTN).
+    Range,
+    /// Grid-searched MMSE scale (paper's step-size optimization).
+    Mmse,
+}
+
+/// Build per-group metadata (scale/mean) for a matrix given per-group bit
+/// depths, then pack. This is the single quantization entry point shared
+/// by Radio and the baselines.
+pub fn quantize_matrix(
+    w: &Tensor,
+    grouping: &Grouping,
+    bits: &[u8],
+    mode: QuantMode,
+    scale_rule: ScaleRule,
+) -> PackedMatrix {
+    assert_eq!(bits.len(), grouping.num_groups());
+    let mut meta = Vec::with_capacity(bits.len());
+    for col in 0..grouping.cols {
+        for sub in 0..grouping.m {
+            let b = bits[grouping.group_index(col, sub)];
+            let vals = grouping.gather(w, col, sub);
+            meta.push(group_meta(&vals, b, mode, scale_rule));
+        }
+    }
+    PackedMatrix::pack(w, grouping, &meta, mode)
+}
+
+/// Compute (bits, scale, mean) for one group of weights.
+pub fn group_meta(vals: &[f32], bits: u8, mode: QuantMode, rule: ScaleRule) -> GroupMeta {
+    let mean = moments::mean(vals) as f32;
+    if bits == 0 {
+        return GroupMeta { bits, scale: 1e-6, mean };
+    }
+    match mode {
+        QuantMode::Companded => {
+            let std = moments::variance(vals).sqrt().max(1e-9) as f32;
+            let scale = match rule {
+                ScaleRule::Range => std,
+                ScaleRule::Mmse => mmse_compander_scale(vals, bits, std, mean),
+            };
+            GroupMeta { bits, scale, mean }
+        }
+        QuantMode::Uniform => {
+            let scale = match rule {
+                ScaleRule::Range => rtn::range_step(vals, bits, mean),
+                ScaleRule::Mmse => rtn::mmse_step(vals, bits, mean),
+            };
+            GroupMeta { bits, scale, mean }
+        }
+    }
+}
+
+/// Coarse 1-D grid fine-tuning of the compander scale (paper §3.2 treats
+/// (S, µ) as hyperparameters tuned on coarse grids post-hoc).
+fn mmse_compander_scale(vals: &[f32], bits: u8, std: f32, mean: f32) -> f32 {
+    let mut best = (std, f64::INFINITY);
+    for i in 0..16 {
+        let s = std * (0.55 + 0.1 * i as f32);
+        let mut mse = 0f64;
+        for &x in vals {
+            let code = companding::quantize_code(x, bits, s, mean);
+            let deq = companding::dequantize_code(code, bits, s, mean);
+            mse += ((x - deq) as f64).powi(2);
+        }
+        if mse < best.1 {
+            best = (s, mse);
+        }
+    }
+    best.0
+}
+
+/// Simple whole-matrix RTN quantization at fixed bit depth (the paper's
+/// RTN baseline): per-column groups, uniform quantizer, range step.
+pub fn rtn_quantize(w: &Tensor, bits: u8, rows_per_group: usize, rule: ScaleRule) -> PackedMatrix {
+    let grouping = Grouping::build(w.rows, w.cols, rows_per_group, &vec![0.0; w.rows]);
+    let bvec = vec![bits; grouping.num_groups()];
+    quantize_matrix(w, &grouping, &bvec, QuantMode::Uniform, rule)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn quantize_matrix_hits_requested_rate() {
+        let mut rng = Rng::new(81);
+        let (rows, cols) = (32, 16);
+        let mut w = Tensor::zeros(rows, cols);
+        rng.fill_laplace(&mut w.data, 0.0, 0.3);
+        let grouping = Grouping::build(rows, cols, 16, &vec![0.0; rows]);
+        let bits = vec![3u8; grouping.num_groups()];
+        let p = quantize_matrix(&w, &grouping, &bits, QuantMode::Companded, ScaleRule::Range);
+        assert!((p.avg_bits_per_weight() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mmse_no_worse_than_range_for_companded() {
+        let mut rng = Rng::new(82);
+        let (rows, cols) = (64, 8);
+        let mut w = Tensor::zeros(rows, cols);
+        rng.fill_laplace(&mut w.data, 0.05, 0.4);
+        let grouping = Grouping::whole_columns(rows, cols);
+        let bits = vec![3u8; grouping.num_groups()];
+        let mse = |rule| {
+            let p = quantize_matrix(&w, &grouping, &bits, QuantMode::Companded, rule);
+            let d = p.unpack();
+            w.data
+                .iter()
+                .zip(&d.data)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+        };
+        let m_range = mse(ScaleRule::Range);
+        let m_mmse = mse(ScaleRule::Mmse);
+        assert!(m_mmse <= m_range * 1.02, "mmse {m_mmse} vs range {m_range}");
+    }
+
+    #[test]
+    fn rtn_reconstruction_reasonable_at_8_bits() {
+        let mut rng = Rng::new(83);
+        let mut w = Tensor::zeros(48, 12);
+        rng.fill_gauss(&mut w.data, 0.0, 1.0);
+        let p = rtn_quantize(&w, 8, 48, ScaleRule::Range);
+        let d = p.unpack();
+        let mse: f64 = w
+            .data
+            .iter()
+            .zip(&d.data)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / w.data.len() as f64;
+        assert!(mse < 1e-3, "mse {mse}");
+    }
+}

@@ -1,0 +1,144 @@
+//! Uniform (round-to-nearest) scalar quantization — Eq. 2 of the paper —
+//! plus MMSE step-size selection. This is both the RTN baseline and the
+//! "uniform" mode of the Radio quantizer ablation (Table 3a).
+
+/// Mid-rise uniform quantizer code for step `d`, `2^bits` levels centered
+/// on `mean` (Eq. 2 with an explicit zero-point).
+#[inline]
+pub fn quantize_code(theta: f32, bits: u8, d: f32, mean: f32) -> i32 {
+    debug_assert!(bits >= 1);
+    let half = 1i64 << (bits - 1);
+    let q = ((theta - mean) / d).floor() as i64;
+    q.clamp(-half, half - 1) as i32
+}
+
+/// Dequantize a mid-rise code.
+#[inline]
+pub fn dequantize_code(code: i32, d: f32, mean: f32) -> f32 {
+    mean + d * (code as f32 + 0.5)
+}
+
+/// Quantize-dequantize in place; returns MSE.
+pub fn quantize_dequantize(xs: &mut [f32], bits: u8, d: f32, mean: f32) -> f64 {
+    if bits == 0 {
+        let mse =
+            xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() / xs.len().max(1) as f64;
+        xs.fill(0.0);
+        return mse;
+    }
+    let mut mse = 0f64;
+    for x in xs.iter_mut() {
+        let deq = dequantize_code(quantize_code(*x, bits, d, mean), d, mean);
+        mse += ((*x - deq) as f64).powi(2);
+        *x = deq;
+    }
+    mse / xs.len().max(1) as f64
+}
+
+/// Classic range-based step: the 2^B bins just cover [min, max].
+pub fn range_step(xs: &[f32], bits: u8, mean: f32) -> f32 {
+    debug_assert!(bits >= 1);
+    let mut maxdev = 0f32;
+    for &x in xs {
+        maxdev = maxdev.max((x - mean).abs());
+    }
+    (2.0 * maxdev / (1u32 << bits) as f32).max(1e-12)
+}
+
+/// MSE of quantizing `xs` with step `d` (no mutation).
+pub fn mse_for_step(xs: &[f32], bits: u8, d: f32, mean: f32) -> f64 {
+    let mut mse = 0f64;
+    for &x in xs {
+        let deq = dequantize_code(quantize_code(x, bits, d, mean), d, mean);
+        mse += ((x - deq) as f64).powi(2);
+    }
+    mse / xs.len().max(1) as f64
+}
+
+/// MMSE step-size search: golden-section-style scan over a log grid of
+/// candidate steps around the range step (the paper fine-tunes (S, µ) on
+/// coarse 1-D grids post-hoc; this is the uniform-quantizer analogue).
+pub fn mmse_step(xs: &[f32], bits: u8, mean: f32) -> f32 {
+    debug_assert!(bits >= 1);
+    let d0 = range_step(xs, bits, mean);
+    let mut best = (d0, mse_for_step(xs, bits, d0, mean));
+    // Shrinking the range clips outliers but shrinks bins — usually wins.
+    for i in 1..=24 {
+        let d = d0 * (1.0 - i as f32 / 26.0);
+        if d <= 0.0 {
+            break;
+        }
+        let m = mse_for_step(xs, bits, d, mean);
+        if m < best.1 {
+            best = (d, m);
+        }
+    }
+    best.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn codes_clamped_to_range() {
+        let bits = 3u8;
+        let d = 0.1;
+        assert_eq!(quantize_code(100.0, bits, d, 0.0), 3);
+        assert_eq!(quantize_code(-100.0, bits, d, 0.0), -4);
+    }
+
+    #[test]
+    fn dequantize_is_bin_midpoint() {
+        let d = 0.5;
+        assert!((dequantize_code(0, d, 0.0) - 0.25).abs() < 1e-7);
+        assert!((dequantize_code(-1, d, 0.0) - (-0.25)).abs() < 1e-7);
+    }
+
+    #[test]
+    fn range_step_covers_data() {
+        let xs = [-1.0f32, 0.3, 0.9];
+        let d = range_step(&xs, 2, 0.0);
+        // 4 levels, max |dev| = 1.0 → d = 0.5; codes within [-2, 1].
+        assert!((d - 0.5).abs() < 1e-6);
+        for &x in &xs {
+            let c = quantize_code(x, 2, d, 0.0);
+            assert!((-2..=1).contains(&c));
+        }
+    }
+
+    #[test]
+    fn mmse_step_beats_or_matches_range_step() {
+        let mut rng = Rng::new(41);
+        let mut xs = vec![0f32; 20_000];
+        rng.fill_gauss(&mut xs, 0.0, 1.0);
+        // Add outliers so range step is clearly suboptimal.
+        xs[0] = 12.0;
+        xs[1] = -11.0;
+        for bits in [2u8, 3, 4] {
+            let dr = range_step(&xs, bits, 0.0);
+            let dm = mmse_step(&xs, bits, 0.0);
+            let mr = mse_for_step(&xs, bits, dr, 0.0);
+            let mm = mse_for_step(&xs, bits, dm, 0.0);
+            assert!(mm <= mr + 1e-12, "bits {bits}: {mm} vs {mr}");
+            if bits <= 3 {
+                assert!(mm < 0.8 * mr, "expected big MMSE win with outliers at {bits} bits");
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_dequantize_error_bounded_by_step() {
+        let mut rng = Rng::new(42);
+        let mut xs = vec![0f32; 1000];
+        rng.fill_gauss(&mut xs, 0.0, 0.5);
+        let bits = 6u8;
+        let d = range_step(&xs, bits, 0.0);
+        let orig = xs.clone();
+        quantize_dequantize(&mut xs, bits, d, 0.0);
+        for (&o, &q) in orig.iter().zip(&xs) {
+            assert!((o - q).abs() <= d / 2.0 + 1e-6, "{o} -> {q} (d={d})");
+        }
+    }
+}

@@ -1,0 +1,54 @@
+//! Report emission: every bench/example writes its paper-shaped table to
+//! stdout *and* appends a markdown copy under `results/`, so experiment
+//! output survives the run (EXPERIMENTS.md references these files).
+
+use std::io::Write;
+use std::path::PathBuf;
+
+use crate::util::bench::Table;
+
+/// Directory for result artifacts (created on demand).
+pub fn results_dir() -> PathBuf {
+    let dir = std::env::var("RADIO_RESULTS_DIR").unwrap_or_else(|_| "results".to_string());
+    let p = PathBuf::from(dir);
+    let _ = std::fs::create_dir_all(&p);
+    p
+}
+
+/// Write a named markdown report (overwrites).
+pub fn write_report(name: &str, title: &str, tables: &[(&str, &Table)], notes: &str) {
+    let path = results_dir().join(format!("{name}.md"));
+    let mut out = String::new();
+    out.push_str(&format!("# {title}\n\n"));
+    if !notes.is_empty() {
+        out.push_str(notes);
+        out.push_str("\n\n");
+    }
+    for (caption, t) in tables {
+        out.push_str(&format!("## {caption}\n\n"));
+        out.push_str(&t.to_markdown());
+        out.push('\n');
+    }
+    match std::fs::File::create(&path).and_then(|mut f| f.write_all(out.as_bytes())) {
+        Ok(()) => println!("[report] wrote {}", path.display()),
+        Err(e) => eprintln!("[report] FAILED to write {}: {e}", path.display()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_written_to_disk() {
+        std::env::set_var("RADIO_RESULTS_DIR", std::env::temp_dir().join("radio_results_test"));
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        write_report("unit_test_report", "Test", &[("tbl", &t)], "note");
+        let p = results_dir().join("unit_test_report.md");
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert!(s.contains("| a | b |"));
+        let _ = std::fs::remove_file(p);
+        std::env::remove_var("RADIO_RESULTS_DIR");
+    }
+}

@@ -1,0 +1,87 @@
+//! PJRT artifact runtime: load HLO *text* produced by `python/compile/aot.py`
+//! (L2 JAX + L1 Pallas, lowered once at build time), compile it on the CPU
+//! PJRT client, and execute it from the Rust request path.
+//!
+//! HLO text — not serialized HloModuleProto — is the interchange format:
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that the crate's
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Shared PJRT client (CPU).
+pub struct PjRt {
+    client: xla::PjRtClient,
+}
+
+impl PjRt {
+    pub fn cpu() -> Result<PjRt> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjRt { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO text artifact and compile it.
+    pub fn load_artifact(&self, path: &Path) -> Result<Artifact> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Artifact { exe, name: path.display().to_string() })
+    }
+}
+
+/// One compiled executable.
+pub struct Artifact {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Artifact {
+    /// Execute with f32/i32 literal inputs; returns the flattened tuple of
+    /// output literals (aot.py lowers with `return_tuple=True`).
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let mut tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // Outputs arrive as a tuple literal; decompose.
+        let elems = tuple.decompose_tuple().context("decomposing result tuple")?;
+        Ok(elems)
+    }
+}
+
+/// Build an f32 literal of the given shape.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "shape/data mismatch: {dims:?} vs {}", data.len());
+    let flat = xla::Literal::vec1(data);
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    flat.reshape(&dims_i64).context("reshaping literal")
+}
+
+/// Build an i32 literal of the given shape.
+pub fn literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "shape/data mismatch");
+    let flat = xla::Literal::vec1(data);
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    flat.reshape(&dims_i64).context("reshaping literal")
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().context("literal to f32 vec")
+}

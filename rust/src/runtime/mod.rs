@@ -1,0 +1,9 @@
+//! PJRT runtime (L3 ⇄ L2 bridge): loads the AOT-compiled HLO artifacts
+//! and exposes them behind the same traits the native substrate
+//! implements (`GradientProvider`, forward evaluation).
+
+pub mod artifact;
+pub mod provider;
+
+pub use artifact::{literal_f32, literal_i32, to_vec_f32, Artifact, PjRt};
+pub use provider::XlaProvider;

@@ -1,0 +1,184 @@
+//! `XlaProvider`: the production gradient/forward provider. Executes the
+//! AOT-compiled JAX graphs (`model_gradvar`, `model_fwd`, `model_loss`)
+//! via PJRT, implementing the same `GradientProvider` trait as the native
+//! backprop substrate — the L3⇄L2 seam of the three-layer stack.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::gradients::{GradSample, GradientProvider};
+use crate::model::config::ModelConfig;
+use crate::model::tensor::Tensor;
+use crate::model::weights::Weights;
+use crate::runtime::artifact::{literal_f32, literal_i32, to_vec_f32, Artifact, PjRt};
+use crate::util::json::Json;
+
+pub struct XlaProvider {
+    _pjrt: PjRt,
+    gradvar: Artifact,
+    fwd: Artifact,
+    loss: Artifact,
+    pub config: ModelConfig,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl XlaProvider {
+    /// Load artifacts from a directory produced by `make artifacts`.
+    pub fn load(dir: &Path) -> Result<XlaProvider> {
+        let meta_path = dir.join("model_config.json");
+        let meta = Json::parse(
+            &std::fs::read_to_string(&meta_path)
+                .with_context(|| format!("reading {}", meta_path.display()))?,
+        )
+        .map_err(anyhow::Error::msg)?;
+        let grab = |k: &str| -> Result<usize> {
+            meta.get(k)
+                .and_then(|v| v.as_usize())
+                .with_context(|| format!("model_config.json missing {k}"))
+        };
+        let config = ModelConfig {
+            vocab: grab("vocab")?,
+            dim: grab("dim")?,
+            heads: grab("heads")?,
+            layers: grab("layers")?,
+            mlp: grab("mlp")?,
+            max_seq: grab("max_seq")?,
+        };
+        let pjrt = PjRt::cpu()?;
+        let gradvar = pjrt.load_artifact(&dir.join("model_gradvar.hlo.txt"))?;
+        let fwd = pjrt.load_artifact(&dir.join("model_fwd.hlo.txt"))?;
+        let loss = pjrt.load_artifact(&dir.join("model_loss.hlo.txt"))?;
+        Ok(XlaProvider {
+            _pjrt: pjrt,
+            gradvar,
+            fwd,
+            loss,
+            config,
+            batch: grab("batch")?,
+            seq: grab("seq")?,
+        })
+    }
+
+    /// Default artifacts directory (repo-root `artifacts/`, overridable
+    /// via RADIO_ARTIFACTS).
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from(std::env::var("RADIO_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()))
+    }
+
+    /// Weights → literal list in the canonical (python `weight_spec`)
+    /// order, which equals `Weights::param_slices_mut` order.
+    fn weight_literals(&self, w: &Weights) -> Result<Vec<xla::Literal>> {
+        anyhow::ensure!(
+            w.config == self.config,
+            "weights config {:?} does not match artifact config {:?}",
+            w.config,
+            self.config
+        );
+        let cfg = &self.config;
+        let (e, f) = (cfg.dim, cfg.mlp);
+        let mut lits = Vec::with_capacity(2 + 16 * cfg.layers + 2);
+        lits.push(literal_f32(&w.embed.data, &[cfg.vocab, e])?);
+        lits.push(literal_f32(&w.pos.data, &[cfg.max_seq, e])?);
+        for l in &w.layers {
+            lits.push(literal_f32(&l.ln1_g, &[e])?);
+            lits.push(literal_f32(&l.ln1_b, &[e])?);
+            lits.push(literal_f32(&l.wq.data, &[e, e])?);
+            lits.push(literal_f32(&l.bq, &[e])?);
+            lits.push(literal_f32(&l.wk.data, &[e, e])?);
+            lits.push(literal_f32(&l.bk, &[e])?);
+            lits.push(literal_f32(&l.wv.data, &[e, e])?);
+            lits.push(literal_f32(&l.bv, &[e])?);
+            lits.push(literal_f32(&l.wo.data, &[e, e])?);
+            lits.push(literal_f32(&l.bo, &[e])?);
+            lits.push(literal_f32(&l.ln2_g, &[e])?);
+            lits.push(literal_f32(&l.ln2_b, &[e])?);
+            lits.push(literal_f32(&l.w1.data, &[e, f])?);
+            lits.push(literal_f32(&l.b1, &[f])?);
+            lits.push(literal_f32(&l.w2.data, &[f, e])?);
+            lits.push(literal_f32(&l.b2, &[e])?);
+        }
+        lits.push(literal_f32(&w.lnf_g, &[e])?);
+        lits.push(literal_f32(&w.lnf_b, &[e])?);
+        Ok(lits)
+    }
+
+    fn tokens_literal(&self, tokens: &[u32]) -> Result<xla::Literal> {
+        let ivals: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        literal_i32(&ivals, &[self.batch, self.seq])
+    }
+
+    /// Forward logits via the Pallas-backed fwd artifact:
+    /// returns (B·T)×V logits.
+    pub fn forward_logits(&self, w: &Weights, tokens: &[u32]) -> Result<Tensor> {
+        let mut inputs = vec![self.tokens_literal(tokens)?];
+        inputs.extend(self.weight_literals(w)?);
+        let outs = self.fwd.execute(&inputs)?;
+        let data = to_vec_f32(&outs[0])?;
+        Ok(Tensor::from_vec(self.batch * self.seq, self.config.vocab, data))
+    }
+
+    /// Mean cross-entropy via the loss artifact.
+    pub fn loss(&self, w: &Weights, tokens: &[u32], targets: &[u32]) -> Result<f64> {
+        let tvals: Vec<i32> = targets.iter().map(|&t| t as i32).collect();
+        let mut inputs = vec![
+            self.tokens_literal(tokens)?,
+            literal_i32(&tvals, &[self.batch, self.seq])?,
+        ];
+        inputs.extend(self.weight_literals(w)?);
+        let outs = self.loss.execute(&inputs)?;
+        Ok(to_vec_f32(&outs[0])?[0] as f64)
+    }
+}
+
+impl GradientProvider for XlaProvider {
+    fn grad_sample(
+        &mut self,
+        w: &Weights,
+        tokens: &[u32],
+        batch: usize,
+        seq: usize,
+        u: &[f32],
+        s: &[f32],
+    ) -> GradSample {
+        assert_eq!(batch, self.batch, "artifact compiled for batch {}", self.batch);
+        assert_eq!(seq, self.seq, "artifact compiled for seq {}", self.seq);
+        let cfg = &self.config;
+        let mut inputs = vec![
+            self.tokens_literal(tokens).expect("tokens literal"),
+            literal_f32(u, &[cfg.dim]).expect("u literal"),
+            literal_f32(s, &[batch * seq]).expect("s literal"),
+        ];
+        inputs.extend(self.weight_literals(w).expect("weight literals"));
+        let outs = self.gradvar.execute(&inputs).expect("gradvar execute");
+
+        let ids = w.matrix_ids();
+        let nq = ids.len();
+        assert_eq!(outs.len(), 2 * nq + 1, "gradvar output arity");
+        let mut grads = Vec::with_capacity(nq);
+        let mut input_means = Vec::with_capacity(nq);
+        for (i, &id) in ids.iter().enumerate() {
+            let m = w.matrix(id);
+            let gdata = to_vec_f32(&outs[i]).expect("grad literal");
+            grads.push((id, Tensor::from_vec(m.rows, m.cols, gdata)));
+            let mu = to_vec_f32(&outs[nq + i]).expect("mean literal");
+            input_means.push((id, mu));
+        }
+        let zdata = to_vec_f32(&outs[2 * nq]).expect("z literal");
+        let z = Tensor::from_vec(batch * seq, cfg.dim, zdata);
+        GradSample { grads, input_means, z }
+    }
+
+    fn outputs(&mut self, w: &Weights, tokens: &[u32], batch: usize, seq: usize) -> Tensor {
+        // Reuse the gradvar graph with an empty subsampling mask (grads
+        // are zero, Z is exact).
+        let u = vec![0f32; self.config.dim];
+        let s = vec![0f32; batch * seq];
+        self.grad_sample(w, tokens, batch, seq, &u, &s).z
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}

@@ -1,0 +1,139 @@
+//! The paper's analytic rate–distortion model (Eq. 5 and Figure 1):
+//! per-group distortion `d_n(B) = P_n · H_n · G_n² · S_n² · 2^(−2B)` and
+//! its derivative, plus helpers used by the dual-ascent solver and the
+//! Figure-1 bench.
+
+/// Per-group rate–distortion state: everything Algorithm 1 tracks about
+/// one weight group (a matrix, a column group, or a sub-group).
+#[derive(Clone, Debug)]
+pub struct GroupRd {
+    /// Number of weights in the group (`P_n`).
+    pub count: usize,
+    /// Gradient second moment (`G_n²`).
+    pub g2: f64,
+    /// Weight variance (`S_n²`).
+    pub s2: f64,
+    /// Distribution coefficient (`H_n`; 1.42 Gauss / 0.72 Laplace).
+    pub h: f64,
+}
+
+impl GroupRd {
+    pub fn new(count: usize, g2: f64, s2: f64, h: f64) -> Self {
+        Self { count, g2, s2, h }
+    }
+
+    /// Sensitivity product `G²·S²` that drives bit allocation.
+    #[inline]
+    pub fn sensitivity(&self) -> f64 {
+        self.g2 * self.s2
+    }
+
+    /// Modeled distortion at bit depth `b` (Eq. 5):
+    /// `d(b) = P·H·G²·S²·2^(−2b)`.
+    #[inline]
+    pub fn distortion(&self, b: f64) -> f64 {
+        self.count as f64 * self.h * self.g2 * self.s2 * (-2.0 * b).exp2()
+    }
+
+    /// `−∂d/∂B = (2 ln 2)·d(b)` — the quantity intersected with the dual
+    /// variable V in Figure 1 (per-weight: divided by P).
+    #[inline]
+    pub fn neg_derivative_per_weight(&self, b: f64) -> f64 {
+        2.0 * std::f64::consts::LN_2 * self.h * self.g2 * self.s2 * (-2.0 * b).exp2()
+    }
+
+    /// The primal update of Eq. 6: the bit depth at which the per-weight
+    /// marginal distortion equals the dual `v`, clamped to [0, bmax].
+    /// (H is dropped as in the paper — assumed equal across groups.)
+    #[inline]
+    pub fn optimal_bits(&self, v: f64, bmax: f64) -> f64 {
+        let gs = self.g2 * self.s2;
+        if gs <= 0.0 || v <= 0.0 {
+            return 0.0;
+        }
+        let b = 0.5 * (2.0 * std::f64::consts::LN_2 * gs / v).log2();
+        b.clamp(0.0, bmax)
+    }
+}
+
+/// Total modeled distortion over groups at the given bit assignment.
+pub fn total_distortion(groups: &[GroupRd], bits: &[f64]) -> f64 {
+    groups
+        .iter()
+        .zip(bits)
+        .map(|(g, &b)| g.distortion(b))
+        .sum()
+}
+
+/// Average bit rate (bits per weight) of an assignment.
+pub fn average_rate(groups: &[GroupRd], bits: &[f64]) -> f64 {
+    let total_w: usize = groups.iter().map(|g| g.count).sum();
+    if total_w == 0 {
+        return 0.0;
+    }
+    let total_b: f64 = groups
+        .iter()
+        .zip(bits)
+        .map(|(g, &b)| g.count as f64 * b)
+        .sum();
+    total_b / total_w as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distortion_halves_per_bit_squared() {
+        let g = GroupRd::new(100, 2.0, 3.0, 1.42);
+        // One extra bit => distortion / 4 (2^-2B).
+        let d3 = g.distortion(3.0);
+        let d4 = g.distortion(4.0);
+        assert!((d3 / d4 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn derivative_matches_finite_difference() {
+        let g = GroupRd::new(7, 0.5, 1.5, 1.0);
+        let b = 2.7;
+        let eps = 1e-6;
+        let fd = (g.distortion(b + eps) - g.distortion(b - eps)) / (2.0 * eps);
+        let analytic = -(g.neg_derivative_per_weight(b)) * g.count as f64;
+        assert!(
+            (fd - analytic).abs() < 1e-6 * analytic.abs().max(1.0),
+            "fd {fd} vs {analytic}"
+        );
+    }
+
+    #[test]
+    fn optimal_bits_satisfies_stationarity() {
+        let g = GroupRd::new(10, 1.3, 0.7, 1.0);
+        let v = 0.01;
+        let b = g.optimal_bits(v, 16.0);
+        // At the optimum, −d'(b)/P == v.
+        assert!((g.neg_derivative_per_weight(b) - v).abs() < 1e-9);
+    }
+
+    #[test]
+    fn optimal_bits_clamped() {
+        let g = GroupRd::new(10, 1e-12, 1e-12, 1.0);
+        assert_eq!(g.optimal_bits(1.0, 8.0), 0.0);
+        let hot = GroupRd::new(10, 1e6, 1e6, 1.0);
+        assert_eq!(hot.optimal_bits(1e-12, 8.0), 8.0);
+    }
+
+    #[test]
+    fn sensitive_groups_get_more_bits() {
+        let v = 0.003;
+        let lo = GroupRd::new(10, 0.1, 1.0, 1.0);
+        let hi = GroupRd::new(10, 10.0, 1.0, 1.0);
+        assert!(hi.optimal_bits(v, 8.0) > lo.optimal_bits(v, 8.0));
+    }
+
+    #[test]
+    fn rate_accounting() {
+        let groups = vec![GroupRd::new(100, 1.0, 1.0, 1.0), GroupRd::new(300, 1.0, 1.0, 1.0)];
+        let rate = average_rate(&groups, &[4.0, 2.0]);
+        assert!((rate - (400.0 + 600.0) / 400.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,437 @@
+//! Dense linear algebra on row-major `f32` matrices: matmul (blocked and
+//! threaded), Cholesky factorization/inversion (GPTQ's Hessian machinery),
+//! and a cyclic Jacobi symmetric eigensolver (PCA).
+//!
+//! All routines are self-contained — no BLAS in the image; the threaded
+//! blocked matmul in [`matmul`] is the workhorse behind the transformer
+//! substrate and is tuned in the §Perf pass.
+
+use crate::util::threadpool::parallel_for_chunks;
+
+/// C[m×n] = A[m×k] · B[k×n], row-major, threaded over rows of C.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0f32; m * n];
+    matmul_into(a, b, &mut c, m, k, n);
+    c
+}
+
+/// In-place variant: writes into `c` (must be m·n, will be overwritten).
+pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(b.len(), k * n, "B shape");
+    assert_eq!(c.len(), m * n, "C shape");
+    let c_ptr = SendMut(c.as_mut_ptr());
+    // Row blocks of C in parallel; inner loops ordered i-k-j so B rows
+    // stream sequentially (good cache behaviour without a transpose).
+    parallel_for_chunks(m, 8, |r0, r1| {
+        let c_ptr = c_ptr;
+        for i in r0..r1 {
+            // SAFETY: disjoint row ranges per chunk.
+            let crow =
+                unsafe { std::slice::from_raw_parts_mut(c_ptr.0.add(i * n), n) };
+            crow.fill(0.0);
+            let arow = &a[i * k..(i + 1) * k];
+            for (kk, &aik) in arow.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * n..(kk + 1) * n];
+                // Unrolled-by-4 axpy; the autovectorizer handles the rest.
+                let mut j = 0;
+                while j + 4 <= n {
+                    crow[j] += aik * brow[j];
+                    crow[j + 1] += aik * brow[j + 1];
+                    crow[j + 2] += aik * brow[j + 2];
+                    crow[j + 3] += aik * brow[j + 3];
+                    j += 4;
+                }
+                while j < n {
+                    crow[j] += aik * brow[j];
+                    j += 1;
+                }
+            }
+        }
+    });
+}
+
+struct SendMut<T>(*mut T);
+impl<T> Clone for SendMut<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendMut<T> {}
+unsafe impl<T> Send for SendMut<T> {}
+unsafe impl<T> Sync for SendMut<T> {}
+
+/// C = Aᵀ·A for A[m×n] (n×n Gram matrix), threaded. Used for PCA and the
+/// GPTQ Hessian H = 2 X Xᵀ (up to scale).
+pub fn gram(a: &[f32], m: usize, n: usize) -> Vec<f64> {
+    assert_eq!(a.len(), m * n);
+    let mut g = vec![0f64; n * n];
+    let g_ptr = SendMut(g.as_mut_ptr());
+    parallel_for_chunks(n, 4, |c0, c1| {
+        let g_ptr = g_ptr;
+        for i in c0..c1 {
+            let grow = unsafe { std::slice::from_raw_parts_mut(g_ptr.0.add(i * n), n) };
+            for r in 0..m {
+                let row = &a[r * n..(r + 1) * n];
+                let ai = row[i] as f64;
+                if ai == 0.0 {
+                    continue;
+                }
+                for j in i..n {
+                    grow[j] += ai * row[j] as f64;
+                }
+            }
+        }
+    });
+    // Mirror the upper triangle.
+    for i in 0..n {
+        for j in 0..i {
+            g[i * n + j] = g[j * n + i];
+        }
+    }
+    g
+}
+
+/// Matrix transpose (row-major m×n → n×m).
+pub fn transpose(a: &[f32], m: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * n);
+    let mut t = vec![0f32; n * m];
+    const B: usize = 32;
+    for i0 in (0..m).step_by(B) {
+        for j0 in (0..n).step_by(B) {
+            for i in i0..(i0 + B).min(m) {
+                for j in j0..(j0 + B).min(n) {
+                    t[j * m + i] = a[i * n + j];
+                }
+            }
+        }
+    }
+    t
+}
+
+/// Cholesky factorization of a symmetric positive-definite matrix
+/// (f64, row-major n×n). Returns lower-triangular L with A = L·Lᵀ.
+pub fn cholesky(a: &[f64], n: usize) -> Result<Vec<f64>, String> {
+    assert_eq!(a.len(), n * n);
+    let mut l = vec![0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[i * n + j];
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return Err(format!("not positive definite at pivot {i} ({sum})"));
+                }
+                l[i * n + j] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Inverse of an SPD matrix via Cholesky: A⁻¹ = L⁻ᵀ·L⁻¹.
+pub fn spd_inverse(a: &[f64], n: usize) -> Result<Vec<f64>, String> {
+    let l = cholesky(a, n)?;
+    // Invert L (lower triangular) by forward substitution.
+    let mut linv = vec![0f64; n * n];
+    for i in 0..n {
+        linv[i * n + i] = 1.0 / l[i * n + i];
+        for j in 0..i {
+            let mut sum = 0.0;
+            for k in j..i {
+                sum += l[i * n + k] * linv[k * n + j];
+            }
+            linv[i * n + j] = -sum / l[i * n + i];
+        }
+    }
+    // A⁻¹ = Linvᵀ · Linv.
+    let mut inv = vec![0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = 0.0;
+            for k in i.max(j)..n {
+                sum += linv[k * n + i] * linv[k * n + j];
+            }
+            inv[i * n + j] = sum;
+            inv[j * n + i] = sum;
+        }
+    }
+    Ok(inv)
+}
+
+/// Upper-triangular Cholesky of the *inverse*: returns U with
+/// A⁻¹ = Uᵀ·U ordered so that GPTQ can walk columns left→right.
+/// (This is the `cholesky(inv(H), upper=True)` of the GPTQ reference.)
+pub fn cholesky_inverse_upper(a: &[f64], n: usize) -> Result<Vec<f64>, String> {
+    let inv = spd_inverse(a, n)?;
+    // A⁻¹ = L·Lᵀ = Uᵀ·U with U = Lᵀ upper-triangular.
+    let l = cholesky(&inv, n)?;
+    let mut u = vec![0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            u[j * n + i] = l[i * n + j];
+        }
+    }
+    Ok(u)
+}
+
+/// Cyclic Jacobi eigendecomposition of a symmetric matrix (f64 n×n).
+/// Returns (eigenvalues desc, eigenvectors as rows matching order).
+pub fn jacobi_eigh(a: &[f64], n: usize, max_sweeps: usize) -> (Vec<f64>, Vec<f64>) {
+    assert_eq!(a.len(), n * n);
+    let mut m = a.to_vec();
+    // V starts as identity; rows of V end up as eigenvectors.
+    let mut v = vec![0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    for _ in 0..max_sweeps {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[i * n + j] * m[i * n + j];
+            }
+        }
+        if off < 1e-22 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[p * n + q];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[p * n + p];
+                let aqq = m[q * n + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Rotate rows/cols p and q.
+                for k in 0..n {
+                    let mkp = m[k * n + p];
+                    let mkq = m[k * n + q];
+                    m[k * n + p] = c * mkp - s * mkq;
+                    m[k * n + q] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[p * n + k];
+                    let mqk = m[q * n + k];
+                    m[p * n + k] = c * mpk - s * mqk;
+                    m[q * n + k] = s * mpk + c * mqk;
+                }
+                for k in 0..n {
+                    let vpk = v[p * n + k];
+                    let vqk = v[q * n + k];
+                    v[p * n + k] = c * vpk - s * vqk;
+                    v[q * n + k] = s * vpk + c * vqk;
+                }
+            }
+        }
+    }
+    let mut eig: Vec<(f64, usize)> = (0..n).map(|i| (m[i * n + i], i)).collect();
+    eig.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let vals: Vec<f64> = eig.iter().map(|&(l, _)| l).collect();
+    let mut vecs = vec![0f64; n * n];
+    for (r, &(_, src)) in eig.iter().enumerate() {
+        vecs[r * n..(r + 1) * n].copy_from_slice(&v[src * n..(src + 1) * n]);
+    }
+    (vals, vecs)
+}
+
+/// Dot product with f64 accumulation.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        acc += x as f64 * y as f64;
+    }
+    acc
+}
+
+/// Frobenius norm squared.
+pub fn frob2(a: &[f32]) -> f64 {
+    a.iter().map(|&x| (x as f64) * (x as f64)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive_matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0f32;
+                for kk in 0..k {
+                    s += a[i * k + kk] * b[kk * n + j];
+                }
+                c[i * n + j] = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(1);
+        for &(m, k, n) in &[(3usize, 4usize, 5usize), (17, 9, 13), (32, 32, 32), (1, 7, 1)] {
+            let mut a = vec![0f32; m * k];
+            let mut b = vec![0f32; k * n];
+            rng.fill_gauss(&mut a, 0.0, 1.0);
+            rng.fill_gauss(&mut b, 0.0, 1.0);
+            let c1 = matmul(&a, &b, m, k, n);
+            let c2 = naive_matmul(&a, &b, m, k, n);
+            for (x, y) in c1.iter().zip(&c2) {
+                assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(2);
+        let (m, n) = (37, 53);
+        let mut a = vec![0f32; m * n];
+        rng.fill_gauss(&mut a, 0.0, 1.0);
+        let t = transpose(&a, m, n);
+        let back = transpose(&t, n, m);
+        assert_eq!(a, back);
+    }
+
+    #[test]
+    fn gram_is_ata() {
+        let mut rng = Rng::new(3);
+        let (m, n) = (20, 8);
+        let mut a = vec![0f32; m * n];
+        rng.fill_gauss(&mut a, 0.0, 1.0);
+        let g = gram(&a, m, n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0f64;
+                for r in 0..m {
+                    s += a[r * n + i] as f64 * a[r * n + j] as f64;
+                }
+                assert!((g[i * n + j] - s).abs() < 1e-6);
+            }
+        }
+    }
+
+    fn random_spd(rng: &mut Rng, n: usize) -> Vec<f64> {
+        let mut b = vec![0f32; n * n];
+        rng.fill_gauss(&mut b, 0.0, 1.0);
+        let mut a = vec![0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0f64;
+                for k in 0..n {
+                    s += b[i * n + k] as f64 * b[j * n + k] as f64;
+                }
+                a[i * n + j] = s + if i == j { n as f64 } else { 0.0 };
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Rng::new(4);
+        let n = 12;
+        let a = random_spd(&mut rng, n);
+        let l = cholesky(&a, n).unwrap();
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0f64;
+                for k in 0..n {
+                    s += l[i * n + k] * l[j * n + k];
+                }
+                assert!((s - a[i * n + j]).abs() < 1e-8, "at ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn spd_inverse_is_inverse() {
+        let mut rng = Rng::new(5);
+        let n = 10;
+        let a = random_spd(&mut rng, n);
+        let inv = spd_inverse(&a, n).unwrap();
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0f64;
+                for k in 0..n {
+                    s += a[i * n + k] * inv[k * n + j];
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((s - want).abs() < 1e-7, "A·A⁻¹ at ({i},{j}) = {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_inverse_upper_reconstructs() {
+        let mut rng = Rng::new(6);
+        let n = 9;
+        let a = random_spd(&mut rng, n);
+        let u = cholesky_inverse_upper(&a, n).unwrap();
+        let inv = spd_inverse(&a, n).unwrap();
+        // Uᵀ·U must equal A⁻¹, with U upper-triangular.
+        for i in 0..n {
+            for j in 0..i {
+                assert_eq!(u[i * n + j], 0.0, "not upper triangular at ({i},{j})");
+            }
+        }
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0f64;
+                for k in 0..n {
+                    s += u[k * n + i] * u[k * n + j];
+                }
+                assert!((s - inv[i * n + j]).abs() < 1e-7, "UᵀU at ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = vec![1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        assert!(cholesky(&a, 2).is_err());
+    }
+
+    #[test]
+    fn jacobi_diagonalizes() {
+        let mut rng = Rng::new(7);
+        let n = 8;
+        let a = random_spd(&mut rng, n);
+        let (vals, vecs) = jacobi_eigh(&a, n, 30);
+        // Eigenvalues sorted descending and positive for SPD.
+        for w in vals.windows(2) {
+            assert!(w[0] >= w[1] - 1e-9);
+        }
+        assert!(vals[n - 1] > 0.0);
+        // A·v = λ·v for each eigenpair.
+        for e in 0..n {
+            let v = &vecs[e * n..(e + 1) * n];
+            for i in 0..n {
+                let mut av = 0f64;
+                for j in 0..n {
+                    av += a[i * n + j] * v[j];
+                }
+                assert!((av - vals[e] * v[i]).abs() < 1e-6 * vals[0].max(1.0), "pair {e}");
+            }
+        }
+        // Trace preserved.
+        let tr: f64 = (0..n).map(|i| a[i * n + i]).sum();
+        let sum: f64 = vals.iter().sum();
+        assert!((tr - sum).abs() < 1e-7 * tr.abs().max(1.0));
+    }
+}

@@ -1,0 +1,8 @@
+//! Statistics and numerics substrate: streaming moments, dense linear
+//! algebra (matmul / Cholesky / Jacobi eigensolver), PCA, and the paper's
+//! analytic rate–distortion model.
+
+pub mod distortion;
+pub mod linalg;
+pub mod moments;
+pub mod pca;

@@ -1,0 +1,231 @@
+//! Streaming first/second-moment accumulators: plain running moments,
+//! exponential moving averages (the `(1-α)·old + α·new` updates of
+//! Algorithm 1), and Welford online variance.
+
+/// Exponential moving average of a scalar, as used by Algorithm 1 for
+/// the gradient variances `G²` and the dual-ascent state.
+#[derive(Clone, Copy, Debug)]
+pub struct Ema {
+    pub alpha: f64,
+    value: f64,
+    initialized: bool,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Self {
+        Self { alpha, value: 0.0, initialized: false }
+    }
+
+    /// Update with a new observation. The first observation initializes
+    /// the EMA directly (avoids the zero-bias of a cold start).
+    pub fn update(&mut self, x: f64) -> f64 {
+        if self.initialized {
+            self.value = (1.0 - self.alpha) * self.value + self.alpha * x;
+        } else {
+            self.value = x;
+            self.initialized = true;
+        }
+        self.value
+    }
+
+    pub fn get(&self) -> f64 {
+        self.value
+    }
+
+    pub fn is_initialized(&self) -> bool {
+        self.initialized
+    }
+}
+
+/// EMA over a vector (e.g. the running layer-input means `X̄_n`).
+#[derive(Clone, Debug)]
+pub struct EmaVec {
+    pub alpha: f64,
+    values: Vec<f64>,
+    initialized: bool,
+}
+
+impl EmaVec {
+    pub fn new(dim: usize, alpha: f64) -> Self {
+        Self { alpha, values: vec![0.0; dim], initialized: false }
+    }
+
+    pub fn update(&mut self, xs: &[f32]) {
+        assert_eq!(xs.len(), self.values.len());
+        if self.initialized {
+            for (v, &x) in self.values.iter_mut().zip(xs) {
+                *v = (1.0 - self.alpha) * *v + self.alpha * x as f64;
+            }
+        } else {
+            for (v, &x) in self.values.iter_mut().zip(xs) {
+                *v = x as f64;
+            }
+            self.initialized = true;
+        }
+    }
+
+    pub fn get(&self) -> &[f64] {
+        &self.values
+    }
+
+    pub fn get_f32(&self) -> Vec<f32> {
+        self.values.iter().map(|&v| v as f32).collect()
+    }
+
+    pub fn is_initialized(&self) -> bool {
+        self.initialized
+    }
+}
+
+/// Welford's online mean/variance.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Mean of an f32 slice (f64 accumulation).
+pub fn mean(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance of an f32 slice around its mean.
+pub fn variance(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / xs.len() as f64
+}
+
+/// Mean of squares (used for gradient "variances" G² which in the paper
+/// are uncentered second moments of the Jacobian entries).
+pub fn mean_square(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() / xs.len() as f64
+}
+
+/// Excess-kurtosis-based distribution classifier: returns the companding
+/// coefficient H (Gersho & Gray): 1.42 for ~Gaussian weights, 0.72·√3≈
+/// table values for Laplace. We expose the two H constants the paper cites.
+pub const H_GAUSS: f64 = 1.42;
+pub const H_LAPLACE: f64 = 0.72;
+
+/// Classify a weight slice as Gaussian-like or Laplace-like by kurtosis
+/// and return the matching quantization coefficient `H`.
+pub fn h_coefficient(xs: &[f32]) -> f64 {
+    if xs.len() < 16 {
+        return H_GAUSS;
+    }
+    let m = mean(xs);
+    let v = variance(xs).max(1e-30);
+    let k = xs
+        .iter()
+        .map(|&x| (x as f64 - m).powi(4))
+        .sum::<f64>()
+        / xs.len() as f64
+        / (v * v);
+    // Gaussian kurtosis 3, Laplace 6; split at the midpoint.
+    if k > 4.5 {
+        H_LAPLACE
+    } else {
+        H_GAUSS
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn ema_first_update_initializes() {
+        let mut e = Ema::new(0.1);
+        assert_eq!(e.update(5.0), 5.0);
+        let v = e.update(10.0);
+        assert!((v - (0.9 * 5.0 + 0.1 * 10.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ema_converges_to_constant() {
+        let mut e = Ema::new(0.2);
+        for _ in 0..200 {
+            e.update(3.0);
+        }
+        assert!((e.get() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ema_vec_tracks_means() {
+        let mut e = EmaVec::new(3, 0.5);
+        e.update(&[1.0, 2.0, 3.0]);
+        e.update(&[3.0, 2.0, 1.0]);
+        let v = e.get();
+        assert!((v[0] - 2.0).abs() < 1e-9);
+        assert!((v[1] - 2.0).abs() < 1e-9);
+        assert!((v[2] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn welford_matches_direct() {
+        let mut rng = Rng::new(1);
+        let xs: Vec<f32> = (0..1000).map(|_| rng.normal(2.0, 3.0) as f32).collect();
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x as f64);
+        }
+        assert!((w.mean() - mean(&xs)).abs() < 1e-9);
+        assert!((w.variance() - variance(&xs)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn h_coefficient_separates_distributions() {
+        let mut rng = Rng::new(2);
+        let mut g = vec![0f32; 50_000];
+        let mut l = vec![0f32; 50_000];
+        rng.fill_gauss(&mut g, 0.0, 1.0);
+        rng.fill_laplace(&mut l, 0.0, 1.0);
+        assert_eq!(h_coefficient(&g), H_GAUSS);
+        assert_eq!(h_coefficient(&l), H_LAPLACE);
+    }
+}

@@ -1,0 +1,141 @@
+//! PCA of model outputs along the embedding dimension (Algorithm 1's
+//! `U ← pca_basis({X})`). We build the E×E Gram matrix of (centered)
+//! output embeddings and take the top-K eigenvectors with the Jacobi
+//! solver. E is small in our models (≤512), so the dense path is cheap.
+
+use crate::stats::linalg::{gram, jacobi_eigh};
+
+/// The PCA projection basis: `basis` holds K rows of dimension E
+/// (orthonormal, descending eigenvalue order) plus the captured
+/// eigenvalue spectrum for diagnostics.
+#[derive(Clone, Debug)]
+pub struct PcaBasis {
+    pub dim: usize,
+    pub k: usize,
+    /// Row-major K×E.
+    pub basis: Vec<f32>,
+    pub eigenvalues: Vec<f64>,
+}
+
+impl PcaBasis {
+    /// Fit from `rows` samples of dimension `dim` (row-major), keeping the
+    /// top-`k` components. Columns are mean-centered first.
+    pub fn fit(data: &[f32], rows: usize, dim: usize, k: usize) -> PcaBasis {
+        assert_eq!(data.len(), rows * dim);
+        assert!(rows > 0 && k > 0);
+        let k = k.min(dim);
+        // Center.
+        let mut mu = vec![0f64; dim];
+        for r in 0..rows {
+            for (j, m) in mu.iter_mut().enumerate() {
+                *m += data[r * dim + j] as f64;
+            }
+        }
+        for m in mu.iter_mut() {
+            *m /= rows as f64;
+        }
+        let mut centered = vec![0f32; rows * dim];
+        for r in 0..rows {
+            for j in 0..dim {
+                centered[r * dim + j] = data[r * dim + j] - mu[j] as f32;
+            }
+        }
+        let mut g = gram(&centered, rows, dim);
+        for v in g.iter_mut() {
+            *v /= rows as f64;
+        }
+        let (vals, vecs) = jacobi_eigh(&g, dim, 40);
+        let mut basis = vec![0f32; k * dim];
+        for c in 0..k {
+            for j in 0..dim {
+                basis[c * dim + j] = vecs[c * dim + j] as f32;
+            }
+        }
+        PcaBasis { dim, k, basis, eigenvalues: vals }
+    }
+
+    /// The `i`-th principal direction (length E).
+    pub fn component(&self, i: usize) -> &[f32] {
+        &self.basis[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Fraction of variance captured by the kept components.
+    pub fn explained_fraction(&self) -> f64 {
+        let total: f64 = self.eigenvalues.iter().map(|v| v.max(0.0)).sum();
+        if total <= 0.0 {
+            return 1.0;
+        }
+        let kept: f64 = self.eigenvalues[..self.k].iter().map(|v| v.max(0.0)).sum();
+        kept / total
+    }
+
+    /// An identity "PCA" (axis-aligned basis) for ablations.
+    pub fn identity(dim: usize, k: usize) -> PcaBasis {
+        let k = k.min(dim);
+        let mut basis = vec![0f32; k * dim];
+        for i in 0..k {
+            basis[i * dim + i] = 1.0;
+        }
+        PcaBasis { dim, k, basis, eigenvalues: vec![1.0; dim] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn recovers_dominant_direction() {
+        // Data = strong variance along a known direction + small noise.
+        let dim = 6;
+        let rows = 500;
+        let dir: Vec<f32> = {
+            let raw = [1.0f32, -2.0, 0.5, 3.0, -1.0, 0.25];
+            let norm = raw.iter().map(|x| x * x).sum::<f32>().sqrt();
+            raw.iter().map(|x| x / norm).collect()
+        };
+        let mut rng = Rng::new(8);
+        let mut data = vec![0f32; rows * dim];
+        for r in 0..rows {
+            let t = rng.normal(0.0, 5.0) as f32;
+            for j in 0..dim {
+                data[r * dim + j] = t * dir[j] + rng.normal(0.0, 0.05) as f32;
+            }
+        }
+        let pca = PcaBasis::fit(&data, rows, dim, 2);
+        let c0 = pca.component(0);
+        let cosine: f32 = c0.iter().zip(&dir).map(|(a, b)| a * b).sum();
+        assert!(cosine.abs() > 0.99, "cosine {cosine}");
+        assert!(pca.eigenvalues[0] > 10.0 * pca.eigenvalues[1]);
+        assert!(pca.explained_fraction() > 0.95);
+    }
+
+    #[test]
+    fn basis_is_orthonormal() {
+        let mut rng = Rng::new(9);
+        let (rows, dim, k) = (200, 8, 4);
+        let mut data = vec![0f32; rows * dim];
+        rng.fill_gauss(&mut data, 0.0, 1.0);
+        let pca = PcaBasis::fit(&data, rows, dim, k);
+        for i in 0..k {
+            for j in 0..k {
+                let d: f32 = pca
+                    .component(i)
+                    .iter()
+                    .zip(pca.component(j))
+                    .map(|(a, b)| a * b)
+                    .sum();
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((d - want).abs() < 1e-4, "({i},{j}) dot {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn identity_basis() {
+        let p = PcaBasis::identity(5, 3);
+        assert_eq!(p.component(1)[1], 1.0);
+        assert_eq!(p.component(1)[0], 0.0);
+    }
+}

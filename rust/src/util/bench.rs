@@ -1,0 +1,211 @@
+//! Micro-benchmark harness (no criterion in the offline registry).
+//!
+//! Benches (`harness = false` binaries under rust/benches/) use
+//! [`Bench::run`] to time closures with warmup, report median / p10 / p90,
+//! and print table rows shaped like the paper's tables. A `black_box`
+//! shim prevents the optimizer from deleting benchmarked work.
+
+use std::time::{Duration, Instant};
+
+/// Optimizer barrier (stable-Rust `std::hint::black_box`).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+    pub mean: Duration,
+}
+
+impl BenchStats {
+    pub fn median_secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<40} median {:>10.3?}  p10 {:>10.3?}  p90 {:>10.3?}  ({} iters)",
+            self.name, self.median, self.p10, self.p90, self.iters
+        )
+    }
+}
+
+/// Timing configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    /// Stop once total measured time exceeds this budget.
+    pub time_budget: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 2,
+            min_iters: 5,
+            max_iters: 200,
+            time_budget: Duration::from_secs(2),
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Self {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 30,
+            time_budget: Duration::from_millis(500),
+        }
+    }
+
+    /// Time `f`, returning robust statistics.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchStats {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples: Vec<Duration> = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_iters
+            || (samples.len() < self.max_iters && start.elapsed() < self.time_budget)
+        {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+        }
+        samples.sort_unstable();
+        let n = samples.len();
+        let pick = |q: f64| samples[((n - 1) as f64 * q).round() as usize];
+        let mean = samples.iter().sum::<Duration>() / n as u32;
+        BenchStats {
+            name: name.to_string(),
+            iters: n,
+            median: pick(0.5),
+            p10: pick(0.1),
+            p90: pick(0.9),
+            mean,
+        }
+    }
+}
+
+/// Simple fixed-width table printer used by the bench binaries to emit
+/// paper-shaped rows.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let ncol = self.headers.len();
+        let mut widths = vec![0usize; ncol];
+        for (i, h) in self.headers.iter().enumerate() {
+            widths[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |sep: &str| {
+            widths
+                .iter()
+                .map(|w| "-".repeat(w + 2))
+                .collect::<Vec<_>>()
+                .join(sep)
+        };
+        println!("+{}+", line("+"));
+        let hdr: Vec<String> = self
+            .headers
+            .iter()
+            .enumerate()
+            .map(|(i, h)| format!(" {:<w$} ", h, w = widths[i]))
+            .collect();
+        println!("|{}|", hdr.join("|"));
+        println!("+{}+", line("+"));
+        for row in &self.rows {
+            let cells: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!(" {:<w$} ", c, w = widths[i]))
+                .collect();
+            println!("|{}|", cells.join("|"));
+        }
+        println!("+{}+", line("+"));
+    }
+
+    /// Render as a markdown table (for results/*.md reports).
+    pub fn to_markdown(&self) -> String {
+        let mut s = String::new();
+        s.push_str("| ");
+        s.push_str(&self.headers.join(" | "));
+        s.push_str(" |\n|");
+        for _ in &self.headers {
+            s.push_str("---|");
+        }
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str("| ");
+            s.push_str(&row.join(" | "));
+            s.push_str(" |\n");
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_positive_time() {
+        let stats = Bench::quick().run("spin", || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = black_box(x.wrapping_add(i));
+            }
+        });
+        assert!(stats.median > Duration::ZERO);
+        assert!(stats.iters >= 3);
+        assert!(stats.p10 <= stats.median && stats.median <= stats.p90);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new(&["model", "ppl"]);
+        t.row(vec!["ropt-small".into(), "12.34".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("ropt-small"));
+        assert!(md.contains("| model | ppl |"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

@@ -1,0 +1,113 @@
+//! Seeded property-testing helper ("proptest-lite": the offline registry
+//! carries no proptest). Runs a property over many pseudo-random cases;
+//! on failure it retries with progressively "smaller" generation sizes to
+//! give a simpler counterexample, and always reports the failing seed so
+//! a case can be replayed deterministically.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Checker {
+    pub cases: usize,
+    pub seed: u64,
+    /// Maximum "size" hint passed to generators (e.g. max vector length).
+    pub max_size: usize,
+}
+
+impl Default for Checker {
+    fn default() -> Self {
+        Self { cases: 64, seed: 0xC0FFEE, max_size: 256 }
+    }
+}
+
+impl Checker {
+    pub fn new(cases: usize, seed: u64) -> Self {
+        Self { cases, seed, max_size: 256 }
+    }
+
+    /// Run `prop(rng, size)` for `cases` random cases. `size` ramps up from
+    /// small to `max_size` so early failures are small. Panics with the
+    /// failing seed/size on the first property violation.
+    pub fn run<F>(&self, name: &str, mut prop: F)
+    where
+        F: FnMut(&mut Rng, usize) -> Result<(), String>,
+    {
+        for case in 0..self.cases {
+            // Ramp size: first cases are tiny, later cases large.
+            let size = 1 + (self.max_size - 1) * case / self.cases.max(1);
+            let case_seed = self
+                .seed
+                .wrapping_add((case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            let mut rng = Rng::new(case_seed);
+            if let Err(msg) = prop(&mut rng, size) {
+                // Attempt a smaller repro: rerun the same seed at smaller sizes.
+                let mut minimal: Option<(usize, String)> = None;
+                for s in 1..size {
+                    let mut r2 = Rng::new(case_seed);
+                    if let Err(m) = prop(&mut r2, s) {
+                        minimal = Some((s, m));
+                        break;
+                    }
+                }
+                let (fsize, fmsg) = minimal.unwrap_or((size, msg));
+                panic!(
+                    "property `{name}` failed (case {case}, seed {case_seed:#x}, size {fsize}): {fmsg}"
+                );
+            }
+        }
+    }
+}
+
+/// Assert helper producing `Result` for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err(format!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        Checker::new(32, 1).run("trivially-true", |_, _| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `fails-on-big`")]
+    fn failing_property_reports_seed() {
+        Checker::new(32, 2).run("fails-on-big", |_, size| {
+            if size > 10 {
+                Err("too big".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn shrink_finds_smaller_size() {
+        let result = std::panic::catch_unwind(|| {
+            Checker::new(16, 3).run("gt5", |_, size| {
+                if size > 5 {
+                    Err("size>5".into())
+                } else {
+                    Ok(())
+                }
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // The shrinker should find size 6, the minimal failing size.
+        assert!(msg.contains("size 6"), "got: {msg}");
+    }
+}

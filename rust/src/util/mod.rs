@@ -1,0 +1,12 @@
+//! Self-built substrates: the offline crate registry only carries the
+//! `xla` crate's dependency closure, so the pieces a production system
+//! would normally pull from crates.io (PRNG, JSON, CLI, thread pool,
+//! logging, bench harness, property testing) live here.
+
+pub mod bench;
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod threadpool;

@@ -1,0 +1,338 @@
+//! Deterministic pseudo-random number generation and samplers.
+//!
+//! The offline crate registry carries no `rand` crate, so we implement the
+//! generators we need: SplitMix64 (seeding), xoshiro256++ (bulk), and
+//! samplers for uniform, Gaussian (Box–Muller), Laplace (inverse CDF),
+//! Zipf–Mandelbrot (alias-free CDF inversion) and categorical draws.
+
+/// SplitMix64: used to expand a single `u64` seed into xoshiro state.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256++ — fast, high-quality 64-bit generator.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second Box–Muller variate.
+    gauss_spare: Option<f64>,
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed (SplitMix64-expanded).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let s = [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()];
+        Self { s, gauss_spare: None }
+    }
+
+    /// Derive an independent stream for worker `i` (e.g. per-thread RNGs).
+    pub fn fork(&mut self, i: u64) -> Rng {
+        Rng::new(self.next_u64() ^ i.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = (self.s[0].wrapping_add(self.s[3]))
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn uniform_f32(&mut self) -> f32 {
+        self.uniform() as f32
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire-style rejection-free multiply-shift is fine for our sizes.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn gauss(&mut self) -> f64 {
+        if let Some(v) = self.gauss_spare.take() {
+            return v;
+        }
+        loop {
+            let u1 = self.uniform();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.uniform();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+            self.gauss_spare = Some(r * s);
+            return r * c;
+        }
+    }
+
+    /// Normal with mean/std.
+    #[inline]
+    pub fn normal(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.gauss()
+    }
+
+    /// Laplace with mean `mu` and standard deviation `s`
+    /// (scale b = s / sqrt(2)), by inverse-CDF.
+    pub fn laplace(&mut self, mu: f64, s: f64) -> f64 {
+        let b = s / std::f64::consts::SQRT_2;
+        let u = self.uniform() - 0.5;
+        mu - b * u.signum() * (1.0 - 2.0 * u.abs()).ln().max(f64::MIN) // ln(1-2|u|) <= 0
+    }
+
+    /// Fill a slice with N(0, std²) f32 samples.
+    pub fn fill_gauss(&mut self, out: &mut [f32], mean: f32, std: f32) {
+        for v in out.iter_mut() {
+            *v = self.normal(mean as f64, std as f64) as f32;
+        }
+    }
+
+    /// Fill a slice with Laplace(mu, s) f32 samples.
+    pub fn fill_laplace(&mut self, out: &mut [f32], mu: f32, s: f32) {
+        for v in out.iter_mut() {
+            *v = self.laplace(mu as f64, s as f64) as f32;
+        }
+    }
+
+    /// Random ±1 vector (Rademacher), used for token-subsampling sketches.
+    pub fn fill_sign(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = if self.next_u64() & 1 == 0 { 1.0 } else { -1.0 };
+        }
+    }
+
+    /// Sample an index from unnormalized non-negative weights.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        debug_assert!(total > 0.0);
+        let mut x = self.uniform() * total;
+        for (i, w) in weights.iter().enumerate() {
+            x -= w;
+            if x <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// `k` distinct indices from [0, n) (partial shuffle).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let k = k.min(n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+/// Zipf–Mandelbrot sampler over {0, .., n-1}: p(k) ∝ 1/(k + q)^s.
+/// Precomputes the CDF; used by the synthetic corpus generator.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64, q: f64) -> Self {
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 0..n {
+            acc += 1.0 / (k as f64 + 1.0 + q).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for v in cdf.iter_mut() {
+            *v /= total;
+        }
+        Self { cdf }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.uniform();
+        // Binary search the CDF.
+        match self
+            .cdf
+            .binary_search_by(|p| p.partial_cmp(&u).unwrap())
+        {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut rng = Rng::new(7);
+        for _ in 0..10_000 {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut rng = Rng::new(3);
+        for n in [1usize, 2, 7, 100] {
+            for _ in 0..1000 {
+                assert!(rng.below(n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn gauss_moments() {
+        let mut rng = Rng::new(11);
+        let n = 200_000;
+        let (mut m, mut m2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.gauss();
+            m += x;
+            m2 += x * x;
+        }
+        m /= n as f64;
+        m2 /= n as f64;
+        assert!(m.abs() < 0.02, "mean {m}");
+        assert!((m2 - 1.0).abs() < 0.03, "var {m2}");
+    }
+
+    #[test]
+    fn laplace_moments() {
+        let mut rng = Rng::new(13);
+        let n = 200_000;
+        let (mu, s) = (0.5, 2.0);
+        let (mut m, mut m2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.laplace(mu, s);
+            m += x;
+            m2 += (x - mu) * (x - mu);
+        }
+        m /= n as f64;
+        m2 /= n as f64;
+        assert!((m - mu).abs() < 0.05, "mean {m}");
+        assert!((m2 - s * s).abs() < 0.2, "var {m2}");
+    }
+
+    #[test]
+    fn laplace_kurtosis_exceeds_gaussian() {
+        // Laplace excess kurtosis = 3; Gaussian = 0. Sanity for the
+        // distribution-fitting code downstream.
+        let mut rng = Rng::new(17);
+        let n = 100_000;
+        let mut kurt = |f: &mut dyn FnMut(&mut Rng) -> f64| {
+            let xs: Vec<f64> = (0..n).map(|_| f(&mut rng)).collect();
+            let m = xs.iter().sum::<f64>() / n as f64;
+            let v = xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / n as f64;
+            xs.iter().map(|x| (x - m).powi(4)).sum::<f64>() / n as f64 / (v * v)
+        };
+        let kg = kurt(&mut |r| r.gauss());
+        let kl = kurt(&mut |r| r.laplace(0.0, 1.0));
+        assert!(kg < 3.5, "gaussian kurtosis {kg}");
+        assert!(kl > 4.5, "laplace kurtosis {kl}");
+    }
+
+    #[test]
+    fn zipf_is_monotone_decreasing() {
+        let z = Zipf::new(50, 1.1, 2.0);
+        let mut rng = Rng::new(5);
+        let mut counts = vec![0usize; 50];
+        for _ in 0..100_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        assert!(counts[0] > counts[10]);
+        assert!(counts[10] > counts[40]);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Rng::new(9);
+        let mut xs: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut rng = Rng::new(21);
+        let idx = rng.sample_indices(100, 30);
+        assert_eq!(idx.len(), 30);
+        let mut s = idx.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 30);
+    }
+}

@@ -1,0 +1,157 @@
+//! A small scoped data-parallel helper (no rayon in the offline registry).
+//!
+//! `parallel_for_chunks` splits an index range into contiguous chunks and
+//! runs a closure per chunk on `std::thread::scope` threads. Thread count
+//! defaults to available parallelism and is tunable via `RADIO_THREADS`.
+//! This is deliberately fork-join (no persistent pool): our hot loops are
+//! coarse-grained (whole matrix rows), so spawn overhead is negligible
+//! relative to work, and scoped borrows keep the API safe without `Arc`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use.
+pub fn num_threads() -> usize {
+    if let Ok(s) = std::env::var("RADIO_THREADS") {
+        if let Ok(n) = s.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Run `f(start, end)` over disjoint chunks covering `0..n` in parallel.
+/// `f` must be `Sync` (called concurrently with disjoint ranges).
+pub fn parallel_for_chunks<F>(n: usize, min_chunk: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let threads = num_threads();
+    if n == 0 {
+        return;
+    }
+    if threads <= 1 || n <= min_chunk {
+        f(0, n);
+        return;
+    }
+    let chunks = threads.min(n.div_ceil(min_chunk.max(1)));
+    let chunk = n.div_ceil(chunks);
+    std::thread::scope(|s| {
+        for c in 0..chunks {
+            let start = c * chunk;
+            let end = ((c + 1) * chunk).min(n);
+            if start >= end {
+                break;
+            }
+            let fref = &f;
+            s.spawn(move || fref(start, end));
+        }
+    });
+}
+
+/// Dynamic work-stealing variant: workers grab `grain`-sized blocks off a
+/// shared counter. Better when per-item cost is highly skewed (e.g. GPTQ
+/// columns, mixed-depth matvec rows).
+pub fn parallel_for_dynamic<F>(n: usize, grain: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let threads = num_threads();
+    if n == 0 {
+        return;
+    }
+    if threads <= 1 || n <= grain {
+        f(0, n);
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let next = &next;
+            let fref = &f;
+            s.spawn(move || loop {
+                let start = next.fetch_add(grain, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                fref(start, (start + grain).min(n));
+            });
+        }
+    });
+}
+
+/// Map each index to a value in parallel, preserving order.
+pub fn parallel_map<T, F>(n: usize, min_chunk: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    {
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        parallel_for_chunks(n, min_chunk, |start, end| {
+            let p = out_ptr; // copy the Send wrapper into the closure
+            for i in start..end {
+                // SAFETY: chunks are disjoint, so each index is written once
+                // by exactly one thread; the Vec outlives the scope.
+                unsafe { *p.0.add(i) = f(i) };
+            }
+        });
+    }
+    out
+}
+
+struct SendPtr<T>(*mut T);
+// Manual impls: `derive` would wrongly require `T: Copy`.
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn covers_all_indices_once() {
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        parallel_for_chunks(1000, 10, |s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn dynamic_covers_all_indices_once() {
+        let hits: Vec<AtomicU64> = (0..777).map(|_| AtomicU64::new(0)).collect();
+        parallel_for_dynamic(777, 13, |s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let v = parallel_map(500, 7, |i| i * i);
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i * i);
+        }
+    }
+
+    #[test]
+    fn empty_range_ok() {
+        parallel_for_chunks(0, 1, |_, _| panic!("should not run"));
+        let v: Vec<usize> = parallel_map(0, 1, |i| i);
+        assert!(v.is_empty());
+    }
+}

@@ -1,0 +1,152 @@
+//! End-to-end integration over the native substrate: train a tiny model,
+//! quantize with every method, check the paper's qualitative ordering and
+//! the engine/serving path. (Slower than unit tests but minutes-scale.)
+
+use radio::coordinator::gradients::NativeProvider;
+use radio::coordinator::pipeline::{run_method, rtn_quantize_model, Method};
+use radio::coordinator::{Radio, RadioConfig};
+use radio::eval::perplexity;
+use radio::infer::{serve, Engine, Request};
+use radio::model::corpus::{Corpus, Domain};
+use radio::model::train::{train, TrainConfig};
+use radio::model::weights::Weights;
+use radio::model::ModelConfig;
+use radio::quant::format::QuantizedModel;
+use radio::util::rng::Rng;
+
+fn trained_tiny() -> (Weights, Corpus, Corpus) {
+    let cfg = ModelConfig { vocab: 256, dim: 48, heads: 4, layers: 2, mlp: 96, max_seq: 48 };
+    let corpus = Corpus::synthetic(0x17E5, Domain::Calib, 96 * 1024);
+    let (train_split, _, test) = corpus.split();
+    let mut rng = Rng::new(0x7E57);
+    let mut w = Weights::init_training(cfg, &mut rng);
+    let tcfg = TrainConfig { steps: 120, batch: 6, seq: 48, log_every: 0, ..Default::default() };
+    train(&mut w, &train_split, &tcfg, 0xAB);
+    (w, train_split, test)
+}
+
+#[test]
+fn full_pipeline_ordering_and_serving() {
+    let (w, calib, test) = trained_tiny();
+    let ppl_fp = perplexity(&w, &test, 48, 16);
+    assert!(ppl_fp < 60.0, "training failed: fp ppl {ppl_fp}");
+
+    // RTN at 2 bits (coarse) vs Radio at 2 bits: Radio must win clearly.
+    let rtn = rtn_quantize_model(&w, 2, 16);
+    let ppl_rtn = perplexity(&rtn.to_weights(), &test, 48, 16);
+    let mut provider = NativeProvider;
+    let radio_cfg = RadioConfig {
+        target_bits: 2.0,
+        rows_per_group: 16,
+        batch: 4,
+        seq: 48,
+        tokens_per_seq: 9,
+        iters: 8,
+        pca_k: 4,
+        ..Default::default()
+    };
+    let (qm, report) = Radio::new(radio_cfg).quantize(&w, &calib, &mut provider, None);
+    let ppl_radio = perplexity(&qm.to_weights(), &test, 48, 16);
+    assert!((qm.avg_bits() - 2.0).abs() < 0.05, "rate {}", qm.avg_bits());
+    assert!(
+        ppl_radio < ppl_rtn,
+        "Radio ({ppl_radio:.2}) must beat RTN ({ppl_rtn:.2}) at 2 bits; FP {ppl_fp:.2}"
+    );
+    assert!(report.final_rate > 1.9);
+
+    // GPTQ must also beat RTN at the same depth.
+    let gptq = run_method(
+        &Method::Gptq(radio::baselines::gptq::GptqConfig {
+            bits: 2,
+            rows_per_group: 16,
+            calib_batches: 2,
+            batch: 4,
+            seq: 48,
+            ..Default::default()
+        }),
+        &w,
+        &calib,
+        &mut provider,
+    );
+    let ppl_gptq = perplexity(&gptq.model.to_weights(), &test, 48, 16);
+    assert!(
+        ppl_gptq < ppl_rtn,
+        "GPTQ ({ppl_gptq:.2}) must beat RTN ({ppl_rtn:.2})"
+    );
+
+    // Save/load roundtrip of the quantized model, then serve through the
+    // packed engine.
+    let path = std::env::temp_dir().join("radio_integration.radio");
+    qm.save(&path).unwrap();
+    let loaded = QuantizedModel::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    let engine = Engine::from_quantized(&loaded);
+    let reqs: Vec<Request> = (0..6)
+        .map(|id| Request { id, prompt: vec![b'a' as u32, b' ' as u32], max_new: 8 })
+        .collect();
+    let (resps, stats) = serve(&engine, reqs, 3);
+    assert_eq!(resps.len(), 6);
+    assert_eq!(stats.completed, 6);
+    assert!(stats.total_tokens > 0);
+}
+
+#[test]
+fn radio_rate_flexibility_monotone_distortion() {
+    // Higher rate ⇒ no worse perplexity (monotone RD curve, modulo noise).
+    let (w, calib, test) = trained_tiny();
+    let mut provider = NativeProvider;
+    let mut ppls = Vec::new();
+    for bits in [2.0, 4.0, 6.0] {
+        let cfg = RadioConfig {
+            target_bits: bits,
+            rows_per_group: 16,
+            batch: 4,
+            seq: 48,
+            tokens_per_seq: 9,
+            iters: 5,
+            pca_k: 4,
+            ..Default::default()
+        };
+        let (qm, _) = Radio::new(cfg).quantize(&w, &calib, &mut provider, None);
+        ppls.push(perplexity(&qm.to_weights(), &test, 48, 16));
+    }
+    assert!(
+        ppls[0] > ppls[2] - 0.05,
+        "2-bit PPL {} should exceed 6-bit PPL {}",
+        ppls[0],
+        ppls[2]
+    );
+    let ppl_fp = perplexity(&w, &test, 48, 16);
+    assert!(
+        (ppls[2] - ppl_fp).abs() / ppl_fp < 0.02,
+        "6-bit PPL {} should be within 2% of FP {}",
+        ppls[2],
+        ppl_fp
+    );
+}
+
+#[test]
+fn bias_correction_improves_or_matches() {
+    let (w, calib, test) = trained_tiny();
+    let mut provider = NativeProvider;
+    let base = RadioConfig {
+        target_bits: 2.5,
+        rows_per_group: 16,
+        batch: 4,
+        seq: 48,
+        tokens_per_seq: 9,
+        iters: 5,
+        pca_k: 4,
+        ..Default::default()
+    };
+    let (qm_on, _) = Radio::new(base).quantize(&w, &calib, &mut provider, None);
+    let mut off = base;
+    off.bias_correct = false;
+    let (qm_off, _) = Radio::new(off).quantize(&w, &calib, &mut provider, None);
+    let p_on = perplexity(&qm_on.to_weights(), &test, 48, 16);
+    let p_off = perplexity(&qm_off.to_weights(), &test, 48, 16);
+    assert!(
+        p_on <= p_off * 1.03,
+        "bias correction should help or be neutral: on {p_on:.3} vs off {p_off:.3}"
+    );
+}

@@ -1,0 +1,102 @@
+//! Cross-layer integration: the AOT-compiled JAX/Pallas artifacts (L2+L1,
+//! via PJRT) must agree with the native Rust substrate (L3) on forward
+//! logits, loss, and Algorithm 1's gradient samples.
+//!
+//! Requires `make artifacts` (skips with a notice otherwise).
+
+use radio::coordinator::gradients::{GradientProvider, NativeProvider};
+use radio::model::corpus::{Corpus, Domain};
+use radio::model::transformer;
+use radio::model::weights::Weights;
+use radio::runtime::XlaProvider;
+use radio::util::rng::Rng;
+
+fn load_provider() -> Option<XlaProvider> {
+    let dir = XlaProvider::default_dir();
+    if !dir.join("model_config.json").exists() {
+        eprintln!("[skip] artifacts/ not built; run `make artifacts`");
+        return None;
+    }
+    Some(XlaProvider::load(&dir).expect("loading artifacts"))
+}
+
+fn setup(provider: &XlaProvider) -> (Weights, Vec<u32>, Vec<u32>) {
+    let mut rng = Rng::new(0xA0_71);
+    let w = Weights::init_pretrained_like(provider.config, &mut rng);
+    let corpus = Corpus::synthetic(0xC0, Domain::Calib, 64 * 1024);
+    let (toks, tgts) = corpus.sample_batch(&mut rng, provider.batch, provider.seq);
+    (w, toks, tgts)
+}
+
+#[test]
+fn xla_forward_matches_native() {
+    let Some(provider) = load_provider() else { return };
+    let (w, toks, _) = setup(&provider);
+    let logits_xla = provider.forward_logits(&w, &toks).expect("xla forward");
+    let cache = transformer::forward(&w, &toks, provider.batch, provider.seq);
+    let logits_native = transformer::logits(&w, &cache.z);
+    assert_eq!(logits_xla.rows, logits_native.rows);
+    let mut max_rel = 0f64;
+    for (a, b) in logits_xla.data.iter().zip(&logits_native.data) {
+        let rel = ((a - b).abs() / b.abs().max(1.0)) as f64;
+        max_rel = max_rel.max(rel);
+    }
+    assert!(max_rel < 5e-3, "max relative logit difference {max_rel}");
+}
+
+#[test]
+fn xla_loss_matches_native() {
+    let Some(provider) = load_provider() else { return };
+    let (w, toks, tgts) = setup(&provider);
+    let loss_xla = provider.loss(&w, &toks, &tgts).expect("xla loss");
+    let loss_native =
+        transformer::loss_only(&w, &toks, &tgts, provider.batch, provider.seq);
+    assert!(
+        (loss_xla - loss_native).abs() < 5e-3 * loss_native.abs().max(1.0),
+        "xla {loss_xla} vs native {loss_native}"
+    );
+}
+
+#[test]
+fn xla_gradvar_matches_native_backprop() {
+    let Some(mut provider) = load_provider() else { return };
+    let (w, toks, _) = setup(&provider);
+    let mut rng = Rng::new(0x6AD);
+    let mut u = vec![0f32; provider.config.dim];
+    rng.fill_gauss(&mut u, 0.0, 1.0);
+    let mut s = vec![0f32; provider.batch * provider.seq];
+    for i in 0..s.len() {
+        if i % 7 == 0 {
+            s[i] = 1.0;
+        }
+    }
+    let (batch, seq) = (provider.batch, provider.seq);
+    let xla = provider.grad_sample(&w, &toks, batch, seq, &u, &s);
+    let mut native_p = NativeProvider;
+    let native = native_p.grad_sample(&w, &toks, batch, seq, &u, &s);
+
+    assert_eq!(xla.grads.len(), native.grads.len());
+    for ((ida, ga), (idb, gb)) in xla.grads.iter().zip(&native.grads) {
+        assert_eq!(ida, idb);
+        // Relative Frobenius error between the two gradient providers.
+        let mut num = 0f64;
+        let mut den = 0f64;
+        for (a, b) in ga.data.iter().zip(&gb.data) {
+            num += ((a - b) as f64).powi(2);
+            den += (*b as f64).powi(2);
+        }
+        let rel = (num / den.max(1e-30)).sqrt();
+        assert!(rel < 1e-2, "{ida}: gradient mismatch rel {rel}");
+    }
+    for ((ida, ma), (_, mb)) in xla.input_means.iter().zip(&native.input_means) {
+        for (a, b) in ma.iter().zip(mb) {
+            assert!((a - b).abs() < 1e-3 * b.abs().max(1.0), "{ida}: mean {a} vs {b}");
+        }
+    }
+    // Z agrees too.
+    let mut zerr = 0f64;
+    for (a, b) in xla.z.data.iter().zip(&native.z.data) {
+        zerr = zerr.max((a - b).abs() as f64);
+    }
+    assert!(zerr < 1e-3, "Z mismatch {zerr}");
+}

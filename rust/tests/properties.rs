@@ -1,0 +1,207 @@
+//! Cross-module property tests (seeded proptest-lite): system-level
+//! invariants that unit tests can't pin down in isolation.
+
+use radio::coordinator::dual_ascent::{solve_continuous, solve_integer, DualAscentConfig};
+use radio::model::tensor::Tensor;
+use radio::prop_assert;
+use radio::quant::bitpack::{f16_round, PackedMatrix};
+use radio::quant::grouping::{jensen_gain_bits, Grouping};
+use radio::quant::{group_meta, quantize_matrix, QuantMode, ScaleRule};
+use radio::stats::distortion::GroupRd;
+use radio::util::check::Checker;
+use radio::util::rng::Rng;
+
+fn random_matrix(rng: &mut Rng, rows: usize, cols: usize) -> Tensor {
+    let mut w = Tensor::zeros(rows, cols);
+    let mu = rng.normal(0.0, 0.1) as f32;
+    let s = 0.1 + rng.uniform_f32();
+    rng.fill_laplace(&mut w.data, mu, s);
+    w
+}
+
+#[test]
+fn prop_pack_unpack_roundtrip_is_idempotent() {
+    Checker::new(40, 0x9209).run("pack-idempotent", |rng, size| {
+        let rows = 4 + size % 60;
+        let cols = 1 + size % 13;
+        let w = random_matrix(rng, rows, cols);
+        let scores: Vec<f64> = (0..rows).map(|_| rng.uniform()).collect();
+        let grouping = Grouping::build(rows, cols, 1 + rng.below(rows), &scores);
+        let mode = if rng.below(2) == 0 { QuantMode::Companded } else { QuantMode::Uniform };
+        let bits: Vec<u8> = (0..grouping.num_groups()).map(|_| rng.below(9) as u8).collect();
+        let p1 = quantize_matrix(&w, &grouping, &bits, mode, ScaleRule::Range);
+        let d1 = p1.unpack();
+        // Re-packing the dequantized values with the SAME metas must be a
+        // fixed point (dequant values are exact reconstruction points).
+        let p2 = PackedMatrix::pack(&d1, &grouping, &p1.meta, mode);
+        let d2 = p2.unpack();
+        for (i, (a, b)) in d1.data.iter().zip(&d2.data).enumerate() {
+            prop_assert!(
+                (a - b).abs() <= 1e-4 * a.abs().max(1.0),
+                "idx {i}: {a} vs {b} ({mode:?})"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantization_error_bounded_by_variance() {
+    // At B ≥ 2 bits the per-group MSE must sit below the group variance
+    // (the rate–distortion premise).
+    Checker::new(30, 0xE44).run("mse-below-variance", |rng, size| {
+        let n = 16 + size;
+        let mut vals = vec![0f32; n];
+        rng.fill_laplace(&mut vals, 0.0, 0.5);
+        let var = radio::stats::moments::variance(&vals);
+        for bits in [2u8, 4, 6] {
+            let gm = group_meta(&vals, bits, QuantMode::Companded, ScaleRule::Mmse);
+            let mut q = vals.clone();
+            let mse =
+                radio::quant::companding::quantize_dequantize(&mut q, bits, gm.scale, gm.mean);
+            prop_assert!(mse < var, "bits {bits}: mse {mse} should be below var {var}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dual_ascent_rate_constraint() {
+    Checker::new(40, 0xDA7).run("rate-constraint", |rng, size| {
+        let n = 2 + size % 64;
+        let groups: Vec<GroupRd> = (0..n)
+            .map(|_| {
+                GroupRd::new(
+                    4 + rng.below(256),
+                    rng.normal(0.0, 2.0).exp(),
+                    rng.normal(0.0, 2.0).exp(),
+                    1.0,
+                )
+            })
+            .collect();
+        let target = 0.5 + rng.uniform() * 6.0;
+        let cont = solve_continuous(&groups, target, &DualAscentConfig::default());
+        prop_assert!(
+            (cont.rate - target).abs() < 1e-3 || cont.bits.iter().all(|&b| b >= 7.99),
+            "continuous rate {} vs target {target}",
+            cont.rate
+        );
+        let ints = solve_integer(&groups, target, &DualAscentConfig::default());
+        let total_w: usize = groups.iter().map(|g| g.count).sum();
+        let used: i64 = ints
+            .iter()
+            .zip(&groups)
+            .map(|(&b, g)| b as i64 * g.count as i64)
+            .sum();
+        prop_assert!(
+            used <= (target * total_w as f64).floor() as i64,
+            "integer allocation exceeds budget"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_jensen_gain_nonnegative() {
+    Checker::new(60, 0x9A1).run("jensen-nonneg", |rng, size| {
+        let n = 1 + size % 40;
+        let parts: Vec<(usize, f64)> = (0..n)
+            .map(|_| (1 + rng.below(100), rng.normal(0.0, 3.0).exp()))
+            .collect();
+        let g = jensen_gain_bits(&parts);
+        prop_assert!(g >= -1e-9, "gain {g} negative");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_compander_monotone_and_invertible() {
+    Checker::new(40, 0xC0).run("compander", |rng, _| {
+        let scale = 0.05 + rng.uniform_f32() * 4.0;
+        let mean = rng.normal(0.0, 1.0) as f32;
+        let mut prev = f32::NEG_INFINITY;
+        for i in -40..=40 {
+            let theta = mean + i as f32 * 0.15 * scale;
+            let t = radio::quant::companding::compand(theta, scale, mean);
+            prop_assert!(t >= prev - 1e-7, "not monotone at {theta}");
+            prev = t;
+            let back = radio::quant::companding::expand(t, scale, mean);
+            prop_assert!(
+                (back - theta).abs() < 1e-2 * theta.abs().max(scale),
+                "roundtrip {theta} -> {back}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_serialization_roundtrip_any_matrix() {
+    Checker::new(25, 0x5E2).run("serde-roundtrip", |rng, size| {
+        let rows = 4 + size % 48;
+        let cols = 1 + size % 9;
+        let w = random_matrix(rng, rows, cols);
+        let scores: Vec<f64> = (0..rows).map(|_| rng.uniform()).collect();
+        let grouping = Grouping::build(rows, cols, 1 + rng.below(rows), &scores);
+        let bits: Vec<u8> = (0..grouping.num_groups()).map(|_| rng.below(9) as u8).collect();
+        let fp_rows: Vec<u32> = if rng.below(2) == 0 {
+            let k = rng.below(3);
+            let mut v: Vec<u32> = rng
+                .sample_indices(rows, k)
+                .into_iter()
+                .map(|r| r as u32)
+                .collect();
+            v.sort_unstable();
+            v
+        } else {
+            vec![]
+        };
+        let row_scale: Option<Vec<f32>> = if rng.below(2) == 0 {
+            Some((0..rows).map(|_| f16_round(0.5 + rng.uniform_f32())).collect())
+        } else {
+            None
+        };
+        let metas: Vec<_> = (0..grouping.num_groups())
+            .map(|gi| {
+                let col = gi / grouping.m;
+                let sub = gi % grouping.m;
+                let vals = grouping.gather(&w, col, sub);
+                group_meta(&vals, bits[gi], QuantMode::Uniform, ScaleRule::Range)
+            })
+            .collect();
+        let p = PackedMatrix::pack_full(&w, &grouping, &metas, QuantMode::Uniform, row_scale, &fp_rows);
+        let bytes = p.to_bytes();
+        let (q, used) = PackedMatrix::from_bytes(&bytes).map_err(|e| e.to_string())?;
+        prop_assert!(used == bytes.len(), "trailing bytes");
+        let (da, db) = (p.unpack(), q.unpack());
+        for (a, b) in da.data.iter().zip(&db.data) {
+            prop_assert!((a - b).abs() < 1e-6, "deserialized dequant mismatch");
+        }
+        prop_assert!(p.payload_bits() == q.payload_bits(), "payload bits changed");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_matvec_kernel_matches_dense_reference() {
+    Checker::new(20, 0x3A7).run("matvec-vs-dense", |rng, size| {
+        let rows = 8 + size % 96;
+        let cols = 4 + size % 40;
+        let w = random_matrix(rng, rows, cols);
+        let grouping = Grouping::build(rows, cols, 1 + rng.below(rows), &vec![0.0; rows]);
+        let bits: Vec<u8> = (0..grouping.num_groups()).map(|_| rng.below(9) as u8).collect();
+        let mode = if rng.below(2) == 0 { QuantMode::Companded } else { QuantMode::Uniform };
+        let pm = quantize_matrix(&w, &grouping, &bits, mode, ScaleRule::Range);
+        let mut x = vec![0f32; rows];
+        rng.fill_gauss(&mut x, 0.0, 1.0);
+        let y = radio::infer::QuantMatvec::new(&pm).matvec(&x);
+        let yref = radio::infer::dense_matvec(&pm.unpack(), &x);
+        for (j, (a, b)) in y.iter().zip(&yref).enumerate() {
+            prop_assert!(
+                (a - b).abs() < 2e-3 * b.abs().max(1.0),
+                "col {j}: kernel {a} vs dense {b}"
+            );
+        }
+        Ok(())
+    });
+}
