@@ -1,22 +1,24 @@
-//! Serving example: batched request serving through the quantized decode
-//! engine, comparing 3-bit packed weights against the FP32 engine on
-//! latency and throughput (the deployment scenario the paper's kernel
-//! targets).
+//! Serving example: continuous-batching request serving through the
+//! quantized decode engine, comparing 3-bit packed weights against the
+//! FP32 engine — and the batched scheduler against the seed's
+//! thread-per-request baseline — on latency and throughput (the
+//! deployment scenario the paper's kernel targets).
 //!
 //! ```bash
-//! cargo run --release --offline --example serve_quantized [-- --requests 32 --workers 4]
+//! cargo run --release --offline --example serve_quantized [-- --requests 32 --max-batch 8]
 //! ```
 
 use radio::coordinator::{NativeProvider, Radio};
 use radio::exp;
-use radio::infer::{serve, Engine, Request};
+use radio::infer::{serve, serve_threaded, Engine, Request};
 use radio::util::cli::Args;
 use radio::util::rng::Rng;
 
 fn main() {
     let args = Args::from_env();
     let n = args.get_usize("requests", 24);
-    let workers = args.get_usize("workers", 4);
+    // `--workers` is honoured as an alias from the thread-per-request era.
+    let max_batch = args.get_usize("max-batch", args.get_usize("workers", 8));
     let max_new = args.get_usize("max-new", 24);
 
     let weights = exp::trained_model("ropt-nano", exp::default_steps("ropt-nano"));
@@ -47,11 +49,22 @@ fn main() {
             .collect()
     };
 
-    println!("\nserving {n} requests × {max_new} new tokens on {workers} workers:");
-    let (resp_q, stats_q) = serve(&quant_engine, mk_requests(), workers);
+    println!("\nserving {n} requests × {max_new} new tokens, continuous batch ≤ {max_batch}:");
+    let (resp_q, stats_q) = serve(&quant_engine, mk_requests(), max_batch);
     println!("  3-bit Radio engine : {stats_q}");
-    let (_, stats_fp) = serve(&fp_engine, mk_requests(), workers);
+    let (_, stats_fp) = serve(&fp_engine, mk_requests(), max_batch);
     println!("  FP32 engine        : {stats_fp}");
+
+    println!("\nthread-per-request baseline ({max_batch} workers, un-amortized decode):");
+    let (resp_t, stats_t) = serve_threaded(&quant_engine, mk_requests(), max_batch);
+    println!("  3-bit Radio engine : {stats_t}");
+
+    // The scheduler must not change what gets generated.
+    assert_eq!(
+        resp_q.iter().map(|r| &r.tokens).collect::<Vec<_>>(),
+        resp_t.iter().map(|r| &r.tokens).collect::<Vec<_>>(),
+        "continuous batching and thread-per-request must produce identical tokens"
+    );
 
     // Show a couple of generations (they should look corpus-like).
     for r in resp_q.iter().take(3) {

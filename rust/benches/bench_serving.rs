@@ -1,0 +1,149 @@
+//! Serving-path throughput: continuous batching (batch-amortized GEMM
+//! decode) vs the thread-per-request baseline, across batch sizes.
+//!
+//! Emits a paper-shaped table via `report` *and* a machine-readable
+//! `BENCH_serving.json` at the repo root so the perf trajectory of the
+//! request path can be tracked across PRs.
+//!
+//! ```bash
+//! cargo bench --bench bench_serving            # quick
+//! RADIO_BENCH_FULL=1 cargo bench --bench bench_serving
+//! ```
+
+use radio::coordinator::pipeline::rtn_quantize_model;
+use radio::infer::{serve, serve_threaded, Engine, Request};
+use radio::model::weights::Weights;
+use radio::model::ModelConfig;
+use radio::report;
+use radio::util::bench::{black_box, Bench, Table};
+use radio::util::json::Json;
+use radio::util::rng::Rng;
+
+fn mk_requests(n: usize, prompt_len: usize, max_new: usize, vocab: usize) -> Vec<Request> {
+    let mut rng = Rng::new(0xBA7C);
+    (0..n)
+        .map(|id| {
+            let prompt: Vec<u32> = (0..prompt_len).map(|_| rng.below(vocab) as u32).collect();
+            Request { id, prompt, max_new }
+        })
+        .collect()
+}
+
+/// Median wall seconds for one full drain of the request set, plus the
+/// serve stats from one representative run (token counts and occupancy
+/// are deterministic across runs, so one capture suffices).
+fn time_serve<F>(bench: &Bench, name: &str, mut f: F) -> (f64, radio::infer::ServeStats)
+where
+    F: FnMut() -> radio::infer::ServeStats,
+{
+    let stats = f();
+    let timing = bench.run(name, || {
+        black_box(f());
+    });
+    (timing.median_secs(), stats)
+}
+
+fn main() {
+    let quick = std::env::var("RADIO_BENCH_FULL").is_err();
+    let preset = if quick { "ropt-micro" } else { "ropt-med" };
+    let cfg = ModelConfig::preset(preset).unwrap();
+    let mut rng = Rng::new(0x5EAF);
+    // Synthetic pretrained-shaped weights: serving throughput does not
+    // depend on what the model learned, only on its shapes.
+    let w = Weights::init_pretrained_like(cfg, &mut rng);
+    let bits = 3u8;
+    let qm = rtn_quantize_model(&w, bits, 64);
+    let engine = Engine::from_quantized(&qm);
+    let fp_engine = Engine::from_dense(&w);
+
+    let n_requests = if quick { 16 } else { 32 };
+    let prompt_len = 8usize;
+    let max_new = if quick { 24 } else { 48 };
+    let reqs = || mk_requests(n_requests, prompt_len, max_new, cfg.vocab);
+
+    let bench = if quick { Bench::quick() } else { Bench::default() };
+
+    println!(
+        "serving bench: {preset} (synthetic), {bits}-bit RTN pack, {n_requests} requests × \
+         {max_new} new tokens, prompt {prompt_len}"
+    );
+
+    // Baseline: the seed's thread-per-request scheduler, one request at a
+    // time (every request decodes the full bitstream itself).
+    let (base_secs, base_stats) = time_serve(&bench, "threaded b=1", || {
+        let (_, stats) = serve_threaded(&engine, reqs(), 1);
+        stats
+    });
+    let base_tps = base_stats.total_tokens as f64 / base_secs;
+    println!("  thread-per-request (1 worker): {base_tps:.1} gen tok/s");
+
+    let batch_sizes = [1usize, 4, 16];
+    let mut table = Table::new(&["engine", "batch", "gen tok/s", "engine tok/s", "occupancy", "vs threaded b=1"]);
+    let mut rows_json: Vec<Json> = Vec::new();
+    let mut quant_tps_by_batch = Vec::new();
+
+    for &b in &batch_sizes {
+        for (label, eng) in [("3-bit", &engine), ("fp32", &fp_engine)] {
+            let (secs, stats) = time_serve(&bench, &format!("{label} b={b}"), || {
+                let (_, stats) = serve(eng, reqs(), b);
+                stats
+            });
+            let gen_tps = stats.total_tokens as f64 / secs;
+            let engine_tps = (stats.steps as f64 * stats.mean_batch_occupancy) / secs;
+            let speedup = gen_tps / base_tps;
+            println!(
+                "  {label:>5} continuous batch={b:<2}: {gen_tps:8.1} gen tok/s  \
+                 (occupancy {:.2}, {:.2}x vs baseline)",
+                stats.mean_batch_occupancy, speedup
+            );
+            table.row(vec![
+                label.to_string(),
+                b.to_string(),
+                format!("{gen_tps:.1}"),
+                format!("{engine_tps:.1}"),
+                format!("{:.2}", stats.mean_batch_occupancy),
+                format!("{speedup:.2}"),
+            ]);
+            rows_json.push(Json::obj(vec![
+                ("engine", Json::str(label)),
+                ("batch", Json::num(b as f64)),
+                ("gen_tps", Json::num(gen_tps)),
+                ("engine_tps", Json::num(engine_tps)),
+                ("occupancy", Json::num(stats.mean_batch_occupancy)),
+                ("speedup_vs_threaded_b1", Json::num(speedup)),
+            ]));
+            if label == "3-bit" {
+                quant_tps_by_batch.push((b, gen_tps));
+            }
+        }
+    }
+
+    println!("\nServing throughput (continuous batching vs thread-per-request):");
+    table.print();
+    report::write_report(
+        "bench_serving",
+        "Serving throughput: batch-amortized quantized decode",
+        &[("continuous batching vs thread-per-request baseline", &table)],
+        "The decode kernel reads each packed column once per step regardless of batch size, \
+         so quantized gen tok/s should scale with batch until FLOPs dominate. Baseline is the \
+         seed's thread-per-request scheduler with one worker.",
+    );
+
+    let b16 = quant_tps_by_batch.iter().find(|(b, _)| *b == 16).map(|&(_, t)| t).unwrap_or(0.0);
+    let json = Json::obj(vec![
+        ("bench", Json::str("serving")),
+        ("model", Json::str(preset)),
+        ("bits", Json::num(bits as f64)),
+        ("requests", Json::num(n_requests as f64)),
+        ("prompt_len", Json::num(prompt_len as f64)),
+        ("max_new", Json::num(max_new as f64)),
+        ("baseline_threaded_b1_gen_tps", Json::num(base_tps)),
+        ("quant_b16_speedup_vs_threaded_b1", Json::num(b16 / base_tps.max(1e-12))),
+        ("rows", Json::Arr(rows_json)),
+    ]);
+    let path = "BENCH_serving.json";
+    match std::fs::write(path, json.to_pretty()) {
+        Ok(()) => println!("[bench] wrote {path}"),
+        Err(e) => eprintln!("[bench] FAILED to write {path}: {e}"),
+    }
+}

@@ -1,15 +1,24 @@
-//! Quantized autoregressive inference engine: single-token decode with a
-//! KV cache, running every transformer-block matmul straight off the
-//! packed bitstreams via the mixed-precision matvec kernel. A dense-f32
-//! engine over the same code path provides the FP baseline (Table 7's
-//! comparison and the serving example's control arm).
+//! Quantized autoregressive inference engine: KV-cached decode running
+//! every transformer-block matmul straight off the packed bitstreams via
+//! the mixed-precision kernels. A dense-f32 engine over the same code
+//! path provides the FP baseline (Table 7's comparison and the serving
+//! example's control arm).
+//!
+//! The hot entry point is [`Engine::step_batch`]: one forward step for B
+//! independent sequences that decodes each weight column's code stream
+//! once for the whole batch (see [`crate::infer::matvec::MatvecPlan::matmul`]).
+//! [`Engine::step`] is the batch-of-one wrapper, so single-request and
+//! batched serving share one numeric path — results are bit-identical
+//! regardless of what else is co-scheduled in the batch, which is the
+//! invariant the continuous-batching server's determinism tests pin down.
 
-use crate::infer::matvec::{dense_matvec, MatvecPlan};
+use crate::infer::matvec::{dense_matmul, split_rows, MatvecPlan, SendMut};
 use crate::model::config::ModelConfig;
 use crate::model::tensor::Tensor;
 use crate::model::weights::{Role, Weights};
 use crate::quant::bitpack::PackedMatrix;
 use crate::quant::format::QuantizedModel;
+use crate::util::threadpool::parallel_for_chunks;
 
 const LN_EPS: f32 = 1e-5;
 
@@ -20,10 +29,11 @@ enum Linear {
 }
 
 impl Linear {
-    fn apply(&self, x: &[f32]) -> Vec<f32> {
+    /// Batched apply: decode once, transform all B activation vectors.
+    fn apply_batch(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
         match self {
-            Linear::Dense(w) => dense_matvec(w, x),
-            Linear::Quant { pm, plan } => plan.matvec(pm, x),
+            Linear::Dense(w) => dense_matmul(w, xs),
+            Linear::Quant { pm, plan } => plan.matmul(pm, xs),
         }
     }
 }
@@ -58,7 +68,9 @@ pub struct Engine {
 }
 
 /// Per-sequence attention cache: cached K and V per layer, (t×E) grown
-/// one row per decoded token.
+/// one row per decoded token. Construction pre-reserves the full
+/// `max_seq · dim` per layer so decode never reallocates mid-stream.
+#[derive(Clone)]
 pub struct KvCache {
     k: Vec<Vec<f32>>,
     v: Vec<Vec<f32>>,
@@ -66,8 +78,13 @@ pub struct KvCache {
 }
 
 impl KvCache {
-    pub fn new(layers: usize) -> KvCache {
-        KvCache { k: vec![Vec::new(); layers], v: vec![Vec::new(); layers], len: 0 }
+    pub fn new(cfg: &ModelConfig) -> KvCache {
+        let cap = cfg.max_seq * cfg.dim;
+        KvCache {
+            k: (0..cfg.layers).map(|_| Vec::with_capacity(cap)).collect(),
+            v: (0..cfg.layers).map(|_| Vec::with_capacity(cap)).collect(),
+            len: 0,
+        }
     }
 }
 
@@ -167,103 +184,220 @@ impl Engine {
         }
     }
 
-    /// Decode one token: append to the KV cache and return the logits.
+    /// Fresh cache sized for this engine's model.
+    pub fn new_cache(&self) -> KvCache {
+        KvCache::new(&self.config)
+    }
+
+    /// Decode one token for one sequence. Batch-of-one wrapper around
+    /// [`Engine::step_batch`] — see there for the token contract.
     pub fn step(&self, token: u32, cache: &mut KvCache) -> Vec<f32> {
+        self.step_batch(&[token], std::slice::from_mut(cache))
+            .pop()
+            .expect("batch of one yields one logit vector")
+    }
+
+    /// Decode one token for each of B independent sequences, appending to
+    /// each sequence's KV cache and returning per-sequence logits.
+    ///
+    /// Every per-layer linear runs through the batch-amortized GEMM, so
+    /// the packed code streams are decoded once per layer per *step*
+    /// rather than once per layer per *sequence*; the tied-head logits
+    /// parallelize across the vocabulary.
+    ///
+    /// Token contract: callers must pass `token < config.vocab`. Debug
+    /// builds assert; release builds clamp to the last vocab entry rather
+    /// than silently wrapping (the seed's `token % vocab` hid caller
+    /// bugs by aliasing distinct tokens).
+    pub fn step_batch(&self, tokens: &[u32], caches: &mut [KvCache]) -> Vec<Vec<f32>> {
+        self.step_batch_masked(tokens, caches, None)
+    }
+
+    /// [`Engine::step_batch`] with an optional per-lane emit mask: lanes
+    /// whose flag is `false` still run the full transformer step (their
+    /// KV caches must advance) but skip the tied-head logits — the
+    /// dominant cost on small models — and get an empty vector back. The
+    /// continuous-batching server uses this to avoid paying the head for
+    /// lanes that are still prefilling their prompt.
+    pub fn step_batch_masked(
+        &self,
+        tokens: &[u32],
+        caches: &mut [KvCache],
+        emit: Option<&[bool]>,
+    ) -> Vec<Vec<f32>> {
+        let bn = tokens.len();
+        assert_eq!(bn, caches.len(), "one KV cache per sequence");
+        if let Some(m) = emit {
+            assert_eq!(bn, m.len(), "one emit flag per sequence");
+        }
+        if bn == 0 {
+            return Vec::new();
+        }
+        let emits = |b: usize| emit.map_or(true, |m| m[b]);
         let cfg = &self.config;
         let (e, hds, dh) = (cfg.dim, cfg.heads, cfg.head_dim());
-        let pos_idx = cache.len.min(cfg.max_seq - 1);
-        let mut x: Vec<f32> = self
-            .embed
-            .row(token as usize % cfg.vocab)
+
+        let mut xs: Vec<Vec<f32>> = tokens
             .iter()
-            .zip(self.pos.row(pos_idx))
-            .map(|(&a, &b)| a + b)
+            .zip(caches.iter())
+            .map(|(&t, cache)| {
+                debug_assert!(
+                    (t as usize) < cfg.vocab,
+                    "token {t} out of vocab (vocab size {})",
+                    cfg.vocab
+                );
+                let tok = (t as usize).min(cfg.vocab - 1);
+                let pos_idx = cache.len.min(cfg.max_seq - 1);
+                self.embed
+                    .row(tok)
+                    .iter()
+                    .zip(self.pos.row(pos_idx))
+                    .map(|(&a, &b)| a + b)
+                    .collect()
+            })
             .collect();
 
         for (li, l) in self.layers.iter().enumerate() {
-            let a = ln_vec(&x, &l.ln1_g, &l.ln1_b);
-            let mut q = l.wq.apply(&a);
-            let mut k = l.wk.apply(&a);
-            let mut v = l.wv.apply(&a);
-            for (qv, &b) in q.iter_mut().zip(&l.bq) {
-                *qv += b;
-            }
-            for (kv, &b) in k.iter_mut().zip(&l.bk) {
-                *kv += b;
-            }
-            for (vv, &b) in v.iter_mut().zip(&l.bv) {
-                *vv += b;
-            }
-            cache.k[li].extend_from_slice(&k);
-            cache.v[li].extend_from_slice(&v);
-            let t = cache.k[li].len() / e;
-
-            // Attention over the cache, per head.
-            let mut ctx = vec![0f32; e];
-            let scale = 1.0 / (dh as f32).sqrt();
-            for h in 0..hds {
-                let qh = &q[h * dh..(h + 1) * dh];
-                // Scores against all cached keys.
-                let mut scores = Vec::with_capacity(t);
-                let mut maxs = f32::NEG_INFINITY;
-                for ti in 0..t {
-                    let kh = &cache.k[li][ti * e + h * dh..ti * e + (h + 1) * dh];
-                    let s: f32 = qh.iter().zip(kh).map(|(&a2, &b2)| a2 * b2).sum::<f32>() * scale;
-                    scores.push(s);
-                    maxs = maxs.max(s);
-                }
-                let mut denom = 0f32;
-                for s in scores.iter_mut() {
-                    *s = (*s - maxs).exp();
-                    denom += *s;
-                }
-                let ctx_h = &mut ctx[h * dh..(h + 1) * dh];
-                for ti in 0..t {
-                    let p = scores[ti] / denom;
-                    let vh = &cache.v[li][ti * e + h * dh..ti * e + (h + 1) * dh];
-                    for (c, &vv) in ctx_h.iter_mut().zip(vh) {
-                        *c += p * vv;
+            let a: Vec<Vec<f32>> = xs.iter().map(|x| ln_vec(x, &l.ln1_g, &l.ln1_b)).collect();
+            let mut q = l.wq.apply_batch(&a);
+            let k = {
+                let mut k = l.wk.apply_batch(&a);
+                for kb in k.iter_mut() {
+                    for (kv, &b) in kb.iter_mut().zip(&l.bk) {
+                        *kv += b;
                     }
                 }
+                k
+            };
+            let v = {
+                let mut v = l.wv.apply_batch(&a);
+                for vb in v.iter_mut() {
+                    for (vv, &b) in vb.iter_mut().zip(&l.bv) {
+                        *vv += b;
+                    }
+                }
+                v
+            };
+            for qb in q.iter_mut() {
+                for (qv, &b) in qb.iter_mut().zip(&l.bq) {
+                    *qv += b;
+                }
             }
-            let mut attn = l.wo.apply(&ctx);
-            for ((xv, av), &b) in x.iter_mut().zip(attn.iter_mut()).zip(&l.bo) {
-                *xv += *av + b;
+            for (b, cache) in caches.iter_mut().enumerate() {
+                cache.k[li].extend_from_slice(&k[b]);
+                cache.v[li].extend_from_slice(&v[b]);
             }
 
-            let bn = ln_vec(&x, &l.ln2_g, &l.ln2_b);
-            let mut u = l.w1.apply(&bn);
-            for (uv, &b) in u.iter_mut().zip(&l.b1) {
-                *uv = gelu(*uv + b);
+            // Attention per sequence over its own cache, per head.
+            let mut ctx_all: Vec<Vec<f32>> = Vec::with_capacity(bn);
+            for (b, cache) in caches.iter().enumerate() {
+                let t = cache.k[li].len() / e;
+                let mut ctx = vec![0f32; e];
+                let scale = 1.0 / (dh as f32).sqrt();
+                for h in 0..hds {
+                    let qh = &q[b][h * dh..(h + 1) * dh];
+                    // Scores against all cached keys.
+                    let mut scores = Vec::with_capacity(t);
+                    let mut maxs = f32::NEG_INFINITY;
+                    for ti in 0..t {
+                        let kh = &cache.k[li][ti * e + h * dh..ti * e + (h + 1) * dh];
+                        let s: f32 =
+                            qh.iter().zip(kh).map(|(&a2, &b2)| a2 * b2).sum::<f32>() * scale;
+                        scores.push(s);
+                        maxs = maxs.max(s);
+                    }
+                    let mut denom = 0f32;
+                    for s in scores.iter_mut() {
+                        *s = (*s - maxs).exp();
+                        denom += *s;
+                    }
+                    let ctx_h = &mut ctx[h * dh..(h + 1) * dh];
+                    for ti in 0..t {
+                        let p = scores[ti] / denom;
+                        let vh = &cache.v[li][ti * e + h * dh..ti * e + (h + 1) * dh];
+                        for (c, &vv) in ctx_h.iter_mut().zip(vh) {
+                            *c += p * vv;
+                        }
+                    }
+                }
+                ctx_all.push(ctx);
             }
-            let m = l.w2.apply(&u);
-            for ((xv, &mv), &b) in x.iter_mut().zip(&m).zip(&l.b2) {
-                *xv += mv + b;
-            }
-        }
-        cache.len += 1;
 
-        let z = ln_vec(&x, &self.lnf_g, &self.lnf_b);
-        // Tied head: logits[v] = z · embed[v].
-        let mut logits = vec![0f32; cfg.vocab];
-        for (vi, lv) in logits.iter_mut().enumerate() {
-            *lv = z.iter().zip(self.embed.row(vi)).map(|(&a, &b)| a * b).sum();
+            let attn = l.wo.apply_batch(&ctx_all);
+            for (b, x) in xs.iter_mut().enumerate() {
+                for ((xv, &av), &bias) in x.iter_mut().zip(&attn[b]).zip(&l.bo) {
+                    *xv += av + bias;
+                }
+            }
+
+            let bnorm: Vec<Vec<f32>> = xs.iter().map(|x| ln_vec(x, &l.ln2_g, &l.ln2_b)).collect();
+            let mut u = l.w1.apply_batch(&bnorm);
+            for ub in u.iter_mut() {
+                for (uv, &b) in ub.iter_mut().zip(&l.b1) {
+                    *uv = gelu(*uv + b);
+                }
+            }
+            let mm = l.w2.apply_batch(&u);
+            for (b, x) in xs.iter_mut().enumerate() {
+                for ((xv, &mv), &bias) in x.iter_mut().zip(&mm[b]).zip(&l.b2) {
+                    *xv += mv + bias;
+                }
+            }
         }
-        logits
+        for cache in caches.iter_mut() {
+            cache.len += 1;
+        }
+
+        let zs: Vec<Vec<f32>> = xs
+            .iter()
+            .map(|x| ln_vec(x, &self.lnf_g, &self.lnf_b))
+            .collect();
+        // Tied head: logits[b][v] = z_b · embed[v]. The vocab × dim dot
+        // products dominate small-model steps; chunk them across the pool
+        // into one flat lane-major buffer with disjoint writes (per-(v, b)
+        // dot order is fixed, so results stay deterministic). Masked
+        // lanes skip the dots entirely.
+        let mut logits_flat = vec![0f32; bn * cfg.vocab];
+        let out_ptr = SendMut(logits_flat.as_mut_ptr());
+        parallel_for_chunks(cfg.vocab, 64, |c0, c1| {
+            let out_ptr = out_ptr;
+            for vi in c0..c1 {
+                let row = self.embed.row(vi);
+                for (b, z) in zs.iter().enumerate() {
+                    if !emits(b) {
+                        continue;
+                    }
+                    let dot: f32 = z.iter().zip(row).map(|(&a, &w)| a * w).sum();
+                    // SAFETY: vocab chunks are disjoint, so each
+                    // (b, vi) slot is written by exactly one lane.
+                    unsafe { *out_ptr.0.add(b * cfg.vocab + vi) = dot };
+                }
+            }
+        });
+        split_rows(logits_flat, bn)
+            .into_iter()
+            .enumerate()
+            .map(|(b, row)| if emits(b) { row } else { Vec::new() })
+            .collect()
     }
 
     /// Greedy generation: feed `prompt`, then decode `max_new` tokens.
     pub fn generate(&self, prompt: &[u32], max_new: usize) -> Vec<u32> {
-        let mut cache = KvCache::new(self.config.layers);
+        let mut cache = self.new_cache();
         let mut logits = vec![0f32; self.config.vocab];
         for &t in prompt {
             logits = self.step(t, &mut cache);
         }
         let mut out = Vec::with_capacity(max_new);
-        for _ in 0..max_new {
+        for i in 0..max_new {
             let next = argmax(&logits) as u32;
             out.push(next);
-            if cache.len >= self.config.max_seq {
+            // Stop *before* stepping once the budget or the positional
+            // table is exhausted — the final token's logits would be
+            // discarded, so computing them is pure waste (the batched
+            // server never does; keeping the schedulers step-identical
+            // keeps their benchmark comparison fair).
+            if i + 1 == max_new || cache.len >= self.config.max_seq {
                 break;
             }
             logits = self.step(next, &mut cache);
@@ -306,7 +440,7 @@ mod tests {
         let logits_fwd = transformer::logits(&w, &cache_fwd.z);
 
         let engine = Engine::from_dense(&w);
-        let mut kv = KvCache::new(w.config.layers);
+        let mut kv = KvCache::new(&w.config);
         for (i, &t) in toks.iter().enumerate() {
             let logits = engine.step(t, &mut kv);
             for v in 0..w.config.vocab {
@@ -328,8 +462,8 @@ mod tests {
         let ed = Engine::from_dense(&qm.to_weights());
         let mut rng = Rng::new(184);
         let toks: Vec<u32> = (0..6).map(|_| rng.below(32) as u32).collect();
-        let mut kv_q = KvCache::new(w.config.layers);
-        let mut kv_d = KvCache::new(w.config.layers);
+        let mut kv_q = eq.new_cache();
+        let mut kv_d = ed.new_cache();
         for &t in &toks {
             let lq = eq.step(t, &mut kv_q);
             let ld = ed.step(t, &mut kv_d);
@@ -348,5 +482,109 @@ mod tests {
         assert_eq!(out1, out2);
         assert!(out1.len() <= 5);
         assert!(out1.iter().all(|&t| t < 32));
+    }
+
+    #[test]
+    fn kv_cache_preallocates_full_sequence() {
+        let cfg = ModelConfig { vocab: 32, dim: 16, heads: 2, layers: 3, mlp: 32, max_seq: 12 };
+        let kv = KvCache::new(&cfg);
+        assert_eq!(kv.k.len(), cfg.layers);
+        assert_eq!(kv.v.len(), cfg.layers);
+        for l in 0..cfg.layers {
+            assert!(kv.k[l].capacity() >= cfg.max_seq * cfg.dim);
+            assert!(kv.v[l].capacity() >= cfg.max_seq * cfg.dim);
+        }
+        // Decoding to max_seq must never exceed the reservation (i.e.
+        // never reallocate).
+        let w = tiny_weights(186);
+        let engine = Engine::from_dense(&w);
+        let mut kv = engine.new_cache();
+        let cap0: Vec<usize> = kv.k.iter().map(|k| k.capacity()).collect();
+        for t in 0..cfg.max_seq as u32 {
+            engine.step(t % 32, &mut kv);
+        }
+        let cap1: Vec<usize> = kv.k.iter().map(|k| k.capacity()).collect();
+        assert_eq!(cap0, cap1, "KV cache reallocated during decode");
+    }
+
+    #[test]
+    fn step_batch_is_bit_identical_to_sequential_steps() {
+        // Batching must not perturb any sequence's numerics: run three
+        // sequences of different lengths via step(), then compare a joint
+        // step_batch() against three more independent step() calls.
+        let w = tiny_weights(187);
+        for engine in [
+            Engine::from_dense(&w),
+            Engine::from_quantized(&rtn_quantize_model(&w, 5, 8)),
+        ] {
+            let prompts: [&[u32]; 3] = [&[1, 2, 3], &[7], &[4, 9, 11, 30]];
+            let mut caches: Vec<KvCache> = prompts.iter().map(|_| engine.new_cache()).collect();
+            for (p, cache) in prompts.iter().zip(caches.iter_mut()) {
+                for &t in *p {
+                    engine.step(t, cache);
+                }
+            }
+            let mut caches_solo = caches.clone();
+            let next = [5u32, 8, 2];
+            let batched = engine.step_batch(&next, &mut caches);
+            for b in 0..3 {
+                let solo = engine.step(next[b], &mut caches_solo[b]);
+                assert_eq!(batched[b], solo, "lane {b}: batched logits differ");
+                assert_eq!(caches[b].len, caches_solo[b].len);
+                for li in 0..w.config.layers {
+                    assert_eq!(caches[b].k[li], caches_solo[b].k[li], "lane {b} K cache");
+                    assert_eq!(caches[b].v[li], caches_solo[b].v[li], "lane {b} V cache");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn step_batch_empty_is_noop() {
+        let w = tiny_weights(188);
+        let engine = Engine::from_dense(&w);
+        assert!(engine.step_batch(&[], &mut []).is_empty());
+    }
+
+    #[test]
+    fn step_batch_masked_skips_logits_without_perturbing_lanes() {
+        let w = tiny_weights(190);
+        let engine = Engine::from_dense(&w);
+        let mut caches_masked = vec![engine.new_cache(), engine.new_cache()];
+        let mut caches_full = caches_masked.clone();
+        let masked =
+            engine.step_batch_masked(&[3, 4], &mut caches_masked, Some(&[true, false]));
+        let full = engine.step_batch(&[3, 4], &mut caches_full);
+        // Emitting lane: identical logits. Masked lane: no logits, but
+        // its KV cache must advance identically.
+        assert_eq!(masked[0], full[0]);
+        assert!(masked[1].is_empty());
+        for li in 0..w.config.layers {
+            assert_eq!(caches_masked[1].k[li], caches_full[1].k[li]);
+            assert_eq!(caches_masked[1].v[li], caches_full[1].v[li]);
+        }
+        assert_eq!(caches_masked[1].len, caches_full[1].len);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "out of vocab")]
+    fn step_rejects_out_of_vocab_tokens_in_debug() {
+        let w = tiny_weights(189);
+        let engine = Engine::from_dense(&w);
+        let mut kv = engine.new_cache();
+        engine.step(999, &mut kv);
+    }
+
+    #[cfg(not(debug_assertions))]
+    #[test]
+    fn step_clamps_out_of_vocab_tokens_in_release() {
+        let w = tiny_weights(189);
+        let engine = Engine::from_dense(&w);
+        let mut kv_bad = engine.new_cache();
+        let mut kv_ref = engine.new_cache();
+        let bad = engine.step(999, &mut kv_bad);
+        let clamped = engine.step(31, &mut kv_ref);
+        assert_eq!(bad, clamped, "release builds must clamp, not wrap");
     }
 }

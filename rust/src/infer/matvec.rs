@@ -202,6 +202,192 @@ impl MatvecPlan {
     }
 }
 
+impl MatvecPlan {
+    /// Batch-amortized GEMM: `ys[b][j] = Σ_i xs[b][i]·W[i,j]`, decoding
+    /// each column's code stream **once** and applying every dequantized
+    /// weight to all B activation vectors. Decode cost is O(1) in batch
+    /// size — the amortization that makes continuous batching pay off —
+    /// while FLOPs scale with B as they must.
+    ///
+    /// Layout: activations are pre-permuted into code-stream order and
+    /// interleaved weight-major/batch-minor (`xp[i·B + b]`), so the inner
+    /// per-weight loop is a contiguous length-B AXPY that vectorizes.
+    ///
+    /// Determinism contract: for a fixed sequence `b`, the floating-point
+    /// operation order is independent of the batch size and of the other
+    /// sequences (one accumulator per lane, no fused multiply-add in the
+    /// batched inner loop), so `matmul(&[x])[0] == matmul(xs)[b]` bit for
+    /// bit whenever `xs[b] == x`. The engine and server lean on this for
+    /// their token-identical batching guarantee. Note the *per-vector*
+    /// [`MatvecPlan::matvec`] uses a different accumulation order (4-way
+    /// unroll / bin tricks) and agrees only to rounding tolerance.
+    pub fn matmul(&self, pm: &PackedMatrix, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let bn = xs.len();
+        if bn == 0 {
+            return Vec::new();
+        }
+        debug_assert_eq!(pm.rows, self.rows);
+        debug_assert_eq!(pm.cols, self.cols);
+        for x in xs {
+            assert_eq!(x.len(), pm.rows);
+        }
+        let m = pm.grouping.m;
+        let flat = self.flat_rows.len();
+        // Permute all B activations into code-stream order (fold the AWQ
+        // row scale), interleaved batch-minor.
+        let mut xp = vec![0f32; flat * bn];
+        match &pm.row_scale {
+            Some(s) => {
+                for (i, &r) in self.flat_rows.iter().enumerate() {
+                    let inv = 1.0 / s[r as usize];
+                    for (b, x) in xs.iter().enumerate() {
+                        xp[i * bn + b] = x[r as usize] * inv;
+                    }
+                }
+            }
+            None => {
+                for (i, &r) in self.flat_rows.iter().enumerate() {
+                    for (b, x) in xs.iter().enumerate() {
+                        xp[i * bn + b] = x[r as usize];
+                    }
+                }
+            }
+        }
+        // Per-(sub-group, lane) partial sums for the factored mean term.
+        let mut sum_x = vec![0f32; m * bn];
+        for sub in 0..m {
+            let acc = &mut sum_x[sub * bn..(sub + 1) * bn];
+            for i in self.sub_offsets[sub]..self.sub_offsets[sub + 1] {
+                let row = &xp[i * bn..(i + 1) * bn];
+                for (a, &v) in acc.iter_mut().zip(row) {
+                    *a += v;
+                }
+            }
+        }
+
+        // Output, column-major × batch-minor; columns are chunked across
+        // the pool with disjoint writes.
+        let mut yflat = vec![0f32; pm.cols * bn];
+        let y_ptr = SendMut(yflat.as_mut_ptr());
+        let words = &self.padded_words;
+        #[cfg(target_arch = "x86_64")]
+        let simd_ok = std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma");
+        // Per-column work scales with B, so shrink the minimum chunk as
+        // the batch grows (chunking never affects numerics — each column
+        // is computed whole by one lane).
+        let min_cols = (128 / bn).max(8);
+        parallel_for_chunks(pm.cols, min_cols, |c0, c1| {
+            let y_ptr = y_ptr;
+            let mut colacc = vec![0f32; bn];
+            let mut dotacc = vec![0f32; bn];
+            for col in c0..c1 {
+                let mut pos = pm.col_bit_offset[col];
+                colacc.iter_mut().for_each(|v| *v = 0.0);
+                for sub in 0..m {
+                    let gm = pm.meta[col * m + sub];
+                    if gm.bits == 0 {
+                        continue; // pruned: contributes nothing
+                    }
+                    let start = self.sub_offsets[sub];
+                    let end = self.sub_offsets[sub + 1];
+                    let glen = end - start;
+                    let bits = gm.bits as usize;
+                    let lut = &self.luts[bits][..];
+                    dotacc.iter_mut().for_each(|v| *v = 0.0);
+                    let group_x = &xp[start * bn..end * bn];
+                    // Widened AVX2 small-LUT path: decode 8 codes per
+                    // `vpermps`, then broadcast each dequantized weight
+                    // against all B lanes (unfused mul+add, preserving
+                    // the scalar op order per lane). The decode side is
+                    // lane-count independent, so this runs at every
+                    // batch size — B < 8 just uses the scalar lane tail.
+                    #[cfg(target_arch = "x86_64")]
+                    if bits <= 3 && simd_ok && glen >= 8 {
+                        pos = unsafe {
+                            gemm_avx2_small_lut(words, pos, group_x, bn, bits, lut, &mut dotacc)
+                        };
+                        for b in 0..bn {
+                            colacc[b] += gm.scale * dotacc[b] + gm.mean * sum_x[sub * bn + b];
+                        }
+                        continue;
+                    }
+                    // Generic path: 128-bit window decode (k = 64/bits
+                    // codes per load) + one length-B AXPY per weight.
+                    let mask = ((1u64 << bits) - 1) as u128;
+                    let k = 64 / bits;
+                    let mut i = 0usize;
+                    while i + k <= glen {
+                        let wi = pos >> 6;
+                        let off = pos & 63;
+                        // SAFETY: padded_words has 2 spare words.
+                        let lo = unsafe { *words.get_unchecked(wi) } as u128;
+                        let hi = unsafe { *words.get_unchecked(wi + 1) } as u128;
+                        let win = (lo | (hi << 64)) >> off;
+                        for j in 0..k {
+                            let c = ((win >> (j * bits)) & mask) as usize;
+                            // SAFETY: codes are < 2^bits = lut.len().
+                            let wv = unsafe { *lut.get_unchecked(c) };
+                            if bn == 1 {
+                                // Batch-1 specialization: same multiply-add
+                                // in the same order, minus the per-weight
+                                // slice bookkeeping.
+                                // SAFETY: i + j < glen and group_x has
+                                // glen elements when bn == 1.
+                                dotacc[0] += wv * unsafe { *group_x.get_unchecked(i + j) };
+                            } else {
+                                let row = &group_x[(i + j) * bn..(i + j + 1) * bn];
+                                for (a, &x) in dotacc.iter_mut().zip(row) {
+                                    *a += wv * x;
+                                }
+                            }
+                        }
+                        pos += k * bits;
+                        i += k;
+                    }
+                    // Tail.
+                    let mut cur = Cursor::new(words, pos);
+                    while i < glen {
+                        let c = cur.next(gm.bits as u32, mask as u64);
+                        let wv = lut[c];
+                        let row = &group_x[i * bn..(i + 1) * bn];
+                        for (a, &x) in dotacc.iter_mut().zip(row) {
+                            *a += wv * x;
+                        }
+                        i += 1;
+                    }
+                    pos = cur.pos;
+                    for b in 0..bn {
+                        colacc[b] += gm.scale * dotacc[b] + gm.mean * sum_x[sub * bn + b];
+                    }
+                }
+                for (b, &v) in colacc.iter().enumerate() {
+                    // SAFETY: disjoint column ranges across chunks.
+                    unsafe { *y_ptr.0.add(col * bn + b) = v };
+                }
+            }
+        });
+        // De-interleave into per-sequence outputs.
+        let mut ys: Vec<Vec<f32>> = (0..bn)
+            .map(|b| (0..pm.cols).map(|col| yflat[col * bn + b]).collect())
+            .collect();
+        // FP16 exception rows: dense contribution with the ORIGINAL x
+        // (same skip rule and row order as the per-vector kernel).
+        for (r, vals) in &pm.fp_rows {
+            for (b, x) in xs.iter().enumerate() {
+                let xv = x[*r as usize];
+                if xv == 0.0 {
+                    continue;
+                }
+                for (yj, &wv) in ys[b].iter_mut().zip(vals) {
+                    *yj += xv * wv;
+                }
+            }
+        }
+        ys
+    }
+}
+
 impl<'a> QuantMatvec<'a> {
     pub fn new(pm: &'a PackedMatrix) -> QuantMatvec<'a> {
         QuantMatvec { pm, plan: MatvecPlan::new(pm) }
@@ -209,6 +395,10 @@ impl<'a> QuantMatvec<'a> {
 
     pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
         self.plan.matvec(self.pm, x)
+    }
+
+    pub fn matmul(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        self.plan.matmul(self.pm, xs)
     }
 }
 
@@ -276,6 +466,90 @@ unsafe fn dot_avx2_small_lut(
     (dot, cur.pos)
 }
 
+/// Widened (batched) AVX2 small-LUT kernel for B ≤ 3-bit groups: decode
+/// 8 codes per 32-bit window with one `vpermps`, then broadcast each
+/// dequantized weight and accumulate it into all `bn` per-lane partial
+/// dots. Uses separate multiply and add (NOT `vfmadd`) so each lane's
+/// rounding matches the scalar generic path exactly — the batched
+/// decode must be bit-identical to the batch-1 decode.
+///
+/// `group_x` is the weight-major/batch-minor slice for this sub-group
+/// (`glen × bn`), `dotacc` has `bn` entries. Works at any `bn ≥ 1`: the
+/// vectorized lane loop covers multiples of 8, the scalar tail the rest
+/// (for `bn < 8` the win is the `vpermps` code-stream decode itself).
+/// Returns the new bit position.
+///
+/// # Safety
+/// Caller must guarantee AVX2+FMA (feature detection), `bn >= 1`,
+/// `group_x.len() == glen·bn`, and `words` must be the zero-padded plan
+/// copy (2 spare words).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn gemm_avx2_small_lut(
+    words: &[u64],
+    mut pos: usize,
+    group_x: &[f32],
+    bn: usize,
+    bits: usize,
+    lut: &[f32],
+    dotacc: &mut [f32],
+) -> usize {
+    use std::arch::x86_64::*;
+    debug_assert!(bits >= 1 && bits <= 3);
+    debug_assert!(bn >= 1);
+    debug_assert_eq!(group_x.len() % bn, 0);
+    debug_assert_eq!(dotacc.len(), bn);
+    let glen = group_x.len() / bn;
+    let mut lut8 = [0f32; 8];
+    lut8[..lut.len()].copy_from_slice(lut);
+    let lutv = _mm256_loadu_ps(lut8.as_ptr());
+    let b = bits as i32;
+    let shifts = _mm256_setr_epi32(0, b, 2 * b, 3 * b, 4 * b, 5 * b, 6 * b, 7 * b);
+    let maskv = _mm256_set1_epi32(((1u32 << bits) - 1) as i32);
+    let step = 8 * bits;
+    let xptr = group_x.as_ptr();
+    let aptr = dotacc.as_mut_ptr();
+    let mut i = 0usize;
+    while i + 8 <= glen {
+        let w32 = load_window32(words, pos);
+        let idx = _mm256_and_si256(_mm256_srlv_epi32(_mm256_set1_epi32(w32 as i32), shifts), maskv);
+        let wv = _mm256_permutevar8x32_ps(lutv, idx);
+        let mut wv8 = [0f32; 8];
+        _mm256_storeu_ps(wv8.as_mut_ptr(), wv);
+        for (j, &w) in wv8.iter().enumerate() {
+            let row = xptr.add((i + j) * bn);
+            let wb = _mm256_set1_ps(w);
+            let mut lane = 0usize;
+            while lane + 8 <= bn {
+                let acc = _mm256_loadu_ps(aptr.add(lane));
+                let xv = _mm256_loadu_ps(row.add(lane));
+                let acc = _mm256_add_ps(acc, _mm256_mul_ps(wb, xv));
+                _mm256_storeu_ps(aptr.add(lane), acc);
+                lane += 8;
+            }
+            while lane < bn {
+                *aptr.add(lane) += w * *row.add(lane);
+                lane += 1;
+            }
+        }
+        pos += step;
+        i += 8;
+    }
+    // Scalar tail over the remaining codes.
+    let mask = (1u64 << bits) - 1;
+    let mut cur = Cursor::new(words, pos);
+    while i < glen {
+        let c = cur.next(bits as u32, mask);
+        let w = lut[c];
+        let row = &group_x[i * bn..(i + 1) * bn];
+        for (a, &x) in dotacc.iter_mut().zip(row) {
+            *a += w * x;
+        }
+        i += 1;
+    }
+    cur.pos
+}
+
 /// Load 32 bits of code stream starting at bit `pos` (words are padded).
 #[cfg(target_arch = "x86_64")]
 #[inline(always)]
@@ -317,7 +591,24 @@ impl<'a> Cursor<'a> {
     }
 }
 
-struct SendMut<T>(*mut T);
+/// Split a flat row-major buffer into `rows` equally sized owned vectors
+/// (shared by the batched kernels and the engine's tied head). `rows`
+/// must be nonzero and divide `flat.len()`.
+pub(crate) fn split_rows(flat: Vec<f32>, rows: usize) -> Vec<Vec<f32>> {
+    debug_assert!(rows > 0);
+    debug_assert_eq!(flat.len() % rows, 0);
+    let row_len = flat.len() / rows;
+    if row_len == 0 {
+        return vec![Vec::new(); rows];
+    }
+    // One linear pass, each row right-sized (split_off would re-copy the
+    // shrinking tail on every iteration).
+    flat.chunks_exact(row_len).map(<[f32]>::to_vec).collect()
+}
+
+/// Send/Sync raw-pointer wrapper for disjoint parallel writes (shared
+/// with the engine's tied-head kernel).
+pub(crate) struct SendMut<T>(pub(crate) *mut T);
 impl<T> Clone for SendMut<T> {
     fn clone(&self) -> Self {
         *self
@@ -349,6 +640,44 @@ pub fn dense_matvec(w: &Tensor, x: &[f32]) -> Vec<f32> {
         }
     });
     y
+}
+
+/// Dense f32 batched GEMM counterpart: `ys[b][j] = Σ_i xs[b][i]·W[i,j]`,
+/// streaming W row-by-row exactly once for the whole batch. Per lane the
+/// op order matches [`dense_matvec`] (including the zero-activation skip),
+/// so `dense_matmul(w, &[x])[0] == dense_matvec(w, x)` bit for bit.
+pub fn dense_matmul(w: &Tensor, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let bn = xs.len();
+    if bn == 0 {
+        return Vec::new();
+    }
+    for x in xs {
+        assert_eq!(x.len(), w.rows);
+    }
+    // Per-sequence contiguous output rows: yflat[b·cols + j].
+    let mut yflat = vec![0f32; bn * w.cols];
+    let y_ptr = SendMut(yflat.as_mut_ptr());
+    let min_cols = (256 / bn).max(16);
+    parallel_for_chunks(w.cols, min_cols, |c0, c1| {
+        let y_ptr = y_ptr;
+        for (b, x) in xs.iter().enumerate() {
+            // SAFETY: disjoint column ranges per chunk; lanes b are
+            // disjoint output rows.
+            let yslice = unsafe {
+                std::slice::from_raw_parts_mut(y_ptr.0.add(b * w.cols + c0), c1 - c0)
+            };
+            for (i, &xv) in x.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let row = &w.row(i)[c0..c1];
+                for (yj, &wv) in yslice.iter_mut().zip(row) {
+                    *yj += xv * wv;
+                }
+            }
+        }
+    });
+    split_rows(yflat, bn)
 }
 
 #[cfg(test)]
@@ -468,5 +797,132 @@ mod tests {
         for (a, b) in y.iter().zip(&y_ref) {
             assert!((a - b).abs() < 2e-3 * b.abs().max(1.0), "{a} vs {b}");
         }
+    }
+
+    fn random_batch(rng: &mut Rng, bn: usize, rows: usize) -> Vec<Vec<f32>> {
+        (0..bn)
+            .map(|_| {
+                let mut x = vec![0f32; rows];
+                rng.fill_gauss(&mut x, 0.0, 1.0);
+                x
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matmul_matches_matvec_per_vector() {
+        let mut rng = Rng::new(175);
+        for mode in [QuantMode::Companded, QuantMode::Uniform] {
+            for bits in [2u8, 4] {
+                let (_, pm) = random_packed(&mut rng, 96, 40, bits, mode);
+                let xs = random_batch(&mut rng, 5, 96);
+                let qmv = QuantMatvec::new(&pm);
+                let ys = qmv.matmul(&xs);
+                assert_eq!(ys.len(), xs.len());
+                let dense = pm.unpack();
+                for (b, x) in xs.iter().enumerate() {
+                    let y_mv = qmv.matvec(x);
+                    let y_ref = dense_matvec(&dense, x);
+                    for j in 0..pm.cols {
+                        let g = ys[b][j];
+                        assert!(
+                            (g - y_mv[j]).abs() < 1e-3 * y_mv[j].abs().max(1.0),
+                            "{mode:?}/{bits}b lane {b} col {j}: gemm {g} vs matvec {}",
+                            y_mv[j]
+                        );
+                        assert!(
+                            (g - y_ref[j]).abs() < 2e-3 * y_ref[j].abs().max(1.0),
+                            "{mode:?}/{bits}b lane {b} col {j}: gemm {g} vs dense {}",
+                            y_ref[j]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_batched_is_bit_identical_to_batch_of_one() {
+        // The determinism contract behind token-identical batching: a
+        // lane's result must not depend on batch size (B = 16 exercises
+        // the widened AVX2 path, B = 1 the generic path).
+        let mut rng = Rng::new(176);
+        for bits in [2u8, 3, 5] {
+            let (_, pm) = random_packed(&mut rng, 128, 24, bits, QuantMode::Companded);
+            let plan = MatvecPlan::new(&pm);
+            for bn in [2usize, 8, 16] {
+                let xs = random_batch(&mut rng, bn, 128);
+                let batched = plan.matmul(&pm, &xs);
+                for (b, x) in xs.iter().enumerate() {
+                    let single = plan.matmul(&pm, std::slice::from_ref(x));
+                    assert_eq!(
+                        batched[b], single[0],
+                        "{bits}b B={bn} lane {b}: batched result differs from batch-1"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_handles_pruned_row_scale_and_fp_rows() {
+        let mut rng = Rng::new(177);
+        let (rows, cols) = (48, 10);
+        let mut w = Tensor::zeros(rows, cols);
+        rng.fill_laplace(&mut w.data, 0.0, 0.4);
+        let grouping = Grouping::build(rows, cols, 12, &vec![0.0; rows]);
+        let metas: Vec<crate::quant::GroupMeta> = (0..grouping.num_groups())
+            .map(|gi| {
+                let col = gi / grouping.m;
+                let sub = gi % grouping.m;
+                let vals = grouping.gather(&w, col, sub);
+                let mut gm =
+                    crate::quant::group_meta(&vals, 3, QuantMode::Uniform, ScaleRule::Range);
+                if gi % 5 == 0 {
+                    gm.bits = 0; // pruned groups in the mix
+                }
+                gm
+            })
+            .collect();
+        let scale: Vec<f32> = (0..rows).map(|_| 0.5 + rng.uniform_f32()).collect();
+        let fp = vec![1u32, 20, 33];
+        let pm = crate::quant::bitpack::PackedMatrix::pack_full(
+            &w,
+            &grouping,
+            &metas,
+            QuantMode::Uniform,
+            Some(scale),
+            &fp,
+        );
+        let plan = MatvecPlan::new(&pm);
+        let xs = random_batch(&mut rng, 9, rows);
+        let ys = plan.matmul(&pm, &xs);
+        let dense = pm.unpack();
+        for (b, x) in xs.iter().enumerate() {
+            let y_ref = dense_matvec(&dense, x);
+            for (a, r) in ys[b].iter().zip(&y_ref) {
+                assert!((a - r).abs() < 2e-3 * r.abs().max(1.0), "lane {b}: {a} vs {r}");
+            }
+            let single = plan.matmul(&pm, std::slice::from_ref(x));
+            assert_eq!(ys[b], single[0], "lane {b}: batch dependence");
+        }
+    }
+
+    #[test]
+    fn dense_matmul_matches_dense_matvec_exactly() {
+        let mut rng = Rng::new(178);
+        let (rows, cols) = (40, 21);
+        let mut w = Tensor::zeros(rows, cols);
+        rng.fill_gauss(&mut w.data, 0.0, 1.0);
+        // Include exact zeros to exercise the skip rule both ways.
+        w.data[7] = 0.0;
+        let mut xs = random_batch(&mut rng, 6, rows);
+        xs[2][5] = 0.0;
+        let ys = dense_matmul(&w, &xs);
+        for (b, x) in xs.iter().enumerate() {
+            let y_ref = dense_matvec(&w, x);
+            assert_eq!(ys[b], y_ref, "lane {b}");
+        }
+        assert!(dense_matmul(&w, &[]).is_empty());
     }
 }

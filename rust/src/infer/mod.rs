@@ -1,11 +1,11 @@
-//! Quantized inference: the mixed-precision bit-packed matvec kernel
-//! (paper Appendix A, CPU adaptation), the KV-cached decode engine, and
-//! the batched request server.
+//! Quantized inference: the mixed-precision bit-packed matvec/GEMM
+//! kernels (paper Appendix A, CPU adaptation), the KV-cached batched
+//! decode engine, and the continuous-batching request server.
 
 pub mod engine;
 pub mod matvec;
 pub mod server;
 
 pub use engine::{Engine, KvCache};
-pub use matvec::{dense_matvec, MatvecPlan, QuantMatvec};
-pub use server::{serve, Request, Response, ServeStats};
+pub use matvec::{dense_matmul, dense_matvec, MatvecPlan, QuantMatvec};
+pub use server::{serve, serve_threaded, Request, Response, ServeStats};

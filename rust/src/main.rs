@@ -5,7 +5,7 @@
 //! radio quantize ckpt.weights --method radio --bits 3.0 --group 64 --out model.radio
 //!                [--provider xla]          # use the AOT JAX/Pallas artifacts
 //! radio eval     model.radio  [--domain shifted] [--weights ckpt.weights]
-//! radio serve    model.radio  --requests 32 --workers 4 --max-new 24
+//! radio serve    model.radio  --requests 32 --max-batch 8 --max-new 24
 //! radio info     model.radio
 //! ```
 
@@ -182,7 +182,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let qm = QuantizedModel::load(Path::new(path))?;
     let engine = Engine::from_quantized(&qm);
     let n = args.get_usize("requests", 16);
-    let workers = args.get_usize("workers", 4);
+    // Continuous-batching slot count (`--workers` kept as an alias from
+    // the thread-per-request era).
+    let max_batch = args.get_usize("max-batch", args.get_usize("workers", 8));
     let max_new = args.get_usize("max-new", 16);
     let corpus = Corpus::synthetic(0xC4, Domain::Calib, 64 * 1024);
     let mut rng = Rng::new(0x5E7E);
@@ -192,7 +194,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             Request { id, prompt: toks, max_new }
         })
         .collect();
-    let (_, stats) = serve(&engine, requests, workers);
+    let (_, stats) = serve(&engine, requests, max_batch);
     println!("{stats}");
     Ok(())
 }

@@ -1,15 +1,43 @@
-//! A small scoped data-parallel helper (no rayon in the offline registry).
+//! A small data-parallel helper built on a **persistent worker pool** (no
+//! rayon in the offline registry).
 //!
-//! `parallel_for_chunks` splits an index range into contiguous chunks and
-//! runs a closure per chunk on `std::thread::scope` threads. Thread count
-//! defaults to available parallelism and is tunable via `RADIO_THREADS`.
-//! This is deliberately fork-join (no persistent pool): our hot loops are
-//! coarse-grained (whole matrix rows), so spawn overhead is negligible
-//! relative to work, and scoped borrows keep the API safe without `Arc`.
+//! The seed version forked `std::thread::scope` threads per call; that was
+//! fine for coarse offline quantization loops, but the decode path issues
+//! ~6 matvecs per layer per token, and at serving rates the spawn/join
+//! cost dominated the kernels themselves. Workers are now spawned once,
+//! lazily, on first use (`RADIO_THREADS`-tunable, snapshotted at pool
+//! creation) and parked on a condvar between jobs, so a parallel region
+//! costs one notify + one latch instead of N thread spawns.
+//!
+//! The public API is unchanged: [`parallel_for_chunks`],
+//! [`parallel_for_dynamic`] and [`parallel_map`] accept borrowed
+//! (non-`'static`) closures. Safety comes from the fork-join discipline:
+//! the submitting thread never returns from a parallel call until every
+//! worker has finished running the closure, so borrows stay live for the
+//! whole region (the same argument rayon's `scope` makes).
+//!
+//! Reentrancy: a parallel call made from inside a parallel region (from a
+//! pool worker or from the submitting thread) runs inline on the calling
+//! thread. This keeps nested parallelism deadlock-free and means engine
+//! code can parallelize freely without auditing its callees.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::cell::Cell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard, OnceLock};
 
-/// Number of worker threads to use.
+/// Poison-tolerant lock: a panic that propagated out of a parallel
+/// region may have poisoned pool mutexes while unwinding; the pool's
+/// state is still consistent (all signalling is via atomics), so later
+/// regions must keep working.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Number of worker threads to use. Reads `RADIO_THREADS` on every call;
+/// note the persistent pool snapshots this at first parallel call, so
+/// raising it later has no effect (lowering it to 1 still forces inline
+/// execution, which is useful for deterministic debugging).
 pub fn num_threads() -> usize {
     if let Ok(s) = std::env::var("RADIO_THREADS") {
         if let Ok(n) = s.parse::<usize>() {
@@ -21,63 +49,239 @@ pub fn num_threads() -> usize {
         .unwrap_or(1)
 }
 
+thread_local! {
+    /// True while this thread is executing inside a parallel region
+    /// (always true on pool workers). Nested calls run inline.
+    static IN_PARALLEL: Cell<bool> = const { Cell::new(false) };
+}
+
+fn in_parallel() -> bool {
+    IN_PARALLEL.with(|c| c.get())
+}
+
+/// Completion latch for one posted job.
+struct JobDone {
+    /// Spawned workers that have not yet finished running the closure.
+    remaining: AtomicUsize,
+    panicked: AtomicBool,
+    m: Mutex<()>,
+    cv: Condvar,
+}
+
+/// Type-erased pointer to the borrowed broadcast closure plus its latch.
+/// Valid only until `remaining` reaches zero — the submitter blocks until
+/// then, keeping the referents alive.
+#[derive(Clone, Copy)]
+struct JobMsg {
+    data: *const (),
+    call: unsafe fn(*const ()),
+    done: *const JobDone,
+}
+
+// SAFETY: the pointers are dereferenced only while the submitting thread
+// is blocked in `broadcast`, which owns the referents on its stack.
+unsafe impl Send for JobMsg {}
+
+unsafe fn call_thunk<F: Fn() + Sync>(p: *const ()) {
+    (*(p as *const F))();
+}
+
+struct Slot {
+    epoch: u64,
+    job: Option<JobMsg>,
+}
+
+struct Pool {
+    /// Spawned workers (the submitter participates as the +1th lane).
+    workers: usize,
+    slot: Mutex<Slot>,
+    cv: Condvar,
+    /// Serializes broadcasts: one job in flight at a time.
+    submit: Mutex<()>,
+}
+
+fn worker_loop(pool: &'static Pool) {
+    // Pool threads are permanently "inside" a parallel region: any
+    // parallel call they make must run inline.
+    IN_PARALLEL.with(|c| c.set(true));
+    let mut seen = 0u64;
+    loop {
+        let msg = {
+            let mut g = lock(&pool.slot);
+            loop {
+                if g.epoch != seen {
+                    seen = g.epoch;
+                    break g.job.expect("job posted with epoch bump");
+                }
+                g = pool.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        let done = unsafe { &*msg.done };
+        if catch_unwind(AssertUnwindSafe(|| unsafe { (msg.call)(msg.data) })).is_err() {
+            done.panicked.store(true, Ordering::Relaxed);
+        }
+        {
+            // Decrement-and-notify under the latch mutex. The submitter
+            // also reads `remaining` only under this mutex, so it cannot
+            // observe 0 (and free the stack-local latch) until this
+            // critical section — the worker's last touch of `done` — has
+            // fully released.
+            let _g = lock(&done.m);
+            if done.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                done.cv.notify_all();
+            }
+        }
+    }
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<&'static Pool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let workers = num_threads().saturating_sub(1);
+        let p: &'static Pool = Box::leak(Box::new(Pool {
+            workers,
+            slot: Mutex::new(Slot { epoch: 0, job: None }),
+            cv: Condvar::new(),
+            submit: Mutex::new(()),
+        }));
+        for i in 0..workers {
+            std::thread::Builder::new()
+                .name(format!("radio-pool-{i}"))
+                .spawn(move || worker_loop(p))
+                .expect("spawning pool worker");
+        }
+        p
+    })
+}
+
+/// Restores the submitter's IN_PARALLEL flag even if the closure panics.
+struct ParallelGuard;
+
+impl ParallelGuard {
+    fn enter() -> ParallelGuard {
+        IN_PARALLEL.with(|c| c.set(true));
+        ParallelGuard
+    }
+}
+
+impl Drop for ParallelGuard {
+    fn drop(&mut self) {
+        IN_PARALLEL.with(|c| c.set(false));
+    }
+}
+
+/// Run `f` once on every pool worker *and* on the calling thread, then
+/// wait for all of them. `f` is typically a work-grabbing loop over an
+/// atomic counter, so lane count never affects coverage.
+fn broadcast<F: Fn() + Sync>(f: F) {
+    let pool = pool();
+    if pool.workers == 0 {
+        let _guard = ParallelGuard::enter();
+        f();
+        return;
+    }
+    // One job in flight at a time. If another thread's region is already
+    // running, don't idle waiting for the pool — run this region inline
+    // on the calling thread so independent submitters (e.g. the
+    // thread-per-request baseline) keep every core busy.
+    let _submit = match pool.submit.try_lock() {
+        Ok(g) => g,
+        Err(std::sync::TryLockError::Poisoned(e)) => e.into_inner(),
+        Err(std::sync::TryLockError::WouldBlock) => {
+            let _guard = ParallelGuard::enter();
+            f();
+            return;
+        }
+    };
+    let _guard = ParallelGuard::enter();
+    let done = JobDone {
+        remaining: AtomicUsize::new(pool.workers),
+        panicked: AtomicBool::new(false),
+        m: Mutex::new(()),
+        cv: Condvar::new(),
+    };
+    let msg = JobMsg {
+        data: &f as *const F as *const (),
+        call: call_thunk::<F>,
+        done: &done as *const JobDone,
+    };
+    {
+        let mut g = lock(&pool.slot);
+        g.epoch += 1;
+        g.job = Some(msg);
+    }
+    pool.cv.notify_all();
+    // The submitter is a full participant lane.
+    let caller_panic = catch_unwind(AssertUnwindSafe(|| f())).err();
+    // Block until every worker has finished touching `f` and `done`.
+    // `remaining` is only read (and decremented) under `done.m`, which is
+    // what makes dropping the stack-local latch safe on exit.
+    {
+        let mut g = lock(&done.m);
+        while done.remaining.load(Ordering::Acquire) != 0 {
+            g = done.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+    // Drop the stale pointer from the slot (workers are all past it: each
+    // decremented `remaining` after copying the message out).
+    lock(&pool.slot).job = None;
+    if let Some(p) = caller_panic {
+        resume_unwind(p);
+    }
+    if done.panicked.load(Ordering::Relaxed) {
+        panic!("worker thread panicked inside a parallel region");
+    }
+}
+
 /// Run `f(start, end)` over disjoint chunks covering `0..n` in parallel.
 /// `f` must be `Sync` (called concurrently with disjoint ranges).
 pub fn parallel_for_chunks<F>(n: usize, min_chunk: usize, f: F)
 where
     F: Fn(usize, usize) + Sync,
 {
-    let threads = num_threads();
     if n == 0 {
         return;
     }
-    if threads <= 1 || n <= min_chunk {
+    let threads = num_threads();
+    if threads <= 1 || n <= min_chunk || in_parallel() {
         f(0, n);
         return;
     }
     let chunks = threads.min(n.div_ceil(min_chunk.max(1)));
     let chunk = n.div_ceil(chunks);
-    std::thread::scope(|s| {
-        for c in 0..chunks {
-            let start = c * chunk;
-            let end = ((c + 1) * chunk).min(n);
-            if start >= end {
-                break;
-            }
-            let fref = &f;
-            s.spawn(move || fref(start, end));
+    let next = AtomicUsize::new(0);
+    broadcast(|| loop {
+        let c = next.fetch_add(1, Ordering::Relaxed);
+        let start = c * chunk;
+        if start >= n {
+            break;
         }
+        f(start, (start + chunk).min(n));
     });
 }
 
-/// Dynamic work-stealing variant: workers grab `grain`-sized blocks off a
+/// Dynamic work-stealing variant: lanes grab `grain`-sized blocks off a
 /// shared counter. Better when per-item cost is highly skewed (e.g. GPTQ
 /// columns, mixed-depth matvec rows).
 pub fn parallel_for_dynamic<F>(n: usize, grain: usize, f: F)
 where
     F: Fn(usize, usize) + Sync,
 {
-    let threads = num_threads();
     if n == 0 {
         return;
     }
-    if threads <= 1 || n <= grain {
+    let grain = grain.max(1);
+    if num_threads() <= 1 || n <= grain || in_parallel() {
         f(0, n);
         return;
     }
     let next = AtomicUsize::new(0);
-    std::thread::scope(|s| {
-        for _ in 0..threads {
-            let next = &next;
-            let fref = &f;
-            s.spawn(move || loop {
-                let start = next.fetch_add(grain, Ordering::Relaxed);
-                if start >= n {
-                    break;
-                }
-                fref(start, (start + grain).min(n));
-            });
+    broadcast(|| loop {
+        let start = next.fetch_add(grain, Ordering::Relaxed);
+        if start >= n {
+            break;
         }
+        f(start, (start + grain).min(n));
     });
 }
 
@@ -94,7 +298,8 @@ where
             let p = out_ptr; // copy the Send wrapper into the closure
             for i in start..end {
                 // SAFETY: chunks are disjoint, so each index is written once
-                // by exactly one thread; the Vec outlives the scope.
+                // by exactly one thread; the Vec outlives the call (the
+                // submitter blocks until all lanes finish).
                 unsafe { *p.0.add(i) = f(i) };
             }
         });
@@ -153,5 +358,69 @@ mod tests {
         parallel_for_chunks(0, 1, |_, _| panic!("should not run"));
         let v: Vec<usize> = parallel_map(0, 1, |i| i);
         assert!(v.is_empty());
+    }
+
+    #[test]
+    fn nested_parallel_runs_inline_and_completes() {
+        let hits: Vec<AtomicU64> = (0..256).map(|_| AtomicU64::new(0)).collect();
+        parallel_for_chunks(16, 1, |s0, e0| {
+            for outer in s0..e0 {
+                // Nested region: must not deadlock; runs inline per lane.
+                parallel_for_chunks(16, 1, |s1, e1| {
+                    for inner in s1..e1 {
+                        hits[outer * 16 + inner].fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn concurrent_submitters_all_complete() {
+        // Multiple non-pool threads racing to submit jobs must serialize
+        // cleanly (this is the thread-per-request serving pattern).
+        let totals: Vec<u64> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|t| {
+                    s.spawn(move || {
+                        let acc = AtomicU64::new(0);
+                        parallel_for_chunks(500, 8, |a, b| {
+                            let mut local = 0u64;
+                            for i in a..b {
+                                local += (i as u64) + t as u64;
+                            }
+                            acc.fetch_add(local, Ordering::Relaxed);
+                        });
+                        acc.load(Ordering::Relaxed)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let base: u64 = (0..500u64).sum();
+        for (t, total) in totals.iter().enumerate() {
+            assert_eq!(*total, base + 500 * t as u64);
+        }
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_region() {
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            parallel_for_chunks(64, 1, |s, _| {
+                if s == 0 {
+                    panic!("deliberate test panic");
+                }
+            });
+        }));
+        assert!(result.is_err(), "panic must propagate to the submitter");
+        // The pool must still work afterwards.
+        let hits: Vec<AtomicU64> = (0..100).map(|_| AtomicU64::new(0)).collect();
+        parallel_for_chunks(100, 5, |s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
     }
 }
