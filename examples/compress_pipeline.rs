@@ -3,12 +3,15 @@
 //!
 //! 1. Train a ~1.1M-parameter transformer (`ropt-small`) on the synthetic
 //!    corpus with the in-repo Adam trainer, logging the loss curve.
-//! 2. Quantize to 4.0 and 3.0 bits with RTN / GPTQ / AWQ / OWQ / Radio —
-//!    Radio uses the AOT JAX/Pallas gradient artifacts via PJRT when
-//!    `artifacts/` matches the model (the L2+L1 path), falling back to
-//!    native backprop otherwise.
-//! 3. Evaluate perplexity on both domains + downstream tasks, pack to a
-//!    `.radio` bitstream, and serve generation requests through the
+//! 2. Quantize to 4.0 and 3.0 bits. Baselines (RTN/GPTQ/AWQ/OWQ) run per
+//!    rate through `run_method`; Radio runs the staged pipeline —
+//!    **Calibrate once** (gradient iterations, via the AOT JAX/Pallas
+//!    artifacts over PJRT when `artifacts/` matches the model, native
+//!    backprop otherwise), then **Allocate + Pack** per target rate off
+//!    the same `CalibrationStats` artifact, with per-stage wall-clock.
+//! 3. Evaluate perplexity on both domains + downstream tasks, stream the
+//!    3-bit model into a `.radio` bitstream (layer-parallel packing, no
+//!    resident dense clone), and serve generation requests through the
 //!    quantized engine, reporting latency/throughput.
 //!
 //! ```bash
@@ -17,13 +20,14 @@
 
 use radio::coordinator::gradients::{GradientProvider, NativeProvider};
 use radio::coordinator::pipeline::run_method;
+use radio::coordinator::Radio;
 use radio::eval::{average_score, perplexity};
 use radio::exp;
 use radio::infer::{serve, Engine, Request};
-use radio::model::corpus::Domain;
 use radio::model::train::{train, TrainConfig};
 use radio::model::weights::Weights;
 use radio::model::ModelConfig;
+use radio::quant::format::QuantizedModel;
 use radio::report;
 use radio::runtime::XlaProvider;
 use radio::util::bench::Table;
@@ -61,7 +65,7 @@ fn main() {
     let ppl_fp_s = perplexity(&weights, &shifted_test, exp::EVAL_SEQ, exp::EVAL_WINDOWS);
     println!("FP32: C4-like val PPL {ppl_fp_c:.3} | WikiText-like test PPL {ppl_fp_s:.3}");
 
-    // ---- 2. Quantize with every method at 4 and 3 bits.
+    // ---- 2. Quantize: baselines per rate, Radio calibrate-once.
     println!("\n=== [2/3] quantizing with all methods ===");
     // Prefer the XLA (JAX+Pallas artifact) provider when compatible.
     let mut native = NativeProvider;
@@ -69,58 +73,98 @@ fn main() {
     let use_xla = xla.as_ref().map(|p| p.config == weights.config && p.batch == 8).unwrap_or(false);
     println!("gradient provider: {}", if use_xla { "xla (AOT JAX/Pallas artifacts)" } else { "native backprop" });
 
+    // Radio: one calibration shared by both target rates.
+    let radio_cfg = exp::radio_cfg(4.0, 64, 16);
+    let radio = Radio::new(radio_cfg);
+    let t_cal = std::time::Instant::now();
+    let (stats, _) = {
+        let provider: &mut dyn GradientProvider = if use_xla {
+            xla.as_mut().unwrap()
+        } else {
+            &mut native
+        };
+        radio.calibrate(&weights, &calib_train, provider, None)
+    };
+    let calib_s = t_cal.elapsed().as_secs_f64();
+    println!("Radio calibration: {:.1}s (shared by both rates below)", calib_s);
+
     let mut table = Table::new(&[
         "method", "bits", "C4-val PPL", "Wiki-test PPL", "tasks %", "pruned %", "overhead %", "time s",
     ]);
-    let mut radio3: Option<radio::quant::format::QuantizedModel> = None;
+    let mut radio3: Option<QuantizedModel> = None;
     for bits in [4u8, 3u8] {
-        for method in exp::method_grid(bits, 64, 16) {
+        // Baselines: full run per rate.
+        let mut rows: Vec<(String, QuantizedModel, f64)> = Vec::new();
+        for method in exp::baseline_grid(bits, 64) {
             let provider: &mut dyn GradientProvider = if use_xla {
                 xla.as_mut().unwrap()
             } else {
                 &mut native
             };
             let r = run_method(&method, &weights, &calib_train, provider);
-            let wq = r.model.to_weights();
+            rows.push((r.method, r.model, r.seconds));
+        }
+        // Radio: allocate + pack off the shared calibration.
+        let t_rp = std::time::Instant::now();
+        let alloc = stats.allocate(bits as f64, radio_cfg.bmax, radio_cfg.mixed_depth);
+        let qm = radio.pack(&weights, &stats, &alloc);
+        let rp_s = t_rp.elapsed().as_secs_f64();
+        println!(
+            "  Radio({bits}.0b) stages: calibrate {calib_s:.1}s (shared) | alloc+pack {rp_s:.2}s"
+        );
+        rows.push((format!("Radio({bits}.0b)"), qm, rp_s));
+
+        for (name, model, secs) in rows {
+            let wq = model.to_weights();
             let pc = perplexity(&wq, &calib_val, exp::EVAL_SEQ, exp::EVAL_WINDOWS);
             let ps = perplexity(&wq, &shifted_test, exp::EVAL_SEQ, exp::EVAL_WINDOWS);
             let engine = Engine::from_dense(&wq);
             let tasks = average_score(&engine, &calib_val, 24, 0x7A5C);
             println!(
                 "  {:<16} {:.2}b  C4 {pc:7.3}  Wiki {ps:7.3}  tasks {:5.1}%  ({:.1}s)",
-                r.method,
-                r.model.avg_bits(),
+                name,
+                model.avg_bits(),
                 100.0 * tasks,
-                r.seconds
+                secs
             );
             table.row(vec![
-                r.method.clone(),
-                format!("{:.4}", r.model.avg_bits()),
+                name.clone(),
+                format!("{:.4}", model.avg_bits()),
                 format!("{pc:.3}"),
                 format!("{ps:.3}"),
                 format!("{:.1}", 100.0 * tasks),
-                format!("{:.2}", 100.0 * r.model.pruned_fraction()),
-                format!("{:.2}", 100.0 * r.model.overhead_fraction()),
-                format!("{:.1}", r.seconds),
+                format!("{:.2}", 100.0 * model.pruned_fraction()),
+                format!("{:.2}", 100.0 * model.overhead_fraction()),
+                format!("{:.1}", secs),
             ]);
-            if bits == 3 && r.method.starts_with("Radio") {
-                radio3 = Some(r.model);
+            if bits == 3 && name.starts_with("Radio") {
+                radio3 = Some(model);
             }
         }
     }
     table.print();
 
-    // ---- 3. Pack + serve through the quantized engine.
+    // ---- 3. Stream-pack + serve through the quantized engine.
     println!("\n=== [3/3] serving the 3-bit Radio model ===");
     let qm = radio3.expect("radio 3-bit model");
     let path = std::path::PathBuf::from("artifacts/ropt_small_3bit.radio");
-    qm.save(&path).expect("save .radio");
-    let meta = std::fs::metadata(&path).unwrap();
-    println!("packed bitstream: {} ({} KiB)", path.display(), meta.len() / 1024);
+    // Stream straight from the calibration artifact: packs each window of
+    // matrices in parallel and writes it out without building a second
+    // resident model.
+    let alloc3 = stats.allocate(3.0, radio_cfg.bmax, radio_cfg.mixed_depth);
+    let summary = radio
+        .pack_streaming(&weights, &stats, &alloc3, &path)
+        .expect("stream .radio");
+    println!(
+        "packed bitstream: {} ({} KiB, {} matrices, {:.4} bits/weight, streamed)",
+        path.display(),
+        summary.bytes / 1024,
+        summary.matrices,
+        summary.avg_bits
+    );
 
     let engine = Engine::from_quantized(&qm);
     let fp_engine = Engine::from_dense(&weights);
-    let mut rng = Rng::new(0x5E7E);
     let mk_requests = || -> Vec<Request> {
         let mut rng2 = Rng::new(0xBA7C);
         (0..24)
@@ -130,7 +174,6 @@ fn main() {
             })
             .collect()
     };
-    let _ = &mut rng;
     let (_, stats_q) = serve(&engine, mk_requests(), 4);
     let (_, stats_fp) = serve(&fp_engine, mk_requests(), 4);
     println!("quantized engine : {stats_q}");
@@ -138,10 +181,11 @@ fn main() {
 
     report::write_report(
         "e2e_compress_pipeline",
-        "End-to-end: train → quantize (all methods) → eval → serve",
+        "End-to-end: train → quantize (calibrate-once Radio + baselines) → eval → serve",
         &[("Method comparison (Table 1/5 analogue)", &table)],
         &format!(
             "FP32 PPL: C4-val {ppl_fp_c:.3}, Wiki-test {ppl_fp_s:.3}. \
+             Radio calibration {calib_s:.1}s shared across rates. \
              Serving (3-bit Radio): {stats_q}. FP32 engine: {stats_fp}."
         ),
     );

@@ -2,15 +2,27 @@
 //! model, post-training, to ANY user-specified rate (2.0 … 6.0 bits) and
 //! trace the rate–distortion curve (perplexity vs bits/weight).
 //!
+//! Since PR 2 this runs the staged pipeline: the expensive rate-
+//! independent **Calibrate** stage (gradient iterations → `CalibrationStats`)
+//! executes exactly once and is persisted to `artifacts/`, then every
+//! target rate is an **Allocate** (one dual-ascent solve) + **Pack**
+//! (parallel requantization) off the same artifact. Each swept rate's
+//! output is bit-identical to a from-scratch single-rate run at the same
+//! seed (see `calibrate_once_allocate_many_matches_from_scratch`).
+//!
 //! ```bash
 //! cargo run --release --offline --example rd_sweep
 //! ```
 
-use radio::coordinator::{NativeProvider, Radio};
+use radio::coordinator::pipeline::radio_sweep;
+use radio::coordinator::CalibrationStats;
+use radio::coordinator::NativeProvider;
 use radio::eval::perplexity;
 use radio::exp;
 use radio::report;
 use radio::util::bench::Table;
+
+const RATES: [f64; 7] = [2.0, 2.4, 2.8, 3.2, 4.0, 5.0, 6.0];
 
 fn main() {
     let weights = exp::trained_model("ropt-nano", exp::default_steps("ropt-nano"));
@@ -19,37 +31,72 @@ fn main() {
 
     let ppl_fp = perplexity(&weights, &test, exp::EVAL_SEQ, exp::EVAL_WINDOWS);
     println!("FP32 PPL: {ppl_fp:.3}\n");
-    println!("{:<8} {:>12} {:>10} {:>10}", "target", "achieved", "PPL", "pruned %");
 
-    let mut table = Table::new(&["target bits", "achieved bits", "PPL", "pruned %"]);
+    // ---- Calibrate once, allocate + pack for all 7 rates.
+    let cfg = exp::radio_cfg(RATES[0], 32, 10);
     let mut provider = NativeProvider;
+    let (stats, calib_s, results) = radio_sweep(&cfg, &RATES, &weights, &calib_train, &mut provider);
+    println!(
+        "calibration: {} iterations in {calib_s:.2}s (run ONCE for all {} rates)",
+        cfg.iters,
+        RATES.len()
+    );
+
+    // Persist the artifact: any later rate costs only allocate + pack.
+    let art = std::path::PathBuf::from("artifacts/ropt_nano_calibration.radiocal");
+    if let Some(dir) = art.parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    stats.save(&art).expect("save calibration artifact");
+    let reloaded = CalibrationStats::load(&art).expect("load calibration artifact");
+    println!(
+        "calibration artifact: {} ({} KiB, {} matrices) — reloaded OK\n",
+        art.display(),
+        std::fs::metadata(&art).map(|m| m.len() / 1024).unwrap_or(0),
+        reloaded.mats.len()
+    );
+
+    println!(
+        "{:<8} {:>12} {:>10} {:>10} {:>16}",
+        "target", "achieved", "PPL", "pruned %", "alloc+pack s"
+    );
+    let mut table = Table::new(&["target bits", "achieved bits", "PPL", "pruned %", "alloc+pack s"]);
     let mut last_ppl = f64::INFINITY;
-    for target in [2.0, 2.4, 2.8, 3.2, 4.0, 5.0, 6.0] {
-        let (qm, _) = Radio::new(exp::radio_cfg(target, 32, 10)).quantize(
-            &weights,
-            &calib_train,
-            &mut provider,
-            None,
-        );
+    let mut per_rate_total = 0.0;
+    for (r, target) in results.iter().zip(RATES) {
+        let qm = &r.model;
         let ppl = perplexity(&qm.to_weights(), &test, exp::EVAL_SEQ, exp::EVAL_WINDOWS);
         println!(
-            "{target:<8.1} {:>12.4} {ppl:>10.3} {:>10.2}",
+            "{target:<8.1} {:>12.4} {ppl:>10.3} {:>10.2} {:>16.3}",
             qm.avg_bits(),
-            100.0 * qm.pruned_fraction()
+            100.0 * qm.pruned_fraction(),
+            r.seconds
         );
         table.row(vec![
             format!("{target:.1}"),
             format!("{:.4}", qm.avg_bits()),
             format!("{ppl:.3}"),
             format!("{:.2}", 100.0 * qm.pruned_fraction()),
+            format!("{:.3}", r.seconds),
         ]);
+        per_rate_total += r.seconds;
         last_ppl = ppl;
     }
-    println!("\n(PPL should approach the FP32 value {ppl_fp:.3} as rate grows — final: {last_ppl:.3})");
+    println!(
+        "\nstaged total: {:.2}s (calibrate {calib_s:.2}s + {} × alloc/pack {per_rate_total:.2}s); \
+         legacy per-rate recalibration would pay ~{:.2}s",
+        calib_s + per_rate_total,
+        RATES.len(),
+        RATES.len() as f64 * calib_s + per_rate_total,
+    );
+    println!("(PPL should approach the FP32 value {ppl_fp:.3} as rate grows — final: {last_ppl:.3})");
     report::write_report(
         "rd_sweep",
-        "Rate–distortion sweep (Radio, ropt-nano)",
+        "Rate–distortion sweep (Radio, ropt-nano, calibrate-once)",
         &[("PPL vs target rate", &table)],
-        &format!("FP32 PPL {ppl_fp:.3}."),
+        &format!(
+            "FP32 PPL {ppl_fp:.3}. One calibration ({calib_s:.2}s) shared by {} rates.",
+            RATES.len()
+        ),
     );
 }

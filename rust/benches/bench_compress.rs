@@ -1,0 +1,179 @@
+//! Compression-pipeline throughput: calibrate-once-sweep-N-rates (staged
+//! Calibrate/Allocate/Pack) vs legacy per-rate recalibration, plus
+//! matrices/sec for serial vs threadpool-parallel packing.
+//!
+//! Emits a paper-shaped table via `report` *and* a machine-readable
+//! `BENCH_compress.json` at the repo root so the compression-path perf
+//! trajectory can be tracked across PRs.
+//!
+//! ```bash
+//! cargo bench --bench bench_compress            # quick
+//! RADIO_BENCH_FULL=1 cargo bench --bench bench_compress
+//! ```
+
+use radio::coordinator::{NativeProvider, Radio, RadioConfig};
+use radio::exp;
+use radio::model::weights::Weights;
+use radio::model::ModelConfig;
+use radio::quant::quantize_matrix;
+use radio::report;
+use radio::util::bench::{black_box, Bench, Table};
+use radio::util::json::Json;
+use radio::util::rng::Rng;
+
+const RATES: [f64; 7] = [2.0, 2.4, 2.8, 3.2, 4.0, 5.0, 6.0];
+
+fn main() {
+    let quick = std::env::var("RADIO_BENCH_FULL").is_err();
+    let preset = if quick { "ropt-nano" } else { "ropt-small" };
+    let cfg = ModelConfig::preset(preset).unwrap();
+    // Synthetic pretrained-shaped weights: pipeline throughput does not
+    // depend on what the model learned, only on its shapes/statistics.
+    let mut rng = Rng::new(0xC0B5);
+    let w = Weights::init_pretrained_like(cfg, &mut rng);
+    let (calib, _) = exp::corpora();
+    let (calib_train, _, _) = calib.split();
+    let iters = if quick { 6 } else { 12 };
+    let rcfg: RadioConfig = exp::radio_cfg(4.0, 32, iters);
+
+    println!(
+        "compression bench: {preset} (synthetic), {} calibration iters, {} target rates",
+        iters,
+        RATES.len()
+    );
+
+    // ---- Legacy path: full quantize (recalibrates) per rate.
+    let mut provider = NativeProvider;
+    let t_legacy = std::time::Instant::now();
+    let mut legacy_models = Vec::new();
+    for &rate in &RATES {
+        let mut c = rcfg;
+        c.target_bits = rate;
+        let (qm, _) = Radio::new(c).quantize(&w, &calib_train, &mut provider, None);
+        legacy_models.push(qm);
+    }
+    let legacy_s = t_legacy.elapsed().as_secs_f64();
+    println!("legacy  (recalibrate per rate): {legacy_s:.2}s total");
+
+    // ---- Staged path: calibrate once, allocate + pack per rate.
+    let radio = Radio::new(rcfg);
+    let t_cal = std::time::Instant::now();
+    let (stats, _) = radio.calibrate(&w, &calib_train, &mut provider, None);
+    let calibrate_s = t_cal.elapsed().as_secs_f64();
+    let mut allocate_s = 0.0;
+    let mut pack_s = 0.0;
+    let mut staged_models = Vec::new();
+    for &rate in &RATES {
+        let ta = std::time::Instant::now();
+        let alloc = stats.allocate(rate, rcfg.bmax, rcfg.mixed_depth);
+        allocate_s += ta.elapsed().as_secs_f64();
+        let tp = std::time::Instant::now();
+        staged_models.push(radio.pack(&w, &stats, &alloc));
+        pack_s += tp.elapsed().as_secs_f64();
+    }
+    let staged_s = calibrate_s + allocate_s + pack_s;
+    let speedup = legacy_s / staged_s.max(1e-12);
+    println!(
+        "staged  (calibrate once)      : {staged_s:.2}s total \
+         (calibrate {calibrate_s:.2}s + allocate {allocate_s:.3}s + pack {pack_s:.2}s) — \
+         {speedup:.2}x"
+    );
+
+    // ---- Bit-identity: every swept rate must match its from-scratch run.
+    let mut bit_identical = true;
+    for ((a, b), &rate) in legacy_models.iter().zip(&staged_models).zip(&RATES) {
+        let (wa, wb) = (a.to_weights(), b.to_weights());
+        for (la, lb) in wa.layers.iter().zip(&wb.layers) {
+            if la.wq.data != lb.wq.data || la.w2.data != lb.w2.data || la.bq != lb.bq {
+                bit_identical = false;
+                eprintln!("MISMATCH at rate {rate}");
+            }
+        }
+        if a.avg_bits() != b.avg_bits() {
+            bit_identical = false;
+        }
+    }
+    println!("bit-identical to from-scratch runs: {bit_identical}");
+
+    // ---- Packing throughput: serial loop vs threadpool-parallel Pack.
+    let alloc = stats.allocate(3.0, rcfg.bmax, rcfg.mixed_depth);
+    let n_mats = stats.mats.len();
+    let bench = if quick { Bench::quick() } else { Bench::default() };
+    let serial = bench.run("pack serial", || {
+        for (i, mc) in stats.mats.iter().enumerate() {
+            let pm = quantize_matrix(
+                w.matrix(mc.id),
+                &mc.grouping,
+                &alloc.bits[i].1,
+                rcfg.mode,
+                rcfg.scale_rule,
+            );
+            black_box(pm.payload_bits());
+        }
+    });
+    let parallel = bench.run("pack parallel", || {
+        black_box(radio.pack(&w, &stats, &alloc).packed.len());
+    });
+    let serial_mps = n_mats as f64 / serial.median_secs();
+    let parallel_mps = n_mats as f64 / parallel.median_secs();
+    println!(
+        "packing: serial {serial_mps:.1} matrices/s vs parallel {parallel_mps:.1} matrices/s \
+         ({:.2}x, {} threads)",
+        parallel_mps / serial_mps,
+        radio::util::threadpool::num_threads()
+    );
+
+    let mut table = Table::new(&["path", "total s", "calibrate s", "allocate s", "pack s"]);
+    table.row(vec![
+        "legacy per-rate".into(),
+        format!("{legacy_s:.2}"),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+    ]);
+    table.row(vec![
+        "calibrate-once".into(),
+        format!("{staged_s:.2}"),
+        format!("{calibrate_s:.2}"),
+        format!("{allocate_s:.3}"),
+        format!("{pack_s:.2}"),
+    ]);
+    table.print();
+    report::write_report(
+        "bench_compress",
+        "Compression pipeline: calibrate-once sweep vs per-rate recalibration",
+        &[("7-rate sweep wall-clock", &table)],
+        &format!(
+            "Calibration is rate-independent, so the sweep pays it once: {speedup:.2}x over \
+             recalibrating per rate. Packing parallelizes across matrices on the persistent \
+             threadpool ({serial_mps:.1} → {parallel_mps:.1} matrices/s). Bit-identical: \
+             {bit_identical}."
+        ),
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("compress")),
+        ("model", Json::str(preset)),
+        ("calib_iters", Json::num(iters as f64)),
+        ("rates", Json::arr(RATES.iter().map(|&r| Json::num(r)))),
+        ("legacy_total_s", Json::num(legacy_s)),
+        ("staged_total_s", Json::num(staged_s)),
+        ("staged_calibrate_s", Json::num(calibrate_s)),
+        ("staged_allocate_s", Json::num(allocate_s)),
+        ("staged_pack_s", Json::num(pack_s)),
+        ("speedup_staged_vs_legacy", Json::num(speedup)),
+        ("bit_identical", Json::Bool(bit_identical)),
+        ("pack_serial_matrices_per_s", Json::num(serial_mps)),
+        ("pack_parallel_matrices_per_s", Json::num(parallel_mps)),
+        (
+            "pack_parallel_speedup",
+            Json::num(parallel_mps / serial_mps.max(1e-12)),
+        ),
+        ("threads", Json::num(radio::util::threadpool::num_threads() as f64)),
+    ]);
+    let path = "BENCH_compress.json";
+    match std::fs::write(path, json.to_pretty()) {
+        Ok(()) => println!("[bench] wrote {path}"),
+        Err(e) => eprintln!("[bench] FAILED to write {path}: {e}"),
+    }
+}

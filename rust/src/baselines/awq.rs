@@ -9,7 +9,7 @@
 use crate::model::corpus::Corpus;
 use crate::model::tensor::Tensor;
 use crate::model::transformer;
-use crate::model::weights::{MatId, Weights};
+use crate::model::weights::{MatId, SideParams, Weights};
 use crate::quant::bitpack::PackedMatrix;
 use crate::quant::grouping::Grouping;
 use crate::quant::{group_meta, QuantMode, ScaleRule};
@@ -129,7 +129,7 @@ pub fn awq_quantize(
         let act: Vec<f32> = acts[k].iter().map(|&a| (a / count as f64) as f32).collect();
         packed.push((id, awq_matrix(w.matrix(id), &act, cfg)));
     }
-    crate::quant::format::QuantizedModel { base: w.clone(), packed }
+    crate::quant::format::QuantizedModel { base: SideParams::from_weights(w), packed }
 }
 
 #[cfg(test)]

@@ -21,7 +21,7 @@
 use crate::model::corpus::Corpus;
 use crate::model::tensor::Tensor;
 use crate::model::transformer;
-use crate::model::weights::{MatId, Role, Weights};
+use crate::model::weights::{MatId, Role, SideParams, Weights};
 use crate::quant::bitpack::{GroupMeta, PackedMatrix};
 use crate::quant::grouping::Grouping;
 use crate::quant::{group_meta, QuantMode, ScaleRule};
@@ -209,7 +209,7 @@ pub fn gptq_quantize(
             packed.push((id, pm));
         }
     }
-    crate::quant::format::QuantizedModel { base: current, packed }
+    crate::quant::format::QuantizedModel { base: SideParams::from_weights(&current), packed }
 }
 
 #[cfg(test)]

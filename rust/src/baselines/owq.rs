@@ -8,7 +8,7 @@
 use crate::model::corpus::Corpus;
 use crate::model::tensor::Tensor;
 use crate::model::transformer;
-use crate::model::weights::{MatId, Role, Weights};
+use crate::model::weights::{MatId, Role, SideParams, Weights};
 use crate::quant::bitpack::PackedMatrix;
 use crate::quant::grouping::Grouping;
 use crate::quant::{group_meta, QuantMode, ScaleRule};
@@ -133,7 +133,7 @@ pub fn owq_quantize(
         .enumerate()
         .map(|(k, &id)| (id, owq_matrix(w.matrix(id), &diags[k], cfg)))
         .collect();
-    crate::quant::format::QuantizedModel { base: w.clone(), packed }
+    crate::quant::format::QuantizedModel { base: SideParams::from_weights(w), packed }
 }
 
 #[cfg(test)]

@@ -1,0 +1,403 @@
+//! The Calibrate-stage artifact: everything rate-*independent* that
+//! Algorithm 1 learns about a model — per-group gradient second moments
+//! G², weight variances S², sensitivity-ranked groupings, and EMA layer
+//! input means X̄ for bias correction.
+//!
+//! This is the serializable boundary between the three pipeline stages:
+//!
+//! - **Calibrate** (expensive: gradient iterations) produces a
+//!   [`CalibrationStats`] once per model;
+//! - **Allocate** (cheap: one dual-ascent solve) turns stored statistics
+//!   into an integer bit assignment for *any* user-requested rate;
+//! - **Pack** (parallel, streaming) requantizes the original weights
+//!   under that assignment.
+//!
+//! The paper's flexibility claim — "compress to a model size or accuracy
+//! specified by the user" — becomes an O(allocate+pack) operation per
+//! target instead of a full recalibration, which is what `rd_sweep`
+//! exercises across seven rates off one artifact.
+
+use std::io::{BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::coordinator::dual_ascent::{self, DualAscentConfig};
+use crate::model::config::ModelConfig;
+use crate::model::weights::{MatId, Role, Weights};
+use crate::quant::grouping::Grouping;
+use crate::stats::distortion::{self, GroupRd};
+use crate::util::json::Json;
+
+/// Rate-independent calibration state for one quantizable matrix.
+#[derive(Clone, Debug)]
+pub struct MatCalib {
+    pub id: MatId,
+    /// Sensitivity-ranked row grouping (fixed at warmup).
+    pub grouping: Grouping,
+    /// Per-group weight variances S² (original weights; fixed).
+    pub s2: Vec<f64>,
+    /// Per-group EMA gradient second moments G².
+    pub g2: Vec<f64>,
+    /// EMA layer-input means X̄ (length = rows) for bias correction.
+    pub xbar: Vec<f64>,
+}
+
+impl MatCalib {
+    /// The analytic RD curve parameters of this matrix's groups, in flat
+    /// group-index order.
+    pub fn group_rd(&self) -> impl Iterator<Item = GroupRd> + '_ {
+        (0..self.grouping.num_groups()).map(move |gi| {
+            let sub = gi % self.grouping.m;
+            GroupRd::new(self.grouping.group_len(sub), self.g2[gi], self.s2[gi], 1.0)
+        })
+    }
+}
+
+/// The persistent calibrate-once artifact (`.radiocal`).
+#[derive(Clone, Debug)]
+pub struct CalibrationStats {
+    /// Model shape the statistics were measured on (checked on use).
+    pub config: ModelConfig,
+    /// Provenance: grouping granularity used at warmup.
+    pub rows_per_group: usize,
+    /// Reference rate at which calibration's intermediate quantized
+    /// points were evaluated (NOT a constraint on later targets).
+    pub calib_bits: f64,
+    /// Gradient iterations accumulated into G²/X̄.
+    pub iters: usize,
+    pub seed: u64,
+    /// Explained-variance fraction of the PCA sketch basis.
+    pub pca_explained: f64,
+    /// Per-matrix state, sorted by `MatId` (== `matrix_ids()` order).
+    pub mats: Vec<MatCalib>,
+}
+
+/// Outcome of the Allocate stage: per-matrix integer bit depths for one
+/// target rate, plus the achieved rate and modeled distortion.
+#[derive(Clone, Debug)]
+pub struct RateAllocation {
+    pub target_bits: f64,
+    /// Achieved average bits/weight of the integer assignment.
+    pub rate: f64,
+    /// Modeled total distortion Σ dₙ(Bₙ) under the statistics.
+    pub model_distortion: f64,
+    /// Per-matrix group bit depths, aligned with `CalibrationStats::mats`.
+    pub bits: Vec<(MatId, Vec<u8>)>,
+}
+
+impl CalibrationStats {
+    /// Index of a matrix's calibration state.
+    pub fn index_of(&self, id: MatId) -> Option<usize> {
+        self.mats.binary_search_by(|m| m.id.cmp(&id)).ok()
+    }
+
+    /// Concatenated RD curves of every group of every matrix, in `mats`
+    /// order (the global allocation problem).
+    pub fn group_rd(&self) -> Vec<GroupRd> {
+        self.mats.iter().flat_map(|m| m.group_rd()).collect()
+    }
+
+    /// Allocate integer bit depths for `target_bits` against the stored
+    /// statistics. `mixed` = dual-ascent mixed precision (Radio);
+    /// `!mixed` = flat round(R) bits (ablation). Pure and deterministic:
+    /// identical stats ⇒ identical assignment, so a saved → loaded
+    /// artifact reproduces allocations bit-for-bit.
+    pub fn allocate(&self, target_bits: f64, bmax: u8, mixed: bool) -> RateAllocation {
+        let group_rd = self.group_rd();
+        let (bits, rate, model_distortion) = if mixed {
+            let a = dual_ascent::allocate_integer(
+                &group_rd,
+                target_bits,
+                &DualAscentConfig { bmax: bmax as f64, ..Default::default() },
+            );
+            (a.bits, a.rate, a.distortion)
+        } else {
+            let flat = vec![target_bits.round() as u8; group_rd.len()];
+            let rate = dual_ascent::integer_rate(&group_rd, &flat);
+            let dist = distortion::total_distortion_int(&group_rd, &flat);
+            (flat, rate, dist)
+        };
+        // Split the global assignment back per matrix (mats order).
+        let mut out = Vec::with_capacity(self.mats.len());
+        let mut off = 0usize;
+        for m in &self.mats {
+            let n = m.grouping.num_groups();
+            out.push((m.id, bits[off..off + n].to_vec()));
+            off += n;
+        }
+        debug_assert_eq!(off, bits.len());
+        RateAllocation { target_bits, rate, model_distortion, bits: out }
+    }
+
+    /// Check the artifact matches a model before allocating/packing
+    /// against it.
+    pub fn compatible_with(&self, w: &Weights) -> bool {
+        self.config == w.config
+            && self.mats.len() == w.matrix_ids().len()
+            && self.mats.iter().all(|m| {
+                let t = w.matrix(m.id);
+                t.rows == m.grouping.rows && t.cols == m.grouping.cols
+            })
+    }
+
+    // ------------------------------------------------------ serialization
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(b"RADIOCS1")?;
+        let cfg = self.config.to_json().to_string();
+        f.write_all(&(cfg.len() as u32).to_le_bytes())?;
+        f.write_all(cfg.as_bytes())?;
+        f.write_all(&self.calib_bits.to_le_bytes())?;
+        f.write_all(&(self.rows_per_group as u32).to_le_bytes())?;
+        f.write_all(&(self.iters as u32).to_le_bytes())?;
+        f.write_all(&self.seed.to_le_bytes())?;
+        f.write_all(&self.pca_explained.to_le_bytes())?;
+        f.write_all(&(self.mats.len() as u32).to_le_bytes())?;
+        for m in &self.mats {
+            f.write_all(&(m.id.layer as u32).to_le_bytes())?;
+            f.write_all(&[m.id.role.tag()])?;
+            f.write_all(&(m.grouping.rows as u32).to_le_bytes())?;
+            f.write_all(&(m.grouping.cols as u32).to_le_bytes())?;
+            f.write_all(&(m.grouping.m as u32).to_le_bytes())?;
+            for &g in &m.grouping.row_to_group {
+                f.write_all(&g.to_le_bytes())?;
+            }
+            for v in [&m.s2, &m.g2, &m.xbar] {
+                f.write_all(&(v.len() as u64).to_le_bytes())?;
+                for &x in v {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+        }
+        f.flush()
+    }
+
+    pub fn load(path: &Path) -> std::io::Result<CalibrationStats> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != b"RADIOCS1" {
+            return Err(inv("bad magic: not a radio calibration artifact"));
+        }
+        let mut l1 = [0u8; 1];
+        let mut l4 = [0u8; 4];
+        let mut l8 = [0u8; 8];
+        f.read_exact(&mut l4)?;
+        let clen = u32::from_le_bytes(l4) as usize;
+        let mut cbuf = vec![0u8; clen];
+        f.read_exact(&mut cbuf)?;
+        let cfg_json = Json::parse(std::str::from_utf8(&cbuf).map_err(inv)?).map_err(inv)?;
+        let config = ModelConfig::from_json(&cfg_json).map_err(inv)?;
+        f.read_exact(&mut l8)?;
+        let calib_bits = f64::from_le_bytes(l8);
+        f.read_exact(&mut l4)?;
+        let rows_per_group = u32::from_le_bytes(l4) as usize;
+        f.read_exact(&mut l4)?;
+        let iters = u32::from_le_bytes(l4) as usize;
+        f.read_exact(&mut l8)?;
+        let seed = u64::from_le_bytes(l8);
+        f.read_exact(&mut l8)?;
+        let pca_explained = f64::from_le_bytes(l8);
+        f.read_exact(&mut l4)?;
+        let n_mats = u32::from_le_bytes(l4) as usize;
+        // Preallocations below are capped: lengths come from untrusted
+        // bytes, and the read loops fail at EOF long before a bogus
+        // multi-gigabyte length could be filled.
+        let mut mats = Vec::with_capacity(n_mats.min(PREALLOC_CAP));
+        for _ in 0..n_mats {
+            f.read_exact(&mut l4)?;
+            let layer = u32::from_le_bytes(l4) as usize;
+            if layer >= config.layers {
+                return Err(inv(format!(
+                    "mat layer {layer} out of range for {}-layer config",
+                    config.layers
+                )));
+            }
+            f.read_exact(&mut l1)?;
+            let role = Role::from_tag(l1[0]).ok_or_else(|| inv("bad role tag"))?;
+            f.read_exact(&mut l4)?;
+            let rows = u32::from_le_bytes(l4) as usize;
+            f.read_exact(&mut l4)?;
+            let cols = u32::from_le_bytes(l4) as usize;
+            f.read_exact(&mut l4)?;
+            let m = u32::from_le_bytes(l4) as usize;
+            if m == 0 {
+                return Err(inv("zero sub-groups"));
+            }
+            let mut row_to_group = Vec::with_capacity(rows.min(PREALLOC_CAP));
+            for _ in 0..rows {
+                f.read_exact(&mut l4)?;
+                let g = u32::from_le_bytes(l4);
+                if g as usize >= m {
+                    return Err(inv("row group out of range"));
+                }
+                row_to_group.push(g);
+            }
+            // Rows pushed in ascending order — identical to the
+            // ascending-sorted group_rows `Grouping::build` produces.
+            let mut group_rows: Vec<Vec<u32>> = vec![Vec::new(); m];
+            for (r, &g) in row_to_group.iter().enumerate() {
+                group_rows[g as usize].push(r as u32);
+            }
+            let grouping = Grouping { rows, cols, m, row_to_group, group_rows };
+            let mut read_f64s = |expected: Option<usize>| -> std::io::Result<Vec<f64>> {
+                let mut l8 = [0u8; 8];
+                f.read_exact(&mut l8)?;
+                let n = u64::from_le_bytes(l8) as usize;
+                if let Some(e) = expected {
+                    if n != e {
+                        return Err(inv(format!("vector length mismatch: file {n}, want {e}")));
+                    }
+                }
+                let mut v = Vec::with_capacity(n.min(PREALLOC_CAP));
+                for _ in 0..n {
+                    f.read_exact(&mut l8)?;
+                    v.push(f64::from_le_bytes(l8));
+                }
+                Ok(v)
+            };
+            let n_groups = cols * m;
+            let s2 = read_f64s(Some(n_groups))?;
+            let g2 = read_f64s(Some(n_groups))?;
+            let xbar = read_f64s(Some(rows))?;
+            mats.push(MatCalib { id: MatId { layer, role }, grouping, s2, g2, xbar });
+        }
+        Ok(CalibrationStats {
+            config,
+            rows_per_group,
+            calib_bits,
+            iters,
+            seed,
+            pca_explained,
+            mats,
+        })
+    }
+}
+
+/// Upper bound on speculative preallocation from on-disk length fields.
+const PREALLOC_CAP: usize = 1 << 20;
+
+fn inv<E: std::fmt::Display>(e: E) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// A synthetic artifact with non-trivial groupings and statistics.
+    fn synthetic_stats(seed: u64) -> CalibrationStats {
+        let config = ModelConfig { vocab: 64, dim: 16, heads: 2, layers: 2, mlp: 32, max_seq: 16 };
+        let mut rng = Rng::new(seed);
+        let mut mats = Vec::new();
+        for layer in 0..config.layers {
+            for role in Role::ALL {
+                let (rows, cols) = match role {
+                    Role::Up => (config.dim, config.mlp),
+                    Role::Down => (config.mlp, config.dim),
+                    _ => (config.dim, config.dim),
+                };
+                let scores: Vec<f64> = (0..rows).map(|_| rng.uniform()).collect();
+                let grouping = Grouping::build(rows, cols, 8, &scores);
+                let n = grouping.num_groups();
+                let s2: Vec<f64> = (0..n).map(|_| rng.normal(0.0, 1.0).exp()).collect();
+                let g2: Vec<f64> = (0..n).map(|_| rng.normal(0.0, 2.0).exp()).collect();
+                let xbar: Vec<f64> = (0..rows).map(|_| rng.normal(0.0, 0.5)).collect();
+                mats.push(MatCalib { id: MatId { layer, role }, grouping, s2, g2, xbar });
+            }
+        }
+        CalibrationStats {
+            config,
+            rows_per_group: 8,
+            calib_bits: 4.0,
+            iters: 7,
+            seed,
+            pca_explained: 0.83,
+            mats,
+        }
+    }
+
+    #[test]
+    fn save_load_identical_allocation() {
+        let stats = synthetic_stats(0xCA11);
+        let path = std::env::temp_dir().join("radio_test_calib.radiocal");
+        stats.save(&path).unwrap();
+        let back = CalibrationStats::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+
+        assert_eq!(back.mats.len(), stats.mats.len());
+        assert_eq!(back.calib_bits, stats.calib_bits);
+        assert_eq!(back.iters, stats.iters);
+        assert_eq!(back.seed, stats.seed);
+        for (a, b) in stats.mats.iter().zip(&back.mats) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.grouping.row_to_group, b.grouping.row_to_group);
+            assert_eq!(a.grouping.group_rows, b.grouping.group_rows);
+            assert_eq!(a.s2, b.s2);
+            assert_eq!(a.g2, b.g2);
+            assert_eq!(a.xbar, b.xbar);
+        }
+        for target in [2.0, 2.4, 3.0, 5.0] {
+            let x = stats.allocate(target, 8, true);
+            let y = back.allocate(target, 8, true);
+            assert_eq!(x.bits, y.bits, "target {target}");
+            assert_eq!(x.rate, y.rate);
+        }
+    }
+
+    #[test]
+    fn allocate_meets_rate_and_splits_per_matrix() {
+        let stats = synthetic_stats(0xCA12);
+        let a = stats.allocate(3.0, 8, true);
+        assert!((a.rate - 3.0).abs() < 0.02, "rate {}", a.rate);
+        assert_eq!(a.bits.len(), stats.mats.len());
+        for ((id, bits), m) in a.bits.iter().zip(&stats.mats) {
+            assert_eq!(*id, m.id);
+            assert_eq!(bits.len(), m.grouping.num_groups());
+        }
+        // Flat ablation: every group gets round(R).
+        let flat = stats.allocate(3.2, 8, false);
+        assert!(flat.bits.iter().all(|(_, b)| b.iter().all(|&x| x == 3)));
+        assert!(a.model_distortion <= flat.model_distortion * 1.0001);
+    }
+
+    #[test]
+    fn allocation_rate_monotone_in_target() {
+        let stats = synthetic_stats(0xCA13);
+        let rates: Vec<f64> =
+            [2.0, 3.0, 4.0, 5.0].iter().map(|&t| stats.allocate(t, 8, true).rate).collect();
+        for w in rates.windows(2) {
+            assert!(w[0] < w[1] + 1e-9, "rates {rates:?}");
+        }
+        let dists: Vec<f64> = [2.0, 3.0, 4.0, 5.0]
+            .iter()
+            .map(|&t| stats.allocate(t, 8, true).model_distortion)
+            .collect();
+        for w in dists.windows(2) {
+            assert!(w[0] >= w[1], "distortion must fall with rate: {dists:?}");
+        }
+    }
+
+    #[test]
+    fn load_rejects_garbage_and_truncation() {
+        let p = std::env::temp_dir().join("radio_calib_garbage.radiocal");
+        std::fs::write(&p, b"not a calibration artifact").unwrap();
+        assert!(CalibrationStats::load(&p).is_err());
+        let stats = synthetic_stats(0xCA14);
+        stats.save(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(CalibrationStats::load(&p).is_err());
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn index_of_finds_sorted_entries() {
+        let stats = synthetic_stats(0xCA15);
+        for (i, m) in stats.mats.iter().enumerate() {
+            assert_eq!(stats.index_of(m.id), Some(i));
+        }
+        assert_eq!(stats.index_of(MatId { layer: 99, role: Role::Q }), None);
+    }
+}

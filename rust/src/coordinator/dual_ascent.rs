@@ -14,7 +14,7 @@
 //! greedy marginal-distortion fix-up that hits the bit budget *exactly*
 //! (the paper's "Radio (3.0000 bits)" rows).
 
-use crate::stats::distortion::GroupRd;
+use crate::stats::distortion::{self, GroupRd};
 
 #[derive(Clone, Copy, Debug)]
 pub struct DualAscentConfig {
@@ -165,6 +165,31 @@ pub fn solve_integer(groups: &[GroupRd], target_rate: f64, cfg: &DualAscentConfi
     bits
 }
 
+/// An integer bit assignment with its achieved rate and modeled
+/// distortion — what the Allocate stage hands to Pack.
+#[derive(Clone, Debug)]
+pub struct IntegerAllocation {
+    pub bits: Vec<u8>,
+    /// Achieved average bits/weight of the integer assignment.
+    pub rate: f64,
+    /// Modeled total distortion Σ dₙ(Bₙ) under the given statistics.
+    pub distortion: f64,
+}
+
+/// One-call integer allocation: solve, then report achieved rate and
+/// modeled distortion together (shared by the Radio trace and the
+/// Allocate stage, which used to re-derive these independently).
+pub fn allocate_integer(
+    groups: &[GroupRd],
+    target_rate: f64,
+    cfg: &DualAscentConfig,
+) -> IntegerAllocation {
+    let bits = solve_integer(groups, target_rate, cfg);
+    let rate = integer_rate(groups, &bits);
+    let distortion = distortion::total_distortion_int(groups, &bits);
+    IntegerAllocation { bits, rate, distortion }
+}
+
 /// Average rate of an integer assignment.
 pub fn integer_rate(groups: &[GroupRd], bits: &[u8]) -> f64 {
     let total_w: usize = groups.iter().map(|g| g.count).sum();
@@ -272,6 +297,16 @@ mod tests {
             Ok(())
         });
         let _ = rng;
+    }
+
+    #[test]
+    fn allocate_integer_reports_consistent_stats() {
+        let mut rng = Rng::new(105);
+        let groups = random_groups(&mut rng, 32);
+        let a = allocate_integer(&groups, 3.0, &DualAscentConfig::default());
+        assert_eq!(a.bits, solve_integer(&groups, 3.0, &DualAscentConfig::default()));
+        assert!((a.rate - integer_rate(&groups, &a.bits)).abs() < 1e-15);
+        assert!(a.distortion > 0.0);
     }
 
     #[test]

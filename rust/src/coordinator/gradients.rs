@@ -16,6 +16,20 @@
 use crate::model::tensor::Tensor;
 use crate::model::transformer;
 use crate::model::weights::{MatId, Weights};
+use crate::util::rng::Rng;
+
+/// Token-subsampling sketch vector for one minibatch: `k` ones per
+/// sequence (the paper's 17-token backprop sketch). Shared by the
+/// Calibrate stage and any provider-side sampling.
+pub fn subsample_mask(rng: &mut Rng, batch: usize, seq: usize, k: usize) -> Vec<f32> {
+    let mut s = vec![0f32; batch * seq];
+    for b in 0..batch {
+        for idx in rng.sample_indices(seq, k.min(seq)) {
+            s[b * seq + idx] = 1.0;
+        }
+    }
+    s
+}
 
 /// One stochastic gradient observation.
 pub struct GradSample {
@@ -123,6 +137,17 @@ mod tests {
             assert_eq!(mu.len(), w.matrix(*id).rows, "{id}");
         }
         assert_eq!(sample.z.rows, 16);
+    }
+
+    #[test]
+    fn subsample_mask_has_k_ones_per_sequence() {
+        let mut rng = Rng::new(113);
+        let s = subsample_mask(&mut rng, 3, 16, 5);
+        assert_eq!(s.len(), 48);
+        for b in 0..3 {
+            let ones = s[b * 16..(b + 1) * 16].iter().filter(|&&x| x == 1.0).count();
+            assert_eq!(ones, 5, "sequence {b}");
+        }
     }
 
     #[test]

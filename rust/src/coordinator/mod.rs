@@ -1,12 +1,16 @@
-//! The L3 coordinator: Algorithm 1 (Radio), its dual-ascent allocator,
-//! gradient providers (native backprop / XLA artifacts), and the
-//! quantization pipeline that dispatches Radio and the baselines.
+//! The L3 coordinator: Algorithm 1 (Radio) split into explicit
+//! Calibrate / Allocate / Pack stages with a serializable calibration
+//! artifact, the dual-ascent allocator, gradient providers (native
+//! backprop / XLA artifacts), and the quantization pipeline that
+//! dispatches Radio and the baselines.
 
+pub mod calibration;
 pub mod dual_ascent;
 pub mod gradients;
 pub mod pipeline;
 pub mod radio;
 
+pub use calibration::{CalibrationStats, MatCalib, RateAllocation};
 pub use gradients::{GradientProvider, NativeProvider};
-pub use pipeline::{run_method, Method, PipelineResult};
-pub use radio::{Radio, RadioConfig, RadioReport};
+pub use pipeline::{run_method, Method, PipelineResult, StageTimings};
+pub use radio::{CalibrationReport, PackSummary, Radio, RadioConfig, RadioReport};

@@ -1,14 +1,20 @@
 //! The quantization pipeline: a single entry point that dispatches every
 //! method the paper compares (RTN, GPTQ, AWQ, OWQ, Radio) over a model +
-//! calibration corpus, with wall-clock accounting (Table 6).
+//! calibration corpus, with per-stage wall-clock accounting (Table 6).
+//!
+//! Radio runs through the staged Calibrate → Allocate → Pack API, so its
+//! timing splits into the expensive reusable part (calibrate) and the
+//! cheap per-rate part (allocate + pack). [`radio_sweep`] exploits that
+//! split: one calibration, N target rates.
 
 use crate::baselines::awq::{awq_quantize, AwqConfig};
 use crate::baselines::gptq::{gptq_quantize, GptqConfig};
 use crate::baselines::owq::{owq_quantize, OwqConfig};
+use crate::coordinator::calibration::CalibrationStats;
 use crate::coordinator::gradients::GradientProvider;
 use crate::coordinator::radio::{Radio, RadioConfig};
 use crate::model::corpus::Corpus;
-use crate::model::weights::{MatId, Weights};
+use crate::model::weights::{MatId, SideParams, Weights};
 use crate::quant::format::QuantizedModel;
 use crate::quant::{rtn_quantize, ScaleRule};
 
@@ -34,11 +40,38 @@ impl Method {
     }
 }
 
+/// Wall-clock split across the three pipeline stages. Baselines do not
+/// separate calibration from packing, so their whole run is counted
+/// under `pack`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageTimings {
+    pub calibrate: f64,
+    pub allocate: f64,
+    pub pack: f64,
+}
+
+impl StageTimings {
+    pub fn total(&self) -> f64 {
+        self.calibrate + self.allocate + self.pack
+    }
+}
+
+impl std::fmt::Display for StageTimings {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "calibrate {:.2}s | allocate {:.3}s | pack {:.2}s",
+            self.calibrate, self.allocate, self.pack
+        )
+    }
+}
+
 /// Outcome of one pipeline run.
 pub struct PipelineResult {
     pub method: String,
     pub model: QuantizedModel,
     pub seconds: f64,
+    pub stages: StageTimings,
 }
 
 /// RTN over a whole model (per-matrix, contiguous row groups).
@@ -51,10 +84,10 @@ pub fn rtn_quantize_model(w: &Weights, bits: u8, rows_per_group: usize) -> Quant
             (id, rtn_quantize(m, bits, rows_per_group.min(m.rows), ScaleRule::Range))
         })
         .collect();
-    QuantizedModel { base: w.clone(), packed }
+    QuantizedModel { base: SideParams::from_weights(w), packed }
 }
 
-/// Run one method end to end.
+/// Run one method end to end, with per-stage timing for Radio.
 pub fn run_method(
     method: &Method,
     w: &Weights,
@@ -62,18 +95,73 @@ pub fn run_method(
     provider: &mut dyn GradientProvider,
 ) -> PipelineResult {
     let t0 = std::time::Instant::now();
+    let mut stages = StageTimings::default();
     let model = match method {
         Method::Rtn { bits, rows_per_group } => rtn_quantize_model(w, *bits, *rows_per_group),
         Method::Gptq(cfg) => gptq_quantize(w, corpus, cfg),
         Method::Awq(cfg) => awq_quantize(w, corpus, cfg),
         Method::Owq(cfg) => owq_quantize(w, corpus, cfg),
-        Method::Radio(cfg) => Radio::new(*cfg).quantize(w, corpus, provider, None).0,
+        Method::Radio(cfg) => {
+            let radio = Radio::new(*cfg);
+            let tc = std::time::Instant::now();
+            let (stats, _) = radio.calibrate(w, corpus, provider, None);
+            stages.calibrate = tc.elapsed().as_secs_f64();
+            let ta = std::time::Instant::now();
+            let alloc = stats.allocate(cfg.target_bits, cfg.bmax, cfg.mixed_depth);
+            stages.allocate = ta.elapsed().as_secs_f64();
+            let tp = std::time::Instant::now();
+            let qm = radio.pack(w, &stats, &alloc);
+            stages.pack = tp.elapsed().as_secs_f64();
+            qm
+        }
     };
+    let seconds = t0.elapsed().as_secs_f64();
+    if stages.total() == 0.0 {
+        stages.pack = seconds;
+    }
     PipelineResult {
         method: method.name(),
         model,
-        seconds: t0.elapsed().as_secs_f64(),
+        seconds,
+        stages,
     }
+}
+
+/// Calibrate once, then allocate + pack at every target rate — the
+/// paper's "compress to any user-specified size" claim as an API.
+/// Returns the reusable calibration artifact alongside one
+/// `PipelineResult` per rate (whose `stages.calibrate` is 0: the shared
+/// calibration cost is paid once, reported separately by the caller).
+pub fn radio_sweep(
+    cfg_base: &RadioConfig,
+    rates: &[f64],
+    w: &Weights,
+    corpus: &Corpus,
+    provider: &mut dyn GradientProvider,
+) -> (CalibrationStats, f64, Vec<PipelineResult>) {
+    let radio = Radio::new(*cfg_base);
+    let tc = std::time::Instant::now();
+    let (stats, _) = radio.calibrate(w, corpus, provider, None);
+    let calibrate_seconds = tc.elapsed().as_secs_f64();
+    let mut results = Vec::with_capacity(rates.len());
+    for &rate in rates {
+        // Pack never reads `target_bits` — the rate arrives via `alloc` —
+        // so the shared `radio` serves every rate.
+        let mut stages = StageTimings::default();
+        let ta = std::time::Instant::now();
+        let alloc = stats.allocate(rate, cfg_base.bmax, cfg_base.mixed_depth);
+        stages.allocate = ta.elapsed().as_secs_f64();
+        let tp = std::time::Instant::now();
+        let qm = radio.pack(w, &stats, &alloc);
+        stages.pack = tp.elapsed().as_secs_f64();
+        results.push(PipelineResult {
+            method: format!("Radio({rate:.1}b, shared-calib)"),
+            model: qm,
+            seconds: stages.total(),
+            stages,
+        });
+    }
+    (stats, calibrate_seconds, results)
 }
 
 #[cfg(test)]
@@ -84,12 +172,17 @@ mod tests {
     use crate::model::corpus::Domain;
     use crate::util::rng::Rng;
 
-    #[test]
-    fn all_methods_run_on_tiny_model() {
+    fn tiny() -> (Weights, Corpus) {
         let mcfg = ModelConfig { vocab: 256, dim: 16, heads: 2, layers: 1, mlp: 32, max_seq: 16 };
         let mut rng = Rng::new(161);
         let w = Weights::init_pretrained_like(mcfg, &mut rng);
         let corpus = Corpus::synthetic(162, Domain::Calib, 4 * 1024);
+        (w, corpus)
+    }
+
+    #[test]
+    fn all_methods_run_on_tiny_model() {
+        let (w, corpus) = tiny();
         let mut provider = NativeProvider;
 
         let methods = vec![
@@ -137,6 +230,47 @@ mod tests {
             let bits = r.model.avg_bits();
             assert!(bits > 3.0 && bits < 5.0, "{}: bits {bits}", r.method);
             assert!(r.seconds >= 0.0);
+            assert!(r.stages.total() > 0.0, "{}: stages not accounted", r.method);
+            if r.method.starts_with("Radio") {
+                assert!(r.stages.calibrate > 0.0, "Radio must report calibrate time");
+            }
         }
+    }
+
+    #[test]
+    fn radio_sweep_shares_one_calibration() {
+        let (w, corpus) = tiny();
+        let mut provider = NativeProvider;
+        let cfg = RadioConfig {
+            target_bits: 4.0,
+            rows_per_group: 8,
+            batch: 2,
+            seq: 16,
+            tokens_per_seq: 4,
+            iters: 2,
+            pca_k: 2,
+            ..Default::default()
+        };
+        let rates = [2.0, 3.0, 5.0];
+        let (stats, calib_s, results) = radio_sweep(&cfg, &rates, &w, &corpus, &mut provider);
+        assert!(calib_s > 0.0);
+        assert_eq!(results.len(), 3);
+        assert_eq!(stats.mats.len(), 6);
+        for (r, &rate) in results.iter().zip(&rates) {
+            assert!(
+                (r.model.avg_bits() - rate).abs() < 0.1,
+                "{}: {} vs {}",
+                r.method,
+                r.model.avg_bits(),
+                rate
+            );
+            assert_eq!(r.stages.calibrate, 0.0, "per-rate results reuse the shared calibration");
+        }
+        // Monotone: more bits never increases the modeled distortion.
+        let d: Vec<f64> = rates
+            .iter()
+            .map(|&t| stats.allocate(t, cfg.bmax, true).model_distortion)
+            .collect();
+        assert!(d[0] >= d[1] && d[1] >= d[2], "distortion {d:?}");
     }
 }

@@ -1,25 +1,37 @@
-//! Algorithm 1 — the Radio quantizer.
+//! Algorithm 1 — the Radio quantizer, split into three explicit stages
+//! with a serializable boundary between them:
 //!
-//! Orchestrates the full stochastic rate–distortion optimization:
-//! EMA accumulation of per-group gradient variances (G²) via PCA-projected
-//! token-subsampled backprops, EMA layer-input means (X̄) for bias
-//! correction, dual-ascent bit-depth allocation at the user's target rate,
-//! companded requantization, and the final packed model.
+//! 1. **Calibrate** ([`Radio::calibrate`]) — the expensive, *rate-
+//!    independent* part: EMA accumulation of per-group gradient variances
+//!    G² via PCA-projected token-subsampled backprops, EMA layer-input
+//!    means X̄, and the sensitivity-ranked groupings. Produces a
+//!    [`CalibrationStats`] artifact (binary save/load) that can be
+//!    computed once per model and reused for every target rate.
+//! 2. **Allocate** ([`CalibrationStats::allocate`]) — one dual-ascent
+//!    solve against the stored RD curves for *any* user target rate.
+//!    Cheap; re-run per rate.
+//! 3. **Pack** ([`Radio::pack`] / [`Radio::pack_streaming`]) — companded
+//!    requantization + bias correction from the ORIGINAL weights,
+//!    parallelized across matrices on the persistent threadpool; the
+//!    streaming variant emits each packed matrix straight into a
+//!    [`QuantizedModelWriter`] so no resident `QuantizedModel` is built.
+//!
+//! [`Radio::quantize`] is the one-shot composition of the three stages,
+//! so a from-scratch single-rate run is bit-identical to allocating and
+//! packing off a saved calibration artifact at the same seed.
 
-use std::collections::BTreeMap;
-
-use crate::coordinator::dual_ascent::{self, DualAscentConfig};
-use crate::coordinator::gradients::GradientProvider;
+use crate::coordinator::calibration::{CalibrationStats, MatCalib, RateAllocation};
+use crate::coordinator::gradients::{subsample_mask, GradientProvider};
 use crate::model::corpus::Corpus;
-use crate::model::weights::{MatId, Weights};
-use crate::quant::format::QuantizedModel;
-use crate::quant::grouping::Grouping;
-use crate::quant::{quantize_matrix, QuantMode, ScaleRule};
+use crate::model::weights::{MatId, SideParams, Weights};
 use crate::quant::bias::corrected_bias;
-use crate::stats::distortion::GroupRd;
+use crate::quant::format::{QuantizedModel, QuantizedModelWriter};
+use crate::quant::grouping::Grouping;
+use crate::quant::{quantize_matrix, PackedMatrix, QuantMode, ScaleRule};
 use crate::stats::moments;
 use crate::stats::pca::PcaBasis;
 use crate::util::rng::Rng;
+use crate::util::threadpool;
 
 #[derive(Clone, Copy, Debug)]
 pub struct RadioConfig {
@@ -46,6 +58,11 @@ pub struct RadioConfig {
     /// Mixed-precision depths via dual ascent (false = flat R bits).
     pub mixed_depth: bool,
     pub bias_correct: bool,
+    /// Reference rate for the Calibrate stage's intermediate quantized
+    /// points. Deliberately decoupled from `target_bits` so calibration
+    /// is rate-independent: one artifact serves every target rate, and a
+    /// from-scratch run at any rate reproduces the artifact exactly.
+    pub calib_bits: f64,
     pub seed: u64,
 }
 
@@ -65,6 +82,7 @@ impl Default for RadioConfig {
             scale_rule: ScaleRule::Mmse,
             mixed_depth: true,
             bias_correct: true,
+            calib_bits: 4.0,
             seed: 0xAD10,
         }
     }
@@ -88,16 +106,22 @@ pub struct RadioReport {
     pub pca_explained: f64,
 }
 
-/// Per-matrix optimization state.
-struct MatState {
-    grouping: Grouping,
-    /// Fixed per-group weight variances S² (original weights).
-    s2: Vec<f64>,
-    /// EMA per-group gradient second moments G².
-    g2: Vec<f64>,
-    /// EMA input means (length = rows).
-    xbar: Vec<f64>,
-    xbar_init: bool,
+/// Outcome of the Calibrate stage alone.
+#[derive(Clone, Debug)]
+pub struct CalibrationReport {
+    pub iters_run: usize,
+    pub seconds: f64,
+    pub pca_explained: f64,
+}
+
+/// Summary returned by the streaming Pack stage (no resident model).
+#[derive(Clone, Debug)]
+pub struct PackSummary {
+    pub matrices: usize,
+    /// Average payload bits/weight of everything written.
+    pub avg_bits: f64,
+    /// Container size on disk.
+    pub bytes: u64,
 }
 
 /// The Radio quantizer (Algorithm 1 driver).
@@ -110,9 +134,11 @@ impl Radio {
         Radio { cfg }
     }
 
-    /// Quantize `w` against calibration `corpus` using `provider` for
-    /// gradients. `on_iter` (optional) observes each intermediate model —
-    /// used by the Figure 4/5 bench to track perplexity across iterations.
+    /// One-shot Calibrate → Allocate → Pack at `cfg.target_bits`.
+    ///
+    /// `on_iter` (optional) observes the target-rate quantized model at
+    /// every calibration iteration — used by the Figure 4/5 bench to
+    /// track perplexity across iterations.
     pub fn quantize(
         &self,
         w: &Weights,
@@ -121,9 +147,58 @@ impl Radio {
         mut on_iter: Option<&mut dyn FnMut(usize, &QuantizedModel)>,
     ) -> (QuantizedModel, RadioReport) {
         let t0 = std::time::Instant::now();
+        let cfg = self.cfg;
+        let mut trace: Vec<IterTrace> = Vec::with_capacity(cfg.iters);
+        let (stats, calib) = {
+            let mut cb = |iter: usize, stats: &CalibrationStats| {
+                if iter == 0 && on_iter.is_none() {
+                    return;
+                }
+                let a = stats.allocate(cfg.target_bits, cfg.bmax, cfg.mixed_depth);
+                if iter > 0 {
+                    trace.push(IterTrace {
+                        iter,
+                        rate: a.rate,
+                        model_distortion: a.model_distortion,
+                    });
+                }
+                if let Some(user) = on_iter.as_deref_mut() {
+                    let qm = self.pack(w, stats, &a);
+                    user(iter, &qm);
+                }
+            };
+            self.calibrate(w, corpus, provider, Some(&mut cb))
+        };
+        let alloc = stats.allocate(cfg.target_bits, cfg.bmax, cfg.mixed_depth);
+        let qm = self.pack(w, &stats, &alloc);
+        let report = RadioReport {
+            iters_run: calib.iters_run,
+            final_rate: qm.avg_bits(),
+            trace,
+            seconds: t0.elapsed().as_secs_f64(),
+            pca_explained: calib.pca_explained,
+        };
+        (qm, report)
+    }
+
+    /// Stage 1 — Calibrate: run the stochastic gradient iterations and
+    /// return the rate-independent statistics artifact. `cfg.target_bits`
+    /// is NOT read here; intermediate quantized points use
+    /// `cfg.calib_bits` so the artifact serves any later target.
+    ///
+    /// `on_iter` observes the evolving statistics after the warmup
+    /// (iter 0) and after each gradient iteration (1..=iters); callbacks
+    /// must not mutate anything the calibration stream depends on.
+    pub fn calibrate(
+        &self,
+        w: &Weights,
+        corpus: &Corpus,
+        provider: &mut dyn GradientProvider,
+        mut on_iter: Option<&mut dyn FnMut(usize, &CalibrationStats)>,
+    ) -> (CalibrationStats, CalibrationReport) {
+        let t0 = std::time::Instant::now();
         let cfg = &self.cfg;
         let mut rng = Rng::new(cfg.seed);
-        let _ids = w.matrix_ids();
 
         // ---- Warmup: one full-precision gradient sample to seed G² and
         // build the sensitivity-ranked groupings.
@@ -141,8 +216,10 @@ impl Radio {
             cfg.pca_k.min(w.config.dim),
         );
 
-        let mut states: BTreeMap<MatId, MatState> = BTreeMap::new();
-        for (id, grad) in &warm.grads {
+        let mut sorted: Vec<&(MatId, crate::model::tensor::Tensor)> = warm.grads.iter().collect();
+        sorted.sort_by_key(|(id, _)| *id);
+        let mut mats: Vec<MatCalib> = Vec::with_capacity(sorted.len());
+        for (id, grad) in sorted {
             let m = w.matrix(*id);
             // Row score = G_r²·S_r² (row grad second moment × row weight var).
             let scores: Vec<f64> = (0..m.rows)
@@ -158,28 +235,33 @@ impl Radio {
             for col in 0..grouping.cols {
                 for sub in 0..grouping.m {
                     let gi = grouping.group_index(col, sub);
-                    let vals = grouping.gather(m, col, sub);
-                    s2[gi] = moments::variance(&vals).max(1e-30);
-                    let gvals = grouping.gather(grad, col, sub);
-                    g2[gi] = moments::mean_square(&gvals);
+                    s2[gi] = moments::variance_iter(grouping.iter_group(m, col, sub)).max(1e-30);
+                    g2[gi] = moments::mean_square_iter(grouping.iter_group(grad, col, sub));
                 }
             }
-            states.insert(
-                *id,
-                MatState { grouping, s2, g2, xbar: vec![0.0; m.rows], xbar_init: false },
-            );
+            let xbar = vec![0.0; m.rows];
+            mats.push(MatCalib { id: *id, grouping, s2, g2, xbar });
         }
-        update_xbar(&mut states, &warm.input_means, cfg.ema_alpha);
-
-        // ---- Iterate: quantize → re-estimate gradients at the quantized
-        // point → reallocate.
-        let mut trace = Vec::with_capacity(cfg.iters);
-        let mut qm = self.requantize(w, &states);
+        let mut stats = CalibrationStats {
+            config: w.config,
+            rows_per_group: cfg.rows_per_group,
+            calib_bits: cfg.calib_bits,
+            iters: cfg.iters,
+            seed: cfg.seed,
+            pca_explained: pca.explained_fraction(),
+            mats,
+        };
+        let mut xbar_init = vec![false; stats.mats.len()];
+        update_xbar(&mut stats, &mut xbar_init, &warm.input_means, cfg.ema_alpha);
         if let Some(cb) = on_iter.as_deref_mut() {
-            cb(0, &qm);
+            cb(0, &stats);
         }
+
+        // ---- Iterate: quantize at the reference rate → re-estimate
+        // gradients at the quantized point → fold into the EMAs.
         for iter in 1..=cfg.iters {
-            let wq = qm.to_weights();
+            let alloc = stats.allocate(cfg.calib_bits, cfg.bmax, true);
+            let wq = self.pack(w, &stats, &alloc).to_weights();
             let (toks, _) = corpus.sample_batch(&mut rng, cfg.batch, cfg.seq);
             // Cycle PCA coefficients; fresh token subsample each iteration.
             let u = pca.component((iter - 1) % pca.k).to_vec();
@@ -188,151 +270,156 @@ impl Radio {
 
             // EMA updates.
             for (id, grad) in &sample.grads {
-                let st = states.get_mut(id).unwrap();
-                for col in 0..st.grouping.cols {
-                    for sub in 0..st.grouping.m {
-                        let gi = st.grouping.group_index(col, sub);
-                        let gvals = st.grouping.gather(grad, col, sub);
-                        let obs = moments::mean_square(&gvals);
-                        st.g2[gi] = (1.0 - cfg.ema_alpha) * st.g2[gi] + cfg.ema_alpha * obs;
+                let ix = stats.index_of(*id).expect("provider returned unknown matrix");
+                let mc = &mut stats.mats[ix];
+                for col in 0..mc.grouping.cols {
+                    for sub in 0..mc.grouping.m {
+                        let gi = mc.grouping.group_index(col, sub);
+                        let obs =
+                            moments::mean_square_iter(mc.grouping.iter_group(grad, col, sub));
+                        mc.g2[gi] = (1.0 - cfg.ema_alpha) * mc.g2[gi] + cfg.ema_alpha * obs;
                     }
                 }
             }
-            update_xbar(&mut states, &sample.input_means, cfg.ema_alpha);
-
-            // Reallocate + requantize.
-            qm = self.requantize(w, &states);
-
-            // Trace.
-            let (rate, dist) = self.modeled_stats(&states);
-            trace.push(IterTrace { iter, rate, model_distortion: dist });
+            update_xbar(&mut stats, &mut xbar_init, &sample.input_means, cfg.ema_alpha);
             if let Some(cb) = on_iter.as_deref_mut() {
-                cb(iter, &qm);
+                cb(iter, &stats);
             }
         }
 
-        let final_rate = qm.avg_bits();
-        let report = RadioReport {
+        let report = CalibrationReport {
             iters_run: cfg.iters,
-            final_rate,
-            trace,
             seconds: t0.elapsed().as_secs_f64(),
-            pca_explained: pca.explained_fraction(),
+            pca_explained: stats.pca_explained,
         };
-        (qm, report)
+        (stats, report)
     }
 
-    /// Allocate depths from current statistics and requantize every matrix
-    /// from the ORIGINAL weights (Radio never fine-tunes weights).
-    fn requantize(&self, w: &Weights, states: &BTreeMap<MatId, MatState>) -> QuantizedModel {
-        let cfg = &self.cfg;
-        // Global allocation across *all* groups of *all* matrices.
-        let mut group_rd: Vec<GroupRd> = Vec::new();
-        let mut owners: Vec<(MatId, usize)> = Vec::new();
-        for (id, st) in states {
-            for gi in 0..st.grouping.num_groups() {
-                let sub = gi % st.grouping.m;
-                group_rd.push(GroupRd::new(
-                    st.grouping.group_len(sub),
-                    st.g2[gi],
-                    st.s2[gi],
-                    1.0,
-                ));
-                owners.push((*id, gi));
+    /// Stage 3 — Pack (resident): requantize every matrix from the
+    /// ORIGINAL weights (Radio never fine-tunes weights) under a given
+    /// allocation, in parallel across matrices. Deterministic regardless
+    /// of thread count: each matrix is packed independently and results
+    /// are assembled in `mats` order.
+    pub fn pack(
+        &self,
+        w: &Weights,
+        stats: &CalibrationStats,
+        alloc: &RateAllocation,
+    ) -> QuantizedModel {
+        assert!(
+            stats.compatible_with(w),
+            "calibration artifact does not match the model (config/shape mismatch)"
+        );
+        assert_eq!(alloc.bits.len(), stats.mats.len(), "allocation/stats mismatch");
+        let mut base = SideParams::from_weights(w);
+        let results = self.pack_range(w, stats, alloc, 0, stats.mats.len());
+        let mut packed = Vec::with_capacity(results.len());
+        for (i, (pm, nb)) in results.into_iter().enumerate() {
+            let id = stats.mats[i].id;
+            if let Some(nb) = nb {
+                *base.bias_mut(id) = nb;
             }
-        }
-        let bits: Vec<u8> = if cfg.mixed_depth {
-            dual_ascent::solve_integer(
-                &group_rd,
-                cfg.target_bits,
-                &DualAscentConfig { bmax: cfg.bmax as f64, ..Default::default() },
-            )
-        } else {
-            // Flat allocation at round(R) bits (ablation).
-            vec![cfg.target_bits.round() as u8; group_rd.len()]
-        };
-
-        let mut per_mat_bits: BTreeMap<MatId, Vec<u8>> = BTreeMap::new();
-        for ((id, gi), &b) in owners.iter().zip(&bits) {
-            let st = &states[id];
-            per_mat_bits
-                .entry(*id)
-                .or_insert_with(|| vec![0u8; st.grouping.num_groups()])[*gi] = b;
-        }
-
-        let mut base = w.clone();
-        let mut packed = Vec::with_capacity(states.len());
-        for (id, st) in states {
-            let theta = w.matrix(*id);
-            let pm = quantize_matrix(
-                theta,
-                &st.grouping,
-                &per_mat_bits[id],
-                cfg.mode,
-                cfg.scale_rule,
-            );
-            if cfg.bias_correct {
-                let deq = pm.unpack();
-                let xbar: Vec<f32> = st.xbar.iter().map(|&x| x as f32).collect();
-                let nb = corrected_bias(w.bias(*id), theta, &deq, &xbar);
-                *base.bias_mut(*id) = nb;
-            }
-            packed.push((*id, pm));
+            packed.push((id, pm));
         }
         QuantizedModel { base, packed }
     }
 
-    fn modeled_stats(&self, states: &BTreeMap<MatId, MatState>) -> (f64, f64) {
-        // Recompute the allocation to report modeled rate/distortion.
-        let mut group_rd: Vec<GroupRd> = Vec::new();
-        for st in states.values() {
-            for gi in 0..st.grouping.num_groups() {
-                let sub = gi % st.grouping.m;
-                group_rd.push(GroupRd::new(st.grouping.group_len(sub), st.g2[gi], st.s2[gi], 1.0));
-            }
-        }
-        let bits = dual_ascent::solve_integer(
-            &group_rd,
-            self.cfg.target_bits,
-            &DualAscentConfig { bmax: self.cfg.bmax as f64, ..Default::default() },
+    /// Stage 3 — Pack (streaming): same quantization as [`Radio::pack`],
+    /// but each window of matrices is written straight to the `.radio`
+    /// container and dropped, so peak memory is one packing window
+    /// (≈ 2× thread count matrices) instead of the whole model.
+    pub fn pack_streaming(
+        &self,
+        w: &Weights,
+        stats: &CalibrationStats,
+        alloc: &RateAllocation,
+        path: &std::path::Path,
+    ) -> std::io::Result<PackSummary> {
+        assert!(
+            stats.compatible_with(w),
+            "calibration artifact does not match the model (config/shape mismatch)"
         );
-        let rate = dual_ascent::integer_rate(&group_rd, &bits);
-        let dist: f64 = group_rd
-            .iter()
-            .zip(&bits)
-            .map(|(g, &b)| g.distortion(b as f64))
-            .sum();
-        (rate, dist)
-    }
-}
-
-/// Token-subsampling sketch vector: `tokens_per_seq` ones per sequence.
-fn subsample_mask(rng: &mut Rng, batch: usize, seq: usize, k: usize) -> Vec<f32> {
-    let mut s = vec![0f32; batch * seq];
-    for b in 0..batch {
-        for idx in rng.sample_indices(seq, k.min(seq)) {
-            s[b * seq + idx] = 1.0;
+        assert_eq!(alloc.bits.len(), stats.mats.len(), "allocation/stats mismatch");
+        let mut base = SideParams::from_weights(w);
+        let mut writer = QuantizedModelWriter::create(path)?;
+        let n = stats.mats.len();
+        let window = (threadpool::num_threads().max(1) * 2).min(n.max(1));
+        let (mut payload_bits, mut weights_total) = (0usize, 0usize);
+        let mut start = 0usize;
+        while start < n {
+            let end = (start + window).min(n);
+            let results = self.pack_range(w, stats, alloc, start, end);
+            for (k, (pm, nb)) in results.into_iter().enumerate() {
+                let id = stats.mats[start + k].id;
+                if let Some(nb) = nb {
+                    *base.bias_mut(id) = nb;
+                }
+                payload_bits += pm.payload_bits();
+                weights_total += pm.rows * pm.cols;
+                writer.write_matrix(id, &pm)?;
+            }
+            start = end;
         }
+        let matrices = writer.matrices_written();
+        writer.finish(&base)?;
+        let bytes = std::fs::metadata(path)?.len();
+        Ok(PackSummary {
+            matrices,
+            avg_bits: payload_bits as f64 / weights_total.max(1) as f64,
+            bytes,
+        })
     }
-    s
+
+    /// Pack matrices `[start, end)` in parallel; returns
+    /// `(packed, corrected_bias)` per matrix in index order.
+    fn pack_range(
+        &self,
+        w: &Weights,
+        stats: &CalibrationStats,
+        alloc: &RateAllocation,
+        start: usize,
+        end: usize,
+    ) -> Vec<(PackedMatrix, Option<Vec<f32>>)> {
+        let cfg = &self.cfg;
+        let results: Vec<Option<(PackedMatrix, Option<Vec<f32>>)>> =
+            threadpool::parallel_map(end - start, 1, |k| {
+                let i = start + k;
+                let mc = &stats.mats[i];
+                let (bid, bits) = &alloc.bits[i];
+                debug_assert_eq!(*bid, mc.id);
+                let theta = w.matrix(mc.id);
+                let pm = quantize_matrix(theta, &mc.grouping, bits, cfg.mode, cfg.scale_rule);
+                let nb = if cfg.bias_correct {
+                    let deq = pm.unpack();
+                    let xbar: Vec<f32> = mc.xbar.iter().map(|&x| x as f32).collect();
+                    Some(corrected_bias(w.bias(mc.id), theta, &deq, &xbar))
+                } else {
+                    None
+                };
+                Some((pm, nb))
+            });
+        results.into_iter().map(|r| r.expect("pack result")).collect()
+    }
 }
 
 fn update_xbar(
-    states: &mut BTreeMap<MatId, MatState>,
+    stats: &mut CalibrationStats,
+    xbar_init: &mut [bool],
     input_means: &[(MatId, Vec<f32>)],
     alpha: f64,
 ) {
     for (id, mu) in input_means {
-        let st = states.get_mut(id).unwrap();
-        if st.xbar_init {
-            for (x, &m) in st.xbar.iter_mut().zip(mu) {
+        let ix = stats.index_of(*id).expect("provider returned unknown matrix");
+        let mc = &mut stats.mats[ix];
+        if xbar_init[ix] {
+            for (x, &m) in mc.xbar.iter_mut().zip(mu) {
                 *x = (1.0 - alpha) * *x + alpha * m as f64;
             }
         } else {
-            for (x, &m) in st.xbar.iter_mut().zip(mu) {
+            for (x, &m) in mc.xbar.iter_mut().zip(mu) {
                 *x = m as f64;
             }
-            st.xbar_init = true;
+            xbar_init[ix] = true;
         }
     }
 }
@@ -444,5 +531,70 @@ mod tests {
             qm.to_weights().layers[0].wq.data.clone()
         };
         assert_eq!(run(), run());
+    }
+
+    /// The acceptance criterion of the staged split: calibrating once and
+    /// sweeping rates off the artifact (including through a save/load
+    /// roundtrip) is bit-identical to a from-scratch single-rate run at
+    /// the same seed.
+    #[test]
+    fn calibrate_once_allocate_many_matches_from_scratch() {
+        let (w, corpus) = tiny_setup();
+        let mut provider = NativeProvider;
+        // Calibrate once; the configured target rate is irrelevant here.
+        let calibrator = Radio::new(quick_cfg(7.7));
+        let (stats, report) = calibrator.calibrate(&w, &corpus, &mut provider, None);
+        assert_eq!(report.iters_run, 3);
+
+        // Persist and reload the artifact (the calibrate-once path).
+        let path = std::env::temp_dir().join("radio_test_stats.radiocal");
+        stats.save(&path).unwrap();
+        let loaded = CalibrationStats::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+
+        for target in [2.4, 3.0, 4.0] {
+            let radio = Radio::new(quick_cfg(target));
+            // From-scratch single-rate run (fresh provider state).
+            let mut p2 = NativeProvider;
+            let (qm_scratch, _) = radio.quantize(&w, &corpus, &mut p2, None);
+            // Sweep path: allocate + pack off the loaded artifact.
+            let alloc = loaded.allocate(target, radio.cfg.bmax, radio.cfg.mixed_depth);
+            let qm_sweep = radio.pack(&w, &loaded, &alloc);
+
+            assert_eq!(qm_scratch.avg_bits(), qm_sweep.avg_bits(), "target {target}");
+            let (ws, wv) = (qm_scratch.to_weights(), qm_sweep.to_weights());
+            for (a, b) in ws.layers.iter().zip(&wv.layers) {
+                assert_eq!(a.wq.data, b.wq.data, "target {target}");
+                assert_eq!(a.wo.data, b.wo.data, "target {target}");
+                assert_eq!(a.w1.data, b.w1.data, "target {target}");
+                assert_eq!(a.w2.data, b.w2.data, "target {target}");
+                assert_eq!(a.bq, b.bq, "target {target} (corrected bias)");
+                assert_eq!(a.b2, b.b2, "target {target} (corrected bias)");
+            }
+        }
+    }
+
+    /// The streaming Pack stage must produce the same container as
+    /// saving the resident model.
+    #[test]
+    fn streaming_pack_matches_resident_pack() {
+        let (w, corpus) = tiny_setup();
+        let mut provider = NativeProvider;
+        let radio = Radio::new(quick_cfg(3.0));
+        let (stats, _) = radio.calibrate(&w, &corpus, &mut provider, None);
+        let alloc = stats.allocate(3.0, radio.cfg.bmax, true);
+
+        let qm = radio.pack(&w, &stats, &alloc);
+        let p_res = std::env::temp_dir().join("radio_test_pack_res.radio");
+        let p_str = std::env::temp_dir().join("radio_test_pack_str.radio");
+        qm.save(&p_res).unwrap();
+        let summary = radio.pack_streaming(&w, &stats, &alloc, &p_str).unwrap();
+        assert_eq!(summary.matrices, qm.packed.len());
+        assert!((summary.avg_bits - qm.avg_bits()).abs() < 1e-12);
+        let (a, b) = (std::fs::read(&p_res).unwrap(), std::fs::read(&p_str).unwrap());
+        let _ = std::fs::remove_file(&p_res);
+        let _ = std::fs::remove_file(&p_str);
+        assert_eq!(summary.bytes as usize, b.len());
+        assert_eq!(a, b, "streamed container must be byte-identical");
     }
 }

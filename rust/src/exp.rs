@@ -75,6 +75,14 @@ pub fn default_steps(preset: &str) -> usize {
 
 /// The paper's Table-1 method grid at a given bit depth / group size.
 pub fn method_grid(bits: u8, group: usize, iters: usize) -> Vec<Method> {
+    let mut grid = baseline_grid(bits, group);
+    grid.push(Method::Radio(radio_cfg(bits as f64, group, iters)));
+    grid
+}
+
+/// The baseline methods alone — for callers that run Radio through the
+/// staged calibrate-once API instead of `run_method`.
+pub fn baseline_grid(bits: u8, group: usize) -> Vec<Method> {
     vec![
         Method::Rtn { bits, rows_per_group: group },
         Method::Gptq(GptqConfig {
@@ -103,7 +111,6 @@ pub fn method_grid(bits: u8, group: usize, iters: usize) -> Vec<Method> {
             seq: 64,
             ..Default::default()
         }),
-        Method::Radio(radio_cfg(bits as f64, group, iters)),
     ]
 }
 
@@ -143,5 +150,8 @@ mod tests {
         let names: Vec<String> = g.iter().map(|m| m.name()).collect();
         assert!(names.iter().any(|n| n.starts_with("RTN")));
         assert!(names.iter().any(|n| n.starts_with("Radio")));
+        let b = baseline_grid(3, 64);
+        assert_eq!(b.len(), 4);
+        assert!(b.iter().all(|m| !m.name().starts_with("Radio")));
     }
 }

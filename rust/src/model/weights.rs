@@ -34,6 +34,31 @@ impl Role {
             Role::Down => "mlp_down",
         }
     }
+
+    /// Stable one-byte tag for binary containers (`.radio`, calibration
+    /// artifacts). Append-only: existing tags must never be renumbered.
+    pub fn tag(&self) -> u8 {
+        match self {
+            Role::Q => 0,
+            Role::K => 1,
+            Role::V => 2,
+            Role::O => 3,
+            Role::Up => 4,
+            Role::Down => 5,
+        }
+    }
+
+    pub fn from_tag(t: u8) -> Option<Role> {
+        Some(match t {
+            0 => Role::Q,
+            1 => Role::K,
+            2 => Role::V,
+            3 => Role::O,
+            4 => Role::Up,
+            5 => Role::Down,
+            _ => return None,
+        })
+    }
 }
 
 /// Identifier of one quantizable weight matrix: (block index, role).
@@ -331,6 +356,253 @@ fn err_inv<E: std::fmt::Display>(e: E) -> std::io::Error {
     std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
 }
 
+/// Per-block side parameters: everything a transformer block carries
+/// *besides* its six quantizable matrices (LayerNorms and biases).
+#[derive(Clone, Debug)]
+pub struct LayerSide {
+    pub ln1_g: Vec<f32>,
+    pub ln1_b: Vec<f32>,
+    pub bq: Vec<f32>,
+    pub bk: Vec<f32>,
+    pub bv: Vec<f32>,
+    pub bo: Vec<f32>,
+    pub ln2_g: Vec<f32>,
+    pub ln2_b: Vec<f32>,
+    pub b1: Vec<f32>,
+    pub b2: Vec<f32>,
+}
+
+impl LayerSide {
+    pub fn bias(&self, role: Role) -> &Vec<f32> {
+        match role {
+            Role::Q => &self.bq,
+            Role::K => &self.bk,
+            Role::V => &self.bv,
+            Role::O => &self.bo,
+            Role::Up => &self.b1,
+            Role::Down => &self.b2,
+        }
+    }
+
+    pub fn bias_mut(&mut self, role: Role) -> &mut Vec<f32> {
+        match role {
+            Role::Q => &mut self.bq,
+            Role::K => &mut self.bk,
+            Role::V => &mut self.bv,
+            Role::O => &mut self.bo,
+            Role::Up => &mut self.b1,
+            Role::Down => &mut self.b2,
+        }
+    }
+}
+
+/// The full-precision "side" of a quantized model: embeddings, positional
+/// table, LayerNorms, (corrected) biases and the final norm — everything
+/// except the packed block matrices. Holding this instead of a dense
+/// `Weights` clone keeps a `QuantizedModel` O(side) rather than O(model)
+/// resident, which is what lets packing stream layer by layer.
+#[derive(Clone, Debug)]
+pub struct SideParams {
+    pub config: ModelConfig,
+    pub embed: Tensor,
+    pub pos: Tensor,
+    pub layers: Vec<LayerSide>,
+    pub lnf_g: Vec<f32>,
+    pub lnf_b: Vec<f32>,
+}
+
+impl SideParams {
+    /// Extract the side parameters of a dense model (block matrices are
+    /// dropped, not copied).
+    pub fn from_weights(w: &Weights) -> SideParams {
+        SideParams {
+            config: w.config,
+            embed: w.embed.clone(),
+            pos: w.pos.clone(),
+            layers: w
+                .layers
+                .iter()
+                .map(|l| LayerSide {
+                    ln1_g: l.ln1_g.clone(),
+                    ln1_b: l.ln1_b.clone(),
+                    bq: l.bq.clone(),
+                    bk: l.bk.clone(),
+                    bv: l.bv.clone(),
+                    bo: l.bo.clone(),
+                    ln2_g: l.ln2_g.clone(),
+                    ln2_b: l.ln2_b.clone(),
+                    b1: l.b1.clone(),
+                    b2: l.b2.clone(),
+                })
+                .collect(),
+            lnf_g: w.lnf_g.clone(),
+            lnf_b: w.lnf_b.clone(),
+        }
+    }
+
+    pub fn bias(&self, id: MatId) -> &Vec<f32> {
+        self.layers[id.layer].bias(id.role)
+    }
+
+    pub fn bias_mut(&mut self, id: MatId) -> &mut Vec<f32> {
+        self.layers[id.layer].bias_mut(id.role)
+    }
+
+    /// Rebuild a dense `Weights` by combining these side parameters with
+    /// a per-matrix supplier for the block matrices.
+    pub fn to_weights_with(&self, mut matrix: impl FnMut(MatId) -> Tensor) -> Weights {
+        let layers = self
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(layer, l)| LayerWeights {
+                ln1_g: l.ln1_g.clone(),
+                ln1_b: l.ln1_b.clone(),
+                wq: matrix(MatId { layer, role: Role::Q }),
+                bq: l.bq.clone(),
+                wk: matrix(MatId { layer, role: Role::K }),
+                bk: l.bk.clone(),
+                wv: matrix(MatId { layer, role: Role::V }),
+                bv: l.bv.clone(),
+                wo: matrix(MatId { layer, role: Role::O }),
+                bo: l.bo.clone(),
+                ln2_g: l.ln2_g.clone(),
+                ln2_b: l.ln2_b.clone(),
+                w1: matrix(MatId { layer, role: Role::Up }),
+                b1: l.b1.clone(),
+                w2: matrix(MatId { layer, role: Role::Down }),
+                b2: l.b2.clone(),
+            })
+            .collect();
+        Weights {
+            config: self.config,
+            embed: self.embed.clone(),
+            pos: self.pos.clone(),
+            layers,
+            lnf_g: self.lnf_g.clone(),
+            lnf_b: self.lnf_b.clone(),
+        }
+    }
+
+    /// Parameter slices in the fixed serialization order.
+    fn slices(&self) -> Vec<&[f32]> {
+        let mut v: Vec<&[f32]> = Vec::new();
+        v.push(&self.embed.data);
+        v.push(&self.pos.data);
+        for l in &self.layers {
+            v.push(&l.ln1_g);
+            v.push(&l.ln1_b);
+            v.push(&l.bq);
+            v.push(&l.bk);
+            v.push(&l.bv);
+            v.push(&l.bo);
+            v.push(&l.ln2_g);
+            v.push(&l.ln2_b);
+            v.push(&l.b1);
+            v.push(&l.b2);
+        }
+        v.push(&self.lnf_g);
+        v.push(&self.lnf_b);
+        v
+    }
+
+    fn slices_mut(&mut self) -> Vec<&mut [f32]> {
+        let mut v: Vec<&mut [f32]> = Vec::new();
+        v.push(&mut self.embed.data);
+        v.push(&mut self.pos.data);
+        for l in self.layers.iter_mut() {
+            v.push(&mut l.ln1_g);
+            v.push(&mut l.ln1_b);
+            v.push(&mut l.bq);
+            v.push(&mut l.bk);
+            v.push(&mut l.bv);
+            v.push(&mut l.bo);
+            v.push(&mut l.ln2_g);
+            v.push(&mut l.ln2_b);
+            v.push(&mut l.b1);
+            v.push(&mut l.b2);
+        }
+        v.push(&mut self.lnf_g);
+        v.push(&mut self.lnf_b);
+        v
+    }
+
+    /// Serialize into any byte sink: JSON config header, then raw f32 LE
+    /// slices (length-prefixed) in `slices` order. No temp files — this
+    /// is what lets `.radio` containers stream.
+    pub fn write_to<W: Write>(&self, f: &mut W) -> std::io::Result<()> {
+        let cfg = self.config.to_json().to_string();
+        f.write_all(&(cfg.len() as u32).to_le_bytes())?;
+        f.write_all(cfg.as_bytes())?;
+        // Fixed-size staging buffer: no transient per-slice byte Vec
+        // (the embedding table alone would be vocab·dim·4 bytes), which
+        // keeps the streaming container path at bounded peak memory.
+        let mut buf = [0u8; 4096];
+        for s in self.slices() {
+            f.write_all(&(s.len() as u64).to_le_bytes())?;
+            for chunk in s.chunks(buf.len() / 4) {
+                for (i, x) in chunk.iter().enumerate() {
+                    buf[i * 4..i * 4 + 4].copy_from_slice(&x.to_le_bytes());
+                }
+                f.write_all(&buf[..chunk.len() * 4])?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn read_from<R: Read>(f: &mut R) -> std::io::Result<SideParams> {
+        let mut len4 = [0u8; 4];
+        f.read_exact(&mut len4)?;
+        let clen = u32::from_le_bytes(len4) as usize;
+        let mut cbuf = vec![0u8; clen];
+        f.read_exact(&mut cbuf)?;
+        let cfg_json =
+            Json::parse(std::str::from_utf8(&cbuf).map_err(err_inv)?).map_err(err_inv)?;
+        let cfg = ModelConfig::from_json(&cfg_json).map_err(err_inv)?;
+        // Shaped directly from the config — never materializes the dense
+        // block matrices a `Weights::zeros` would allocate.
+        let (e, mlp) = (cfg.dim, cfg.mlp);
+        let mut side = SideParams {
+            config: cfg,
+            embed: Tensor::zeros(cfg.vocab, cfg.dim),
+            pos: Tensor::zeros(cfg.max_seq, cfg.dim),
+            layers: (0..cfg.layers)
+                .map(|_| LayerSide {
+                    ln1_g: vec![0.0; e],
+                    ln1_b: vec![0.0; e],
+                    bq: vec![0.0; e],
+                    bk: vec![0.0; e],
+                    bv: vec![0.0; e],
+                    bo: vec![0.0; e],
+                    ln2_g: vec![0.0; e],
+                    ln2_b: vec![0.0; e],
+                    b1: vec![0.0; mlp],
+                    b2: vec![0.0; e],
+                })
+                .collect(),
+            lnf_g: vec![0.0; e],
+            lnf_b: vec![0.0; e],
+        };
+        for s in side.slices_mut() {
+            let mut len8 = [0u8; 8];
+            f.read_exact(&mut len8)?;
+            let n = u64::from_le_bytes(len8) as usize;
+            if n != s.len() {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("side-param length mismatch: file {n}, expected {}", s.len()),
+                ));
+            }
+            let mut buf = vec![0u8; n * 4];
+            f.read_exact(&mut buf)?;
+            for (i, x) in s.iter_mut().enumerate() {
+                *x = f32::from_le_bytes(buf[i * 4..i * 4 + 4].try_into().unwrap());
+            }
+        }
+        Ok(side)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -382,6 +654,34 @@ mod tests {
             / m.len() as f64
             / (var * var);
         assert!(k > 4.0, "kurtosis {k}");
+    }
+
+    #[test]
+    fn role_tags_roundtrip() {
+        for role in Role::ALL {
+            assert_eq!(Role::from_tag(role.tag()), Some(role));
+        }
+        assert_eq!(Role::from_tag(6), None);
+    }
+
+    #[test]
+    fn side_params_roundtrip_and_rebuild() {
+        let cfg = ModelConfig::preset("ropt-nano").unwrap();
+        let mut rng = Rng::new(44);
+        let w = Weights::init_training(cfg, &mut rng);
+        let side = SideParams::from_weights(&w);
+        let mut buf: Vec<u8> = Vec::new();
+        side.write_to(&mut buf).unwrap();
+        let back = SideParams::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(side.embed.data, back.embed.data);
+        assert_eq!(side.layers[1].bq, back.layers[1].bq);
+        assert_eq!(side.lnf_g, back.lnf_g);
+        // Rebuilding with the original matrices reproduces the model.
+        let rebuilt = back.to_weights_with(|id| w.matrix(id).clone());
+        assert_eq!(rebuilt.layers[0].wq.data, w.layers[0].wq.data);
+        assert_eq!(rebuilt.layers[1].b2, w.layers[1].b2);
+        // The serialized side is a small fraction of the dense model.
+        assert!(buf.len() < 4 * cfg.total_params(), "side {} bytes", buf.len());
     }
 
     #[test]

@@ -2,22 +2,35 @@
 //! matrices + full-precision "side" parameters (embeddings, LNs,
 //! corrected biases), with save/load and dequantization back into a
 //! `Weights` for evaluation.
+//!
+//! The container (`RADIOQM2`) is *streaming-friendly*: packed matrices
+//! are emitted first as self-delimiting records and the side parameters
+//! follow a sentinel, so [`QuantizedModelWriter`] can write each matrix
+//! the moment it is packed without ever holding the whole model (or a
+//! dense `Weights` clone — the v1 format's base section stored every
+//! block matrix twice) in memory.
 
-use std::io::{Read, Write};
+use std::collections::BTreeMap;
+use std::io::{BufWriter, Read, Write};
 use std::path::Path;
 
 use crate::model::config::ModelConfig;
-use crate::model::weights::{MatId, Role, Weights};
+use crate::model::weights::{MatId, Role, SideParams, Weights};
 use crate::quant::bitpack::PackedMatrix;
 use crate::util::json::Json;
 
+/// Record tag marking the end of the packed-matrix stream.
+const END_OF_MATRICES: u32 = u32::MAX;
+
 /// A fully quantized model: the paper's deliverable artifact.
+///
+/// `base` holds only the full-precision *side* parameters (embeddings,
+/// positional table, LayerNorms, corrected biases `b^q`) — the block
+/// matrices exist solely in `packed`, so a resident `QuantizedModel` is
+/// O(side + packed bits), not O(dense model).
 #[derive(Clone, Debug)]
 pub struct QuantizedModel {
-    /// Full-precision parameters with block matrices still present (they
-    /// are *replaced* by `packed` on dequantization); biases are the
-    /// corrected `b^q`.
-    pub base: Weights,
+    pub base: SideParams,
     /// One packed matrix per quantizable MatId, in `matrix_ids()` order.
     pub packed: Vec<(MatId, PackedMatrix)>,
 }
@@ -25,11 +38,14 @@ pub struct QuantizedModel {
 impl QuantizedModel {
     /// Dequantize into dense weights for evaluation.
     pub fn to_weights(&self) -> Weights {
-        let mut w = self.base.clone();
-        for (id, p) in &self.packed {
-            *w.matrix_mut(*id) = p.unpack();
-        }
-        w
+        let index: BTreeMap<MatId, &PackedMatrix> =
+            self.packed.iter().map(|(id, p)| (*id, p)).collect();
+        self.base.to_weights_with(|id| {
+            index
+                .get(&id)
+                .map(|p| p.unpack())
+                .unwrap_or_else(|| panic!("missing packed matrix {id}"))
+        })
     }
 
     /// Average payload bits/weight across all packed matrices.
@@ -73,57 +89,35 @@ impl QuantizedModel {
         )
     }
 
+    /// Save the container (via the streaming writer, so the bytes are
+    /// identical to a stream-written artifact).
     pub fn save(&self, path: &Path) -> std::io::Result<()> {
-        let tmp_weights = std::env::temp_dir().join(format!(
-            "radio_qsave_{}.tmp",
-            std::process::id()
-        ));
-        self.base.save(&tmp_weights)?;
-        let base_bytes = std::fs::read(&tmp_weights)?;
-        let _ = std::fs::remove_file(&tmp_weights);
-
-        let mut f = std::fs::File::create(path)?;
-        f.write_all(b"RADIOQM1")?;
-        f.write_all(&(base_bytes.len() as u64).to_le_bytes())?;
-        f.write_all(&base_bytes)?;
-        f.write_all(&(self.packed.len() as u32).to_le_bytes())?;
+        let mut w = QuantizedModelWriter::create(path)?;
         for (id, p) in &self.packed {
-            f.write_all(&(id.layer as u32).to_le_bytes())?;
-            f.write_all(&[role_tag(id.role)])?;
-            let bytes = p.to_bytes();
-            f.write_all(&(bytes.len() as u64).to_le_bytes())?;
-            f.write_all(&bytes)?;
+            w.write_matrix(*id, p)?;
         }
-        Ok(())
+        w.finish(&self.base)
     }
 
     pub fn load(path: &Path) -> std::io::Result<QuantizedModel> {
-        let mut f = std::fs::File::open(path)?;
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
         let mut magic = [0u8; 8];
         f.read_exact(&mut magic)?;
-        if &magic != b"RADIOQM1" {
+        if &magic != b"RADIOQM2" {
             return Err(inv("bad magic: not a .radio quantized model"));
         }
-        let mut l8 = [0u8; 8];
-        f.read_exact(&mut l8)?;
-        let blen = u64::from_le_bytes(l8) as usize;
-        let mut bbytes = vec![0u8; blen];
-        f.read_exact(&mut bbytes)?;
-        let tmp = std::env::temp_dir().join(format!("radio_qload_{}.tmp", std::process::id()));
-        std::fs::write(&tmp, &bbytes)?;
-        let base = Weights::load(&tmp)?;
-        let _ = std::fs::remove_file(&tmp);
-
         let mut l4 = [0u8; 4];
-        f.read_exact(&mut l4)?;
-        let n = u32::from_le_bytes(l4) as usize;
-        let mut packed = Vec::with_capacity(n);
-        for _ in 0..n {
+        let mut l8 = [0u8; 8];
+        let mut packed = Vec::new();
+        loop {
             f.read_exact(&mut l4)?;
-            let layer = u32::from_le_bytes(l4) as usize;
+            let layer = u32::from_le_bytes(l4);
+            if layer == END_OF_MATRICES {
+                break;
+            }
             let mut tag = [0u8; 1];
             f.read_exact(&mut tag)?;
-            let role = role_from_tag(tag[0]).ok_or_else(|| inv("bad role tag"))?;
+            let role = Role::from_tag(tag[0]).ok_or_else(|| inv("bad role tag"))?;
             f.read_exact(&mut l8)?;
             let plen = u64::from_le_bytes(l8) as usize;
             let mut pbytes = vec![0u8; plen];
@@ -132,8 +126,9 @@ impl QuantizedModel {
             if used != plen {
                 return Err(inv("packed matrix trailing bytes"));
             }
-            packed.push((MatId { layer, role }, pm));
+            packed.push((MatId { layer: layer as usize, role }, pm));
         }
+        let base = SideParams::read_from(&mut f)?;
         Ok(QuantizedModel { base, packed })
     }
 
@@ -154,27 +149,49 @@ impl QuantizedModel {
     }
 }
 
-fn role_tag(r: Role) -> u8 {
-    match r {
-        Role::Q => 0,
-        Role::K => 1,
-        Role::V => 2,
-        Role::O => 3,
-        Role::Up => 4,
-        Role::Down => 5,
-    }
+/// Streaming `.radio` writer: emit packed matrices one at a time (each is
+/// flushed to disk immediately and can be dropped by the caller), then
+/// seal the container with the side parameters. The Pack stage of the
+/// compression pipeline drives this so peak memory is one packing window,
+/// not the whole quantized model.
+pub struct QuantizedModelWriter {
+    f: BufWriter<std::fs::File>,
+    matrices: usize,
 }
 
-fn role_from_tag(t: u8) -> Option<Role> {
-    Some(match t {
-        0 => Role::Q,
-        1 => Role::K,
-        2 => Role::V,
-        3 => Role::O,
-        4 => Role::Up,
-        5 => Role::Down,
-        _ => return None,
-    })
+impl QuantizedModelWriter {
+    pub fn create(path: &Path) -> std::io::Result<QuantizedModelWriter> {
+        let mut f = BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(b"RADIOQM2")?;
+        Ok(QuantizedModelWriter { f, matrices: 0 })
+    }
+
+    /// Append one packed matrix record.
+    pub fn write_matrix(&mut self, id: MatId, p: &PackedMatrix) -> std::io::Result<()> {
+        assert!(
+            (id.layer as u32) != END_OF_MATRICES,
+            "layer index collides with the end sentinel"
+        );
+        self.f.write_all(&(id.layer as u32).to_le_bytes())?;
+        self.f.write_all(&[id.role.tag()])?;
+        let bytes = p.to_bytes();
+        self.f.write_all(&(bytes.len() as u64).to_le_bytes())?;
+        self.f.write_all(&bytes)?;
+        self.matrices += 1;
+        Ok(())
+    }
+
+    /// Number of matrix records written so far.
+    pub fn matrices_written(&self) -> usize {
+        self.matrices
+    }
+
+    /// Seal the container: end-of-matrices sentinel, then side params.
+    pub fn finish(mut self, side: &SideParams) -> std::io::Result<()> {
+        self.f.write_all(&END_OF_MATRICES.to_le_bytes())?;
+        side.write_to(&mut self.f)?;
+        self.f.flush()
+    }
 }
 
 fn inv<E: std::fmt::Display>(e: E) -> std::io::Error {
@@ -201,7 +218,7 @@ mod tests {
                 )
             })
             .collect();
-        QuantizedModel { base: w.clone(), packed }
+        QuantizedModel { base: SideParams::from_weights(w), packed }
     }
 
     #[test]
@@ -216,6 +233,63 @@ mod tests {
         let _ = std::fs::remove_file(&path);
         assert_eq!(qm.to_weights().layers[0].wq.data, back.to_weights().layers[0].wq.data);
         assert!((qm.avg_bits() - back.avg_bits()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn container_does_not_store_dense_block_matrices() {
+        // The v1 format serialized a full dense `Weights` clone inside
+        // `base` even though `packed` replaces every block matrix on
+        // dequantization. The v2 container must be far below the dense
+        // block-parameter footprint (4 bytes/weight) at 4 bits/weight.
+        let cfg = ModelConfig::preset("ropt-nano").unwrap();
+        let mut rng = Rng::new(95);
+        let w = Weights::init_training(cfg, &mut rng);
+        let qm = quantize_all(&w, 4);
+        let path = std::env::temp_dir().join("radio_test_qm_size.radio");
+        qm.save(&path).unwrap();
+        let on_disk = std::fs::metadata(&path).unwrap().len() as usize;
+        let _ = std::fs::remove_file(&path);
+        let dense_block_bytes = 4 * cfg.block_params();
+        assert!(
+            on_disk < dense_block_bytes,
+            "container {on_disk} B should undercut dense block storage {dense_block_bytes} B"
+        );
+    }
+
+    #[test]
+    fn streaming_writer_matches_in_memory_path() {
+        // stream-write → load → to_weights() must be bit-identical to the
+        // resident model's to_weights().
+        let cfg = ModelConfig::preset("ropt-nano").unwrap();
+        let mut rng = Rng::new(96);
+        let w = Weights::init_training(cfg, &mut rng);
+        let qm = quantize_all(&w, 3);
+
+        let streamed = std::env::temp_dir().join("radio_test_qm_stream.radio");
+        let mut writer = QuantizedModelWriter::create(&streamed).unwrap();
+        for (id, p) in &qm.packed {
+            writer.write_matrix(*id, p).unwrap();
+        }
+        assert_eq!(writer.matrices_written(), qm.packed.len());
+        writer.finish(&qm.base).unwrap();
+
+        let monolithic = std::env::temp_dir().join("radio_test_qm_mono.radio");
+        qm.save(&monolithic).unwrap();
+        let stream_bytes = std::fs::read(&streamed).unwrap();
+        let mono_bytes = std::fs::read(&monolithic).unwrap();
+        assert_eq!(stream_bytes, mono_bytes, "stream and save must emit identical bytes");
+
+        let back = QuantizedModel::load(&streamed).unwrap();
+        let _ = std::fs::remove_file(&streamed);
+        let _ = std::fs::remove_file(&monolithic);
+        let a = qm.to_weights();
+        let b = back.to_weights();
+        for (x, y) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(x.wq.data, y.wq.data);
+            assert_eq!(x.w2.data, y.w2.data);
+            assert_eq!(x.bq, y.bq);
+        }
+        assert_eq!(a.embed.data, b.embed.data);
     }
 
     #[test]

@@ -83,6 +83,24 @@ impl Grouping {
             .collect()
     }
 
+    /// Gather into a caller-owned scratch buffer (cleared first). Lets
+    /// per-group loops (quantize_matrix, the calibration EMA updates)
+    /// avoid one heap allocation per group.
+    pub fn gather_into(&self, w: &Tensor, col: usize, sub: usize, buf: &mut Vec<f32>) {
+        buf.clear();
+        buf.extend(self.group_rows[sub].iter().map(|&r| w.get(r as usize, col)));
+    }
+
+    /// Iterate the weights of group (col, sub) without materializing them.
+    pub fn iter_group<'a>(
+        &'a self,
+        w: &'a Tensor,
+        col: usize,
+        sub: usize,
+    ) -> impl Iterator<Item = f32> + 'a {
+        self.group_rows[sub].iter().map(move |&r| w.get(r as usize, col))
+    }
+
     /// Scatter values back into group (col, sub).
     pub fn scatter(&self, w: &mut Tensor, col: usize, sub: usize, vals: &[f32]) {
         assert_eq!(vals.len(), self.group_rows[sub].len());

@@ -38,10 +38,11 @@ pub fn quantize_matrix(
 ) -> PackedMatrix {
     assert_eq!(bits.len(), grouping.num_groups());
     let mut meta = Vec::with_capacity(bits.len());
+    let mut vals = Vec::with_capacity(grouping.rows.div_ceil(grouping.m.max(1)) + 1);
     for col in 0..grouping.cols {
         for sub in 0..grouping.m {
             let b = bits[grouping.group_index(col, sub)];
-            let vals = grouping.gather(w, col, sub);
+            grouping.gather_into(w, col, sub, &mut vals);
             meta.push(group_meta(&vals, b, mode, scale_rule));
         }
     }

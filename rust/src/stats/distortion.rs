@@ -65,6 +65,16 @@ pub fn total_distortion(groups: &[GroupRd], bits: &[f64]) -> f64 {
         .sum()
 }
 
+/// Total modeled distortion at an integer bit assignment (the quantity
+/// the per-iteration trace and the Allocate stage report).
+pub fn total_distortion_int(groups: &[GroupRd], bits: &[u8]) -> f64 {
+    groups
+        .iter()
+        .zip(bits)
+        .map(|(g, &b)| g.distortion(b as f64))
+        .sum()
+}
+
 /// Average bit rate (bits per weight) of an assignment.
 pub fn average_rate(groups: &[GroupRd], bits: &[f64]) -> f64 {
     let total_w: usize = groups.iter().map(|g| g.count).sum();
@@ -128,6 +138,14 @@ mod tests {
         let lo = GroupRd::new(10, 0.1, 1.0, 1.0);
         let hi = GroupRd::new(10, 10.0, 1.0, 1.0);
         assert!(hi.optimal_bits(v, 8.0) > lo.optimal_bits(v, 8.0));
+    }
+
+    #[test]
+    fn integer_distortion_matches_continuous_at_integer_bits() {
+        let groups = vec![GroupRd::new(10, 1.0, 2.0, 1.0), GroupRd::new(20, 0.5, 0.5, 1.0)];
+        let bi = total_distortion_int(&groups, &[3u8, 5u8]);
+        let bc = total_distortion(&groups, &[3.0, 5.0]);
+        assert!((bi - bc).abs() < 1e-12);
     }
 
     #[test]

@@ -145,6 +145,32 @@ pub fn mean_square(xs: &[f32]) -> f64 {
     xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() / xs.len() as f64
 }
 
+/// Mean of squares over an iterator — lets the calibration loop compute
+/// per-group G² straight off a strided view (`Grouping::iter_group`)
+/// without allocating a gather buffer per group per iteration.
+pub fn mean_square_iter(xs: impl Iterator<Item = f32>) -> f64 {
+    let (mut sum, mut n) = (0f64, 0usize);
+    for x in xs {
+        sum += (x as f64) * (x as f64);
+        n += 1;
+    }
+    if n == 0 {
+        0.0
+    } else {
+        sum / n as f64
+    }
+}
+
+/// Population variance over an iterator (Welford, single pass). Same
+/// allocation-free rationale as [`mean_square_iter`].
+pub fn variance_iter(xs: impl Iterator<Item = f32>) -> f64 {
+    let mut w = Welford::new();
+    for x in xs {
+        w.push(x as f64);
+    }
+    w.variance()
+}
+
 /// Excess-kurtosis-based distribution classifier: returns the companding
 /// coefficient H (Gersho & Gray): 1.42 for ~Gaussian weights, 0.72·√3≈
 /// table values for Laplace. We expose the two H constants the paper cites.
@@ -216,6 +242,16 @@ mod tests {
         }
         assert!((w.mean() - mean(&xs)).abs() < 1e-9);
         assert!((w.variance() - variance(&xs)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn iter_moments_match_slice_moments() {
+        let mut rng = Rng::new(3);
+        let xs: Vec<f32> = (0..4096).map(|_| rng.normal(0.3, 1.7) as f32).collect();
+        assert!((mean_square_iter(xs.iter().copied()) - mean_square(&xs)).abs() < 1e-9);
+        assert!((variance_iter(xs.iter().copied()) - variance(&xs)).abs() < 1e-6);
+        assert_eq!(mean_square_iter(std::iter::empty()), 0.0);
+        assert_eq!(variance_iter(std::iter::empty()), 0.0);
     }
 
     #[test]

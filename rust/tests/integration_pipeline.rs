@@ -3,8 +3,8 @@
 //! the engine/serving path. (Slower than unit tests but minutes-scale.)
 
 use radio::coordinator::gradients::NativeProvider;
-use radio::coordinator::pipeline::{run_method, rtn_quantize_model, Method};
-use radio::coordinator::{Radio, RadioConfig};
+use radio::coordinator::pipeline::{radio_sweep, run_method, rtn_quantize_model, Method};
+use radio::coordinator::{CalibrationStats, Radio, RadioConfig};
 use radio::eval::perplexity;
 use radio::infer::{serve, Engine, Request};
 use radio::model::corpus::{Corpus, Domain};
@@ -93,22 +93,46 @@ fn full_pipeline_ordering_and_serving() {
 #[test]
 fn radio_rate_flexibility_monotone_distortion() {
     // Higher rate ⇒ no worse perplexity (monotone RD curve, modulo noise).
+    // Runs the staged calibrate-once path: one calibration artifact
+    // (through a disk roundtrip) serves every target rate.
     let (w, calib, test) = trained_tiny();
     let mut provider = NativeProvider;
+    let cfg = RadioConfig {
+        target_bits: 4.0,
+        rows_per_group: 16,
+        batch: 4,
+        seq: 48,
+        tokens_per_seq: 9,
+        iters: 5,
+        pca_k: 4,
+        ..Default::default()
+    };
+    let rates = [2.0, 4.0, 6.0];
+    let (stats, calib_seconds, results) = radio_sweep(&cfg, &rates, &w, &calib, &mut provider);
+    assert!(calib_seconds > 0.0);
+
+    // The artifact survives a disk roundtrip with identical allocations.
+    let path = std::env::temp_dir().join("radio_integration_stats.radiocal");
+    stats.save(&path).unwrap();
+    let loaded = CalibrationStats::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    for &rate in &rates {
+        assert_eq!(
+            stats.allocate(rate, cfg.bmax, true).bits,
+            loaded.allocate(rate, cfg.bmax, true).bits,
+            "allocation changed across save/load at {rate} bits"
+        );
+    }
+
     let mut ppls = Vec::new();
-    for bits in [2.0, 4.0, 6.0] {
-        let cfg = RadioConfig {
-            target_bits: bits,
-            rows_per_group: 16,
-            batch: 4,
-            seq: 48,
-            tokens_per_seq: 9,
-            iters: 5,
-            pca_k: 4,
-            ..Default::default()
-        };
-        let (qm, _) = Radio::new(cfg).quantize(&w, &calib, &mut provider, None);
-        ppls.push(perplexity(&qm.to_weights(), &test, 48, 16));
+    for (r, &rate) in results.iter().zip(&rates) {
+        assert!(
+            (r.model.avg_bits() - rate).abs() < 0.05,
+            "{}: rate {}",
+            r.method,
+            r.model.avg_bits()
+        );
+        ppls.push(perplexity(&r.model.to_weights(), &test, 48, 16));
     }
     assert!(
         ppls[0] > ppls[2] - 0.05,
