@@ -10,7 +10,7 @@
 
 use radio::coordinator::{NativeProvider, Radio};
 use radio::coordinator::pipeline::rtn_quantize_model;
-use radio::eval::perplexity;
+use radio::eval::{perplexity, perplexity_packed};
 use radio::exp;
 
 fn main() {
@@ -24,16 +24,27 @@ fn main() {
     let mut provider = NativeProvider;
     let (qm, report) = Radio::new(cfg).quantize(&weights, &calib_train, &mut provider, None);
 
-    // 3. Compare.
+    // 3. Compare. Radio's number comes from the packed-model path —
+    // evaluated straight off the bitstreams, no dense densification —
+    // with the dense reference path cross-checked alongside.
     let ppl_fp = perplexity(&weights, &test, exp::EVAL_SEQ, exp::EVAL_WINDOWS);
-    let ppl_radio = perplexity(&qm.to_weights(), &test, exp::EVAL_SEQ, exp::EVAL_WINDOWS);
+    let ppl_radio = perplexity_packed(&qm, &test, exp::EVAL_SEQ, exp::EVAL_WINDOWS);
+    let ppl_radio_dense = perplexity(&qm.to_weights(), &test, exp::EVAL_SEQ, exp::EVAL_WINDOWS);
     let rtn = rtn_quantize_model(&weights, 3, 32);
     let ppl_rtn = perplexity(&rtn.to_weights(), &test, exp::EVAL_SEQ, exp::EVAL_WINDOWS);
+    // The 5e-3 agreement bound is pinned by unit tests; in a demo binary
+    // just surface a drift rather than aborting before the results print.
+    if (ppl_radio - ppl_radio_dense).abs() > 5e-3 * ppl_radio_dense {
+        eprintln!(
+            "warning: packed eval path ({ppl_radio:.4}) drifted from dense \
+             ({ppl_radio_dense:.4}) beyond the documented tolerance"
+        );
+    }
 
     println!("\n=== Radio quickstart (ropt-nano, 3.0 bits/weight) ===");
     println!("FP32 perplexity          : {ppl_fp:.3}");
     println!("RTN  perplexity          : {ppl_rtn:.3}");
-    println!("Radio perplexity         : {ppl_radio:.3}");
+    println!("Radio perplexity (packed): {ppl_radio:.3}  (dense path: {ppl_radio_dense:.3})");
     println!("Radio rate               : {:.4} bits/weight", qm.avg_bits());
     println!("Radio pruned weights     : {:.2}%", 100.0 * qm.pruned_fraction());
     println!("optimization             : {} iters in {:.1}s (PCA explains {:.0}%)",

@@ -10,7 +10,7 @@
 
 use radio::coordinator::{NativeProvider, Radio};
 use radio::exp;
-use radio::infer::{serve, serve_threaded, Engine, Request};
+use radio::infer::{serve, serve_threaded, serve_with, Engine, Request, ServeConfig};
 use radio::util::cli::Args;
 use radio::util::rng::Rng;
 
@@ -20,6 +20,10 @@ fn main() {
     // `--workers` is honoured as an alias from the thread-per-request era.
     let max_batch = args.get_usize("max-batch", args.get_usize("workers", 8));
     let max_new = args.get_usize("max-new", 24);
+    // Long enough to make prompt absorption visible (chunked prefill's
+    // regime) while leaving room for generation in the ropt positional
+    // table.
+    let prompt_len = args.get_usize("prompt-len", 32);
 
     let weights = exp::trained_model("ropt-nano", exp::default_steps("ropt-nano"));
     let (calib, _) = exp::corpora();
@@ -43,17 +47,32 @@ fn main() {
         let mut rng = Rng::new(0xBA7C);
         (0..n)
             .map(|id| {
-                let (toks, _) = val.sample_batch(&mut rng, 1, 16);
+                let (toks, _) = val.sample_batch(&mut rng, 1, prompt_len);
                 Request { id, prompt: toks, max_new }
             })
             .collect()
     };
 
-    println!("\nserving {n} requests × {max_new} new tokens, continuous batch ≤ {max_batch}:");
+    println!(
+        "\nserving {n} requests × {max_new} new tokens (prompt {prompt_len}), continuous \
+         batch ≤ {max_batch}:"
+    );
     let (resp_q, stats_q) = serve(&quant_engine, mk_requests(), max_batch);
     println!("  3-bit Radio engine : {stats_q}");
     let (_, stats_fp) = serve(&fp_engine, mk_requests(), max_batch);
     println!("  FP32 engine        : {stats_fp}");
+
+    // Same engine and requests, prompts fed one token per iteration (the
+    // pre-chunking scheduler): the TTFT/prompt-throughput gap is what
+    // chunked prefill buys. Tokens are identical either way.
+    let token_cfg = ServeConfig { max_batch, prefill_chunk: 1, chunk_budget: usize::MAX };
+    let (resp_tok, stats_tok) = serve_with(&quant_engine, mk_requests(), token_cfg);
+    println!("  (token-by-token prefill: {stats_tok})");
+    assert_eq!(
+        resp_q.iter().map(|r| &r.tokens).collect::<Vec<_>>(),
+        resp_tok.iter().map(|r| &r.tokens).collect::<Vec<_>>(),
+        "chunked and token-by-token prefill must produce identical tokens"
+    );
 
     println!("\nthread-per-request baseline ({max_batch} workers, un-amortized decode):");
     let (resp_t, stats_t) = serve_threaded(&quant_engine, mk_requests(), max_batch);

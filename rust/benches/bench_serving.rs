@@ -1,5 +1,7 @@
 //! Serving-path throughput: continuous batching (batch-amortized GEMM
-//! decode) vs the thread-per-request baseline, across batch sizes.
+//! decode) vs the thread-per-request baseline across batch sizes, plus a
+//! prefill-heavy scenario measuring chunked prefill (sequence-axis
+//! decode amortization) against token-by-token prompt feeding.
 //!
 //! Emits a paper-shaped table via `report` *and* a machine-readable
 //! `BENCH_serving.json` at the repo root so the perf trajectory of the
@@ -8,10 +10,13 @@
 //! ```bash
 //! cargo bench --bench bench_serving            # quick
 //! RADIO_BENCH_FULL=1 cargo bench --bench bench_serving
+//! RADIO_BENCH_SMOKE=1 cargo bench --bench bench_serving   # CI smoke (tiny config)
 //! ```
 
 use radio::coordinator::pipeline::rtn_quantize_model;
-use radio::infer::{serve, serve_threaded, Engine, Request};
+use radio::infer::{
+    serve, serve_threaded, serve_with, Engine, Request, ServeConfig, GEMM_ROW_TILE,
+};
 use radio::model::weights::Weights;
 use radio::model::ModelConfig;
 use radio::report;
@@ -43,9 +48,20 @@ where
     (timing.median_secs(), stats)
 }
 
+fn ms(d: std::time::Duration) -> f64 {
+    d.as_secs_f64() * 1e3
+}
+
 fn main() {
-    let quick = std::env::var("RADIO_BENCH_FULL").is_err();
-    let preset = if quick { "ropt-micro" } else { "ropt-med" };
+    let smoke = std::env::var("RADIO_BENCH_SMOKE").is_ok();
+    let full = std::env::var("RADIO_BENCH_FULL").is_ok() && !smoke;
+    let preset = if smoke {
+        "ropt-nano"
+    } else if full {
+        "ropt-med"
+    } else {
+        "ropt-micro"
+    };
     let cfg = ModelConfig::preset(preset).unwrap();
     let mut rng = Rng::new(0x5EAF);
     // Synthetic pretrained-shaped weights: serving throughput does not
@@ -56,12 +72,24 @@ fn main() {
     let engine = Engine::from_quantized(&qm);
     let fp_engine = Engine::from_dense(&w);
 
-    let n_requests = if quick { 16 } else { 32 };
+    let n_requests = if smoke {
+        4
+    } else if full {
+        32
+    } else {
+        16
+    };
     let prompt_len = 8usize;
-    let max_new = if quick { 24 } else { 48 };
+    let max_new = if smoke {
+        8
+    } else if full {
+        48
+    } else {
+        24
+    };
     let reqs = || mk_requests(n_requests, prompt_len, max_new, cfg.vocab);
 
-    let bench = if quick { Bench::quick() } else { Bench::default() };
+    let bench = if full { Bench::default() } else { Bench::quick() };
 
     println!(
         "serving bench: {preset} (synthetic), {bits}-bit RTN pack, {n_requests} requests × \
@@ -118,15 +146,122 @@ fn main() {
         }
     }
 
+    // ------------------------------------------------- prefill-heavy scenario
+    // Long prompts, short generations: the regime where prompt absorption
+    // dominates and sequence-axis decode amortization (chunked prefill)
+    // is the whole game. Token-by-token prefill (prefill_chunk = 1) is
+    // the pre-chunking scheduler behaviour.
+    let long_prompt = if smoke { 24 } else { 48 };
+    let short_new = 4usize;
+    let pf_batch = 8usize;
+    let pf_reqs = || mk_requests(n_requests, long_prompt, short_new, cfg.vocab);
+    println!(
+        "\nprefill-heavy: {n_requests} requests × prompt {long_prompt}, {short_new} new tokens, \
+         batch {pf_batch} (3-bit engine)"
+    );
+
+    let chunked_cfg = ServeConfig::new(pf_batch);
+    let token_cfg = ServeConfig {
+        max_batch: pf_batch,
+        prefill_chunk: 1,
+        chunk_budget: usize::MAX,
+    };
+    let mut pf_table = Table::new(&[
+        "schedule",
+        "prompt tok/s",
+        "gen tok/s",
+        "ttft p50 (ms)",
+        "ttft p95 (ms)",
+    ]);
+    let mut pf_json: Vec<(&str, Json)> = vec![
+        ("requests", Json::num(n_requests as f64)),
+        ("prompt_len", Json::num(long_prompt as f64)),
+        ("max_new", Json::num(short_new as f64)),
+        ("batch", Json::num(pf_batch as f64)),
+        ("row_tile", Json::num(GEMM_ROW_TILE as f64)),
+        ("prefill_chunk", Json::num(chunked_cfg.prefill_chunk as f64)),
+        ("chunk_budget", Json::num(chunked_cfg.chunk_budget as f64)),
+    ];
+    let mut prompt_tps_by_schedule = Vec::new();
+    for (label, scfg) in [("chunked", chunked_cfg), ("token-by-token", token_cfg)] {
+        let (secs, stats) = time_serve(&bench, &format!("prefill {label}"), || {
+            let (_, stats) = serve_with(&engine, pf_reqs(), scfg);
+            stats
+        });
+        let prompt_tps = stats.prompt_tokens as f64 / secs;
+        let gen_tps = stats.total_tokens as f64 / secs;
+        println!(
+            "  {label:>14}: {prompt_tps:8.1} prompt tok/s, {gen_tps:7.1} gen tok/s, \
+             ttft p50 {:.2?} p95 {:.2?}",
+            stats.ttft_p50, stats.ttft_p95
+        );
+        pf_table.row(vec![
+            label.to_string(),
+            format!("{prompt_tps:.1}"),
+            format!("{gen_tps:.1}"),
+            format!("{:.2}", ms(stats.ttft_p50)),
+            format!("{:.2}", ms(stats.ttft_p95)),
+        ]);
+        pf_json.push((
+            if label == "chunked" { "chunked" } else { "token_by_token" },
+            Json::obj(vec![
+                ("prompt_tps", Json::num(prompt_tps)),
+                ("gen_tps", Json::num(gen_tps)),
+                ("ttft_p50_ms", Json::num(ms(stats.ttft_p50))),
+                ("ttft_p95_ms", Json::num(ms(stats.ttft_p95))),
+            ]),
+        ));
+        prompt_tps_by_schedule.push(prompt_tps);
+    }
+    let serve_prefill_speedup = prompt_tps_by_schedule[0] / prompt_tps_by_schedule[1].max(1e-12);
+    println!("  chunked-vs-token prefill speedup (serve): {serve_prefill_speedup:.2}x");
+    pf_json.push(("serve_prompt_tps_speedup", Json::num(serve_prefill_speedup)));
+
+    // Engine-level microbench of the same contrast, scheduler excluded:
+    // one long prompt, chunked prefill_batch vs a step() loop.
+    let prompt: Vec<u32> = mk_requests(1, long_prompt, 0, cfg.vocab).remove(0).prompt;
+    let t_chunk = bench
+        .run("engine prefill chunked", || {
+            let mut cache = engine.new_cache();
+            black_box(engine.prefill_batch(&[&prompt], std::slice::from_mut(&mut cache)));
+        })
+        .median_secs();
+    let t_token = bench
+        .run("engine prefill token-by-token", || {
+            let mut cache = engine.new_cache();
+            for &t in &prompt {
+                black_box(engine.step(t, &mut cache));
+            }
+        })
+        .median_secs();
+    let engine_chunked_tps = long_prompt as f64 / t_chunk.max(1e-12);
+    let engine_token_tps = long_prompt as f64 / t_token.max(1e-12);
+    let engine_prefill_speedup = engine_chunked_tps / engine_token_tps.max(1e-12);
+    println!(
+        "  engine-only prefill, prompt {long_prompt}: chunked {engine_chunked_tps:.1} tok/s vs \
+         step-loop {engine_token_tps:.1} tok/s ({engine_prefill_speedup:.2}x)"
+    );
+    pf_json.push(("engine_chunked_prompt_tps", Json::num(engine_chunked_tps)));
+    pf_json.push(("engine_token_prompt_tps", Json::num(engine_token_tps)));
+    pf_json.push(("engine_prefill_speedup", Json::num(engine_prefill_speedup)));
+
     println!("\nServing throughput (continuous batching vs thread-per-request):");
     table.print();
+    println!("\nPrefill-heavy (chunked vs token-by-token prompt absorption):");
+    pf_table.print();
     report::write_report(
         "bench_serving",
-        "Serving throughput: batch-amortized quantized decode",
-        &[("continuous batching vs thread-per-request baseline", &table)],
+        "Serving throughput: batch-amortized quantized decode + chunked prefill",
+        &[
+            ("continuous batching vs thread-per-request baseline", &table),
+            ("prefill-heavy: chunked vs token-by-token", &pf_table),
+        ],
         "The decode kernel reads each packed column once per step regardless of batch size, \
-         so quantized gen tok/s should scale with batch until FLOPs dominate. Baseline is the \
-         seed's thread-per-request scheduler with one worker.",
+         so quantized gen tok/s should scale with batch until FLOPs dominate. Chunked prefill \
+         extends the same amortization to the sequence axis: one pass over a prompt chunk \
+         decodes each column once per row tile instead of once per token, which should lift \
+         prompt tok/s and cut TTFT in the long-prompt scenario. Baseline is the seed's \
+         thread-per-request scheduler with one worker.",
     );
 
     let b16 = quant_tps_by_batch.iter().find(|(b, _)| *b == 16).map(|&(_, t)| t).unwrap_or(0.0);
@@ -140,6 +275,7 @@ fn main() {
         ("baseline_threaded_b1_gen_tps", Json::num(base_tps)),
         ("quant_b16_speedup_vs_threaded_b1", Json::num(b16 / base_tps.max(1e-12))),
         ("rows", Json::Arr(rows_json)),
+        ("prefill", Json::obj(pf_json)),
     ]);
     let path = "BENCH_serving.json";
     match std::fs::write(path, json.to_pretty()) {

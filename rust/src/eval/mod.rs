@@ -4,5 +4,5 @@
 pub mod perplexity;
 pub mod tasks;
 
-pub use perplexity::{perplexity, perplexity_quantized};
+pub use perplexity::{perplexity, perplexity_packed, perplexity_quantized};
 pub use tasks::{average_score, score_task, Task};

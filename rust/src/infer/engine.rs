@@ -4,21 +4,26 @@
 //! path provides the FP baseline (Table 7's comparison and the serving
 //! example's control arm).
 //!
-//! The hot entry point is [`Engine::step_batch`]: one forward step for B
-//! independent sequences that decodes each weight column's code stream
-//! once for the whole batch (see [`crate::infer::matvec::MatvecPlan::matmul`]).
-//! [`Engine::step`] is the batch-of-one wrapper, so single-request and
-//! batched serving share one numeric path — results are bit-identical
-//! regardless of what else is co-scheduled in the batch, which is the
-//! invariant the continuous-batching server's determinism tests pin down.
+//! The hot entry point is [`Engine::prefill_batch`]: ONE forward pass
+//! over a chunk of T tokens for each of B independent sequences, with
+//! every per-layer linear running as a (ΣT)-row GEMM so the packed code
+//! streams are decoded once per row tile rather than once per (sequence,
+//! position) — see [`crate::infer::matvec::MatvecPlan::matgem`].
+//! [`Engine::step_batch`] is the chunks-of-one wrapper (decode), and
+//! [`Engine::step`] the batch-of-one wrapper on top of that, so prefill,
+//! batched decode, and single-request decode share ONE numeric path:
+//! per-position results are bit-identical no matter how tokens are
+//! chunked or what else is co-scheduled — the invariant the serving and
+//! prefill determinism tests pin down.
 
 use crate::infer::matvec::{dense_matmul, split_rows, MatvecPlan, SendMut};
 use crate::model::config::ModelConfig;
 use crate::model::tensor::Tensor;
+use crate::model::transformer;
 use crate::model::weights::{Role, Weights};
 use crate::quant::bitpack::PackedMatrix;
 use crate::quant::format::QuantizedModel;
-use crate::util::threadpool::parallel_for_chunks;
+use crate::util::threadpool::{parallel_for_chunks, parallel_map};
 
 const LN_EPS: f32 = 1e-5;
 
@@ -29,11 +34,15 @@ enum Linear {
 }
 
 impl Linear {
-    /// Batched apply: decode once, transform all B activation vectors.
-    fn apply_batch(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    /// Sequence-parallel apply over N = B·T activation rows. The packed
+    /// path row-tiles the chunk so bitstream decode amortizes across
+    /// positions without blowing the cache; dense weights already stream
+    /// row-by-row once per column chunk for the whole batch, so tiling
+    /// would only re-stream them and the dense path stays un-tiled.
+    fn apply_gemm(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
         match self {
             Linear::Dense(w) => dense_matmul(w, xs),
-            Linear::Quant { pm, plan } => plan.matmul(pm, xs),
+            Linear::Quant { pm, plan } => plan.matgem(pm, xs),
         }
     }
 }
@@ -84,6 +93,27 @@ impl KvCache {
             k: (0..cfg.layers).map(|_| Vec::with_capacity(cap)).collect(),
             v: (0..cfg.layers).map(|_| Vec::with_capacity(cap)).collect(),
             len: 0,
+        }
+    }
+
+    /// Append a T-position chunk of K/V rows to `layer` with one
+    /// reservation per buffer (the chunked-prefill replacement for T
+    /// per-token pushes, each of which re-checked capacity). Rows are
+    /// oldest-first; the resulting cache contents are byte-identical to
+    /// appending the same rows one position at a time — the chunked
+    /// append equality test pins this down. `len` is NOT advanced here:
+    /// the engine advances every lane's clock once per forward pass,
+    /// after all layers have appended.
+    fn append_chunk(&mut self, layer: usize, k_rows: &[Vec<f32>], v_rows: &[Vec<f32>]) {
+        debug_assert_eq!(k_rows.len(), v_rows.len());
+        let add: usize = k_rows.iter().map(Vec::len).sum();
+        self.k[layer].reserve(add);
+        self.v[layer].reserve(add);
+        for r in k_rows {
+            self.k[layer].extend_from_slice(r);
+        }
+        for r in v_rows {
+            self.v[layer].extend_from_slice(r);
         }
     }
 }
@@ -199,11 +229,8 @@ impl Engine {
 
     /// Decode one token for each of B independent sequences, appending to
     /// each sequence's KV cache and returning per-sequence logits.
-    ///
-    /// Every per-layer linear runs through the batch-amortized GEMM, so
-    /// the packed code streams are decoded once per layer per *step*
-    /// rather than once per layer per *sequence*; the tied-head logits
-    /// parallelize across the vocabulary.
+    /// Chunks-of-one wrapper around [`Engine::prefill_batch_masked`], so
+    /// decode and prefill share one numeric path.
     ///
     /// Token contract: callers must pass `token < config.vocab`. Debug
     /// builds assert; release builds clamp to the last vocab entry rather
@@ -216,16 +243,47 @@ impl Engine {
     /// [`Engine::step_batch`] with an optional per-lane emit mask: lanes
     /// whose flag is `false` still run the full transformer step (their
     /// KV caches must advance) but skip the tied-head logits — the
-    /// dominant cost on small models — and get an empty vector back. The
-    /// continuous-batching server uses this to avoid paying the head for
-    /// lanes that are still prefilling their prompt.
+    /// dominant cost on small models — and get an empty vector back.
     pub fn step_batch_masked(
         &self,
         tokens: &[u32],
         caches: &mut [KvCache],
         emit: Option<&[bool]>,
     ) -> Vec<Vec<f32>> {
-        let bn = tokens.len();
+        let chunks: Vec<&[u32]> = tokens.iter().map(std::slice::from_ref).collect();
+        self.prefill_batch_masked(&chunks, caches, emit)
+    }
+
+    /// Chunked prefill: feed each lane a chunk of consecutive tokens in
+    /// ONE forward pass and return, per lane, the logits after its final
+    /// chunk position — exactly what a `step()` loop over the same
+    /// tokens would have left in hand, but with every linear running as
+    /// a (ΣT)-row GEMM so bitstream decode amortizes across positions as
+    /// well as lanes.
+    ///
+    /// Bit-identity: the per-position FP reduction order is identical to
+    /// token-by-token stepping — each position's linears accumulate in
+    /// the row-order-independent `matgem` path, and its attention runs
+    /// over the same causal window (cached prefix + earlier chunk
+    /// positions) in the same cache order via
+    /// [`transformer::attend_cached`] — so chunked prefill reproduces
+    /// the sequential `step()` loop exactly (logits AND cache contents).
+    pub fn prefill_batch(&self, chunks: &[&[u32]], caches: &mut [KvCache]) -> Vec<Vec<f32>> {
+        self.prefill_batch_masked(chunks, caches, None)
+    }
+
+    /// [`Engine::prefill_batch`] with an optional per-lane emit mask.
+    /// Masked lanes (and lanes given an empty chunk, which the scheduler
+    /// uses to idle a lane for an iteration without dropping it from the
+    /// batch) return an empty logits vector; empty-chunk lanes' caches
+    /// are untouched.
+    pub fn prefill_batch_masked(
+        &self,
+        chunks: &[&[u32]],
+        caches: &mut [KvCache],
+        emit: Option<&[bool]>,
+    ) -> Vec<Vec<f32>> {
+        let bn = chunks.len();
         assert_eq!(bn, caches.len(), "one KV cache per sequence");
         if let Some(m) = emit {
             assert_eq!(bn, m.len(), "one emit flag per sequence");
@@ -233,160 +291,202 @@ impl Engine {
         if bn == 0 {
             return Vec::new();
         }
-        let emits = |b: usize| emit.map_or(true, |m| m[b]);
+        let cfg = &self.config;
+        let emits = |b: usize| emit.map_or(true, |m| m[b]) && !chunks[b].is_empty();
+        // One prefix-sum shared with forward_chunk — the
+        // `xs[row_off[b + 1] - 1]` last-row indexing below relies on the
+        // same layout the forward used.
+        let row_off = row_offsets(chunks);
+        let xs = self.forward_chunk(chunks, caches, &row_off);
+
+        // Final LN + tied head for the LAST chunk position of each
+        // emitting lane only (earlier positions exist to fill the KV
+        // cache; their logits would be discarded). Same per-(v, lane)
+        // dot order as the decode path always used: chunk the vocab
+        // across the pool, disjoint writes into a flat lane-major
+        // buffer.
+        let live: Vec<(usize, Vec<f32>)> = (0..bn)
+            .filter(|&b| emits(b))
+            .map(|b| (b, ln_vec(&xs[row_off[b + 1] - 1], &self.lnf_g, &self.lnf_b)))
+            .collect();
+        let mut out: Vec<Vec<f32>> = vec![Vec::new(); bn];
+        if live.is_empty() {
+            return out;
+        }
+        let mut logits_flat = vec![0f32; live.len() * cfg.vocab];
+        let out_ptr = SendMut(logits_flat.as_mut_ptr());
+        parallel_for_chunks(cfg.vocab, 64, |c0, c1| {
+            let out_ptr = out_ptr;
+            for vi in c0..c1 {
+                let row = self.embed.row(vi);
+                for (j, (_, z)) in live.iter().enumerate() {
+                    let dot: f32 = z.iter().zip(row).map(|(&a, &w)| a * w).sum();
+                    // SAFETY: vocab chunks are disjoint, so each (j, vi)
+                    // slot is written by exactly one lane.
+                    unsafe { *out_ptr.0.add(j * cfg.vocab + vi) = dot };
+                }
+            }
+        });
+        for ((b, _), row) in live.iter().zip(split_rows(logits_flat, live.len())) {
+            out[*b] = row;
+        }
+        out
+    }
+
+    /// The shared transformer body: embed every chunk position, run all
+    /// blocks (GEMM linears + causal attention against each lane's
+    /// cache), append each lane's K/V chunk per layer in one batched
+    /// reservation, advance every lane's clock by its chunk length, and
+    /// return all N = ΣT hidden rows (lane-major, pre-final-LN).
+    /// `row_off` must be `row_offsets(chunks)` — passed in so the caller
+    /// indexes the returned rows with the exact layout used here.
+    fn forward_chunk(
+        &self,
+        chunks: &[&[u32]],
+        caches: &mut [KvCache],
+        row_off: &[usize],
+    ) -> Vec<Vec<f32>> {
         let cfg = &self.config;
         let (e, hds, dh) = (cfg.dim, cfg.heads, cfg.head_dim());
+        debug_assert_eq!(row_off, row_offsets(chunks).as_slice());
+        let n = *row_off.last().unwrap();
+        if n == 0 {
+            return Vec::new();
+        }
 
-        let mut xs: Vec<Vec<f32>> = tokens
-            .iter()
-            .zip(caches.iter())
-            .map(|(&t, cache)| {
+        // Embedding + positions; record each row's (lane, causal window
+        // end) for attention.
+        let mut xs: Vec<Vec<f32>> = Vec::with_capacity(n);
+        let mut row_win: Vec<(usize, usize)> = Vec::with_capacity(n);
+        for (b, (chunk, cache)) in chunks.iter().zip(caches.iter()).enumerate() {
+            let base = cache.len;
+            debug_assert!(
+                base + chunk.len() <= cfg.max_seq,
+                "chunk overruns the positional table ({base} cached + {} fed > max_seq {}): \
+                 truncate at admission (Engine::admit_prompt)",
+                chunk.len(),
+                cfg.max_seq
+            );
+            for (p, &t) in chunk.iter().enumerate() {
                 debug_assert!(
                     (t as usize) < cfg.vocab,
                     "token {t} out of vocab (vocab size {})",
                     cfg.vocab
                 );
                 let tok = (t as usize).min(cfg.vocab - 1);
-                let pos_idx = cache.len.min(cfg.max_seq - 1);
-                self.embed
-                    .row(tok)
-                    .iter()
-                    .zip(self.pos.row(pos_idx))
-                    .map(|(&a, &b)| a + b)
-                    .collect()
-            })
-            .collect();
+                let pos_idx = (base + p).min(cfg.max_seq - 1);
+                xs.push(
+                    self.embed
+                        .row(tok)
+                        .iter()
+                        .zip(self.pos.row(pos_idx))
+                        .map(|(&a, &b2)| a + b2)
+                        .collect(),
+                );
+                row_win.push((b, base + p + 1));
+            }
+        }
 
         for (li, l) in self.layers.iter().enumerate() {
             let a: Vec<Vec<f32>> = xs.iter().map(|x| ln_vec(x, &l.ln1_g, &l.ln1_b)).collect();
-            let mut q = l.wq.apply_batch(&a);
-            let k = {
-                let mut k = l.wk.apply_batch(&a);
-                for kb in k.iter_mut() {
-                    for (kv, &b) in kb.iter_mut().zip(&l.bk) {
-                        *kv += b;
-                    }
-                }
-                k
-            };
-            let v = {
-                let mut v = l.wv.apply_batch(&a);
-                for vb in v.iter_mut() {
-                    for (vv, &b) in vb.iter_mut().zip(&l.bv) {
-                        *vv += b;
-                    }
-                }
-                v
-            };
+            let mut q = l.wq.apply_gemm(&a);
             for qb in q.iter_mut() {
                 for (qv, &b) in qb.iter_mut().zip(&l.bq) {
                     *qv += b;
                 }
             }
-            for (b, cache) in caches.iter_mut().enumerate() {
-                cache.k[li].extend_from_slice(&k[b]);
-                cache.v[li].extend_from_slice(&v[b]);
-            }
-
-            // Attention per sequence over its own cache, per head.
-            let mut ctx_all: Vec<Vec<f32>> = Vec::with_capacity(bn);
-            for (b, cache) in caches.iter().enumerate() {
-                let t = cache.k[li].len() / e;
-                let mut ctx = vec![0f32; e];
-                let scale = 1.0 / (dh as f32).sqrt();
-                for h in 0..hds {
-                    let qh = &q[b][h * dh..(h + 1) * dh];
-                    // Scores against all cached keys.
-                    let mut scores = Vec::with_capacity(t);
-                    let mut maxs = f32::NEG_INFINITY;
-                    for ti in 0..t {
-                        let kh = &cache.k[li][ti * e + h * dh..ti * e + (h + 1) * dh];
-                        let s: f32 =
-                            qh.iter().zip(kh).map(|(&a2, &b2)| a2 * b2).sum::<f32>() * scale;
-                        scores.push(s);
-                        maxs = maxs.max(s);
-                    }
-                    let mut denom = 0f32;
-                    for s in scores.iter_mut() {
-                        *s = (*s - maxs).exp();
-                        denom += *s;
-                    }
-                    let ctx_h = &mut ctx[h * dh..(h + 1) * dh];
-                    for ti in 0..t {
-                        let p = scores[ti] / denom;
-                        let vh = &cache.v[li][ti * e + h * dh..ti * e + (h + 1) * dh];
-                        for (c, &vv) in ctx_h.iter_mut().zip(vh) {
-                            *c += p * vv;
-                        }
-                    }
+            let mut k = l.wk.apply_gemm(&a);
+            for kb in k.iter_mut() {
+                for (kv, &b) in kb.iter_mut().zip(&l.bk) {
+                    *kv += b;
                 }
-                ctx_all.push(ctx);
+            }
+            let mut v = l.wv.apply_gemm(&a);
+            for vb in v.iter_mut() {
+                for (vv, &b) in vb.iter_mut().zip(&l.bv) {
+                    *vv += b;
+                }
+            }
+            for (b, cache) in caches.iter_mut().enumerate() {
+                let (r0, r1) = (row_off[b], row_off[b + 1]);
+                if r0 < r1 {
+                    cache.append_chunk(li, &k[r0..r1], &v[r0..r1]);
+                }
             }
 
-            let attn = l.wo.apply_batch(&ctx_all);
-            for (b, x) in xs.iter_mut().enumerate() {
-                for ((xv, &av), &bias) in x.iter_mut().zip(&attn[b]).zip(&l.bo) {
+            // Attention: every row is independent given the (now
+            // chunk-inclusive) caches — row r attends over its lane's
+            // rows 0..win, i.e. the cached prefix plus chunk positions
+            // up to and including its own. Parallel across rows;
+            // per-row op order is fixed by attend_cached.
+            let caches_ro: &[KvCache] = caches;
+            let ctx_all: Vec<Vec<f32>> = parallel_map(n, 8, |r| {
+                let (b, win) = row_win[r];
+                transformer::attend_cached(
+                    &q[r],
+                    &caches_ro[b].k[li],
+                    &caches_ro[b].v[li],
+                    win,
+                    e,
+                    hds,
+                    dh,
+                )
+            });
+
+            let attn = l.wo.apply_gemm(&ctx_all);
+            for (r, x) in xs.iter_mut().enumerate() {
+                for ((xv, &av), &bias) in x.iter_mut().zip(&attn[r]).zip(&l.bo) {
                     *xv += av + bias;
                 }
             }
 
             let bnorm: Vec<Vec<f32>> = xs.iter().map(|x| ln_vec(x, &l.ln2_g, &l.ln2_b)).collect();
-            let mut u = l.w1.apply_batch(&bnorm);
+            let mut u = l.w1.apply_gemm(&bnorm);
             for ub in u.iter_mut() {
                 for (uv, &b) in ub.iter_mut().zip(&l.b1) {
                     *uv = gelu(*uv + b);
                 }
             }
-            let mm = l.w2.apply_batch(&u);
-            for (b, x) in xs.iter_mut().enumerate() {
-                for ((xv, &mv), &bias) in x.iter_mut().zip(&mm[b]).zip(&l.b2) {
+            let mm = l.w2.apply_gemm(&u);
+            for (r, x) in xs.iter_mut().enumerate() {
+                for ((xv, &mv), &bias) in x.iter_mut().zip(&mm[r]).zip(&l.b2) {
                     *xv += mv + bias;
                 }
             }
         }
-        for cache in caches.iter_mut() {
-            cache.len += 1;
+        for (chunk, cache) in chunks.iter().zip(caches.iter_mut()) {
+            cache.len += chunk.len();
         }
-
-        let zs: Vec<Vec<f32>> = xs
-            .iter()
-            .map(|x| ln_vec(x, &self.lnf_g, &self.lnf_b))
-            .collect();
-        // Tied head: logits[b][v] = z_b · embed[v]. The vocab × dim dot
-        // products dominate small-model steps; chunk them across the pool
-        // into one flat lane-major buffer with disjoint writes (per-(v, b)
-        // dot order is fixed, so results stay deterministic). Masked
-        // lanes skip the dots entirely.
-        let mut logits_flat = vec![0f32; bn * cfg.vocab];
-        let out_ptr = SendMut(logits_flat.as_mut_ptr());
-        parallel_for_chunks(cfg.vocab, 64, |c0, c1| {
-            let out_ptr = out_ptr;
-            for vi in c0..c1 {
-                let row = self.embed.row(vi);
-                for (b, z) in zs.iter().enumerate() {
-                    if !emits(b) {
-                        continue;
-                    }
-                    let dot: f32 = z.iter().zip(row).map(|(&a, &w)| a * w).sum();
-                    // SAFETY: vocab chunks are disjoint, so each
-                    // (b, vi) slot is written by exactly one lane.
-                    unsafe { *out_ptr.0.add(b * cfg.vocab + vi) = dot };
-                }
-            }
-        });
-        split_rows(logits_flat, bn)
-            .into_iter()
-            .enumerate()
-            .map(|(b, row)| if emits(b) { row } else { Vec::new() })
-            .collect()
+        xs
     }
 
-    /// Greedy generation: feed `prompt`, then decode `max_new` tokens.
+    /// Admission rule shared by [`Engine::generate`] and the serving
+    /// scheduler: prompts longer than the positional table are truncated
+    /// to their first `max_seq` tokens. The pre-chunking step loop used
+    /// to silently clamp the positional index deep inside decode when a
+    /// prompt overran the table (garbage numerics, and a reallocating KV
+    /// cache); the chunked forward now debug-asserts on overrun — loud
+    /// where it used to be silent, while release builds keep the clamp,
+    /// mirroring the out-of-vocab token contract — so oversized prompts
+    /// are resolved here, once, at admission, where the caller can still
+    /// see the whole request.
+    pub fn admit_prompt<'a>(&self, prompt: &'a [u32]) -> &'a [u32] {
+        &prompt[..prompt.len().min(self.config.max_seq)]
+    }
+
+    /// Greedy generation: prefill `prompt` in one chunked pass, then
+    /// decode `max_new` tokens. Oversized prompts are truncated at
+    /// admission ([`Engine::admit_prompt`]); output tokens are identical
+    /// to feeding the prompt through `step()` one token at a time.
     pub fn generate(&self, prompt: &[u32], max_new: usize) -> Vec<u32> {
+        let prompt = self.admit_prompt(prompt);
         let mut cache = self.new_cache();
         let mut logits = vec![0f32; self.config.vocab];
-        for &t in prompt {
-            logits = self.step(t, &mut cache);
+        if !prompt.is_empty() {
+            logits = self
+                .prefill_batch(&[prompt], std::slice::from_mut(&mut cache))
+                .pop()
+                .expect("one lane yields one logit vector");
         }
         let mut out = Vec::with_capacity(max_new);
         for i in 0..max_new {
@@ -404,6 +504,61 @@ impl Engine {
         }
         out
     }
+
+    /// Mean next-token NLL of one evaluation window, computed straight
+    /// off the engine's (packed or dense) weights in a single chunked
+    /// forward — the engine-path twin of `transformer::loss_only`, used
+    /// by `eval::perplexity_packed` to evaluate without densifying. The
+    /// cross-entropy mirrors `loss_only` exactly (f64 accumulation,
+    /// max-subtracted softmax, targets wrapped mod vocab); the logits
+    /// come from the engine's numeric path (f32 attention dots where the
+    /// training forward uses f64), so the two paths agree to rounding,
+    /// not bit-for-bit — see DESIGN.md §Prefill/decode split.
+    pub fn window_nll(&self, tokens: &[u32], targets: &[u32]) -> f64 {
+        assert_eq!(tokens.len(), targets.len(), "one target per window position");
+        assert!(!tokens.is_empty(), "empty evaluation window");
+        assert!(
+            tokens.len() <= self.config.max_seq,
+            "window {} longer than positional table {}",
+            tokens.len(),
+            self.config.max_seq
+        );
+        let mut cache = self.new_cache();
+        let row_off = [0, tokens.len()];
+        let xs = self.forward_chunk(&[tokens], std::slice::from_mut(&mut cache), &row_off);
+        let v = self.config.vocab;
+        // Per-position logits via the tied head, then CE. Positions are
+        // independent; parallelize across them and reduce in position
+        // order (deterministic).
+        let nlls: Vec<f64> = parallel_map(xs.len(), 1, |r| {
+            let z = ln_vec(&xs[r], &self.lnf_g, &self.lnf_b);
+            let mut row = vec![0f32; v];
+            for (vi, lr) in row.iter_mut().enumerate() {
+                *lr = z.iter().zip(self.embed.row(vi)).map(|(&a, &w)| a * w).sum();
+            }
+            let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut denom = 0f64;
+            for &x in &row {
+                denom += ((x - maxv) as f64).exp();
+            }
+            let tgt = targets[r] as usize % v;
+            -((row[tgt] - maxv) as f64 - denom.ln())
+        });
+        nlls.iter().sum::<f64>() / nlls.len() as f64
+    }
+}
+
+/// Prefix sums of chunk lengths: lane `b`'s rows in a flattened
+/// lane-major chunk batch are `row_off[b]..row_off[b + 1]`.
+fn row_offsets(chunks: &[&[u32]]) -> Vec<usize> {
+    let mut off = Vec::with_capacity(chunks.len() + 1);
+    let mut acc = 0usize;
+    off.push(0);
+    for c in chunks {
+        acc += c.len();
+        off.push(acc);
+    }
+    off
 }
 
 pub fn argmax(xs: &[f32]) -> usize {
@@ -564,6 +719,160 @@ mod tests {
             assert_eq!(caches_masked[1].v[li], caches_full[1].v[li]);
         }
         assert_eq!(caches_masked[1].len, caches_full[1].len);
+    }
+
+    #[test]
+    fn prefill_batch_is_bit_identical_to_step_loop() {
+        // The tentpole invariant: one chunked pass over a prompt must
+        // reproduce the sequential step() loop exactly — logits AND
+        // cache contents — for dense and packed engines alike.
+        let w = tiny_weights(191);
+        for engine in [
+            Engine::from_dense(&w),
+            Engine::from_quantized(&rtn_quantize_model(&w, 5, 8)),
+        ] {
+            let chunks: [&[u32]; 3] = [&[1, 2, 3, 4, 5, 6, 7], &[9], &[4, 9, 11, 30, 2]];
+            let mut caches: Vec<KvCache> = chunks.iter().map(|_| engine.new_cache()).collect();
+            let batched = engine.prefill_batch(&chunks, &mut caches);
+            for (b, chunk) in chunks.iter().enumerate() {
+                let mut solo_cache = engine.new_cache();
+                let mut solo = Vec::new();
+                for &t in *chunk {
+                    solo = engine.step(t, &mut solo_cache);
+                }
+                assert_eq!(batched[b], solo, "lane {b}: prefill logits differ from step loop");
+                assert_eq!(caches[b].len, solo_cache.len);
+                for li in 0..w.config.layers {
+                    assert_eq!(caches[b].k[li], solo_cache.k[li], "lane {b} K cache");
+                    assert_eq!(caches[b].v[li], solo_cache.v[li], "lane {b} V cache");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_crossing_row_tile_boundary_matches_step_loop() {
+        // A chunk longer than GEMM_ROW_TILE spans multiple GEMM row
+        // tiles; tile boundaries must not perturb any position.
+        let cfg = ModelConfig { vocab: 32, dim: 16, heads: 2, layers: 2, mlp: 32, max_seq: 40 };
+        let mut rng = Rng::new(195);
+        let w = Weights::init_training(cfg, &mut rng);
+        let prompt: Vec<u32> = (0..37).map(|i| (i * 7 + 3) % 32).collect();
+        assert!(prompt.len() > crate::infer::matvec::GEMM_ROW_TILE);
+        for engine in [
+            Engine::from_dense(&w),
+            Engine::from_quantized(&rtn_quantize_model(&w, 4, 8)),
+        ] {
+            let mut cache = engine.new_cache();
+            let chunked = engine.prefill_batch(&[&prompt], std::slice::from_mut(&mut cache));
+            let mut solo_cache = engine.new_cache();
+            let mut solo = Vec::new();
+            for &t in &prompt {
+                solo = engine.step(t, &mut solo_cache);
+            }
+            assert_eq!(chunked[0], solo, "tile-boundary prefill diverged from step loop");
+            for li in 0..cfg.layers {
+                assert_eq!(cache.k[li], solo_cache.k[li]);
+                assert_eq!(cache.v[li], solo_cache.v[li]);
+            }
+        }
+    }
+
+    #[test]
+    fn split_prefill_chunks_match_single_chunk() {
+        // Chunk-budget scheduling splits prompts arbitrarily; the split
+        // point must not change anything.
+        let w = tiny_weights(192);
+        let engine = Engine::from_quantized(&rtn_quantize_model(&w, 4, 8));
+        let prompt: Vec<u32> = vec![3, 1, 4, 1, 5, 9, 2, 6, 5, 3];
+        let mut c_all = engine.new_cache();
+        let all = engine.prefill_batch(&[&prompt], std::slice::from_mut(&mut c_all));
+        let mut c_split = engine.new_cache();
+        engine.prefill_batch(&[&prompt[..4]], std::slice::from_mut(&mut c_split));
+        let split = engine.prefill_batch(&[&prompt[4..]], std::slice::from_mut(&mut c_split));
+        assert_eq!(all, split, "split prefill diverged from single-chunk prefill");
+        assert_eq!(c_all.len, c_split.len);
+        for li in 0..w.config.layers {
+            assert_eq!(c_all.k[li], c_split.k[li]);
+            assert_eq!(c_all.v[li], c_split.v[li]);
+        }
+    }
+
+    #[test]
+    fn prefill_empty_chunk_lane_is_untouched() {
+        let w = tiny_weights(194);
+        let engine = Engine::from_dense(&w);
+        let mut caches = vec![engine.new_cache(), engine.new_cache()];
+        let chunks: [&[u32]; 2] = [&[1, 2, 3], &[]];
+        let out = engine.prefill_batch(&chunks, &mut caches);
+        assert!(out[1].is_empty(), "idle lane must return no logits");
+        assert_eq!(caches[1].len, 0);
+        assert!(caches[1].k[0].is_empty());
+        // The active lane is unaffected by the idle one.
+        let mut solo_cache = engine.new_cache();
+        let chunk: &[u32] = &[1, 2, 3];
+        let solo = engine.prefill_batch(&[chunk], std::slice::from_mut(&mut solo_cache));
+        assert_eq!(out[0], solo[0]);
+    }
+
+    #[test]
+    fn prefill_masked_skips_logits_but_advances_cache() {
+        let w = tiny_weights(196);
+        let engine = Engine::from_dense(&w);
+        let chunks: [&[u32]; 2] = [&[3, 4, 5], &[7, 8]];
+        let mut caches_masked = vec![engine.new_cache(), engine.new_cache()];
+        let mut caches_full = caches_masked.clone();
+        let masked = engine.prefill_batch_masked(&chunks, &mut caches_masked, Some(&[false, true]));
+        let full = engine.prefill_batch(&chunks, &mut caches_full);
+        assert!(masked[0].is_empty());
+        assert_eq!(masked[1], full[1]);
+        for li in 0..w.config.layers {
+            assert_eq!(caches_masked[0].k[li], caches_full[0].k[li]);
+            assert_eq!(caches_masked[0].v[li], caches_full[0].v[li]);
+        }
+        assert_eq!(caches_masked[0].len, caches_full[0].len);
+    }
+
+    #[test]
+    fn chunked_kv_append_matches_per_token_append() {
+        let cfg = ModelConfig { vocab: 32, dim: 8, heads: 2, layers: 2, mlp: 16, max_seq: 8 };
+        let mut rng = Rng::new(197);
+        let mk_rows = |rng: &mut Rng, n: usize| -> Vec<Vec<f32>> {
+            (0..n)
+                .map(|_| {
+                    let mut r = vec![0f32; cfg.dim];
+                    rng.fill_gauss(&mut r, 0.0, 1.0);
+                    r
+                })
+                .collect()
+        };
+        let (ks, vs) = (mk_rows(&mut rng, 5), mk_rows(&mut rng, 5));
+        let mut chunked = KvCache::new(&cfg);
+        chunked.append_chunk(1, &ks, &vs);
+        let mut per_token = KvCache::new(&cfg);
+        for (kr, vr) in ks.iter().zip(&vs) {
+            per_token.append_chunk(1, std::slice::from_ref(kr), std::slice::from_ref(vr));
+        }
+        assert_eq!(chunked.k[1], per_token.k[1]);
+        assert_eq!(chunked.v[1], per_token.v[1]);
+        assert!(chunked.k[0].is_empty(), "only the targeted layer grows");
+    }
+
+    #[test]
+    fn generate_truncates_oversized_prompts_at_admission() {
+        let w = tiny_weights(193);
+        let engine = Engine::from_dense(&w);
+        let max_seq = engine.config.max_seq;
+        // Boundary: a prompt exactly filling the positional table still
+        // yields one token (from the final prompt logits), cleanly.
+        let exact: Vec<u32> = (0..max_seq as u32).map(|i| i % 32).collect();
+        let out = engine.generate(&exact, 4);
+        assert_eq!(out.len(), 1);
+        // Past the boundary: truncation at admission, no deep panic, and
+        // the result equals generating from the truncated prompt.
+        let long: Vec<u32> = (0..max_seq as u32 + 5).map(|i| i % 32).collect();
+        assert_eq!(engine.admit_prompt(&long).len(), max_seq);
+        assert_eq!(engine.generate(&long, 4), engine.generate(&long[..max_seq], 4));
     }
 
     #[cfg(debug_assertions)]

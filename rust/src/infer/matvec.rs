@@ -388,6 +388,44 @@ impl MatvecPlan {
     }
 }
 
+/// Row-tile width for [`MatvecPlan::matgem`]: how many activation rows
+/// share one pass over a column's code stream. Large enough that decode
+/// cost per row is negligible (the acceptance bar is amortization at
+/// chunk ≥ 8), small enough that the permuted activation tile
+/// (`rows × GEMM_ROW_TILE` floats) and the per-lane accumulators stay
+/// cache-resident while a worker streams every column against them.
+pub const GEMM_ROW_TILE: usize = 32;
+
+impl MatvecPlan {
+    /// Sequence-parallel GEMM (chunked prefill): `ys[r][j] = Σ_i
+    /// xs[r][i]·W[i,j]` for N = B·T activation rows — prompt positions ×
+    /// batch lanes flattened into one row axis. Generalizes
+    /// [`MatvecPlan::matmul`]'s batch amortization to the sequence axis:
+    /// rows are processed in tiles of [`GEMM_ROW_TILE`], and within a
+    /// tile each packed column's code stream is decoded **once** (via the
+    /// same widened AVX2 small-LUT path) and applied to every row of the
+    /// tile, so decode cost is O(N / GEMM_ROW_TILE) instead of O(N).
+    ///
+    /// Tiling is purely a working-set bound: an un-tiled call over a long
+    /// chunk would keep re-streaming an N-row permuted activation buffer
+    /// (too big for L2 at prefill lengths) past every column, while a
+    /// tile stays cache-resident for the whole column sweep.
+    ///
+    /// Determinism contract: inherited from `matmul` — each row's FP op
+    /// order depends only on that row's values, never on the tile
+    /// composition or N, so `matgem(xs)[r]` is bit-identical to
+    /// `matmul(&[xs[r]])[0]`. Chunked prefill therefore reproduces
+    /// token-by-token stepping exactly; the engine's bit-identity tests
+    /// pin this down.
+    pub fn matgem(&self, pm: &PackedMatrix, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let mut ys = Vec::with_capacity(xs.len());
+        for tile in xs.chunks(GEMM_ROW_TILE) {
+            ys.append(&mut self.matmul(pm, tile));
+        }
+        ys
+    }
+}
+
 impl<'a> QuantMatvec<'a> {
     pub fn new(pm: &'a PackedMatrix) -> QuantMatvec<'a> {
         QuantMatvec { pm, plan: MatvecPlan::new(pm) }
@@ -906,6 +944,36 @@ mod tests {
             let single = plan.matmul(&pm, std::slice::from_ref(x));
             assert_eq!(ys[b], single[0], "lane {b}: batch dependence");
         }
+    }
+
+    #[test]
+    fn matgem_is_bit_identical_to_per_row_matmul() {
+        // The sequence-axis determinism contract: a row's result must not
+        // depend on how many rows ride in the chunk or where tile
+        // boundaries fall. 2·GEMM_ROW_TILE + 7 rows exercises full tiles
+        // plus a ragged tail.
+        let mut rng = Rng::new(179);
+        for bits in [2u8, 4] {
+            let (_, pm) = random_packed(&mut rng, 96, 24, bits, QuantMode::Companded);
+            let plan = MatvecPlan::new(&pm);
+            let xs = random_batch(&mut rng, 2 * GEMM_ROW_TILE + 7, 96);
+            let ys = plan.matgem(&pm, &xs);
+            assert_eq!(ys.len(), xs.len());
+            for (r, x) in xs.iter().enumerate() {
+                let single = plan.matmul(&pm, std::slice::from_ref(x));
+                assert_eq!(ys[r], single[0], "{bits}b row {r}: tile-position dependence");
+            }
+        }
+    }
+
+    #[test]
+    fn matgem_handles_empty_and_small_chunks() {
+        let mut rng = Rng::new(180);
+        let (_, pm) = random_packed(&mut rng, 64, 12, 3, QuantMode::Uniform);
+        let plan = MatvecPlan::new(&pm);
+        assert!(plan.matgem(&pm, &[]).is_empty());
+        let xs = random_batch(&mut rng, 3, 64);
+        assert_eq!(plan.matgem(&pm, &xs), plan.matmul(&pm, &xs));
     }
 
     #[test]

@@ -1,11 +1,12 @@
 //! Quantized inference: the mixed-precision bit-packed matvec/GEMM
 //! kernels (paper Appendix A, CPU adaptation), the KV-cached batched
-//! decode engine, and the continuous-batching request server.
+//! decode engine with chunked prefill, and the continuous-batching
+//! request server with budgeted prefill scheduling.
 
 pub mod engine;
 pub mod matvec;
 pub mod server;
 
 pub use engine::{Engine, KvCache};
-pub use matvec::{dense_matmul, dense_matvec, MatvecPlan, QuantMatvec};
-pub use server::{serve, serve_threaded, Request, Response, ServeStats};
+pub use matvec::{dense_matmul, dense_matvec, MatvecPlan, QuantMatvec, GEMM_ROW_TILE};
+pub use server::{serve, serve_threaded, serve_with, Request, Response, ServeConfig, ServeStats};

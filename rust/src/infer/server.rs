@@ -1,26 +1,32 @@
 //! Serving front-end over the decode engine — the L3 "request path"
 //! exercised by `examples/serve_quantized.rs`, pure Rust end to end.
 //!
-//! [`serve`] is an **iteration-level continuous-batching scheduler** (the
-//! vLLM scheduling discipline at laptop scale): one driver thread owns the
-//! engine and, each step, feeds one token for every resident sequence via
-//! [`Engine::step_batch`], admits waiting requests into free batch slots,
-//! and retires finished sequences immediately — no head-of-line blocking
-//! on long generations. Because the batched engine decodes each weight
-//! column's code stream once per step for the whole batch, B resident
-//! sequences cost ~one decode pass instead of B (the seed's
-//! thread-per-request design, kept as [`serve_threaded`] for baseline
-//! comparisons, paid the full decode per request).
+//! [`serve_with`] is an **iteration-level continuous-batching scheduler
+//! with chunked prefill** (the vLLM scheduling discipline at laptop
+//! scale): one driver thread owns the engine and, each iteration, feeds
+//! every resident sequence through ONE [`Engine::prefill_batch_masked`]
+//! call — decode lanes contribute their single next token, prefilling
+//! lanes contribute a *chunk* of their remaining prompt under a
+//! configurable per-iteration token budget ([`ServeConfig`]), so long
+//! prompts are absorbed at GEMM speed without stalling resident decode
+//! lanes. Because the chunked engine decodes each weight column's code
+//! stream once per row tile, a T-token prompt costs ~T/tile decode
+//! passes instead of T (the seed's thread-per-request design, kept as
+//! [`serve_threaded`] for baseline comparisons, paid the full decode per
+//! token per request).
 //!
-//! Determinism: per-sequence numerics are independent of co-scheduled
-//! sequences (see `Engine::step_batch`), so `serve` reproduces
-//! `Engine::generate` token for token no matter how requests interleave.
+//! Determinism: per-position numerics are independent of co-scheduled
+//! lanes AND of chunk boundaries (see `Engine::prefill_batch`), so
+//! `serve`/`serve_with` reproduce `Engine::generate` token for token no
+//! matter how requests interleave or how the budget slices their
+//! prompts.
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::infer::engine::{argmax, Engine, KvCache};
+use crate::infer::matvec::GEMM_ROW_TILE;
 
 #[derive(Clone, Debug)]
 pub struct Request {
@@ -34,6 +40,41 @@ pub struct Response {
     pub id: usize,
     pub tokens: Vec<u32>,
     pub latency: Duration,
+    /// Time to first token, measured like `latency` from call entry. For
+    /// requests that generate nothing (`max_new == 0`) this equals the
+    /// completion latency.
+    pub ttft: Duration,
+}
+
+/// Scheduling knobs for [`serve_with`].
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Maximum resident sequences (batch slots).
+    pub max_batch: usize,
+    /// Maximum prompt tokens fed per lane per iteration. 1 reproduces
+    /// the pre-chunking token-by-token prefill; the default is the GEMM
+    /// row tile, past which a longer per-lane chunk buys no further
+    /// decode amortization within the tile.
+    pub prefill_chunk: usize,
+    /// Maximum total prompt tokens across all lanes per iteration — the
+    /// chunked-prefill fairness knob. Each iteration's engine call costs
+    /// roughly (decode lanes + prompt tokens fed), so this bounds how
+    /// long resident decode lanes can be stalled behind prompt bursts.
+    /// Lanes that don't fit the budget simply idle for the iteration
+    /// (their chunk is empty); decode tokens never count against it.
+    pub chunk_budget: usize,
+}
+
+impl ServeConfig {
+    pub fn new(max_batch: usize) -> ServeConfig {
+        ServeConfig { max_batch, prefill_chunk: GEMM_ROW_TILE, chunk_budget: 2 * GEMM_ROW_TILE }
+    }
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig::new(8)
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -41,19 +82,28 @@ pub struct ServeStats {
     pub completed: usize,
     /// Generated tokens across all responses (prompt tokens excluded).
     pub total_tokens: usize,
+    /// Prompt tokens fed through the engine (post-admission-truncation).
+    pub prompt_tokens: usize,
     pub wall: Duration,
     pub p50: Duration,
     pub p95: Duration,
+    /// Time-to-first-token percentiles — the latency chunked prefill
+    /// exists to move.
+    pub ttft_p50: Duration,
+    pub ttft_p95: Duration,
     /// Generated tokens per second of wall clock.
     pub throughput_tps: f64,
+    /// Prompt tokens per second of wall clock.
+    pub prompt_tps: f64,
     /// Tokens *fed through the engine* per second (prompt + generated − 1
     /// per request: the final token is emitted, never fed) — the number
     /// that scales with batch amortization.
     pub engine_tps: f64,
-    /// Engine steps executed (0 for the threaded baseline, which steps
-    /// inside `generate`).
+    /// Engine iterations executed (0 for the threaded baseline, which
+    /// steps inside `generate`).
     pub steps: usize,
-    /// Mean resident sequences per step — how full the batch ran.
+    /// Mean tokens fed per iteration — how full the batch ran (with
+    /// chunked prefill this can exceed the slot count).
     pub mean_batch_occupancy: f64,
 }
 
@@ -61,14 +111,17 @@ impl std::fmt::Display for ServeStats {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{} requests, {} tokens in {:.2?}: p50 {:.2?}, p95 {:.2?}, {:.1} gen tok/s, \
-             {:.1} engine tok/s",
+            "{} requests, {} tokens in {:.2?}: p50 {:.2?}, p95 {:.2?}, ttft p50 {:.2?}/p95 \
+             {:.2?}, {:.1} gen tok/s, {:.1} prompt tok/s, {:.1} engine tok/s",
             self.completed,
             self.total_tokens,
             self.wall,
             self.p50,
             self.p95,
+            self.ttft_p50,
+            self.ttft_p95,
             self.throughput_tps,
+            self.prompt_tps,
             self.engine_tps
         )?;
         if self.steps > 0 {
@@ -90,18 +143,31 @@ fn finalize_stats(
     responses: &[Response],
     wall: Duration,
     engine_tokens: usize,
+    prompt_tokens: usize,
     steps: usize,
 ) -> ServeStats {
     let mut lats: Vec<Duration> = responses.iter().map(|r| r.latency).collect();
+    // TTFT percentiles cover only responses that produced a token:
+    // max_new = 0 requests would contribute pure queueing time and skew
+    // the metric chunked prefill exists to report.
+    let mut ttfts: Vec<Duration> = responses
+        .iter()
+        .filter(|r| !r.tokens.is_empty())
+        .map(|r| r.ttft)
+        .collect();
     let total_tokens: usize = responses.iter().map(|r| r.tokens.len()).sum();
     let secs = wall.as_secs_f64().max(1e-9);
     ServeStats {
         completed: responses.len(),
         total_tokens,
+        prompt_tokens,
         wall,
         p50: percentile(&mut lats, 0.5),
         p95: percentile(&mut lats, 0.95),
+        ttft_p50: percentile(&mut ttfts, 0.5),
+        ttft_p95: percentile(&mut ttfts, 0.95),
         throughput_tps: total_tokens as f64 / secs,
+        prompt_tps: prompt_tokens as f64 / secs,
         engine_tps: engine_tokens as f64 / secs,
         steps,
         mean_batch_occupancy: if steps == 0 {
@@ -117,23 +183,16 @@ fn finalize_stats(
 /// the engine one contiguous `&mut [KvCache]` per step.
 struct ActiveSeq {
     id: usize,
+    /// Admission-truncated prompt (≤ `max_seq` tokens).
     prompt: Vec<u32>,
     /// Prompt tokens already fed to the engine.
     fed: usize,
     max_new: usize,
     out: Vec<u32>,
+    ttft: Option<Duration>,
 }
 
 impl ActiveSeq {
-    /// The token this sequence feeds on the next engine step.
-    fn next_input(&self) -> u32 {
-        if self.fed < self.prompt.len() {
-            self.prompt[self.fed]
-        } else {
-            *self.out.last().expect("decode phase implies at least one generated token")
-        }
-    }
-
     /// Mirror of `Engine::generate`'s stopping rule, applied after a
     /// token has been pushed: stop at `max_new`, or once the KV cache has
     /// reached the positional table (one final token is still emitted
@@ -143,18 +202,34 @@ impl ActiveSeq {
     }
 }
 
+/// [`serve_with`] under the default chunked-prefill schedule — the
+/// drop-in entry point (`max_batch` slots, default chunk budget).
+pub fn serve(engine: &Engine, requests: Vec<Request>, max_batch: usize) -> (Vec<Response>, ServeStats) {
+    serve_with(engine, requests, ServeConfig::new(max_batch))
+}
+
 /// Serve `requests` through one engine with **iteration-level continuous
-/// batching**: up to `max_batch` sequences are resident at once; waiting
-/// requests are admitted the moment a slot frees. Returns per-request
-/// responses (sorted by id) and aggregate stats. Latency is measured from
-/// call entry (all requests "arrive" together), so it includes queueing —
-/// the honest number for a loaded server.
+/// batching and chunked prefill**: up to `cfg.max_batch` sequences are
+/// resident at once; waiting requests are admitted the moment a slot
+/// frees (prompts truncated to the positional table at admission, the
+/// [`Engine::admit_prompt`] rule); each iteration feeds decode lanes
+/// their next token and prefilling lanes a prompt chunk under
+/// `cfg.chunk_budget`. Returns per-request responses (sorted by id) and
+/// aggregate stats. Latency is measured from call entry (all requests
+/// "arrive" together), so it includes queueing — the honest number for a
+/// loaded server.
 ///
 /// Output tokens are identical to calling `engine.generate(&prompt,
-/// max_new)` per request.
-pub fn serve(engine: &Engine, requests: Vec<Request>, max_batch: usize) -> (Vec<Response>, ServeStats) {
+/// max_new)` per request, for every budget/chunk configuration.
+pub fn serve_with(
+    engine: &Engine,
+    requests: Vec<Request>,
+    cfg: ServeConfig,
+) -> (Vec<Response>, ServeStats) {
     let t0 = Instant::now();
-    let max_batch = max_batch.max(1);
+    let max_batch = cfg.max_batch.max(1);
+    let prefill_chunk = cfg.prefill_chunk.max(1);
+    let chunk_budget = cfg.chunk_budget.max(1);
     let max_seq = engine.config.max_seq;
     let mut queue: VecDeque<Request> = requests.into_iter().collect();
     let mut active: Vec<ActiveSeq> = Vec::new();
@@ -162,27 +237,38 @@ pub fn serve(engine: &Engine, requests: Vec<Request>, max_batch: usize) -> (Vec<
     let mut responses: Vec<Response> = Vec::new();
     let mut steps = 0usize;
     let mut engine_tokens = 0usize;
+    let mut prompt_tokens = 0usize;
 
     loop {
         // Admission: fill free slots from the queue.
         while active.len() < max_batch {
             let Some(req) = queue.pop_front() else { break };
+            // One source of truth for the admission rule: whatever
+            // Engine::admit_prompt keeps is what this scheduler feeds.
+            let keep = engine.admit_prompt(&req.prompt).len();
+            let mut prompt = req.prompt;
+            prompt.truncate(keep);
             let mut seq = ActiveSeq {
                 id: req.id,
-                prompt: req.prompt,
+                prompt,
                 fed: 0,
                 max_new: req.max_new,
                 out: Vec::new(),
+                ttft: None,
             };
             if seq.max_new == 0 {
-                responses.push(Response { id: seq.id, tokens: seq.out, latency: t0.elapsed() });
+                let now = t0.elapsed();
+                responses.push(Response { id: seq.id, tokens: seq.out, latency: now, ttft: now });
                 continue;
             }
             if seq.prompt.is_empty() {
                 // `generate` starts from all-zero logits: argmax is 0.
                 seq.out.push(0);
+                seq.ttft = Some(t0.elapsed());
                 if seq.is_done(0, max_seq) {
-                    responses.push(Response { id: seq.id, tokens: seq.out, latency: t0.elapsed() });
+                    let now = t0.elapsed();
+                    let ttft = seq.ttft.unwrap();
+                    responses.push(Response { id: seq.id, tokens: seq.out, latency: now, ttft });
                     continue;
                 }
             }
@@ -193,30 +279,48 @@ pub fn serve(engine: &Engine, requests: Vec<Request>, max_batch: usize) -> (Vec<
             break;
         }
 
-        // One engine step for the whole resident batch. Lanes still
-        // prefilling skip the tied-head logits (computed only to be
-        // discarded otherwise); a lane emits once this step feeds its
-        // final prompt token or any generated one.
-        let tokens: Vec<u32> = active.iter().map(ActiveSeq::next_input).collect();
-        let emit: Vec<bool> = active.iter().map(|s| s.fed + 1 >= s.prompt.len()).collect();
-        let logits = engine.step_batch_masked(&tokens, &mut caches, Some(&emit));
+        // Plan this iteration's chunks: decode lanes always feed their
+        // single next token (never budget-limited — starving decode is
+        // what the budget exists to prevent); prefilling lanes take up
+        // to `prefill_chunk` of their remaining prompt from the shared
+        // budget, in lane order; lanes the budget can't reach idle this
+        // iteration with an empty chunk. A lane emits logits once this
+        // iteration's chunk finishes its prompt, or on any decode token.
+        let mut budget = chunk_budget;
+        let mut chunks: Vec<&[u32]> = Vec::with_capacity(active.len());
+        let mut emit: Vec<bool> = Vec::with_capacity(active.len());
+        let mut fed_now: Vec<usize> = Vec::with_capacity(active.len());
+        for seq in active.iter() {
+            if seq.fed < seq.prompt.len() {
+                let c = (seq.prompt.len() - seq.fed).min(prefill_chunk).min(budget);
+                budget -= c;
+                chunks.push(&seq.prompt[seq.fed..seq.fed + c]);
+                emit.push(c > 0 && seq.fed + c == seq.prompt.len());
+                fed_now.push(c);
+            } else {
+                let last = seq.out.last().expect("decode phase implies a generated token");
+                chunks.push(std::slice::from_ref(last));
+                emit.push(true);
+                fed_now.push(0);
+            }
+        }
+        let fed_total: usize = chunks.iter().map(|c| c.len()).sum();
+        let logits = engine.prefill_batch_masked(&chunks, &mut caches, Some(&emit));
         steps += 1;
-        engine_tokens += active.len();
+        engine_tokens += fed_total;
+        prompt_tokens += fed_now.iter().sum::<usize>();
 
         // Advance every lane first (stable indices into `logits`), then
         // compact out the finished ones.
         let mut retired = vec![false; active.len()];
         for (i, seq) in active.iter_mut().enumerate() {
-            let was_prefill = seq.fed < seq.prompt.len();
-            if was_prefill {
-                seq.fed += 1;
-            }
-            // A lane emits once its whole prompt has been fed: either
-            // this step consumed the final prompt token, or it fed a
-            // previously generated one.
-            if !was_prefill || seq.fed == seq.prompt.len() {
+            seq.fed += fed_now[i];
+            if emit[i] {
                 let next = argmax(&logits[i]) as u32;
                 seq.out.push(next);
+                if seq.ttft.is_none() {
+                    seq.ttft = Some(t0.elapsed());
+                }
                 retired[i] = seq.is_done(caches[i].len, max_seq);
             }
         }
@@ -227,13 +331,19 @@ pub fn serve(engine: &Engine, requests: Vec<Request>, max_batch: usize) -> (Vec<
             if retired[i] {
                 let done = active.swap_remove(i);
                 caches.swap_remove(i);
-                responses.push(Response { id: done.id, tokens: done.out, latency: t0.elapsed() });
+                let ttft = done.ttft.expect("retired lanes emitted at least one token");
+                responses.push(Response {
+                    id: done.id,
+                    tokens: done.out,
+                    latency: t0.elapsed(),
+                    ttft,
+                });
             }
         }
     }
 
     responses.sort_by_key(|r| r.id);
-    let stats = finalize_stats(&responses, t0.elapsed(), engine_tokens, steps);
+    let stats = finalize_stats(&responses, t0.elapsed(), engine_tokens, prompt_tokens, steps);
     (responses, stats)
 }
 
@@ -241,6 +351,8 @@ pub fn serve(engine: &Engine, requests: Vec<Request>, max_batch: usize) -> (Vec<
 /// baseline: `workers` threads each run `Engine::generate` on one request
 /// at a time, so every resident request decodes the full bitstream
 /// itself. `bench_serving` measures the continuous path against this.
+/// `generate` is monolithic, so a response's TTFT here equals its
+/// completion latency — the honest number for this scheduler.
 pub fn serve_threaded(
     engine: &Engine,
     requests: Vec<Request>,
@@ -248,7 +360,8 @@ pub fn serve_threaded(
 ) -> (Vec<Response>, ServeStats) {
     let t0 = Instant::now();
     let queue: Arc<Mutex<VecDeque<Request>>> = Arc::new(Mutex::new(requests.into_iter().collect()));
-    let responses: Arc<Mutex<Vec<(Response, usize)>>> = Arc::new(Mutex::new(Vec::new()));
+    type Tally = Vec<(Response, usize, usize)>;
+    let responses: Arc<Mutex<Tally>> = Arc::new(Mutex::new(Vec::new()));
     std::thread::scope(|s| {
         for _ in 0..workers.max(1) {
             let queue = Arc::clone(&queue);
@@ -256,24 +369,27 @@ pub fn serve_threaded(
             s.spawn(move || loop {
                 let req = { queue.lock().unwrap().pop_front() };
                 let Some(req) = req else { break };
+                let plen = engine.admit_prompt(&req.prompt).len();
                 let tokens = engine.generate(&req.prompt, req.max_new);
                 // Same latency definition as `serve`: from call entry
                 // (all requests arrive together), so queueing counts and
                 // the two schedulers' percentiles are comparable.
                 let latency = t0.elapsed();
-                let engine_toks = req.prompt.len() + tokens.len().saturating_sub(1);
-                responses
-                    .lock()
-                    .unwrap()
-                    .push((Response { id: req.id, tokens, latency }, engine_toks));
+                let engine_toks = plen + tokens.len().saturating_sub(1);
+                responses.lock().unwrap().push((
+                    Response { id: req.id, tokens, latency, ttft: latency },
+                    engine_toks,
+                    plen,
+                ));
             });
         }
     });
     let done = Arc::try_unwrap(responses).unwrap().into_inner().unwrap();
-    let engine_tokens: usize = done.iter().map(|(_, n)| n).sum();
-    let mut responses: Vec<Response> = done.into_iter().map(|(r, _)| r).collect();
+    let engine_tokens: usize = done.iter().map(|(_, n, _)| n).sum();
+    let prompt_tokens: usize = done.iter().map(|(_, _, p)| p).sum();
+    let mut responses: Vec<Response> = done.into_iter().map(|(r, _, _)| r).collect();
     responses.sort_by_key(|r| r.id);
-    let stats = finalize_stats(&responses, t0.elapsed(), engine_tokens, 0);
+    let stats = finalize_stats(&responses, t0.elapsed(), engine_tokens, prompt_tokens, 0);
     (responses, stats)
 }
 
@@ -302,10 +418,14 @@ mod tests {
         for (i, r) in resps.iter().enumerate() {
             assert_eq!(r.id, i);
             assert!(!r.tokens.is_empty());
+            assert!(r.ttft <= r.latency, "first token cannot come after completion");
         }
         assert!(stats.p50 <= stats.p95);
+        assert!(stats.ttft_p50 <= stats.ttft_p95);
+        assert!(stats.ttft_p50 <= stats.p50);
         assert!(stats.throughput_tps > 0.0);
         assert!(stats.engine_tps >= stats.throughput_tps);
+        assert_eq!(stats.prompt_tokens, 10 * 2, "every prompt token fed exactly once");
         assert!(stats.steps > 0);
         assert!(stats.mean_batch_occupancy > 1.0, "4-slot batch should run >1 resident");
     }
@@ -340,6 +460,59 @@ mod tests {
     }
 
     #[test]
+    fn chunked_prefill_schedule_matches_generate_for_every_budget() {
+        // The chunk budget slices prompts differently every config; none
+        // of it may change a single token (prefill bit-identity +
+        // lane independence).
+        let engine = tiny_engine();
+        let mut rng = Rng::new(193);
+        let reqs: Vec<Request> = (0..9)
+            .map(|id| {
+                // Mix long (up to max_seq-2 = 14) and short prompts.
+                let plen = if id % 3 == 0 { 10 + rng.below(5) } else { 1 + rng.below(4) };
+                let prompt: Vec<u32> = (0..plen).map(|_| rng.below(32) as u32).collect();
+                Request { id, prompt, max_new: 1 + rng.below(4) }
+            })
+            .collect();
+        let expected: Vec<Vec<u32>> = reqs
+            .iter()
+            .map(|r| engine.generate(&r.prompt, r.max_new))
+            .collect();
+        for (prefill_chunk, chunk_budget) in
+            [(1usize, usize::MAX), (4, 8), (32, 64), (3, 5), (16, 1)]
+        {
+            let cfg = ServeConfig { max_batch: 4, prefill_chunk, chunk_budget };
+            let (resps, stats) = serve_with(&engine, reqs.clone(), cfg);
+            for (r, want) in resps.iter().zip(&expected) {
+                assert_eq!(
+                    r.tokens, *want,
+                    "request {} diverged under prefill_chunk={prefill_chunk} \
+                     chunk_budget={chunk_budget}",
+                    r.id
+                );
+            }
+            let total_prompt: usize = reqs.iter().map(|r| r.prompt.len()).sum();
+            assert_eq!(stats.prompt_tokens, total_prompt);
+        }
+    }
+
+    #[test]
+    fn oversized_prompts_are_truncated_at_admission() {
+        let engine = tiny_engine();
+        let max_seq = engine.config.max_seq;
+        let long: Vec<u32> = (0..max_seq as u32 + 7).map(|i| i % 32).collect();
+        let reqs = vec![
+            Request { id: 0, prompt: long.clone(), max_new: 3 },
+            Request { id: 1, prompt: vec![2, 3], max_new: 3 },
+        ];
+        let (resps, stats) = serve(&engine, reqs, 2);
+        // generate applies the same admission rule, so tokens must match.
+        assert_eq!(resps[0].tokens, engine.generate(&long, 3));
+        assert_eq!(resps[1].tokens, engine.generate(&[2, 3], 3));
+        assert_eq!(stats.prompt_tokens, max_seq + 2, "truncated prompt feeds max_seq tokens");
+    }
+
+    #[test]
     fn threaded_baseline_matches_direct_generation() {
         let engine = tiny_engine();
         let prompt = vec![5u32, 7, 11];
@@ -350,6 +523,7 @@ mod tests {
             3,
         );
         assert_eq!(resps[0].tokens, direct);
+        assert_eq!(resps[0].ttft, resps[0].latency);
     }
 
     #[test]

@@ -202,6 +202,59 @@ fn attention_head(q: &Tensor, k: &Tensor, v: &Tensor) -> (Tensor, Tensor) {
     (ctx, probs)
 }
 
+/// Causal attention for ONE query position against a cached K/V prefix —
+/// the helper shared by the decode engine's `step_batch` and chunked
+/// `prefill_batch` paths. Both lean on it accumulating in exactly this
+/// order (f32 score dots, max-subtracted softmax, value accumulation in
+/// cache order) for their bit-identity contract: a position's context
+/// depends only on its query and the cache contents up to `t`, never on
+/// how many positions were fed in the same engine call. The training
+/// path's [`attention_head`] keeps its own f64-dot variant and agrees
+/// with this one only to rounding tolerance.
+///
+/// `kbuf`/`vbuf` are flat row-major (≥t×e) cache buffers with
+/// head-interleaved columns; `q` is one e-wide query row; the window is
+/// rows `0..t`.
+pub fn attend_cached(
+    q: &[f32],
+    kbuf: &[f32],
+    vbuf: &[f32],
+    t: usize,
+    e: usize,
+    heads: usize,
+    dh: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(q.len(), e);
+    debug_assert!(kbuf.len() >= t * e && vbuf.len() >= t * e);
+    let mut ctx = vec![0f32; e];
+    let scale = 1.0 / (dh as f32).sqrt();
+    for h in 0..heads {
+        let qh = &q[h * dh..(h + 1) * dh];
+        let mut scores = Vec::with_capacity(t);
+        let mut maxs = f32::NEG_INFINITY;
+        for ti in 0..t {
+            let kh = &kbuf[ti * e + h * dh..ti * e + (h + 1) * dh];
+            let s: f32 = qh.iter().zip(kh).map(|(&a, &b)| a * b).sum::<f32>() * scale;
+            scores.push(s);
+            maxs = maxs.max(s);
+        }
+        let mut denom = 0f32;
+        for s in scores.iter_mut() {
+            *s = (*s - maxs).exp();
+            denom += *s;
+        }
+        let ctx_h = &mut ctx[h * dh..(h + 1) * dh];
+        for ti in 0..t {
+            let p = scores[ti] / denom;
+            let vh = &vbuf[ti * e + h * dh..ti * e + (h + 1) * dh];
+            for (c, &vv) in ctx_h.iter_mut().zip(vh) {
+                *c += p * vv;
+            }
+        }
+    }
+    ctx
+}
+
 fn attention_head_backward(
     dctx: &Tensor,
     probs: &Tensor,
@@ -769,6 +822,34 @@ mod tests {
             (fd - an).abs() / fd.abs().max(an.abs()).max(1e-4) < 0.08,
             "fd {fd} vs analytic {an}"
         );
+    }
+
+    #[test]
+    fn attend_cached_matches_training_attention() {
+        // The engine-path helper must reproduce the training-path
+        // attention (last row of a causal T×T block) to rounding: same
+        // math, f32 vs f64 score accumulation.
+        let mut rng = Rng::new(6);
+        let (t, e, heads) = (5usize, 8usize, 2usize);
+        let dh = e / heads;
+        let mut q = Tensor::zeros(t, e);
+        let mut k = Tensor::zeros(t, e);
+        let mut v = Tensor::zeros(t, e);
+        rng.fill_gauss(&mut q.data, 0.0, 1.0);
+        rng.fill_gauss(&mut k.data, 0.0, 1.0);
+        rng.fill_gauss(&mut v.data, 0.0, 1.0);
+        let mut want = vec![0f32; e];
+        for h in 0..heads {
+            let qh = head_block(&q, 0, h, t, dh);
+            let kh = head_block(&k, 0, h, t, dh);
+            let vh = head_block(&v, 0, h, t, dh);
+            let (ctx_h, _) = attention_head(&qh, &kh, &vh);
+            want[h * dh..(h + 1) * dh].copy_from_slice(ctx_h.row(t - 1));
+        }
+        let got = attend_cached(q.row(t - 1), &k.data, &v.data, t, e, heads, dh);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4 * b.abs().max(1.0), "{a} vs {b}");
+        }
     }
 
     #[test]

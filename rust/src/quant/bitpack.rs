@@ -322,31 +322,60 @@ impl PackedMatrix {
         }
     }
 
-    /// Dequantize to a dense tensor.
-    pub fn unpack(&self) -> Tensor {
-        let mut out = Tensor::zeros(self.rows, self.cols);
+    /// Row mask of OWQ full-precision exception rows — the `is_fp` input
+    /// to [`PackedMatrix::column_codes`] (computed once, shared across
+    /// columns).
+    pub fn fp_row_mask(&self) -> Vec<bool> {
         let mut is_fp = vec![false; self.rows];
         for (r, _) in &self.fp_rows {
             is_fp[*r as usize] = true;
         }
-        // Cache LUTs per bit depth.
+        is_fp
+    }
+
+    /// Streaming decoder over one column's packed code stream: yields
+    /// `(sub, row, code)` for every *coded* weight in pack order —
+    /// pruned (0-bit) groups and FP16 exception rows are skipped exactly
+    /// as [`PackedMatrix::pack_full`] skipped them on write, so the
+    /// cursor stays bit-aligned through mixed depths. This is the
+    /// reference decode ([`PackedMatrix::unpack`] is built on it); the
+    /// matvec kernels keep their own fused decoders, which consume whole
+    /// 128-bit windows.
+    pub fn column_codes<'a>(&'a self, col: usize, is_fp: &'a [bool]) -> ColumnCodes<'a> {
+        debug_assert!(col < self.cols);
+        debug_assert_eq!(is_fp.len(), self.rows);
+        ColumnCodes {
+            pm: self,
+            is_fp,
+            reader: BitReader::new(&self.words, self.col_bit_offset[col]),
+            col,
+            sub: 0,
+            idx: 0,
+            gm: GroupMeta { bits: 0, scale: 0.0, mean: 0.0 },
+        }
+    }
+
+    /// Dequantize to a dense tensor.
+    pub fn unpack(&self) -> Tensor {
+        let mut out = Tensor::zeros(self.rows, self.cols);
+        let is_fp = self.fp_row_mask();
+        // Cache LUTs per bit depth. Pruned groups are never yielded and
+        // stay zero (bias correction holds the mean).
         let luts: Vec<Vec<f32>> = (0..=8u8).map(|b| self.mode.base_lut(b)).collect();
+        let m = self.grouping.m;
         for col in 0..self.cols {
-            let mut rd = BitReader::new(&self.words, self.col_bit_offset[col]);
-            for sub in 0..self.grouping.m {
-                let gm = self.meta[col * self.grouping.m + sub];
-                if gm.bits == 0 {
-                    // pruned → zero (bias correction holds the mean)
-                    continue;
+            // Meta/LUT are per sub-group; hoist their fetch to group
+            // transitions rather than paying it per weight.
+            let mut cur_sub = usize::MAX;
+            let mut gm = GroupMeta { bits: 0, scale: 0.0, mean: 0.0 };
+            let mut lut: &[f32] = &[];
+            for (sub, r, code) in self.column_codes(col, &is_fp) {
+                if sub != cur_sub {
+                    cur_sub = sub;
+                    gm = self.meta[col * m + sub];
+                    lut = &luts[gm.bits as usize];
                 }
-                let lut = &luts[gm.bits as usize];
-                for &r in &self.grouping.group_rows[sub] {
-                    if is_fp[r as usize] {
-                        continue;
-                    }
-                    let code = rd.read(gm.bits);
-                    out.set(r as usize, col, gm.mean + gm.scale * lut[code as usize]);
-                }
+                out.set(r as usize, col, gm.mean + gm.scale * lut[code as usize]);
             }
         }
         // Undo AWQ row scaling.
@@ -552,6 +581,62 @@ impl PackedMatrix {
     }
 }
 
+/// See [`PackedMatrix::column_codes`].
+pub struct ColumnCodes<'a> {
+    pm: &'a PackedMatrix,
+    is_fp: &'a [bool],
+    reader: BitReader<'a>,
+    col: usize,
+    /// Current sub-group.
+    sub: usize,
+    /// Next index within `group_rows[sub]`.
+    idx: usize,
+    /// Meta of the current sub-group, fetched once per group entry
+    /// (`idx == 0`) rather than per yielded code.
+    gm: GroupMeta,
+}
+
+impl<'a> ColumnCodes<'a> {
+    /// Current absolute bit position of the underlying reader — after
+    /// draining the iterator this must equal the next column's offset
+    /// (the alignment property the roundtrip test pins down).
+    pub fn bit_pos(&self) -> usize {
+        self.reader.bit_pos()
+    }
+}
+
+impl<'a> Iterator for ColumnCodes<'a> {
+    type Item = (usize, u32, u32);
+
+    fn next(&mut self) -> Option<(usize, u32, u32)> {
+        let g = &self.pm.grouping;
+        loop {
+            if self.sub >= g.m {
+                return None;
+            }
+            if self.idx == 0 {
+                self.gm = self.pm.meta[self.col * g.m + self.sub];
+            }
+            if self.gm.bits == 0 {
+                self.sub += 1;
+                self.idx = 0;
+                continue;
+            }
+            let rows = &g.group_rows[self.sub];
+            while self.idx < rows.len() {
+                let r = rows[self.idx];
+                self.idx += 1;
+                if self.is_fp[r as usize] {
+                    continue;
+                }
+                return Some((self.sub, r, self.reader.read(self.gm.bits)));
+            }
+            self.sub += 1;
+            self.idx = 0;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -703,6 +788,65 @@ mod tests {
         let p = PackedMatrix::pack(&w, &grouping, &meta, QuantMode::Companded);
         assert!((p.avg_bits_per_weight() - 2.0).abs() < 1e-9);
         assert!((p.pruned_fraction() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn column_codes_stays_bit_aligned_through_mixed_depths() {
+        // Drain the iterator for every column of a matrix with pruned
+        // groups AND FP16 exception rows: each column must end exactly at
+        // the next column's bit offset, every code in range, and the
+        // yielded (row, count) structure must match the pack-time skips.
+        let mut rng = Rng::new(65);
+        let (rows, cols) = (24, 7);
+        let mut w = Tensor::zeros(rows, cols);
+        rng.fill_gauss(&mut w.data, 0.0, 1.0);
+        let scores: Vec<f64> = (0..rows).map(|_| rng.uniform()).collect();
+        let grouping = Grouping::build(rows, cols, 6, &scores);
+        let mut meta = random_meta(&mut rng, grouping.num_groups(), false);
+        for (i, gm) in meta.iter_mut().enumerate() {
+            if i % 4 == 0 {
+                gm.bits = 0; // pruned
+            }
+        }
+        let p = PackedMatrix::pack_full(
+            &w,
+            &grouping,
+            &meta,
+            QuantMode::Companded,
+            None,
+            &[3, 11],
+        );
+        let is_fp = p.fp_row_mask();
+        assert_eq!(is_fp.iter().filter(|&&f| f).count(), 2);
+        for col in 0..cols {
+            let mut it = p.column_codes(col, &is_fp);
+            let mut yielded = 0usize;
+            let mut last_sub = 0usize;
+            for (sub, r, code) in it.by_ref() {
+                assert!(sub >= last_sub, "sub-groups must stream in pack order");
+                last_sub = sub;
+                let gm = p.meta[col * p.grouping.m + sub];
+                assert!(gm.bits > 0, "pruned groups must not be yielded");
+                assert!(code < (1 << gm.bits), "code out of range for depth");
+                assert!(!is_fp[r as usize], "FP16 rows carry no codes");
+                yielded += 1;
+            }
+            let expected: usize = (0..p.grouping.m)
+                .filter(|&sub| p.meta[col * p.grouping.m + sub].bits > 0)
+                .map(|sub| {
+                    p.grouping.group_rows[sub]
+                        .iter()
+                        .filter(|&&r| !is_fp[r as usize])
+                        .count()
+                })
+                .sum();
+            assert_eq!(yielded, expected, "col {col}");
+            assert_eq!(
+                it.bit_pos(),
+                p.col_bit_offset[col + 1],
+                "col {col}: iterator must end exactly at the next column's offset"
+            );
+        }
     }
 
     #[test]
