@@ -34,15 +34,20 @@ use radio::util::bench::Table;
 use radio::util::rng::Rng;
 
 fn main() {
-    let preset = "ropt-small";
-    let steps = 400;
+    // RADIO_SMOKE=1 (CI's examples-smoke job) drops to a tiny config so
+    // the full train → quantize → eval → serve path runs in seconds.
+    let preset = if exp::smoke() { "ropt-nano" } else { "ropt-small" };
+    let steps = exp::smoke_scaled(400, 60);
+    let eval_windows = exp::smoke_scaled(exp::EVAL_WINDOWS, 8);
+    let radio_iters = exp::smoke_scaled(16, 3);
     let (calib, shifted) = exp::corpora();
     let (calib_train, calib_val, _) = calib.split();
     let (_, _, shifted_test) = shifted.split();
 
     // ---- 1. Train (cached across runs).
     println!("=== [1/3] training {preset} for {steps} steps ===");
-    let cache = std::path::PathBuf::from("artifacts/bench_cache/e2e_ropt_small.weights");
+    let cache =
+        std::path::PathBuf::from(format!("artifacts/bench_cache/e2e_{preset}_{steps}.weights"));
     let weights = if cache.exists() {
         println!("(using cached checkpoint {})", cache.display());
         Weights::load(&cache).expect("cache load")
@@ -61,8 +66,8 @@ fn main() {
         w.save(&cache).expect("cache save");
         w
     };
-    let ppl_fp_c = perplexity(&weights, &calib_val, exp::EVAL_SEQ, exp::EVAL_WINDOWS);
-    let ppl_fp_s = perplexity(&weights, &shifted_test, exp::EVAL_SEQ, exp::EVAL_WINDOWS);
+    let ppl_fp_c = perplexity(&weights, &calib_val, exp::EVAL_SEQ, eval_windows);
+    let ppl_fp_s = perplexity(&weights, &shifted_test, exp::EVAL_SEQ, eval_windows);
     println!("FP32: C4-like val PPL {ppl_fp_c:.3} | WikiText-like test PPL {ppl_fp_s:.3}");
 
     // ---- 2. Quantize: baselines per rate, Radio calibrate-once.
@@ -74,7 +79,7 @@ fn main() {
     println!("gradient provider: {}", if use_xla { "xla (AOT JAX/Pallas artifacts)" } else { "native backprop" });
 
     // Radio: one calibration shared by both target rates.
-    let radio_cfg = exp::radio_cfg(4.0, 64, 16);
+    let radio_cfg = exp::radio_cfg(4.0, 64, radio_iters);
     let radio = Radio::new(radio_cfg);
     let t_cal = std::time::Instant::now();
     let (stats, _) = {
@@ -116,8 +121,8 @@ fn main() {
 
         for (name, model, secs) in rows {
             let wq = model.to_weights();
-            let pc = perplexity(&wq, &calib_val, exp::EVAL_SEQ, exp::EVAL_WINDOWS);
-            let ps = perplexity(&wq, &shifted_test, exp::EVAL_SEQ, exp::EVAL_WINDOWS);
+            let pc = perplexity(&wq, &calib_val, exp::EVAL_SEQ, eval_windows);
+            let ps = perplexity(&wq, &shifted_test, exp::EVAL_SEQ, eval_windows);
             let engine = Engine::from_dense(&wq);
             let tasks = average_score(&engine, &calib_val, 24, 0x7A5C);
             println!(
@@ -147,7 +152,8 @@ fn main() {
     // ---- 3. Stream-pack + serve through the quantized engine.
     println!("\n=== [3/3] serving the 3-bit Radio model ===");
     let qm = radio3.expect("radio 3-bit model");
-    let path = std::path::PathBuf::from("artifacts/ropt_small_3bit.radio");
+    let path =
+        std::path::PathBuf::from(format!("artifacts/{}_3bit.radio", preset.replace('-', "_")));
     // Stream straight from the calibration artifact: packs each window of
     // matrices in parallel and writes it out without building a second
     // resident model.

@@ -15,23 +15,27 @@ use radio::exp;
 
 fn main() {
     // 1. A "pretrained" model: trained in-repo on the synthetic corpus.
-    let weights = exp::trained_model("ropt-nano", exp::default_steps("ropt-nano"));
+    // (RADIO_SMOKE=1 shrinks the budgets so CI can run this end to end.)
+    let steps = exp::smoke_scaled(exp::default_steps("ropt-nano"), 40);
+    let iters = exp::smoke_scaled(12, 2);
+    let windows = exp::smoke_scaled(exp::EVAL_WINDOWS, 8);
+    let weights = exp::trained_model("ropt-nano", steps);
     let (calib, _) = exp::corpora();
     let (calib_train, _, test) = calib.split();
 
     // 2. Quantize to 3 bits/weight with Radio (Algorithm 1).
-    let cfg = exp::radio_cfg(3.0, 32, 12);
+    let cfg = exp::radio_cfg(3.0, 32, iters);
     let mut provider = NativeProvider;
     let (qm, report) = Radio::new(cfg).quantize(&weights, &calib_train, &mut provider, None);
 
     // 3. Compare. Radio's number comes from the packed-model path —
     // evaluated straight off the bitstreams, no dense densification —
     // with the dense reference path cross-checked alongside.
-    let ppl_fp = perplexity(&weights, &test, exp::EVAL_SEQ, exp::EVAL_WINDOWS);
-    let ppl_radio = perplexity_packed(&qm, &test, exp::EVAL_SEQ, exp::EVAL_WINDOWS);
-    let ppl_radio_dense = perplexity(&qm.to_weights(), &test, exp::EVAL_SEQ, exp::EVAL_WINDOWS);
+    let ppl_fp = perplexity(&weights, &test, exp::EVAL_SEQ, windows);
+    let ppl_radio = perplexity_packed(&qm, &test, exp::EVAL_SEQ, windows);
+    let ppl_radio_dense = perplexity(&qm.to_weights(), &test, exp::EVAL_SEQ, windows);
     let rtn = rtn_quantize_model(&weights, 3, 32);
-    let ppl_rtn = perplexity(&rtn.to_weights(), &test, exp::EVAL_SEQ, exp::EVAL_WINDOWS);
+    let ppl_rtn = perplexity(&rtn.to_weights(), &test, exp::EVAL_SEQ, windows);
     // The 5e-3 agreement bound is pinned by unit tests; in a demo binary
     // just surface a drift rather than aborting before the results print.
     if (ppl_radio - ppl_radio_dense).abs() > 5e-3 * ppl_radio_dense {
@@ -49,6 +53,12 @@ fn main() {
     println!("Radio pruned weights     : {:.2}%", 100.0 * qm.pruned_fraction());
     println!("optimization             : {} iters in {:.1}s (PCA explains {:.0}%)",
         report.iters_run, report.seconds, 100.0 * report.pca_explained);
-    assert!(ppl_radio <= ppl_rtn, "Radio should not lose to RTN");
-    println!("\nOK: Radio ≤ RTN at equal rate.");
+    if exp::smoke() {
+        // Smoke budgets (2 gradient iters on a 40-step model) exercise
+        // the path, not the claim; don't gate CI on the comparison.
+        println!("\n(smoke mode: skipping the Radio ≤ RTN assertion)");
+    } else {
+        assert!(ppl_radio <= ppl_rtn, "Radio should not lose to RTN");
+        println!("\nOK: Radio ≤ RTN at equal rate.");
+    }
 }

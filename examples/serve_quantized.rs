@@ -8,30 +8,34 @@
 //! cargo run --release --offline --example serve_quantized [-- --requests 32 --max-batch 8]
 //! ```
 
-use radio::coordinator::{NativeProvider, Radio};
+use radio::coordinator::{kv_spec_for, NativeProvider, Radio};
 use radio::exp;
-use radio::infer::{serve, serve_threaded, serve_with, Engine, Request, ServeConfig};
+use radio::infer::{
+    lane_cost_bytes, serve, serve_threaded, serve_with, Engine, KvCacheConfig, Request,
+    ServeConfig,
+};
 use radio::util::cli::Args;
 use radio::util::rng::Rng;
 
 fn main() {
     let args = Args::from_env();
-    let n = args.get_usize("requests", 24);
+    let n = args.get_usize("requests", exp::smoke_scaled(24, 6));
     // `--workers` is honoured as an alias from the thread-per-request era.
     let max_batch = args.get_usize("max-batch", args.get_usize("workers", 8));
-    let max_new = args.get_usize("max-new", 24);
+    let max_new = args.get_usize("max-new", exp::smoke_scaled(24, 8));
     // Long enough to make prompt absorption visible (chunked prefill's
     // regime) while leaving room for generation in the ropt positional
     // table.
-    let prompt_len = args.get_usize("prompt-len", 32);
+    let prompt_len = args.get_usize("prompt-len", exp::smoke_scaled(32, 16));
 
-    let weights = exp::trained_model("ropt-nano", exp::default_steps("ropt-nano"));
+    let steps = exp::smoke_scaled(exp::default_steps("ropt-nano"), 40);
+    let weights = exp::trained_model("ropt-nano", steps);
     let (calib, _) = exp::corpora();
     let (calib_train, val, _) = calib.split();
 
     println!("quantizing to 3 bits with Radio…");
     let mut provider = NativeProvider;
-    let (qm, _) = Radio::new(exp::radio_cfg(3.0, 32, 10)).quantize(
+    let (qm, _) = Radio::new(exp::radio_cfg(3.0, 32, exp::smoke_scaled(10, 2))).quantize(
         &weights,
         &calib_train,
         &mut provider,
@@ -65,7 +69,8 @@ fn main() {
     // Same engine and requests, prompts fed one token per iteration (the
     // pre-chunking scheduler): the TTFT/prompt-throughput gap is what
     // chunked prefill buys. Tokens are identical either way.
-    let token_cfg = ServeConfig { max_batch, prefill_chunk: 1, chunk_budget: usize::MAX };
+    let token_cfg =
+        ServeConfig { prefill_chunk: 1, chunk_budget: usize::MAX, ..ServeConfig::new(max_batch) };
     let (resp_tok, stats_tok) = serve_with(&quant_engine, mk_requests(), token_cfg);
     println!("  (token-by-token prefill: {stats_tok})");
     assert_eq!(
@@ -84,6 +89,50 @@ fn main() {
         resp_t.iter().map(|r| &r.tokens).collect::<Vec<_>>(),
         "continuous batching and thread-per-request must produce identical tokens"
     );
+
+    // Quantized KV cache under a memory budget: allocate per-layer K/V
+    // bit widths from calibration-time cache variances (the same
+    // dual-ascent solver the weights use), then serve under a KV pool
+    // sized for only a few dense lanes — the paged quantized cache fits
+    // several times more resident sequences in the same bytes, and the
+    // scheduler defers (never evicts) when the pool is exhausted.
+    let kv_bits = 4.0;
+    let spec = kv_spec_for(&quant_engine, &val, 32, 4, kv_bits, 8);
+    println!(
+        "\nKV cache: dual-ascent allocation at {kv_bits} avg bits/value -> {:.2} achieved",
+        spec.mean_bits()
+    );
+    let kvq_engine = Engine::from_quantized(&qm).with_kv_config(KvCacheConfig::quantized(spec));
+    let dense_lane = lane_cost_bytes(
+        &quant_engine.config,
+        quant_engine.kv_config(),
+        quant_engine.config.max_seq,
+    );
+    let budget = 3 * dense_lane; // room for ~3 dense worst-case lanes
+    let budget_cfg = ServeConfig { kv_budget_bytes: Some(budget), ..ServeConfig::new(max_batch) };
+    let (resp_dense_b, stats_dense_b) = serve_with(&quant_engine, mk_requests(), budget_cfg);
+    let (resp_kvq, stats_kvq) = serve_with(&kvq_engine, mk_requests(), budget_cfg);
+    println!("  {budget}-byte KV pool, dense KV   : {stats_dense_b}");
+    println!("  {budget}-byte KV pool, quant KV   : {stats_kvq}");
+    println!(
+        "  peak resident lanes: {} dense vs {} quantized",
+        stats_dense_b.peak_lanes, stats_kvq.peak_lanes
+    );
+    // Budgeted serving defers admissions but never changes tokens…
+    assert_eq!(
+        resp_dense_b.iter().map(|r| &r.tokens).collect::<Vec<_>>(),
+        resp_q.iter().map(|r| &r.tokens).collect::<Vec<_>>(),
+        "a KV budget must not change generated tokens"
+    );
+    // …and quantized-KV serving matches ITS OWN engine's generate().
+    for r in resp_kvq.iter().take(2) {
+        let req = mk_requests().into_iter().find(|q| q.id == r.id).unwrap();
+        assert_eq!(
+            r.tokens,
+            kvq_engine.generate(&req.prompt, req.max_new),
+            "quantized-KV serve must match quantized-KV generate"
+        );
+    }
 
     // Show a couple of generations (they should look corpus-like).
     for r in resp_q.iter().take(3) {

@@ -1,0 +1,237 @@
+//! KV cache bench: batch occupancy at a fixed KV memory budget (the
+//! number paging + quantization exist to move), quantized-KV perplexity
+//! drift, and decode throughput per cache mode.
+//!
+//! Three arms share one budget and one request set:
+//! - `dense_flat`  — paged dense storage but the seed's admission
+//!   accounting (every lane charged the full `max_seq` footprint);
+//! - `paged_dense` — dense pages, lanes charged their actual worst case;
+//! - `paged_quant` — dual-ascent-allocated quantized pages.
+//!
+//! Occupancy, deferral counts, lane costs, and the perplexity comparison
+//! are fully deterministic (no wall clock), so they double as the CI
+//! regression gate: `tools/check_bench_kv.py` checks the within-run
+//! invariants (paged ≥ flat, quant ≥ paged, ppl drift ≤ documented
+//! tolerance) and, when a committed `BENCH_kv.json` baseline exists,
+//! >20% regressions against it.
+//!
+//! ```bash
+//! cargo bench --bench bench_kv                 # quick
+//! RADIO_BENCH_FULL=1 cargo bench --bench bench_kv
+//! RADIO_BENCH_SMOKE=1 cargo bench --bench bench_kv   # CI smoke (tiny config)
+//! ```
+
+use radio::coordinator::kvquant::kv_spec_for;
+use radio::coordinator::pipeline::rtn_quantize_model;
+use radio::eval::{perplexity_packed, perplexity_packed_kv};
+use radio::infer::{
+    lane_cost_bytes, serve_with, Engine, KvCacheConfig, Request, ServeConfig,
+};
+use radio::model::corpus::{Corpus, Domain};
+use radio::model::weights::Weights;
+use radio::model::ModelConfig;
+use radio::report;
+use radio::util::bench::{black_box, Bench, Table};
+use radio::util::json::Json;
+use radio::util::rng::Rng;
+
+/// Documented quantized-KV perplexity tolerance (relative to dense KV at
+/// the allocator's ≥4-bit operating point) — DESIGN.md §KV cache.
+const PPL_REL_TOL: f64 = 0.05;
+
+fn mk_requests(n: usize, prompt_len: usize, max_new: usize, vocab: usize) -> Vec<Request> {
+    let mut rng = Rng::new(0x4B56); // "KV"
+    (0..n)
+        .map(|id| {
+            let prompt: Vec<u32> = (0..prompt_len).map(|_| rng.below(vocab) as u32).collect();
+            Request { id, prompt, max_new }
+        })
+        .collect()
+}
+
+fn main() {
+    let smoke = std::env::var("RADIO_BENCH_SMOKE").is_ok();
+    let full = std::env::var("RADIO_BENCH_FULL").is_ok() && !smoke;
+    let preset = if smoke {
+        "ropt-nano"
+    } else if full {
+        "ropt-med"
+    } else {
+        "ropt-micro"
+    };
+    let cfg = ModelConfig::preset(preset).unwrap();
+    let mut rng = Rng::new(0x5EAF);
+    let w = Weights::init_pretrained_like(cfg, &mut rng);
+    let bits = 3u8;
+    let qm = rtn_quantize_model(&w, bits, 64);
+    let corpus = Corpus::synthetic(0xC4, Domain::Calib, 64 * 1024);
+
+    // KV bit allocation from calibration-time cache variances.
+    let kv_target = 4.0;
+    let base_engine = Engine::from_quantized(&qm);
+    let spec = kv_spec_for(&base_engine, &corpus, cfg.max_seq, 4, kv_target, 8);
+    let kv_achieved = spec.mean_bits();
+    println!(
+        "bench_kv: {preset}, {bits}-bit weights, KV allocation target {kv_target} -> \
+         {kv_achieved:.2} avg bits/value"
+    );
+
+    let arms: Vec<(&str, Engine)> = vec![
+        ("dense_flat", Engine::from_quantized(&qm).with_kv_config(KvCacheConfig::dense_flat())),
+        ("paged_dense", Engine::from_quantized(&qm).with_kv_config(KvCacheConfig::dense())),
+        (
+            "paged_quant",
+            Engine::from_quantized(&qm).with_kv_config(KvCacheConfig::quantized(spec.clone())),
+        ),
+    ];
+
+    // ------------------------------------------ occupancy at a fixed budget
+    // Budget = three seed-style (max_seq-reserved, dense) lanes; slots
+    // outnumber the requests so the KV pool is the only binding
+    // constraint. Deterministic: admission order, lane costs, and the
+    // token streams don't depend on timing.
+    let n_requests = if smoke { 8 } else { 16 };
+    let prompt_len = cfg.max_seq / 4;
+    let max_new = cfg.max_seq / 4;
+    let flat_lane = lane_cost_bytes(&cfg, arms[0].1.kv_config(), cfg.max_seq);
+    let budget = 3 * flat_lane;
+    let reqs = || mk_requests(n_requests, prompt_len, max_new, cfg.vocab);
+    let serve_cfg = ServeConfig {
+        kv_budget_bytes: Some(budget),
+        ..ServeConfig::new(n_requests)
+    };
+
+    let bench = if full { Bench::default() } else { Bench::quick() };
+    let mut table = Table::new(&[
+        "kv mode",
+        "lane cost (KiB)",
+        "peak lanes",
+        "deferrals",
+        "occupancy",
+        "gen tok/s",
+    ]);
+    let mut arms_json: Vec<(&str, Json)> = Vec::new();
+    let mut peaks = std::collections::HashMap::new();
+    for (name, engine) in &arms {
+        let rows_worst = (prompt_len + max_new - 1).min(cfg.max_seq);
+        let lane = lane_cost_bytes(&cfg, engine.kv_config(), rows_worst);
+        let (_, stats) = serve_with(engine, reqs(), serve_cfg);
+        let secs = bench
+            .run(&format!("serve {name}"), || {
+                black_box(serve_with(engine, reqs(), serve_cfg));
+            })
+            .median_secs();
+        let gen_tps = stats.total_tokens as f64 / secs;
+        println!(
+            "  {name:>12}: lane {:>7.1} KiB, peak {} lanes, {} deferrals, occupancy {:.2}, \
+             {gen_tps:.1} gen tok/s",
+            lane as f64 / 1024.0,
+            stats.peak_lanes,
+            stats.kv_deferrals,
+            stats.mean_batch_occupancy
+        );
+        table.row(vec![
+            name.to_string(),
+            format!("{:.1}", lane as f64 / 1024.0),
+            stats.peak_lanes.to_string(),
+            stats.kv_deferrals.to_string(),
+            format!("{:.2}", stats.mean_batch_occupancy),
+            format!("{gen_tps:.1}"),
+        ]);
+        peaks.insert(*name, stats.peak_lanes);
+        arms_json.push((
+            *name,
+            Json::obj(vec![
+                ("lane_cost_bytes", Json::num(lane as f64)),
+                ("peak_lanes", Json::num(stats.peak_lanes as f64)),
+                ("kv_deferrals", Json::num(stats.kv_deferrals as f64)),
+                ("occupancy", Json::num(stats.mean_batch_occupancy)),
+                ("gen_tps", Json::num(gen_tps)),
+                ("completed", Json::num(stats.completed as f64)),
+            ]),
+        ));
+    }
+
+    // --------------------------------------------------- perplexity drift
+    let eval_windows = if smoke { 4 } else { 8 };
+    let ppl_dense = perplexity_packed(&qm, &corpus, cfg.max_seq, eval_windows);
+    let ppl_quant = perplexity_packed_kv(
+        &qm,
+        &corpus,
+        cfg.max_seq,
+        eval_windows,
+        &KvCacheConfig::quantized(spec),
+    );
+    let ppl_rel = (ppl_quant - ppl_dense).abs() / ppl_dense;
+    println!(
+        "  perplexity: dense KV {ppl_dense:.3} vs {kv_achieved:.2}-bit KV {ppl_quant:.3} \
+         ({:.2}% drift, tolerance {:.0}%)",
+        100.0 * ppl_rel,
+        100.0 * PPL_REL_TOL
+    );
+
+    println!("\nKV occupancy at a fixed {budget}-byte pool:");
+    table.print();
+    report::write_report(
+        "bench_kv",
+        "Paged/quantized KV cache: occupancy at a fixed memory budget",
+        &[("occupancy + throughput per KV mode", &table)],
+        "The pool admits lanes against their worst-case KV footprint. The seed accounting \
+         (dense_flat) charges every lane the whole positional table; paged accounting charges \
+         actual need, and quantized pages shrink that need by ~bits/32 — so peak resident \
+         lanes at the same budget must be monotone across the three arms (the CI gate checks \
+         this). Quantized-KV decode pays a per-row dequant, visible in gen tok/s; the drift \
+         column of BENCH_kv.json documents the accuracy cost.",
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("kv")),
+        ("model", Json::str(preset)),
+        ("weight_bits", Json::num(bits as f64)),
+        ("kv_target_bits", Json::num(kv_target)),
+        ("kv_achieved_bits", Json::num(kv_achieved)),
+        ("budget_bytes", Json::num(budget as f64)),
+        ("requests", Json::num(n_requests as f64)),
+        ("prompt_len", Json::num(prompt_len as f64)),
+        ("max_new", Json::num(max_new as f64)),
+        ("arms", Json::obj(arms_json)),
+        (
+            "ppl",
+            Json::obj(vec![
+                ("dense_kv", Json::num(ppl_dense)),
+                ("quant_kv", Json::num(ppl_quant)),
+                ("rel_drift", Json::num(ppl_rel)),
+                ("documented_tol", Json::num(PPL_REL_TOL)),
+            ]),
+        ),
+        // Fields the regression gate compares against a committed
+        // baseline (>20% in the bad direction fails CI). Deterministic
+        // fields only — wall-clock throughput stays informational in
+        // `arms` because shared-runner variance routinely exceeds any
+        // sane hard threshold.
+        (
+            "gate",
+            Json::obj(vec![
+                (
+                    "higher_better",
+                    Json::obj(vec![
+                        (
+                            "paged_dense_peak_lanes",
+                            Json::num(peaks["paged_dense"] as f64),
+                        ),
+                        (
+                            "paged_quant_peak_lanes",
+                            Json::num(peaks["paged_quant"] as f64),
+                        ),
+                    ]),
+                ),
+                ("lower_better", Json::obj(vec![("ppl_rel_drift", Json::num(ppl_rel))])),
+            ]),
+        ),
+    ]);
+    let path = "BENCH_kv.json";
+    match std::fs::write(path, json.to_pretty()) {
+        Ok(()) => println!("[bench] wrote {path}"),
+        Err(e) => eprintln!("[bench] FAILED to write {path}: {e}"),
+    }
+}

@@ -162,9 +162,9 @@ fn main() {
 
     let chunked_cfg = ServeConfig::new(pf_batch);
     let token_cfg = ServeConfig {
-        max_batch: pf_batch,
         prefill_chunk: 1,
         chunk_budget: usize::MAX,
+        ..ServeConfig::new(pf_batch)
     };
     let mut pf_table = Table::new(&[
         "schedule",

@@ -1,0 +1,244 @@
+//! KV-cache bit allocation — the paper's dual-ascent machinery turned
+//! from a compress-time tool into a serve-time one. Weights get their
+//! bit widths from gradient-weighted variances (Algorithm 1); the KV
+//! cache has no gradients at serve time, but its rate–distortion
+//! trade-off has the same shape: a layer whose K (or V) rows vary more
+//! loses more attention fidelity per dropped bit, so under Eq. 5 with
+//! `G² = 1` the optimal depths are again `B_n = ½·log2(2 ln2 · S_n²/V)`
+//! — exactly what [`crate::coordinator::dual_ascent`] solves.
+//!
+//! Two stages, mirroring the weight pipeline's Calibrate/Allocate split:
+//!
+//! - [`calibrate_kv`] runs evaluation windows through the engine's
+//!   chunked prefill with a *dense* cache and accumulates per-(layer,
+//!   K|V) means/variances of the cached rows — cheap (a handful of
+//!   forwards), rate-independent, reusable for any target.
+//! - [`allocate_kv_bits`] hands those variances to the integer
+//!   dual-ascent solver at a target average bits/value and returns a
+//!   [`KvQuantSpec`] (bit widths clamped to ≥ 1 — a 0-bit group prunes
+//!   a weight harmlessly but would zero every key it stores — plus the
+//!   companding scale = measured std and mean, FP16-rounded).
+//!
+//! **When to re-calibrate:** the stats depend on the model weights and
+//! the calibration corpus only — re-run after re-training/re-packing the
+//! model or switching domains; re-allocating for a new KV rate reuses
+//! the same stats, like the weight pipeline's allocate-many.
+
+use crate::coordinator::dual_ascent::{self, DualAscentConfig};
+use crate::infer::engine::Engine;
+use crate::infer::kv::{KvCacheConfig, KvLayerQuant, KvQuantParams, KvQuantSpec};
+use crate::model::corpus::Corpus;
+use crate::stats::distortion::GroupRd;
+use crate::stats::moments::Welford;
+
+/// Mean/variance of one cached tensor (one layer's K or V rows) over the
+/// calibration windows.
+#[derive(Clone, Copy, Debug)]
+pub struct KvTensorStats {
+    pub mean: f64,
+    pub var: f64,
+    pub count: u64,
+}
+
+/// Calibration-time KV statistics: one entry per layer for K and V.
+#[derive(Clone, Debug)]
+pub struct KvCalibStats {
+    pub dim: usize,
+    pub k: Vec<KvTensorStats>,
+    pub v: Vec<KvTensorStats>,
+}
+
+/// Accumulate per-(layer, K|V) moments of the KV rows the engine caches
+/// while prefilling `max_windows` evaluation windows of `seq` tokens.
+/// Runs the deployment numerics (the engine forward, dense pages), so
+/// the stats describe exactly the values quantized pages will store.
+pub fn calibrate_kv(
+    engine: &Engine,
+    corpus: &Corpus,
+    seq: usize,
+    max_windows: usize,
+) -> KvCalibStats {
+    let layers = engine.config.layers;
+    let windows = corpus.eval_windows(seq.min(engine.config.max_seq), max_windows);
+    assert!(!windows.is_empty(), "corpus too small for KV calibration");
+    let mut wk: Vec<Welford> = (0..layers).map(|_| Welford::new()).collect();
+    let mut wv: Vec<Welford> = (0..layers).map(|_| Welford::new()).collect();
+    let dense = KvCacheConfig::dense();
+    for (toks, _) in &windows {
+        let mut cache = engine.new_cache_with(&dense);
+        let chunk: &[u32] = toks;
+        // Masked prefill: the tied-head logits would be discarded.
+        engine.prefill_batch_masked(&[chunk], std::slice::from_mut(&mut cache), Some(&[false]));
+        for li in 0..layers {
+            for x in cache.k_flat(li) {
+                wk[li].push(x as f64);
+            }
+            for x in cache.v_flat(li) {
+                wv[li].push(x as f64);
+            }
+        }
+    }
+    let collect = |w: &[Welford]| -> Vec<KvTensorStats> {
+        w.iter()
+            .map(|w| KvTensorStats { mean: w.mean(), var: w.variance(), count: w.count() })
+            .collect()
+    };
+    KvCalibStats { dim: engine.config.dim, k: collect(&wk), v: collect(&wv) }
+}
+
+/// Allocate integer KV bit widths for `target_bits` average bits/value
+/// against calibration stats. Groups are per-(layer, K|V) with equal
+/// element counts (`dim` per cached row in every layer), sensitivity
+/// `S² = var`, `G² = 1`, so the dual-ascent solver equalizes marginal
+/// distortion across layers exactly as it does across weight groups.
+/// Deterministic: identical stats ⇒ identical spec.
+pub fn allocate_kv_bits(stats: &KvCalibStats, target_bits: f64, bmax: u8) -> KvQuantSpec {
+    assert_eq!(stats.k.len(), stats.v.len());
+    assert!(!stats.k.is_empty(), "no layers to allocate");
+    // Interleaved [k0, v0, k1, v1, …] so the solution splits back per
+    // layer trivially. Equal counts (the per-token group sizes are all
+    // `dim`), so the rate constraint is a plain average over groups.
+    let groups: Vec<GroupRd> = stats
+        .k
+        .iter()
+        .zip(&stats.v)
+        .flat_map(|(k, v)| {
+            [
+                GroupRd::new(stats.dim, 1.0, k.var.max(1e-12), 1.0),
+                GroupRd::new(stats.dim, 1.0, v.var.max(1e-12), 1.0),
+            ]
+        })
+        .collect();
+    let cfg = DualAscentConfig { bmax: bmax.min(8) as f64, ..Default::default() };
+    let bits = dual_ascent::solve_integer(&groups, target_bits, &cfg);
+    let layers = stats
+        .k
+        .iter()
+        .zip(&stats.v)
+        .enumerate()
+        .map(|(li, (k, v))| KvLayerQuant {
+            k: KvQuantParams::new(bits[2 * li].max(1), k.var.sqrt() as f32, k.mean as f32),
+            v: KvQuantParams::new(bits[2 * li + 1].max(1), v.var.sqrt() as f32, v.mean as f32),
+        })
+        .collect();
+    KvQuantSpec { layers }
+}
+
+/// Calibrate-then-allocate in one call — what `serve_quantized` and
+/// `bench_kv` use to stand up a quantized-KV engine.
+pub fn kv_spec_for(
+    engine: &Engine,
+    corpus: &Corpus,
+    seq: usize,
+    max_windows: usize,
+    target_bits: f64,
+    bmax: u8,
+) -> KvQuantSpec {
+    allocate_kv_bits(&calibrate_kv(engine, corpus, seq, max_windows), target_bits, bmax)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+    use crate::model::corpus::Domain;
+    use crate::model::weights::Weights;
+    use crate::util::rng::Rng;
+
+    fn tiny_engine(layers: usize) -> Engine {
+        let cfg = ModelConfig { vocab: 64, dim: 16, heads: 2, layers, mlp: 32, max_seq: 16 };
+        let mut rng = Rng::new(411);
+        Engine::from_dense(&Weights::init_training(cfg, &mut rng))
+    }
+
+    fn synthetic_stats(vars: &[(f64, f64)]) -> KvCalibStats {
+        KvCalibStats {
+            dim: 16,
+            k: vars
+                .iter()
+                .map(|&(kv, _)| KvTensorStats { mean: 0.0, var: kv, count: 100 })
+                .collect(),
+            v: vars
+                .iter()
+                .map(|&(_, vv)| KvTensorStats { mean: 0.1, var: vv, count: 100 })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn calibrate_measures_real_cache_rows() {
+        let engine = tiny_engine(2);
+        let corpus = Corpus::synthetic(412, Domain::Calib, 8 * 1024);
+        let stats = calibrate_kv(&engine, &corpus, 16, 4);
+        assert_eq!(stats.k.len(), 2);
+        assert_eq!(stats.v.len(), 2);
+        for s in stats.k.iter().chain(&stats.v) {
+            assert_eq!(s.count, 4 * 16 * 16, "4 windows × 16 rows × dim 16");
+            assert!(s.var.is_finite() && s.var > 0.0, "cache rows should vary");
+        }
+        // Deterministic.
+        let again = calibrate_kv(&engine, &corpus, 16, 4);
+        for (a, b) in stats.k.iter().zip(&again.k) {
+            assert_eq!(a.var, b.var);
+            assert_eq!(a.mean, b.mean);
+        }
+    }
+
+    #[test]
+    fn allocation_favours_high_variance_layers() {
+        let stats = synthetic_stats(&[(1e-4, 1e-4), (1.0, 1.0), (1e4, 1e4)]);
+        let spec = allocate_kv_bits(&stats, 4.0, 8);
+        assert_eq!(spec.layers.len(), 3);
+        assert!(spec.layers[0].k.bits < spec.layers[2].k.bits);
+        assert!(spec.layers[0].v.bits < spec.layers[2].v.bits);
+        // Every depth clamped to [1, 8] — never 0-bit-pruned.
+        for l in &spec.layers {
+            assert!((1..=8).contains(&l.k.bits));
+            assert!((1..=8).contains(&l.v.bits));
+        }
+    }
+
+    #[test]
+    fn allocation_hits_target_rate_on_balanced_stats() {
+        let stats = synthetic_stats(&[(0.5, 1.0), (2.0, 0.8), (1.2, 1.5), (0.9, 1.1)]);
+        for target in [3.0, 4.0, 6.0] {
+            let spec = allocate_kv_bits(&stats, target, 8);
+            assert!(
+                (spec.mean_bits() - target).abs() <= 0.6,
+                "target {target}: got {}",
+                spec.mean_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn k_and_v_get_independent_depths() {
+        // V rows 100× more variable than K: V must not get fewer bits.
+        let stats = synthetic_stats(&[(0.01, 1.0), (0.01, 1.0)]);
+        let spec = allocate_kv_bits(&stats, 4.0, 8);
+        for l in &spec.layers {
+            assert!(l.v.bits > l.k.bits, "V ({}) should out-rank K ({})", l.v.bits, l.k.bits);
+        }
+    }
+
+    #[test]
+    fn spec_scales_are_measured_stds() {
+        let stats = synthetic_stats(&[(4.0, 0.25)]);
+        let spec = allocate_kv_bits(&stats, 4.0, 8);
+        assert!((spec.layers[0].k.scale - 2.0).abs() < 0.01, "scale = std = √var");
+        assert!((spec.layers[0].v.scale - 0.5).abs() < 0.01);
+        assert!((spec.layers[0].v.mean - 0.1).abs() < 0.01);
+    }
+
+    #[test]
+    fn end_to_end_spec_drives_a_quantized_engine() {
+        let engine = tiny_engine(2);
+        let corpus = Corpus::synthetic(413, Domain::Calib, 8 * 1024);
+        let spec = kv_spec_for(&engine, &corpus, 16, 3, 4.0, 8);
+        assert_eq!(spec.layers.len(), 2);
+        let qkv = tiny_engine(2).with_kv_config(KvCacheConfig::quantized(spec));
+        let out = qkv.generate(&[1, 2, 3], 4);
+        assert_eq!(out, qkv.generate(&[1, 2, 3], 4), "quantized KV decode must be deterministic");
+        assert!(!out.is_empty());
+    }
+}

@@ -7,10 +7,12 @@
 pub mod calibration;
 pub mod dual_ascent;
 pub mod gradients;
+pub mod kvquant;
 pub mod pipeline;
 pub mod radio;
 
 pub use calibration::{CalibrationStats, MatCalib, RateAllocation};
 pub use gradients::{GradientProvider, NativeProvider};
+pub use kvquant::{allocate_kv_bits, calibrate_kv, kv_spec_for, KvCalibStats, KvTensorStats};
 pub use pipeline::{run_method, Method, PipelineResult, StageTimings};
 pub use radio::{CalibrationReport, PackSummary, Radio, RadioConfig, RadioReport};

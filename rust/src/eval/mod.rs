@@ -4,5 +4,7 @@
 pub mod perplexity;
 pub mod tasks;
 
-pub use perplexity::{perplexity, perplexity_packed, perplexity_quantized};
+pub use perplexity::{
+    perplexity, perplexity_engine, perplexity_packed, perplexity_packed_kv, perplexity_quantized,
+};
 pub use tasks::{average_score, score_task, Task};

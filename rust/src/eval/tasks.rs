@@ -8,7 +8,7 @@
 
 use std::collections::HashMap;
 
-use crate::infer::engine::{argmax, Engine, KvCache};
+use crate::infer::engine::{argmax, Engine};
 use crate::model::corpus::Corpus;
 use crate::util::rng::Rng;
 
@@ -109,7 +109,7 @@ fn ngram_continuation(engine: &Engine, corpus: &Corpus, cases: usize, rng: &mut 
     for _ in 0..cases {
         let (ctx, want, _) = contexts[rng.below(contexts.len())];
         let prompt: Vec<u32> = ctx.iter().map(|&b| b as u32).collect();
-        let mut kv = KvCache::new(&engine.config);
+        let mut kv = engine.new_cache();
         let mut logits = vec![0f32; engine.config.vocab];
         for &t in &prompt {
             logits = engine.step(t, &mut kv);
@@ -134,7 +134,7 @@ fn boundary_detection(engine: &Engine, corpus: &Corpus, cases: usize, rng: &mut 
             let b = data[start + ctx_len];
             b == b' ' || b == b'.'
         };
-        let mut kv = KvCache::new(&engine.config);
+        let mut kv = engine.new_cache();
         let mut logits = vec![0f32; engine.config.vocab];
         for &t in &prompt {
             logits = engine.step(t, &mut kv);

@@ -132,6 +132,25 @@ pub fn radio_cfg(target_bits: f64, group: usize, iters: usize) -> RadioConfig {
 pub const EVAL_SEQ: usize = 64;
 pub const EVAL_WINDOWS: usize = 48;
 
+/// True when `RADIO_SMOKE` is set: examples shrink to tiny configs so
+/// CI's examples-smoke job can execute every example end-to-end in
+/// seconds. Smoke runs exercise the full code path (train → quantize →
+/// eval → serve) with reduced budgets; the printed numbers are not
+/// meaningful, only completion is.
+pub fn smoke() -> bool {
+    std::env::var("RADIO_SMOKE").is_ok()
+}
+
+/// `full` normally, `tiny` under `RADIO_SMOKE` — the examples' one-line
+/// budget switch.
+pub fn smoke_scaled(full: usize, tiny: usize) -> usize {
+    if smoke() {
+        tiny
+    } else {
+        full
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -16,6 +16,7 @@
 //! chunked or what else is co-scheduled — the invariant the serving and
 //! prefill determinism tests pin down.
 
+use crate::infer::kv::{KvCache, KvCacheConfig};
 use crate::infer::matvec::{dense_matmul, split_rows, MatvecPlan, SendMut};
 use crate::model::config::ModelConfig;
 use crate::model::tensor::Tensor;
@@ -69,53 +70,16 @@ struct EngineLayer {
 /// The decode engine.
 pub struct Engine {
     pub config: ModelConfig,
+    /// KV cache geometry/mode used by [`Engine::new_cache`] — one source
+    /// of truth shared by `generate`, the serving scheduler, and the
+    /// packed evaluator, so all three build identically-shaped caches
+    /// (the serve == generate token-identity invariant needs this).
+    kv: KvCacheConfig,
     embed: Tensor,
     pos: Tensor,
     layers: Vec<EngineLayer>,
     lnf_g: Vec<f32>,
     lnf_b: Vec<f32>,
-}
-
-/// Per-sequence attention cache: cached K and V per layer, (t×E) grown
-/// one row per decoded token. Construction pre-reserves the full
-/// `max_seq · dim` per layer so decode never reallocates mid-stream.
-#[derive(Clone)]
-pub struct KvCache {
-    k: Vec<Vec<f32>>,
-    v: Vec<Vec<f32>>,
-    pub len: usize,
-}
-
-impl KvCache {
-    pub fn new(cfg: &ModelConfig) -> KvCache {
-        let cap = cfg.max_seq * cfg.dim;
-        KvCache {
-            k: (0..cfg.layers).map(|_| Vec::with_capacity(cap)).collect(),
-            v: (0..cfg.layers).map(|_| Vec::with_capacity(cap)).collect(),
-            len: 0,
-        }
-    }
-
-    /// Append a T-position chunk of K/V rows to `layer` with one
-    /// reservation per buffer (the chunked-prefill replacement for T
-    /// per-token pushes, each of which re-checked capacity). Rows are
-    /// oldest-first; the resulting cache contents are byte-identical to
-    /// appending the same rows one position at a time — the chunked
-    /// append equality test pins this down. `len` is NOT advanced here:
-    /// the engine advances every lane's clock once per forward pass,
-    /// after all layers have appended.
-    fn append_chunk(&mut self, layer: usize, k_rows: &[Vec<f32>], v_rows: &[Vec<f32>]) {
-        debug_assert_eq!(k_rows.len(), v_rows.len());
-        let add: usize = k_rows.iter().map(Vec::len).sum();
-        self.k[layer].reserve(add);
-        self.v[layer].reserve(add);
-        for r in k_rows {
-            self.k[layer].extend_from_slice(r);
-        }
-        for r in v_rows {
-            self.v[layer].extend_from_slice(r);
-        }
-    }
 }
 
 fn ln_vec(x: &[f32], g: &[f32], b: &[f32]) -> Vec<f32> {
@@ -172,6 +136,7 @@ impl Engine {
         }
         Engine {
             config: w.config,
+            kv: KvCacheConfig::dense(),
             embed: w.embed.clone(),
             pos: w.pos.clone(),
             layers,
@@ -206,6 +171,7 @@ impl Engine {
             .collect();
         Engine {
             config: w.config,
+            kv: KvCacheConfig::dense(),
             embed: w.embed.clone(),
             pos: w.pos.clone(),
             layers,
@@ -214,9 +180,33 @@ impl Engine {
         }
     }
 
-    /// Fresh cache sized for this engine's model.
+    /// Replace the engine's KV cache configuration (builder style) —
+    /// how callers opt into quantized KV pages or a non-default page
+    /// size. Affects only caches built *after* the call. A quant spec
+    /// whose layer count mismatches the model is rejected by
+    /// `KvCache::new` on the first cache build.
+    pub fn with_kv_config(mut self, kv: KvCacheConfig) -> Engine {
+        self.kv = kv;
+        self
+    }
+
+    /// The KV cache configuration caches are built with.
+    pub fn kv_config(&self) -> &KvCacheConfig {
+        &self.kv
+    }
+
+    /// Fresh paged cache under the engine's KV configuration. Pages are
+    /// allocated lazily as the lane grows — the seed's eager
+    /// `max_seq · dim` reservation is gone; serving budgets are enforced
+    /// by `KvPool` admission accounting instead (see `infer::kv`).
     pub fn new_cache(&self) -> KvCache {
-        KvCache::new(&self.config)
+        KvCache::new(&self.config, &self.kv)
+    }
+
+    /// Fresh cache under an explicit KV configuration (calibration and
+    /// tests; serving goes through [`Engine::new_cache`]).
+    pub fn new_cache_with(&self, kv: &KvCacheConfig) -> KvCache {
+        KvCache::new(&self.config, kv)
     }
 
     /// Decode one token for one sequence. Batch-of-one wrapper around
@@ -417,20 +407,16 @@ impl Engine {
             // Attention: every row is independent given the (now
             // chunk-inclusive) caches — row r attends over its lane's
             // rows 0..win, i.e. the cached prefix plus chunk positions
-            // up to and including its own. Parallel across rows;
-            // per-row op order is fixed by attend_cached.
+            // up to and including its own. Parallel across rows; the
+            // per-row op order is fixed by attend_kv regardless of how
+            // the cache pages its rows (or quantizes them), which is
+            // what keeps paged-dense decode bit-identical to the
+            // historical flat cache.
             let caches_ro: &[KvCache] = caches;
             let ctx_all: Vec<Vec<f32>> = parallel_map(n, 8, |r| {
                 let (b, win) = row_win[r];
-                transformer::attend_cached(
-                    &q[r],
-                    &caches_ro[b].k[li],
-                    &caches_ro[b].v[li],
-                    win,
-                    e,
-                    hds,
-                    dh,
-                )
+                let (krows, vrows) = caches_ro[b].layer_rows(li);
+                transformer::attend_kv(&q[r], &krows, &vrows, win, e, hds, dh)
             });
 
             let attn = l.wo.apply_gemm(&ctx_all);
@@ -575,6 +561,7 @@ pub fn argmax(xs: &[f32]) -> usize {
 mod tests {
     use super::*;
     use crate::coordinator::pipeline::rtn_quantize_model;
+    use crate::infer::kv::KvQuantSpec;
     use crate::model::transformer;
     use crate::util::rng::Rng;
 
@@ -595,7 +582,7 @@ mod tests {
         let logits_fwd = transformer::logits(&w, &cache_fwd.z);
 
         let engine = Engine::from_dense(&w);
-        let mut kv = KvCache::new(&w.config);
+        let mut kv = engine.new_cache();
         for (i, &t) in toks.iter().enumerate() {
             let logits = engine.step(t, &mut kv);
             for v in 0..w.config.vocab {
@@ -640,26 +627,44 @@ mod tests {
     }
 
     #[test]
-    fn kv_cache_preallocates_full_sequence() {
-        let cfg = ModelConfig { vocab: 32, dim: 16, heads: 2, layers: 3, mlp: 32, max_seq: 12 };
-        let kv = KvCache::new(&cfg);
-        assert_eq!(kv.k.len(), cfg.layers);
-        assert_eq!(kv.v.len(), cfg.layers);
-        for l in 0..cfg.layers {
-            assert!(kv.k[l].capacity() >= cfg.max_seq * cfg.dim);
-            assert!(kv.v[l].capacity() >= cfg.max_seq * cfg.dim);
-        }
-        // Decoding to max_seq must never exceed the reservation (i.e.
-        // never reallocate).
+    fn kv_cache_footprint_tracks_sequence_length() {
+        // The seed eagerly reserved max_seq·dim per layer even for short
+        // lanes; the paged cache must allocate nothing up front and grow
+        // page by page with the decoded length.
         let w = tiny_weights(186);
-        let engine = Engine::from_dense(&w);
+        let engine = Engine::from_dense(&w)
+            .with_kv_config(KvCacheConfig { page_rows: 4, ..KvCacheConfig::dense() });
         let mut kv = engine.new_cache();
-        let cap0: Vec<usize> = kv.k.iter().map(|k| k.capacity()).collect();
-        for t in 0..cfg.max_seq as u32 {
+        assert_eq!(kv.layers(), w.config.layers);
+        assert_eq!(kv.allocated_bytes(), 0, "fresh cache must not pre-reserve");
+        let full = crate::infer::kv::lane_cost_bytes(
+            &w.config,
+            engine.kv_config(),
+            w.config.max_seq,
+        );
+        let mut prev = 0usize;
+        for t in 0..w.config.max_seq as u32 {
             engine.step(t % 32, &mut kv);
+            assert!(kv.allocated_bytes() >= prev, "footprint must be monotone");
+            prev = kv.allocated_bytes();
+            // Vec::with_capacity guarantees "at least" the request, so
+            // allow a 2x allocator margin over the exact page accounting.
+            let bound =
+                2 * crate::infer::kv::lane_cost_bytes(&w.config, engine.kv_config(), kv.len);
+            assert!(
+                kv.allocated_bytes() <= bound,
+                "footprint {} exceeds worst-case accounting {bound} at len {}",
+                kv.allocated_bytes(),
+                kv.len
+            );
         }
-        let cap1: Vec<usize> = kv.k.iter().map(|k| k.capacity()).collect();
-        assert_eq!(cap0, cap1, "KV cache reallocated during decode");
+        assert!(prev <= 2 * full, "full lane must fit the max_seq accounting (2x margin)");
+        // A 3-token lane occupies one page tier, far below max_seq.
+        let mut short = engine.new_cache();
+        for t in 0..3u32 {
+            engine.step(t, &mut short);
+        }
+        assert!(short.allocated_bytes() < full / 2, "short lane must undercut max_seq");
     }
 
     #[test]
@@ -687,8 +692,8 @@ mod tests {
                 assert_eq!(batched[b], solo, "lane {b}: batched logits differ");
                 assert_eq!(caches[b].len, caches_solo[b].len);
                 for li in 0..w.config.layers {
-                    assert_eq!(caches[b].k[li], caches_solo[b].k[li], "lane {b} K cache");
-                    assert_eq!(caches[b].v[li], caches_solo[b].v[li], "lane {b} V cache");
+                    assert_eq!(caches[b].k_flat(li), caches_solo[b].k_flat(li), "lane {b} K cache");
+                    assert_eq!(caches[b].v_flat(li), caches_solo[b].v_flat(li), "lane {b} V cache");
                 }
             }
         }
@@ -715,8 +720,8 @@ mod tests {
         assert_eq!(masked[0], full[0]);
         assert!(masked[1].is_empty());
         for li in 0..w.config.layers {
-            assert_eq!(caches_masked[1].k[li], caches_full[1].k[li]);
-            assert_eq!(caches_masked[1].v[li], caches_full[1].v[li]);
+            assert_eq!(caches_masked[1].k_flat(li), caches_full[1].k_flat(li));
+            assert_eq!(caches_masked[1].v_flat(li), caches_full[1].v_flat(li));
         }
         assert_eq!(caches_masked[1].len, caches_full[1].len);
     }
@@ -743,8 +748,8 @@ mod tests {
                 assert_eq!(batched[b], solo, "lane {b}: prefill logits differ from step loop");
                 assert_eq!(caches[b].len, solo_cache.len);
                 for li in 0..w.config.layers {
-                    assert_eq!(caches[b].k[li], solo_cache.k[li], "lane {b} K cache");
-                    assert_eq!(caches[b].v[li], solo_cache.v[li], "lane {b} V cache");
+                    assert_eq!(caches[b].k_flat(li), solo_cache.k_flat(li), "lane {b} K cache");
+                    assert_eq!(caches[b].v_flat(li), solo_cache.v_flat(li), "lane {b} V cache");
                 }
             }
         }
@@ -772,8 +777,8 @@ mod tests {
             }
             assert_eq!(chunked[0], solo, "tile-boundary prefill diverged from step loop");
             for li in 0..cfg.layers {
-                assert_eq!(cache.k[li], solo_cache.k[li]);
-                assert_eq!(cache.v[li], solo_cache.v[li]);
+                assert_eq!(cache.k_flat(li), solo_cache.k_flat(li));
+                assert_eq!(cache.v_flat(li), solo_cache.v_flat(li));
             }
         }
     }
@@ -793,8 +798,8 @@ mod tests {
         assert_eq!(all, split, "split prefill diverged from single-chunk prefill");
         assert_eq!(c_all.len, c_split.len);
         for li in 0..w.config.layers {
-            assert_eq!(c_all.k[li], c_split.k[li]);
-            assert_eq!(c_all.v[li], c_split.v[li]);
+            assert_eq!(c_all.k_flat(li), c_split.k_flat(li));
+            assert_eq!(c_all.v_flat(li), c_split.v_flat(li));
         }
     }
 
@@ -807,7 +812,7 @@ mod tests {
         let out = engine.prefill_batch(&chunks, &mut caches);
         assert!(out[1].is_empty(), "idle lane must return no logits");
         assert_eq!(caches[1].len, 0);
-        assert!(caches[1].k[0].is_empty());
+        assert!(caches[1].k_flat(0).is_empty());
         // The active lane is unaffected by the idle one.
         let mut solo_cache = engine.new_cache();
         let chunk: &[u32] = &[1, 2, 3];
@@ -827,35 +832,97 @@ mod tests {
         assert!(masked[0].is_empty());
         assert_eq!(masked[1], full[1]);
         for li in 0..w.config.layers {
-            assert_eq!(caches_masked[0].k[li], caches_full[0].k[li]);
-            assert_eq!(caches_masked[0].v[li], caches_full[0].v[li]);
+            assert_eq!(caches_masked[0].k_flat(li), caches_full[0].k_flat(li));
+            assert_eq!(caches_masked[0].v_flat(li), caches_full[0].v_flat(li));
         }
         assert_eq!(caches_masked[0].len, caches_full[0].len);
     }
 
     #[test]
-    fn chunked_kv_append_matches_per_token_append() {
-        let cfg = ModelConfig { vocab: 32, dim: 8, heads: 2, layers: 2, mlp: 16, max_seq: 8 };
-        let mut rng = Rng::new(197);
-        let mk_rows = |rng: &mut Rng, n: usize| -> Vec<Vec<f32>> {
-            (0..n)
-                .map(|_| {
-                    let mut r = vec![0f32; cfg.dim];
-                    rng.fill_gauss(&mut r, 0.0, 1.0);
-                    r
-                })
-                .collect()
-        };
-        let (ks, vs) = (mk_rows(&mut rng, 5), mk_rows(&mut rng, 5));
-        let mut chunked = KvCache::new(&cfg);
-        chunked.append_chunk(1, &ks, &vs);
-        let mut per_token = KvCache::new(&cfg);
-        for (kr, vr) in ks.iter().zip(&vs) {
-            per_token.append_chunk(1, std::slice::from_ref(kr), std::slice::from_ref(vr));
+    fn prefill_crossing_kv_page_boundary_matches_step_loop() {
+        // The paged-dense bit-identity contract at the engine level: with
+        // pages much smaller than the prompt, chunked prefill and the
+        // sequential step loop must still agree exactly — logits AND
+        // logical cache contents — and both must agree with a single-page
+        // (flat-layout) cache. Splits land mid-page and on boundaries.
+        let cfg = ModelConfig { vocab: 32, dim: 16, heads: 2, layers: 2, mlp: 32, max_seq: 24 };
+        let mut rng = Rng::new(198);
+        let w = Weights::init_training(cfg, &mut rng);
+        let prompt: Vec<u32> = (0..19).map(|i| (i * 5 + 2) % 32).collect();
+        for base in [Engine::from_dense(&w), Engine::from_quantized(&rtn_quantize_model(&w, 5, 8))]
+        {
+            // page_rows = max_seq is literally the seed's flat layout.
+            let flat_engine = base.with_kv_config(KvCacheConfig {
+                page_rows: cfg.max_seq,
+                ..KvCacheConfig::dense()
+            });
+            let mut flat_cache = flat_engine.new_cache();
+            let flat =
+                flat_engine.prefill_batch(&[&prompt], std::slice::from_mut(&mut flat_cache));
+            let paged_engine = flat_engine
+                .with_kv_config(KvCacheConfig { page_rows: 4, ..KvCacheConfig::dense() });
+            // One chunked pass across 4-row pages.
+            let mut paged_cache = paged_engine.new_cache();
+            let paged =
+                paged_engine.prefill_batch(&[&prompt], std::slice::from_mut(&mut paged_cache));
+            assert_eq!(paged, flat, "paged dense diverged from flat layout");
+            // Step loop over the same pages, then mid-page + boundary
+            // chunk splits (7 is mid-page, 8 lands on a page boundary).
+            let mut step_cache = paged_engine.new_cache();
+            let mut step = Vec::new();
+            for &t in &prompt {
+                step = paged_engine.step(t, &mut step_cache);
+            }
+            assert_eq!(paged[0], step, "paged prefill diverged from step loop");
+            let mut split_cache = paged_engine.new_cache();
+            paged_engine.prefill_batch(&[&prompt[..7]], std::slice::from_mut(&mut split_cache));
+            paged_engine.prefill_batch(&[&prompt[7..8]], std::slice::from_mut(&mut split_cache));
+            let split =
+                paged_engine.prefill_batch(&[&prompt[8..]], std::slice::from_mut(&mut split_cache));
+            assert_eq!(split[0], step, "split chunks diverged across page boundaries");
+            for li in 0..cfg.layers {
+                assert_eq!(paged_cache.k_flat(li), flat_cache.k_flat(li), "K layer {li}");
+                assert_eq!(paged_cache.v_flat(li), flat_cache.v_flat(li), "V layer {li}");
+                assert_eq!(split_cache.k_flat(li), step_cache.k_flat(li));
+                assert_eq!(split_cache.v_flat(li), step_cache.v_flat(li));
+            }
         }
-        assert_eq!(chunked.k[1], per_token.k[1]);
-        assert_eq!(chunked.v[1], per_token.v[1]);
-        assert!(chunked.k[0].is_empty(), "only the targeted layer grows");
+    }
+
+    #[test]
+    fn quantized_kv_tracks_dense_kv_logits() {
+        // Quantized pages change numerics (by design); at 8 bits the
+        // drift must stay within a tight relative tolerance of the dense
+        // cache, and decode must remain deterministic.
+        let w = tiny_weights(199);
+        let spec = KvQuantSpec::uniform(w.config.layers, 8, 1.0, 0.0);
+        let dense = Engine::from_dense(&w);
+        let toks: Vec<u32> = vec![1, 7, 3, 2, 9, 4];
+        let mut dense_cache = dense.new_cache();
+        let mut want = Vec::new();
+        for &t in &toks {
+            want = dense.step(t, &mut dense_cache);
+        }
+        let quant = Engine::from_dense(&w).with_kv_config(KvCacheConfig {
+            page_rows: 4,
+            quant: Some(spec),
+            flat_reserve: false,
+        });
+        let mut qc = quant.new_cache();
+        assert!(qc.is_quantized());
+        let mut got = Vec::new();
+        for &t in &toks {
+            got = quant.step(t, &mut qc);
+        }
+        assert_eq!(qc.len, dense_cache.len);
+        for (a, b) in got.iter().zip(&want) {
+            assert!(
+                (a - b).abs() < 5e-2 * b.abs().max(1.0),
+                "8-bit KV drifted too far: {a} vs {b}"
+            );
+        }
+        // Determinism: same engine, same tokens, same logits and tokens.
+        assert_eq!(quant.generate(&toks, 4), quant.generate(&toks, 4));
     }
 
     #[test]

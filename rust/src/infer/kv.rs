@@ -1,0 +1,668 @@
+//! Paged, optionally-quantized KV cache — the serving-side twin of the
+//! paper's rate–distortion machinery. The seed's `KvCache` pre-reserved
+//! `max_seq · dim` f32s per layer per lane, so KV memory — not compute —
+//! capped how many sequences could be resident at once. This module
+//! replaces it with fixed-size *pages* allocated lazily as a lane grows:
+//!
+//! - **Dense-f32 pages** hold raw K/V rows. Page boundaries are a pure
+//!   storage concern: attention reads rows through [`KvRows`]
+//!   (`transformer::attend_kv`), whose FP op order is independent of the
+//!   backing, so paged-dense decode is bit-identical to the seed's flat
+//!   cache (pinned by tests at page boundaries and mid-page splits).
+//! - **Quantized pages** compand + bit-pack each appended row with a
+//!   per-(layer, K|V) B-bit quantizer (`quant::companding` codes in a
+//!   `quant::bitpack` LSB-first stream). Bit widths come from the same
+//!   dual-ascent allocator the weights use, fed calibration-time KV
+//!   variance stats (`coordinator::kvquant`): bits go to the layers
+//!   whose cache rows vary most, exactly Eq. 6 applied at serve time.
+//!   Attention dequantizes head slices on the fly (`deq = µ + S·lut[c]`)
+//!   — pages are never densified into whole-lane buffers.
+//!
+//! [`KvPool`] is the admission-control side: a byte budget (from
+//! `ServeConfig`) that the scheduler reserves a lane's *worst-case*
+//! footprint against before admitting it, and releases at retirement.
+//! Pages themselves are owned by each lane and allocated lazily, so the
+//! heap footprint tracks actual sequence length while the budget
+//! accounting is exhaustion-proof: nothing is ever evicted — admission
+//! is simply deferred until a retiring lane frees budget. See DESIGN.md
+//! §KV cache.
+
+use crate::model::config::ModelConfig;
+use crate::model::transformer::KvRows;
+use crate::quant::bitpack::{f16_round, BitReader, BitWriter};
+use crate::quant::companding;
+
+/// Default rows per page. Small enough that a short lane wastes at most
+/// one mostly-empty page per layer per K/V tensor, large enough that
+/// page headers and the page-lookup divide stay negligible next to a
+/// row's `dim` floats.
+pub const KV_PAGE_ROWS: usize = 16;
+
+/// One quantizer: B-bit companded codes with FP16-rounded scale/mean
+/// (the same `deq = mean + scale · lut[code]` factorization the packed
+/// weight matrices use).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct KvQuantParams {
+    pub bits: u8,
+    pub scale: f32,
+    pub mean: f32,
+}
+
+impl KvQuantParams {
+    /// Clamps `bits` to [1, 8] (a 0-bit cache row would zero the keys it
+    /// stores — pruning is meaningful for weights, fatal for attention)
+    /// and FP16-rounds scale/mean with the same degenerate-scale guard
+    /// as `PackedMatrix::pack`.
+    pub fn new(bits: u8, scale: f32, mean: f32) -> KvQuantParams {
+        let mut scale = f16_round(scale);
+        if !scale.is_finite() || scale <= 0.0 {
+            scale = 1e-6;
+        }
+        let mut mean = f16_round(mean);
+        if !mean.is_finite() {
+            mean = 0.0;
+        }
+        KvQuantParams { bits: bits.clamp(1, 8), scale, mean }
+    }
+}
+
+/// Per-layer K and V quantizers — K and V get independent bit widths
+/// (their variances differ, and the allocator exploits it).
+#[derive(Clone, Debug, PartialEq)]
+pub struct KvLayerQuant {
+    pub k: KvQuantParams,
+    pub v: KvQuantParams,
+}
+
+/// Bit-width/scale assignment for a whole model's KV cache.
+#[derive(Clone, Debug, PartialEq)]
+pub struct KvQuantSpec {
+    /// One entry per transformer layer.
+    pub layers: Vec<KvLayerQuant>,
+}
+
+impl KvQuantSpec {
+    /// Flat spec: every layer, K and V alike, at `bits` with the given
+    /// scale/mean (the ablation arm; the allocator produces mixed ones).
+    pub fn uniform(layers: usize, bits: u8, scale: f32, mean: f32) -> KvQuantSpec {
+        let p = KvQuantParams::new(bits, scale, mean);
+        KvQuantSpec { layers: vec![KvLayerQuant { k: p, v: p }; layers] }
+    }
+
+    /// Average bits per stored KV value.
+    pub fn mean_bits(&self) -> f64 {
+        if self.layers.is_empty() {
+            return 0.0;
+        }
+        let total: usize = self.layers.iter().map(|l| l.k.bits as usize + l.v.bits as usize).sum();
+        total as f64 / (2 * self.layers.len()) as f64
+    }
+}
+
+/// KV cache geometry + mode. Lives on the `Engine` (so `generate`,
+/// `serve`, and evaluation all build identically-shaped caches — the
+/// serve == generate token-identity invariant needs one source of
+/// truth); `ServeConfig` contributes only the pool budget.
+#[derive(Clone, Debug, PartialEq)]
+pub struct KvCacheConfig {
+    /// Rows per page (≥ 1).
+    pub page_rows: usize,
+    /// `Some` = quantized pages under this spec; `None` = dense f32.
+    pub quant: Option<KvQuantSpec>,
+    /// Admission-accounting emulation of the seed's flat cache: charge
+    /// every lane the full `max_seq` footprint regardless of its actual
+    /// need. Page allocation stays lazy — this only changes what
+    /// [`lane_cost_bytes`] reports, so `bench_kv` can run the old
+    /// reservation policy as its baseline arm.
+    pub flat_reserve: bool,
+}
+
+impl KvCacheConfig {
+    /// Paged dense f32 — the default; bit-identical to the seed cache.
+    pub fn dense() -> KvCacheConfig {
+        KvCacheConfig { page_rows: KV_PAGE_ROWS, quant: None, flat_reserve: false }
+    }
+
+    /// Dense with the seed's worst-case admission accounting (bench
+    /// baseline arm).
+    pub fn dense_flat() -> KvCacheConfig {
+        KvCacheConfig { flat_reserve: true, ..KvCacheConfig::dense() }
+    }
+
+    /// Quantized pages under `spec`.
+    pub fn quantized(spec: KvQuantSpec) -> KvCacheConfig {
+        KvCacheConfig { page_rows: KV_PAGE_ROWS, quant: Some(spec), flat_reserve: false }
+    }
+}
+
+impl Default for KvCacheConfig {
+    fn default() -> KvCacheConfig {
+        KvCacheConfig::dense()
+    }
+}
+
+/// One bit-packed page: up to `page_rows` rows of `width` codes.
+#[derive(Clone, Debug)]
+struct QuantPage {
+    words: Vec<u64>,
+    rows: usize,
+}
+
+#[derive(Clone, Debug)]
+enum StoreKind {
+    Dense { pages: Vec<Vec<f32>> },
+    Quant { pages: Vec<QuantPage>, params: KvQuantParams, lut: Vec<f32> },
+}
+
+/// Per-(layer, K|V) page store.
+#[derive(Clone, Debug)]
+struct PageStore {
+    page_rows: usize,
+    width: usize,
+    kind: StoreKind,
+}
+
+impl PageStore {
+    fn dense(page_rows: usize, width: usize) -> PageStore {
+        PageStore { page_rows, width, kind: StoreKind::Dense { pages: Vec::new() } }
+    }
+
+    fn quant(page_rows: usize, width: usize, params: KvQuantParams) -> PageStore {
+        let lut = companding::base_lut(params.bits);
+        PageStore { page_rows, width, kind: StoreKind::Quant { pages: Vec::new(), params, lut } }
+    }
+
+    /// Append one e-wide row, opening a fresh page when the last is full.
+    fn push_row(&mut self, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.width);
+        let (page_rows, width) = (self.page_rows, self.width);
+        match &mut self.kind {
+            StoreKind::Dense { pages } => {
+                let open = matches!(pages.last(), Some(p) if p.len() < page_rows * width);
+                if !open {
+                    pages.push(Vec::with_capacity(page_rows * width));
+                }
+                pages.last_mut().unwrap().extend_from_slice(row);
+            }
+            StoreKind::Quant { pages, params, .. } => {
+                let open = matches!(pages.last(), Some(p) if p.rows < page_rows);
+                if !open {
+                    let cap = (page_rows * width * params.bits as usize).div_ceil(64);
+                    pages.push(QuantPage { words: Vec::with_capacity(cap), rows: 0 });
+                }
+                let page = pages.last_mut().unwrap();
+                let mut w = BitWriter {
+                    words: std::mem::take(&mut page.words),
+                    bit_len: page.rows * width * params.bits as usize,
+                };
+                for &x in row {
+                    w.push(
+                        companding::quantize_code(x, params.bits, params.scale, params.mean),
+                        params.bits,
+                    );
+                }
+                page.words = w.words;
+                page.rows += 1;
+            }
+        }
+    }
+
+    /// Logical rows currently stored.
+    fn rows(&self) -> usize {
+        match &self.kind {
+            StoreKind::Dense { pages } => {
+                pages.iter().map(|p| p.len()).sum::<usize>() / self.width.max(1)
+            }
+            StoreKind::Quant { pages, .. } => pages.iter().map(|p| p.rows).sum(),
+        }
+    }
+
+    /// Heap bytes actually allocated for page payloads.
+    fn allocated_bytes(&self) -> usize {
+        match &self.kind {
+            StoreKind::Dense { pages } => pages.iter().map(|p| p.capacity() * 4).sum(),
+            StoreKind::Quant { pages, .. } => pages.iter().map(|p| p.words.capacity() * 8).sum(),
+        }
+    }
+
+    fn view(&self) -> KvLayerRows<'_> {
+        KvLayerRows { store: self }
+    }
+
+    /// Dequantized/densified logical contents, row-major — the test and
+    /// calibration accessor. For dense stores this is the exact bytes
+    /// appended (pages concatenated in order).
+    fn flat(&self) -> Vec<f32> {
+        match &self.kind {
+            StoreKind::Dense { pages } => {
+                let mut out = Vec::with_capacity(self.rows() * self.width);
+                for p in pages {
+                    out.extend_from_slice(p);
+                }
+                out
+            }
+            StoreKind::Quant { pages, params, lut } => {
+                let mut out = Vec::with_capacity(self.rows() * self.width);
+                for p in pages {
+                    let mut rd = BitReader::new(&p.words, 0);
+                    for _ in 0..p.rows * self.width {
+                        out.push(params.mean + params.scale * lut[rd.read(params.bits) as usize]);
+                    }
+                }
+                out
+            }
+        }
+    }
+}
+
+/// [`KvRows`] view over one page store — what `attend_kv` reads.
+pub struct KvLayerRows<'a> {
+    store: &'a PageStore,
+}
+
+impl KvRows for KvLayerRows<'_> {
+    #[inline]
+    fn head_slice<'a>(&'a self, ti: usize, h0: usize, buf: &'a mut [f32]) -> &'a [f32] {
+        let s = self.store;
+        let (page, row) = (ti / s.page_rows, ti % s.page_rows);
+        match &s.kind {
+            StoreKind::Dense { pages } => {
+                // Rows never straddle pages, so dense reads are zero-copy
+                // borrows out of the page — the hot path pays nothing for
+                // the paging abstraction.
+                let off = row * s.width + h0;
+                &pages[page][off..off + buf.len()]
+            }
+            StoreKind::Quant { pages, params, lut } => {
+                let bit = (row * s.width + h0) * params.bits as usize;
+                let mut rd = BitReader::new(&pages[page].words, bit);
+                for b in buf.iter_mut() {
+                    *b = params.mean + params.scale * lut[rd.read(params.bits) as usize];
+                }
+                buf
+            }
+        }
+    }
+}
+
+/// Per-sequence attention cache: paged K and V stores per layer. Pages
+/// are allocated lazily on append, so a lane's heap footprint tracks its
+/// actual sequence length — the seed's eager `max_seq · dim` reservation
+/// is gone (admission worst-cases are accounted by [`KvPool`] instead).
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    k: Vec<PageStore>,
+    v: Vec<PageStore>,
+    /// Lane clock: positions appended so far. Advanced once per engine
+    /// forward (after all layers appended), exactly as before.
+    pub len: usize,
+}
+
+impl KvCache {
+    pub fn new(model: &ModelConfig, kv: &KvCacheConfig) -> KvCache {
+        let page_rows = kv.page_rows.max(1);
+        if let Some(spec) = &kv.quant {
+            assert_eq!(
+                spec.layers.len(),
+                model.layers,
+                "KV quant spec layer count must match the model"
+            );
+        }
+        let mk = |sel: fn(&KvLayerQuant) -> KvQuantParams| -> Vec<PageStore> {
+            (0..model.layers)
+                .map(|li| match &kv.quant {
+                    None => PageStore::dense(page_rows, model.dim),
+                    Some(spec) => PageStore::quant(page_rows, model.dim, sel(&spec.layers[li])),
+                })
+                .collect()
+        };
+        KvCache { k: mk(|l| l.k), v: mk(|l| l.v), len: 0 }
+    }
+
+    pub fn layers(&self) -> usize {
+        self.k.len()
+    }
+
+    /// Whether this cache quantizes its pages.
+    pub fn is_quantized(&self) -> bool {
+        matches!(self.k.first(), Some(s) if matches!(s.kind, StoreKind::Quant { .. }))
+    }
+
+    /// Append a T-position chunk of K/V rows to `layer` (oldest-first;
+    /// one position at a time yields byte-identical page contents — the
+    /// chunked append equality test pins this down). `len` is NOT
+    /// advanced here: the engine advances every lane's clock once per
+    /// forward pass, after all layers have appended.
+    pub(crate) fn append_chunk(&mut self, layer: usize, k_rows: &[Vec<f32>], v_rows: &[Vec<f32>]) {
+        debug_assert_eq!(k_rows.len(), v_rows.len());
+        for r in k_rows {
+            self.k[layer].push_row(r);
+        }
+        for r in v_rows {
+            self.v[layer].push_row(r);
+        }
+    }
+
+    /// Attention views over layer `layer`'s K and V pages.
+    pub fn layer_rows(&self, layer: usize) -> (KvLayerRows<'_>, KvLayerRows<'_>) {
+        (self.k[layer].view(), self.v[layer].view())
+    }
+
+    /// Logical (dequantized) K contents of `layer`, row-major. For dense
+    /// caches these are the exact appended bytes — tests compare them
+    /// across paging/chunking configurations.
+    pub fn k_flat(&self, layer: usize) -> Vec<f32> {
+        self.k[layer].flat()
+    }
+
+    /// Logical (dequantized) V contents of `layer`, row-major.
+    pub fn v_flat(&self, layer: usize) -> Vec<f32> {
+        self.v[layer].flat()
+    }
+
+    /// Heap bytes allocated across all layers' page payloads.
+    pub fn allocated_bytes(&self) -> usize {
+        self.k.iter().chain(&self.v).map(PageStore::allocated_bytes).sum()
+    }
+}
+
+/// Worst-case page bytes a lane occupying `rows` cache positions can
+/// consume under `kv` — the amount the scheduler reserves at admission.
+/// Pages are charged whole (a lane owns its last, partially-filled page)
+/// and `flat_reserve` charges the full positional table, reproducing the
+/// seed's accounting.
+pub fn lane_cost_bytes(model: &ModelConfig, kv: &KvCacheConfig, rows: usize) -> usize {
+    let page_rows = kv.page_rows.max(1);
+    let rows = if kv.flat_reserve { model.max_seq } else { rows.min(model.max_seq) };
+    let pages = rows.div_ceil(page_rows);
+    let dense_page = page_rows * model.dim * 4;
+    let mut total = 0usize;
+    for li in 0..model.layers {
+        let (kb, vb) = match &kv.quant {
+            None => (dense_page, dense_page),
+            Some(spec) => {
+                let bytes = |bits: u8| (page_rows * model.dim * bits as usize).div_ceil(64) * 8;
+                (bytes(spec.layers[li].k.bits), bytes(spec.layers[li].v.bits))
+            }
+        };
+        total += pages * (kb + vb);
+    }
+    total
+}
+
+/// Byte budget for the whole KV pool with reservation accounting — the
+/// scheduler's admission gate. Pure bookkeeping: pages live in each
+/// lane's `KvCache`; the pool only guarantees that the sum of admitted
+/// lanes' worst cases never exceeds the budget, so admission is deferred
+/// (never evicted) when the pool is exhausted.
+#[derive(Clone, Debug)]
+pub struct KvPool {
+    budget: Option<usize>,
+    reserved: usize,
+}
+
+impl KvPool {
+    /// `None` = unbounded (accounting only).
+    pub fn new(budget_bytes: Option<usize>) -> KvPool {
+        KvPool { budget: budget_bytes, reserved: 0 }
+    }
+
+    /// Reserve `bytes` if they fit the budget; `false` defers admission.
+    pub fn try_reserve(&mut self, bytes: usize) -> bool {
+        if let Some(b) = self.budget {
+            if self.reserved + bytes > b {
+                return false;
+            }
+        }
+        self.reserved += bytes;
+        true
+    }
+
+    /// Reserve unconditionally — the scheduler's progress guarantee for
+    /// a single lane whose worst case alone exceeds the budget (it must
+    /// still run, alone, or the queue would deadlock).
+    pub fn reserve_unchecked(&mut self, bytes: usize) {
+        self.reserved += bytes;
+    }
+
+    pub fn release(&mut self, bytes: usize) {
+        debug_assert!(bytes <= self.reserved, "releasing more than reserved");
+        self.reserved = self.reserved.saturating_sub(bytes);
+    }
+
+    pub fn reserved(&self) -> usize {
+        self.reserved
+    }
+
+    pub fn budget(&self) -> Option<usize> {
+        self.budget
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::transformer::{attend_cached, attend_kv};
+    use crate::util::rng::Rng;
+
+    fn tiny_cfg(layers: usize) -> ModelConfig {
+        ModelConfig { vocab: 32, dim: 8, heads: 2, layers, mlp: 16, max_seq: 24 }
+    }
+
+    fn rand_rows(rng: &mut Rng, n: usize, e: usize) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|_| {
+                let mut r = vec![0f32; e];
+                rng.fill_gauss(&mut r, 0.0, 1.0);
+                r
+            })
+            .collect()
+    }
+
+    #[test]
+    fn dense_pages_store_exact_bytes_across_boundaries() {
+        // 11 rows across page_rows=4 pages: flat contents must equal the
+        // appended rows bit-for-bit, page boundaries invisible.
+        let cfg = tiny_cfg(2);
+        let mut rng = Rng::new(301);
+        let rows = rand_rows(&mut rng, 11, cfg.dim);
+        let vals = rand_rows(&mut rng, 11, cfg.dim);
+        let kvcfg = KvCacheConfig { page_rows: 4, ..KvCacheConfig::dense() };
+        let mut cache = KvCache::new(&cfg, &kvcfg);
+        cache.append_chunk(1, &rows, &vals);
+        let want: Vec<f32> = rows.iter().flatten().copied().collect();
+        assert_eq!(cache.k_flat(1), want);
+        assert_eq!(cache.v_flat(1), vals.iter().flatten().copied().collect::<Vec<f32>>());
+        assert!(cache.k_flat(0).is_empty(), "only the targeted layer grows");
+    }
+
+    #[test]
+    fn chunked_append_matches_per_row_append() {
+        let cfg = tiny_cfg(2);
+        let mut rng = Rng::new(302);
+        let rows = rand_rows(&mut rng, 7, cfg.dim);
+        let vals = rand_rows(&mut rng, 7, cfg.dim);
+        for kvcfg in [
+            KvCacheConfig { page_rows: 3, ..KvCacheConfig::dense() },
+            KvCacheConfig {
+                page_rows: 3,
+                ..KvCacheConfig::quantized(KvQuantSpec::uniform(2, 5, 1.0, 0.0))
+            },
+        ] {
+            let mut chunked = KvCache::new(&cfg, &kvcfg);
+            chunked.append_chunk(0, &rows, &vals);
+            let mut per_row = KvCache::new(&cfg, &kvcfg);
+            for (kr, vr) in rows.iter().zip(&vals) {
+                per_row.append_chunk(0, std::slice::from_ref(kr), std::slice::from_ref(vr));
+            }
+            assert_eq!(chunked.k_flat(0), per_row.k_flat(0));
+            assert_eq!(chunked.v_flat(0), per_row.v_flat(0));
+        }
+    }
+
+    #[test]
+    fn paged_attend_matches_flat_attend_bit_for_bit() {
+        // The dense bit-identity keystone: attention through paged views
+        // must equal attend_cached over the flat concatenation exactly,
+        // for windows ending mid-page and at page boundaries.
+        let cfg = tiny_cfg(1);
+        let (e, heads) = (cfg.dim, cfg.heads);
+        let dh = e / heads;
+        let mut rng = Rng::new(303);
+        let rows = rand_rows(&mut rng, 13, e);
+        let vals = rand_rows(&mut rng, 13, e);
+        let mut q = vec![0f32; e];
+        rng.fill_gauss(&mut q, 0.0, 1.0);
+        let kvcfg = KvCacheConfig { page_rows: 4, ..KvCacheConfig::dense() };
+        let mut cache = KvCache::new(&cfg, &kvcfg);
+        cache.append_chunk(0, &rows, &vals);
+        let (kflat, vflat) = (cache.k_flat(0), cache.v_flat(0));
+        for t in [1usize, 3, 4, 5, 8, 13] {
+            let (kv_k, kv_v) = cache.layer_rows(0);
+            let paged = attend_kv(&q, &kv_k, &kv_v, t, e, heads, dh);
+            let flat = attend_cached(&q, &kflat, &vflat, t, e, heads, dh);
+            assert_eq!(paged, flat, "window t={t} diverged across page backing");
+        }
+    }
+
+    #[test]
+    fn quantized_pages_roundtrip_through_quantizer() {
+        // Quant pages must store exactly quantize(dequantize) fixed
+        // points: flat() values re-encode to the same codes, and the
+        // attend view reads the same values flat() reports.
+        let cfg = tiny_cfg(1);
+        let e = cfg.dim;
+        let mut rng = Rng::new(304);
+        let rows = rand_rows(&mut rng, 9, e);
+        let spec = KvQuantSpec::uniform(1, 4, 1.0, 0.1);
+        let params = spec.layers[0].k;
+        let kvcfg = KvCacheConfig { page_rows: 4, quant: Some(spec), flat_reserve: false };
+        let mut cache = KvCache::new(&cfg, &kvcfg);
+        cache.append_chunk(0, &rows, &rows);
+        assert!(cache.is_quantized());
+        let flat = cache.k_flat(0);
+        assert_eq!(flat.len(), 9 * e);
+        for (orig, deq) in rows.iter().flatten().zip(&flat) {
+            let code = companding::quantize_code(*orig, params.bits, params.scale, params.mean);
+            let want = params.mean
+                + params.scale * companding::base_lut(params.bits)[code as usize];
+            assert!((deq - want).abs() < 1e-6, "{orig} -> {deq}, want {want}");
+        }
+        // View agrees with flat() on every head slice.
+        let (kv_k, _) = cache.layer_rows(0);
+        let mut buf = vec![0f32; e / cfg.heads];
+        for ti in 0..9 {
+            for h in 0..cfg.heads {
+                let got = kv_k.head_slice(ti, h * buf.len(), &mut buf).to_vec();
+                let want = &flat[ti * e + h * got.len()..ti * e + (h + 1) * got.len()];
+                assert_eq!(got, want, "row {ti} head {h}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_error_shrinks_with_bits() {
+        let cfg = tiny_cfg(1);
+        let mut rng = Rng::new(305);
+        let rows = rand_rows(&mut rng, 16, cfg.dim);
+        let mse = |bits: u8| -> f64 {
+            let spec = KvQuantSpec::uniform(1, bits, 1.0, 0.0);
+            let kvcfg = KvCacheConfig { page_rows: 8, quant: Some(spec), flat_reserve: false };
+            let mut cache = KvCache::new(&cfg, &kvcfg);
+            cache.append_chunk(0, &rows, &rows);
+            cache
+                .k_flat(0)
+                .iter()
+                .zip(rows.iter().flatten())
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+        };
+        let (m3, m6, m8) = (mse(3), mse(6), mse(8));
+        assert!(m6 < m3 / 4.0, "6-bit {m6} vs 3-bit {m3}");
+        assert!(m8 < m6, "8-bit {m8} vs 6-bit {m6}");
+    }
+
+    #[test]
+    fn footprint_tracks_rows_not_max_seq() {
+        // The seed bugfix: a short lane must not pay the positional
+        // table. 3 rows at page_rows=4 allocates exactly one page per
+        // (layer, K|V), far below the max_seq footprint.
+        let cfg = tiny_cfg(2);
+        let kvcfg = KvCacheConfig { page_rows: 4, ..KvCacheConfig::dense() };
+        let mut cache = KvCache::new(&cfg, &kvcfg);
+        assert_eq!(cache.allocated_bytes(), 0, "empty cache allocates nothing");
+        let mut rng = Rng::new(306);
+        let rows = rand_rows(&mut rng, 3, cfg.dim);
+        for li in 0..cfg.layers {
+            cache.append_chunk(li, &rows, &rows);
+        }
+        let one_page = 4 * cfg.dim * 4;
+        // One page per (layer, K|V). Vec::with_capacity guarantees "at
+        // least", so allow a small allocator margin above the exact size.
+        let got = cache.allocated_bytes();
+        assert!(
+            got >= cfg.layers * 2 * one_page && got <= cfg.layers * 2 * one_page * 2,
+            "allocated {got}, expected ~{}",
+            cfg.layers * 2 * one_page
+        );
+        let full = lane_cost_bytes(&cfg, &kvcfg, cfg.max_seq);
+        assert!(cache.allocated_bytes() < full / 2, "short lane must undercut max_seq");
+        // And the worst-case accounting bounds the actual footprint
+        // (2x margin: with_capacity guarantees "at least").
+        assert!(cache.allocated_bytes() <= 2 * lane_cost_bytes(&cfg, &kvcfg, 3));
+    }
+
+    #[test]
+    fn lane_cost_accounting() {
+        let cfg = tiny_cfg(2);
+        let dense = KvCacheConfig { page_rows: 4, ..KvCacheConfig::dense() };
+        // 5 rows -> 2 pages; per layer K+V.
+        let want = cfg.layers * 2 * 2 * (4 * cfg.dim * 4);
+        assert_eq!(lane_cost_bytes(&cfg, &dense, 5), want);
+        // flat_reserve charges max_seq (24 rows -> 6 pages) regardless.
+        let flat = KvCacheConfig { page_rows: 4, ..KvCacheConfig::dense_flat() };
+        assert_eq!(lane_cost_bytes(&cfg, &flat, 5), cfg.layers * 2 * 6 * (4 * cfg.dim * 4));
+        // Quantized pages cost ~bits/32 of dense.
+        let q = KvCacheConfig {
+            page_rows: 4,
+            quant: Some(KvQuantSpec::uniform(cfg.layers, 4, 1.0, 0.0)),
+            flat_reserve: false,
+        };
+        let qcost = lane_cost_bytes(&cfg, &q, 5);
+        assert!(qcost * 6 < lane_cost_bytes(&cfg, &dense, 5), "4-bit pages ~8x smaller");
+        // Rows clamp to max_seq.
+        assert_eq!(
+            lane_cost_bytes(&cfg, &dense, 10_000),
+            lane_cost_bytes(&cfg, &dense, cfg.max_seq)
+        );
+    }
+
+    #[test]
+    fn pool_reserve_release() {
+        let mut pool = KvPool::new(Some(100));
+        assert!(pool.try_reserve(60));
+        assert!(!pool.try_reserve(50), "over budget must defer");
+        assert!(pool.try_reserve(40));
+        pool.release(60);
+        assert_eq!(pool.reserved(), 40);
+        assert!(pool.try_reserve(60));
+        // Unbounded pool never defers.
+        let mut open = KvPool::new(None);
+        assert!(open.try_reserve(usize::MAX / 2));
+        // Progress guarantee: unchecked reservation may exceed budget.
+        let mut tight = KvPool::new(Some(10));
+        tight.reserve_unchecked(50);
+        assert_eq!(tight.reserved(), 50);
+    }
+
+    #[test]
+    fn quant_params_clamp_and_round() {
+        let p = KvQuantParams::new(0, f32::NAN, f32::INFINITY);
+        assert_eq!(p.bits, 1);
+        assert!(p.scale > 0.0 && p.scale.is_finite());
+        assert_eq!(p.mean, 0.0);
+        let p = KvQuantParams::new(12, 1.0, 0.5);
+        assert_eq!(p.bits, 8);
+        assert_eq!(p.scale, f16_round(1.0));
+    }
+}

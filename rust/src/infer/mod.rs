@@ -1,12 +1,19 @@
 //! Quantized inference: the mixed-precision bit-packed matvec/GEMM
-//! kernels (paper Appendix A, CPU adaptation), the KV-cached batched
-//! decode engine with chunked prefill, and the continuous-batching
-//! request server with budgeted prefill scheduling.
+//! kernels (paper Appendix A, CPU adaptation), the paged
+//! (optionally-quantized) KV cache with pool-budget admission
+//! accounting, the KV-cached batched decode engine with chunked prefill,
+//! and the continuous-batching request server with budgeted prefill
+//! scheduling.
 
 pub mod engine;
+pub mod kv;
 pub mod matvec;
 pub mod server;
 
-pub use engine::{Engine, KvCache};
+pub use engine::Engine;
+pub use kv::{
+    lane_cost_bytes, KvCache, KvCacheConfig, KvLayerQuant, KvPool, KvQuantParams, KvQuantSpec,
+    KV_PAGE_ROWS,
+};
 pub use matvec::{dense_matmul, dense_matvec, MatvecPlan, QuantMatvec, GEMM_ROW_TILE};
 pub use server::{serve, serve_threaded, serve_with, Request, Response, ServeConfig, ServeStats};

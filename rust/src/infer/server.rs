@@ -25,7 +25,8 @@ use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::infer::engine::{argmax, Engine, KvCache};
+use crate::infer::engine::{argmax, Engine};
+use crate::infer::kv::{lane_cost_bytes, KvCache, KvPool};
 use crate::infer::matvec::GEMM_ROW_TILE;
 
 #[derive(Clone, Debug)]
@@ -63,11 +64,28 @@ pub struct ServeConfig {
     /// Lanes that don't fit the budget simply idle for the iteration
     /// (their chunk is empty); decode tokens never count against it.
     pub chunk_budget: usize,
+    /// Total KV page-pool budget in bytes (`None` = unbounded). Before
+    /// admitting a request the scheduler reserves its *worst-case* KV
+    /// footprint (`infer::kv::lane_cost_bytes` over the rows it can ever
+    /// occupy, under the engine's KV cache configuration) against this
+    /// budget; requests that don't fit wait in the queue until a
+    /// retiring lane releases its reservation — admission is deferred,
+    /// never revoked, so no lane is ever evicted mid-decode. A request
+    /// whose worst case alone exceeds the whole budget is admitted when
+    /// the pool is empty (running it solo is the only way to make
+    /// progress). The KV cache *mode* (page size, quantized bit widths)
+    /// lives on the `Engine`, keeping serve == generate token-identical.
+    pub kv_budget_bytes: Option<usize>,
 }
 
 impl ServeConfig {
     pub fn new(max_batch: usize) -> ServeConfig {
-        ServeConfig { max_batch, prefill_chunk: GEMM_ROW_TILE, chunk_budget: 2 * GEMM_ROW_TILE }
+        ServeConfig {
+            max_batch,
+            prefill_chunk: GEMM_ROW_TILE,
+            chunk_budget: 2 * GEMM_ROW_TILE,
+            kv_budget_bytes: None,
+        }
     }
 }
 
@@ -105,6 +123,12 @@ pub struct ServeStats {
     /// Mean tokens fed per iteration — how full the batch ran (with
     /// chunked prefill this can exceed the slot count).
     pub mean_batch_occupancy: f64,
+    /// Most lanes resident in any single iteration — the number a KV
+    /// memory budget caps (0 for the threaded baseline).
+    pub peak_lanes: usize,
+    /// Admissions deferred because the KV pool was exhausted (a request
+    /// can defer repeatedly; this counts deferral events).
+    pub kv_deferrals: usize,
 }
 
 impl std::fmt::Display for ServeStats {
@@ -125,7 +149,14 @@ impl std::fmt::Display for ServeStats {
             self.engine_tps
         )?;
         if self.steps > 0 {
-            write!(f, ", batch occupancy {:.2} over {} steps", self.mean_batch_occupancy, self.steps)?;
+            write!(
+                f,
+                ", batch occupancy {:.2} over {} steps (peak {} lanes)",
+                self.mean_batch_occupancy, self.steps, self.peak_lanes
+            )?;
+        }
+        if self.kv_deferrals > 0 {
+            write!(f, ", {} KV-pool deferrals", self.kv_deferrals)?;
         }
         Ok(())
     }
@@ -145,6 +176,8 @@ fn finalize_stats(
     engine_tokens: usize,
     prompt_tokens: usize,
     steps: usize,
+    peak_lanes: usize,
+    kv_deferrals: usize,
 ) -> ServeStats {
     let mut lats: Vec<Duration> = responses.iter().map(|r| r.latency).collect();
     // TTFT percentiles cover only responses that produced a token:
@@ -175,6 +208,8 @@ fn finalize_stats(
         } else {
             engine_tokens as f64 / steps as f64
         },
+        peak_lanes,
+        kv_deferrals,
     }
 }
 
@@ -190,6 +225,9 @@ struct ActiveSeq {
     max_new: usize,
     out: Vec<u32>,
     ttft: Option<Duration>,
+    /// Worst-case KV bytes reserved against the pool at admission,
+    /// released verbatim at retirement.
+    kv_cost: usize,
 }
 
 impl ActiveSeq {
@@ -232,20 +270,55 @@ pub fn serve_with(
     let chunk_budget = cfg.chunk_budget.max(1);
     let max_seq = engine.config.max_seq;
     let mut queue: VecDeque<Request> = requests.into_iter().collect();
+    let mut pool = KvPool::new(cfg.kv_budget_bytes);
     let mut active: Vec<ActiveSeq> = Vec::new();
     let mut caches: Vec<KvCache> = Vec::new(); // index-aligned with `active`
     let mut responses: Vec<Response> = Vec::new();
     let mut steps = 0usize;
     let mut engine_tokens = 0usize;
     let mut prompt_tokens = 0usize;
+    let mut peak_lanes = 0usize;
+    let mut kv_deferrals = 0usize;
+    // Counts deferral EPISODES (one per request that had to wait), not
+    // wait iterations — the head request re-checks the pool every
+    // iteration and would otherwise inflate the stat by decode length.
+    let mut last_deferred: Option<usize> = None;
 
     loop {
-        // Admission: fill free slots from the queue.
+        // Admission: fill free slots from the queue, in arrival order,
+        // reserving each lane's worst-case KV footprint against the pool
+        // first. A request the pool can't hold waits (admission is
+        // deferred, never reordered past — FIFO keeps it deterministic
+        // and starvation-free) until retirements release budget; the
+        // sole exception is a request too big for the whole budget,
+        // which is admitted alone rather than deadlocking the queue.
         while active.len() < max_batch {
             let Some(req) = queue.pop_front() else { break };
             // One source of truth for the admission rule: whatever
             // Engine::admit_prompt keeps is what this scheduler feeds.
             let keep = engine.admit_prompt(&req.prompt).len();
+            // Worst-case cache rows this lane can ever occupy: the
+            // prompt plus every decode step that feeds a token (the
+            // final generated token is emitted, never fed), clamped to
+            // the positional table — `generate`'s stopping rule.
+            let rows_worst = (keep + req.max_new.saturating_sub(1)).min(max_seq);
+            let kv_cost = if req.max_new == 0 {
+                0 // completes at admission; never builds a cache
+            } else {
+                lane_cost_bytes(&engine.config, engine.kv_config(), rows_worst)
+            };
+            if !pool.try_reserve(kv_cost) {
+                if active.is_empty() && pool.reserved() == 0 {
+                    pool.reserve_unchecked(kv_cost); // solo over-budget lane
+                } else {
+                    if last_deferred != Some(req.id) {
+                        kv_deferrals += 1;
+                        last_deferred = Some(req.id);
+                    }
+                    queue.push_front(req);
+                    break;
+                }
+            }
             let mut prompt = req.prompt;
             prompt.truncate(keep);
             let mut seq = ActiveSeq {
@@ -255,6 +328,7 @@ pub fn serve_with(
                 max_new: req.max_new,
                 out: Vec::new(),
                 ttft: None,
+                kv_cost,
             };
             if seq.max_new == 0 {
                 let now = t0.elapsed();
@@ -269,6 +343,7 @@ pub fn serve_with(
                     let now = t0.elapsed();
                     let ttft = seq.ttft.unwrap();
                     responses.push(Response { id: seq.id, tokens: seq.out, latency: now, ttft });
+                    pool.release(seq.kv_cost);
                     continue;
                 }
             }
@@ -278,6 +353,7 @@ pub fn serve_with(
         if active.is_empty() {
             break;
         }
+        peak_lanes = peak_lanes.max(active.len());
 
         // Plan this iteration's chunks: decode lanes always feed their
         // single next token (never budget-limited — starving decode is
@@ -331,6 +407,7 @@ pub fn serve_with(
             if retired[i] {
                 let done = active.swap_remove(i);
                 caches.swap_remove(i);
+                pool.release(done.kv_cost);
                 let ttft = done.ttft.expect("retired lanes emitted at least one token");
                 responses.push(Response {
                     id: done.id,
@@ -343,7 +420,15 @@ pub fn serve_with(
     }
 
     responses.sort_by_key(|r| r.id);
-    let stats = finalize_stats(&responses, t0.elapsed(), engine_tokens, prompt_tokens, steps);
+    let stats = finalize_stats(
+        &responses,
+        t0.elapsed(),
+        engine_tokens,
+        prompt_tokens,
+        steps,
+        peak_lanes,
+        kv_deferrals,
+    );
     (responses, stats)
 }
 
@@ -389,7 +474,7 @@ pub fn serve_threaded(
     let prompt_tokens: usize = done.iter().map(|(_, _, p)| p).sum();
     let mut responses: Vec<Response> = done.into_iter().map(|(r, _, _)| r).collect();
     responses.sort_by_key(|r| r.id);
-    let stats = finalize_stats(&responses, t0.elapsed(), engine_tokens, prompt_tokens, 0);
+    let stats = finalize_stats(&responses, t0.elapsed(), engine_tokens, prompt_tokens, 0, 0, 0);
     (responses, stats)
 }
 
@@ -481,7 +566,7 @@ mod tests {
         for (prefill_chunk, chunk_budget) in
             [(1usize, usize::MAX), (4, 8), (32, 64), (3, 5), (16, 1)]
         {
-            let cfg = ServeConfig { max_batch: 4, prefill_chunk, chunk_budget };
+            let cfg = ServeConfig { prefill_chunk, chunk_budget, ..ServeConfig::new(4) };
             let (resps, stats) = serve_with(&engine, reqs.clone(), cfg);
             for (r, want) in resps.iter().zip(&expected) {
                 assert_eq!(
@@ -524,6 +609,79 @@ mod tests {
         );
         assert_eq!(resps[0].tokens, direct);
         assert_eq!(resps[0].ttft, resps[0].latency);
+    }
+
+    #[test]
+    fn kv_budget_defers_admission_without_changing_tokens() {
+        // The pool-exhaustion contract: a KV byte budget throttles how
+        // many lanes run concurrently (peak_lanes) but every request
+        // still completes with tokens identical to a solo generate() —
+        // admission is deferred, never evicted, and scheduling stays
+        // deterministic.
+        let engine = tiny_engine();
+        let mut rng = Rng::new(194);
+        let reqs: Vec<Request> = (0..6)
+            .map(|id| {
+                let plen = 2 + rng.below(6);
+                let prompt: Vec<u32> = (0..plen).map(|_| rng.below(32) as u32).collect();
+                Request { id, prompt, max_new: 3 + rng.below(5) }
+            })
+            .collect();
+        let expected: Vec<Vec<u32>> = reqs
+            .iter()
+            .map(|r| engine.generate(&r.prompt, r.max_new))
+            .collect();
+        // Budget sized for roughly two worst-case lanes.
+        let worst = crate::infer::kv::lane_cost_bytes(
+            &engine.config,
+            engine.kv_config(),
+            engine.config.max_seq,
+        );
+        let open = serve_with(&engine, reqs.clone(), ServeConfig::new(6));
+        let tight_cfg = ServeConfig { kv_budget_bytes: Some(2 * worst), ..ServeConfig::new(6) };
+        let tight = serve_with(&engine, reqs.clone(), tight_cfg);
+        for ((r, want), label) in tight.0.iter().zip(&expected).zip(std::iter::repeat("tight")) {
+            assert_eq!(r.tokens, *want, "{label}: request {} diverged from generate()", r.id);
+        }
+        assert_eq!(tight.1.completed, 6);
+        assert!(tight.1.peak_lanes <= 2, "budget for 2 lanes admitted {}", tight.1.peak_lanes);
+        assert!(
+            tight.1.peak_lanes < open.1.peak_lanes,
+            "tight budget must cap concurrency below the open pool ({} vs {})",
+            tight.1.peak_lanes,
+            open.1.peak_lanes
+        );
+        assert!(tight.1.kv_deferrals > 0, "exhaustion must be visible in stats");
+        assert_eq!(open.1.kv_deferrals, 0);
+        // Determinism of the deferral schedule itself.
+        let again = serve_with(&engine, reqs.clone(), tight_cfg);
+        assert_eq!(again.1.peak_lanes, tight.1.peak_lanes);
+        assert_eq!(again.1.steps, tight.1.steps);
+        for (a, b) in again.0.iter().zip(&tight.0) {
+            assert_eq!(a.tokens, b.tokens);
+        }
+    }
+
+    #[test]
+    fn oversized_lane_is_admitted_solo_rather_than_deadlocking() {
+        // A single request whose worst case exceeds the whole budget
+        // must still run (alone) — deferral forever would hang the queue.
+        let engine = tiny_engine();
+        let reqs = vec![
+            Request { id: 0, prompt: vec![1, 2, 3], max_new: 10 },
+            Request { id: 1, prompt: vec![4], max_new: 2 },
+        ];
+        let expected: Vec<Vec<u32>> = reqs
+            .iter()
+            .map(|r| engine.generate(&r.prompt, r.max_new))
+            .collect();
+        let cfg = ServeConfig { kv_budget_bytes: Some(1), ..ServeConfig::new(4) };
+        let (resps, stats) = serve_with(&engine, reqs, cfg);
+        assert_eq!(stats.completed, 2);
+        assert_eq!(stats.peak_lanes, 1, "1-byte budget must serialize lanes");
+        for (r, want) in resps.iter().zip(&expected) {
+            assert_eq!(r.tokens, *want, "request {}", r.id);
+        }
     }
 
     #[test]

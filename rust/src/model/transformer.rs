@@ -202,38 +202,65 @@ fn attention_head(q: &Tensor, k: &Tensor, v: &Tensor) -> (Tensor, Tensor) {
     (ctx, probs)
 }
 
+/// Row source for cached attention: hands back the head slice
+/// `[h0, h0 + buf.len())` of cache row `ti`. Dense backings return a
+/// borrow straight out of their storage (zero copy — the hot decode
+/// path pays nothing for the abstraction); quantized KV pages decode
+/// codes into the caller's scratch `buf` and return that — the fused
+/// dequant that lets [`attend_kv`] read packed pages without densifying
+/// a lane's cache. The unified `'a` ties the return to whichever of
+/// `self`/`buf` actually backs it.
+pub trait KvRows {
+    fn head_slice<'a>(&'a self, ti: usize, h0: usize, buf: &'a mut [f32]) -> &'a [f32];
+}
+
+/// A flat row-major (≥t×width) f32 buffer with head-interleaved columns
+/// — the [`KvRows`] backing for contiguous dense caches.
+pub struct FlatKvRows<'b> {
+    pub buf: &'b [f32],
+    pub width: usize,
+}
+
+impl KvRows for FlatKvRows<'_> {
+    #[inline]
+    fn head_slice<'a>(&'a self, ti: usize, h0: usize, buf: &'a mut [f32]) -> &'a [f32] {
+        let off = ti * self.width + h0;
+        &self.buf[off..off + buf.len()]
+    }
+}
+
 /// Causal attention for ONE query position against a cached K/V prefix —
 /// the helper shared by the decode engine's `step_batch` and chunked
 /// `prefill_batch` paths. Both lean on it accumulating in exactly this
 /// order (f32 score dots, max-subtracted softmax, value accumulation in
 /// cache order) for their bit-identity contract: a position's context
 /// depends only on its query and the cache contents up to `t`, never on
-/// how many positions were fed in the same engine call. The training
-/// path's [`attention_head`] keeps its own f64-dot variant and agrees
-/// with this one only to rounding tolerance.
+/// how many positions were fed in the same engine call, how the cache
+/// rows are paged, or what backing stores them ([`KvRows`] impls only
+/// materialize values; the dot/softmax op order is fixed here). The
+/// training path's [`attention_head`] keeps its own f64-dot variant and
+/// agrees with this one only to rounding tolerance.
 ///
-/// `kbuf`/`vbuf` are flat row-major (≥t×e) cache buffers with
-/// head-interleaved columns; `q` is one e-wide query row; the window is
-/// rows `0..t`.
-pub fn attend_cached(
+/// `q` is one e-wide query row; the window is cache rows `0..t`.
+pub fn attend_kv(
     q: &[f32],
-    kbuf: &[f32],
-    vbuf: &[f32],
+    k: &impl KvRows,
+    v: &impl KvRows,
     t: usize,
     e: usize,
     heads: usize,
     dh: usize,
 ) -> Vec<f32> {
     debug_assert_eq!(q.len(), e);
-    debug_assert!(kbuf.len() >= t * e && vbuf.len() >= t * e);
     let mut ctx = vec![0f32; e];
+    let mut buf = vec![0f32; dh];
     let scale = 1.0 / (dh as f32).sqrt();
     for h in 0..heads {
         let qh = &q[h * dh..(h + 1) * dh];
         let mut scores = Vec::with_capacity(t);
         let mut maxs = f32::NEG_INFINITY;
         for ti in 0..t {
-            let kh = &kbuf[ti * e + h * dh..ti * e + (h + 1) * dh];
+            let kh = k.head_slice(ti, h * dh, &mut buf);
             let s: f32 = qh.iter().zip(kh).map(|(&a, &b)| a * b).sum::<f32>() * scale;
             scores.push(s);
             maxs = maxs.max(s);
@@ -243,16 +270,40 @@ pub fn attend_cached(
             *s = (*s - maxs).exp();
             denom += *s;
         }
-        let ctx_h = &mut ctx[h * dh..(h + 1) * dh];
         for ti in 0..t {
             let p = scores[ti] / denom;
-            let vh = &vbuf[ti * e + h * dh..ti * e + (h + 1) * dh];
+            let vh = v.head_slice(ti, h * dh, &mut buf);
+            let ctx_h = &mut ctx[h * dh..(h + 1) * dh];
             for (c, &vv) in ctx_h.iter_mut().zip(vh) {
                 *c += p * vv;
             }
         }
     }
     ctx
+}
+
+/// [`attend_kv`] over flat contiguous (≥t×e) K/V buffers — the
+/// historical entry point, kept so callers with plain slices (and the
+/// training-path agreement test) don't build views by hand.
+pub fn attend_cached(
+    q: &[f32],
+    kbuf: &[f32],
+    vbuf: &[f32],
+    t: usize,
+    e: usize,
+    heads: usize,
+    dh: usize,
+) -> Vec<f32> {
+    debug_assert!(kbuf.len() >= t * e && vbuf.len() >= t * e);
+    attend_kv(
+        q,
+        &FlatKvRows { buf: kbuf, width: e },
+        &FlatKvRows { buf: vbuf, width: e },
+        t,
+        e,
+        heads,
+        dh,
+    )
 }
 
 fn attention_head_backward(

@@ -1,0 +1,134 @@
+#!/usr/bin/env python3
+"""CI regression gate for BENCH_kv.json (written by `cargo bench --bench bench_kv`).
+
+Two layers of checks:
+
+1. Within-run invariants — always enforced, no baseline needed:
+   - paged-dense admits at least as many peak lanes as the seed-style
+     flat accounting at the same KV byte budget;
+   - quantized pages admit at least as many as paged-dense;
+   - every arm completed every request (deferral must not drop work);
+   - quantized-KV perplexity drift stays within the documented tolerance
+     recorded in the artifact itself.
+
+2. Baseline comparison — when a committed BENCH_kv.json is supplied:
+   numeric fields under "gate.higher_better" may not drop, and fields
+   under "gate.lower_better" may not rise, by more than --max-regression
+   (default 20%). The bench only publishes deterministic fields (peak
+   lanes, perplexity drift) into "gate"; wall-clock throughput stays
+   informational in "arms" because shared-runner variance would flake
+   any hard threshold.
+
+Usage:
+    tools/check_bench_kv.py BENCH_kv.json [baseline.json] [--max-regression 0.20]
+
+Exit code 0 = green, 1 = regression, 2 = malformed input.
+"""
+
+import argparse
+import json
+import sys
+
+
+def fail(msg: str) -> None:
+    print(f"FAIL: {msg}")
+    sys.exit(1)
+
+
+def within_run_checks(cur: dict) -> None:
+    arms = cur["arms"]
+    flat = arms["dense_flat"]
+    dense = arms["paged_dense"]
+    quant = arms["paged_quant"]
+
+    if dense["peak_lanes"] < flat["peak_lanes"]:
+        fail(
+            f"paged-dense peak lanes {dense['peak_lanes']} < flat accounting "
+            f"{flat['peak_lanes']} at the same budget"
+        )
+    if quant["peak_lanes"] < dense["peak_lanes"]:
+        fail(
+            f"quantized-KV peak lanes {quant['peak_lanes']} < paged-dense "
+            f"{dense['peak_lanes']} at the same budget"
+        )
+    if quant["peak_lanes"] <= flat["peak_lanes"]:
+        fail(
+            "quantized paging must strictly beat the seed's flat reservation "
+            f"({quant['peak_lanes']} vs {flat['peak_lanes']} peak lanes)"
+        )
+    expected = cur["requests"]
+    for name, arm in arms.items():
+        if arm["completed"] != expected:
+            fail(f"arm {name} completed {arm['completed']}/{expected} requests")
+
+    ppl = cur["ppl"]
+    if ppl["rel_drift"] > ppl["documented_tol"]:
+        fail(
+            f"quantized-KV perplexity drift {ppl['rel_drift']:.4f} exceeds the "
+            f"documented tolerance {ppl['documented_tol']}"
+        )
+    print(
+        "within-run OK: peak lanes "
+        f"{flat['peak_lanes']} (flat) <= {dense['peak_lanes']} (paged) <= "
+        f"{quant['peak_lanes']} (quant); ppl drift {ppl['rel_drift']:.4f}"
+    )
+
+
+def baseline_checks(cur: dict, base: dict, max_regression: float) -> None:
+    if base.get("model") != cur.get("model"):
+        # A silently-skipped comparison is a dead gate: fail loudly so the
+        # baseline gets regenerated under the preset CI actually runs
+        # (RADIO_BENCH_SMOKE=1 cargo bench --bench bench_kv).
+        fail(
+            f"baseline model {base.get('model')!r} != current {cur.get('model')!r}; "
+            "regenerate the committed BENCH_kv.json with the same preset as this run"
+        )
+    cur_gate, base_gate = cur.get("gate", {}), base.get("gate", {})
+    for direction, sign in (("higher_better", 1.0), ("lower_better", -1.0)):
+        for key, base_val in base_gate.get(direction, {}).items():
+            if key not in cur_gate.get(direction, {}):
+                fail(f"gate field {direction}.{key} missing from current run")
+            cur_val = cur_gate[direction][key]
+            if base_val == 0:
+                continue
+            # Positive change = improvement under either direction.
+            change = sign * (cur_val - base_val) / abs(base_val)
+            status = "ok" if change >= -max_regression else "REGRESSION"
+            print(f"  {direction}.{key}: {base_val} -> {cur_val} ({change:+.1%}) {status}")
+            if change < -max_regression:
+                fail(
+                    f"{direction}.{key} regressed {-change:.1%} "
+                    f"(limit {max_regression:.0%}): {base_val} -> {cur_val}"
+                )
+    print("baseline OK")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="fresh BENCH_kv.json from this run")
+    ap.add_argument("baseline", nargs="?", help="committed BENCH_kv.json to compare against")
+    ap.add_argument("--max-regression", type=float, default=0.20)
+    args = ap.parse_args()
+
+    try:
+        with open(args.current) as f:
+            cur = json.load(f)
+        within_run_checks(cur)
+    except (OSError, KeyError, json.JSONDecodeError) as e:
+        print(f"ERROR: cannot evaluate {args.current}: {e!r}")
+        sys.exit(2)
+
+    if args.baseline:
+        try:
+            with open(args.baseline) as f:
+                base = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"ERROR: cannot read baseline {args.baseline}: {e!r}")
+            sys.exit(2)
+        baseline_checks(cur, base, args.max_regression)
+    else:
+        print("no baseline supplied; within-run checks only")
+
+
+if __name__ == "__main__":
+    main()
