@@ -30,6 +30,7 @@ use crate::util::json::Json;
 /// Rate-independent calibration state for one quantizable matrix.
 #[derive(Clone, Debug)]
 pub struct MatCalib {
+    /// Which matrix these statistics describe.
     pub id: MatId,
     /// Sensitivity-ranked row grouping (fixed at warmup).
     pub grouping: Grouping,
@@ -64,6 +65,7 @@ pub struct CalibrationStats {
     pub calib_bits: f64,
     /// Gradient iterations accumulated into G²/X̄.
     pub iters: usize,
+    /// RNG seed calibration sampled minibatches with.
     pub seed: u64,
     /// Explained-variance fraction of the PCA sketch basis.
     pub pca_explained: f64,
@@ -75,6 +77,7 @@ pub struct CalibrationStats {
 /// target rate, plus the achieved rate and modeled distortion.
 #[derive(Clone, Debug)]
 pub struct RateAllocation {
+    /// The rate the allocation was solved for.
     pub target_bits: f64,
     /// Achieved average bits/weight of the integer assignment.
     pub rate: f64,
@@ -141,6 +144,8 @@ impl CalibrationStats {
 
     // ------------------------------------------------------ serialization
 
+    /// Write the `.radiocal` artifact (`RADIOCS1`; byte-level spec in
+    /// `docs/FORMATS.md`).
     pub fn save(&self, path: &Path) -> std::io::Result<()> {
         let mut f = BufWriter::new(std::fs::File::create(path)?);
         f.write_all(b"RADIOCS1")?;
@@ -172,6 +177,8 @@ impl CalibrationStats {
         f.flush()
     }
 
+    /// Read a `.radiocal` artifact; a reloaded artifact reproduces
+    /// allocations bit-for-bit (tested).
     pub fn load(path: &Path) -> std::io::Result<CalibrationStats> {
         let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
         let mut magic = [0u8; 8];

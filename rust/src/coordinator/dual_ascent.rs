@@ -16,12 +16,16 @@
 
 use crate::stats::distortion::{self, GroupRd};
 
+/// Solver knobs for the dual-ascent allocation.
 #[derive(Clone, Copy, Debug)]
 pub struct DualAscentConfig {
+    /// Maximum bits per group.
     pub bmax: f64,
     /// Dual step size β (paper: 2; normalized internally by total weights).
     pub beta: f64,
+    /// Rate-convergence tolerance (average bits).
     pub tol_bits: f64,
+    /// Iteration cap before the bisection fallback gives up.
     pub max_iters: usize,
 }
 
@@ -34,9 +38,13 @@ impl Default for DualAscentConfig {
 /// Result of the continuous allocation.
 #[derive(Clone, Debug)]
 pub struct Allocation {
+    /// Per-group fractional bit depths.
     pub bits: Vec<f64>,
+    /// Final dual variable V at convergence.
     pub dual: f64,
+    /// Solver iterations used.
     pub iters: usize,
+    /// Achieved average bits/weight.
     pub rate: f64,
 }
 
@@ -169,6 +177,7 @@ pub fn solve_integer(groups: &[GroupRd], target_rate: f64, cfg: &DualAscentConfi
 /// distortion — what the Allocate stage hands to Pack.
 #[derive(Clone, Debug)]
 pub struct IntegerAllocation {
+    /// Per-group integer bit depths.
     pub bits: Vec<u8>,
     /// Achieved average bits/weight of the integer assignment.
     pub rate: f64,

@@ -35,16 +35,22 @@ use crate::stats::moments::Welford;
 /// calibration windows.
 #[derive(Clone, Copy, Debug)]
 pub struct KvTensorStats {
+    /// Mean of the cached values.
     pub mean: f64,
+    /// Variance of the cached values (the allocator's S²).
     pub var: f64,
+    /// Values accumulated into the moments.
     pub count: u64,
 }
 
 /// Calibration-time KV statistics: one entry per layer for K and V.
 #[derive(Clone, Debug)]
 pub struct KvCalibStats {
+    /// Row width the stats were measured at (the model's `dim`).
     pub dim: usize,
+    /// Key-row moments, one per layer.
     pub k: Vec<KvTensorStats>,
+    /// Value-row moments, one per layer.
     pub v: Vec<KvTensorStats>,
 }
 

@@ -1,0 +1,434 @@
+//! The rate ladder: one model packed at N average bit rates off ONE
+//! calibration artifact, stored in ONE `.radio` container (`RADIOQM3`).
+//!
+//! The staged pipeline already makes every rate an O(allocate + pack)
+//! operation from a single [`CalibrationStats`]; the ladder materializes
+//! a chosen set of those operating points *together* so serving can
+//! treat rate as a runtime knob: pick a point per deployment, or run two
+//! points at once — a low-rate **draft** and a high-rate **target** —
+//! for self-speculative decoding (`infer::speculative`,
+//! `infer::server::serve_ladder`).
+//!
+//! Storage is shared where the points are identical: the heavy side
+//! parameters (embeddings, positional table, LayerNorms) appear once;
+//! each point carries only its packed bitstreams plus its own corrected
+//! biases (bias correction depends on the dequantized weights, so the
+//! tiny per-layer bias vectors are the one rate-dependent piece of the
+//! "side"). Materializing a point ([`RateLadder::model`]) is
+//! bit-identical to packing that rate directly (tested).
+//!
+//! Byte-level container spec: `docs/FORMATS.md`.
+
+use std::io::{BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::coordinator::calibration::CalibrationStats;
+use crate::coordinator::radio::Radio;
+use crate::infer::Engine;
+use crate::model::weights::{MatId, Role, SideParams, Weights};
+use crate::quant::bitpack::PackedMatrix;
+use crate::quant::format::{
+    read_matrix_records, write_end_of_matrices, write_matrix_record, QuantizedModel, MAGIC_QM2,
+    MAGIC_QM3,
+};
+
+/// One operating point of the ladder: the packed bitstreams and the
+/// rate-dependent corrected biases for a single target rate.
+#[derive(Clone, Debug)]
+pub struct RatePoint {
+    /// The rate this point was allocated for (bits/weight; fractional).
+    pub target_bits: f64,
+    /// Packed block matrices, in `matrix_ids()` order.
+    pub packed: Vec<(MatId, PackedMatrix)>,
+    /// Corrected biases `b^q` per packed matrix (§3.2 — these depend on
+    /// the dequantized weights, so they cannot be shared across rates).
+    pub biases: Vec<(MatId, Vec<f32>)>,
+}
+
+impl RatePoint {
+    /// Achieved average payload bits/weight of this point.
+    pub fn avg_bits(&self) -> f64 {
+        let (mut bits, mut count) = (0f64, 0usize);
+        for (_, p) in &self.packed {
+            bits += p.payload_bits() as f64;
+            count += p.rows * p.cols;
+        }
+        bits / count.max(1) as f64
+    }
+
+    /// Extract a point from a fully materialized model, consuming it:
+    /// the packed bitstreams move in (no copy — they dominate a point's
+    /// footprint); only the small per-matrix biases are copied out of
+    /// the model's side parameters.
+    fn from_model(target_bits: f64, qm: QuantizedModel) -> RatePoint {
+        let biases = qm
+            .packed
+            .iter()
+            .map(|(id, _)| (*id, qm.base.bias(*id).clone()))
+            .collect();
+        RatePoint { target_bits, packed: qm.packed, biases }
+    }
+}
+
+/// N rate points of one model sharing one set of side parameters — the
+/// in-memory form of a `RADIOQM3` container.
+#[derive(Clone, Debug)]
+pub struct RateLadder {
+    /// Shared side parameters. Block-matrix biases stored here are
+    /// placeholders only: [`RateLadder::model`] overrides every one of
+    /// them with the selected point's corrected biases.
+    pub base: SideParams,
+    /// Operating points, sorted ascending by `target_bits`.
+    pub points: Vec<RatePoint>,
+}
+
+impl RateLadder {
+    /// Allocate + pack `rates` off one calibration artifact. Each point
+    /// is produced by the exact [`Radio::pack`] path a direct
+    /// single-rate run would take (same `RadioConfig` quantizer family,
+    /// `bmax`, mixed-depth setting), so `ladder.model(i)` is
+    /// bit-identical to packing `rates[i]` directly — tested. Rates are
+    /// sorted ascending and deduplicated.
+    pub fn build(
+        radio: &Radio,
+        w: &Weights,
+        stats: &CalibrationStats,
+        rates: &[f64],
+    ) -> RateLadder {
+        assert!(!rates.is_empty(), "a ladder needs at least one rate point");
+        let mut rates = rates.to_vec();
+        rates.sort_by(|a, b| a.partial_cmp(b).expect("NaN rate"));
+        rates.dedup();
+        let base = SideParams::from_weights(w);
+        let points = rates
+            .iter()
+            .map(|&r| {
+                let alloc = stats.allocate(r, radio.cfg.bmax, radio.cfg.mixed_depth);
+                RatePoint::from_model(r, radio.pack(w, stats, &alloc))
+            })
+            .collect();
+        RateLadder { base, points }
+    }
+
+    /// Assemble a ladder from already-packed models (e.g. baselines
+    /// packed outside the staged pipeline). All models must share one
+    /// shape; their side parameters must differ only in the corrected
+    /// biases (which are captured per point — the shared `base` is taken
+    /// from the first model). Points are sorted ascending by the given
+    /// rate labels.
+    pub fn from_models(models: Vec<(f64, QuantizedModel)>) -> RateLadder {
+        assert!(!models.is_empty(), "a ladder needs at least one rate point");
+        let base = models[0].1.base.clone();
+        let mut points: Vec<RatePoint> = models
+            .into_iter()
+            .map(|(bits, qm)| {
+                assert_eq!(
+                    qm.base.config, base.config,
+                    "every ladder point must share one model shape"
+                );
+                RatePoint::from_model(bits, qm)
+            })
+            .collect();
+        points.sort_by(|a, b| a.target_bits.partial_cmp(&b.target_bits).expect("NaN rate"));
+        RateLadder { base, points }
+    }
+
+    /// Materialize point `i` as a standalone [`QuantizedModel`] — the
+    /// shared side parameters with the point's corrected biases applied.
+    pub fn model(&self, i: usize) -> QuantizedModel {
+        let p = &self.points[i];
+        let mut base = self.base.clone();
+        for (id, b) in &p.biases {
+            *base.bias_mut(*id) = b.clone();
+        }
+        QuantizedModel { base, packed: p.packed.clone() }
+    }
+
+    /// Build a decode engine for point `i`.
+    pub fn engine(&self, i: usize) -> Engine {
+        Engine::from_quantized(&self.model(i))
+    }
+
+    /// Index of the point whose target rate is closest to `bits`
+    /// (lowest-rate point wins ties).
+    pub fn nearest_point(&self, bits: f64) -> usize {
+        let mut best = 0usize;
+        for (i, p) in self.points.iter().enumerate() {
+            if (p.target_bits - bits).abs() < (self.points[best].target_bits - bits).abs() {
+                best = i;
+            }
+        }
+        best
+    }
+
+    // ------------------------------------------------------ serialization
+
+    /// Write the `RADIOQM3` container: every point's packed matrices and
+    /// corrected biases, then the shared side parameters once.
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC_QM3)?;
+        f.write_all(&(self.points.len() as u32).to_le_bytes())?;
+        for p in &self.points {
+            f.write_all(&p.target_bits.to_le_bytes())?;
+            for (id, pm) in &p.packed {
+                write_matrix_record(&mut f, *id, pm)?;
+            }
+            write_end_of_matrices(&mut f)?;
+            f.write_all(&(p.biases.len() as u32).to_le_bytes())?;
+            for (id, b) in &p.biases {
+                f.write_all(&(id.layer as u32).to_le_bytes())?;
+                f.write_all(&[id.role.tag()])?;
+                f.write_all(&(b.len() as u32).to_le_bytes())?;
+                for &x in b {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+        }
+        self.base.write_to(&mut f)?;
+        f.flush()
+    }
+
+    /// Load a `.radio` container as a ladder. A `RADIOQM3` file yields
+    /// all its points; a single-point `RADIOQM2` file is accepted too
+    /// (a one-rung ladder labeled with its achieved rate), so every
+    /// historical artifact remains ladder-loadable.
+    pub fn load(path: &Path) -> std::io::Result<RateLadder> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic == MAGIC_QM3 {
+            return Self::read_body(&mut f);
+        }
+        if &magic != MAGIC_QM2 {
+            return Err(inv("bad magic: not a .radio container"));
+        }
+        let packed = read_matrix_records(&mut f)?;
+        let base = SideParams::read_from(&mut f)?;
+        let qm = QuantizedModel { base: base.clone(), packed };
+        let achieved = qm.avg_bits();
+        let point = RatePoint::from_model(achieved, qm);
+        Ok(RateLadder { base, points: vec![point] })
+    }
+
+    /// Parse a `RADIOQM3` body (the magic has been consumed) — shared
+    /// with `QuantizedModel::load`'s back-compat dispatch.
+    pub(crate) fn read_body<R: Read>(f: &mut R) -> std::io::Result<RateLadder> {
+        const PREALLOC_CAP: usize = 1 << 16;
+        let mut l1 = [0u8; 1];
+        let mut l4 = [0u8; 4];
+        let mut l8 = [0u8; 8];
+        f.read_exact(&mut l4)?;
+        let n_points = u32::from_le_bytes(l4) as usize;
+        let mut points: Vec<RatePoint> = Vec::with_capacity(n_points.min(PREALLOC_CAP));
+        for _ in 0..n_points {
+            f.read_exact(&mut l8)?;
+            let target_bits = f64::from_le_bytes(l8);
+            if !target_bits.is_finite() {
+                return Err(inv("non-finite rate-point label"));
+            }
+            let packed = read_matrix_records(f)?;
+            f.read_exact(&mut l4)?;
+            let n_bias = u32::from_le_bytes(l4) as usize;
+            let mut biases = Vec::with_capacity(n_bias.min(PREALLOC_CAP));
+            for _ in 0..n_bias {
+                f.read_exact(&mut l4)?;
+                let layer = u32::from_le_bytes(l4) as usize;
+                f.read_exact(&mut l1)?;
+                let role = Role::from_tag(l1[0]).ok_or_else(|| inv("bad role tag"))?;
+                f.read_exact(&mut l4)?;
+                let blen = u32::from_le_bytes(l4) as usize;
+                let mut b = Vec::with_capacity(blen.min(PREALLOC_CAP));
+                for _ in 0..blen {
+                    f.read_exact(&mut l4)?;
+                    b.push(f32::from_le_bytes(l4));
+                }
+                biases.push((MatId { layer, role }, b));
+            }
+            points.push(RatePoint { target_bits, packed, biases });
+        }
+        let base = SideParams::read_from(f)?;
+        // Validate bias records against the (now known) model shape:
+        // `model()` indexes layers and overwrites fixed-length vectors,
+        // so a corrupt record must fail here, not panic there.
+        let cfg = &base.config;
+        for p in &points {
+            for (id, b) in &p.biases {
+                if id.layer >= cfg.layers {
+                    return Err(inv(format!(
+                        "bias layer {} out of range for {}-layer config",
+                        id.layer, cfg.layers
+                    )));
+                }
+                let want = match id.role {
+                    Role::Up => cfg.mlp,
+                    _ => cfg.dim,
+                };
+                if b.len() != want {
+                    return Err(inv(format!(
+                        "bias length {} != expected {want} for {:?}",
+                        b.len(),
+                        id.role
+                    )));
+                }
+            }
+        }
+        // Restore the ascending order every consumer assumes (the
+        // highest-rate point is the serving target): `points` is a
+        // public field, so a hand-assembled ladder may have been saved
+        // unsorted. Stable, and labels were validated finite above.
+        points.sort_by(|a, b| {
+            a.target_bits.partial_cmp(&b.target_bits).expect("labels validated finite")
+        });
+        Ok(RateLadder { base, points })
+    }
+}
+
+fn inv<E: std::fmt::Display>(e: E) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::gradients::NativeProvider;
+    use crate::coordinator::pipeline::rtn_quantize_model;
+    use crate::coordinator::radio::RadioConfig;
+    use crate::model::config::ModelConfig;
+    use crate::model::corpus::{Corpus, Domain};
+    use crate::util::rng::Rng;
+
+    fn tiny_setup() -> (Weights, Corpus) {
+        let cfg = ModelConfig { vocab: 256, dim: 16, heads: 2, layers: 2, mlp: 32, max_seq: 16 };
+        let mut rng = Rng::new(611);
+        let w = Weights::init_pretrained_like(cfg, &mut rng);
+        let corpus = Corpus::synthetic(612, Domain::Calib, 8 * 1024);
+        (w, corpus)
+    }
+
+    fn quick_radio() -> Radio {
+        Radio::new(RadioConfig {
+            rows_per_group: 8,
+            batch: 2,
+            seq: 16,
+            tokens_per_seq: 5,
+            iters: 2,
+            pca_k: 2,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn ladder_points_are_bit_identical_to_direct_packs() {
+        let (w, corpus) = tiny_setup();
+        let radio = quick_radio();
+        let mut provider = NativeProvider;
+        let (stats, _) = radio.calibrate(&w, &corpus, &mut provider, None);
+        let rates = [2.0, 3.0, 4.0];
+        let ladder = RateLadder::build(&radio, &w, &stats, &rates);
+        assert_eq!(ladder.points.len(), 3);
+        for (i, &r) in rates.iter().enumerate() {
+            let alloc = stats.allocate(r, radio.cfg.bmax, radio.cfg.mixed_depth);
+            let direct = radio.pack(&w, &stats, &alloc);
+            let from_ladder = ladder.model(i);
+            assert_eq!(ladder.points[i].target_bits, r);
+            assert!((from_ladder.avg_bits() - direct.avg_bits()).abs() < 1e-12);
+            let (a, b) = (from_ladder.to_weights(), direct.to_weights());
+            for (la, lb) in a.layers.iter().zip(&b.layers) {
+                assert_eq!(la.wq.data, lb.wq.data, "rate {r}");
+                assert_eq!(la.w2.data, lb.w2.data, "rate {r}");
+                assert_eq!(la.bq, lb.bq, "rate {r} corrected bias");
+                assert_eq!(la.b2, lb.b2, "rate {r} corrected bias");
+            }
+        }
+    }
+
+    #[test]
+    fn qm3_save_load_roundtrip_and_back_compat() {
+        let (w, corpus) = tiny_setup();
+        let radio = quick_radio();
+        let mut provider = NativeProvider;
+        let (stats, _) = radio.calibrate(&w, &corpus, &mut provider, None);
+        let ladder = RateLadder::build(&radio, &w, &stats, &[2.0, 4.0]);
+        let path = std::env::temp_dir().join("radio_test_ladder.radio");
+        ladder.save(&path).unwrap();
+
+        let back = RateLadder::load(&path).unwrap();
+        assert_eq!(back.points.len(), 2);
+        for (a, b) in ladder.points.iter().zip(&back.points) {
+            assert_eq!(a.target_bits, b.target_bits);
+        }
+        for i in 0..2 {
+            let (x, y) = (ladder.model(i).to_weights(), back.model(i).to_weights());
+            for (la, lb) in x.layers.iter().zip(&y.layers) {
+                assert_eq!(la.wq.data, lb.wq.data, "point {i}");
+                assert_eq!(la.bq, lb.bq, "point {i}");
+            }
+        }
+        // Back-compat the other way: QuantizedModel::load on a QM3 file
+        // resolves to the highest-rate point.
+        let top = QuantizedModel::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert!((top.avg_bits() - ladder.model(1).avg_bits()).abs() < 1e-12);
+        assert_eq!(
+            top.to_weights().layers[0].wq.data,
+            ladder.model(1).to_weights().layers[0].wq.data
+        );
+    }
+
+    #[test]
+    fn qm2_files_load_as_single_rung_ladders() {
+        let (w, _) = tiny_setup();
+        let qm = rtn_quantize_model(&w, 4, 8);
+        let path = std::env::temp_dir().join("radio_test_ladder_qm2.radio");
+        qm.save(&path).unwrap();
+        let ladder = RateLadder::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(ladder.points.len(), 1);
+        assert!((ladder.points[0].target_bits - qm.avg_bits()).abs() < 1e-12);
+        assert_eq!(
+            ladder.model(0).to_weights().layers[0].wq.data,
+            qm.to_weights().layers[0].wq.data
+        );
+    }
+
+    #[test]
+    fn from_models_sorts_and_nearest_point_selects() {
+        let (w, _) = tiny_setup();
+        let q2 = rtn_quantize_model(&w, 2, 8);
+        let q6 = rtn_quantize_model(&w, 6, 8);
+        let ladder = RateLadder::from_models(vec![(6.0, q6.clone()), (2.0, q2.clone())]);
+        assert_eq!(ladder.points[0].target_bits, 2.0, "points sort ascending");
+        assert_eq!(ladder.points[1].target_bits, 6.0);
+        assert_eq!(ladder.nearest_point(1.0), 0);
+        assert_eq!(ladder.nearest_point(5.5), 1);
+        assert_eq!(ladder.nearest_point(4.0), 0, "ties go to the lower rate");
+        // Materialized points reproduce the input models.
+        assert_eq!(
+            ladder.model(0).to_weights().layers[0].wq.data,
+            q2.to_weights().layers[0].wq.data
+        );
+        assert_eq!(
+            ladder.model(1).to_weights().layers[1].w1.data,
+            q6.to_weights().layers[1].w1.data
+        );
+    }
+
+    #[test]
+    fn load_rejects_garbage_and_truncation() {
+        let p = std::env::temp_dir().join("radio_ladder_garbage.radio");
+        std::fs::write(&p, b"definitely not a ladder").unwrap();
+        assert!(RateLadder::load(&p).is_err());
+        let (w, corpus) = tiny_setup();
+        let radio = quick_radio();
+        let mut provider = NativeProvider;
+        let (stats, _) = radio.calibrate(&w, &corpus, &mut provider, None);
+        let ladder = RateLadder::build(&radio, &w, &stats, &[3.0]);
+        ladder.save(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() / 3]).unwrap();
+        assert!(RateLadder::load(&p).is_err());
+        assert!(QuantizedModel::load(&p).is_err());
+        let _ = std::fs::remove_file(p);
+    }
+}

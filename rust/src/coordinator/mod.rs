@@ -4,15 +4,24 @@
 //! backprop / XLA artifacts), and the quantization pipeline that
 //! dispatches Radio and the baselines.
 
+/// The serializable Calibrate-stage artifact and per-rate allocation.
 pub mod calibration;
+/// Dual-ascent bit allocation (Algorithm 1's inner solve).
 pub mod dual_ascent;
+/// Gradient providers for calibration (native backprop / XLA artifacts).
 pub mod gradients;
+/// Serve-side KV-cache bit allocation from calibration-time variances.
 pub mod kvquant;
+/// Multi-rate-point packing: N operating points off one artifact.
+pub mod ladder;
+/// Method dispatch for Radio and the baselines, with stage timings.
 pub mod pipeline;
+/// The staged Radio quantizer (Calibrate / Allocate / Pack).
 pub mod radio;
 
 pub use calibration::{CalibrationStats, MatCalib, RateAllocation};
 pub use gradients::{GradientProvider, NativeProvider};
 pub use kvquant::{allocate_kv_bits, calibrate_kv, kv_spec_for, KvCalibStats, KvTensorStats};
+pub use ladder::{RateLadder, RatePoint};
 pub use pipeline::{run_method, Method, PipelineResult, StageTimings};
 pub use radio::{CalibrationReport, PackSummary, Radio, RadioConfig, RadioReport};

@@ -21,14 +21,25 @@ use crate::quant::{rtn_quantize, ScaleRule};
 /// Every quantization method in the paper's comparison grid.
 #[derive(Clone, Debug)]
 pub enum Method {
-    Rtn { bits: u8, rows_per_group: usize },
+    /// Round-to-nearest at a flat bit depth.
+    Rtn {
+        /// Bits per weight.
+        bits: u8,
+        /// Rows per quantization group.
+        rows_per_group: usize,
+    },
+    /// GPTQ (Hessian-compensated rounding).
     Gptq(GptqConfig),
+    /// AWQ (activation-aware row scaling).
     Awq(AwqConfig),
+    /// OWQ (outlier rows kept in FP16).
     Owq(OwqConfig),
+    /// Radio (this paper).
     Radio(RadioConfig),
 }
 
 impl Method {
+    /// Display name used in tables (e.g. `Radio(3.0b)`).
     pub fn name(&self) -> String {
         match self {
             Method::Rtn { bits, .. } => format!("RTN({bits}b)"),
@@ -45,12 +56,16 @@ impl Method {
 /// under `pack`.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct StageTimings {
+    /// Calibrate-stage seconds (gradient iterations).
     pub calibrate: f64,
+    /// Allocate-stage seconds (dual-ascent solves).
     pub allocate: f64,
+    /// Pack-stage seconds (requantization + container writes).
     pub pack: f64,
 }
 
 impl StageTimings {
+    /// Total seconds across the three stages.
     pub fn total(&self) -> f64 {
         self.calibrate + self.allocate + self.pack
     }
@@ -68,9 +83,13 @@ impl std::fmt::Display for StageTimings {
 
 /// Outcome of one pipeline run.
 pub struct PipelineResult {
+    /// Method display name.
     pub method: String,
+    /// The packed model.
     pub model: QuantizedModel,
+    /// Total wall clock.
     pub seconds: f64,
+    /// Per-stage wall-clock split.
     pub stages: StageTimings,
 }
 

@@ -33,15 +33,18 @@ use crate::stats::pca::PcaBasis;
 use crate::util::rng::Rng;
 use crate::util::threadpool;
 
+/// Algorithm 1's hyperparameters.
 #[derive(Clone, Copy, Debug)]
 pub struct RadioConfig {
     /// Target average bits per weight R (fractional allowed: 2.1, 3.0 …).
     pub target_bits: f64,
+    /// Maximum bits per group.
     pub bmax: u8,
     /// Rows per quantization sub-group (paper's "group size").
     pub rows_per_group: usize,
     /// Calibration minibatch size (paper default 16).
     pub batch: usize,
+    /// Calibration sequence length.
     pub seq: usize,
     /// Subsampled tokens per sequence for the backprop sketch (paper 17).
     pub tokens_per_seq: usize,
@@ -57,12 +60,14 @@ pub struct RadioConfig {
     pub scale_rule: ScaleRule,
     /// Mixed-precision depths via dual ascent (false = flat R bits).
     pub mixed_depth: bool,
+    /// Apply §3.2 bias correction from the EMA layer-input means.
     pub bias_correct: bool,
     /// Reference rate for the Calibrate stage's intermediate quantized
     /// points. Deliberately decoupled from `target_bits` so calibration
     /// is rate-independent: one artifact serves every target rate, and a
     /// from-scratch run at any rate reproduces the artifact exactly.
     pub calib_bits: f64,
+    /// RNG seed for minibatch sampling and token subsampling.
     pub seed: u64,
 }
 
@@ -91,32 +96,44 @@ impl Default for RadioConfig {
 /// Per-iteration trace entry (drives Figure 4/5).
 #[derive(Clone, Debug)]
 pub struct IterTrace {
+    /// Calibration iteration (1-based).
     pub iter: usize,
+    /// Achieved rate of the allocation at this iteration.
     pub rate: f64,
     /// Modeled total distortion Σ d_n(B_n) under current statistics.
     pub model_distortion: f64,
 }
 
+/// Summary of a one-shot [`Radio::quantize`] run.
 #[derive(Debug)]
 pub struct RadioReport {
+    /// Gradient iterations executed.
     pub iters_run: usize,
+    /// Achieved average bits/weight of the packed model.
     pub final_rate: f64,
+    /// Per-iteration rate/distortion trace (Figures 4–5).
     pub trace: Vec<IterTrace>,
+    /// Wall clock of the whole run.
     pub seconds: f64,
+    /// Explained-variance fraction of the PCA sketch basis.
     pub pca_explained: f64,
 }
 
 /// Outcome of the Calibrate stage alone.
 #[derive(Clone, Debug)]
 pub struct CalibrationReport {
+    /// Gradient iterations executed.
     pub iters_run: usize,
+    /// Wall clock of the Calibrate stage.
     pub seconds: f64,
+    /// Explained-variance fraction of the PCA sketch basis.
     pub pca_explained: f64,
 }
 
 /// Summary returned by the streaming Pack stage (no resident model).
 #[derive(Clone, Debug)]
 pub struct PackSummary {
+    /// Matrix records written.
     pub matrices: usize,
     /// Average payload bits/weight of everything written.
     pub avg_bits: f64,
@@ -126,10 +143,12 @@ pub struct PackSummary {
 
 /// The Radio quantizer (Algorithm 1 driver).
 pub struct Radio {
+    /// The run's hyperparameters.
     pub cfg: RadioConfig,
 }
 
 impl Radio {
+    /// A quantizer with the given hyperparameters.
     pub fn new(cfg: RadioConfig) -> Radio {
         Radio { cfg }
     }

@@ -1,10 +1,16 @@
-//! Evaluation harnesses: perplexity (next-token prediction) and the
-//! synthetic downstream-task suite.
+//! Evaluation harnesses: perplexity (next-token prediction), the
+//! synthetic downstream-task suite, and speculative draft-quality
+//! qualification.
 
+/// Perplexity over deterministic corpus windows (dense + packed paths).
 pub mod perplexity;
+/// Draft/target greedy-agreement qualification for speculative decoding.
+pub mod spec;
+/// Synthetic downstream-task proxies.
 pub mod tasks;
 
 pub use perplexity::{
     perplexity, perplexity_engine, perplexity_packed, perplexity_packed_kv, perplexity_quantized,
 };
+pub use spec::draft_agreement;
 pub use tasks::{average_score, score_task, Task};

@@ -1,0 +1,128 @@
+//! Draft-quality qualification for speculative decoding: how often does
+//! a low-rate draft's greedy choice match the high-rate target's?
+//!
+//! Greedy speculative acceptance is exactly top-1 agreement — a proposal
+//! survives iff it IS the target's argmax — so measuring agreement over
+//! evaluation windows predicts the serving acceptance rate *before*
+//! committing a draft rate to a deployment. Qualify a `(draft, target)`
+//! pair here, the way `perplexity_packed_kv` qualifies a KV rate: when
+//! the draft rate drops too low its agreement (and therefore serving
+//! acceptance) collapses and speculation degrades to pure overhead —
+//! see DESIGN.md §Speculative decoding.
+
+use crate::infer::engine::argmax;
+use crate::infer::Engine;
+use crate::model::corpus::Corpus;
+use crate::util::threadpool::parallel_map;
+
+/// Fraction of window positions where `draft` and `target` pick the same
+/// greedy token, over `max_windows` evaluation windows of length `seq` —
+/// the predicted speculative acceptance rate of this draft/target pair.
+///
+/// Both engines run their deployment numerics (packed bitstreams, their
+/// own KV configurations) through one chunked forward per window
+/// ([`Engine::prefill_positions`]), so the number reflects exactly the
+/// comparison [`Engine::step_speculative`] performs per proposal.
+/// Deterministic; an engine agrees with itself at exactly 1.0 (tested).
+pub fn draft_agreement(
+    target: &Engine,
+    draft: &Engine,
+    corpus: &Corpus,
+    seq: usize,
+    max_windows: usize,
+) -> f64 {
+    assert_eq!(
+        target.config, draft.config,
+        "draft and target must share one model shape (self-speculative)"
+    );
+    assert!(
+        seq <= target.config.max_seq,
+        "eval window {seq} longer than positional table {}",
+        target.config.max_seq
+    );
+    let windows = corpus.eval_windows(seq, max_windows);
+    assert!(!windows.is_empty(), "corpus too small for evaluation");
+    let counts: Vec<(usize, usize)> = parallel_map(windows.len(), 1, |i| {
+        let (toks, _) = &windows[i];
+        let chunk: &[u32] = toks;
+        let mut tc = target.new_cache();
+        let mut dc = draft.new_cache();
+        let tl = target
+            .prefill_positions(&[chunk], std::slice::from_mut(&mut tc))
+            .pop()
+            .expect("one lane yields one logit list");
+        let dl = draft
+            .prefill_positions(&[chunk], std::slice::from_mut(&mut dc))
+            .pop()
+            .expect("one lane yields one logit list");
+        let agree = tl.iter().zip(&dl).filter(|(t, d)| argmax(t) == argmax(d)).count();
+        (agree, tl.len())
+    });
+    let agree: usize = counts.iter().map(|(a, _)| a).sum();
+    let total: usize = counts.iter().map(|(_, n)| n).sum();
+    agree as f64 / total.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pipeline::rtn_quantize_model;
+    use crate::model::config::ModelConfig;
+    use crate::model::corpus::Domain;
+    use crate::model::weights::Weights;
+    use crate::util::rng::Rng;
+
+    fn setup() -> (Engine, Corpus) {
+        let cfg = ModelConfig { vocab: 256, dim: 16, heads: 2, layers: 2, mlp: 32, max_seq: 32 };
+        let mut rng = Rng::new(701);
+        let w = Weights::init_pretrained_like(cfg, &mut rng);
+        let corpus = Corpus::synthetic(702, Domain::Calib, 8 * 1024);
+        (Engine::from_dense(&w), corpus)
+    }
+
+    #[test]
+    fn engine_fully_agrees_with_itself() {
+        let (engine, corpus) = setup();
+        // Same seed -> same weights, independent engine instance.
+        let mut r = Rng::new(701);
+        let twin = Engine::from_dense(&Weights::init_pretrained_like(engine.config, &mut r));
+        let a = draft_agreement(&engine, &twin, &corpus, 16, 4);
+        assert_eq!(a, 1.0, "identical weights must agree at every position");
+    }
+
+    #[test]
+    fn agreement_orders_draft_rates() {
+        // A higher-rate draft of the same model must agree with the
+        // target at least as often as a 1-bit draft (which is near
+        // garbage), and both land in [0, 1].
+        let cfg = ModelConfig { vocab: 256, dim: 16, heads: 2, layers: 2, mlp: 32, max_seq: 32 };
+        let mut rng = Rng::new(704);
+        let w = Weights::init_pretrained_like(cfg, &mut rng);
+        let corpus = Corpus::synthetic(705, Domain::Calib, 8 * 1024);
+        let target = Engine::from_dense(&w);
+        let strong = Engine::from_quantized(&rtn_quantize_model(&w, 8, 8));
+        let weak = Engine::from_quantized(&rtn_quantize_model(&w, 1, 8));
+        let a_strong = draft_agreement(&target, &strong, &corpus, 16, 6);
+        let a_weak = draft_agreement(&target, &weak, &corpus, 16, 6);
+        assert!((0.0..=1.0).contains(&a_strong));
+        assert!((0.0..=1.0).contains(&a_weak));
+        assert!(
+            a_strong >= a_weak,
+            "8-bit draft ({a_strong}) should agree at least as often as 1-bit ({a_weak})"
+        );
+        assert!(a_strong > 0.5, "8-bit quantization barely perturbs greedy choices");
+    }
+
+    #[test]
+    fn agreement_is_deterministic() {
+        let (engine, corpus) = setup();
+        let w2 = {
+            let mut r = Rng::new(706);
+            Weights::init_pretrained_like(engine.config, &mut r)
+        };
+        let other = Engine::from_dense(&w2);
+        let a = draft_agreement(&engine, &other, &corpus, 16, 4);
+        let b = draft_agreement(&engine, &other, &corpus, 16, 4);
+        assert_eq!(a, b);
+    }
+}

@@ -12,6 +12,7 @@ use crate::infer::engine::{argmax, Engine};
 use crate::model::corpus::Corpus;
 use crate::util::rng::Rng;
 
+/// The synthetic downstream tasks (Table 4b–c stand-ins).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Task {
     /// Given the first `k` characters of a frequent corpus word (with a
@@ -24,9 +25,11 @@ pub enum Task {
 }
 
 impl Task {
+    /// Every task, in scoring order.
     pub const ALL: [Task; 3] =
         [Task::WordCompletion, Task::NgramContinuation, Task::BoundaryDetection];
 
+    /// Short display name used in tables.
     pub fn name(&self) -> &'static str {
         match self {
             Task::WordCompletion => "WordComplete",

@@ -69,6 +69,7 @@ struct EngineLayer {
 
 /// The decode engine.
 pub struct Engine {
+    /// Shape of the model the engine was built from.
     pub config: ModelConfig,
     /// KV cache geometry/mode used by [`Engine::new_cache`] — one source
     /// of truth shared by `generate`, the serving scheduler, and the
@@ -323,6 +324,50 @@ impl Engine {
         out
     }
 
+    /// Chunked forward returning the logits after **every** chunk
+    /// position, per lane — the speculative-decoding verify primitive:
+    /// feeding `[pending, draft₀, …, draftₖ₋₁]` scores all k draft
+    /// positions in ONE target forward (GEMM-amortized like any prefill)
+    /// instead of k sequential steps. Caches advance by the full chunk
+    /// (provisional rows; reject a suffix with [`KvCache::truncate_to`]).
+    ///
+    /// Bit-identity: position `p`'s logits equal what
+    /// [`Engine::prefill_batch`] would return for a chunk ending at `p`
+    /// — same forward, same tied-head dot order — so a verify pass and a
+    /// step loop see identical numbers (the speculative token-identity
+    /// guarantee builds on this). Lanes with empty chunks return an
+    /// empty vector and their caches are untouched.
+    pub fn prefill_positions(
+        &self,
+        chunks: &[&[u32]],
+        caches: &mut [KvCache],
+    ) -> Vec<Vec<Vec<f32>>> {
+        let bn = chunks.len();
+        assert_eq!(bn, caches.len(), "one KV cache per sequence");
+        if bn == 0 {
+            return Vec::new();
+        }
+        let cfg = &self.config;
+        let row_off = row_offsets(chunks);
+        let xs = self.forward_chunk(chunks, caches, &row_off);
+        // Per-position final LN + tied head. Positions are independent;
+        // each logit uses the same `z · embed_row` dot order as the
+        // last-position head in `prefill_batch_masked`, so the two entry
+        // points agree bit-for-bit on shared positions.
+        let rows: Vec<Vec<f32>> = parallel_map(xs.len(), 1, |r| {
+            let z = ln_vec(&xs[r], &self.lnf_g, &self.lnf_b);
+            let mut row = vec![0f32; cfg.vocab];
+            for (vi, lr) in row.iter_mut().enumerate() {
+                *lr = z.iter().zip(self.embed.row(vi)).map(|(&a, &w)| a * w).sum();
+            }
+            row
+        });
+        let mut rows = rows.into_iter();
+        (0..bn)
+            .map(|b| (row_off[b]..row_off[b + 1]).map(|_| rows.next().unwrap()).collect())
+            .collect()
+    }
+
     /// The shared transformer body: embed every chunk position, run all
     /// blocks (GEMM linears + causal attention against each lane's
     /// cache), append each lane's K/V chunk per layer in one batched
@@ -547,6 +592,9 @@ fn row_offsets(chunks: &[&[u32]]) -> Vec<usize> {
     off
 }
 
+/// Index of the maximum element (first wins on ties) — the greedy
+/// decoding rule shared by `generate`, the server, and speculative
+/// verification.
 pub fn argmax(xs: &[f32]) -> usize {
     let mut best = 0;
     for (i, &x) in xs.iter().enumerate() {
@@ -752,6 +800,46 @@ mod tests {
                     assert_eq!(caches[b].v_flat(li), solo_cache.v_flat(li), "lane {b} V cache");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn prefill_positions_matches_step_loop_at_every_position() {
+        // The verify primitive: per-position logits from one chunked
+        // forward must equal the sequential step() loop's logits at
+        // every position (not just the last), dense and packed alike,
+        // and the final entry must equal prefill_batch's output.
+        let w = tiny_weights(197);
+        for engine in [
+            Engine::from_dense(&w),
+            Engine::from_quantized(&rtn_quantize_model(&w, 5, 8)),
+        ] {
+            let chunk: &[u32] = &[3, 1, 4, 1, 5, 9, 2];
+            let mut cache = engine.new_cache();
+            let all = engine
+                .prefill_positions(&[chunk], std::slice::from_mut(&mut cache))
+                .pop()
+                .unwrap();
+            assert_eq!(all.len(), chunk.len());
+            let mut solo_cache = engine.new_cache();
+            for (p, &t) in chunk.iter().enumerate() {
+                let step = engine.step(t, &mut solo_cache);
+                assert_eq!(all[p], step, "position {p} diverged from step loop");
+            }
+            assert_eq!(cache.len, solo_cache.len);
+            let mut batch_cache = engine.new_cache();
+            let last = engine
+                .prefill_batch(&[chunk], std::slice::from_mut(&mut batch_cache))
+                .pop()
+                .unwrap();
+            assert_eq!(all.last().unwrap(), &last, "tied-head paths diverged");
+            // Empty chunks yield empty logit lists and untouched caches.
+            let mut caches = vec![engine.new_cache(), engine.new_cache()];
+            let chunks: [&[u32]; 2] = [&[], &[7, 8]];
+            let out = engine.prefill_positions(&chunks, &mut caches);
+            assert!(out[0].is_empty());
+            assert_eq!(out[1].len(), 2);
+            assert_eq!(caches[0].len, 0);
         }
     }
 

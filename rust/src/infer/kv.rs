@@ -43,8 +43,11 @@ pub const KV_PAGE_ROWS: usize = 16;
 /// weight matrices use).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct KvQuantParams {
+    /// Code width in bits (clamped to [1, 8] by [`KvQuantParams::new`]).
     pub bits: u8,
+    /// Dequantization scale S (FP16-rounded, strictly positive).
     pub scale: f32,
+    /// Dequantization mean µ (FP16-rounded).
     pub mean: f32,
 }
 
@@ -70,7 +73,9 @@ impl KvQuantParams {
 /// (their variances differ, and the allocator exploits it).
 #[derive(Clone, Debug, PartialEq)]
 pub struct KvLayerQuant {
+    /// Quantizer for the layer's key rows.
     pub k: KvQuantParams,
+    /// Quantizer for the layer's value rows.
     pub v: KvQuantParams,
 }
 
@@ -225,6 +230,47 @@ impl PageStore {
         }
     }
 
+    /// Drop every row past `rows`: whole pages beyond the new tail are
+    /// freed outright (their heap goes with them); the new tail page is
+    /// truncated in place. Quantized tails also mask the stale bits of
+    /// the final partial word — `BitWriter` appends OR into the open
+    /// word, so a later `push_row` must find zeros exactly where a
+    /// never-extended page would have them (the rollback bit-identity
+    /// contract speculative decoding relies on).
+    fn truncate_rows(&mut self, rows: usize) {
+        if self.rows() <= rows {
+            return;
+        }
+        let (page_rows, width) = (self.page_rows, self.width);
+        let keep_pages = rows.div_ceil(page_rows);
+        match &mut self.kind {
+            StoreKind::Dense { pages } => {
+                pages.truncate(keep_pages);
+                if let Some(last) = pages.last_mut() {
+                    let tail_rows = rows - (keep_pages - 1) * page_rows;
+                    last.truncate(tail_rows * width);
+                }
+            }
+            StoreKind::Quant { pages, params, .. } => {
+                pages.truncate(keep_pages);
+                if let Some(last) = pages.last_mut() {
+                    let tail_rows = rows - (keep_pages - 1) * page_rows;
+                    if last.rows > tail_rows {
+                        last.rows = tail_rows;
+                        let bit_len = tail_rows * width * params.bits as usize;
+                        last.words.truncate(bit_len.div_ceil(64));
+                        let rem = bit_len & 63;
+                        if rem != 0 {
+                            if let Some(w) = last.words.last_mut() {
+                                *w &= (1u64 << rem) - 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
     fn view(&self) -> KvLayerRows<'_> {
         KvLayerRows { store: self }
     }
@@ -299,6 +345,8 @@ pub struct KvCache {
 }
 
 impl KvCache {
+    /// Empty cache shaped for `model` under the `kv` geometry/mode. No
+    /// pages are allocated until rows are appended.
     pub fn new(model: &ModelConfig, kv: &KvCacheConfig) -> KvCache {
         let page_rows = kv.page_rows.max(1);
         if let Some(spec) = &kv.quant {
@@ -319,6 +367,7 @@ impl KvCache {
         KvCache { k: mk(|l| l.k), v: mk(|l| l.v), len: 0 }
     }
 
+    /// Number of transformer layers the cache covers.
     pub fn layers(&self) -> usize {
         self.k.len()
     }
@@ -363,6 +412,21 @@ impl KvCache {
     /// Heap bytes allocated across all layers' page payloads.
     pub fn allocated_bytes(&self) -> usize {
         self.k.iter().chain(&self.v).map(PageStore::allocated_bytes).sum()
+    }
+
+    /// Roll the cache back to its first `len` positions, freeing whole
+    /// pages past the new tail — the speculative-decoding rollback: draft
+    /// rows appended during a verify pass are provisional, and a rejected
+    /// suffix must leave the cache *bit-identical* to one that never held
+    /// it (subsequent appends reproduce a never-extended cache exactly;
+    /// pinned by tests at page boundaries, mid-page, and in both dense
+    /// and quantized backings). No-op when `len == self.len`.
+    pub fn truncate_to(&mut self, len: usize) {
+        assert!(len <= self.len, "truncate_to({len}) beyond cache length {}", self.len);
+        for store in self.k.iter_mut().chain(self.v.iter_mut()) {
+            store.truncate_rows(len);
+        }
+        self.len = len;
     }
 }
 
@@ -425,15 +489,18 @@ impl KvPool {
         self.reserved += bytes;
     }
 
+    /// Return a retired lane's reservation to the pool.
     pub fn release(&mut self, bytes: usize) {
         debug_assert!(bytes <= self.reserved, "releasing more than reserved");
         self.reserved = self.reserved.saturating_sub(bytes);
     }
 
+    /// Bytes currently reserved across admitted lanes.
     pub fn reserved(&self) -> usize {
         self.reserved
     }
 
+    /// The configured budget (`None` = unbounded).
     pub fn budget(&self) -> Option<usize> {
         self.budget
     }
@@ -653,6 +720,117 @@ mod tests {
         let mut tight = KvPool::new(Some(10));
         tight.reserve_unchecked(50);
         assert_eq!(tight.reserved(), 50);
+    }
+
+    #[test]
+    fn truncate_to_frees_pages_at_boundary_mid_page_and_zero() {
+        // 11 rows over page_rows=4 pages = 3 pages. Truncating to a page
+        // boundary (8), mid-page (5), and zero must keep exactly the
+        // logical prefix and shrink the heap footprint page by page.
+        let cfg = tiny_cfg(2);
+        let mut rng = Rng::new(310);
+        let rows = rand_rows(&mut rng, 11, cfg.dim);
+        let vals = rand_rows(&mut rng, 11, cfg.dim);
+        for kvcfg in [
+            KvCacheConfig { page_rows: 4, ..KvCacheConfig::dense() },
+            KvCacheConfig {
+                page_rows: 4,
+                ..KvCacheConfig::quantized(KvQuantSpec::uniform(2, 3, 1.0, 0.0))
+            },
+        ] {
+            let mut cache = KvCache::new(&cfg, &kvcfg);
+            for li in 0..cfg.layers {
+                cache.append_chunk(li, &rows, &vals);
+            }
+            cache.len = 11;
+            let full_bytes = cache.allocated_bytes();
+            let want_k: Vec<f32> = cache.k_flat(0);
+            let want_v: Vec<f32> = cache.v_flat(0);
+
+            cache.truncate_to(8); // page boundary: third page freed
+            assert_eq!(cache.len, 8);
+            assert_eq!(cache.k_flat(0), want_k[..8 * cfg.dim]);
+            assert_eq!(cache.v_flat(0), want_v[..8 * cfg.dim]);
+            assert!(
+                cache.allocated_bytes() < full_bytes,
+                "freeing a whole page must shrink the footprint"
+            );
+            let after_boundary = cache.allocated_bytes();
+
+            cache.truncate_to(5); // mid-page: second page truncated in place
+            assert_eq!(cache.k_flat(0), want_k[..5 * cfg.dim]);
+            assert_eq!(cache.v_flat(1), want_v[..5 * cfg.dim]);
+            assert!(cache.allocated_bytes() <= after_boundary);
+
+            cache.truncate_to(0);
+            assert_eq!(cache.len, 0);
+            assert!(cache.k_flat(0).is_empty());
+            assert_eq!(cache.allocated_bytes(), 0, "empty cache frees every page");
+            // No-op truncation to the current length is fine.
+            cache.truncate_to(0);
+        }
+    }
+
+    #[test]
+    fn truncate_then_append_is_bit_identical_to_never_extended() {
+        // The speculative-rollback contract, dense AND quantized: a cache
+        // that grew to 13 rows, rolled back to `keep`, and then appended
+        // a fresh suffix must match — logical contents and subsequent
+        // attention reads — a cache that only ever held keep + suffix.
+        // `keep` values land mid-page (5), on a boundary (8), and at 0.
+        let cfg = tiny_cfg(1);
+        let mut rng = Rng::new(311);
+        let rows = rand_rows(&mut rng, 13, cfg.dim);
+        let vals = rand_rows(&mut rng, 13, cfg.dim);
+        let ext_k = rand_rows(&mut rng, 6, cfg.dim);
+        let ext_v = rand_rows(&mut rng, 6, cfg.dim);
+        for kvcfg in [
+            KvCacheConfig { page_rows: 4, ..KvCacheConfig::dense() },
+            KvCacheConfig {
+                page_rows: 4,
+                ..KvCacheConfig::quantized(KvQuantSpec::uniform(1, 5, 1.0, 0.1))
+            },
+        ] {
+            for keep in [0usize, 5, 8] {
+                let mut rolled = KvCache::new(&cfg, &kvcfg);
+                rolled.append_chunk(0, &rows, &vals);
+                rolled.len = 13;
+                rolled.truncate_to(keep);
+                rolled.append_chunk(0, &ext_k, &ext_v);
+                rolled.len = keep + 6;
+
+                let mut fresh = KvCache::new(&cfg, &kvcfg);
+                fresh.append_chunk(0, &rows[..keep], &vals[..keep]);
+                fresh.append_chunk(0, &ext_k, &ext_v);
+                fresh.len = keep + 6;
+
+                assert_eq!(rolled.k_flat(0), fresh.k_flat(0), "keep={keep} K diverged");
+                assert_eq!(rolled.v_flat(0), fresh.v_flat(0), "keep={keep} V diverged");
+                // Attention-path reads agree row by row (quantized pages
+                // exercise the masked-tail-word append path here).
+                let (rk, _) = rolled.layer_rows(0);
+                let (fk, _) = fresh.layer_rows(0);
+                let mut ba = vec![0f32; cfg.dim / cfg.heads];
+                let mut bb = vec![0f32; cfg.dim / cfg.heads];
+                for ti in 0..keep + 6 {
+                    for h in 0..cfg.heads {
+                        assert_eq!(
+                            rk.head_slice(ti, h * ba.len(), &mut ba),
+                            fk.head_slice(ti, h * bb.len(), &mut bb),
+                            "keep={keep} row {ti} head {h}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "beyond cache length")]
+    fn truncate_beyond_length_panics() {
+        let cfg = tiny_cfg(1);
+        let mut cache = KvCache::new(&cfg, &KvCacheConfig::dense());
+        cache.truncate_to(1);
     }
 
     #[test]

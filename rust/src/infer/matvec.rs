@@ -43,6 +43,8 @@ pub struct QuantMatvec<'a> {
 }
 
 impl MatvecPlan {
+    /// Precompute the decode plan (LUTs, row permutation, padded words)
+    /// for one packed matrix.
     pub fn new(pm: &PackedMatrix) -> MatvecPlan {
         let luts: Vec<Vec<f32>> = (0..=8u8).map(|b| pm.mode.base_lut(b)).collect();
         let mut flat_rows = Vec::with_capacity(pm.rows);
@@ -427,14 +429,17 @@ impl MatvecPlan {
 }
 
 impl<'a> QuantMatvec<'a> {
+    /// Plan the borrowed matrix for decoding.
     pub fn new(pm: &'a PackedMatrix) -> QuantMatvec<'a> {
         QuantMatvec { pm, plan: MatvecPlan::new(pm) }
     }
 
+    /// `W·x` straight off the packed stream ([`MatvecPlan::matvec`]).
     pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
         self.plan.matvec(self.pm, x)
     }
 
+    /// Batched `W·xᵢ` for all vectors ([`MatvecPlan::matmul`]).
     pub fn matmul(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
         self.plan.matmul(self.pm, xs)
     }

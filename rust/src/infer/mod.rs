@@ -5,10 +5,16 @@
 //! and the continuous-batching request server with budgeted prefill
 //! scheduling.
 
+/// The KV-cached batched decode engine with chunked prefill.
 pub mod engine;
+/// Paged, optionally-quantized KV cache + pool-budget accounting.
 pub mod kv;
+/// Mixed-precision bit-packed matvec/GEMM kernels.
 pub mod matvec;
+/// Continuous-batching request server (plain and speculative).
 pub mod server;
+/// Self-speculative decoding: draft at a low rate, verify at the target.
+pub mod speculative;
 
 pub use engine::Engine;
 pub use kv::{
@@ -16,4 +22,8 @@ pub use kv::{
     KV_PAGE_ROWS,
 };
 pub use matvec::{dense_matmul, dense_matvec, MatvecPlan, QuantMatvec, GEMM_ROW_TILE};
-pub use server::{serve, serve_threaded, serve_with, Request, Response, ServeConfig, ServeStats};
+pub use server::{
+    serve, serve_ladder, serve_speculative, serve_threaded, serve_with, Request, Response,
+    ServeConfig, ServeStats,
+};
+pub use speculative::{SpecRound, SpecStats};

@@ -20,6 +20,14 @@
 //! `serve`/`serve_with` reproduce `Engine::generate` token for token no
 //! matter how requests interleave or how the budget slices their
 //! prompts.
+//!
+//! [`serve_speculative`] layers self-speculative decoding on the same
+//! scheduler: decode lanes draft `spec_k` tokens with a low-rate engine
+//! and verify them in one chunked target forward per round
+//! (`infer::speculative`), per lane, composing with the KV pool (each
+//! lane reserves BOTH caches' worst cases at admission) — still token-
+//! identical to `generate`. [`serve_ladder`] picks the draft/target pair
+//! straight off a `RateLadder` container.
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};
@@ -29,17 +37,25 @@ use crate::infer::engine::{argmax, Engine};
 use crate::infer::kv::{lane_cost_bytes, KvCache, KvPool};
 use crate::infer::matvec::GEMM_ROW_TILE;
 
+/// One generation request.
 #[derive(Clone, Debug)]
 pub struct Request {
+    /// Caller-chosen id; responses are returned sorted by it.
     pub id: usize,
+    /// Prompt tokens (truncated to the positional table at admission).
     pub prompt: Vec<u32>,
+    /// Maximum tokens to generate.
     pub max_new: usize,
 }
 
+/// One completed request.
 #[derive(Clone, Debug)]
 pub struct Response {
+    /// The request's id.
     pub id: usize,
+    /// Generated tokens (identical to `Engine::generate` on the prompt).
     pub tokens: Vec<u32>,
+    /// Completion latency measured from scheduler entry (queueing counts).
     pub latency: Duration,
     /// Time to first token, measured like `latency` from call entry. For
     /// requests that generate nothing (`max_new == 0`) this equals the
@@ -76,15 +92,29 @@ pub struct ServeConfig {
     /// progress). The KV cache *mode* (page size, quantized bit widths)
     /// lives on the `Engine`, keeping serve == generate token-identical.
     pub kv_budget_bytes: Option<usize>,
+    /// Draft tokens per speculative round (0 = speculation off). Read by
+    /// [`serve_speculative`] / [`serve_ladder`]; [`serve_with`] has no
+    /// draft engine and ignores it. Speculation is per-lane and never
+    /// changes tokens — only wall clock.
+    pub spec_k: usize,
+    /// Which rate-ladder point [`serve_ladder`] drafts from, as a target
+    /// bits/weight (nearest point wins; `None` = the ladder's lowest
+    /// rate). Ignored by the other entry points, which take their draft
+    /// engine explicitly.
+    pub draft_bits: Option<f64>,
 }
 
 impl ServeConfig {
+    /// Default schedule for `max_batch` slots: tile-sized prefill
+    /// chunks, a two-tile budget, no KV bound, speculation off.
     pub fn new(max_batch: usize) -> ServeConfig {
         ServeConfig {
             max_batch,
             prefill_chunk: GEMM_ROW_TILE,
             chunk_budget: 2 * GEMM_ROW_TILE,
             kv_budget_bytes: None,
+            spec_k: 0,
+            draft_bits: None,
         }
     }
 }
@@ -95,19 +125,25 @@ impl Default for ServeConfig {
     }
 }
 
+/// Aggregate serving statistics.
 #[derive(Clone, Debug)]
 pub struct ServeStats {
+    /// Requests completed.
     pub completed: usize,
     /// Generated tokens across all responses (prompt tokens excluded).
     pub total_tokens: usize,
     /// Prompt tokens fed through the engine (post-admission-truncation).
     pub prompt_tokens: usize,
+    /// Wall clock for the whole batch of requests.
     pub wall: Duration,
+    /// Median completion latency.
     pub p50: Duration,
+    /// 95th-percentile completion latency.
     pub p95: Duration,
-    /// Time-to-first-token percentiles — the latency chunked prefill
-    /// exists to move.
+    /// Median time to first token — the latency chunked prefill exists
+    /// to move.
     pub ttft_p50: Duration,
+    /// 95th-percentile time to first token.
     pub ttft_p95: Duration,
     /// Generated tokens per second of wall clock.
     pub throughput_tps: f64,
@@ -129,6 +165,23 @@ pub struct ServeStats {
     /// Admissions deferred because the KV pool was exhausted (a request
     /// can defer repeatedly; this counts deferral events).
     pub kv_deferrals: usize,
+    /// Draft tokens proposed across all speculative rounds (0 when
+    /// speculation is off or the scheduler has no draft engine).
+    pub spec_proposed: usize,
+    /// Draft proposals accepted by target verification.
+    pub spec_accepted: usize,
+}
+
+impl ServeStats {
+    /// Fraction of draft proposals accepted (0 when nothing was
+    /// proposed) — the number that decides whether a draft rate pays.
+    pub fn spec_acceptance(&self) -> f64 {
+        if self.spec_proposed == 0 {
+            0.0
+        } else {
+            self.spec_accepted as f64 / self.spec_proposed as f64
+        }
+    }
 }
 
 impl std::fmt::Display for ServeStats {
@@ -158,6 +211,15 @@ impl std::fmt::Display for ServeStats {
         if self.kv_deferrals > 0 {
             write!(f, ", {} KV-pool deferrals", self.kv_deferrals)?;
         }
+        if self.spec_proposed > 0 {
+            write!(
+                f,
+                ", spec acceptance {:.0}% ({}/{})",
+                100.0 * self.spec_acceptance(),
+                self.spec_accepted,
+                self.spec_proposed
+            )?;
+        }
         Ok(())
     }
 }
@@ -178,6 +240,7 @@ fn finalize_stats(
     steps: usize,
     peak_lanes: usize,
     kv_deferrals: usize,
+    spec: (usize, usize),
 ) -> ServeStats {
     let mut lats: Vec<Duration> = responses.iter().map(|r| r.latency).collect();
     // TTFT percentiles cover only responses that produced a token:
@@ -210,6 +273,8 @@ fn finalize_stats(
         },
         peak_lanes,
         kv_deferrals,
+        spec_proposed: spec.0,
+        spec_accepted: spec.1,
     }
 }
 
@@ -242,7 +307,11 @@ impl ActiveSeq {
 
 /// [`serve_with`] under the default chunked-prefill schedule — the
 /// drop-in entry point (`max_batch` slots, default chunk budget).
-pub fn serve(engine: &Engine, requests: Vec<Request>, max_batch: usize) -> (Vec<Response>, ServeStats) {
+pub fn serve(
+    engine: &Engine,
+    requests: Vec<Request>,
+    max_batch: usize,
+) -> (Vec<Response>, ServeStats) {
     serve_with(engine, requests, ServeConfig::new(max_batch))
 }
 
@@ -428,8 +497,261 @@ pub fn serve_with(
         steps,
         peak_lanes,
         kv_deferrals,
+        (0, 0),
     );
     (responses, stats)
+}
+
+/// One resident sequence of the speculative scheduler: the serve_with
+/// bookkeeping plus the speculative round state (the full token stream
+/// whose last element is pending). Target and draft caches live in two
+/// parallel `Vec<KvCache>`s, index-aligned with `active`.
+struct SpecSeq {
+    id: usize,
+    prompt: Vec<u32>,
+    fed: usize,
+    max_new: usize,
+    out: Vec<u32>,
+    ttft: Option<Duration>,
+    kv_cost: usize,
+    /// prompt + emitted tokens; built when the first token is emitted.
+    /// The last element is always pending (emitted, not yet fed) — the
+    /// `Engine::step_speculative` state contract.
+    tokens: Vec<u32>,
+}
+
+/// [`serve_with`]'s scheduler with **per-lane self-speculative decoding**:
+/// prompts are absorbed through the same budgeted chunked prefill on the
+/// target engine; once a lane reaches decode it runs draft/verify rounds
+/// ([`Engine::step_speculative`]) — `cfg.spec_k` draft tokens from the
+/// low-rate `draft` engine, one chunked target verify, greedy
+/// longest-prefix acceptance, paged-KV rollback of rejected rows.
+///
+/// Composition with admission control: each lane reserves the worst case
+/// of BOTH its caches (target + draft) against the KV pool at admission;
+/// the speculative round's provisional rows never exceed the same
+/// `prompt + max_new − 1` row bound a plain decode lane has (the round
+/// clamps its proposal budget), so `serve_with`'s deferral semantics
+/// carry over unchanged. Output tokens are identical to
+/// `engine.generate(&prompt, max_new)` per request for every `(spec_k,
+/// draft)` configuration — speculation moves wall clock only.
+/// `ServeStats` reports the proposal/acceptance counters.
+pub fn serve_speculative(
+    engine: &Engine,
+    draft: &Engine,
+    requests: Vec<Request>,
+    cfg: ServeConfig,
+) -> (Vec<Response>, ServeStats) {
+    assert_eq!(
+        engine.config, draft.config,
+        "draft and target must share one model shape (self-speculative)"
+    );
+    let t0 = Instant::now();
+    let max_batch = cfg.max_batch.max(1);
+    let prefill_chunk = cfg.prefill_chunk.max(1);
+    let chunk_budget = cfg.chunk_budget.max(1);
+    let max_seq = engine.config.max_seq;
+    let mut queue: VecDeque<Request> = requests.into_iter().collect();
+    let mut pool = KvPool::new(cfg.kv_budget_bytes);
+    let mut active: Vec<SpecSeq> = Vec::new();
+    let mut caches: Vec<KvCache> = Vec::new(); // target caches
+    let mut draft_caches: Vec<KvCache> = Vec::new();
+    let mut responses: Vec<Response> = Vec::new();
+    let (mut steps, mut engine_tokens, mut prompt_tokens) = (0usize, 0usize, 0usize);
+    let (mut peak_lanes, mut kv_deferrals) = (0usize, 0usize);
+    let (mut spec_proposed, mut spec_accepted) = (0usize, 0usize);
+    let mut last_deferred: Option<usize> = None;
+
+    loop {
+        // Admission: serve_with's rule, with the lane's worst case
+        // covering BOTH caches. The draft cache always trails the target
+        // cache, so the same row bound covers it.
+        while active.len() < max_batch {
+            let Some(req) = queue.pop_front() else { break };
+            let keep = engine.admit_prompt(&req.prompt).len();
+            let rows_worst = (keep + req.max_new.saturating_sub(1)).min(max_seq);
+            let kv_cost = if req.max_new == 0 {
+                0
+            } else {
+                lane_cost_bytes(&engine.config, engine.kv_config(), rows_worst)
+                    + lane_cost_bytes(&draft.config, draft.kv_config(), rows_worst)
+            };
+            if !pool.try_reserve(kv_cost) {
+                if active.is_empty() && pool.reserved() == 0 {
+                    pool.reserve_unchecked(kv_cost); // solo over-budget lane
+                } else {
+                    if last_deferred != Some(req.id) {
+                        kv_deferrals += 1;
+                        last_deferred = Some(req.id);
+                    }
+                    queue.push_front(req);
+                    break;
+                }
+            }
+            let mut prompt = req.prompt;
+            prompt.truncate(keep);
+            let mut seq = SpecSeq {
+                id: req.id,
+                prompt,
+                fed: 0,
+                max_new: req.max_new,
+                out: Vec::new(),
+                ttft: None,
+                kv_cost,
+                tokens: Vec::new(),
+            };
+            if seq.max_new == 0 {
+                let now = t0.elapsed();
+                responses.push(Response { id: seq.id, tokens: seq.out, latency: now, ttft: now });
+                continue;
+            }
+            if seq.prompt.is_empty() {
+                // `generate` starts from all-zero logits: argmax is 0.
+                seq.out.push(0);
+                seq.tokens = vec![0];
+                seq.ttft = Some(t0.elapsed());
+                if seq.out.len() >= seq.max_new {
+                    let now = t0.elapsed();
+                    let ttft = seq.ttft.unwrap();
+                    responses.push(Response { id: seq.id, tokens: seq.out, latency: now, ttft });
+                    pool.release(seq.kv_cost);
+                    continue;
+                }
+            }
+            active.push(seq);
+            caches.push(engine.new_cache());
+            draft_caches.push(draft.new_cache());
+        }
+        if active.is_empty() {
+            break;
+        }
+        peak_lanes = peak_lanes.max(active.len());
+
+        // Phase A — chunked prompt absorption on the target, exactly
+        // serve_with's plan, except decode lanes contribute nothing here
+        // (their work is the per-lane rounds below). Lanes decoding at
+        // the START of the iteration are marked now; a lane finishing
+        // its prompt this iteration starts drafting next iteration.
+        let mut budget = chunk_budget;
+        let mut chunks: Vec<&[u32]> = Vec::with_capacity(active.len());
+        let mut emit: Vec<bool> = Vec::with_capacity(active.len());
+        let mut fed_now: Vec<usize> = Vec::with_capacity(active.len());
+        let mut decoding: Vec<bool> = Vec::with_capacity(active.len());
+        for seq in active.iter() {
+            if seq.fed < seq.prompt.len() {
+                let c = (seq.prompt.len() - seq.fed).min(prefill_chunk).min(budget);
+                budget -= c;
+                chunks.push(&seq.prompt[seq.fed..seq.fed + c]);
+                emit.push(c > 0 && seq.fed + c == seq.prompt.len());
+                fed_now.push(c);
+                decoding.push(false);
+            } else {
+                chunks.push(&[]);
+                emit.push(false);
+                fed_now.push(0);
+                decoding.push(true);
+            }
+        }
+        let mut retired = vec![false; active.len()];
+        let fed_total: usize = fed_now.iter().sum();
+        if fed_total > 0 {
+            let logits = engine.prefill_batch_masked(&chunks, &mut caches, Some(&emit));
+            steps += 1;
+            engine_tokens += fed_total;
+            prompt_tokens += fed_total;
+            for (i, seq) in active.iter_mut().enumerate() {
+                seq.fed += fed_now[i];
+                if emit[i] {
+                    let first = argmax(&logits[i]) as u32;
+                    seq.out.push(first);
+                    seq.tokens = seq.prompt.clone();
+                    seq.tokens.push(first);
+                    seq.ttft = Some(t0.elapsed());
+                    // generate's stopping rule after the first token.
+                    retired[i] = seq.out.len() >= seq.max_new || caches[i].len >= max_seq;
+                }
+            }
+        }
+
+        // Phase B — one speculative round per decode lane. Per-lane by
+        // design (acceptance lengths desynchronize lanes); each round is
+        // internally GEMM-amortized (draft catch-up prefill + one
+        // chunked verify).
+        for i in 0..active.len() {
+            if !decoding[i] || retired[i] {
+                continue;
+            }
+            let seq = &mut active[i];
+            let round = engine.step_speculative(
+                draft,
+                &mut seq.tokens,
+                &mut caches[i],
+                &mut draft_caches[i],
+                cfg.spec_k,
+                seq.max_new - seq.out.len(),
+            );
+            seq.out.extend_from_slice(&round.emitted);
+            steps += 1;
+            engine_tokens += round.proposed + 1; // target-fed, incl. rejected
+            spec_proposed += round.proposed;
+            spec_accepted += round.accepted;
+            retired[i] = seq.out.len() >= seq.max_new || caches[i].len >= max_seq;
+        }
+
+        // Retirement sweep, back-to-front (as in serve_with).
+        for i in (0..active.len()).rev() {
+            if retired[i] {
+                let done = active.swap_remove(i);
+                caches.swap_remove(i);
+                draft_caches.swap_remove(i);
+                pool.release(done.kv_cost);
+                let ttft = done.ttft.expect("retired lanes emitted at least one token");
+                responses.push(Response {
+                    id: done.id,
+                    tokens: done.out,
+                    latency: t0.elapsed(),
+                    ttft,
+                });
+            }
+        }
+    }
+
+    responses.sort_by_key(|r| r.id);
+    let stats = finalize_stats(
+        &responses,
+        t0.elapsed(),
+        engine_tokens,
+        prompt_tokens,
+        steps,
+        peak_lanes,
+        kv_deferrals,
+        (spec_proposed, spec_accepted),
+    );
+    (responses, stats)
+}
+
+/// Two-point serving straight off a rate ladder: the **highest-rate
+/// point serves as the target**; with `cfg.spec_k > 0` (and a ladder of
+/// ≥ 2 points) the point nearest `cfg.draft_bits` (lowest point when
+/// unset) drafts for it via [`serve_speculative`]. With speculation off
+/// this is plain [`serve_with`] on the target point — one artifact, one
+/// call, rate as a serving knob.
+pub fn serve_ladder(
+    ladder: &crate::coordinator::ladder::RateLadder,
+    requests: Vec<Request>,
+    cfg: ServeConfig,
+) -> (Vec<Response>, ServeStats) {
+    assert!(!ladder.points.is_empty(), "cannot serve an empty ladder");
+    let target = ladder.engine(ladder.points.len() - 1);
+    if cfg.spec_k == 0 || ladder.points.len() < 2 {
+        return serve_with(&target, requests, cfg);
+    }
+    let draft_ix = match cfg.draft_bits {
+        Some(bits) => ladder.nearest_point(bits),
+        None => 0,
+    };
+    let draft = ladder.engine(draft_ix);
+    serve_speculative(&target, &draft, requests, cfg)
 }
 
 /// The seed's thread-per-request scheduler, kept as the un-amortized
@@ -474,7 +796,8 @@ pub fn serve_threaded(
     let prompt_tokens: usize = done.iter().map(|(_, _, p)| p).sum();
     let mut responses: Vec<Response> = done.into_iter().map(|(r, _, _)| r).collect();
     responses.sort_by_key(|r| r.id);
-    let stats = finalize_stats(&responses, t0.elapsed(), engine_tokens, prompt_tokens, 0, 0, 0);
+    let stats =
+        finalize_stats(&responses, t0.elapsed(), engine_tokens, prompt_tokens, 0, 0, 0, (0, 0));
     (responses, stats)
 }
 
@@ -693,6 +1016,143 @@ mod tests {
         let (resps, stats) = serve_threaded(&engine, vec![], 2);
         assert!(resps.is_empty());
         assert_eq!(stats.completed, 0);
+    }
+
+    #[test]
+    fn speculative_serving_matches_direct_generation() {
+        // The speculative token-identity invariant at the scheduler
+        // level: any (spec_k, draft-rate) configuration — including a
+        // weak 2-bit draft — serves tokens identical to the TARGET's
+        // generate(), and acceptance counters stay consistent.
+        use crate::coordinator::pipeline::rtn_quantize_model;
+        let cfg = ModelConfig { vocab: 32, dim: 16, heads: 2, layers: 1, mlp: 32, max_seq: 16 };
+        let mut rng = Rng::new(501);
+        let w = Weights::init_training(cfg, &mut rng);
+        let target = Engine::from_quantized(&rtn_quantize_model(&w, 6, 8));
+        let drafts = [
+            Engine::from_quantized(&rtn_quantize_model(&w, 2, 8)),
+            Engine::from_quantized(&rtn_quantize_model(&w, 6, 8)), // self-rate draft
+        ];
+        let mut rng = Rng::new(502);
+        let reqs: Vec<Request> = (0..7)
+            .map(|id| {
+                let plen = if id % 3 == 0 { 8 + rng.below(4) } else { rng.below(4) };
+                let prompt: Vec<u32> = (0..plen).map(|_| rng.below(32) as u32).collect();
+                Request { id, prompt, max_new: 1 + rng.below(6) }
+            })
+            .collect();
+        let expected: Vec<Vec<u32>> = reqs
+            .iter()
+            .map(|r| target.generate(&r.prompt, r.max_new))
+            .collect();
+        for draft in &drafts {
+            for spec_k in [0usize, 2, 4] {
+                let cfg = ServeConfig { spec_k, ..ServeConfig::new(3) };
+                let (resps, stats) = serve_speculative(&target, draft, reqs.clone(), cfg);
+                assert_eq!(stats.completed, reqs.len());
+                for (r, want) in resps.iter().zip(&expected) {
+                    assert_eq!(
+                        r.tokens, *want,
+                        "request {} diverged from generate() at spec_k={spec_k}",
+                        r.id
+                    );
+                    assert!(r.ttft <= r.latency);
+                }
+                assert!(stats.spec_accepted <= stats.spec_proposed);
+                if spec_k == 0 {
+                    assert_eq!(stats.spec_proposed, 0, "spec_k=0 must never draft");
+                } else {
+                    assert!(stats.spec_proposed > 0, "decode lanes must draft");
+                    let a = stats.spec_acceptance();
+                    assert!((0.0..=1.0).contains(&a));
+                }
+            }
+        }
+        // A self-weights draft accepts everything.
+        let spec_cfg = ServeConfig { spec_k: 3, ..ServeConfig::new(4) };
+        let (_, stats) = serve_speculative(&target, &drafts[1], reqs.clone(), spec_cfg);
+        assert_eq!(stats.spec_accepted, stats.spec_proposed);
+        assert_eq!(stats.spec_acceptance(), 1.0);
+    }
+
+    #[test]
+    fn speculative_serving_composes_with_kv_budget() {
+        // Both caches are reserved at admission; a tight pool must cap
+        // concurrency (deferring, never evicting) without changing a
+        // single token, deterministically.
+        let engine = tiny_engine();
+        let draft = tiny_engine(); // same seed -> same weights
+        let mut rng = Rng::new(503);
+        let reqs: Vec<Request> = (0..5)
+            .map(|id| {
+                let plen = 2 + rng.below(5);
+                let prompt: Vec<u32> = (0..plen).map(|_| rng.below(32) as u32).collect();
+                Request { id, prompt, max_new: 3 + rng.below(4) }
+            })
+            .collect();
+        let expected: Vec<Vec<u32>> = reqs
+            .iter()
+            .map(|r| engine.generate(&r.prompt, r.max_new))
+            .collect();
+        // Room for ~2 speculative lanes (each pays target + draft).
+        let worst = 2 * crate::infer::kv::lane_cost_bytes(
+            &engine.config,
+            engine.kv_config(),
+            engine.config.max_seq,
+        );
+        let cfg = ServeConfig {
+            spec_k: 3,
+            kv_budget_bytes: Some(2 * worst),
+            ..ServeConfig::new(5)
+        };
+        let (resps, stats) = serve_speculative(&engine, &draft, reqs.clone(), cfg);
+        for (r, want) in resps.iter().zip(&expected) {
+            assert_eq!(r.tokens, *want, "request {} diverged under KV budget", r.id);
+        }
+        assert!(stats.peak_lanes <= 2, "budget for 2 lanes admitted {}", stats.peak_lanes);
+        assert!(stats.kv_deferrals > 0, "exhaustion must be visible");
+        let again = serve_speculative(&engine, &draft, reqs.clone(), cfg);
+        assert_eq!(again.1.steps, stats.steps, "speculative schedule must be deterministic");
+        for (a, b) in again.0.iter().zip(&resps) {
+            assert_eq!(a.tokens, b.tokens);
+        }
+    }
+
+    #[test]
+    fn serve_ladder_picks_draft_and_target_points() {
+        use crate::coordinator::ladder::RateLadder;
+        use crate::coordinator::pipeline::rtn_quantize_model;
+        let cfg = ModelConfig { vocab: 32, dim: 16, heads: 2, layers: 1, mlp: 32, max_seq: 16 };
+        let mut rng = Rng::new(504);
+        let w = Weights::init_training(cfg, &mut rng);
+        let ladder = RateLadder::from_models(vec![
+            (2.0, rtn_quantize_model(&w, 2, 8)),
+            (6.0, rtn_quantize_model(&w, 6, 8)),
+        ]);
+        let target = ladder.engine(1);
+        let reqs: Vec<Request> = (0..4)
+            .map(|id| Request { id, prompt: vec![(id + 1) as u32, 3], max_new: 5 })
+            .collect();
+        let expected: Vec<Vec<u32>> = reqs
+            .iter()
+            .map(|r| target.generate(&r.prompt, r.max_new))
+            .collect();
+        // Speculation on: drafts from the 2-bit point, serves the 6-bit
+        // target's tokens.
+        let spec_cfg =
+            ServeConfig { spec_k: 3, draft_bits: Some(2.0), ..ServeConfig::new(2) };
+        let (resps, stats) = serve_ladder(&ladder, reqs.clone(), spec_cfg);
+        for (r, want) in resps.iter().zip(&expected) {
+            assert_eq!(r.tokens, *want, "ladder serving diverged from the target point");
+        }
+        assert!(stats.spec_proposed > 0);
+        // Speculation off: plain serve_with on the target point.
+        let plain_cfg = ServeConfig::new(2);
+        let (plain, plain_stats) = serve_ladder(&ladder, reqs.clone(), plain_cfg);
+        for (r, want) in plain.iter().zip(&expected) {
+            assert_eq!(r.tokens, *want);
+        }
+        assert_eq!(plain_stats.spec_proposed, 0);
     }
 
     #[test]

@@ -1,0 +1,367 @@
+//! Self-speculative decoding off the rate ladder: draft with a low-rate
+//! allocation of the model, verify with the high-rate target — both
+//! packed from ONE calibration artifact (`coordinator::ladder`), so the
+//! paper's "family of operating points" becomes a wall-clock knob, not
+//! just a size/accuracy one.
+//!
+//! The loop is standard greedy speculative decoding:
+//!
+//! 1. **Draft**: the low-rate engine proposes up to `spec_k` tokens
+//!    autoregressively (cheap — its bitstreams are a fraction of the
+//!    target's, and decode is bitstream-bound at batch 1).
+//! 2. **Verify**: the target scores ALL proposals in ONE chunked forward
+//!    ([`Engine::prefill_positions`] — the PR-3 GEMM path, so k draft
+//!    positions cost ~one amortized pass, not k sequential steps).
+//! 3. **Accept**: the longest prefix of proposals matching the target's
+//!    greedy argmax is kept, plus one token the target computed itself
+//!    (the correction on mismatch, the natural next token on full
+//!    acceptance). Rejected suffix rows are rolled back with
+//!    [`KvCache::truncate_to`] — whole pages freed, remaining contents
+//!    bit-identical to a never-extended cache.
+//!
+//! **Token identity by construction.** Every emitted token is the argmax
+//! of target logits over exactly the fed prefix a sequential
+//! [`Engine::generate`] would have used: accepted proposals equal the
+//! target's own argmax (that is the acceptance test), verify forwards
+//! are bit-identical to step loops (the chunked-prefill invariant), and
+//! rollback restores the cache bit-for-bit (the truncate contract). So
+//! `generate_speculative` == `generate` for every `(spec_k, draft)`
+//! configuration — speculation changes wall-clock, never output — and a
+//! test pins it. `spec_k = 0` degenerates to a plain verify-only step
+//! loop through the same code path (the bench's baseline arm).
+//!
+//! The draft lags the target by design: it catches up on accepted
+//! corrections lazily, as the leading chunk of its next draft pass (one
+//! GEMM-amortized prefill), so a rejected burst never costs dedicated
+//! draft work. When the draft rate is too low its proposals stop
+//! matching, acceptance collapses, and every round degrades to
+//! one-token-per-verify — see DESIGN.md §Speculative decoding for the
+//! collapse regime and `eval::draft_agreement` for qualifying a draft
+//! rate before serving with it.
+
+use crate::infer::engine::{argmax, Engine};
+use crate::infer::kv::KvCache;
+
+/// Aggregate speculation counters for one generation (or one served
+/// lane; the server sums them into `ServeStats`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SpecStats {
+    /// Draft tokens proposed across all rounds.
+    pub proposed: usize,
+    /// Proposals accepted by target verification.
+    pub accepted: usize,
+    /// Draft/verify rounds executed.
+    pub rounds: usize,
+}
+
+impl SpecStats {
+    /// Fraction of proposals accepted (0 when nothing was proposed).
+    pub fn acceptance(&self) -> f64 {
+        if self.proposed == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.proposed as f64
+        }
+    }
+}
+
+/// Outcome of one draft/verify round.
+#[derive(Clone, Debug)]
+pub struct SpecRound {
+    /// Tokens emitted this round: the accepted proposal prefix plus one
+    /// target-computed token (correction or natural continuation).
+    /// Always non-empty.
+    pub emitted: Vec<u32>,
+    /// Draft tokens proposed this round (≤ `spec_k`; clamped by the
+    /// remaining generation budget and the positional table).
+    pub proposed: usize,
+    /// Proposals accepted (`accepted < proposed` means the round ended
+    /// on a correction).
+    pub accepted: usize,
+}
+
+impl Engine {
+    /// One speculative round: draft up to `spec_k` tokens with `draft`,
+    /// verify them against `self` (the target) in one chunked forward,
+    /// accept the longest matching prefix, and roll back rejected rows.
+    ///
+    /// State contract: `tokens` is the full token stream (prompt +
+    /// everything emitted), whose last element is *pending* — emitted
+    /// but not yet fed — so `target_cache.len + 1 == tokens.len()`.
+    /// `draft_cache` holds a prefix of the same stream (it may lag; the
+    /// round feeds it the gap as draft-prefill). `remaining` is how many
+    /// tokens the caller still wants (≥ 1); the round emits at most
+    /// `remaining` and never overruns the positional table. On return
+    /// the emitted tokens have been appended to `tokens` and the new
+    /// last element is pending again.
+    ///
+    /// Both engines must share one model shape (same tokenizer, same
+    /// positional table) — the self-speculative setting.
+    pub fn step_speculative(
+        &self,
+        draft: &Engine,
+        tokens: &mut Vec<u32>,
+        target_cache: &mut KvCache,
+        draft_cache: &mut KvCache,
+        spec_k: usize,
+        remaining: usize,
+    ) -> SpecRound {
+        assert_eq!(
+            self.config, draft.config,
+            "draft and target must share one model shape (self-speculative)"
+        );
+        assert!(remaining >= 1, "a round must be allowed to emit");
+        assert!(!tokens.is_empty(), "no pending token to feed");
+        debug_assert_eq!(
+            target_cache.len + 1,
+            tokens.len(),
+            "exactly the last token may be pending"
+        );
+        let max_seq = self.config.max_seq;
+        assert!(target_cache.len < max_seq, "positional table exhausted");
+
+        // Proposal budget: spec_k, but never more than the remaining
+        // emission budget leaves useful (each round emits accepted + 1)
+        // and never past the positional table (the verify chunk feeds
+        // m + 1 tokens).
+        let m = spec_k.min(remaining - 1).min(max_seq - target_cache.len - 1);
+        let pending = *tokens.last().expect("tokens checked non-empty");
+
+        // Draft phase: catch the draft up on everything it has not seen
+        // (lagging corrections + the pending token) in one prefill, then
+        // step out the remaining proposals. Skipped entirely at m = 0 —
+        // the draft's lag is repaid only when it earns proposals.
+        let mut proposals: Vec<u32> = Vec::with_capacity(m);
+        if m > 0 {
+            let catchup: Vec<u32> = tokens[draft_cache.len..].to_vec();
+            let mut dl = draft
+                .prefill_batch(&[&catchup], std::slice::from_mut(draft_cache))
+                .pop()
+                .expect("one lane yields one logit vector");
+            loop {
+                let q = argmax(&dl) as u32;
+                proposals.push(q);
+                if proposals.len() == m {
+                    break;
+                }
+                dl = draft.step(q, draft_cache);
+            }
+        }
+
+        // Verify phase: ONE target forward over [pending, proposals…]
+        // scores every draft position (PR-3 chunked prefill).
+        let mut chunk: Vec<u32> = Vec::with_capacity(m + 1);
+        chunk.push(pending);
+        chunk.extend_from_slice(&proposals);
+        let before = target_cache.len;
+        let logits = self
+            .prefill_positions(&[&chunk], std::slice::from_mut(target_cache))
+            .pop()
+            .expect("one lane yields one logit list");
+
+        // Greedy longest-prefix acceptance: proposal j survives iff it
+        // IS the target's argmax after the accepted prefix.
+        let mut j = 0usize;
+        while j < proposals.len() && argmax(&logits[j]) as u32 == proposals[j] {
+            j += 1;
+        }
+        // logits[j] always exists (the chunk had m + 1 positions): on
+        // full acceptance it is the target's natural next token, on
+        // mismatch it is the correction — either way exactly what a
+        // sequential generate() would emit here.
+        let next = argmax(&logits[j]) as u32;
+        let mut emitted = proposals[..j].to_vec();
+        emitted.push(next);
+        tokens.extend_from_slice(&emitted);
+
+        // Roll back the rejected suffix; the draft also drops anything
+        // past the accepted prefix (it will re-sync next round).
+        let keep = before + 1 + j;
+        target_cache.truncate_to(keep);
+        if draft_cache.len > keep {
+            draft_cache.truncate_to(keep);
+        }
+        SpecRound { emitted, proposed: m, accepted: j }
+    }
+
+    /// Greedy generation with self-speculative decoding: token-identical
+    /// to [`Engine::generate`] on `self` for every `(spec_k, draft)`
+    /// configuration (tested), but drafted at the `draft` engine's rate
+    /// and verified in chunked target forwards. Returns the generated
+    /// tokens plus acceptance statistics — the number to watch: wall
+    /// clock improves only while `draft` stays cheap *and* its proposals
+    /// keep matching (`SpecStats::acceptance`).
+    ///
+    /// `spec_k = 0` runs the same loop without ever touching `draft`
+    /// (pure verify steps) — the baseline arm `bench_spec` measures
+    /// speedup against.
+    pub fn generate_speculative(
+        &self,
+        draft: &Engine,
+        prompt: &[u32],
+        max_new: usize,
+        spec_k: usize,
+    ) -> (Vec<u32>, SpecStats) {
+        let mut stats = SpecStats::default();
+        if max_new == 0 {
+            return (Vec::new(), stats);
+        }
+        let prompt = self.admit_prompt(prompt);
+        let mut target_cache = self.new_cache();
+        let mut draft_cache = draft.new_cache();
+        let mut logits = vec![0f32; self.config.vocab];
+        if !prompt.is_empty() {
+            logits = self
+                .prefill_batch(&[prompt], std::slice::from_mut(&mut target_cache))
+                .pop()
+                .expect("one lane yields one logit vector");
+        }
+        let first = argmax(&logits) as u32;
+        let mut tokens: Vec<u32> = prompt.to_vec();
+        tokens.push(first);
+        let mut out = vec![first];
+        // Same stopping rule as generate(): stop once the budget or the
+        // positional table is exhausted, with the final token emitted
+        // from the last in-budget logits.
+        while out.len() < max_new && target_cache.len < self.config.max_seq {
+            let round = self.step_speculative(
+                draft,
+                &mut tokens,
+                &mut target_cache,
+                &mut draft_cache,
+                spec_k,
+                max_new - out.len(),
+            );
+            out.extend_from_slice(&round.emitted);
+            stats.proposed += round.proposed;
+            stats.accepted += round.accepted;
+            stats.rounds += 1;
+        }
+        (out, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pipeline::rtn_quantize_model;
+    use crate::infer::kv::{KvCacheConfig, KvQuantSpec};
+    use crate::model::config::ModelConfig;
+    use crate::model::weights::Weights;
+    use crate::util::rng::Rng;
+
+    fn tiny_weights(seed: u64) -> Weights {
+        let cfg = ModelConfig { vocab: 32, dim: 16, heads: 2, layers: 2, mlp: 32, max_seq: 24 };
+        let mut rng = Rng::new(seed);
+        Weights::init_training(cfg, &mut rng)
+    }
+
+    #[test]
+    fn speculative_is_token_identical_to_generate() {
+        // The acceptance criterion: for every (spec_k, draft-rate)
+        // configuration — including a garbage 1-bit draft — the emitted
+        // tokens equal a plain generate() on the target.
+        let w = tiny_weights(401);
+        let target = Engine::from_quantized(&rtn_quantize_model(&w, 6, 8));
+        let drafts = [
+            Engine::from_quantized(&rtn_quantize_model(&w, 1, 8)),
+            Engine::from_quantized(&rtn_quantize_model(&w, 2, 8)),
+            Engine::from_quantized(&rtn_quantize_model(&w, 4, 8)),
+            Engine::from_dense(&w),
+        ];
+        let prompts: [&[u32]; 3] = [&[1, 2, 3], &[7], &[4, 9, 11, 30, 2, 5]];
+        for draft in &drafts {
+            for prompt in prompts {
+                for max_new in [1usize, 2, 5, 12] {
+                    let want = target.generate(prompt, max_new);
+                    for k in [0usize, 1, 2, 3, 8] {
+                        let (got, stats) =
+                            target.generate_speculative(draft, prompt, max_new, k);
+                        assert_eq!(
+                            got, want,
+                            "spec_k={k} max_new={max_new} diverged from generate()"
+                        );
+                        assert!(stats.accepted <= stats.proposed);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn self_draft_accepts_every_proposal() {
+        // Draft == target weights ⇒ proposals are the target's own
+        // argmaxes ⇒ acceptance is exactly 100%.
+        let w = tiny_weights(402);
+        let target = Engine::from_dense(&w);
+        let draft = Engine::from_dense(&w);
+        let (out, stats) = target.generate_speculative(&draft, &[3, 1, 4], 12, 4);
+        assert_eq!(out, target.generate(&[3, 1, 4], 12));
+        assert!(stats.proposed > 0, "long generation must draft");
+        assert_eq!(stats.accepted, stats.proposed, "self-draft must fully accept");
+        assert_eq!(stats.acceptance(), 1.0);
+    }
+
+    #[test]
+    fn speculative_matches_generate_across_kv_configs() {
+        // Rollback must compose with paged AND quantized KV backings:
+        // tokens equal the same engine's generate() (which shares the
+        // KV config) with pages far smaller than the verify chunks.
+        let w = tiny_weights(403);
+        let small_pages = KvCacheConfig { page_rows: 3, ..KvCacheConfig::dense() };
+        let quant_kv = KvCacheConfig {
+            page_rows: 3,
+            ..KvCacheConfig::quantized(KvQuantSpec::uniform(w.config.layers, 6, 1.0, 0.0))
+        };
+        for kv in [small_pages, quant_kv] {
+            let target =
+                Engine::from_quantized(&rtn_quantize_model(&w, 6, 8)).with_kv_config(kv.clone());
+            let draft =
+                Engine::from_quantized(&rtn_quantize_model(&w, 3, 8)).with_kv_config(kv.clone());
+            let prompt: &[u32] = &[2, 7, 1, 8];
+            let want = target.generate(prompt, 15);
+            let (got, _) = target.generate_speculative(&draft, prompt, 15, 4);
+            assert_eq!(got, want, "kv config {kv:?} diverged");
+        }
+    }
+
+    #[test]
+    fn speculative_respects_budget_and_positional_table() {
+        let w = tiny_weights(404);
+        let target = Engine::from_dense(&w);
+        let draft = Engine::from_dense(&w);
+        // max_new = 0 emits nothing; an empty prompt mirrors generate's
+        // all-zero-logits start; a long budget stops at the table.
+        assert!(target.generate_speculative(&draft, &[1], 0, 4).0.is_empty());
+        assert_eq!(
+            target.generate_speculative(&draft, &[], 5, 4).0,
+            target.generate(&[], 5)
+        );
+        let max_seq = target.config.max_seq;
+        let long = target.generate(&[1, 2], 3 * max_seq);
+        let (spec_long, _) = target.generate_speculative(&draft, &[1, 2], 3 * max_seq, 4);
+        assert_eq!(spec_long, long, "table-limited generation diverged");
+        // Prompt exactly filling the table still emits one token.
+        let exact: Vec<u32> = (0..max_seq as u32).map(|i| i % 32).collect();
+        let (one, stats) = target.generate_speculative(&draft, &exact, 6, 4);
+        assert_eq!(one, target.generate(&exact, 6));
+        assert_eq!(one.len(), 1);
+        assert_eq!(stats.rounds, 0, "no room to draft past a full table");
+    }
+
+    #[test]
+    fn spec_k_zero_never_touches_the_draft() {
+        // spec_k = 0 must behave like a plain verify-step loop: same
+        // tokens, zero proposals, and a draft cache that never grows.
+        let w = tiny_weights(405);
+        let target = Engine::from_dense(&w);
+        // A deliberately mismatched-weights draft: if it were consulted,
+        // tokens could diverge.
+        let draft = Engine::from_dense(&tiny_weights(406));
+        let (out, stats) = target.generate_speculative(&draft, &[5, 6], 8, 0);
+        assert_eq!(out, target.generate(&[5, 6], 8));
+        assert_eq!(stats.proposed, 0);
+        assert_eq!(stats.accepted, 0);
+        assert!(stats.rounds > 0);
+    }
+}

@@ -40,12 +40,19 @@ pub mod model;
 
 pub mod quant;
 
+// The user-facing API surface (coordinator, infer, eval, and the
+// `.radio` container in quant::format) carries a rustdoc gate: every
+// public item is documented, and CI's `cargo doc` job runs with
+// `RUSTDOCFLAGS="-D warnings"` so regressions fail the build.
+#[warn(missing_docs)]
 pub mod coordinator;
 
 pub mod baselines;
 
+#[warn(missing_docs)]
 pub mod infer;
 
+#[warn(missing_docs)]
 pub mod eval;
 
 pub mod runtime;

@@ -3,12 +3,21 @@
 //! corrected biases), with save/load and dequantization back into a
 //! `Weights` for evaluation.
 //!
-//! The container (`RADIOQM2`) is *streaming-friendly*: packed matrices
-//! are emitted first as self-delimiting records and the side parameters
-//! follow a sentinel, so [`QuantizedModelWriter`] can write each matrix
-//! the moment it is packed without ever holding the whole model (or a
-//! dense `Weights` clone — the v1 format's base section stored every
-//! block matrix twice) in memory.
+//! The single-point container (`RADIOQM2`) is *streaming-friendly*:
+//! packed matrices are emitted first as self-delimiting records and the
+//! side parameters follow a sentinel, so [`QuantizedModelWriter`] can
+//! write each matrix the moment it is packed without ever holding the
+//! whole model (or a dense `Weights` clone — the v1 format's base
+//! section stored every block matrix twice) in memory.
+//!
+//! The multi-point revision (`RADIOQM3`) carries N *rate points* — the
+//! same model packed at several average bit rates off one calibration
+//! artifact — sharing one copy of the heavy side parameters, with only
+//! the (tiny, rate-dependent) corrected biases stored per point. It is
+//! written and read by `coordinator::ladder::RateLadder`;
+//! [`QuantizedModel::load`] accepts both revisions and resolves a
+//! `RADIOQM3` file to its highest-rate point. Byte-level specs for both
+//! live in `docs/FORMATS.md`.
 
 use std::collections::BTreeMap;
 use std::io::{BufWriter, Read, Write};
@@ -19,8 +28,67 @@ use crate::model::weights::{MatId, Role, SideParams, Weights};
 use crate::quant::bitpack::PackedMatrix;
 use crate::util::json::Json;
 
-/// Record tag marking the end of the packed-matrix stream.
+/// Record tag marking the end of a packed-matrix stream.
 const END_OF_MATRICES: u32 = u32::MAX;
+
+/// Magic of the single-point `.radio` container.
+pub(crate) const MAGIC_QM2: &[u8; 8] = b"RADIOQM2";
+/// Magic of the multi-rate-point `.radio` container.
+pub(crate) const MAGIC_QM3: &[u8; 8] = b"RADIOQM3";
+
+/// Write one self-delimiting packed-matrix record (shared by the QM2
+/// writer and the QM3 ladder writer).
+pub(crate) fn write_matrix_record<W: Write>(
+    f: &mut W,
+    id: MatId,
+    p: &PackedMatrix,
+) -> std::io::Result<()> {
+    assert!(
+        (id.layer as u32) != END_OF_MATRICES,
+        "layer index collides with the end sentinel"
+    );
+    f.write_all(&(id.layer as u32).to_le_bytes())?;
+    f.write_all(&[id.role.tag()])?;
+    let bytes = p.to_bytes();
+    f.write_all(&(bytes.len() as u64).to_le_bytes())?;
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+/// Seal a packed-matrix stream with the end-of-matrices sentinel.
+pub(crate) fn write_end_of_matrices<W: Write>(f: &mut W) -> std::io::Result<()> {
+    f.write_all(&END_OF_MATRICES.to_le_bytes())
+}
+
+/// Read packed-matrix records up to (and consuming) the end sentinel —
+/// the shared parser behind both container revisions.
+pub(crate) fn read_matrix_records<R: Read>(
+    f: &mut R,
+) -> std::io::Result<Vec<(MatId, PackedMatrix)>> {
+    let mut l4 = [0u8; 4];
+    let mut l8 = [0u8; 8];
+    let mut packed = Vec::new();
+    loop {
+        f.read_exact(&mut l4)?;
+        let layer = u32::from_le_bytes(l4);
+        if layer == END_OF_MATRICES {
+            break;
+        }
+        let mut tag = [0u8; 1];
+        f.read_exact(&mut tag)?;
+        let role = Role::from_tag(tag[0]).ok_or_else(|| inv("bad role tag"))?;
+        f.read_exact(&mut l8)?;
+        let plen = u64::from_le_bytes(l8) as usize;
+        let mut pbytes = vec![0u8; plen];
+        f.read_exact(&mut pbytes)?;
+        let (pm, used) = PackedMatrix::from_bytes(&pbytes).map_err(inv)?;
+        if used != plen {
+            return Err(inv("packed matrix trailing bytes"));
+        }
+        packed.push((MatId { layer: layer as usize, role }, pm));
+    }
+    Ok(packed)
+}
 
 /// A fully quantized model: the paper's deliverable artifact.
 ///
@@ -30,6 +98,8 @@ const END_OF_MATRICES: u32 = u32::MAX;
 /// O(side + packed bits), not O(dense model).
 #[derive(Clone, Debug)]
 pub struct QuantizedModel {
+    /// Full-precision side parameters (embeddings, positional table,
+    /// LayerNorms, corrected biases).
     pub base: SideParams,
     /// One packed matrix per quantizable MatId, in `matrix_ids()` order.
     pub packed: Vec<(MatId, PackedMatrix)>,
@@ -99,39 +169,33 @@ impl QuantizedModel {
         w.finish(&self.base)
     }
 
+    /// Load a `.radio` container. Accepts both revisions: a `RADIOQM2`
+    /// file yields its single model; a multi-point `RADIOQM3` rate
+    /// ladder resolves to its **highest-rate point** (the serving
+    /// target). Use `coordinator::ladder::RateLadder::load` to access
+    /// every point of a ladder.
     pub fn load(path: &Path) -> std::io::Result<QuantizedModel> {
         let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
         let mut magic = [0u8; 8];
         f.read_exact(&mut magic)?;
-        if &magic != b"RADIOQM2" {
+        if &magic == MAGIC_QM3 {
+            let ladder = crate::coordinator::ladder::RateLadder::read_body(&mut f)?;
+            return ladder
+                .points
+                .len()
+                .checked_sub(1)
+                .map(|top| ladder.model(top))
+                .ok_or_else(|| inv("rate ladder carries no points"));
+        }
+        if &magic != MAGIC_QM2 {
             return Err(inv("bad magic: not a .radio quantized model"));
         }
-        let mut l4 = [0u8; 4];
-        let mut l8 = [0u8; 8];
-        let mut packed = Vec::new();
-        loop {
-            f.read_exact(&mut l4)?;
-            let layer = u32::from_le_bytes(l4);
-            if layer == END_OF_MATRICES {
-                break;
-            }
-            let mut tag = [0u8; 1];
-            f.read_exact(&mut tag)?;
-            let role = Role::from_tag(tag[0]).ok_or_else(|| inv("bad role tag"))?;
-            f.read_exact(&mut l8)?;
-            let plen = u64::from_le_bytes(l8) as usize;
-            let mut pbytes = vec![0u8; plen];
-            f.read_exact(&mut pbytes)?;
-            let (pm, used) = PackedMatrix::from_bytes(&pbytes).map_err(inv)?;
-            if used != plen {
-                return Err(inv("packed matrix trailing bytes"));
-            }
-            packed.push((MatId { layer: layer as usize, role }, pm));
-        }
+        let packed = read_matrix_records(&mut f)?;
         let base = SideParams::read_from(&mut f)?;
         Ok(QuantizedModel { base, packed })
     }
 
+    /// Shape of the model this container was packed from.
     pub fn config(&self) -> &ModelConfig {
         &self.base.config
     }
@@ -160,23 +224,16 @@ pub struct QuantizedModelWriter {
 }
 
 impl QuantizedModelWriter {
+    /// Open `path` and write the `RADIOQM2` header.
     pub fn create(path: &Path) -> std::io::Result<QuantizedModelWriter> {
         let mut f = BufWriter::new(std::fs::File::create(path)?);
-        f.write_all(b"RADIOQM2")?;
+        f.write_all(MAGIC_QM2)?;
         Ok(QuantizedModelWriter { f, matrices: 0 })
     }
 
     /// Append one packed matrix record.
     pub fn write_matrix(&mut self, id: MatId, p: &PackedMatrix) -> std::io::Result<()> {
-        assert!(
-            (id.layer as u32) != END_OF_MATRICES,
-            "layer index collides with the end sentinel"
-        );
-        self.f.write_all(&(id.layer as u32).to_le_bytes())?;
-        self.f.write_all(&[id.role.tag()])?;
-        let bytes = p.to_bytes();
-        self.f.write_all(&(bytes.len() as u64).to_le_bytes())?;
-        self.f.write_all(&bytes)?;
+        write_matrix_record(&mut self.f, id, p)?;
         self.matrices += 1;
         Ok(())
     }
@@ -188,7 +245,7 @@ impl QuantizedModelWriter {
 
     /// Seal the container: end-of-matrices sentinel, then side params.
     pub fn finish(mut self, side: &SideParams) -> std::io::Result<()> {
-        self.f.write_all(&END_OF_MATRICES.to_le_bytes())?;
+        write_end_of_matrices(&mut self.f)?;
         side.write_to(&mut self.f)?;
         self.f.flush()
     }
