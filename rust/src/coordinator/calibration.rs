@@ -17,14 +17,16 @@
 //! target instead of a full recalibration, which is what `rd_sweep`
 //! exercises across seven rates off one artifact.
 
-use std::io::{BufWriter, Read, Write};
+use std::io::{BufWriter, Cursor, Read, Write};
 use std::path::Path;
 
 use crate::coordinator::dual_ascent::{self, DualAscentConfig};
+use crate::error::RadioError;
 use crate::model::config::ModelConfig;
 use crate::model::weights::{MatId, Role, Weights};
 use crate::quant::grouping::Grouping;
 use crate::stats::distortion::{self, GroupRd};
+use crate::util::integrity::{self, SectionWriter, SEC_HEADER, SEC_MATS};
 use crate::util::json::Json;
 
 /// Rate-independent calibration state for one quantizable matrix.
@@ -145,10 +147,14 @@ impl CalibrationStats {
     // ------------------------------------------------------ serialization
 
     /// Write the `.radiocal` artifact (`RADIOCS1`; byte-level spec in
-    /// `docs/FORMATS.md`).
+    /// `docs/FORMATS.md`). The integrity frame checksums the scalar
+    /// header and the per-matrix statistics as separate sections.
     pub fn save(&self, path: &Path) -> std::io::Result<()> {
         let mut f = BufWriter::new(std::fs::File::create(path)?);
         f.write_all(b"RADIOCS1")?;
+        f.write_all(integrity::CHECK_MAGIC)?;
+        let mut f = SectionWriter::new(f);
+        f.begin(SEC_HEADER);
         let cfg = self.config.to_json().to_string();
         f.write_all(&(cfg.len() as u32).to_le_bytes())?;
         f.write_all(cfg.as_bytes())?;
@@ -158,6 +164,8 @@ impl CalibrationStats {
         f.write_all(&self.seed.to_le_bytes())?;
         f.write_all(&self.pca_explained.to_le_bytes())?;
         f.write_all(&(self.mats.len() as u32).to_le_bytes())?;
+        f.end();
+        f.begin(SEC_MATS);
         for m in &self.mats {
             f.write_all(&(m.id.layer as u32).to_le_bytes())?;
             f.write_all(&[m.id.role.tag()])?;
@@ -174,18 +182,38 @@ impl CalibrationStats {
                 }
             }
         }
-        f.flush()
+        f.end();
+        f.finish().map(|_| ())
     }
 
     /// Read a `.radiocal` artifact; a reloaded artifact reproduces
-    /// allocations bit-for-bit (tested).
-    pub fn load(path: &Path) -> std::io::Result<CalibrationStats> {
-        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
-        let mut magic = [0u8; 8];
-        f.read_exact(&mut magic)?;
-        if &magic != b"RADIOCS1" {
-            return Err(inv("bad magic: not a radio calibration artifact"));
+    /// allocations bit-for-bit (tested). Checksummed artifacts (written
+    /// by this build) are verified before parsing; legacy artifacts
+    /// fall back to structural validation. Failures are typed
+    /// [`RadioError`]s.
+    pub fn load(path: &Path) -> Result<CalibrationStats, RadioError> {
+        let bytes = std::fs::read(path)?;
+        if bytes.len() < 8 {
+            return Err(RadioError::Truncated { section: "container magic".into() });
         }
+        if &bytes[..8] != b"RADIOCS1" {
+            return Err(RadioError::UnknownFormat {
+                detail: format!(
+                    "magic {:?} is not a radio calibration artifact",
+                    String::from_utf8_lossy(&bytes[..8])
+                ),
+            });
+        }
+        let payload: &[u8] = match integrity::verify(&bytes)? {
+            Some(checked) => checked.payload,
+            None => &bytes[8..],
+        };
+        Self::read_body(&mut Cursor::new(payload))
+            .map_err(|e| RadioError::from(e).in_section("calibration body"))
+    }
+
+    /// Parse a `RADIOCS1` body (the magic has been consumed).
+    fn read_body<R: Read>(f: &mut R) -> std::io::Result<CalibrationStats> {
         let mut l1 = [0u8; 1];
         let mut l4 = [0u8; 4];
         let mut l8 = [0u8; 8];
@@ -397,6 +425,93 @@ mod tests {
         std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
         assert!(CalibrationStats::load(&p).is_err());
         let _ = std::fs::remove_file(p);
+    }
+
+    /// Write a `RADIOCS1` in the pre-checksum layout (no integrity
+    /// marker, table, or trailer).
+    fn write_legacy_cs1(stats: &CalibrationStats, path: &Path) {
+        let mut f = BufWriter::new(std::fs::File::create(path).unwrap());
+        f.write_all(b"RADIOCS1").unwrap();
+        let cfg = stats.config.to_json().to_string();
+        f.write_all(&(cfg.len() as u32).to_le_bytes()).unwrap();
+        f.write_all(cfg.as_bytes()).unwrap();
+        f.write_all(&stats.calib_bits.to_le_bytes()).unwrap();
+        f.write_all(&(stats.rows_per_group as u32).to_le_bytes()).unwrap();
+        f.write_all(&(stats.iters as u32).to_le_bytes()).unwrap();
+        f.write_all(&stats.seed.to_le_bytes()).unwrap();
+        f.write_all(&stats.pca_explained.to_le_bytes()).unwrap();
+        f.write_all(&(stats.mats.len() as u32).to_le_bytes()).unwrap();
+        for m in &stats.mats {
+            f.write_all(&(m.id.layer as u32).to_le_bytes()).unwrap();
+            f.write_all(&[m.id.role.tag()]).unwrap();
+            f.write_all(&(m.grouping.rows as u32).to_le_bytes()).unwrap();
+            f.write_all(&(m.grouping.cols as u32).to_le_bytes()).unwrap();
+            f.write_all(&(m.grouping.m as u32).to_le_bytes()).unwrap();
+            for &g in &m.grouping.row_to_group {
+                f.write_all(&g.to_le_bytes()).unwrap();
+            }
+            for v in [&m.s2, &m.g2, &m.xbar] {
+                f.write_all(&(v.len() as u64).to_le_bytes()).unwrap();
+                for &x in v {
+                    f.write_all(&x.to_le_bytes()).unwrap();
+                }
+            }
+        }
+        f.flush().unwrap();
+    }
+
+    #[test]
+    fn legacy_unchecksummed_artifact_still_loads() {
+        let stats = synthetic_stats(0xCA16);
+        let path = std::env::temp_dir().join("radio_test_calib_legacy.radiocal");
+        write_legacy_cs1(&stats, &path);
+        let back = CalibrationStats::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(back.mats.len(), stats.mats.len());
+        for target in [2.0, 3.5] {
+            assert_eq!(
+                stats.allocate(target, 8, true).bits,
+                back.allocate(target, 8, true).bits
+            );
+        }
+    }
+
+    #[test]
+    fn cs1_boundary_corruption_is_rejected_typed() {
+        let stats = synthetic_stats(0xCA17);
+        let path = std::env::temp_dir().join("radio_test_calib_corrupt.radiocal");
+        stats.save(&path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let checked = integrity::verify(&good).unwrap().expect("artifacts are checked");
+        assert_eq!(checked.sections.len(), 2, "header + matrices");
+        let victim = std::env::temp_dir().join("radio_test_calib_victim.radiocal");
+        for s in &checked.sections {
+            for o in [s.off as usize, (s.off + s.len) as usize] {
+                std::fs::write(&victim, &good[..o]).unwrap();
+                let err = CalibrationStats::load(&victim).unwrap_err();
+                assert!(
+                    matches!(
+                        err,
+                        RadioError::Truncated { .. }
+                            | RadioError::Corrupt { .. }
+                            | RadioError::ChecksumMismatch { .. }
+                    ),
+                    "truncation at {o} gave {err:?}"
+                );
+            }
+            let mut bad = good.clone();
+            bad[(s.off + s.len / 2) as usize] ^= 0x20;
+            std::fs::write(&victim, &bad).unwrap();
+            assert!(
+                matches!(
+                    CalibrationStats::load(&victim).unwrap_err(),
+                    RadioError::ChecksumMismatch { .. }
+                ),
+                "bit flip inside section must be a checksum mismatch"
+            );
+        }
+        let _ = std::fs::remove_file(&victim);
     }
 
     #[test]

@@ -19,11 +19,12 @@
 //!
 //! Byte-level container spec: `docs/FORMATS.md`.
 
-use std::io::{BufWriter, Read, Write};
+use std::io::{BufWriter, Cursor, Read, Write};
 use std::path::Path;
 
 use crate::coordinator::calibration::CalibrationStats;
 use crate::coordinator::radio::Radio;
+use crate::error::RadioError;
 use crate::infer::Engine;
 use crate::model::weights::{MatId, Role, SideParams, Weights};
 use crate::quant::bitpack::PackedMatrix;
@@ -31,6 +32,7 @@ use crate::quant::format::{
     read_matrix_records, write_end_of_matrices, write_matrix_record, QuantizedModel, MAGIC_QM2,
     MAGIC_QM3,
 };
+use crate::util::integrity::{self, SectionWriter, SEC_HEADER, SEC_POINT, SEC_SIDE};
 
 /// One operating point of the ladder: the packed bitstreams and the
 /// rate-dependent corrected biases for a single target rate.
@@ -164,12 +166,19 @@ impl RateLadder {
     // ------------------------------------------------------ serialization
 
     /// Write the `RADIOQM3` container: every point's packed matrices and
-    /// corrected biases, then the shared side parameters once.
+    /// corrected biases, then the shared side parameters once. The
+    /// integrity frame checksums the header, each rate point, and the
+    /// side parameters as separate sections.
     pub fn save(&self, path: &Path) -> std::io::Result<()> {
         let mut f = BufWriter::new(std::fs::File::create(path)?);
         f.write_all(MAGIC_QM3)?;
+        f.write_all(integrity::CHECK_MAGIC)?;
+        let mut f = SectionWriter::new(f);
+        f.begin(SEC_HEADER);
         f.write_all(&(self.points.len() as u32).to_le_bytes())?;
+        f.end();
         for p in &self.points {
+            f.begin(SEC_POINT);
             f.write_all(&p.target_bits.to_le_bytes())?;
             for (id, pm) in &p.packed {
                 write_matrix_record(&mut f, *id, pm)?;
@@ -184,27 +193,47 @@ impl RateLadder {
                     f.write_all(&x.to_le_bytes())?;
                 }
             }
+            f.end();
         }
+        f.begin(SEC_SIDE);
         self.base.write_to(&mut f)?;
-        f.flush()
+        f.end();
+        f.finish().map(|_| ())
     }
 
     /// Load a `.radio` container as a ladder. A `RADIOQM3` file yields
     /// all its points; a single-point `RADIOQM2` file is accepted too
     /// (a one-rung ladder labeled with its achieved rate), so every
-    /// historical artifact remains ladder-loadable.
-    pub fn load(path: &Path) -> std::io::Result<RateLadder> {
-        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
-        let mut magic = [0u8; 8];
-        f.read_exact(&mut magic)?;
+    /// historical artifact remains ladder-loadable. Checksummed
+    /// containers are verified before parsing; legacy files fall back
+    /// to structural validation. Failures are typed [`RadioError`]s.
+    pub fn load(path: &Path) -> Result<RateLadder, RadioError> {
+        let bytes = std::fs::read(path)?;
+        if bytes.len() < 8 {
+            return Err(RadioError::Truncated { section: "container magic".into() });
+        }
+        let magic: [u8; 8] = bytes[..8].try_into().unwrap();
+        let payload: &[u8] = match integrity::verify(&bytes)? {
+            Some(checked) => checked.payload,
+            None => &bytes[8..],
+        };
+        let mut f = Cursor::new(payload);
         if &magic == MAGIC_QM3 {
-            return Self::read_body(&mut f);
+            return Self::read_body(&mut f)
+                .map_err(|e| RadioError::from(e).in_section("rate ladder body"));
         }
         if &magic != MAGIC_QM2 {
-            return Err(inv("bad magic: not a .radio container"));
+            return Err(RadioError::UnknownFormat {
+                detail: format!(
+                    "magic {:?} is not a .radio container",
+                    String::from_utf8_lossy(&magic)
+                ),
+            });
         }
-        let packed = read_matrix_records(&mut f)?;
-        let base = SideParams::read_from(&mut f)?;
+        let packed = read_matrix_records(&mut f)
+            .map_err(|e| RadioError::from(e).in_section("matrix stream"))?;
+        let base = SideParams::read_from(&mut f)
+            .map_err(|e| RadioError::from(e).in_section("side parameters"))?;
         let qm = QuantizedModel { base: base.clone(), packed };
         let achieved = qm.avg_bits();
         let point = RatePoint::from_model(achieved, qm);
@@ -412,6 +441,99 @@ mod tests {
             ladder.model(1).to_weights().layers[1].w1.data,
             q6.to_weights().layers[1].w1.data
         );
+    }
+
+    /// Write a ladder in the pre-checksum `RADIOQM3` layout (no
+    /// integrity marker, table, or trailer).
+    fn write_legacy_qm3(ladder: &RateLadder, path: &Path) {
+        let mut f = BufWriter::new(std::fs::File::create(path).unwrap());
+        f.write_all(MAGIC_QM3).unwrap();
+        f.write_all(&(ladder.points.len() as u32).to_le_bytes()).unwrap();
+        for p in &ladder.points {
+            f.write_all(&p.target_bits.to_le_bytes()).unwrap();
+            for (id, pm) in &p.packed {
+                write_matrix_record(&mut f, *id, pm).unwrap();
+            }
+            write_end_of_matrices(&mut f).unwrap();
+            f.write_all(&(p.biases.len() as u32).to_le_bytes()).unwrap();
+            for (id, b) in &p.biases {
+                f.write_all(&(id.layer as u32).to_le_bytes()).unwrap();
+                f.write_all(&[id.role.tag()]).unwrap();
+                f.write_all(&(b.len() as u32).to_le_bytes()).unwrap();
+                for &x in b {
+                    f.write_all(&x.to_le_bytes()).unwrap();
+                }
+            }
+        }
+        ladder.base.write_to(&mut f).unwrap();
+        f.flush().unwrap();
+    }
+
+    #[test]
+    fn legacy_unchecksummed_qm3_still_loads() {
+        let (w, _) = tiny_setup();
+        let q2 = rtn_quantize_model(&w, 2, 8);
+        let q4 = rtn_quantize_model(&w, 4, 8);
+        let ladder = RateLadder::from_models(vec![(2.0, q2), (4.0, q4)]);
+        let path = std::env::temp_dir().join("radio_test_ladder_legacy.radio");
+        write_legacy_qm3(&ladder, &path);
+        let back = RateLadder::load(&path).unwrap();
+        // And the cross-format dispatch: QuantizedModel::load resolves
+        // a legacy QM3 to its top point too.
+        let top = QuantizedModel::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(back.points.len(), 2);
+        assert_eq!(
+            back.model(1).to_weights().layers[0].wq.data,
+            ladder.model(1).to_weights().layers[0].wq.data
+        );
+        assert_eq!(
+            top.to_weights().layers[0].wq.data,
+            ladder.model(1).to_weights().layers[0].wq.data
+        );
+    }
+
+    #[test]
+    fn qm3_boundary_corruption_is_rejected_typed() {
+        let (w, _) = tiny_setup();
+        let q2 = rtn_quantize_model(&w, 2, 8);
+        let q4 = rtn_quantize_model(&w, 4, 8);
+        let ladder = RateLadder::from_models(vec![(2.0, q2), (4.0, q4)]);
+        let path = std::env::temp_dir().join("radio_test_ladder_corrupt.radio");
+        ladder.save(&path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let checked = integrity::verify(&good).unwrap().expect("ladders are checked");
+        // header / point / point / side — four sections.
+        assert_eq!(checked.sections.len(), 2 + ladder.points.len());
+        let victim = std::env::temp_dir().join("radio_test_ladder_victim.radio");
+        for s in &checked.sections {
+            for o in [s.off as usize, (s.off + s.len) as usize] {
+                std::fs::write(&victim, &good[..o]).unwrap();
+                let err = RateLadder::load(&victim).unwrap_err();
+                assert!(
+                    matches!(
+                        err,
+                        RadioError::Truncated { .. }
+                            | RadioError::Corrupt { .. }
+                            | RadioError::ChecksumMismatch { .. }
+                    ),
+                    "truncation at {o} gave {err:?}"
+                );
+            }
+            let mid = (s.off + s.len / 2) as usize;
+            if s.len > 0 {
+                let mut bad = good.clone();
+                bad[mid] ^= 0x04;
+                std::fs::write(&victim, &bad).unwrap();
+                let err = RateLadder::load(&victim).unwrap_err();
+                assert!(
+                    matches!(err, RadioError::ChecksumMismatch { .. }),
+                    "bit flip at {mid} gave {err:?}"
+                );
+            }
+        }
+        let _ = std::fs::remove_file(&victim);
     }
 
     #[test]

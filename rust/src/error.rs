@@ -1,0 +1,170 @@
+//! Structured error taxonomy for load and admission paths.
+//!
+//! Container loaders (`QuantizedModel::load`, `RateLadder::load`,
+//! `CalibrationStats::load`) and the serving scheduler report failures
+//! through [`RadioError`] instead of stringly-typed `anyhow` errors, so
+//! callers can dispatch on *what* went wrong (truncation vs. checksum
+//! mismatch vs. load shedding) rather than parsing messages. Every
+//! variant is `Clone + PartialEq` so errors can ride inside
+//! [`crate::infer::Response`] and be asserted on exactly in tests.
+
+use std::fmt;
+
+/// A typed failure from container I/O or the serving scheduler.
+///
+/// The first five variants cover container loading (I/O, framing, and
+/// integrity failures); the last three cover request-level faults
+/// surfaced by the continuous-batching scheduler.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RadioError {
+    /// An operating-system I/O failure (open, read, write), with the
+    /// underlying error rendered as text.
+    Io(String),
+    /// The container ended before the named section was complete.
+    Truncated {
+        /// Which part of the container hit end-of-file.
+        section: String,
+    },
+    /// A CRC32 over the named section did not match the stored value.
+    ChecksumMismatch {
+        /// Which checked section failed verification.
+        section: String,
+        /// The CRC32 recorded in the container.
+        expected: u32,
+        /// The CRC32 computed over the bytes actually read.
+        got: u32,
+    },
+    /// The bytes parsed but violated a structural invariant
+    /// (bad tag, inconsistent lengths, out-of-range index, ...).
+    Corrupt {
+        /// Which part of the container failed validation.
+        section: String,
+        /// What invariant was violated.
+        detail: String,
+    },
+    /// The leading magic named a format this build does not read.
+    UnknownFormat {
+        /// The unrecognized magic (or why dispatch failed).
+        detail: String,
+    },
+    /// The request was refused at admission because the queue exceeded
+    /// `ServeConfig::max_queued`.
+    Shed {
+        /// Queue length observed when the request was shed.
+        queued: usize,
+    },
+    /// The request was retired after `ServeConfig::deadline_steps`
+    /// scheduler iterations without finishing.
+    DeadlineExceeded {
+        /// Scheduler steps the request was resident before retirement.
+        steps: usize,
+    },
+    /// The request's lane panicked during a forward pass and was
+    /// isolated; any tokens decoded before the fault are returned.
+    LaneFault {
+        /// A rendering of the panic payload, when one was recoverable.
+        detail: String,
+    },
+}
+
+impl fmt::Display for RadioError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RadioError::Io(e) => write!(f, "i/o error: {e}"),
+            RadioError::Truncated { section } => {
+                write!(f, "container truncated in {section}")
+            }
+            RadioError::ChecksumMismatch { section, expected, got } => write!(
+                f,
+                "checksum mismatch in {section}: stored {expected:#010x}, computed {got:#010x}"
+            ),
+            RadioError::Corrupt { section, detail } => {
+                write!(f, "corrupt {section}: {detail}")
+            }
+            RadioError::UnknownFormat { detail } => {
+                write!(f, "unknown container format: {detail}")
+            }
+            RadioError::Shed { queued } => {
+                write!(f, "request shed at admission ({queued} queued)")
+            }
+            RadioError::DeadlineExceeded { steps } => {
+                write!(f, "request deadline exceeded after {steps} scheduler steps")
+            }
+            RadioError::LaneFault { detail } => {
+                write!(f, "lane fault: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RadioError {}
+
+impl From<std::io::Error> for RadioError {
+    fn from(e: std::io::Error) -> Self {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            RadioError::Truncated { section: "container".to_string() }
+        } else if e.kind() == std::io::ErrorKind::InvalidData {
+            RadioError::Corrupt {
+                section: "container".to_string(),
+                detail: e.to_string(),
+            }
+        } else {
+            RadioError::Io(e.to_string())
+        }
+    }
+}
+
+impl RadioError {
+    /// Re-label an I/O-derived error with the container section it came
+    /// from, so "unexpected EOF" becomes "truncated in matrix stream".
+    pub fn in_section(self, section: &str) -> Self {
+        match self {
+            RadioError::Truncated { .. } => {
+                RadioError::Truncated { section: section.to_string() }
+            }
+            RadioError::Corrupt { detail, .. } => {
+                RadioError::Corrupt { section: section.to_string(), detail }
+            }
+            other => other,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn io_error_kinds_map_to_typed_variants() {
+        let eof = std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "eof");
+        assert!(matches!(RadioError::from(eof), RadioError::Truncated { .. }));
+        let bad = std::io::Error::new(std::io::ErrorKind::InvalidData, "bad tag");
+        assert!(matches!(RadioError::from(bad), RadioError::Corrupt { .. }));
+        let os = std::io::Error::new(std::io::ErrorKind::PermissionDenied, "no");
+        assert!(matches!(RadioError::from(os), RadioError::Io(_)));
+    }
+
+    #[test]
+    fn in_section_relabels_truncation_and_corruption_only() {
+        let e = RadioError::Truncated { section: "container".into() };
+        assert_eq!(
+            e.in_section("side parameters"),
+            RadioError::Truncated { section: "side parameters".into() }
+        );
+        let io = RadioError::Io("disk on fire".into());
+        assert_eq!(io.clone().in_section("anything"), io);
+    }
+
+    #[test]
+    fn display_is_stable_and_informative() {
+        let e = RadioError::ChecksumMismatch {
+            section: "matrix stream".into(),
+            expected: 0xDEADBEEF,
+            got: 0x12345678,
+        };
+        let s = e.to_string();
+        assert!(s.contains("matrix stream"));
+        assert!(s.contains("0xdeadbeef"));
+        assert!(s.contains("0x12345678"));
+    }
+}

@@ -448,6 +448,12 @@ impl Engine {
                     cache.append_chunk(li, &k[r0..r1], &v[r0..r1]);
                 }
             }
+            // Fault-injection site (tag = layer): fires after this
+            // layer's K/V rows are appended but before any lane's clock
+            // advances, so an injected panic leaves rows dangling past
+            // `cache.len` — exactly the state the scheduler's
+            // `truncate_to(pre_len)` rollback must clean up.
+            crate::util::failpoint::fire("engine::forward_chunk::after_append", li as u64);
 
             // Attention: every row is independent given the (now
             // chunk-inclusive) caches — row r attends over its lane's

@@ -423,7 +423,16 @@ impl KvCache {
     /// and quantized backings). No-op when `len == self.len`.
     pub fn truncate_to(&mut self, len: usize) {
         assert!(len <= self.len, "truncate_to({len}) beyond cache length {}", self.len);
-        for store in self.k.iter_mut().chain(self.v.iter_mut()) {
+        for store in self.k.iter_mut() {
+            store.truncate_rows(len);
+        }
+        // Fault-injection site: a panic here leaves K truncated and V
+        // not, with `self.len` untouched. Because `truncate_rows` is
+        // per-store and trims to an absolute row count, re-running
+        // `truncate_to(len)` completes the rollback (K's truncation is
+        // a no-op the second time) — pinned by the mid-rollback test.
+        crate::util::failpoint::fire("kv::truncate_to::between_stores", 0);
+        for store in self.v.iter_mut() {
             store.truncate_rows(len);
         }
         self.len = len;
@@ -821,6 +830,57 @@ mod tests {
                         );
                     }
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn interrupted_rollback_resumes_bit_identical() {
+        // Satellite: inject a panic INSIDE truncate_to (between the K
+        // and V stores) and verify the rollback is resumable — a second
+        // truncate_to(keep) completes it, and the cache then behaves
+        // bit-identically to one that never held the rolled-back rows,
+        // including the quantized tail-word masking of the final
+        // partial page. A half-truncated page must never survive.
+        let cfg = tiny_cfg(1);
+        let mut rng = Rng::new(313);
+        let rows = rand_rows(&mut rng, 13, cfg.dim);
+        let vals = rand_rows(&mut rng, 13, cfg.dim);
+        let ext_k = rand_rows(&mut rng, 6, cfg.dim);
+        let ext_v = rand_rows(&mut rng, 6, cfg.dim);
+        for kvcfg in [
+            KvCacheConfig { page_rows: 4, ..KvCacheConfig::dense() },
+            KvCacheConfig {
+                page_rows: 4,
+                ..KvCacheConfig::quantized(KvQuantSpec::uniform(1, 5, 1.0, 0.1))
+            },
+        ] {
+            for keep in [0usize, 5, 8] {
+                let mut rolled = KvCache::new(&cfg, &kvcfg);
+                rolled.append_chunk(0, &rows, &vals);
+                rolled.len = 13;
+                {
+                    let _scenario = crate::util::failpoint::scenario();
+                    crate::util::failpoint::arm("kv::truncate_to::between_stores", 0, 1);
+                    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        rolled.truncate_to(keep)
+                    }));
+                    assert!(r.is_err(), "failpoint must interrupt the rollback");
+                }
+                // K is truncated, V is not, len is untouched.
+                assert_eq!(rolled.len, 13, "len must not advance past a failed rollback");
+                // Resume: the re-run completes the interrupted rollback.
+                rolled.truncate_to(keep);
+                assert_eq!(rolled.len, keep);
+                rolled.append_chunk(0, &ext_k, &ext_v);
+                rolled.len = keep + 6;
+
+                let mut fresh = KvCache::new(&cfg, &kvcfg);
+                fresh.append_chunk(0, &rows[..keep], &vals[..keep]);
+                fresh.append_chunk(0, &ext_k, &ext_v);
+                fresh.len = keep + 6;
+                assert_eq!(rolled.k_flat(0), fresh.k_flat(0), "keep={keep} K diverged");
+                assert_eq!(rolled.v_flat(0), fresh.v_flat(0), "keep={keep} V diverged");
             }
         }
     }

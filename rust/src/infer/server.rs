@@ -28,14 +28,32 @@
 //! lane reserves BOTH caches' worst cases at admission) — still token-
 //! identical to `generate`. [`serve_ladder`] picks the draft/target pair
 //! straight off a `RateLadder` container.
+//!
+//! **Fault containment**: every engine call a lane participates in runs
+//! under `catch_unwind`. A panicking lane is rolled back (paged-KV
+//! `truncate_to` to its pre-iteration length), retired with a typed
+//! [`RadioError::LaneFault`] response, and its pool reservation (and,
+//! in the speculative scheduler, its draft cache) released — while the
+//! surviving lanes of the batch re-run solo and keep decoding
+//! token-identically to `generate()`. [`ServeConfig::max_queued`] and
+//! [`ServeConfig::deadline_steps`] bound queueing and residency with
+//! typed [`RadioError::Shed`] / [`RadioError::DeadlineExceeded`]
+//! responses, and a degradation ladder sheds optimism before it sheds
+//! work: sustained KV-pool deferral halves the effective prefill chunk,
+//! and collapsed speculative acceptance turns speculation off. Neither
+//! degradation can change a single emitted token (chunking and
+//! speculation are both token-neutral by construction).
 
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::error::RadioError;
 use crate::infer::engine::{argmax, Engine};
 use crate::infer::kv::{lane_cost_bytes, KvCache, KvPool};
 use crate::infer::matvec::GEMM_ROW_TILE;
+use crate::util::failpoint;
 
 /// One generation request.
 #[derive(Clone, Debug)]
@@ -53,14 +71,22 @@ pub struct Request {
 pub struct Response {
     /// The request's id.
     pub id: usize,
-    /// Generated tokens (identical to `Engine::generate` on the prompt).
+    /// Generated tokens (identical to `Engine::generate` on the prompt;
+    /// a *prefix* of it when the request was retired early by a
+    /// deadline or an isolated lane fault — see [`Response::error`]).
     pub tokens: Vec<u32>,
     /// Completion latency measured from scheduler entry (queueing counts).
     pub latency: Duration,
     /// Time to first token, measured like `latency` from call entry. For
-    /// requests that generate nothing (`max_new == 0`) this equals the
-    /// completion latency.
+    /// requests that generate nothing (`max_new == 0` or shed at
+    /// admission) this equals the completion latency.
     pub ttft: Duration,
+    /// `None` for a clean completion; otherwise why the request ended
+    /// early ([`RadioError::Shed`], [`RadioError::DeadlineExceeded`], or
+    /// [`RadioError::LaneFault`]). Tokens decoded before the fault are
+    /// kept in [`Response::tokens`]. Every admitted request gets exactly
+    /// one response, faulted or not.
+    pub error: Option<RadioError>,
 }
 
 /// Scheduling knobs for [`serve_with`].
@@ -102,11 +128,23 @@ pub struct ServeConfig {
     /// rate). Ignored by the other entry points, which take their draft
     /// engine explicitly.
     pub draft_bits: Option<f64>,
+    /// Retire any request still resident after this many scheduler
+    /// iterations with a typed [`RadioError::DeadlineExceeded`]
+    /// response carrying the tokens decoded so far (always a prefix of
+    /// the `generate()` output). `None` = no deadline. Clean completion
+    /// on the deadline iteration wins the tie.
+    pub deadline_steps: Option<usize>,
+    /// Bounded admission: requests beyond this queue depth are refused
+    /// at scheduler entry with a typed [`RadioError::Shed`] response
+    /// (the oldest `max_queued` requests keep their FIFO service
+    /// order; the newest are shed). `None` = accept everything.
+    pub max_queued: Option<usize>,
 }
 
 impl ServeConfig {
     /// Default schedule for `max_batch` slots: tile-sized prefill
-    /// chunks, a two-tile budget, no KV bound, speculation off.
+    /// chunks, a two-tile budget, no KV bound, speculation off, no
+    /// deadline, unbounded queue.
     pub fn new(max_batch: usize) -> ServeConfig {
         ServeConfig {
             max_batch,
@@ -115,8 +153,35 @@ impl ServeConfig {
             kv_budget_bytes: None,
             spec_k: 0,
             draft_bits: None,
+            deadline_steps: None,
+            max_queued: None,
         }
     }
+}
+
+/// Degradation ladder: consecutive scheduler iterations with a KV-pool
+/// admission deferral before the effective prefill chunk is halved.
+/// Smaller chunks bound each iteration's GEMM cost, so resident lanes
+/// retire (and release pool budget) after less wall clock — the
+/// scheduler trades prompt-absorption bandwidth for drain latency
+/// instead of stalling the queue head behind full-size chunks.
+const DEFER_SHRINK_AFTER: usize = 4;
+
+/// Degradation ladder: proposals per acceptance-measurement window for
+/// the speculative schedulers. Windows are disjoint; the decision uses
+/// whole windows so one unlucky round cannot disable speculation.
+const SPEC_WINDOW: usize = 64;
+
+/// Degradation ladder: windowed acceptance below this fraction turns
+/// speculation off for the rest of the call (drafting then costs more
+/// engine work than it saves; emitted tokens are unaffected either way).
+const SPEC_MIN_ACCEPTANCE: f64 = 0.20;
+
+/// Degradation-ladder decision: should a full measurement window with
+/// this acceptance turn speculation off?
+fn spec_should_disable(win_proposed: usize, win_accepted: usize) -> bool {
+    win_proposed >= SPEC_WINDOW
+        && (win_accepted as f64) < SPEC_MIN_ACCEPTANCE * win_proposed as f64
 }
 
 impl Default for ServeConfig {
@@ -128,7 +193,9 @@ impl Default for ServeConfig {
 /// Aggregate serving statistics.
 #[derive(Clone, Debug)]
 pub struct ServeStats {
-    /// Requests completed.
+    /// Requests that finished cleanly (their [`Response::error`] is
+    /// `None`). Shed, timed-out, and faulted requests are counted by
+    /// their own fields below; [`ServeStats::accounted`] sums all four.
     pub completed: usize,
     /// Generated tokens across all responses (prompt tokens excluded).
     pub total_tokens: usize,
@@ -170,6 +237,22 @@ pub struct ServeStats {
     pub spec_proposed: usize,
     /// Draft proposals accepted by target verification.
     pub spec_accepted: usize,
+    /// Requests refused at admission under [`ServeConfig::max_queued`],
+    /// each answered with a [`RadioError::Shed`] response.
+    pub shed: usize,
+    /// Requests retired at [`ServeConfig::deadline_steps`] with partial
+    /// tokens and a [`RadioError::DeadlineExceeded`] response.
+    pub timed_out: usize,
+    /// Lanes that panicked mid-forward and were isolated
+    /// ([`RadioError::LaneFault`]): the batch survived, the lane's KV
+    /// (and draft) state was rolled back, its reservation released.
+    pub lane_faults: usize,
+    /// Times the degradation ladder halved the effective prefill chunk
+    /// under sustained KV-pool admission deferral.
+    pub chunk_shrinks: usize,
+    /// Times the degradation ladder disabled speculation after a full
+    /// acceptance window collapsed (at most once per serve call).
+    pub spec_disables: usize,
 }
 
 impl ServeStats {
@@ -182,6 +265,25 @@ impl ServeStats {
             self.spec_accepted as f64 / self.spec_proposed as f64
         }
     }
+
+    /// Responses produced for any reason: `completed + shed + timed_out
+    /// + lane_faults`. The scheduler answers every submitted request
+    /// exactly once, so this equals the request count — the accounting
+    /// invariant the fault-injection suite pins.
+    pub fn accounted(&self) -> usize {
+        self.completed + self.shed + self.timed_out + self.lane_faults
+    }
+}
+
+/// Fault/degradation tallies threaded from a scheduler loop into
+/// [`finalize_stats`].
+#[derive(Clone, Copy, Default)]
+struct RobustCounters {
+    shed: usize,
+    timed_out: usize,
+    lane_faults: usize,
+    chunk_shrinks: usize,
+    spec_disables: usize,
 }
 
 impl std::fmt::Display for ServeStats {
@@ -220,6 +322,19 @@ impl std::fmt::Display for ServeStats {
                 self.spec_proposed
             )?;
         }
+        if self.shed + self.timed_out + self.lane_faults > 0 {
+            write!(
+                f,
+                ", faults: {} shed / {} timed out / {} lane faults",
+                self.shed, self.timed_out, self.lane_faults
+            )?;
+        }
+        if self.chunk_shrinks > 0 {
+            write!(f, ", {} prefill-chunk shrinks", self.chunk_shrinks)?;
+        }
+        if self.spec_disables > 0 {
+            write!(f, ", speculation disabled mid-call")?;
+        }
         Ok(())
     }
 }
@@ -241,6 +356,7 @@ fn finalize_stats(
     peak_lanes: usize,
     kv_deferrals: usize,
     spec: (usize, usize),
+    robust: RobustCounters,
 ) -> ServeStats {
     let mut lats: Vec<Duration> = responses.iter().map(|r| r.latency).collect();
     // TTFT percentiles cover only responses that produced a token:
@@ -252,9 +368,17 @@ fn finalize_stats(
         .map(|r| r.ttft)
         .collect();
     let total_tokens: usize = responses.iter().map(|r| r.tokens.len()).sum();
+    let completed = responses.iter().filter(|r| r.error.is_none()).count();
+    // Exact accounting: every request's response is either clean or
+    // carries exactly one of the three fault reasons.
+    debug_assert_eq!(
+        completed + robust.shed + robust.timed_out + robust.lane_faults,
+        responses.len(),
+        "every request must be accounted exactly once"
+    );
     let secs = wall.as_secs_f64().max(1e-9);
     ServeStats {
-        completed: responses.len(),
+        completed,
         total_tokens,
         prompt_tokens,
         wall,
@@ -275,6 +399,50 @@ fn finalize_stats(
         kv_deferrals,
         spec_proposed: spec.0,
         spec_accepted: spec.1,
+        shed: robust.shed,
+        timed_out: robust.timed_out,
+        lane_faults: robust.lane_faults,
+        chunk_shrinks: robust.chunk_shrinks,
+        spec_disables: robust.spec_disables,
+    }
+}
+
+/// Bounded admission ([`ServeConfig::max_queued`]) applied at scheduler
+/// entry: requests beyond the bound are answered immediately with a
+/// typed [`RadioError::Shed`] response, newest first, so the oldest
+/// `max_queued` requests keep their FIFO service order. Returns the
+/// number shed.
+fn shed_overload(
+    queue: &mut VecDeque<Request>,
+    max_queued: Option<usize>,
+    responses: &mut Vec<Response>,
+    t0: Instant,
+) -> usize {
+    let Some(bound) = max_queued else { return 0 };
+    let mut shed = 0usize;
+    while queue.len() > bound {
+        let req = queue.pop_back().expect("len > bound implies non-empty");
+        let now = t0.elapsed();
+        responses.push(Response {
+            id: req.id,
+            tokens: Vec::new(),
+            latency: now,
+            ttft: now,
+            error: Some(RadioError::Shed { queued: bound }),
+        });
+        shed += 1;
+    }
+    shed
+}
+
+/// Render a `catch_unwind` payload for a [`RadioError::LaneFault`].
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s
+    } else {
+        "panic payload of unknown type"
     }
 }
 
@@ -293,6 +461,9 @@ struct ActiveSeq {
     /// Worst-case KV bytes reserved against the pool at admission,
     /// released verbatim at retirement.
     kv_cost: usize,
+    /// Scheduler iterations this lane has been resident — the clock
+    /// [`ServeConfig::deadline_steps`] is measured on.
+    steps_resident: usize,
 }
 
 impl ActiveSeq {
@@ -335,7 +506,6 @@ pub fn serve_with(
 ) -> (Vec<Response>, ServeStats) {
     let t0 = Instant::now();
     let max_batch = cfg.max_batch.max(1);
-    let prefill_chunk = cfg.prefill_chunk.max(1);
     let chunk_budget = cfg.chunk_budget.max(1);
     let max_seq = engine.config.max_seq;
     let mut queue: VecDeque<Request> = requests.into_iter().collect();
@@ -348,10 +518,18 @@ pub fn serve_with(
     let mut prompt_tokens = 0usize;
     let mut peak_lanes = 0usize;
     let mut kv_deferrals = 0usize;
+    let mut robust = RobustCounters::default();
+    // Degradation ladder: the effective prefill chunk starts at the
+    // configured value and halves after DEFER_SHRINK_AFTER consecutive
+    // deferral iterations. Chunking never changes tokens, so the ladder
+    // is free to move this knob mid-call.
+    let mut prefill_chunk = cfg.prefill_chunk.max(1);
+    let mut defer_streak = 0usize;
     // Counts deferral EPISODES (one per request that had to wait), not
     // wait iterations — the head request re-checks the pool every
     // iteration and would otherwise inflate the stat by decode length.
     let mut last_deferred: Option<usize> = None;
+    robust.shed = shed_overload(&mut queue, cfg.max_queued, &mut responses, t0);
 
     loop {
         // Admission: fill free slots from the queue, in arrival order,
@@ -361,6 +539,7 @@ pub fn serve_with(
         // and starvation-free) until retirements release budget; the
         // sole exception is a request too big for the whole budget,
         // which is admitted alone rather than deadlocking the queue.
+        let mut deferred_now = false;
         while active.len() < max_batch {
             let Some(req) = queue.pop_front() else { break };
             // One source of truth for the admission rule: whatever
@@ -380,6 +559,7 @@ pub fn serve_with(
                 if active.is_empty() && pool.reserved() == 0 {
                     pool.reserve_unchecked(kv_cost); // solo over-budget lane
                 } else {
+                    deferred_now = true;
                     if last_deferred != Some(req.id) {
                         kv_deferrals += 1;
                         last_deferred = Some(req.id);
@@ -398,10 +578,17 @@ pub fn serve_with(
                 out: Vec::new(),
                 ttft: None,
                 kv_cost,
+                steps_resident: 0,
             };
             if seq.max_new == 0 {
                 let now = t0.elapsed();
-                responses.push(Response { id: seq.id, tokens: seq.out, latency: now, ttft: now });
+                responses.push(Response {
+                    id: seq.id,
+                    tokens: seq.out,
+                    latency: now,
+                    ttft: now,
+                    error: None,
+                });
                 continue;
             }
             if seq.prompt.is_empty() {
@@ -411,7 +598,13 @@ pub fn serve_with(
                 if seq.is_done(0, max_seq) {
                     let now = t0.elapsed();
                     let ttft = seq.ttft.unwrap();
-                    responses.push(Response { id: seq.id, tokens: seq.out, latency: now, ttft });
+                    responses.push(Response {
+                        id: seq.id,
+                        tokens: seq.out,
+                        latency: now,
+                        ttft,
+                        error: None,
+                    });
                     pool.release(seq.kv_cost);
                     continue;
                 }
@@ -422,7 +615,23 @@ pub fn serve_with(
         if active.is_empty() {
             break;
         }
+        // Degradation ladder: sustained pool exhaustion shrinks the
+        // effective prefill chunk instead of letting the queue head
+        // stall behind full-size prompt chunks.
+        if deferred_now {
+            defer_streak += 1;
+            if defer_streak >= DEFER_SHRINK_AFTER && prefill_chunk > 1 {
+                prefill_chunk = (prefill_chunk / 2).max(1);
+                robust.chunk_shrinks += 1;
+                defer_streak = 0;
+            }
+        } else {
+            defer_streak = 0;
+        }
         peak_lanes = peak_lanes.max(active.len());
+        for seq in active.iter_mut() {
+            seq.steps_resident += 1;
+        }
 
         // Plan this iteration's chunks: decode lanes always feed their
         // single next token (never budget-limited — starving decode is
@@ -449,16 +658,84 @@ pub fn serve_with(
                 fed_now.push(0);
             }
         }
-        let fed_total: usize = chunks.iter().map(|c| c.len()).sum();
-        let logits = engine.prefill_batch_masked(&chunks, &mut caches, Some(&emit));
+
+        // Chunk lengths outlive `chunks` (which borrows `active`) for
+        // the accounting below, where `active` is borrowed mutably.
+        let chunk_lens: Vec<usize> = chunks.iter().map(|c| c.len()).collect();
+
+        // Fault containment around the one batched engine call. The
+        // failpoint "serve::lane" (tag = request id) is how the
+        // fault-injection suite kills a specific lane here; a real
+        // panic out of the engine (e.g. a corrupted KV page) takes the
+        // same path. On unwind: every cache is rolled back to its
+        // pre-iteration length (`forward_chunk` only advances `len`
+        // after a fully successful forward, so appended rows beyond
+        // `pre` are exactly the partial work), then each lane re-runs
+        // solo — per-lane numeric independence makes the solo result
+        // bit-identical to the batched one — and only the lane that
+        // panics again is retired with a typed fault.
+        let pre_lens: Vec<usize> = caches.iter().map(|c| c.len).collect();
+        let ids: Vec<usize> = active.iter().map(|s| s.id).collect();
+        let mut exit: Vec<Option<RadioError>> = vec![None; active.len()];
+        let batched = catch_unwind(AssertUnwindSafe(|| {
+            for (i, &id) in ids.iter().enumerate() {
+                if !chunks[i].is_empty() {
+                    failpoint::fire("serve::lane", id as u64);
+                }
+            }
+            engine.prefill_batch_masked(&chunks, &mut caches, Some(&emit))
+        }));
+        let logits = match batched {
+            Ok(l) => l,
+            Err(_) => {
+                for (c, &pre) in caches.iter_mut().zip(&pre_lens) {
+                    c.truncate_to(pre);
+                }
+                let mut solo = vec![Vec::new(); ids.len()];
+                for i in 0..ids.len() {
+                    if chunks[i].is_empty() {
+                        continue; // idle this iteration; nothing to redo
+                    }
+                    let one = catch_unwind(AssertUnwindSafe(|| {
+                        failpoint::fire("serve::lane", ids[i] as u64);
+                        engine.prefill_batch_masked(
+                            &chunks[i..i + 1],
+                            &mut caches[i..i + 1],
+                            Some(&emit[i..i + 1]),
+                        )
+                    }));
+                    match one {
+                        Ok(mut l) => solo[i] = l.pop().unwrap_or_default(),
+                        Err(payload) => {
+                            caches[i].truncate_to(pre_lens[i]);
+                            exit[i] = Some(RadioError::LaneFault {
+                                detail: format!(
+                                    "request {}: {}",
+                                    ids[i],
+                                    panic_message(payload.as_ref())
+                                ),
+                            });
+                            robust.lane_faults += 1;
+                        }
+                    }
+                }
+                solo
+            }
+        };
         steps += 1;
-        engine_tokens += fed_total;
-        prompt_tokens += fed_now.iter().sum::<usize>();
 
         // Advance every lane first (stable indices into `logits`), then
-        // compact out the finished ones.
+        // compact out the finished ones. Faulted lanes were rolled back
+        // — their chunk was never fed, so they contribute nothing to the
+        // token accounting and retire with whatever they decoded before.
         let mut retired = vec![false; active.len()];
         for (i, seq) in active.iter_mut().enumerate() {
+            if exit[i].is_some() {
+                retired[i] = true;
+                continue;
+            }
+            engine_tokens += chunk_lens[i];
+            prompt_tokens += fed_now[i];
             seq.fed += fed_now[i];
             if emit[i] {
                 let next = argmax(&logits[i]) as u32;
@@ -469,25 +746,48 @@ pub fn serve_with(
                 retired[i] = seq.is_done(caches[i].len, max_seq);
             }
         }
+        // Deadlines, after the iteration's work: clean completion on the
+        // deadline iteration wins the tie; partial tokens are kept.
+        if let Some(d) = cfg.deadline_steps {
+            for (i, seq) in active.iter().enumerate() {
+                if !retired[i] && seq.steps_resident >= d.max(1) {
+                    retired[i] = true;
+                    exit[i] = Some(RadioError::DeadlineExceeded { steps: seq.steps_resident });
+                    robust.timed_out += 1;
+                }
+            }
+        }
         // Back-to-front so swap_remove never disturbs an index still to
         // be visited (lanes are numerically independent, so batch order
-        // is free to change between steps).
+        // is free to change between steps). `exit` gets the identical
+        // swap_remove so it stays element-aligned with `active`.
         for i in (0..active.len()).rev() {
             if retired[i] {
                 let done = active.swap_remove(i);
                 caches.swap_remove(i);
+                let error = exit.swap_remove(i);
                 pool.release(done.kv_cost);
-                let ttft = done.ttft.expect("retired lanes emitted at least one token");
+                let now = t0.elapsed();
+                // A lane faulted or expired before its first token has
+                // no TTFT; report completion time so percentiles stay
+                // defined (such responses carry an error and no tokens).
+                let ttft = done.ttft.unwrap_or(now);
                 responses.push(Response {
                     id: done.id,
                     tokens: done.out,
-                    latency: t0.elapsed(),
+                    latency: now,
                     ttft,
+                    error,
                 });
             }
         }
     }
 
+    debug_assert_eq!(
+        pool.reserved(),
+        0,
+        "KV pool must drain to zero at scheduler exit (reservation leak)"
+    );
     responses.sort_by_key(|r| r.id);
     let stats = finalize_stats(
         &responses,
@@ -498,6 +798,7 @@ pub fn serve_with(
         peak_lanes,
         kv_deferrals,
         (0, 0),
+        robust,
     );
     (responses, stats)
 }
@@ -518,6 +819,8 @@ struct SpecSeq {
     /// The last element is always pending (emitted, not yet fed) — the
     /// `Engine::step_speculative` state contract.
     tokens: Vec<u32>,
+    /// Scheduler iterations resident (the `deadline_steps` clock).
+    steps_resident: usize,
 }
 
 /// [`serve_with`]'s scheduler with **per-lane self-speculative decoding**:
@@ -548,7 +851,6 @@ pub fn serve_speculative(
     );
     let t0 = Instant::now();
     let max_batch = cfg.max_batch.max(1);
-    let prefill_chunk = cfg.prefill_chunk.max(1);
     let chunk_budget = cfg.chunk_budget.max(1);
     let max_seq = engine.config.max_seq;
     let mut queue: VecDeque<Request> = requests.into_iter().collect();
@@ -560,12 +862,25 @@ pub fn serve_speculative(
     let (mut steps, mut engine_tokens, mut prompt_tokens) = (0usize, 0usize, 0usize);
     let (mut peak_lanes, mut kv_deferrals) = (0usize, 0usize);
     let (mut spec_proposed, mut spec_accepted) = (0usize, 0usize);
+    let mut robust = RobustCounters::default();
+    // Degradation ladder state (see serve_with for the chunk ladder):
+    // speculation is additionally disabled for the rest of the call
+    // once a full window of proposals collapses below the acceptance
+    // floor — drafting then burns more engine work than it saves, and
+    // turning it off never changes a token (speculation is
+    // token-neutral by the greedy-verification contract).
+    let mut prefill_chunk = cfg.prefill_chunk.max(1);
+    let mut defer_streak = 0usize;
+    let mut spec_enabled = true;
+    let (mut win_proposed, mut win_accepted) = (0usize, 0usize);
     let mut last_deferred: Option<usize> = None;
+    robust.shed = shed_overload(&mut queue, cfg.max_queued, &mut responses, t0);
 
     loop {
         // Admission: serve_with's rule, with the lane's worst case
         // covering BOTH caches. The draft cache always trails the target
         // cache, so the same row bound covers it.
+        let mut deferred_now = false;
         while active.len() < max_batch {
             let Some(req) = queue.pop_front() else { break };
             let keep = engine.admit_prompt(&req.prompt).len();
@@ -580,6 +895,7 @@ pub fn serve_speculative(
                 if active.is_empty() && pool.reserved() == 0 {
                     pool.reserve_unchecked(kv_cost); // solo over-budget lane
                 } else {
+                    deferred_now = true;
                     if last_deferred != Some(req.id) {
                         kv_deferrals += 1;
                         last_deferred = Some(req.id);
@@ -599,10 +915,17 @@ pub fn serve_speculative(
                 ttft: None,
                 kv_cost,
                 tokens: Vec::new(),
+                steps_resident: 0,
             };
             if seq.max_new == 0 {
                 let now = t0.elapsed();
-                responses.push(Response { id: seq.id, tokens: seq.out, latency: now, ttft: now });
+                responses.push(Response {
+                    id: seq.id,
+                    tokens: seq.out,
+                    latency: now,
+                    ttft: now,
+                    error: None,
+                });
                 continue;
             }
             if seq.prompt.is_empty() {
@@ -613,7 +936,13 @@ pub fn serve_speculative(
                 if seq.out.len() >= seq.max_new {
                     let now = t0.elapsed();
                     let ttft = seq.ttft.unwrap();
-                    responses.push(Response { id: seq.id, tokens: seq.out, latency: now, ttft });
+                    responses.push(Response {
+                        id: seq.id,
+                        tokens: seq.out,
+                        latency: now,
+                        ttft,
+                        error: None,
+                    });
                     pool.release(seq.kv_cost);
                     continue;
                 }
@@ -625,7 +954,20 @@ pub fn serve_speculative(
         if active.is_empty() {
             break;
         }
+        if deferred_now {
+            defer_streak += 1;
+            if defer_streak >= DEFER_SHRINK_AFTER && prefill_chunk > 1 {
+                prefill_chunk = (prefill_chunk / 2).max(1);
+                robust.chunk_shrinks += 1;
+                defer_streak = 0;
+            }
+        } else {
+            defer_streak = 0;
+        }
         peak_lanes = peak_lanes.max(active.len());
+        for seq in active.iter_mut() {
+            seq.steps_resident += 1;
+        }
 
         // Phase A — chunked prompt absorption on the target, exactly
         // serve_with's plan, except decode lanes contribute nothing here
@@ -653,13 +995,70 @@ pub fn serve_speculative(
             }
         }
         let mut retired = vec![false; active.len()];
+        let mut exit: Vec<Option<RadioError>> = vec![None; active.len()];
         let fed_total: usize = fed_now.iter().sum();
         if fed_total > 0 {
-            let logits = engine.prefill_batch_masked(&chunks, &mut caches, Some(&emit));
+            // Fault containment exactly as in serve_with: snapshot, one
+            // batched call under catch_unwind, rollback + solo re-runs
+            // on unwind, typed retirement for the lane that faults
+            // again. Decode lanes have empty chunks here (their work is
+            // Phase B), so they neither fire the failpoint nor re-run.
+            let pre_lens: Vec<usize> = caches.iter().map(|c| c.len).collect();
+            let ids: Vec<usize> = active.iter().map(|s| s.id).collect();
+            let chunk_lens: Vec<usize> = chunks.iter().map(|c| c.len()).collect();
+            let batched = catch_unwind(AssertUnwindSafe(|| {
+                for (i, &id) in ids.iter().enumerate() {
+                    if !chunks[i].is_empty() {
+                        failpoint::fire("serve::lane", id as u64);
+                    }
+                }
+                engine.prefill_batch_masked(&chunks, &mut caches, Some(&emit))
+            }));
+            let logits = match batched {
+                Ok(l) => l,
+                Err(_) => {
+                    for (c, &pre) in caches.iter_mut().zip(&pre_lens) {
+                        c.truncate_to(pre);
+                    }
+                    let mut solo = vec![Vec::new(); ids.len()];
+                    for i in 0..ids.len() {
+                        if chunks[i].is_empty() {
+                            continue;
+                        }
+                        let one = catch_unwind(AssertUnwindSafe(|| {
+                            failpoint::fire("serve::lane", ids[i] as u64);
+                            engine.prefill_batch_masked(
+                                &chunks[i..i + 1],
+                                &mut caches[i..i + 1],
+                                Some(&emit[i..i + 1]),
+                            )
+                        }));
+                        match one {
+                            Ok(mut l) => solo[i] = l.pop().unwrap_or_default(),
+                            Err(payload) => {
+                                caches[i].truncate_to(pre_lens[i]);
+                                exit[i] = Some(RadioError::LaneFault {
+                                    detail: format!(
+                                        "request {}: {}",
+                                        ids[i],
+                                        panic_message(payload.as_ref())
+                                    ),
+                                });
+                                robust.lane_faults += 1;
+                            }
+                        }
+                    }
+                    solo
+                }
+            };
             steps += 1;
-            engine_tokens += fed_total;
-            prompt_tokens += fed_total;
             for (i, seq) in active.iter_mut().enumerate() {
+                if exit[i].is_some() {
+                    retired[i] = true;
+                    continue;
+                }
+                engine_tokens += chunk_lens[i];
+                prompt_tokens += fed_now[i];
                 seq.fed += fed_now[i];
                 if emit[i] {
                     let first = argmax(&logits[i]) as u32;
@@ -676,46 +1075,102 @@ pub fn serve_speculative(
         // Phase B — one speculative round per decode lane. Per-lane by
         // design (acceptance lengths desynchronize lanes); each round is
         // internally GEMM-amortized (draft catch-up prefill + one
-        // chunked verify).
+        // chunked verify). Each round runs under catch_unwind: a panic
+        // rolls BOTH caches back to their pre-round lengths (the round
+        // never truncates below them, so the rollback target is always
+        // valid), retires the lane with a typed fault, and — via the
+        // retirement sweep — drops its draft cache and releases its
+        // pool reservation. Surviving lanes are untouched: rounds are
+        // per-lane, so there is nothing to re-run.
         for i in 0..active.len() {
             if !decoding[i] || retired[i] {
                 continue;
             }
+            let pre_t = caches[i].len;
+            let pre_d = draft_caches[i].len;
+            let eff_k = if spec_enabled { cfg.spec_k } else { 0 };
             let seq = &mut active[i];
-            let round = engine.step_speculative(
-                draft,
-                &mut seq.tokens,
-                &mut caches[i],
-                &mut draft_caches[i],
-                cfg.spec_k,
-                seq.max_new - seq.out.len(),
-            );
-            seq.out.extend_from_slice(&round.emitted);
-            steps += 1;
-            engine_tokens += round.proposed + 1; // target-fed, incl. rejected
-            spec_proposed += round.proposed;
-            spec_accepted += round.accepted;
-            retired[i] = seq.out.len() >= seq.max_new || caches[i].len >= max_seq;
+            let id = seq.id;
+            let left = seq.max_new - seq.out.len();
+            let round = {
+                let tokens = &mut seq.tokens;
+                let tcache = &mut caches[i];
+                let dcache = &mut draft_caches[i];
+                catch_unwind(AssertUnwindSafe(|| {
+                    failpoint::fire("serve::lane", id as u64);
+                    engine.step_speculative(draft, tokens, tcache, dcache, eff_k, left)
+                }))
+            };
+            match round {
+                Ok(round) => {
+                    seq.out.extend_from_slice(&round.emitted);
+                    steps += 1;
+                    engine_tokens += round.proposed + 1; // target-fed, incl. rejected
+                    spec_proposed += round.proposed;
+                    spec_accepted += round.accepted;
+                    win_proposed += round.proposed;
+                    win_accepted += round.accepted;
+                    retired[i] = seq.out.len() >= seq.max_new || caches[i].len >= max_seq;
+                }
+                Err(payload) => {
+                    caches[i].truncate_to(pre_t);
+                    draft_caches[i].truncate_to(pre_d);
+                    retired[i] = true;
+                    exit[i] = Some(RadioError::LaneFault {
+                        detail: format!("request {id}: {}", panic_message(payload.as_ref())),
+                    });
+                    robust.lane_faults += 1;
+                }
+            }
+        }
+        // Acceptance-collapse ladder, on disjoint whole windows.
+        if spec_enabled && cfg.spec_k > 0 && win_proposed >= SPEC_WINDOW {
+            if spec_should_disable(win_proposed, win_accepted) {
+                spec_enabled = false;
+                robust.spec_disables += 1;
+            }
+            win_proposed = 0;
+            win_accepted = 0;
+        }
+        // Deadlines, after both phases (completion wins the tie).
+        if let Some(d) = cfg.deadline_steps {
+            for (i, seq) in active.iter().enumerate() {
+                if !retired[i] && seq.steps_resident >= d.max(1) {
+                    retired[i] = true;
+                    exit[i] = Some(RadioError::DeadlineExceeded { steps: seq.steps_resident });
+                    robust.timed_out += 1;
+                }
+            }
         }
 
-        // Retirement sweep, back-to-front (as in serve_with).
+        // Retirement sweep, back-to-front (as in serve_with). Dropping
+        // the swap_removed draft cache IS the draft-release path for
+        // faulted lanes.
         for i in (0..active.len()).rev() {
             if retired[i] {
                 let done = active.swap_remove(i);
                 caches.swap_remove(i);
                 draft_caches.swap_remove(i);
+                let error = exit.swap_remove(i);
                 pool.release(done.kv_cost);
-                let ttft = done.ttft.expect("retired lanes emitted at least one token");
+                let now = t0.elapsed();
+                let ttft = done.ttft.unwrap_or(now);
                 responses.push(Response {
                     id: done.id,
                     tokens: done.out,
-                    latency: t0.elapsed(),
+                    latency: now,
                     ttft,
+                    error,
                 });
             }
         }
     }
 
+    debug_assert_eq!(
+        pool.reserved(),
+        0,
+        "KV pool must drain to zero at scheduler exit (reservation leak)"
+    );
     responses.sort_by_key(|r| r.id);
     let stats = finalize_stats(
         &responses,
@@ -726,6 +1181,7 @@ pub fn serve_speculative(
         peak_lanes,
         kv_deferrals,
         (spec_proposed, spec_accepted),
+        robust,
     );
     (responses, stats)
 }
@@ -784,7 +1240,7 @@ pub fn serve_threaded(
                 let latency = t0.elapsed();
                 let engine_toks = plen + tokens.len().saturating_sub(1);
                 responses.lock().unwrap().push((
-                    Response { id: req.id, tokens, latency, ttft: latency },
+                    Response { id: req.id, tokens, latency, ttft: latency, error: None },
                     engine_toks,
                     plen,
                 ));
@@ -796,8 +1252,17 @@ pub fn serve_threaded(
     let prompt_tokens: usize = done.iter().map(|(_, _, p)| p).sum();
     let mut responses: Vec<Response> = done.into_iter().map(|(r, _, _)| r).collect();
     responses.sort_by_key(|r| r.id);
-    let stats =
-        finalize_stats(&responses, t0.elapsed(), engine_tokens, prompt_tokens, 0, 0, 0, (0, 0));
+    let stats = finalize_stats(
+        &responses,
+        t0.elapsed(),
+        engine_tokens,
+        prompt_tokens,
+        0,
+        0,
+        0,
+        (0, 0),
+        RobustCounters::default(),
+    );
     (responses, stats)
 }
 
@@ -1172,6 +1637,211 @@ mod tests {
         let (resps, _) = serve(&engine, reqs, 2);
         for (r, want) in resps.iter().zip(&expected) {
             assert_eq!(r.tokens, *want, "request {}", r.id);
+        }
+    }
+
+    #[test]
+    fn overload_is_shed_with_typed_errors_and_exact_accounting() {
+        let engine = tiny_engine();
+        let reqs: Vec<Request> = (0..8)
+            .map(|id| Request { id, prompt: vec![(id % 30) as u32, 1], max_new: 3 })
+            .collect();
+        let expected: Vec<Vec<u32>> = reqs
+            .iter()
+            .map(|r| engine.generate(&r.prompt, r.max_new))
+            .collect();
+        let cfg = ServeConfig { max_queued: Some(5), ..ServeConfig::new(2) };
+        let (resps, stats) = serve_with(&engine, reqs, cfg);
+        assert_eq!(resps.len(), 8, "every request is answered exactly once");
+        assert_eq!(stats.shed, 3);
+        assert_eq!(stats.completed, 5);
+        assert_eq!(stats.accounted(), 8);
+        for r in &resps {
+            if r.id >= 5 {
+                // Newest requests are shed; the FIFO prefix is kept.
+                assert_eq!(r.error, Some(RadioError::Shed { queued: 5 }));
+                assert!(r.tokens.is_empty());
+            } else {
+                assert!(r.error.is_none());
+                assert_eq!(r.tokens, expected[r.id], "served request {} must match", r.id);
+            }
+        }
+    }
+
+    #[test]
+    fn deadlines_retire_lanes_with_partial_prefix_tokens() {
+        let engine = tiny_engine();
+        let reqs: Vec<Request> = (0..4)
+            .map(|id| Request { id, prompt: vec![(id + 1) as u32, 2], max_new: 8 })
+            .collect();
+        let expected: Vec<Vec<u32>> = reqs
+            .iter()
+            .map(|r| engine.generate(&r.prompt, r.max_new))
+            .collect();
+        let cfg = ServeConfig { deadline_steps: Some(3), ..ServeConfig::new(4) };
+        let (resps, stats) = serve_with(&engine, reqs, cfg);
+        assert_eq!(resps.len(), 4);
+        assert_eq!(stats.timed_out, 4, "8 decode steps cannot fit a 3-step deadline");
+        assert_eq!(stats.completed, 0);
+        assert_eq!(stats.accounted(), 4);
+        for (r, want) in resps.iter().zip(&expected) {
+            assert_eq!(r.error, Some(RadioError::DeadlineExceeded { steps: 3 }));
+            assert!(!r.tokens.is_empty(), "tokens decoded before the deadline are kept");
+            assert!(r.tokens.len() < want.len());
+            assert_eq!(
+                r.tokens[..],
+                want[..r.tokens.len()],
+                "partial output must be a prefix of generate()"
+            );
+        }
+        // A deadline wide enough for the whole request changes nothing.
+        let reqs: Vec<Request> =
+            (0..2).map(|id| Request { id, prompt: vec![(id + 1) as u32, 2], max_new: 4 }).collect();
+        let lax = ServeConfig { deadline_steps: Some(64), ..ServeConfig::new(2) };
+        let (resps, stats) = serve_with(&engine, reqs.clone(), lax);
+        assert_eq!(stats.timed_out, 0);
+        for (r, req) in resps.iter().zip(&reqs) {
+            assert!(r.error.is_none());
+            assert_eq!(r.tokens, engine.generate(&req.prompt, req.max_new));
+        }
+    }
+
+    #[test]
+    fn lane_panic_is_contained_and_survivors_match_generate() {
+        let engine = tiny_engine();
+        let reqs: Vec<Request> = (0..4)
+            .map(|id| Request { id, prompt: vec![(id + 3) as u32, 2], max_new: 4 })
+            .collect();
+        let expected: Vec<Vec<u32>> = reqs
+            .iter()
+            .map(|r| engine.generate(&r.prompt, r.max_new))
+            .collect();
+        let _s = crate::util::failpoint::scenario();
+        // Second hit: request 2 survives the first iteration (emitting
+        // one token), then panics inside the batched forward — and
+        // again in its solo re-run, which is what retires it.
+        crate::util::failpoint::arm("serve::lane", 2, 2);
+        let (resps, stats) = serve(&engine, reqs, 4);
+        assert_eq!(resps.len(), 4, "a lane fault must not lose any response");
+        assert_eq!(stats.lane_faults, 1);
+        assert_eq!(stats.completed, 3);
+        assert_eq!(stats.accounted(), 4);
+        for (r, want) in resps.iter().zip(&expected) {
+            if r.id == 2 {
+                assert!(
+                    matches!(r.error, Some(RadioError::LaneFault { .. })),
+                    "victim must retire with a typed lane fault, got {:?}",
+                    r.error
+                );
+                assert_eq!(
+                    r.tokens[..],
+                    want[..r.tokens.len()],
+                    "victim keeps a generate() prefix"
+                );
+                assert!(r.tokens.len() < want.len());
+            } else {
+                assert!(r.error.is_none(), "survivor {} must not see the fault", r.id);
+                assert_eq!(r.tokens, *want, "survivor {} must match generate()", r.id);
+            }
+        }
+    }
+
+    #[test]
+    fn speculative_lane_fault_is_contained_and_rolls_back_both_caches() {
+        let engine = tiny_engine();
+        let draft = tiny_engine(); // same seed -> same weights
+        let reqs: Vec<Request> = (0..4)
+            .map(|id| Request { id, prompt: vec![(id + 3) as u32, 2], max_new: 5 })
+            .collect();
+        let expected: Vec<Vec<u32>> = reqs
+            .iter()
+            .map(|r| engine.generate(&r.prompt, r.max_new))
+            .collect();
+        let _s = crate::util::failpoint::scenario();
+        // Hit 1 lands in Phase A (prompt absorption, survived); hit 2
+        // lands inside the lane's Phase-B speculative round, exercising
+        // the dual-cache rollback + draft-release path.
+        crate::util::failpoint::arm("serve::lane", 1, 2);
+        let cfg = ServeConfig { spec_k: 3, ..ServeConfig::new(4) };
+        let (resps, stats) = serve_speculative(&engine, &draft, reqs, cfg);
+        assert_eq!(resps.len(), 4);
+        assert_eq!(stats.lane_faults, 1);
+        assert_eq!(stats.completed, 3);
+        assert_eq!(stats.accounted(), 4);
+        assert!(stats.spec_proposed > 0, "surviving decode lanes must still draft");
+        for (r, want) in resps.iter().zip(&expected) {
+            if r.id == 1 {
+                assert!(matches!(r.error, Some(RadioError::LaneFault { .. })));
+                assert_eq!(r.tokens[..], want[..r.tokens.len()]);
+                assert!(r.tokens.len() < want.len());
+            } else {
+                assert!(r.error.is_none());
+                assert_eq!(r.tokens, *want, "survivor {} must match generate()", r.id);
+            }
+        }
+    }
+
+    #[test]
+    fn sustained_kv_deferral_shrinks_prefill_chunks_without_changing_tokens() {
+        let engine = tiny_engine();
+        let prompt: Vec<u32> = (0..12).map(|i| ((i * 5 + 1) % 32) as u32).collect();
+        let reqs = vec![
+            Request { id: 0, prompt: prompt.clone(), max_new: 6 },
+            Request { id: 1, prompt: prompt.clone(), max_new: 6 },
+        ];
+        let expected: Vec<Vec<u32>> = reqs
+            .iter()
+            .map(|r| engine.generate(&r.prompt, r.max_new))
+            .collect();
+        // Budget for exactly one worst-case lane: request 1 defers for
+        // every iteration request 0 is resident — long enough to walk
+        // the degradation ladder.
+        let worst = crate::infer::kv::lane_cost_bytes(
+            &engine.config,
+            engine.kv_config(),
+            engine.config.max_seq,
+        );
+        let cfg = ServeConfig { kv_budget_bytes: Some(worst), ..ServeConfig::new(4) };
+        let (resps, stats) = serve_with(&engine, reqs, cfg);
+        assert!(stats.kv_deferrals > 0);
+        assert!(stats.chunk_shrinks >= 1, "sustained deferral must shrink the prefill chunk");
+        assert_eq!(stats.completed, 2);
+        for (r, want) in resps.iter().zip(&expected) {
+            assert!(r.error.is_none());
+            assert_eq!(r.tokens, *want, "degraded chunking must not change tokens");
+        }
+    }
+
+    #[test]
+    fn acceptance_collapse_disables_speculation_without_changing_tokens() {
+        // The ladder's decision rule, pinned directly.
+        assert!(!spec_should_disable(SPEC_WINDOW - 1, 0), "partial windows never decide");
+        assert!(spec_should_disable(SPEC_WINDOW, 12), "12/64 < 20% must disable");
+        assert!(!spec_should_disable(SPEC_WINDOW, 16), "16/64 >= 20% must keep drafting");
+        // End to end with an adversarial draft: independently
+        // initialized weights, so acceptance is poor. Whether or not
+        // the ladder trips, tokens must equal the TARGET's generate().
+        let target = tiny_engine();
+        let cfg_m = ModelConfig { vocab: 32, dim: 16, heads: 2, layers: 1, mlp: 32, max_seq: 16 };
+        let mut rng = Rng::new(977);
+        let draft = Engine::from_dense(&Weights::init_training(cfg_m, &mut rng));
+        let reqs: Vec<Request> = (0..8)
+            .map(|id| Request { id, prompt: vec![(id % 30) as u32], max_new: 12 })
+            .collect();
+        let expected: Vec<Vec<u32>> = reqs
+            .iter()
+            .map(|r| target.generate(&r.prompt, r.max_new))
+            .collect();
+        let cfg = ServeConfig { spec_k: 4, ..ServeConfig::new(4) };
+        let (resps, stats) = serve_speculative(&target, &draft, reqs, cfg);
+        assert_eq!(stats.completed, 8);
+        assert!(stats.spec_disables <= 1, "the ladder can trip at most once per call");
+        if stats.spec_disables == 1 {
+            assert!(stats.spec_proposed >= SPEC_WINDOW, "only a full window can trip it");
+        }
+        for (r, want) in resps.iter().zip(&expected) {
+            assert!(r.error.is_none());
+            assert_eq!(r.tokens, *want, "request {} must serve the target's tokens", r.id);
         }
     }
 }

@@ -34,6 +34,12 @@
 
 pub mod util;
 
+// The typed error taxonomy for container loads and serving faults.
+// Part of the documented API surface: `RadioError` rides inside
+// `infer::Response` and is matched on by downstream tooling.
+#[warn(missing_docs)]
+pub mod error;
+
 pub mod stats;
 
 pub mod model;

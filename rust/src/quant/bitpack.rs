@@ -477,6 +477,17 @@ impl PackedMatrix {
         out
     }
 
+    /// Parse a blob produced by [`to_bytes`](Self::to_bytes), returning
+    /// the matrix and the bytes consumed.
+    ///
+    /// Every length field is untrusted: shapes are bounded against the
+    /// buffer before any allocation, tags and indices are validated,
+    /// and the bit geometry (`col_bit_offset` against per-group depths
+    /// and the word buffer) is cross-checked so that decode-side
+    /// readers — `BitReader` slicing and the unchecked-indexed matvec
+    /// plans — can never read out of bounds on a matrix that came
+    /// through this parser. A malformed header is an `Err`, never a
+    /// panic or a wild read.
     pub fn from_bytes(buf: &[u8]) -> Result<(PackedMatrix, usize), String> {
         let mut pos = 0usize;
         let rd_u32 = |buf: &[u8], pos: &mut usize| -> Result<u32, String> {
@@ -486,12 +497,26 @@ impl PackedMatrix {
             *pos += 4;
             Ok(u32::from_le_bytes(b.try_into().unwrap()))
         };
+        // Bound a count field by the bytes actually present, *before*
+        // allocating for it: a corrupt length can name gigabytes.
+        let fits = |count: usize, unit: usize, pos: usize, buf: &[u8]| -> Result<(), String> {
+            let need = count.checked_mul(unit).ok_or("packed matrix length overflow")?;
+            if need > buf.len() - pos {
+                return Err("truncated packed matrix".into());
+            }
+            Ok(())
+        };
         let rows = rd_u32(buf, &mut pos)? as usize;
         let cols = rd_u32(buf, &mut pos)? as usize;
         let m = rd_u32(buf, &mut pos)? as usize;
         let mode = QuantMode::from_tag(*buf.get(pos).ok_or("truncated")?)
             .ok_or("bad quant mode tag")?;
         pos += 1;
+        // Every producer has 1 <= m <= rows (m = ceil(rows / rows_per_group)).
+        if rows == 0 || m == 0 || m > rows {
+            return Err("bad grouping shape".into());
+        }
+        fits(rows, 4, pos, buf)?;
         let mut row_to_group = Vec::with_capacity(rows);
         for _ in 0..rows {
             row_to_group.push(rd_u32(buf, &mut pos)?);
@@ -504,10 +529,15 @@ impl PackedMatrix {
                 .push(r as u32);
         }
         let grouping = Grouping { rows, cols, m, row_to_group, group_rows };
-        let mut meta = Vec::with_capacity(cols * m);
-        for _ in 0..cols * m {
+        let n_groups = cols.checked_mul(m).ok_or("packed matrix length overflow")?;
+        fits(n_groups, 5, pos, buf)?;
+        let mut meta = Vec::with_capacity(n_groups);
+        for _ in 0..n_groups {
             let bits = *buf.get(pos).ok_or("truncated meta")?;
             pos += 1;
+            if bits > 8 {
+                return Err("group bit depth exceeds 8".into());
+            }
             let s = u16::from_le_bytes(
                 buf.get(pos..pos + 2).ok_or("truncated")?.try_into().unwrap(),
             );
@@ -519,6 +549,7 @@ impl PackedMatrix {
             meta.push(GroupMeta { bits, scale: f16_to_f32(s), mean: f16_to_f32(mu) });
         }
         let nwords = rd_u32(buf, &mut pos)? as usize;
+        fits(nwords, 8, pos, buf)?;
         let mut words = Vec::with_capacity(nwords);
         for _ in 0..nwords {
             let w = u64::from_le_bytes(
@@ -527,6 +558,7 @@ impl PackedMatrix {
             pos += 8;
             words.push(w);
         }
+        fits(cols + 1, 8, pos, buf)?;
         let mut col_bit_offset = Vec::with_capacity(cols + 1);
         for _ in 0..cols + 1 {
             let o = u64::from_le_bytes(
@@ -552,6 +584,7 @@ impl PackedMatrix {
             None
         };
         let n_fp = rd_u32(buf, &mut pos)? as usize;
+        fits(n_fp, 4 + cols * 2, pos, buf)?;
         let mut fp_rows = Vec::with_capacity(n_fp);
         for _ in 0..n_fp {
             let r = rd_u32(buf, &mut pos)?;
@@ -563,6 +596,36 @@ impl PackedMatrix {
                 vals.push(rd_f16(buf, &mut pos)?);
             }
             fp_rows.push((r, vals));
+        }
+        // Cross-check the bit geometry decode relies on: each column's
+        // code run must equal the sum of its groups' depths over the
+        // non-exception rows, runs must be nondecreasing from zero, and
+        // the stream must fit the word buffer. After this, `BitReader`
+        // and the matvec plans provably stay in bounds.
+        let mut is_fp = vec![false; rows];
+        for (r, _) in &fp_rows {
+            is_fp[*r as usize] = true;
+        }
+        let live_rows: Vec<usize> = grouping
+            .group_rows
+            .iter()
+            .map(|g| g.iter().filter(|&&r| !is_fp[r as usize]).count())
+            .collect();
+        if col_bit_offset[0] != 0 {
+            return Err("column offsets must start at zero".into());
+        }
+        for col in 0..cols {
+            let expect: usize =
+                (0..m).map(|sub| meta[col * m + sub].bits as usize * live_rows[sub]).sum();
+            let run = col_bit_offset[col + 1]
+                .checked_sub(col_bit_offset[col])
+                .ok_or("column offsets must be nondecreasing")?;
+            if run != expect {
+                return Err("column bit run disagrees with group metadata".into());
+            }
+        }
+        if *col_bit_offset.last().unwrap() > words.len() * 64 {
+            return Err("code stream overruns word buffer".into());
         }
         Ok((
             PackedMatrix {
@@ -859,5 +922,51 @@ mod tests {
         let bytes = PackedMatrix::pack(&w, &grouping, &meta, QuantMode::Companded).to_bytes();
         assert!(PackedMatrix::from_bytes(&bytes[..bytes.len() / 2]).is_err());
         assert!(PackedMatrix::from_bytes(&[]).is_err());
+    }
+
+    #[test]
+    fn from_bytes_rejects_malformed_headers_without_panicking() {
+        let mut rng = Rng::new(66);
+        let (rows, cols) = (16, 4);
+        let mut w = Tensor::zeros(rows, cols);
+        rng.fill_gauss(&mut w.data, 0.0, 1.0);
+        let scores: Vec<f64> = (0..rows).map(|_| rng.uniform()).collect();
+        let grouping = Grouping::build(rows, cols, 4, &scores);
+        let meta = random_meta(&mut rng, grouping.num_groups(), false);
+        let p = PackedMatrix::pack(&w, &grouping, &meta, QuantMode::Companded);
+        let good = p.to_bytes();
+        // Sanity: the untampered blob parses and consumes everything.
+        let (_, used) = PackedMatrix::from_bytes(&good).unwrap();
+        assert_eq!(used, good.len());
+
+        // A count field inflated to name gigabytes must fail fast
+        // (bounded against the buffer), not allocate or read wild.
+        let mut huge_rows = good.clone();
+        huge_rows[0..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(PackedMatrix::from_bytes(&huge_rows).is_err());
+        let mut huge_m = good.clone();
+        huge_m[8..12].copy_from_slice(&0x4000_0000u32.to_le_bytes());
+        assert!(PackedMatrix::from_bytes(&huge_m).is_err());
+
+        // Group depth above 8 would index past the dequant LUT table.
+        let meta_off = 13 + rows * 4;
+        let mut deep = good.clone();
+        deep[meta_off] = 9;
+        assert!(PackedMatrix::from_bytes(&deep).is_err());
+
+        // Corrupt column offsets: decode would walk the word buffer out
+        // of bounds, so the geometry cross-check must reject them.
+        let words_off = meta_off + grouping.num_groups() * 5;
+        let nwords =
+            u32::from_le_bytes(good[words_off..words_off + 4].try_into().unwrap()) as usize;
+        let offsets_off = words_off + 4 + nwords * 8;
+        let mut skewed = good.clone();
+        let last = offsets_off + cols * 8;
+        let big = (nwords as u64 * 64 + 64).to_le_bytes();
+        skewed[last..last + 8].copy_from_slice(&big);
+        assert!(PackedMatrix::from_bytes(&skewed).is_err());
+        let mut nonzero_base = good.clone();
+        nonzero_base[offsets_off..offsets_off + 8].copy_from_slice(&1u64.to_le_bytes());
+        assert!(PackedMatrix::from_bytes(&nonzero_base).is_err());
     }
 }

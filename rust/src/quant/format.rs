@@ -18,14 +18,22 @@
 //! [`QuantizedModel::load`] accepts both revisions and resolves a
 //! `RADIOQM3` file to its highest-rate point. Byte-level specs for both
 //! live in `docs/FORMATS.md`.
+//!
+//! Containers written by this build carry the `util::integrity` frame:
+//! an integrity marker after the magic, per-section CRC32s, and a
+//! trailing end magic, so truncation and bit flips are rejected at load
+//! with a typed [`RadioError`] instead of decoding garbage. Legacy
+//! (pre-checksum) containers — no marker after the magic — still load.
 
 use std::collections::BTreeMap;
-use std::io::{BufWriter, Read, Write};
+use std::io::{BufWriter, Cursor, Read, Write};
 use std::path::Path;
 
+use crate::error::RadioError;
 use crate::model::config::ModelConfig;
 use crate::model::weights::{MatId, Role, SideParams, Weights};
 use crate::quant::bitpack::PackedMatrix;
+use crate::util::integrity::{self, SectionWriter, SEC_MATRICES, SEC_SIDE};
 use crate::util::json::Json;
 
 /// Record tag marking the end of a packed-matrix stream.
@@ -174,24 +182,47 @@ impl QuantizedModel {
     /// ladder resolves to its **highest-rate point** (the serving
     /// target). Use `coordinator::ladder::RateLadder::load` to access
     /// every point of a ladder.
-    pub fn load(path: &Path) -> std::io::Result<QuantizedModel> {
-        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
-        let mut magic = [0u8; 8];
-        f.read_exact(&mut magic)?;
+    ///
+    /// Checksummed containers (written by this build) are verified
+    /// section-by-section before any payload byte is parsed; legacy
+    /// containers fall back to the per-field structural validations.
+    /// All failures are typed [`RadioError`]s — never a panic.
+    pub fn load(path: &Path) -> Result<QuantizedModel, RadioError> {
+        let bytes = std::fs::read(path)?;
+        if bytes.len() < 8 {
+            return Err(RadioError::Truncated { section: "container magic".into() });
+        }
+        let magic: [u8; 8] = bytes[..8].try_into().unwrap();
+        let payload: &[u8] = match integrity::verify(&bytes)? {
+            Some(checked) => checked.payload,
+            None => &bytes[8..],
+        };
+        let mut f = Cursor::new(payload);
         if &magic == MAGIC_QM3 {
-            let ladder = crate::coordinator::ladder::RateLadder::read_body(&mut f)?;
+            let ladder = crate::coordinator::ladder::RateLadder::read_body(&mut f)
+                .map_err(|e| RadioError::from(e).in_section("rate ladder body"))?;
             return ladder
                 .points
                 .len()
                 .checked_sub(1)
                 .map(|top| ladder.model(top))
-                .ok_or_else(|| inv("rate ladder carries no points"));
+                .ok_or_else(|| RadioError::Corrupt {
+                    section: "rate ladder body".into(),
+                    detail: "rate ladder carries no points".into(),
+                });
         }
         if &magic != MAGIC_QM2 {
-            return Err(inv("bad magic: not a .radio quantized model"));
+            return Err(RadioError::UnknownFormat {
+                detail: format!(
+                    "magic {:?} is not a .radio quantized model",
+                    String::from_utf8_lossy(&magic)
+                ),
+            });
         }
-        let packed = read_matrix_records(&mut f)?;
-        let base = SideParams::read_from(&mut f)?;
+        let packed = read_matrix_records(&mut f)
+            .map_err(|e| RadioError::from(e).in_section("matrix stream"))?;
+        let base = SideParams::read_from(&mut f)
+            .map_err(|e| RadioError::from(e).in_section("side parameters"))?;
         Ok(QuantizedModel { base, packed })
     }
 
@@ -218,16 +249,24 @@ impl QuantizedModel {
 /// seal the container with the side parameters. The Pack stage of the
 /// compression pipeline drives this so peak memory is one packing window,
 /// not the whole quantized model.
+///
+/// The integrity frame is computed *while* streaming: bytes pass
+/// through a CRC-tracking [`SectionWriter`], and the section table plus
+/// trailer land on [`finish`](Self::finish) — no buffering, no second
+/// pass over the file.
 pub struct QuantizedModelWriter {
-    f: BufWriter<std::fs::File>,
+    f: SectionWriter<BufWriter<std::fs::File>>,
     matrices: usize,
 }
 
 impl QuantizedModelWriter {
-    /// Open `path` and write the `RADIOQM2` header.
+    /// Open `path` and write the `RADIOQM2` header plus integrity marker.
     pub fn create(path: &Path) -> std::io::Result<QuantizedModelWriter> {
         let mut f = BufWriter::new(std::fs::File::create(path)?);
         f.write_all(MAGIC_QM2)?;
+        f.write_all(integrity::CHECK_MAGIC)?;
+        let mut f = SectionWriter::new(f);
+        f.begin(SEC_MATRICES);
         Ok(QuantizedModelWriter { f, matrices: 0 })
     }
 
@@ -243,11 +282,15 @@ impl QuantizedModelWriter {
         self.matrices
     }
 
-    /// Seal the container: end-of-matrices sentinel, then side params.
+    /// Seal the container: end-of-matrices sentinel, side params, then
+    /// the integrity section table and trailer.
     pub fn finish(mut self, side: &SideParams) -> std::io::Result<()> {
         write_end_of_matrices(&mut self.f)?;
+        self.f.end();
+        self.f.begin(SEC_SIDE);
         side.write_to(&mut self.f)?;
-        self.f.flush()
+        self.f.end();
+        self.f.finish().map(|_| ())
     }
 }
 
@@ -383,7 +426,95 @@ mod tests {
     fn load_rejects_garbage() {
         let p = std::env::temp_dir().join("radio_qm_garbage.radio");
         std::fs::write(&p, b"garbage file contents").unwrap();
-        assert!(QuantizedModel::load(&p).is_err());
+        assert!(matches!(
+            QuantizedModel::load(&p),
+            Err(RadioError::UnknownFormat { .. })
+        ));
         let _ = std::fs::remove_file(p);
+    }
+
+    /// Write `qm` in the pre-checksum layout: magic, records, sentinel,
+    /// side parameters — no integrity marker, table, or trailer.
+    fn write_legacy(qm: &QuantizedModel, path: &Path) {
+        let mut f = BufWriter::new(std::fs::File::create(path).unwrap());
+        f.write_all(MAGIC_QM2).unwrap();
+        for (id, p) in &qm.packed {
+            write_matrix_record(&mut f, *id, p).unwrap();
+        }
+        write_end_of_matrices(&mut f).unwrap();
+        qm.base.write_to(&mut f).unwrap();
+        f.flush().unwrap();
+    }
+
+    #[test]
+    fn legacy_unchecksummed_container_still_loads() {
+        let cfg = ModelConfig::preset("ropt-nano").unwrap();
+        let mut rng = Rng::new(97);
+        let w = Weights::init_training(cfg, &mut rng);
+        let qm = quantize_all(&w, 4);
+        let path = std::env::temp_dir().join("radio_test_qm_legacy.radio");
+        write_legacy(&qm, &path);
+        let back = QuantizedModel::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(qm.to_weights().layers[0].wq.data, back.to_weights().layers[0].wq.data);
+        assert_eq!(qm.base.embed.data, back.base.embed.data);
+    }
+
+    #[test]
+    fn truncation_and_bit_flip_at_every_section_boundary_are_rejected() {
+        let cfg = ModelConfig::preset("ropt-nano").unwrap();
+        let mut rng = Rng::new(98);
+        let w = Weights::init_training(cfg, &mut rng);
+        let qm = quantize_all(&w, 4);
+        let path = std::env::temp_dir().join("radio_test_qm_corrupt.radio");
+        qm.save(&path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+
+        let checked = integrity::verify(&good).unwrap().expect("new containers are checked");
+        // Interesting offsets: each section's start, midpoint, and end,
+        // plus the table and trailer region.
+        let mut offs: Vec<usize> = Vec::new();
+        for s in &checked.sections {
+            offs.push(s.off as usize);
+            offs.push((s.off + s.len / 2) as usize);
+            offs.push((s.off + s.len) as usize);
+        }
+        offs.push(good.len() - 10); // inside the trailer
+        offs.push(good.len() - 1); // final end-magic byte
+
+        let victim = std::env::temp_dir().join("radio_test_qm_victim.radio");
+        for &o in &offs {
+            // Truncate at the boundary: must fail typed, never panic.
+            std::fs::write(&victim, &good[..o]).unwrap();
+            let err = QuantizedModel::load(&victim).unwrap_err();
+            assert!(
+                matches!(
+                    err,
+                    RadioError::Truncated { .. }
+                        | RadioError::Corrupt { .. }
+                        | RadioError::ChecksumMismatch { .. }
+                ),
+                "truncation at {o} gave {err:?}"
+            );
+            // Bit-flip at the boundary (skipping offsets inside the
+            // 16-byte magic region and one-past-the-end).
+            if o >= integrity::HEADER_LEN && o < good.len() {
+                let mut bad = good.clone();
+                bad[o] ^= 0x10;
+                std::fs::write(&victim, &bad).unwrap();
+                let err = QuantizedModel::load(&victim).unwrap_err();
+                assert!(
+                    matches!(
+                        err,
+                        RadioError::Truncated { .. }
+                            | RadioError::Corrupt { .. }
+                            | RadioError::ChecksumMismatch { .. }
+                    ),
+                    "bit flip at {o} gave {err:?}"
+                );
+            }
+        }
+        let _ = std::fs::remove_file(&victim);
     }
 }

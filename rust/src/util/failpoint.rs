@@ -1,0 +1,153 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A *failpoint* is a named site in production code (`fire("name",
+//! tag)`) that does nothing unless a test has armed it. Tests arm a
+//! site through a [`Scenario`] guard: `arm(name, tag, after)` makes the
+//! `after`-th and every later hit of `(name, tag)` panic, which is how
+//! the fault-injection suite kills a specific serving lane mid-decode
+//! or interrupts a KV rollback between stores.
+//!
+//! Design constraints, in order:
+//!
+//! - **Zero cost when disabled.** The hot path is one relaxed atomic
+//!   load of a global flag; the registry lock is only touched while a
+//!   [`Scenario`] is alive. No site is ever compiled out, so release
+//!   and test builds exercise identical code paths.
+//! - **Deterministic.** Hit counts are keyed by `(site, tag)` and every
+//!   site in this codebase fires from the scheduler thread, so the
+//!   N-th hit is the same program point on every run.
+//! - **Isolated.** [`scenario`] serializes failpoint tests behind a
+//!   global mutex and clears all armed points when the guard drops
+//!   (including on panic), so scenarios cannot leak into each other or
+//!   into unrelated tests.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// Master switch: `fire` is a single relaxed load of this flag unless a
+/// [`Scenario`] is alive.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+struct Armed {
+    /// Panic on the `after`-th hit (1-based) and on every hit after it,
+    /// so a lane that re-runs solo after a batched fault faults again.
+    after: usize,
+    hits: usize,
+}
+
+type Registry = Mutex<HashMap<(String, u64), Armed>>;
+
+fn registry() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Serializes fault-injection tests: one scenario at a time.
+fn scenario_lock() -> &'static Mutex<()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    &LOCK
+}
+
+/// RAII guard for one fault-injection scenario. While alive, failpoints
+/// armed via [`arm`] are live; on drop (normal or panicking) every
+/// armed point is cleared and injection is disabled again.
+pub struct Scenario {
+    _serial: MutexGuard<'static, ()>,
+}
+
+impl Drop for Scenario {
+    fn drop(&mut self) {
+        ENABLED.store(false, Ordering::SeqCst);
+        registry().lock().unwrap_or_else(|p| p.into_inner()).clear();
+    }
+}
+
+/// Begin a fault-injection scenario. Blocks until any other scenario
+/// (possibly in another test thread) has finished, then enables the
+/// global failpoint switch. Arm sites with [`arm`] after calling this.
+pub fn scenario() -> Scenario {
+    let serial = scenario_lock().lock().unwrap_or_else(|p| p.into_inner());
+    registry().lock().unwrap_or_else(|p| p.into_inner()).clear();
+    ENABLED.store(true, Ordering::SeqCst);
+    Scenario { _serial: serial }
+}
+
+/// Arm the failpoint `name` for `tag`: the `after`-th hit (1-based) and
+/// every subsequent hit of `fire(name, tag)` panic. Requires a live
+/// [`Scenario`]; untagged sites fire with tag 0.
+pub fn arm(name: &str, tag: u64, after: usize) {
+    assert!(after >= 1, "failpoint trigger counts are 1-based");
+    assert!(
+        ENABLED.load(Ordering::SeqCst),
+        "failpoint::arm called outside a failpoint::scenario()"
+    );
+    registry()
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+        .insert((name.to_string(), tag), Armed { after, hits: 0 });
+}
+
+/// A failpoint site. Free when no [`Scenario`] is alive (one relaxed
+/// atomic load); under an armed scenario, panics once the hit count for
+/// `(name, tag)` reaches the armed threshold.
+#[inline]
+pub fn fire(name: &str, tag: u64) {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    fire_slow(name, tag);
+}
+
+#[cold]
+fn fire_slow(name: &str, tag: u64) {
+    let should_panic = {
+        let mut reg = registry().lock().unwrap_or_else(|p| p.into_inner());
+        match reg.get_mut(&(name.to_string(), tag)) {
+            Some(armed) => {
+                armed.hits += 1;
+                armed.hits >= armed.after
+            }
+            None => false,
+        }
+    };
+    if should_panic {
+        panic!("failpoint '{name}' fired (tag {tag})");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    #[test]
+    fn disabled_sites_are_inert() {
+        // No scenario alive: firing any name/tag is a no-op.
+        fire("nonexistent", 0);
+        fire("nonexistent", 42);
+    }
+
+    #[test]
+    fn fires_on_nth_hit_and_every_hit_after() {
+        let _s = scenario();
+        arm("test::nth", 7, 3);
+        fire("test::nth", 7);
+        fire("test::nth", 7);
+        let r = catch_unwind(AssertUnwindSafe(|| fire("test::nth", 7)));
+        assert!(r.is_err(), "third hit must panic");
+        let r = catch_unwind(AssertUnwindSafe(|| fire("test::nth", 7)));
+        assert!(r.is_err(), "hits after the threshold keep panicking");
+        // Different tag at the same site is independent.
+        fire("test::nth", 8);
+    }
+
+    #[test]
+    fn scenario_drop_clears_armed_points() {
+        {
+            let _s = scenario();
+            arm("test::cleared", 0, 1);
+        }
+        fire("test::cleared", 0); // must not panic: scenario ended
+    }
+}

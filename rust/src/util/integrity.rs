@@ -1,0 +1,429 @@
+//! Integrity framing for on-disk containers: per-section CRC32 plus
+//! total-length accounting, layered *behind* each container's existing
+//! 8-byte magic so legacy (pre-checksum) files remain readable.
+//!
+//! Checked layout (all integers little-endian):
+//!
+//! ```text
+//! u8[8]  container magic        # RADIOQM2 / RADIOQM3 / RADIOCS1
+//! u8[8]  "RADIOCK1"             # integrity marker; absent = legacy file
+//! ...    payload sections       # contiguous, exactly tiling the payload
+//! # section table, at table_off:
+//! u32    n_sections
+//! # per section: u8 tag, u64 off (absolute), u64 len, u32 crc32
+//! # trailer (final 20 bytes):
+//! u64    table_off
+//! u32    table_crc              # CRC32 of the section table bytes
+//! u8[8]  "RADIOEND"
+//! ```
+//!
+//! The trailing `RADIOEND` magic makes truncation at *any* byte —
+//! including exactly at a section boundary — detectable before any
+//! payload byte is parsed; the per-section CRCs localize bit flips to a
+//! named section. Writers stream: [`SectionWriter`] checksums bytes as
+//! they pass through, so `QuantizedModelWriter` never buffers a matrix
+//! twice. Readers verify the whole frame up front ([`verify`]) and then
+//! hand the body parser a plain byte slice, so every existing parser
+//! runs unchanged on the checked payload.
+
+use std::io::{self, Write};
+
+use crate::error::RadioError;
+
+/// Marker written immediately after the container magic of every
+/// checked container. A legacy container's body begins here instead;
+/// no legacy body can alias it (a `RADIOQM2` matrix record starting
+/// with these bytes would need role tag `b'O' = 0x4F`, which is
+/// rejected, and a `RADIOCS1` body would need a ~1.2 GB config header).
+pub const CHECK_MAGIC: &[u8; 8] = b"RADIOCK1";
+/// Final 8 bytes of every checked container.
+pub const END_MAGIC: &[u8; 8] = b"RADIOEND";
+/// Container magic (8 bytes) plus [`CHECK_MAGIC`] (8 bytes).
+pub const HEADER_LEN: usize = 16;
+/// `table_off: u64` + `table_crc: u32` + [`END_MAGIC`].
+const TRAILER_LEN: usize = 8 + 4 + 8;
+/// Bytes per section-table record: tag u8, off u64, len u64, crc u32.
+const RECORD_LEN: usize = 1 + 8 + 8 + 4;
+
+/// Section tag: the packed-matrix record stream of a `RADIOQM2`.
+pub const SEC_MATRICES: u8 = 1;
+/// Section tag: a side-parameter block.
+pub const SEC_SIDE: u8 = 2;
+/// Section tag: a container's fixed-size scalar header.
+pub const SEC_HEADER: u8 = 3;
+/// Section tag: one rate point of a `RADIOQM3` ladder.
+pub const SEC_POINT: u8 = 4;
+/// Section tag: the per-matrix statistics block of a `RADIOCS1`.
+pub const SEC_MATS: u8 = 5;
+
+/// Human-readable name of a section tag, for error messages.
+pub fn section_name(tag: u8) -> &'static str {
+    match tag {
+        SEC_MATRICES => "matrix stream",
+        SEC_SIDE => "side parameters",
+        SEC_HEADER => "container header",
+        SEC_POINT => "rate point",
+        SEC_MATS => "calibration matrices",
+        _ => "unknown section",
+    }
+}
+
+// ---------------------------------------------------------------------
+// CRC32 (IEEE 802.3, reflected, polynomial 0xEDB88320)
+// ---------------------------------------------------------------------
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+/// Incremental CRC32 (IEEE), for checksumming streamed writes.
+#[derive(Clone)]
+pub struct Crc32 {
+    state: u32,
+}
+
+impl Crc32 {
+    /// Start a fresh checksum.
+    pub fn new() -> Self {
+        Crc32 { state: 0xFFFF_FFFF }
+    }
+
+    /// Fold `bytes` into the running checksum.
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut c = self.state;
+        for &b in bytes {
+            c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+        self.state = c;
+    }
+
+    /// Finish and return the checksum value.
+    pub fn finalize(&self) -> u32 {
+        !self.state
+    }
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One-shot CRC32 of a byte slice.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = Crc32::new();
+    c.update(bytes);
+    c.finalize()
+}
+
+// ---------------------------------------------------------------------
+// Writer
+// ---------------------------------------------------------------------
+
+/// A `Write` adapter that checksums declared sections as bytes stream
+/// through, then appends the section table and trailer on
+/// [`SectionWriter::finish`].
+///
+/// The caller writes the 16-byte header (container magic +
+/// [`CHECK_MAGIC`]) to the underlying writer first, then wraps it and
+/// brackets every payload byte between [`begin`](Self::begin) /
+/// [`end`](Self::end) calls. Sections must be contiguous — the first
+/// begins at offset 16 and each subsequent one starts where the
+/// previous ended — which holds by construction as long as every byte
+/// is written inside a section.
+pub struct SectionWriter<W: Write> {
+    inner: W,
+    /// Absolute file offset of the next byte (starts after the header).
+    pos: u64,
+    done: Vec<(u8, u64, u64, u32)>,
+    open: Option<(u8, u64, Crc32)>,
+}
+
+impl<W: Write> SectionWriter<W> {
+    /// Wrap `inner`, which must already have the 16-byte checked header
+    /// written to it.
+    pub fn new(inner: W) -> Self {
+        SectionWriter { inner, pos: HEADER_LEN as u64, done: Vec::new(), open: None }
+    }
+
+    /// Open a new section with the given tag. Panics if one is open.
+    pub fn begin(&mut self, tag: u8) {
+        assert!(self.open.is_none(), "previous section not ended");
+        self.open = Some((tag, self.pos, Crc32::new()));
+    }
+
+    /// Close the open section, recording its extent and checksum.
+    pub fn end(&mut self) {
+        let (tag, off, crc) = self.open.take().expect("no open section");
+        self.done.push((tag, off, self.pos - off, crc.finalize()));
+    }
+
+    /// Write the section table and trailer, flush, and return the
+    /// underlying writer.
+    pub fn finish(mut self) -> io::Result<W> {
+        assert!(self.open.is_none(), "section still open at finish");
+        #[cfg(debug_assertions)]
+        {
+            let mut cursor = HEADER_LEN as u64;
+            for s in &self.done {
+                debug_assert_eq!(s.1, cursor, "sections must tile the payload contiguously");
+                cursor += s.2;
+            }
+        }
+        let table_off = self.pos;
+        let mut table = Vec::with_capacity(4 + self.done.len() * RECORD_LEN);
+        table.extend_from_slice(&(self.done.len() as u32).to_le_bytes());
+        for &(tag, off, len, crc) in &self.done {
+            table.push(tag);
+            table.extend_from_slice(&off.to_le_bytes());
+            table.extend_from_slice(&len.to_le_bytes());
+            table.extend_from_slice(&crc.to_le_bytes());
+        }
+        self.inner.write_all(&table)?;
+        self.inner.write_all(&table_off.to_le_bytes())?;
+        self.inner.write_all(&crc32(&table).to_le_bytes())?;
+        self.inner.write_all(END_MAGIC)?;
+        self.inner.flush()?;
+        Ok(self.inner)
+    }
+}
+
+impl<W: Write> Write for SectionWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        let n = self.inner.write(buf)?;
+        self.pos += n as u64;
+        if let Some((_, _, crc)) = self.open.as_mut() {
+            crc.update(&buf[..n]);
+        }
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Reader
+// ---------------------------------------------------------------------
+
+/// Description of one verified section, as recorded in the table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SectionInfo {
+    /// Section tag (`SEC_*`).
+    pub tag: u8,
+    /// Absolute byte offset of the section's first byte.
+    pub off: u64,
+    /// Section length in bytes.
+    pub len: u64,
+    /// CRC32 of the section bytes.
+    pub crc: u32,
+}
+
+/// A fully verified checked container.
+pub struct CheckedContainer<'a> {
+    /// The payload bytes (everything between the 16-byte header and the
+    /// section table), ready for the format's body parser.
+    pub payload: &'a [u8],
+    /// The verified section table, in file order.
+    pub sections: Vec<SectionInfo>,
+}
+
+fn u32_at(bytes: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap())
+}
+
+fn u64_at(bytes: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap())
+}
+
+fn corrupt(section: &str, detail: impl Into<String>) -> RadioError {
+    RadioError::Corrupt { section: section.to_string(), detail: detail.into() }
+}
+
+/// Verify the integrity frame of a container image (magic included).
+///
+/// Returns `Ok(None)` for legacy containers (no [`CHECK_MAGIC`] after
+/// the format magic) — the caller should parse the body from offset 8
+/// as before. Returns `Ok(Some(_))` once the trailer, section table,
+/// payload tiling, and every per-section CRC have all been verified.
+/// Any truncation or bit flip yields a typed [`RadioError`].
+pub fn verify(bytes: &[u8]) -> Result<Option<CheckedContainer<'_>>, RadioError> {
+    if bytes.len() < HEADER_LEN || &bytes[8..HEADER_LEN] != CHECK_MAGIC {
+        return Ok(None);
+    }
+    // Trailer: the file must end in RADIOEND with room for the table.
+    if bytes.len() < HEADER_LEN + 4 + TRAILER_LEN {
+        return Err(RadioError::Truncated { section: "integrity trailer".into() });
+    }
+    if &bytes[bytes.len() - END_MAGIC.len()..] != END_MAGIC {
+        return Err(RadioError::Truncated { section: "integrity trailer".into() });
+    }
+    let trailer = bytes.len() - TRAILER_LEN;
+    let table_off = u64_at(bytes, trailer);
+    let stored_table_crc = u32_at(bytes, trailer + 8);
+    if table_off < HEADER_LEN as u64 || table_off + 4 > trailer as u64 {
+        return Err(corrupt("integrity trailer", "section table offset out of range"));
+    }
+    let table_off = table_off as usize;
+    let table = &bytes[table_off..trailer];
+    let got_table_crc = crc32(table);
+    if got_table_crc != stored_table_crc {
+        return Err(RadioError::ChecksumMismatch {
+            section: "section table".into(),
+            expected: stored_table_crc,
+            got: got_table_crc,
+        });
+    }
+    let n = u32_at(table, 0) as usize;
+    if table.len() != 4 + n * RECORD_LEN {
+        return Err(corrupt("section table", "table length does not match entry count"));
+    }
+    let mut sections = Vec::with_capacity(n);
+    for i in 0..n {
+        let rec = 4 + i * RECORD_LEN;
+        sections.push(SectionInfo {
+            tag: table[rec],
+            off: u64_at(table, rec + 1),
+            len: u64_at(table, rec + 9),
+            crc: u32_at(table, rec + 17),
+        });
+    }
+    // Sections must exactly tile [HEADER_LEN, table_off).
+    let mut cursor = HEADER_LEN as u64;
+    for s in &sections {
+        if s.off != cursor {
+            return Err(corrupt("section table", "sections do not tile the payload"));
+        }
+        cursor = cursor
+            .checked_add(s.len)
+            .ok_or_else(|| corrupt("section table", "section length overflows"))?;
+    }
+    if cursor != table_off as u64 {
+        return Err(corrupt("section table", "sections do not cover the payload"));
+    }
+    for s in &sections {
+        let body = &bytes[s.off as usize..(s.off + s.len) as usize];
+        let got = crc32(body);
+        if got != s.crc {
+            return Err(RadioError::ChecksumMismatch {
+                section: section_name(s.tag).to_string(),
+                expected: s.crc,
+                got,
+            });
+        }
+    }
+    Ok(Some(CheckedContainer { payload: &bytes[HEADER_LEN..table_off], sections }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a checked container with the given magic and sections.
+    fn build(magic: &[u8; 8], sections: &[(u8, &[u8])]) -> Vec<u8> {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(magic);
+        buf.extend_from_slice(CHECK_MAGIC);
+        let mut w = SectionWriter::new(buf);
+        for &(tag, body) in sections {
+            w.begin(tag);
+            w.write_all(body).unwrap();
+            w.end();
+        }
+        w.finish().unwrap()
+    }
+
+    #[test]
+    fn crc32_matches_known_vector() {
+        // The canonical IEEE CRC32 check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn roundtrip_verifies_and_recovers_payload() {
+        let file = build(b"TESTMAG1", &[(SEC_HEADER, b"hdr"), (SEC_MATS, b"body bytes")]);
+        let checked = verify(&file).unwrap().expect("marker present");
+        assert_eq!(checked.payload, b"hdrbody bytes");
+        assert_eq!(checked.sections.len(), 2);
+        assert_eq!(checked.sections[0].tag, SEC_HEADER);
+        assert_eq!(checked.sections[0].off, 16);
+        assert_eq!(checked.sections[0].len, 3);
+        assert_eq!(checked.sections[1].off, 19);
+    }
+
+    #[test]
+    fn empty_sections_are_legal() {
+        let file = build(b"TESTMAG1", &[(SEC_MATRICES, b"")]);
+        let checked = verify(&file).unwrap().unwrap();
+        assert_eq!(checked.payload, b"");
+    }
+
+    #[test]
+    fn legacy_container_passes_through() {
+        assert!(verify(b"RADIOQM2rest-of-a-legacy-body").unwrap().is_none());
+        assert!(verify(b"short").unwrap().is_none());
+    }
+
+    #[test]
+    fn every_truncation_is_rejected() {
+        let file = build(b"TESTMAG1", &[(SEC_HEADER, b"hdr"), (SEC_MATS, b"body bytes")]);
+        for cut in HEADER_LEN..file.len() {
+            let err = verify(&file[..cut]).unwrap_err();
+            assert!(
+                matches!(
+                    err,
+                    RadioError::Truncated { .. } | RadioError::Corrupt { .. }
+                ),
+                "cut at {cut} gave {err:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn every_bit_flip_is_rejected() {
+        let file = build(b"TESTMAG1", &[(SEC_HEADER, b"hdr"), (SEC_MATS, b"body bytes")]);
+        // Flip one bit in every byte after the 16-byte header; each
+        // must surface as a typed integrity error (flips inside the
+        // header change the dispatch magic / downgrade to legacy, which
+        // the *format* loaders reject — covered in their tests).
+        for pos in HEADER_LEN..file.len() {
+            let mut bad = file.clone();
+            bad[pos] ^= 0x40;
+            let r = verify(&bad);
+            assert!(r.is_err(), "flip at {pos} was accepted: {:?}", r.as_ref().err());
+        }
+    }
+
+    #[test]
+    fn writer_checksums_streamed_writes_incrementally() {
+        // Many small writes must checksum identically to one big write.
+        let one = build(b"TESTMAG1", &[(SEC_MATS, b"abcdefghij")]);
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"TESTMAG1");
+        buf.extend_from_slice(CHECK_MAGIC);
+        let mut w = SectionWriter::new(buf);
+        w.begin(SEC_MATS);
+        for chunk in [b"abc".as_slice(), b"defgh", b"ij"] {
+            w.write_all(chunk).unwrap();
+        }
+        w.end();
+        let many = w.finish().unwrap();
+        assert_eq!(one, many);
+    }
+}

@@ -6,6 +6,8 @@
 pub mod bench;
 pub mod check;
 pub mod cli;
+pub mod failpoint;
+pub mod integrity;
 pub mod json;
 pub mod logging;
 pub mod rng;

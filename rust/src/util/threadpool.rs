@@ -423,4 +423,64 @@ mod tests {
         });
         assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
     }
+
+    #[test]
+    fn panic_in_reentrant_region_unwinds_through_both_levels() {
+        // A nested (inline) parallel call that panics must unwind out
+        // through the outer region to the submitter — and must not wedge
+        // the pool for later callers.
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            parallel_for_chunks(8, 1, |s0, _| {
+                parallel_for_dynamic(8, 1, |s1, _| {
+                    if s0 == 0 && s1 == 0 {
+                        panic!("deliberate nested panic");
+                    }
+                });
+            });
+        }));
+        assert!(result.is_err(), "nested panic must reach the submitter");
+        let v = parallel_map(64, 4, |i| i + 1);
+        assert!(v.iter().enumerate().all(|(i, x)| *x == i + 1), "pool must keep working");
+    }
+
+    #[test]
+    fn pool_is_reusable_after_repeated_poisoning() {
+        // Each panicking region may poison pool/latch mutexes while
+        // unwinding; the poison-tolerant locks must keep the pool fully
+        // functional across many poison/recover cycles, with every
+        // index still covered exactly once after each one.
+        for round in 0..5u64 {
+            let result = catch_unwind(AssertUnwindSafe(|| {
+                parallel_for_dynamic(32, 1, |s, _| {
+                    if s % 2 == 0 {
+                        panic!("deliberate panic, round {round}");
+                    }
+                });
+            }));
+            assert!(result.is_err(), "round {round} must propagate the panic");
+            let hits: Vec<AtomicU64> = (0..200).map(|_| AtomicU64::new(0)).collect();
+            parallel_for_chunks(200, 3, |s, e| {
+                for i in s..e {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "round {round}: coverage must be exact after recovery"
+            );
+        }
+    }
+
+    #[test]
+    fn panics_on_multiple_lanes_are_reported_once() {
+        // Every lane panicking at once must still produce exactly one
+        // propagated panic at the submitter (not an abort from a panic
+        // escaping a worker thread), and the pool must survive.
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            parallel_for_chunks(64, 1, |_, _| panic!("every lane panics"));
+        }));
+        assert!(result.is_err());
+        let v = parallel_map(32, 2, |i| 2 * i);
+        assert!(v.iter().enumerate().all(|(i, x)| *x == 2 * i));
+    }
 }

@@ -1,0 +1,282 @@
+//! Deterministic fault-injection suite for the serving stack and the
+//! container formats (`util::failpoint` + `util::integrity`).
+//!
+//! The contracts pinned here:
+//!
+//! - A lane panic mid-decode (injected inside the engine forward or at
+//!   the scheduler's per-lane failpoint) NEVER kills `serve_with` /
+//!   `serve_speculative`: the call returns, the poisoned lane retires
+//!   with a typed `RadioError::LaneFault` response, and every surviving
+//!   lane's tokens are bit-identical to `Engine::generate`.
+//! - `ServeStats` accounts every submitted request exactly once:
+//!   `completed + shed + timed_out + lane_faults == requests`.
+//! - KV-budget exhaustion composes with fault isolation (the pool
+//!   drains to zero — enforced by a debug assertion inside the
+//!   scheduler, live in these tests).
+//! - Truncating or bit-flipping a checked container at every section
+//!   boundary is rejected at load with a typed `RadioError` — no panic,
+//!   no silent garbage.
+
+use radio::coordinator::pipeline::rtn_quantize_model;
+use radio::error::RadioError;
+use radio::infer::{serve_speculative, serve_with, Engine, Request, Response, ServeConfig};
+use radio::model::weights::Weights;
+use radio::model::ModelConfig;
+use radio::quant::format::QuantizedModel;
+use radio::util::rng::Rng;
+use radio::util::{failpoint, integrity};
+
+fn tiny_engine(seed: u64) -> Engine {
+    let cfg = ModelConfig { vocab: 32, dim: 16, heads: 2, layers: 1, mlp: 32, max_seq: 16 };
+    let mut rng = Rng::new(seed);
+    Engine::from_dense(&Weights::init_training(cfg, &mut rng))
+}
+
+fn mk_requests(n: usize, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|id| {
+            let plen = 1 + rng.below(5);
+            let prompt: Vec<u32> = (0..plen).map(|_| rng.below(32) as u32).collect();
+            Request { id, prompt, max_new: 2 + rng.below(5) }
+        })
+        .collect()
+}
+
+/// The accounting invariant plus per-response sanity: every id answered
+/// exactly once, clean responses bit-identical to `generate`, faulted
+/// responses carrying a `generate` prefix and a typed error.
+fn assert_contained(
+    engine: &Engine,
+    reqs: &[Request],
+    resps: &[Response],
+    stats: &radio::infer::ServeStats,
+) {
+    assert_eq!(resps.len(), reqs.len(), "every request must be answered exactly once");
+    assert_eq!(stats.accounted(), reqs.len(), "stats must account every request exactly once");
+    for (r, req) in resps.iter().zip(reqs) {
+        assert_eq!(r.id, req.id, "responses must come back sorted by id, none lost");
+        let want = engine.generate(&req.prompt, req.max_new);
+        match &r.error {
+            None => assert_eq!(r.tokens, want, "clean request {} must match generate()", r.id),
+            Some(RadioError::Shed { .. }) => {
+                assert!(r.tokens.is_empty(), "shed request {} never decoded", r.id)
+            }
+            Some(RadioError::LaneFault { .. }) | Some(RadioError::DeadlineExceeded { .. }) => {
+                assert!(r.tokens.len() <= want.len());
+                assert_eq!(
+                    r.tokens[..],
+                    want[..r.tokens.len()],
+                    "faulted request {} must keep a generate() prefix",
+                    r.id
+                );
+            }
+            Some(other) => panic!("unexpected error variant on request {}: {other:?}", r.id),
+        }
+    }
+}
+
+#[test]
+fn engine_panics_mid_forward_never_kill_the_scheduler() {
+    let engine = tiny_engine(0xFA01);
+    let reqs = mk_requests(6, 0xFA02);
+    // The engine-level failpoint fires after layer 0's K/V append —
+    // K/V rows are in the cache but `len` has not advanced, the exact
+    // "corrupted KV page mid-forward" shape. Once armed past its
+    // threshold it panics on EVERY later forward, so this also proves
+    // the scheduler terminates when the engine becomes permanently
+    // poisoned: each remaining lane is isolated, rolled back, retired.
+    for after in [1usize, 3, 7] {
+        let _s = failpoint::scenario();
+        failpoint::arm("engine::forward_chunk::after_append", 0, after);
+        let (resps, stats) = serve_with(&engine, reqs.clone(), ServeConfig::new(3));
+        assert_contained(&engine, &reqs, &resps, &stats);
+        assert!(stats.lane_faults > 0, "after={after}: the armed fault must land");
+        assert_eq!(stats.completed + stats.lane_faults, reqs.len());
+    }
+}
+
+#[test]
+fn single_lane_fault_leaves_survivors_bit_identical() {
+    let engine = tiny_engine(0xFA11);
+    let reqs = mk_requests(5, 0xFA12);
+    let victim = 3usize;
+    let _s = failpoint::scenario();
+    failpoint::arm("serve::lane", victim as u64, 2);
+    let (resps, stats) = serve_with(&engine, reqs.clone(), ServeConfig::new(5));
+    assert_contained(&engine, &reqs, &resps, &stats);
+    assert_eq!(stats.lane_faults, 1);
+    assert_eq!(stats.completed, reqs.len() - 1);
+    assert!(matches!(resps[victim].error, Some(RadioError::LaneFault { .. })));
+}
+
+#[test]
+fn kv_exhaustion_composes_with_lane_faults() {
+    let engine = tiny_engine(0xFA21);
+    let reqs = mk_requests(6, 0xFA22);
+    let worst = radio::infer::lane_cost_bytes(
+        &engine.config,
+        engine.kv_config(),
+        engine.config.max_seq,
+    );
+    // Budget for two lanes: admissions defer behind the pool while one
+    // lane is killed mid-decode. Its reservation must come back (the
+    // scheduler's pool-drain debug assertion is live in tests), so the
+    // deferred requests still run and finish clean.
+    let cfg = ServeConfig { kv_budget_bytes: Some(2 * worst), ..ServeConfig::new(6) };
+    let _s = failpoint::scenario();
+    failpoint::arm("serve::lane", 0, 2);
+    let (resps, stats) = serve_with(&engine, reqs.clone(), cfg);
+    assert_contained(&engine, &reqs, &resps, &stats);
+    assert_eq!(stats.lane_faults, 1);
+    assert!(stats.peak_lanes <= 2, "budget for 2 lanes admitted {}", stats.peak_lanes);
+    assert!(stats.kv_deferrals > 0, "the tight pool must actually defer");
+}
+
+#[test]
+fn speculative_scheduler_contains_lane_faults() {
+    let engine = tiny_engine(0xFA31);
+    let draft = tiny_engine(0xFA31); // same seed -> same weights
+    let reqs = mk_requests(5, 0xFA32);
+    let _s = failpoint::scenario();
+    // Hit 1 lands in prompt absorption (Phase A), hit 2 inside the
+    // lane's speculative round (Phase B): the dual-cache rollback path.
+    failpoint::arm("serve::lane", 2, 2);
+    let cfg = ServeConfig { spec_k: 3, ..ServeConfig::new(5) };
+    let (resps, stats) = serve_speculative(&engine, &draft, reqs.clone(), cfg);
+    assert_contained(&engine, &reqs, &resps, &stats);
+    assert_eq!(stats.lane_faults, 1);
+    assert!(matches!(resps[2].error, Some(RadioError::LaneFault { .. })));
+}
+
+#[test]
+fn shedding_deadlines_and_faults_account_exactly_once() {
+    let engine = tiny_engine(0xFA41);
+    let mut reqs = mk_requests(8, 0xFA42);
+    // Give the back half long decodes so the deadline can bite.
+    for r in reqs.iter_mut().skip(3) {
+        r.max_new = 10;
+    }
+    let cfg = ServeConfig {
+        max_queued: Some(6),
+        deadline_steps: Some(4),
+        ..ServeConfig::new(3)
+    };
+    let _s = failpoint::scenario();
+    failpoint::arm("serve::lane", 1, 2);
+    let (resps, stats) = serve_with(&engine, reqs.clone(), cfg);
+    assert_contained(&engine, &reqs, &resps, &stats);
+    assert_eq!(stats.shed, 2, "requests 6 and 7 exceed the queue bound");
+    assert_eq!(stats.lane_faults, 1);
+    // Cross-check the stats against the per-response errors.
+    let count = |f: fn(&RadioError) -> bool| {
+        resps.iter().filter(|r| r.error.as_ref().map(f).unwrap_or(false)).count()
+    };
+    assert_eq!(count(|e| matches!(e, RadioError::Shed { .. })), stats.shed);
+    assert_eq!(count(|e| matches!(e, RadioError::DeadlineExceeded { .. })), stats.timed_out);
+    assert_eq!(count(|e| matches!(e, RadioError::LaneFault { .. })), stats.lane_faults);
+    assert_eq!(resps.iter().filter(|r| r.error.is_none()).count(), stats.completed);
+}
+
+#[test]
+fn corrupted_containers_are_rejected_typed_at_every_section_boundary() {
+    // Integration-level cut at the public API: save a real quantized
+    // model, then drive truncations and bit flips off the verified
+    // section table and assert `QuantizedModel::load` answers each with
+    // a typed error — never a panic, never silent garbage.
+    let cfg = ModelConfig { vocab: 32, dim: 16, heads: 2, layers: 1, mlp: 32, max_seq: 16 };
+    let mut rng = Rng::new(0xFA51);
+    let w = Weights::init_training(cfg, &mut rng);
+    let qm = rtn_quantize_model(&w, 4, 8);
+    let dir = std::env::temp_dir().join(format!("radio_fault_inj_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("model.radio");
+    qm.save(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    let checked = integrity::verify(&bytes)
+        .expect("freshly written container must verify")
+        .expect("writer must emit the checked framing");
+    let tmp = dir.join("tampered.radio");
+
+    let mut boundaries: Vec<usize> = vec![integrity::HEADER_LEN];
+    for s in &checked.sections {
+        boundaries.push(s.off as usize);
+        boundaries.push((s.off + s.len) as usize);
+        boundaries.push((s.off + s.len.max(1) / 2) as usize); // mid-section
+    }
+    for &cut in &boundaries {
+        std::fs::write(&tmp, &bytes[..cut]).unwrap();
+        let err = QuantizedModel::load(&tmp).expect_err("truncation must be rejected");
+        assert!(
+            matches!(
+                err,
+                RadioError::Truncated { .. }
+                    | RadioError::Corrupt { .. }
+                    | RadioError::ChecksumMismatch { .. }
+            ),
+            "truncation at {cut} gave unexpected error: {err:?}"
+        );
+    }
+    for &at in &boundaries {
+        if at >= bytes.len() {
+            continue;
+        }
+        let mut flipped = bytes.clone();
+        flipped[at] ^= 0x08;
+        std::fs::write(&tmp, &flipped).unwrap();
+        let err = QuantizedModel::load(&tmp).expect_err("bit flip must be rejected");
+        assert!(
+            matches!(
+                err,
+                RadioError::Truncated { .. }
+                    | RadioError::Corrupt { .. }
+                    | RadioError::ChecksumMismatch { .. }
+                    | RadioError::UnknownFormat { .. }
+            ),
+            "bit flip at {at} gave unexpected error: {err:?}"
+        );
+    }
+    // And the untampered original still loads.
+    let reloaded = QuantizedModel::load(&path).expect("pristine container must load");
+    assert_eq!(reloaded.packed.len(), qm.packed.len());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn checked_in_legacy_fixture_still_loads() {
+    // `legacy_tiny.radio` (generated by tools/make_legacy_fixture.py) is
+    // a pre-checksum RADIOQM2 container: magic, matrix records, side
+    // params — no integrity marker, section table, or trailer. This pins
+    // the back-compat promise: old containers keep loading forever.
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/fixtures/legacy_tiny.radio");
+    let bytes = std::fs::read(&path).expect("fixture must be checked in");
+    assert!(
+        integrity::verify(&bytes).expect("legacy bytes must pass verify as legacy").is_none(),
+        "fixture must NOT carry the checked framing — that is the point"
+    );
+
+    let qm = QuantizedModel::load(&path).expect("legacy fixture must load");
+    assert_eq!(qm.packed.len(), 6, "one layer, six block matrices");
+    assert_eq!(qm.config().dim, 8);
+    assert_eq!(qm.config().vocab, 32);
+    // Structurally complete: dequantizes into a full Weights.
+    let w = qm.to_weights();
+    assert_eq!(w.layers.len(), 1);
+    assert_eq!(w.layers[0].w1.rows * w.layers[0].w1.cols, 8 * 16);
+
+    // Legacy containers have no checksums, but structural validation
+    // still rejects truncation with a typed error — never a panic.
+    let dir = std::env::temp_dir().join(format!("radio_legacy_fix_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let tmp = dir.join("truncated.radio");
+    for cut in [4usize, 8, 12, 40, bytes.len() / 2, bytes.len() - 9, bytes.len() - 1] {
+        std::fs::write(&tmp, &bytes[..cut]).unwrap();
+        let err = QuantizedModel::load(&tmp).expect_err("truncated legacy must be rejected");
+        assert!(
+            matches!(err, RadioError::Truncated { .. } | RadioError::Corrupt { .. }),
+            "legacy truncation at {cut} gave unexpected error: {err:?}"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,107 @@
+#!/usr/bin/env python3
+"""Generate the checked-in legacy (pre-checksum) `.radio` fixture.
+
+Writes `rust/tests/fixtures/legacy_tiny.radio`: a RADIOQM2 container in
+the PRE-integrity-frame byte layout — magic, self-delimiting packed
+matrix records, end sentinel, side parameters — with NO "RADIOCK1"
+marker, section table, or trailer. The fixture pins back-compat: every
+future build must keep loading containers written before checksum
+framing existed (`fault_injection.rs::checked_in_legacy_fixture_*`).
+
+The model is a 1-layer toy (vocab 32, dim 8, heads 2, mlp 16, max_seq 8)
+quantized at a uniform 4 bits, one row group per matrix, all-zero code
+words — structurally a full, dequantizable model while keeping the
+binary a few KB. Deterministic: re-running reproduces identical bytes.
+"""
+
+import struct
+from pathlib import Path
+
+OUT = Path(__file__).resolve().parent.parent / "rust" / "tests" / "fixtures" / "legacy_tiny.radio"
+
+VOCAB, DIM, HEADS, LAYERS, MLP, MAX_SEQ = 32, 8, 2, 1, 16, 8
+BITS = 4
+END_OF_MATRICES = 0xFFFFFFFF
+
+# (role tag, rows, cols) in Role::tag() order: Q K V O Up Down.
+MATRICES = [
+    (0, DIM, DIM),
+    (1, DIM, DIM),
+    (2, DIM, DIM),
+    (3, DIM, DIM),
+    (4, DIM, MLP),   # mlp_up: dim x mlp
+    (5, MLP, DIM),   # mlp_down: mlp x dim
+]
+
+
+def lcg(seed):
+    """Deterministic f32-friendly value stream (no float env dependence)."""
+    state = seed
+    while True:
+        state = (state * 6364136223846793005 + 1442695040888963407) % (1 << 64)
+        yield ((state >> 40) % 2001 - 1000) / 1000.0  # [-1, 1] in 1e-3 steps
+
+
+def packed_matrix_blob(rows, cols):
+    """PackedMatrix::to_bytes layout: header, row_to_group, per-group
+    meta (bits + f16 scale/mean), code words, col_bit_offset, AWQ flag,
+    OWQ exception count. One group (m=1), all-zero codes."""
+    out = bytearray()
+    out += struct.pack("<III", rows, cols, 1)  # rows, cols, m
+    out += struct.pack("<B", 0)  # QuantMode::Companded
+    out += struct.pack("<I", 0) * rows  # row_to_group: all group 0
+    for _ in range(cols):  # meta, indexed [col * m + group]
+        out += struct.pack("<B", BITS)
+        out += struct.pack("<e", 0.0625)  # scale (f16-exact)
+        out += struct.pack("<e", 0.0)  # mean
+    total_bits = rows * cols * BITS
+    nwords = (total_bits + 63) // 64
+    out += struct.pack("<I", nwords)
+    out += struct.pack("<Q", 0) * nwords  # all codes zero
+    for c in range(cols + 1):  # col_bit_offset: BITS * rows per column
+        out += struct.pack("<Q", c * rows * BITS)
+    out += struct.pack("<B", 0)  # no AWQ row scales
+    out += struct.pack("<I", 0)  # no OWQ exception rows
+    return bytes(out)
+
+
+def side_params():
+    """SideParams::write_to layout: u32-length JSON config, then
+    u64-length-prefixed f32 slices in SideParams::slices() order."""
+    cfg = (
+        '{"vocab":%d,"dim":%d,"heads":%d,"layers":%d,"mlp":%d,"max_seq":%d}'
+        % (VOCAB, DIM, HEADS, LAYERS, MLP, MAX_SEQ)
+    )
+    out = bytearray()
+    out += struct.pack("<I", len(cfg))
+    out += cfg.encode("ascii")
+    vals = lcg(191)
+    slices = [VOCAB * DIM, MAX_SEQ * DIM]  # embed, pos
+    for _ in range(LAYERS):
+        # ln1_g ln1_b bq bk bv bo ln2_g ln2_b b1 b2
+        slices += [DIM] * 8 + [MLP, DIM]
+    slices += [DIM, DIM]  # lnf_g, lnf_b
+    for n in slices:
+        out += struct.pack("<Q", n)
+        for _ in range(n):
+            out += struct.pack("<f", next(vals))
+    return bytes(out)
+
+
+def main():
+    out = bytearray(b"RADIOQM2")  # magic only: no RADIOCK1 marker
+    for tag, rows, cols in MATRICES:
+        blob = packed_matrix_blob(rows, cols)
+        out += struct.pack("<I", 0)  # layer 0
+        out += struct.pack("<B", tag)
+        out += struct.pack("<Q", len(blob))
+        out += blob
+    out += struct.pack("<I", END_OF_MATRICES)
+    out += side_params()
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    OUT.write_bytes(bytes(out))
+    print(f"wrote {OUT} ({len(out)} bytes)")
+
+
+if __name__ == "__main__":
+    main()
