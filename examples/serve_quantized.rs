@@ -8,12 +8,14 @@
 //! cargo run --release --offline --example serve_quantized [-- --requests 32 --max-batch 8]
 //! ```
 
-use radio::coordinator::{kv_spec_for, NativeProvider, Radio, RateLadder};
+use radio::coordinator::{kv_spec_for, NativeProvider, Radio, RadioConfig, RateLadder};
 use radio::exp;
 use radio::infer::{
     lane_cost_bytes, serve, serve_ladder, serve_threaded, serve_with, Engine, KvCacheConfig,
     Request, ServeConfig,
 };
+use radio::quant::activations::ActScalePolicy;
+use radio::quant::QuantMode;
 use radio::util::cli::Args;
 use radio::util::rng::Rng;
 
@@ -150,6 +152,41 @@ fn main() {
         resp_q.iter().map(|r| &r.tokens).collect::<Vec<_>>(),
         "speculative serving must produce identical tokens"
     );
+
+    // Activation-quantized serving (the fully-integer W·A hot path):
+    // the SAME calibration artifact also carries per-layer activation
+    // moments, so one joint dual-ascent solve allocates weight AND input
+    // bit depths together (calibrate once, serve W4A8). The weight side
+    // is packed in uniform mode — the affine LUT the integer tiles
+    // factor through; companded packs route via the fake-quant fallback
+    // instead (DESIGN.md §Activation quantization) — and the spec rides
+    // inside the QuantizedModel, so `from_quantized` applies it without
+    // any extra wiring.
+    let radio_u = Radio::new(RadioConfig {
+        mode: QuantMode::Uniform,
+        ..exp::radio_cfg(4.0, 32, exp::smoke_scaled(10, 2))
+    });
+    let joint = stats.allocate_joint(4.0, 8.0, 8, ActScalePolicy::PerToken);
+    let act_bits = joint.acts.mean_bits();
+    let mut qm_wa = radio_u.pack(&weights, &stats, &joint.weights);
+    qm_wa.act_quant = Some(joint.acts);
+    println!(
+        "\nW4A8 serving off the same calibration: {:.2} avg weight bits, {act_bits:.2} avg \
+         activation bits",
+        qm_wa.avg_bits()
+    );
+    let wa_engine = Engine::from_quantized(&qm_wa);
+    let (resp_wa, stats_wa) = serve(&wa_engine, mk_requests(), max_batch);
+    println!("  4-bit weights × int activations : {stats_wa}");
+    // Integer-tile serving matches ITS OWN engine's generate().
+    for r in resp_wa.iter().take(2) {
+        let req = mk_requests().into_iter().find(|q| q.id == r.id).unwrap();
+        assert_eq!(
+            r.tokens,
+            wa_engine.generate(&req.prompt, req.max_new),
+            "activation-quantized serve must match activation-quantized generate"
+        );
+    }
 
     // Show a couple of generations (they should look corpus-like).
     for r in resp_q.iter().take(3) {

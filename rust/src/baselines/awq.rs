@@ -129,7 +129,8 @@ pub fn awq_quantize(
         let act: Vec<f32> = acts[k].iter().map(|&a| (a / count as f64) as f32).collect();
         packed.push((id, awq_matrix(w.matrix(id), &act, cfg)));
     }
-    crate::quant::format::QuantizedModel { base: SideParams::from_weights(w), packed }
+    let base = SideParams::from_weights(w);
+    crate::quant::format::QuantizedModel { base, packed, act_quant: None }
 }
 
 #[cfg(test)]

@@ -209,7 +209,8 @@ pub fn gptq_quantize(
             packed.push((id, pm));
         }
     }
-    crate::quant::format::QuantizedModel { base: SideParams::from_weights(&current), packed }
+    let base = SideParams::from_weights(&current);
+    crate::quant::format::QuantizedModel { base, packed, act_quant: None }
 }
 
 #[cfg(test)]

@@ -133,7 +133,8 @@ pub fn owq_quantize(
         .enumerate()
         .map(|(k, &id)| (id, owq_matrix(w.matrix(id), &diags[k], cfg)))
         .collect();
-    crate::quant::format::QuantizedModel { base: SideParams::from_weights(w), packed }
+    let base = SideParams::from_weights(w);
+    crate::quant::format::QuantizedModel { base, packed, act_quant: None }
 }
 
 #[cfg(test)]

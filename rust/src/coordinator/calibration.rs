@@ -24,9 +24,10 @@ use crate::coordinator::dual_ascent::{self, DualAscentConfig};
 use crate::error::RadioError;
 use crate::model::config::ModelConfig;
 use crate::model::weights::{MatId, Role, Weights};
+use crate::quant::activations::{ActQuantParams, ActQuantSpec, ActScalePolicy};
 use crate::quant::grouping::Grouping;
 use crate::stats::distortion::{self, GroupRd};
-use crate::util::integrity::{self, SectionWriter, SEC_HEADER, SEC_MATS};
+use crate::util::integrity::{self, SectionWriter, SEC_ACTS, SEC_HEADER, SEC_MATS};
 use crate::util::json::Json;
 
 /// Rate-independent calibration state for one quantizable matrix.
@@ -42,6 +43,13 @@ pub struct MatCalib {
     pub g2: Vec<f64>,
     /// EMA layer-input means X̄ (length = rows) for bias correction.
     pub xbar: Vec<f64>,
+    /// EMA per-channel input second moments E[x²] (length = rows) — the
+    /// activation-side sensitivity for the joint W·A allocator. All-zero
+    /// when the provider did not capture activation moments.
+    pub xsq: Vec<f64>,
+    /// Running per-channel input absolute maxima (length = rows) — the
+    /// static activation-quantizer scales. All-zero when not captured.
+    pub xamax: Vec<f64>,
 }
 
 impl MatCalib {
@@ -89,6 +97,18 @@ pub struct RateAllocation {
     pub bits: Vec<(MatId, Vec<u8>)>,
 }
 
+/// Outcome of the joint weight+activation Allocate stage: the weight
+/// assignment plus the activation-depth spec the inference engine
+/// consumes ([`ActQuantSpec`]).
+#[derive(Clone, Debug)]
+pub struct JointAllocation {
+    /// The weight-side integer assignment (as from [`CalibrationStats::allocate`]).
+    pub weights: RateAllocation,
+    /// Per-matrix activation bit depths and scales; empty when the
+    /// artifact carries no activation moments (act-quant disabled).
+    pub acts: ActQuantSpec,
+}
+
 impl CalibrationStats {
     /// Index of a matrix's calibration state.
     pub fn index_of(&self, id: MatId) -> Option<usize> {
@@ -131,6 +151,93 @@ impl CalibrationStats {
         }
         debug_assert_eq!(off, bits.len());
         RateAllocation { target_bits, rate, model_distortion, bits: out }
+    }
+
+    /// True when activation moments were captured at calibration time.
+    /// Legacy artifacts and XLA-calibrated artifacts load with all-zero
+    /// moments, which keeps activation quantization disabled.
+    pub fn has_act_moments(&self) -> bool {
+        self.mats.iter().any(|m| m.xsq.iter().any(|&v| v > 0.0))
+    }
+
+    /// Joint weight+activation allocation: one dual-ascent solve over
+    /// the concatenated weight groups plus one activation group per
+    /// matrix, at the count-weighted combination of `target_bits`
+    /// (weights) and `act_target_bits` (activations). Bits flow between
+    /// the two sides by marginal distortion, so an activation-robust
+    /// layer donates depth to sensitive weights and vice versa.
+    ///
+    /// An activation group models the error of quantizing a matrix's
+    /// input channels: count = rows (the input dimension), S² = mean
+    /// per-channel E[x²], G² = the matrix's mean weight-group gradient
+    /// moment (input error propagates through the same weights). Each
+    /// carries a virtual cap of `bmax + 1`; a group solved *to* the cap
+    /// is left at full precision (`bits = 0` — the f32 path), otherwise
+    /// its depth clamps to the integer kernel's [2, 8] range. Static
+    /// scales derive from the running per-tensor absmax. Without
+    /// activation moments the weight problem is solved alone and the
+    /// spec comes back empty (inference then never quantizes inputs).
+    pub fn allocate_joint(
+        &self,
+        target_bits: f64,
+        act_target_bits: f64,
+        bmax: u8,
+        policy: ActScalePolicy,
+    ) -> JointAllocation {
+        if !self.has_act_moments() {
+            return JointAllocation {
+                weights: self.allocate(target_bits, bmax, true),
+                acts: ActQuantSpec { entries: Vec::new() },
+            };
+        }
+        let bmax_act = bmax + 1;
+        let mut groups = self.group_rd();
+        let nw = groups.len();
+        let mut caps = vec![bmax; nw];
+        for m in &self.mats {
+            let rows = m.grouping.rows;
+            let s2 = m.xsq.iter().sum::<f64>() / rows as f64;
+            let g2 = m.g2.iter().sum::<f64>() / m.g2.len() as f64;
+            groups.push(GroupRd::new(rows, g2, s2, 1.0));
+            caps.push(bmax_act);
+        }
+        let total_w: usize = groups[..nw].iter().map(|g| g.count).sum();
+        let total_a: usize = groups[nw..].iter().map(|g| g.count).sum();
+        let combined = (target_bits * total_w as f64 + act_target_bits * total_a as f64)
+            / (total_w + total_a) as f64;
+        let cfg = DualAscentConfig { bmax: bmax_act as f64, ..Default::default() };
+        let bits = dual_ascent::solve_integer_capped(&groups, combined, &cfg, &caps);
+
+        // Weight side: split per matrix; rate/distortion are reported
+        // over the weight groups only (comparable to `allocate`).
+        let wbits = &bits[..nw];
+        let rate = dual_ascent::integer_rate(&groups[..nw], wbits);
+        let model_distortion = distortion::total_distortion_int(&groups[..nw], wbits);
+        let mut out = Vec::with_capacity(self.mats.len());
+        let mut off = 0usize;
+        for m in &self.mats {
+            let n = m.grouping.num_groups();
+            out.push((m.id, wbits[off..off + n].to_vec()));
+            off += n;
+        }
+        debug_assert_eq!(off, nw);
+        let weights = RateAllocation { target_bits, rate, model_distortion, bits: out };
+
+        // Activation side: cap value ⇒ full precision, else clamp [2, 8].
+        let mut entries = Vec::with_capacity(self.mats.len());
+        for (m, &b) in self.mats.iter().zip(&bits[nw..]) {
+            let p = if b >= bmax_act {
+                ActQuantParams::full_precision()
+            } else {
+                let eff = b.clamp(2, 8);
+                let qmax = (1i32 << (eff - 1)) - 1;
+                let amax = m.xamax.iter().cloned().fold(0f64, f64::max);
+                ActQuantParams::new(eff, policy, (amax / qmax as f64) as f32)
+            };
+            entries.push((m.id, p));
+        }
+        // `mats` is MatId-sorted, so the spec's binary search is valid.
+        JointAllocation { weights, acts: ActQuantSpec { entries } }
     }
 
     /// Check the artifact matches a model before allocating/packing
@@ -176,6 +283,19 @@ impl CalibrationStats {
                 f.write_all(&g.to_le_bytes())?;
             }
             for v in [&m.s2, &m.g2, &m.xbar] {
+                f.write_all(&(v.len() as u64).to_le_bytes())?;
+                for &x in v {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+        }
+        f.end();
+        // Activation moments ride in their own trailing section so
+        // pre-activation-quantization readers (which stop after the
+        // matrices) and writers (which never produce it) interoperate.
+        f.begin(SEC_ACTS);
+        for m in &self.mats {
+            for v in [&m.xsq, &m.xamax] {
                 f.write_all(&(v.len() as u64).to_le_bytes())?;
                 for &x in v {
                     f.write_all(&x.to_le_bytes())?;
@@ -295,7 +415,46 @@ impl CalibrationStats {
             let s2 = read_f64s(Some(n_groups))?;
             let g2 = read_f64s(Some(n_groups))?;
             let xbar = read_f64s(Some(rows))?;
-            mats.push(MatCalib { id: MatId { layer, role }, grouping, s2, g2, xbar });
+            let xsq = vec![0.0; rows];
+            let xamax = vec![0.0; rows];
+            mats.push(MatCalib { id: MatId { layer, role }, grouping, s2, g2, xbar, xsq, xamax });
+        }
+        // Activation-moment block — appended by current builds. A clean
+        // EOF right here is a legacy artifact: every matrix keeps the
+        // zero moments installed above and act-quant stays disabled.
+        let mut probe = [0u8; 8];
+        if integrity::read_or_eof(f, &mut probe)? {
+            let mut pending = Some(probe);
+            for mi in 0..mats.len() {
+                for which in 0..2 {
+                    let lbuf = match pending.take() {
+                        Some(b) => b,
+                        None => {
+                            let mut b = [0u8; 8];
+                            f.read_exact(&mut b)?;
+                            b
+                        }
+                    };
+                    let n = u64::from_le_bytes(lbuf) as usize;
+                    let rows = mats[mi].grouping.rows;
+                    if n != rows {
+                        return Err(inv(format!(
+                            "activation vector length mismatch: file {n}, want {rows}"
+                        )));
+                    }
+                    let mut v = Vec::with_capacity(n.min(PREALLOC_CAP));
+                    let mut b8 = [0u8; 8];
+                    for _ in 0..n {
+                        f.read_exact(&mut b8)?;
+                        v.push(f64::from_le_bytes(b8));
+                    }
+                    if which == 0 {
+                        mats[mi].xsq = v;
+                    } else {
+                        mats[mi].xamax = v;
+                    }
+                }
+            }
         }
         Ok(CalibrationStats {
             config,
@@ -339,7 +498,10 @@ mod tests {
                 let s2: Vec<f64> = (0..n).map(|_| rng.normal(0.0, 1.0).exp()).collect();
                 let g2: Vec<f64> = (0..n).map(|_| rng.normal(0.0, 2.0).exp()).collect();
                 let xbar: Vec<f64> = (0..rows).map(|_| rng.normal(0.0, 0.5)).collect();
-                mats.push(MatCalib { id: MatId { layer, role }, grouping, s2, g2, xbar });
+                let xsq: Vec<f64> = (0..rows).map(|_| rng.uniform() + 0.05).collect();
+                let xamax: Vec<f64> = xsq.iter().map(|&v| (3.0 * v).sqrt()).collect();
+                let id = MatId { layer, role };
+                mats.push(MatCalib { id, grouping, s2, g2, xbar, xsq, xamax });
             }
         }
         CalibrationStats {
@@ -372,7 +534,10 @@ mod tests {
             assert_eq!(a.s2, b.s2);
             assert_eq!(a.g2, b.g2);
             assert_eq!(a.xbar, b.xbar);
+            assert_eq!(a.xsq, b.xsq);
+            assert_eq!(a.xamax, b.xamax);
         }
+        assert!(back.has_act_moments());
         for target in [2.0, 2.4, 3.0, 5.0] {
             let x = stats.allocate(target, 8, true);
             let y = back.allocate(target, 8, true);
@@ -412,6 +577,59 @@ mod tests {
         for w in dists.windows(2) {
             assert!(w[0] >= w[1], "distortion must fall with rate: {dists:?}");
         }
+    }
+
+    #[test]
+    fn joint_allocation_covers_every_matrix_and_is_deterministic() {
+        let stats = synthetic_stats(0xCA18);
+        let j = stats.allocate_joint(3.0, 8.0, 8, ActScalePolicy::PerToken);
+        assert_eq!(j.weights.bits.len(), stats.mats.len());
+        assert_eq!(j.acts.entries.len(), stats.mats.len(), "one act entry per matrix");
+        for ((id, p), m) in j.acts.entries.iter().zip(&stats.mats) {
+            assert_eq!(*id, m.id);
+            assert!(
+                p.bits == 0 || (2..=8).contains(&p.bits),
+                "{id}: bad act depth {}",
+                p.bits
+            );
+            if p.bits != 0 {
+                assert!(p.scale > 0.0, "{id}: calibrated scale must be positive");
+            }
+        }
+        // Weight depths still respect the weight cap despite the higher
+        // virtual activation cap in the shared solve.
+        for (id, bits) in &j.weights.bits {
+            assert!(bits.iter().all(|&b| b <= 8), "{id}: weight depth above bmax");
+        }
+        // With a generous 8-bit activation target at least one matrix
+        // should actually be quantized (not all left full precision).
+        assert!(j.acts.entries.iter().any(|(_, p)| p.bits != 0));
+        // Pure function of the stats: identical inputs ⇒ identical spec.
+        let j2 = stats.allocate_joint(3.0, 8.0, 8, ActScalePolicy::PerToken);
+        assert_eq!(j.weights.bits, j2.weights.bits);
+        assert_eq!(j.acts.entries, j2.acts.entries);
+        // Static policy produces the same depths with calibrated scales.
+        let js = stats.allocate_joint(3.0, 8.0, 8, ActScalePolicy::Static);
+        for ((_, a), (_, b)) in j.acts.entries.iter().zip(&js.acts.entries) {
+            assert_eq!(a.bits, b.bits);
+        }
+    }
+
+    #[test]
+    fn joint_act_target_moves_activation_depths() {
+        // A tighter activation budget must not *raise* activation depths.
+        let stats = synthetic_stats(0xCA19);
+        let hi = stats.allocate_joint(3.0, 8.0, 8, ActScalePolicy::PerToken);
+        let lo = stats.allocate_joint(3.0, 4.0, 8, ActScalePolicy::PerToken);
+        let eff = |p: &ActQuantParams| if p.bits == 0 { 9 } else { p.bits };
+        let sum_hi: u32 = hi.acts.entries.iter().map(|(_, p)| eff(p) as u32).sum();
+        let sum_lo: u32 = lo.acts.entries.iter().map(|(_, p)| eff(p) as u32).sum();
+        // Weak monotonicity with one unit of slack for integer-refill
+        // tie-breaks.
+        assert!(
+            sum_lo <= sum_hi + 1,
+            "act depths should fall with the act target: {sum_lo} vs {sum_hi}"
+        );
     }
 
     #[test]
@@ -474,6 +692,16 @@ mod tests {
                 back.allocate(target, 8, true).bits
             );
         }
+        // A pre-act-quant file has no activation block: moments come
+        // back zero and the joint allocator degrades to weights-only.
+        assert!(!back.has_act_moments());
+        for m in &back.mats {
+            assert!(m.xsq.iter().all(|&v| v == 0.0));
+            assert!(m.xamax.iter().all(|&v| v == 0.0));
+        }
+        let j = back.allocate_joint(3.0, 8.0, 8, ActScalePolicy::PerToken);
+        assert!(j.acts.entries.is_empty(), "no moments ⇒ empty act spec");
+        assert_eq!(j.weights.bits, back.allocate(3.0, 8, true).bits);
     }
 
     #[test]
@@ -484,7 +712,7 @@ mod tests {
         let good = std::fs::read(&path).unwrap();
         let _ = std::fs::remove_file(&path);
         let checked = integrity::verify(&good).unwrap().expect("artifacts are checked");
-        assert_eq!(checked.sections.len(), 2, "header + matrices");
+        assert_eq!(checked.sections.len(), 3, "header + matrices + activations");
         let victim = std::env::temp_dir().join("radio_test_calib_victim.radiocal");
         for s in &checked.sections {
             for o in [s.off as usize, (s.off + s.len) as usize] {

@@ -50,8 +50,28 @@ pub struct Allocation {
 
 /// Continuous dual ascent (Eq. 6). `groups` with zero sensitivity get 0
 /// bits. Returns the allocation at the meeting point of the rate curve.
-pub fn solve_continuous(groups: &[GroupRd], target_rate: f64, cfg: &DualAscentConfig) -> Allocation {
+pub fn solve_continuous(
+    groups: &[GroupRd],
+    target_rate: f64,
+    cfg: &DualAscentConfig,
+) -> Allocation {
+    let caps = vec![cfg.bmax; groups.len()];
+    solve_continuous_capped(groups, target_rate, cfg, &caps)
+}
+
+/// Continuous dual ascent with a per-group bit cap overriding `cfg.bmax`.
+/// Identical to [`solve_continuous`] when every cap equals `cfg.bmax`.
+/// Used by the joint weight+activation allocator, where activation
+/// groups carry a higher virtual cap whose top value means "leave at
+/// full precision".
+pub fn solve_continuous_capped(
+    groups: &[GroupRd],
+    target_rate: f64,
+    cfg: &DualAscentConfig,
+    caps: &[f64],
+) -> Allocation {
     assert!(!groups.is_empty());
+    assert_eq!(groups.len(), caps.len(), "one cap per group");
     let total_w: f64 = groups.iter().map(|g| g.count as f64).sum();
     let mut v = 1e-6f64;
     let mut bits = vec![0f64; groups.len()];
@@ -64,8 +84,8 @@ pub fn solve_continuous(groups: &[GroupRd], target_rate: f64, cfg: &DualAscentCo
     for it in 0..cfg.max_iters {
         iters = it + 1;
         let mut used = 0f64;
-        for (b, g) in bits.iter_mut().zip(groups) {
-            *b = g.optimal_bits(v, cfg.bmax);
+        for (i, (b, g)) in bits.iter_mut().zip(groups).enumerate() {
+            *b = g.optimal_bits(v, caps[i]);
             used += *b * g.count as f64;
         }
         rate = used / total_w;
@@ -83,7 +103,8 @@ pub fn solve_continuous(groups: &[GroupRd], target_rate: f64, cfg: &DualAscentCo
                 let mid = (lo.ln() + hi.ln()).mul_add(0.5, 0.0).exp();
                 let r: f64 = groups
                     .iter()
-                    .map(|g| g.optimal_bits(mid, cfg.bmax) * g.count as f64)
+                    .zip(caps)
+                    .map(|(g, &c)| g.optimal_bits(mid, c) * g.count as f64)
                     .sum::<f64>()
                     / total_w;
                 if r > target_rate {
@@ -102,10 +123,24 @@ pub fn solve_continuous(groups: &[GroupRd], target_rate: f64, cfg: &DualAscentCo
 /// feasible): continuous solve → floor → greedy refill by best marginal
 /// distortion decrease per bit.
 pub fn solve_integer(groups: &[GroupRd], target_rate: f64, cfg: &DualAscentConfig) -> Vec<u8> {
+    let caps = vec![cfg.bmax as u8; groups.len()];
+    solve_integer_capped(groups, target_rate, cfg, &caps)
+}
+
+/// Integer assignment with a per-group depth cap overriding `cfg.bmax`
+/// (the capped analogue of [`solve_integer`]). The greedy refill never
+/// raises a group past its own cap.
+pub fn solve_integer_capped(
+    groups: &[GroupRd],
+    target_rate: f64,
+    cfg: &DualAscentConfig,
+    caps: &[u8],
+) -> Vec<u8> {
+    assert_eq!(groups.len(), caps.len(), "one cap per group");
     let total_w: usize = groups.iter().map(|g| g.count).sum();
     let budget: i64 = (target_rate * total_w as f64).floor() as i64;
-    let cont = solve_continuous(groups, target_rate, cfg);
-    let bmax = cfg.bmax as u8;
+    let fcaps: Vec<f64> = caps.iter().map(|&c| c as f64).collect();
+    let cont = solve_continuous_capped(groups, target_rate, cfg, &fcaps);
     let mut bits: Vec<u8> = cont.bits.iter().map(|&b| b.floor() as u8).collect();
     let mut used: i64 = bits
         .iter()
@@ -115,11 +150,11 @@ pub fn solve_integer(groups: &[GroupRd], target_rate: f64, cfg: &DualAscentConfi
 
     // Marginal gain of adding one bit to group i at current depth b:
     // Δd = d(b) − d(b+1) = ¾·d(b); per weight-bit: Δd / P.
-    let gain = |g: &GroupRd, b: u8| -> f64 {
-        if b >= bmax {
+    let gain = |i: usize, b: u8| -> f64 {
+        if b >= caps[i] {
             return f64::NEG_INFINITY;
         }
-        0.75 * g.distortion(b as f64) / g.count as f64
+        0.75 * groups[i].distortion(b as f64) / groups[i].count as f64
     };
     let loss = |g: &GroupRd, b: u8| -> f64 {
         if b == 0 {
@@ -136,7 +171,7 @@ pub fn solve_integer(groups: &[GroupRd], target_rate: f64, cfg: &DualAscentConfi
             if used + g.count as i64 > budget {
                 continue;
             }
-            let gn = gain(g, bits[i]);
+            let gn = gain(i, bits[i]);
             if gn.is_finite() && best.map(|(_, bg)| gn > bg).unwrap_or(true) {
                 best = Some((i, gn));
             }
@@ -338,6 +373,44 @@ mod tests {
         let bits = solve_integer(&groups, 2.0, &DualAscentConfig::default());
         assert_eq!(bits[0], 0, "dead group should receive 0 bits");
         assert_eq!(bits[1], 4, "live group should take the whole budget");
+    }
+
+    #[test]
+    fn per_group_caps_are_respected_and_uniform_caps_match_uncapped() {
+        let mut rng = Rng::new(106);
+        let groups = random_groups(&mut rng, 40);
+        let cfg = DualAscentConfig::default();
+        // Uniform caps equal to bmax reproduce the uncapped solver exactly.
+        let caps_uniform = vec![cfg.bmax as u8; groups.len()];
+        assert_eq!(
+            solve_integer_capped(&groups, 3.0, &cfg, &caps_uniform),
+            solve_integer(&groups, 3.0, &cfg)
+        );
+        // Heterogeneous caps: every group obeys its own ceiling, and
+        // groups with a virtual cap above bmax may exceed it.
+        let caps: Vec<u8> = (0..groups.len())
+            .map(|i| match i % 3 {
+                0 => 2,
+                1 => 8,
+                _ => 9,
+            })
+            .collect();
+        let bits = solve_integer_capped(&groups, 6.0, &cfg, &caps);
+        for (i, (&b, &c)) in bits.iter().zip(&caps).enumerate() {
+            assert!(b <= c, "group {i}: {b} bits over cap {c}");
+        }
+        assert!(
+            bits.iter().zip(&caps).any(|(&b, &c)| c == 9 && b == 9),
+            "at a 6-bit average some virtual-cap group should hit 9 bits"
+        );
+        // Budget still respected.
+        let total_w: usize = groups.iter().map(|g| g.count).sum();
+        let used: i64 = bits
+            .iter()
+            .zip(&groups)
+            .map(|(&b, g)| b as i64 * g.count as i64)
+            .sum();
+        assert!(used <= (6.0 * total_w as f64).floor() as i64);
     }
 
     #[test]

@@ -37,6 +37,14 @@ pub struct GradSample {
     pub grads: Vec<(MatId, Tensor)>,
     /// Column means of the input activations per matrix (X̄ numerators).
     pub input_means: Vec<(MatId, Vec<f32>)>,
+    /// Per-channel second moments `E[x²]` of the input activations per
+    /// matrix — the activation-side rate-distortion sensitivity for the
+    /// joint weight+activation allocator. Empty when the provider does
+    /// not capture activation moments (act-quant then stays disabled).
+    pub input_sq: Vec<(MatId, Vec<f32>)>,
+    /// Per-channel absolute maxima of the input activations per matrix
+    /// (static activation-quantizer scales). Empty when not captured.
+    pub input_amax: Vec<(MatId, Vec<f32>)>,
     /// Model output Z (stacked (B·T)×E), for PCA refresh.
     pub z: Tensor,
 }
@@ -98,7 +106,14 @@ impl GradientProvider for NativeProvider {
             .iter()
             .map(|&id| (id, cache.input_means(id.layer, id.role)))
             .collect();
-        GradSample { grads, input_means, z: cache.z }
+        let mut input_sq = Vec::with_capacity(ids.len());
+        let mut input_amax = Vec::with_capacity(ids.len());
+        for &id in &ids {
+            let (sq, amax) = cache.input_moments(id.layer, id.role);
+            input_sq.push((id, sq));
+            input_amax.push((id, amax));
+        }
+        GradSample { grads, input_means, input_sq, input_amax, z: cache.z }
     }
 
     fn outputs(&mut self, w: &Weights, tokens: &[u32], batch: usize, seq: usize) -> Tensor {
@@ -135,6 +150,14 @@ mod tests {
         }
         for (id, mu) in &sample.input_means {
             assert_eq!(mu.len(), w.matrix(*id).rows, "{id}");
+        }
+        for (id, sq) in &sample.input_sq {
+            assert_eq!(sq.len(), w.matrix(*id).rows, "{id}");
+            assert!(sq.iter().all(|&v| v >= 0.0), "{id}: E[x²] must be nonnegative");
+        }
+        for (id, am) in &sample.input_amax {
+            assert_eq!(am.len(), w.matrix(*id).rows, "{id}");
+            assert!(am.iter().all(|&v| v >= 0.0), "{id}: absmax must be nonnegative");
         }
         assert_eq!(sample.z.rows, 16);
     }

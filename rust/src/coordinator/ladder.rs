@@ -143,7 +143,7 @@ impl RateLadder {
         for (id, b) in &p.biases {
             *base.bias_mut(*id) = b.clone();
         }
-        QuantizedModel { base, packed: p.packed.clone() }
+        QuantizedModel { base, packed: p.packed.clone(), act_quant: None }
     }
 
     /// Build a decode engine for point `i`.
@@ -234,7 +234,7 @@ impl RateLadder {
             .map_err(|e| RadioError::from(e).in_section("matrix stream"))?;
         let base = SideParams::read_from(&mut f)
             .map_err(|e| RadioError::from(e).in_section("side parameters"))?;
-        let qm = QuantizedModel { base: base.clone(), packed };
+        let qm = QuantizedModel { base: base.clone(), packed, act_quant: None };
         let achieved = qm.avg_bits();
         let point = RatePoint::from_model(achieved, qm);
         Ok(RateLadder { base, points: vec![point] })

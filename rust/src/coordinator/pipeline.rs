@@ -15,6 +15,7 @@ use crate::coordinator::gradients::GradientProvider;
 use crate::coordinator::radio::{Radio, RadioConfig};
 use crate::model::corpus::Corpus;
 use crate::model::weights::{MatId, SideParams, Weights};
+use crate::quant::activations::ActScalePolicy;
 use crate::quant::format::QuantizedModel;
 use crate::quant::{rtn_quantize, ScaleRule};
 
@@ -103,7 +104,49 @@ pub fn rtn_quantize_model(w: &Weights, bits: u8, rows_per_group: usize) -> Quant
             (id, rtn_quantize(m, bits, rows_per_group.min(m.rows), ScaleRule::Range))
         })
         .collect();
-    QuantizedModel { base: SideParams::from_weights(w), packed }
+    QuantizedModel { base: SideParams::from_weights(w), packed, act_quant: None }
+}
+
+/// Radio end to end with **joint weight + activation** allocation: one
+/// calibration pass collects weight curvature AND per-channel input
+/// moments, one dual-ascent solve splits a combined bit budget across
+/// both populations (`cfg.target_bits` for weights, `act_target_bits`
+/// for matrix inputs), and the packed container carries the resulting
+/// [`crate::quant::activations::ActQuantSpec`] so
+/// [`crate::infer::Engine::from_quantized`] serves the fully-integer
+/// W·A path with no further caller opt-in. With a provider that reports
+/// no activation moments (e.g. the XLA shim) the model degrades to
+/// weight-only quantization (`act_quant: None`) — same output as
+/// `run_method(Method::Radio(..))`.
+pub fn radio_quantize_joint(
+    cfg: &RadioConfig,
+    act_target_bits: f64,
+    policy: ActScalePolicy,
+    w: &Weights,
+    corpus: &Corpus,
+    provider: &mut dyn GradientProvider,
+) -> PipelineResult {
+    let t0 = std::time::Instant::now();
+    let mut stages = StageTimings::default();
+    let radio = Radio::new(*cfg);
+    let tc = std::time::Instant::now();
+    let (stats, _) = radio.calibrate(w, corpus, provider, None);
+    stages.calibrate = tc.elapsed().as_secs_f64();
+    let ta = std::time::Instant::now();
+    let joint = stats.allocate_joint(cfg.target_bits, act_target_bits, cfg.bmax, policy);
+    stages.allocate = ta.elapsed().as_secs_f64();
+    let tp = std::time::Instant::now();
+    let mut qm = radio.pack(w, &stats, &joint.weights);
+    if !joint.acts.entries.is_empty() {
+        qm.act_quant = Some(joint.acts);
+    }
+    stages.pack = tp.elapsed().as_secs_f64();
+    PipelineResult {
+        method: format!("Radio({:.1}b/W, {act_target_bits:.1}b/A)", cfg.target_bits),
+        model: qm,
+        seconds: t0.elapsed().as_secs_f64(),
+        stages,
+    }
 }
 
 /// Run one method end to end, with per-stage timing for Radio.
@@ -254,6 +297,42 @@ mod tests {
                 assert!(r.stages.calibrate > 0.0, "Radio must report calibrate time");
             }
         }
+    }
+
+    #[test]
+    fn joint_pipeline_attaches_act_spec_and_serves_it() {
+        // One calibration, one joint solve: the packed container must
+        // carry an activation spec covering every matrix, at sane
+        // depths, and building an engine from it must decode
+        // deterministically (the spec is applied automatically).
+        let (w, corpus) = tiny();
+        let mut provider = NativeProvider;
+        let cfg = RadioConfig {
+            target_bits: 4.0,
+            rows_per_group: 8,
+            batch: 2,
+            seq: 16,
+            tokens_per_seq: 4,
+            iters: 2,
+            pca_k: 2,
+            ..Default::default()
+        };
+        let r = radio_quantize_joint(&cfg, 8.0, ActScalePolicy::PerToken, &w, &corpus,
+            &mut provider);
+        assert!(r.stages.calibrate > 0.0);
+        let spec = r.model.act_quant.as_ref().expect("native provider captures act moments");
+        assert_eq!(spec.entries.len(), r.model.packed.len());
+        for (_, p) in &spec.entries {
+            assert!(p.bits == 0 || (2..=8).contains(&p.bits), "bad depth {}", p.bits);
+        }
+        // The combined budget is count-weighted and weight elements
+        // dominate, so the weight-side average lands near the weight
+        // target (loosely pinned — the solver balances both populations).
+        let bits = r.model.avg_bits();
+        assert!(bits > 2.5 && bits < 6.0, "weight bits {bits}");
+        let engine = crate::infer::Engine::from_quantized(&r.model);
+        let toks = [1u32, 5, 9, 2];
+        assert_eq!(engine.generate(&toks, 4), engine.generate(&toks, 4));
     }
 
     #[test]

@@ -259,7 +259,9 @@ impl Radio {
                 }
             }
             let xbar = vec![0.0; m.rows];
-            mats.push(MatCalib { id: *id, grouping, s2, g2, xbar });
+            let xsq = vec![0.0; m.rows];
+            let xamax = vec![0.0; m.rows];
+            mats.push(MatCalib { id: *id, grouping, s2, g2, xbar, xsq, xamax });
         }
         let mut stats = CalibrationStats {
             config: w.config,
@@ -271,7 +273,15 @@ impl Radio {
             mats,
         };
         let mut xbar_init = vec![false; stats.mats.len()];
+        let mut xsq_init = vec![false; stats.mats.len()];
         update_xbar(&mut stats, &mut xbar_init, &warm.input_means, cfg.ema_alpha);
+        update_act_moments(
+            &mut stats,
+            &mut xsq_init,
+            &warm.input_sq,
+            &warm.input_amax,
+            cfg.ema_alpha,
+        );
         if let Some(cb) = on_iter.as_deref_mut() {
             cb(0, &stats);
         }
@@ -301,6 +311,13 @@ impl Radio {
                 }
             }
             update_xbar(&mut stats, &mut xbar_init, &sample.input_means, cfg.ema_alpha);
+            update_act_moments(
+                &mut stats,
+                &mut xsq_init,
+                &sample.input_sq,
+                &sample.input_amax,
+                cfg.ema_alpha,
+            );
             if let Some(cb) = on_iter.as_deref_mut() {
                 cb(iter, &stats);
             }
@@ -340,7 +357,7 @@ impl Radio {
             }
             packed.push((id, pm));
         }
-        QuantizedModel { base, packed }
+        QuantizedModel { base, packed, act_quant: None }
     }
 
     /// Stage 3 — Pack (streaming): same quantization as [`Radio::pack`],
@@ -439,6 +456,42 @@ fn update_xbar(
                 *x = m as f64;
             }
             xbar_init[ix] = true;
+        }
+    }
+}
+
+/// Fold one iteration's activation moments into the calibration EMAs:
+/// per-channel `E[x²]` via the same first-observation-then-EMA scheme as
+/// X̄, per-channel absmax as a running maximum (a scale must cover every
+/// observed batch, so it never decays). Providers that do not capture
+/// activation moments pass empty slices and the stats stay zero —
+/// `allocate_joint` treats that as "activation quantization unavailable".
+fn update_act_moments(
+    stats: &mut CalibrationStats,
+    xsq_init: &mut [bool],
+    input_sq: &[(MatId, Vec<f32>)],
+    input_amax: &[(MatId, Vec<f32>)],
+    alpha: f64,
+) {
+    for (id, sq) in input_sq {
+        let ix = stats.index_of(*id).expect("provider returned unknown matrix");
+        let mc = &mut stats.mats[ix];
+        if xsq_init[ix] {
+            for (x, &m) in mc.xsq.iter_mut().zip(sq) {
+                *x = (1.0 - alpha) * *x + alpha * m as f64;
+            }
+        } else {
+            for (x, &m) in mc.xsq.iter_mut().zip(sq) {
+                *x = m as f64;
+            }
+            xsq_init[ix] = true;
+        }
+    }
+    for (id, am) in input_amax {
+        let ix = stats.index_of(*id).expect("provider returned unknown matrix");
+        let mc = &mut stats.mats[ix];
+        for (x, &m) in mc.xamax.iter_mut().zip(am) {
+            *x = x.max(m as f64);
         }
     }
 }

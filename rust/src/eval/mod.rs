@@ -10,7 +10,8 @@ pub mod spec;
 pub mod tasks;
 
 pub use perplexity::{
-    perplexity, perplexity_engine, perplexity_packed, perplexity_packed_kv, perplexity_quantized,
+    perplexity, perplexity_engine, perplexity_packed, perplexity_packed_act, perplexity_packed_kv,
+    perplexity_quantized,
 };
 pub use spec::draft_agreement;
 pub use tasks::{average_score, score_task, Task};

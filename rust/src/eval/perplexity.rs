@@ -16,6 +16,7 @@ use crate::infer::Engine;
 use crate::model::corpus::Corpus;
 use crate::model::transformer;
 use crate::model::weights::Weights;
+use crate::quant::activations::ActQuantSpec;
 use crate::quant::format::QuantizedModel;
 use crate::util::threadpool::parallel_map;
 
@@ -83,6 +84,27 @@ pub fn perplexity_packed_kv(
     kv: &KvCacheConfig,
 ) -> f64 {
     let engine = Engine::from_quantized(qm).with_kv_config(kv.clone());
+    perplexity_engine(&engine, corpus, seq, max_windows)
+}
+
+/// [`perplexity_packed`] with an explicit activation-quantization spec —
+/// the accuracy gate for the fully-integer W·A path: evaluate the same
+/// packed model with f32 and quantized activations and compare. Note
+/// that [`perplexity_packed`] already honors a spec *persisted in the
+/// container* (`qm.act_quant`); this entry point overrides it, which is
+/// how the W·A benchmark sweeps activation depths off one container. At
+/// ≥ 8 activation bits the drift stays within 5% relative of the
+/// f32-activation number (pinned by a test and documented in DESIGN.md
+/// §Activation quantization); 4-bit activations trade more accuracy for
+/// bandwidth and should be qualified with this function first.
+pub fn perplexity_packed_act(
+    qm: &QuantizedModel,
+    corpus: &Corpus,
+    seq: usize,
+    max_windows: usize,
+    spec: &ActQuantSpec,
+) -> f64 {
+    let engine = Engine::from_quantized(qm).with_act_quant(spec);
     perplexity_engine(&engine, corpus, seq, max_windows)
 }
 
@@ -184,6 +206,35 @@ mod tests {
         // path exactly.
         let via_cfg = perplexity_packed_kv(&qm, &corpus, 32, 6, &KvCacheConfig::dense());
         assert_eq!(via_cfg, dense);
+    }
+
+    #[test]
+    fn act_quantized_ppl_within_documented_tolerance_of_f32_activations() {
+        // The W·A acceptance bar (ISSUE 7): the SAME packed model
+        // evaluated with 8-bit per-token activation quantization must
+        // track the f32-activation perplexity within 5% relative, and a
+        // persisted spec must produce the identical number through the
+        // automatic [`perplexity_packed`] route.
+        use crate::quant::activations::ActScalePolicy;
+        let cfg = ModelConfig { vocab: 256, dim: 16, heads: 2, layers: 2, mlp: 32, max_seq: 32 };
+        let mut rng = Rng::new(211);
+        let w = Weights::init_training(cfg, &mut rng);
+        let qm = rtn_quantize_model(&w, 6, 8); // Uniform mode → integer tiles
+        let corpus = Corpus::synthetic(212, Domain::Calib, 8 * 1024);
+        let f32_ppl = perplexity_packed(&qm, &corpus, 32, 6);
+        let ids: Vec<_> = qm.packed.iter().map(|(id, _)| *id).collect();
+        let spec = ActQuantSpec::uniform(&ids, 8, ActScalePolicy::PerToken, 1.0);
+        let int_ppl = perplexity_packed_act(&qm, &corpus, 32, 6, &spec);
+        assert!(
+            (int_ppl - f32_ppl).abs() <= 5e-2 * f32_ppl,
+            "8-bit-activation ppl {int_ppl} vs f32-activation {f32_ppl}: beyond 5% gate"
+        );
+        // Same spec persisted in the container: the automatic route must
+        // agree exactly (same engine configuration, same windows).
+        let mut with_spec = rtn_quantize_model(&w, 6, 8);
+        with_spec.act_quant = Some(spec);
+        let auto = perplexity_packed(&with_spec, &corpus, 32, 6);
+        assert_eq!(auto, int_ppl, "persisted spec must drive the same numerics");
     }
 
     #[test]

@@ -21,17 +21,21 @@ use crate::infer::matvec::{dense_matmul, split_rows, MatvecPlan, SendMut};
 use crate::model::config::ModelConfig;
 use crate::model::tensor::Tensor;
 use crate::model::transformer;
-use crate::model::weights::{Role, Weights};
+use crate::model::weights::{MatId, Role, Weights};
+use crate::quant::activations::{ActQuantParams, ActQuantSpec};
 use crate::quant::bitpack::PackedMatrix;
 use crate::quant::format::QuantizedModel;
 use crate::util::threadpool::{parallel_for_chunks, parallel_map};
 
 const LN_EPS: f32 = 1e-5;
 
-/// One linear layer: dense or packed-quantized.
+/// One linear layer: dense or packed-quantized. Quantized linears also
+/// carry their input (activation) quantization parameters — bits 0 means
+/// full-precision f32 inputs, the default until a spec is installed via
+/// [`Engine::with_act_quant`].
 enum Linear {
     Dense(Tensor),
-    Quant { pm: PackedMatrix, plan: MatvecPlan },
+    Quant { pm: PackedMatrix, plan: MatvecPlan, act: ActQuantParams },
 }
 
 impl Linear {
@@ -40,10 +44,13 @@ impl Linear {
     /// positions without blowing the cache; dense weights already stream
     /// row-by-row once per column chunk for the whole batch, so tiling
     /// would only re-stream them and the dense path stays un-tiled.
+    /// Quantized linears route through `matgem_act`, which is the plain
+    /// f32 `matgem` when `act.bits == 0` and the integer-integer W·A
+    /// tile path otherwise.
     fn apply_gemm(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
         match self {
             Linear::Dense(w) => dense_matmul(w, xs),
-            Linear::Quant { pm, plan } => plan.matgem(pm, xs),
+            Linear::Quant { pm, plan, act } => plan.matgem_act(pm, xs, *act),
         }
     }
 }
@@ -113,7 +120,7 @@ impl Engine {
                 .map(|(_, p)| p.clone())
                 .expect("missing packed matrix");
             let plan = MatvecPlan::new(&pm);
-            Linear::Quant { pm, plan }
+            Linear::Quant { pm, plan, act: ActQuantParams::full_precision() }
         };
         for (li, l) in w.layers.iter().enumerate() {
             layers.push(EngineLayer {
@@ -135,7 +142,7 @@ impl Engine {
                 b2: l.b2.clone(),
             });
         }
-        Engine {
+        let engine = Engine {
             config: w.config,
             kv: KvCacheConfig::dense(),
             embed: w.embed.clone(),
@@ -143,6 +150,13 @@ impl Engine {
             layers,
             lnf_g: w.lnf_g.clone(),
             lnf_b: w.lnf_b.clone(),
+        };
+        // Containers that persisted an activation-quant spec (RADIOQM2
+        // with a SEC_ACTQ section) serve fully-integer out of the box;
+        // weight-only containers keep f32 activations.
+        match &qm.act_quant {
+            Some(spec) => engine.with_act_quant(spec),
+            None => engine,
         }
     }
 
@@ -188,6 +202,37 @@ impl Engine {
     /// `KvCache::new` on the first cache build.
     pub fn with_kv_config(mut self, kv: KvCacheConfig) -> Engine {
         self.kv = kv;
+        self
+    }
+
+    /// Install an activation-quantization spec (builder style): every
+    /// packed linear looks up its `(layer, role)` entry and quantizes
+    /// its *input* rows to that depth on the fly during decode/prefill,
+    /// running the integer-integer W·A tile path. Matrices without an
+    /// entry (or with a `bits == 0` entry) keep full-precision f32
+    /// inputs; dense linears always do — the spec only governs packed
+    /// weights, so a dense baseline engine is unaffected by design.
+    /// [`Engine::from_quantized`] applies a container's persisted spec
+    /// automatically; this entry point lets callers override it (e.g.
+    /// the W·A benchmark's per-arm sweeps).
+    pub fn with_act_quant(mut self, spec: &ActQuantSpec) -> Engine {
+        for (li, l) in self.layers.iter_mut().enumerate() {
+            let slots: [(Role, &mut Linear); 6] = [
+                (Role::Q, &mut l.wq),
+                (Role::K, &mut l.wk),
+                (Role::V, &mut l.wv),
+                (Role::O, &mut l.wo),
+                (Role::Up, &mut l.w1),
+                (Role::Down, &mut l.w2),
+            ];
+            for (role, lin) in slots {
+                if let Linear::Quant { act, .. } = lin {
+                    *act = spec
+                        .get(MatId { layer: li, role })
+                        .unwrap_or_else(ActQuantParams::full_precision);
+                }
+            }
+        }
         self
     }
 
@@ -616,6 +661,7 @@ mod tests {
     use super::*;
     use crate::coordinator::pipeline::rtn_quantize_model;
     use crate::infer::kv::KvQuantSpec;
+    use crate::quant::activations::ActScalePolicy;
     use crate::model::transformer;
     use crate::util::rng::Rng;
 
@@ -1017,6 +1063,109 @@ mod tests {
         }
         // Determinism: same engine, same tokens, same logits and tokens.
         assert_eq!(quant.generate(&toks, 4), quant.generate(&toks, 4));
+    }
+
+    #[test]
+    fn act_quantized_engine_tracks_f32_activations_and_is_deterministic() {
+        // The W·A tentpole at the engine level: with every packed linear's
+        // input quantized to 8 bits (per-token scales), decode logits must
+        // stay within a tight relative tolerance of the f32-activation
+        // engine over the SAME packed weights, prefill must stay
+        // bit-identical to the step loop (per-row scales make chunking
+        // invisible), and generation must be deterministic.
+        let w = tiny_weights(201);
+        let qm = rtn_quantize_model(&w, 6, 8); // Uniform mode → integer path
+        let ids: Vec<MatId> = qm.packed.iter().map(|(id, _)| *id).collect();
+        let spec = ActQuantSpec::uniform(&ids, 8, ActScalePolicy::PerToken, 1.0);
+        let f32_engine = Engine::from_quantized(&qm);
+        let int_engine = Engine::from_quantized(&qm).with_act_quant(&spec);
+        let toks: Vec<u32> = vec![1, 7, 3, 2, 9, 4];
+        let mut fc = f32_engine.new_cache();
+        let mut ic = int_engine.new_cache();
+        let (mut want, mut got) = (Vec::new(), Vec::new());
+        for &t in &toks {
+            want = f32_engine.step(t, &mut fc);
+            got = int_engine.step(t, &mut ic);
+        }
+        for (a, b) in got.iter().zip(&want) {
+            assert!(
+                (a - b).abs() < 5e-2 * b.abs().max(1.0),
+                "8-bit activations drifted too far: {a} vs {b}"
+            );
+        }
+        // Chunked prefill == step loop, exactly, even with quantized
+        // inputs: per-token scales are per-row, so tiling can't leak
+        // across positions.
+        let mut pc = int_engine.new_cache();
+        let chunked = int_engine.prefill_batch(&[&toks], std::slice::from_mut(&mut pc));
+        assert_eq!(chunked[0], got, "act-quant prefill diverged from step loop");
+        assert_eq!(int_engine.generate(&toks, 4), int_engine.generate(&toks, 4));
+    }
+
+    #[test]
+    fn persisted_act_spec_is_applied_automatically() {
+        // A container carrying an ActQuantSpec must serve integer W·A
+        // without any caller opt-in — from_quantized(qm with spec) must
+        // behave exactly like an explicit with_act_quant over the same
+        // weights.
+        let w = tiny_weights(202);
+        let base = rtn_quantize_model(&w, 6, 8);
+        let ids: Vec<MatId> = base.packed.iter().map(|(id, _)| *id).collect();
+        let spec = ActQuantSpec::uniform(&ids, 8, ActScalePolicy::PerToken, 1.0);
+        let manual = Engine::from_quantized(&base).with_act_quant(&spec);
+        let mut qm = rtn_quantize_model(&w, 6, 8);
+        qm.act_quant = Some(spec);
+        let auto = Engine::from_quantized(&qm);
+        let toks: Vec<u32> = vec![2, 5, 1, 8];
+        let mut mc = manual.new_cache();
+        let mut ac = auto.new_cache();
+        for &t in &toks {
+            assert_eq!(manual.step(t, &mut mc), auto.step(t, &mut ac));
+        }
+        assert_eq!(auto.generate(&toks, 4), manual.generate(&toks, 4));
+    }
+
+    #[test]
+    fn mixed_precision_act_spec_quantizes_only_listed_matrices() {
+        // Matrices without a spec entry (and bits-0 entries) keep the f32
+        // input path bit-for-bit; only listed layers change numerics.
+        let w = tiny_weights(203);
+        let qm = rtn_quantize_model(&w, 6, 8);
+        let ids: Vec<MatId> = qm.packed.iter().map(|(id, _)| *id).collect();
+        let toks: Vec<u32> = vec![4, 1, 6, 3, 2];
+        let baseline = Engine::from_quantized(&qm);
+        let mut bc = baseline.new_cache();
+        let mut want = Vec::new();
+        for &t in &toks {
+            want = baseline.step(t, &mut bc);
+        }
+        // An all-full-precision spec is a no-op: identical bits out.
+        let fp_spec = ActQuantSpec::uniform(&ids, 0, ActScalePolicy::PerToken, 1.0);
+        let fp_engine = Engine::from_quantized(&qm).with_act_quant(&fp_spec);
+        let mut fc = fp_engine.new_cache();
+        let mut fp_got = Vec::new();
+        for &t in &toks {
+            fp_got = fp_engine.step(t, &mut fc);
+        }
+        assert_eq!(fp_got, want, "bits-0 spec must leave the f32 path untouched");
+        // Layer-0-only spec: still close to baseline, still deterministic,
+        // and the layer-1 linears run the identical f32 path internally.
+        let l0_ids: Vec<MatId> = ids.iter().filter(|id| id.layer == 0).copied().collect();
+        assert!(!l0_ids.is_empty() && l0_ids.len() < ids.len());
+        let l0_spec = ActQuantSpec::uniform(&l0_ids, 8, ActScalePolicy::PerToken, 1.0);
+        let mixed = Engine::from_quantized(&qm).with_act_quant(&l0_spec);
+        let mut mc = mixed.new_cache();
+        let mut got = Vec::new();
+        for &t in &toks {
+            got = mixed.step(t, &mut mc);
+        }
+        for (a, b) in got.iter().zip(&want) {
+            assert!(
+                (a - b).abs() < 5e-2 * b.abs().max(1.0),
+                "mixed-precision drift too large: {a} vs {b}"
+            );
+        }
+        assert_eq!(mixed.generate(&toks, 3), mixed.generate(&toks, 3));
     }
 
     #[test]

@@ -16,7 +16,8 @@
 //!   CUDA kernel's divergence-free per-4-row depth schedule).
 
 use crate::model::tensor::Tensor;
-use crate::quant::bitpack::PackedMatrix;
+use crate::quant::activations::{dequantize_row, quantize_row, ActQuantParams};
+use crate::quant::bitpack::{PackedMatrix, QuantMode};
 use crate::util::threadpool::parallel_for_chunks;
 
 /// Precomputed decode plan for repeated matvecs against one packed
@@ -425,6 +426,330 @@ impl MatvecPlan {
             ys.append(&mut self.matmul(pm, tile));
         }
         ys
+    }
+}
+
+// -------------------------------------------------- integer W·A hot path
+
+impl MatvecPlan {
+    /// Fully-integer batched GEMM: quantize each activation row on the
+    /// fly to symmetric signed codes (`quant::activations::quantize_row`),
+    /// multiply the packed **weight codes** against the **activation
+    /// codes** with i32 accumulation, and apply the combined dequant
+    /// scale once per output element.
+    ///
+    /// Exactness rests on the Uniform LUT being affine in the code:
+    /// `deq = mean + scale·(c − off + 0.5)` with `off = 2^(B−1)`, so for
+    /// a quantized row `x̂_i = s_x·xc_i`:
+    ///
+    /// ```text
+    /// Σ_i ŵ_i·x̂_i = s_x·[ scale·(D − (off − 0.5)·S) + mean·S ]
+    ///   where D = Σ_i c_i·xc_i and S = Σ_i xc_i   (both exact in i32)
+    /// ```
+    ///
+    /// Per weight the hot loop is one bit-extract plus one integer
+    /// multiply-add — no LUT gather, no f32 FMA — and the f32 work
+    /// (two multiplies, one add per *group*, one multiply per output
+    /// element) is O(1) in the group length. `S` is shared by every
+    /// column, computed once per call like `matmul`'s `sum_x`.
+    ///
+    /// Requires `pm.mode == QuantMode::Uniform` (the companded LUT is
+    /// non-affine in the code, so no integer dot can absorb it — use
+    /// [`MatvecPlan::matmul_act`], which falls back to fake-quantized
+    /// f32 for companded matrices). With an AWQ `row_scale`, activations
+    /// are quantized *after* the per-row fold (the fold is per input
+    /// row, so it cannot be deferred past the dot product). FP16
+    /// exception rows contribute densely with the ORIGINAL f32 `x`
+    /// (outlier rows stay full precision, as in `matmul`).
+    ///
+    /// Determinism contract: each lane's codes and scale depend only on
+    /// that lane's values, integer accumulation is exact, and the f32
+    /// combine runs in a fixed per-column order, so `matmul_int(xs)[b]`
+    /// is bit-identical to `matmul_int(&[xs[b]])[0]` — the same
+    /// batch-invariance `matmul` guarantees.
+    pub fn matmul_int(
+        &self,
+        pm: &PackedMatrix,
+        xs: &[Vec<f32>],
+        act: ActQuantParams,
+    ) -> Vec<Vec<f32>> {
+        let bn = xs.len();
+        if bn == 0 {
+            return Vec::new();
+        }
+        assert_eq!(
+            pm.mode,
+            QuantMode::Uniform,
+            "matmul_int requires an affine (Uniform) code LUT"
+        );
+        assert!(act.bits >= 2, "matmul_int called with a full-precision act spec");
+        debug_assert_eq!(pm.rows, self.rows);
+        debug_assert_eq!(pm.cols, self.cols);
+        for x in xs {
+            assert_eq!(x.len(), pm.rows);
+        }
+        let m = pm.grouping.m;
+        let flat = self.flat_rows.len();
+        let qmax = act.qmax();
+        // Worst case per product: (2^8 − 1)·qmax; i32 accumulation is
+        // exact while flat·255·qmax fits (rows up to ~66k at 8-bit acts).
+        debug_assert!(
+            (flat as u64) * 255 * qmax as u64 <= i32::MAX as u64,
+            "activation row too long for exact i32 accumulation"
+        );
+        // Fold the AWQ row scale, permute into code-stream order, and
+        // quantize each lane's row; codes are interleaved batch-minor
+        // like matmul's xp.
+        let mut xq = vec![0i32; flat * bn];
+        let mut s_x = vec![0f32; bn];
+        let mut folded = vec![0f32; flat];
+        for (b, x) in xs.iter().enumerate() {
+            match &pm.row_scale {
+                Some(s) => {
+                    for (dst, &r) in folded.iter_mut().zip(&self.flat_rows) {
+                        *dst = x[r as usize] / s[r as usize];
+                    }
+                }
+                None => {
+                    for (dst, &r) in folded.iter_mut().zip(&self.flat_rows) {
+                        *dst = x[r as usize];
+                    }
+                }
+            }
+            let (codes, s) = quantize_row(&folded, act);
+            s_x[b] = s;
+            for (i, &c) in codes.iter().enumerate() {
+                xq[i * bn + b] = c as i32;
+            }
+        }
+        // Per-(sub-group, lane) integer code sums for the factored
+        // mean/offset terms (exact; shared by every column).
+        let mut sum_xc = vec![0i32; m * bn];
+        for sub in 0..m {
+            let acc = &mut sum_xc[sub * bn..(sub + 1) * bn];
+            for i in self.sub_offsets[sub]..self.sub_offsets[sub + 1] {
+                let row = &xq[i * bn..(i + 1) * bn];
+                for (a, &v) in acc.iter_mut().zip(row) {
+                    *a += v;
+                }
+            }
+        }
+
+        let mut yflat = vec![0f32; pm.cols * bn];
+        let y_ptr = SendMut(yflat.as_mut_ptr());
+        let words = &self.padded_words;
+        #[cfg(target_arch = "x86_64")]
+        let simd = std::arch::is_x86_feature_detected!("avx2");
+        #[cfg(not(target_arch = "x86_64"))]
+        let simd = false;
+        let min_cols = (128 / bn).max(8);
+        parallel_for_chunks(pm.cols, min_cols, |c0, c1| {
+            let y_ptr = y_ptr;
+            let mut colacc = vec![0f32; bn];
+            let mut dotacc = vec![0i32; bn];
+            for col in c0..c1 {
+                let mut pos = pm.col_bit_offset[col];
+                colacc.iter_mut().for_each(|v| *v = 0.0);
+                for sub in 0..m {
+                    let gm = pm.meta[col * m + sub];
+                    if gm.bits == 0 {
+                        continue; // pruned: contributes nothing
+                    }
+                    let start = self.sub_offsets[sub];
+                    let end = self.sub_offsets[sub + 1];
+                    let glen = end - start;
+                    let bits = gm.bits as usize;
+                    dotacc.iter_mut().for_each(|v| *v = 0);
+                    let group_x = &xq[start * bn..end * bn];
+                    // 128-bit window decode (k = 64/bits codes per load),
+                    // then one length-B integer AXPY per weight code.
+                    let mask = ((1u64 << bits) - 1) as u128;
+                    let k = 64 / bits;
+                    let mut i = 0usize;
+                    while i + k <= glen {
+                        let wi = pos >> 6;
+                        let off = pos & 63;
+                        // SAFETY: padded_words has 2 spare words.
+                        let lo = unsafe { *words.get_unchecked(wi) } as u128;
+                        let hi = unsafe { *words.get_unchecked(wi + 1) } as u128;
+                        let win = (lo | (hi << 64)) >> off;
+                        for j in 0..k {
+                            let c = ((win >> (j * bits)) & mask) as i32;
+                            if bn == 1 {
+                                // SAFETY: i + j < glen = group_x.len().
+                                dotacc[0] += c * unsafe { *group_x.get_unchecked(i + j) };
+                            } else {
+                                let row = &group_x[(i + j) * bn..(i + j + 1) * bn];
+                                int_axpy(c, row, &mut dotacc, simd);
+                            }
+                        }
+                        pos += k * bits;
+                        i += k;
+                    }
+                    // Tail.
+                    let mut cur = Cursor::new(words, pos);
+                    while i < glen {
+                        let c = cur.next(gm.bits as u32, mask as u64) as i32;
+                        let row = &group_x[i * bn..(i + 1) * bn];
+                        int_axpy(c, row, &mut dotacc, simd);
+                        i += 1;
+                    }
+                    pos = cur.pos;
+                    // One f32 combine per (group, lane): the Uniform LUT
+                    // offset off − 0.5 = 2^(B−1) − 0.5.
+                    let offm = (1i64 << (bits - 1)) as f32 - 0.5;
+                    for b in 0..bn {
+                        let d = dotacc[b] as f32;
+                        let s = sum_xc[sub * bn + b] as f32;
+                        colacc[b] += gm.scale * (d - offm * s) + gm.mean * s;
+                    }
+                }
+                for (b, &v) in colacc.iter().enumerate() {
+                    // SAFETY: disjoint column ranges across chunks.
+                    unsafe { *y_ptr.0.add(col * bn + b) = v * s_x[b] };
+                }
+            }
+        });
+        let mut ys: Vec<Vec<f32>> = (0..bn)
+            .map(|b| (0..pm.cols).map(|col| yflat[col * bn + b]).collect())
+            .collect();
+        // FP16 exception rows: dense contribution with the ORIGINAL f32 x.
+        for (r, vals) in &pm.fp_rows {
+            for (b, x) in xs.iter().enumerate() {
+                let xv = x[*r as usize];
+                if xv == 0.0 {
+                    continue;
+                }
+                for (yj, &wv) in ys[b].iter_mut().zip(vals) {
+                    *yj += xv * wv;
+                }
+            }
+        }
+        ys
+    }
+
+    /// Sequence-parallel integer GEMM: [`MatvecPlan::matgem`] with the
+    /// integer tile kernel. Rows are tiled by [`GEMM_ROW_TILE`] and each
+    /// tile's column code streams are decoded once; per-row results are
+    /// tile-position independent (inherited from `matmul_int`'s
+    /// batch-invariance), so chunked prefill reproduces token-by-token
+    /// stepping exactly.
+    pub fn matgem_int(
+        &self,
+        pm: &PackedMatrix,
+        xs: &[Vec<f32>],
+        act: ActQuantParams,
+    ) -> Vec<Vec<f32>> {
+        let mut ys = Vec::with_capacity(xs.len());
+        for tile in xs.chunks(GEMM_ROW_TILE) {
+            ys.append(&mut self.matmul_int(pm, tile, act));
+        }
+        ys
+    }
+
+    /// Activation-quantized batched GEMM with automatic routing:
+    ///
+    /// - `act.bits == 0` (allocator left this input at full precision):
+    ///   the plain f32 [`MatvecPlan::matmul`];
+    /// - Uniform weight matrices: the fully-integer
+    ///   [`MatvecPlan::matmul_int`];
+    /// - Companded matrices: *fake-quantize* each row (quantize →
+    ///   dequantize at the same rate, so the numerics and perplexity
+    ///   impact match the integer path) and run the f32 LUT kernel —
+    ///   the companded LUT is non-affine in the code, so the integer
+    ///   dot does not apply. OWQ exception rows are restored to their
+    ///   original f32 values first (outlier rows stay full precision on
+    ///   every path).
+    pub fn matmul_act(
+        &self,
+        pm: &PackedMatrix,
+        xs: &[Vec<f32>],
+        act: ActQuantParams,
+    ) -> Vec<Vec<f32>> {
+        if act.bits == 0 {
+            return self.matmul(pm, xs);
+        }
+        if pm.mode == QuantMode::Uniform {
+            return self.matmul_int(pm, xs, act);
+        }
+        let xf: Vec<Vec<f32>> = xs
+            .iter()
+            .map(|x| {
+                let (codes, s) = quantize_row(x, act);
+                let mut xq = dequantize_row(&codes, s);
+                for (r, _) in &pm.fp_rows {
+                    xq[*r as usize] = x[*r as usize];
+                }
+                xq
+            })
+            .collect();
+        self.matmul(pm, &xf)
+    }
+
+    /// Sequence-parallel [`MatvecPlan::matmul_act`] (same routing, tiled
+    /// by [`GEMM_ROW_TILE`]).
+    pub fn matgem_act(
+        &self,
+        pm: &PackedMatrix,
+        xs: &[Vec<f32>],
+        act: ActQuantParams,
+    ) -> Vec<Vec<f32>> {
+        if act.bits == 0 {
+            return self.matgem(pm, xs);
+        }
+        let mut ys = Vec::with_capacity(xs.len());
+        for tile in xs.chunks(GEMM_ROW_TILE) {
+            ys.append(&mut self.matmul_act(pm, tile, act));
+        }
+        ys
+    }
+}
+
+/// Integer AXPY for the W·A kernel: `acc[l] += c · row[l]` across all
+/// batch lanes. The AVX2 variant (`vpmulld` + `vpaddd`) and the scalar
+/// loop are exactly equal — integer arithmetic has no rounding — which
+/// is what keeps `matmul_int` bit-stable across ISAs (pinned by the
+/// scalar-vs-AVX2 parity test).
+#[inline(always)]
+#[allow(unused_variables)]
+fn int_axpy(c: i32, row: &[i32], acc: &mut [i32], simd: bool) {
+    debug_assert_eq!(row.len(), acc.len());
+    #[cfg(target_arch = "x86_64")]
+    if simd && row.len() >= 8 {
+        // SAFETY: AVX2 presence checked by the caller's feature detect.
+        unsafe { int_axpy_avx2(c, row, acc) };
+        return;
+    }
+    for (a, &x) in acc.iter_mut().zip(row) {
+        *a += c * x;
+    }
+}
+
+/// AVX2 lane-vectorized integer multiply-accumulate (8 lanes per
+/// `vpmulld`). Exact — see [`int_axpy`].
+///
+/// # Safety
+/// Caller must guarantee AVX2 (feature detection) and
+/// `row.len() == acc.len()`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn int_axpy_avx2(c: i32, row: &[i32], acc: &mut [i32]) {
+    use std::arch::x86_64::*;
+    let n = row.len();
+    let cb = _mm256_set1_epi32(c);
+    let rptr = row.as_ptr();
+    let aptr = acc.as_mut_ptr();
+    let mut lane = 0usize;
+    while lane + 8 <= n {
+        let av = _mm256_loadu_si256(aptr.add(lane) as *const __m256i);
+        let xv = _mm256_loadu_si256(rptr.add(lane) as *const __m256i);
+        let sum = _mm256_add_epi32(av, _mm256_mullo_epi32(cb, xv));
+        _mm256_storeu_si256(aptr.add(lane) as *mut __m256i, sum);
+        lane += 8;
+    }
+    while lane < n {
+        *aptr.add(lane) += c * *rptr.add(lane);
+        lane += 1;
     }
 }
 
@@ -979,6 +1304,198 @@ mod tests {
         assert!(plan.matgem(&pm, &[]).is_empty());
         let xs = random_batch(&mut rng, 3, 64);
         assert_eq!(plan.matgem(&pm, &xs), plan.matmul(&pm, &xs));
+    }
+
+    use crate::quant::activations::ActScalePolicy;
+
+    /// Fake-quant reference for the integer kernel: fold the AWQ row
+    /// scale, quantize-dequantize the folded row, un-fold, restore OWQ
+    /// exception rows, and run the f32 LUT kernel. Agrees with
+    /// `matmul_int` up to f32 rounding-order differences only.
+    fn int_reference(
+        plan: &MatvecPlan,
+        pm: &PackedMatrix,
+        x: &[f32],
+        act: ActQuantParams,
+    ) -> Vec<f32> {
+        let folded: Vec<f32> = plan
+            .flat_rows
+            .iter()
+            .map(|&r| match &pm.row_scale {
+                Some(s) => x[r as usize] / s[r as usize],
+                None => x[r as usize],
+            })
+            .collect();
+        let (codes, s_x) = quantize_row(&folded, act);
+        let mut xhat = x.to_vec();
+        for (i, &r) in plan.flat_rows.iter().enumerate() {
+            let deq = s_x * codes[i] as f32;
+            xhat[r as usize] = match &pm.row_scale {
+                Some(s) => deq * s[r as usize],
+                None => deq,
+            };
+        }
+        // fp rows keep the original x (both paths).
+        plan.matmul(pm, std::slice::from_ref(&xhat)).remove(0)
+    }
+
+    #[test]
+    fn matmul_int_matches_fake_quant_reference() {
+        let mut rng = Rng::new(181);
+        for wbits in [2u8, 3, 5, 8] {
+            for abits in [4u8, 8] {
+                let (_, pm) = random_packed(&mut rng, 96, 24, wbits, QuantMode::Uniform);
+                let plan = MatvecPlan::new(&pm);
+                let act = ActQuantParams::new(abits, ActScalePolicy::PerToken, 1.0);
+                let xs = random_batch(&mut rng, 4, 96);
+                let ys = plan.matmul_int(&pm, &xs, act);
+                for (b, x) in xs.iter().enumerate() {
+                    let y_ref = int_reference(&plan, &pm, x, act);
+                    for (j, (a, r)) in ys[b].iter().zip(&y_ref).enumerate() {
+                        assert!(
+                            (a - r).abs() < 2e-3 * r.abs().max(1.0),
+                            "w{wbits}/a{abits} lane {b} col {j}: int {a} vs ref {r}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_int_handles_row_scale_fp_rows_and_pruned_groups() {
+        let mut rng = Rng::new(182);
+        let (rows, cols) = (48, 10);
+        let mut w = Tensor::zeros(rows, cols);
+        rng.fill_laplace(&mut w.data, 0.0, 0.4);
+        let grouping = Grouping::build(rows, cols, 12, &vec![0.0; rows]);
+        let metas: Vec<crate::quant::GroupMeta> = (0..grouping.num_groups())
+            .map(|gi| {
+                let col = gi / grouping.m;
+                let sub = gi % grouping.m;
+                let vals = grouping.gather(&w, col, sub);
+                let mut gm =
+                    crate::quant::group_meta(&vals, 3, QuantMode::Uniform, ScaleRule::Range);
+                if gi % 5 == 0 {
+                    gm.bits = 0; // pruned groups in the mix
+                }
+                gm
+            })
+            .collect();
+        let scale: Vec<f32> = (0..rows).map(|_| 0.5 + rng.uniform_f32()).collect();
+        let fp = vec![1u32, 20, 33];
+        let pm = crate::quant::bitpack::PackedMatrix::pack_full(
+            &w,
+            &grouping,
+            &metas,
+            QuantMode::Uniform,
+            Some(scale),
+            &fp,
+        );
+        let plan = MatvecPlan::new(&pm);
+        let act = ActQuantParams::new(8, ActScalePolicy::PerToken, 1.0);
+        let xs = random_batch(&mut rng, 6, rows);
+        let ys = plan.matmul_int(&pm, &xs, act);
+        for (b, x) in xs.iter().enumerate() {
+            let y_ref = int_reference(&plan, &pm, x, act);
+            for (a, r) in ys[b].iter().zip(&y_ref) {
+                assert!((a - r).abs() < 2e-3 * r.abs().max(1.0), "lane {b}: {a} vs {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_int_batched_is_bit_identical_to_batch_of_one() {
+        // Same batch-invariance contract as the f32 kernel; B = 16
+        // exercises the AVX2 integer AXPY (8-lane vpmulld), B = 2 the
+        // scalar lane loop. Repeated calls are also bit-stable (same
+        // input → same codes → same output).
+        let mut rng = Rng::new(183);
+        for wbits in [2u8, 4, 7] {
+            let (_, pm) = random_packed(&mut rng, 128, 20, wbits, QuantMode::Uniform);
+            let plan = MatvecPlan::new(&pm);
+            for abits in [4u8, 8] {
+                let act = ActQuantParams::new(abits, ActScalePolicy::PerToken, 1.0);
+                for bn in [2usize, 8, 16] {
+                    let xs = random_batch(&mut rng, bn, 128);
+                    let batched = plan.matmul_int(&pm, &xs, act);
+                    assert_eq!(batched, plan.matmul_int(&pm, &xs, act), "nondeterministic");
+                    for (b, x) in xs.iter().enumerate() {
+                        let single = plan.matmul_int(&pm, std::slice::from_ref(x), act);
+                        assert_eq!(
+                            batched[b], single[0],
+                            "w{wbits}/a{abits} B={bn} lane {b}: batch dependence"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matgem_int_is_bit_identical_to_per_row_matmul_int() {
+        // Tile-boundary coverage: 2·GEMM_ROW_TILE + 7 rows gives two full
+        // tiles plus a ragged tail, so rows straddle every boundary case.
+        let mut rng = Rng::new(184);
+        let (_, pm) = random_packed(&mut rng, 96, 24, 4, QuantMode::Uniform);
+        let plan = MatvecPlan::new(&pm);
+        let act = ActQuantParams::new(8, ActScalePolicy::PerToken, 1.0);
+        let xs = random_batch(&mut rng, 2 * GEMM_ROW_TILE + 7, 96);
+        let ys = plan.matgem_int(&pm, &xs, act);
+        assert_eq!(ys.len(), xs.len());
+        for (r, x) in xs.iter().enumerate() {
+            let single = plan.matmul_int(&pm, std::slice::from_ref(x), act);
+            assert_eq!(ys[r], single[0], "row {r}: tile-position dependence");
+        }
+        assert!(plan.matgem_int(&pm, &[], act).is_empty());
+    }
+
+    #[test]
+    fn matmul_act_routes_by_mode_and_bits() {
+        let mut rng = Rng::new(185);
+        let xs = random_batch(&mut rng, 3, 96);
+        // bits == 0: exact f32 path, bit-identical to plain matmul.
+        let (_, pmu) = random_packed(&mut rng, 96, 16, 3, QuantMode::Uniform);
+        let planu = MatvecPlan::new(&pmu);
+        let full = ActQuantParams::full_precision();
+        assert_eq!(planu.matmul_act(&pmu, &xs, full), planu.matmul(&pmu, &xs));
+        assert_eq!(planu.matgem_act(&pmu, &xs, full), planu.matgem(&pmu, &xs));
+        // Uniform: the integer path, bit for bit.
+        let act = ActQuantParams::new(8, ActScalePolicy::PerToken, 1.0);
+        assert_eq!(planu.matmul_act(&pmu, &xs, act), planu.matmul_int(&pmu, &xs, act));
+        // Companded: fake-quant fallback — close to the unquantized
+        // result at 8 bits, not identical (quantization happened).
+        let (_, pmc) = random_packed(&mut rng, 96, 16, 3, QuantMode::Companded);
+        let planc = MatvecPlan::new(&pmc);
+        let yq = planc.matmul_act(&pmc, &xs, act);
+        let yf = planc.matmul(&pmc, &xs);
+        assert_ne!(yq, yf, "companded fallback should actually quantize");
+        for (b, (qs, fs)) in yq.iter().zip(&yf).enumerate() {
+            for (a, r) in qs.iter().zip(fs) {
+                assert!((a - r).abs() < 2e-2 * r.abs().max(1.0), "lane {b}: {a} vs {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn int_axpy_avx2_matches_scalar_exactly() {
+        // Scalar-vs-AVX2 parity: integer arithmetic is exact, so the two
+        // must agree bit for bit at every lane count (tails included).
+        let mut rng = Rng::new(186);
+        #[cfg(target_arch = "x86_64")]
+        let simd_ok = std::arch::is_x86_feature_detected!("avx2");
+        #[cfg(not(target_arch = "x86_64"))]
+        let simd_ok = false;
+        for bn in [1usize, 3, 8, 11, 16, 29] {
+            let row: Vec<i32> = (0..bn).map(|_| (rng.uniform() * 255.0) as i32 - 127).collect();
+            for c in [0i32, 1, 7, 63, 255] {
+                let mut a_scalar = vec![3i32; bn];
+                let mut a_simd = vec![3i32; bn];
+                int_axpy(c, &row, &mut a_scalar, false);
+                int_axpy(c, &row, &mut a_simd, simd_ok);
+                assert_eq!(a_scalar, a_simd, "bn={bn} c={c}");
+            }
+        }
     }
 
     #[test]

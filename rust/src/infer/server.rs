@@ -167,6 +167,56 @@ impl ServeConfig {
 /// instead of stalling the queue head behind full-size chunks.
 const DEFER_SHRINK_AFTER: usize = 4;
 
+/// Degradation-ladder recovery: consecutive deferral-free scheduler
+/// iterations before a shrunken prefill chunk re-doubles toward the
+/// configured value. Recovery is deliberately slower than degradation
+/// (8 clear iterations per doubling vs 4 deferred ones per halving) so
+/// a pool oscillating near its admission limit settles at a small chunk
+/// instead of thrashing between sizes. Re-chunking never changes tokens
+/// (the prefill bit-identity contract), so the ladder is free to move
+/// in both directions mid-call.
+const DEFER_REGROW_AFTER: usize = 8;
+
+/// One degradation-ladder update for the effective-prefill-chunk knob,
+/// shared by `serve_with` and `serve_speculative` so the two schedulers
+/// cannot drift apart: sustained admission deferral halves the chunk
+/// (bounding per-iteration GEMM cost so resident lanes retire sooner);
+/// sustained deferral-free running re-doubles it back toward
+/// `configured` (restoring prompt-absorption bandwidth once pressure
+/// clears — the seed ladder only ever shrank, so one burst of pressure
+/// degraded TTFT for the rest of the call). Any deferral resets the
+/// recovery streak.
+fn update_chunk_ladder(
+    deferred_now: bool,
+    prefill_chunk: &mut usize,
+    configured: usize,
+    defer_streak: &mut usize,
+    clear_streak: &mut usize,
+    robust: &mut RobustCounters,
+) {
+    if deferred_now {
+        *defer_streak += 1;
+        *clear_streak = 0;
+        if *defer_streak >= DEFER_SHRINK_AFTER && *prefill_chunk > 1 {
+            *prefill_chunk = (*prefill_chunk / 2).max(1);
+            robust.chunk_shrinks += 1;
+            *defer_streak = 0;
+        }
+    } else {
+        *defer_streak = 0;
+        if *prefill_chunk < configured {
+            *clear_streak += 1;
+            if *clear_streak >= DEFER_REGROW_AFTER {
+                *prefill_chunk = (*prefill_chunk * 2).min(configured);
+                robust.chunk_regrows += 1;
+                *clear_streak = 0;
+            }
+        } else {
+            *clear_streak = 0;
+        }
+    }
+}
+
 /// Degradation ladder: proposals per acceptance-measurement window for
 /// the speculative schedulers. Windows are disjoint; the decision uses
 /// whole windows so one unlucky round cannot disable speculation.
@@ -250,6 +300,11 @@ pub struct ServeStats {
     /// Times the degradation ladder halved the effective prefill chunk
     /// under sustained KV-pool admission deferral.
     pub chunk_shrinks: usize,
+    /// Times the ladder re-doubled a shrunken prefill chunk back toward
+    /// the configured value after sustained deferral-free running — the
+    /// recovery side of `chunk_shrinks` (never exceeds it: the chunk
+    /// can only regrow what deferral shrank).
+    pub chunk_regrows: usize,
     /// Times the degradation ladder disabled speculation after a full
     /// acceptance window collapsed (at most once per serve call).
     pub spec_disables: usize,
@@ -283,6 +338,7 @@ struct RobustCounters {
     timed_out: usize,
     lane_faults: usize,
     chunk_shrinks: usize,
+    chunk_regrows: usize,
     spec_disables: usize,
 }
 
@@ -331,6 +387,9 @@ impl std::fmt::Display for ServeStats {
         }
         if self.chunk_shrinks > 0 {
             write!(f, ", {} prefill-chunk shrinks", self.chunk_shrinks)?;
+        }
+        if self.chunk_regrows > 0 {
+            write!(f, ", {} prefill-chunk regrows", self.chunk_regrows)?;
         }
         if self.spec_disables > 0 {
             write!(f, ", speculation disabled mid-call")?;
@@ -403,6 +462,7 @@ fn finalize_stats(
         timed_out: robust.timed_out,
         lane_faults: robust.lane_faults,
         chunk_shrinks: robust.chunk_shrinks,
+        chunk_regrows: robust.chunk_regrows,
         spec_disables: robust.spec_disables,
     }
 }
@@ -525,6 +585,7 @@ pub fn serve_with(
     // is free to move this knob mid-call.
     let mut prefill_chunk = cfg.prefill_chunk.max(1);
     let mut defer_streak = 0usize;
+    let mut clear_streak = 0usize;
     // Counts deferral EPISODES (one per request that had to wait), not
     // wait iterations — the head request re-checks the pool every
     // iteration and would otherwise inflate the stat by decode length.
@@ -617,17 +678,16 @@ pub fn serve_with(
         }
         // Degradation ladder: sustained pool exhaustion shrinks the
         // effective prefill chunk instead of letting the queue head
-        // stall behind full-size prompt chunks.
-        if deferred_now {
-            defer_streak += 1;
-            if defer_streak >= DEFER_SHRINK_AFTER && prefill_chunk > 1 {
-                prefill_chunk = (prefill_chunk / 2).max(1);
-                robust.chunk_shrinks += 1;
-                defer_streak = 0;
-            }
-        } else {
-            defer_streak = 0;
-        }
+        // stall behind full-size prompt chunks; sustained deferral-free
+        // running re-grows it toward the configured value.
+        update_chunk_ladder(
+            deferred_now,
+            &mut prefill_chunk,
+            cfg.prefill_chunk.max(1),
+            &mut defer_streak,
+            &mut clear_streak,
+            &mut robust,
+        );
         peak_lanes = peak_lanes.max(active.len());
         for seq in active.iter_mut() {
             seq.steps_resident += 1;
@@ -871,6 +931,7 @@ pub fn serve_speculative(
     // token-neutral by the greedy-verification contract).
     let mut prefill_chunk = cfg.prefill_chunk.max(1);
     let mut defer_streak = 0usize;
+    let mut clear_streak = 0usize;
     let mut spec_enabled = true;
     let (mut win_proposed, mut win_accepted) = (0usize, 0usize);
     let mut last_deferred: Option<usize> = None;
@@ -954,16 +1015,14 @@ pub fn serve_speculative(
         if active.is_empty() {
             break;
         }
-        if deferred_now {
-            defer_streak += 1;
-            if defer_streak >= DEFER_SHRINK_AFTER && prefill_chunk > 1 {
-                prefill_chunk = (prefill_chunk / 2).max(1);
-                robust.chunk_shrinks += 1;
-                defer_streak = 0;
-            }
-        } else {
-            defer_streak = 0;
-        }
+        update_chunk_ladder(
+            deferred_now,
+            &mut prefill_chunk,
+            cfg.prefill_chunk.max(1),
+            &mut defer_streak,
+            &mut clear_streak,
+            &mut robust,
+        );
         peak_lanes = peak_lanes.max(active.len());
         for seq in active.iter_mut() {
             seq.steps_resident += 1;
@@ -1805,10 +1864,110 @@ mod tests {
         let (resps, stats) = serve_with(&engine, reqs, cfg);
         assert!(stats.kv_deferrals > 0);
         assert!(stats.chunk_shrinks >= 1, "sustained deferral must shrink the prefill chunk");
+        // The recovery side can only undo what deferral shrank.
+        assert!(stats.chunk_regrows <= stats.chunk_shrinks);
         assert_eq!(stats.completed, 2);
         for (r, want) in resps.iter().zip(&expected) {
             assert!(r.error.is_none());
             assert_eq!(r.tokens, *want, "degraded chunking must not change tokens");
+        }
+    }
+
+    #[test]
+    fn chunk_ladder_shrinks_then_regrows_toward_configured() {
+        // The ladder's state machine, pinned directly (both schedulers
+        // share this exact function).
+        let mut chunk = 8usize;
+        let (mut ds, mut cs) = (0usize, 0usize);
+        let mut rc = RobustCounters::default();
+        for _ in 0..DEFER_SHRINK_AFTER {
+            update_chunk_ladder(true, &mut chunk, 8, &mut ds, &mut cs, &mut rc);
+        }
+        assert_eq!(chunk, 4, "sustained deferral halves the chunk");
+        assert_eq!(rc.chunk_shrinks, 1);
+        // Keep the pressure on: the chunk floors at 1 and stays there.
+        for _ in 0..3 * DEFER_SHRINK_AFTER {
+            update_chunk_ladder(true, &mut chunk, 8, &mut ds, &mut cs, &mut rc);
+        }
+        assert_eq!(chunk, 1, "the ladder floors at a 1-token chunk");
+        let shrinks = rc.chunk_shrinks;
+        // Recovery: one doubling per DEFER_REGROW_AFTER clear iterations,
+        // back to the configured value and no further.
+        for _ in 0..DEFER_REGROW_AFTER {
+            update_chunk_ladder(false, &mut chunk, 8, &mut ds, &mut cs, &mut rc);
+        }
+        assert_eq!(chunk, 2, "clear running must re-double the chunk");
+        assert_eq!(rc.chunk_regrows, 1);
+        for _ in 0..2 * DEFER_REGROW_AFTER {
+            update_chunk_ladder(false, &mut chunk, 8, &mut ds, &mut cs, &mut rc);
+        }
+        assert_eq!(chunk, 8, "recovery stops at the configured value");
+        assert_eq!(rc.chunk_regrows, 3);
+        // At the configured size the ladder is idle.
+        for _ in 0..4 * DEFER_REGROW_AFTER {
+            update_chunk_ladder(false, &mut chunk, 8, &mut ds, &mut cs, &mut rc);
+        }
+        assert_eq!(chunk, 8);
+        assert_eq!(rc.chunk_regrows, 3);
+        assert_eq!(rc.chunk_shrinks, shrinks, "idle running never shrinks");
+        // A deferral mid-recovery resets the clear streak: almost-enough
+        // clear iterations, one deferral, one more clear → no regrow.
+        for _ in 0..2 * DEFER_SHRINK_AFTER {
+            update_chunk_ladder(true, &mut chunk, 8, &mut ds, &mut cs, &mut rc);
+        }
+        assert_eq!(chunk, 2);
+        for _ in 0..DEFER_REGROW_AFTER - 1 {
+            update_chunk_ladder(false, &mut chunk, 8, &mut ds, &mut cs, &mut rc);
+        }
+        update_chunk_ladder(true, &mut chunk, 8, &mut ds, &mut cs, &mut rc);
+        let rg = rc.chunk_regrows;
+        update_chunk_ladder(false, &mut chunk, 8, &mut ds, &mut cs, &mut rc);
+        assert_eq!(rc.chunk_regrows, rg, "deferral must reset the clear streak");
+        assert_eq!(chunk, 2);
+    }
+
+    #[test]
+    fn chunk_regrow_fires_after_pressure_clears_without_changing_tokens() {
+        // End to end: a tight pool shrinks the chunk while lanes queue;
+        // once the pool pressure clears, long decode tails give the
+        // ladder enough deferral-free iterations to re-grow the chunk —
+        // visible in stats, invisible in tokens.
+        let engine = tiny_engine();
+        let prompt: Vec<u32> = (0..12).map(|i| ((i * 5 + 1) % 32) as u32).collect();
+        let reqs = vec![
+            Request { id: 0, prompt: prompt.clone(), max_new: 4 },
+            Request { id: 1, prompt: prompt.clone(), max_new: 4 },
+            Request { id: 2, prompt: vec![3, 1, 4], max_new: 12 },
+        ];
+        let expected: Vec<Vec<u32>> = reqs
+            .iter()
+            .map(|r| engine.generate(&r.prompt, r.max_new))
+            .collect();
+        let worst = crate::infer::kv::lane_cost_bytes(
+            &engine.config,
+            engine.kv_config(),
+            engine.config.max_seq,
+        );
+        // Room for one full lane plus the small request: the two big
+        // prompts serialize (sustained deferral → shrink), then the
+        // 12-token decode tail runs pressure-free (regrow window).
+        let cfg = ServeConfig { kv_budget_bytes: Some(worst + worst / 2), ..ServeConfig::new(4) };
+        let (resps, stats) = serve_with(&engine, reqs, cfg);
+        assert_eq!(stats.completed, 3);
+        assert!(stats.chunk_regrows <= stats.chunk_shrinks);
+        if stats.chunk_shrinks >= 1 {
+            // Regrow needs DEFER_REGROW_AFTER clear iterations after the
+            // last shrink; the long decode tail provides them whenever a
+            // shrink happened at all.
+            assert!(
+                stats.chunk_regrows >= 1,
+                "pressure cleared for {} iterations but the chunk never regrew",
+                stats.steps
+            );
+        }
+        for (r, want) in resps.iter().zip(&expected) {
+            assert!(r.error.is_none());
+            assert_eq!(r.tokens, *want, "regrown chunking must not change tokens");
         }
     }
 

@@ -82,6 +82,34 @@ impl Cache {
         }
         mu
     }
+
+    /// Per-channel second moments and absolute maxima of the input
+    /// activations feeding the given matrix — the activation-side
+    /// statistics the joint weight+activation allocator consumes
+    /// (`E[x²]` drives the rate-distortion sensitivity, absmax the
+    /// static quantizer scale). One pass over the same tensor
+    /// [`Cache::input_means`] reads.
+    pub fn input_moments(&self, layer: usize, role: Role) -> (Vec<f32>, Vec<f32>) {
+        let t = match role {
+            Role::Q | Role::K | Role::V => &self.layers[layer].a,
+            Role::O => &self.layers[layer].ctx,
+            Role::Up => &self.layers[layer].bn,
+            Role::Down => &self.layers[layer].h,
+        };
+        let mut sq = vec![0f32; t.cols];
+        let mut amax = vec![0f32; t.cols];
+        for r in 0..t.rows {
+            for ((s, m), &x) in sq.iter_mut().zip(amax.iter_mut()).zip(t.row(r)) {
+                *s += x * x;
+                *m = m.max(x.abs());
+            }
+        }
+        let inv = 1.0 / t.rows as f32;
+        for s in sq.iter_mut() {
+            *s *= inv;
+        }
+        (sq, amax)
+    }
 }
 
 // ---------------------------------------------------------------- forward

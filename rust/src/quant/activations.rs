@@ -10,6 +10,8 @@
 
 use crate::coordinator::dual_ascent::{solve_integer, DualAscentConfig};
 use crate::model::tensor::Tensor;
+use crate::model::weights::MatId;
+use crate::quant::bitpack::f16_round;
 use crate::quant::companding;
 use crate::stats::distortion::GroupRd;
 use crate::stats::moments::EmaVec;
@@ -141,6 +143,174 @@ impl ActQuantizer {
     }
 }
 
+// ------------------------------------------------------------- W·A specs
+//
+// The per-matrix *input* quantizers the joint weight+activation allocator
+// produces. Unlike `ActQuantizer` above (per-channel-group companded
+// fake-quant, used for analysis), these are deliberately symmetric-uniform
+// per *row* (token): symmetric codes keep the integer GEMM's accumulation
+// affine in the weight codes, which is what makes the fully-integer tile
+// path in `infer::matvec` exact.
+
+/// How an [`ActQuantParams`] entry derives its quantization scale.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ActScalePolicy {
+    /// One calibration-time scale for the whole tensor (cheapest: no
+    /// runtime reduction, but outlier tokens clip).
+    Static,
+    /// Per-token absmax computed on the fly (LLM.int8()-style dynamic
+    /// quantization; one extra pass over each activation row).
+    PerToken,
+}
+
+impl ActScalePolicy {
+    /// Stable one-byte tag for the persisted spec (append-only).
+    pub fn tag(&self) -> u8 {
+        match self {
+            ActScalePolicy::Static => 0,
+            ActScalePolicy::PerToken => 1,
+        }
+    }
+
+    /// Inverse of [`ActScalePolicy::tag`].
+    pub fn from_tag(t: u8) -> Option<ActScalePolicy> {
+        Some(match t {
+            0 => ActScalePolicy::Static,
+            1 => ActScalePolicy::PerToken,
+            _ => return None,
+        })
+    }
+}
+
+/// Input quantizer for one matrix: bit depth + scale policy.
+///
+/// `bits == 0` means the allocator left this input at full precision —
+/// the inference layer keeps the f32 activation path for that matrix.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ActQuantParams {
+    /// Activation code width in bits; `0` = full precision (f32 path),
+    /// otherwise clamped to [2, 8] by [`ActQuantParams::new`]. Symmetric
+    /// signed codes in `[-(2^(bits-1)-1), 2^(bits-1)-1]`.
+    pub bits: u8,
+    /// Scale derivation policy.
+    pub policy: ActScalePolicy,
+    /// Static per-tensor dequant scale (`x ≈ scale · code`; FP16-rounded,
+    /// strictly positive) — calibrated `absmax / qmax`. Unused under
+    /// [`ActScalePolicy::PerToken`], where each row derives its own.
+    pub scale: f32,
+}
+
+impl ActQuantParams {
+    /// Clamps `bits` to [2, 8] (unless 0 = disabled) and FP16-rounds the
+    /// static scale with the same degenerate-scale guard as
+    /// `KvQuantParams::new`.
+    pub fn new(bits: u8, policy: ActScalePolicy, scale: f32) -> ActQuantParams {
+        let mut scale = f16_round(scale);
+        if !scale.is_finite() || scale <= 0.0 {
+            scale = 1e-6;
+        }
+        let bits = if bits == 0 { 0 } else { bits.clamp(2, 8) };
+        ActQuantParams { bits, policy, scale }
+    }
+
+    /// Full-precision entry: the f32 activation path.
+    pub fn full_precision() -> ActQuantParams {
+        ActQuantParams { bits: 0, policy: ActScalePolicy::PerToken, scale: 1.0 }
+    }
+
+    /// Largest code magnitude: `2^(bits-1) - 1` (symmetric grid).
+    pub fn qmax(&self) -> i32 {
+        debug_assert!(self.bits >= 2);
+        (1i32 << (self.bits - 1)) - 1
+    }
+}
+
+/// Per-matrix activation bit assignment for a whole model — the
+/// activation-side twin of the weight allocation, produced by
+/// `CalibrationStats::allocate_joint` and carried by the `Engine`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ActQuantSpec {
+    /// One entry per quantized matrix, sorted by `MatId`.
+    pub entries: Vec<(MatId, ActQuantParams)>,
+}
+
+impl ActQuantSpec {
+    /// Flat spec: every matrix input at `bits` under `policy` (ablation
+    /// arms; the allocator produces mixed ones).
+    pub fn uniform(ids: &[MatId], bits: u8, policy: ActScalePolicy, scale: f32) -> ActQuantSpec {
+        let p = ActQuantParams::new(bits, policy, scale);
+        let mut entries: Vec<(MatId, ActQuantParams)> = ids.iter().map(|&id| (id, p)).collect();
+        entries.sort_by_key(|(id, _)| *id);
+        ActQuantSpec { entries }
+    }
+
+    /// Look up the input quantizer for one matrix; `None` (matrix not in
+    /// the spec) means full precision.
+    pub fn get(&self, id: MatId) -> Option<ActQuantParams> {
+        self.entries
+            .binary_search_by_key(&id, |(i, _)| *i)
+            .ok()
+            .map(|i| self.entries[i].1)
+    }
+
+    /// Average activation bits per entry, counting full-precision entries
+    /// as 32 bits (what they actually cost on the bus).
+    pub fn mean_bits(&self) -> f64 {
+        if self.entries.is_empty() {
+            return 0.0;
+        }
+        let total: usize = self
+            .entries
+            .iter()
+            .map(|(_, p)| if p.bits == 0 { 32 } else { p.bits as usize })
+            .sum();
+        total as f64 / self.entries.len() as f64
+    }
+}
+
+/// Quantize one activation row to symmetric signed integer codes.
+///
+/// Returns `(codes, scale)` such that `x[i] ≈ scale · codes[i]` with
+/// `codes[i] ∈ [-qmax, qmax]`. Under [`ActScalePolicy::PerToken`] the
+/// scale is this row's `absmax / qmax` (exactly covering the row's
+/// range); under [`ActScalePolicy::Static`] it is the calibrated
+/// per-tensor scale and codes clamp. An all-zero row (or degenerate
+/// scale) yields `scale == 0` with all-zero codes, so `scale · code`
+/// reconstruction stays exact.
+pub fn quantize_row(x: &[f32], p: ActQuantParams) -> (Vec<i8>, f32) {
+    debug_assert!(p.bits >= 2, "quantize_row called on a full-precision entry");
+    let qmax = p.qmax();
+    let s = match p.policy {
+        ActScalePolicy::PerToken => {
+            let amax = x.iter().fold(0f32, |m, &v| m.max(v.abs()));
+            if amax > 0.0 && amax.is_finite() {
+                amax / qmax as f32
+            } else {
+                0.0
+            }
+        }
+        ActScalePolicy::Static => p.scale,
+    };
+    if s <= 0.0 || !s.is_finite() {
+        return (vec![0i8; x.len()], 0.0);
+    }
+    let inv = 1.0 / s;
+    let codes = x
+        .iter()
+        .map(|&v| {
+            let c = (v * inv).round();
+            c.clamp(-(qmax as f32), qmax as f32) as i8
+        })
+        .collect();
+    (codes, s)
+}
+
+/// Dequantize codes produced by [`quantize_row`] (test/reference path —
+/// the integer GEMM never materializes this).
+pub fn dequantize_row(codes: &[i8], scale: f32) -> Vec<f32> {
+    codes.iter().map(|&c| scale * c as f32).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -222,5 +392,64 @@ mod tests {
     fn build_without_observation_panics() {
         let cal = ActCalibrator::new(16, 4, 0.3);
         let _ = cal.build(4.0);
+    }
+
+    #[test]
+    fn per_token_roundtrip_is_deterministic_and_bounded() {
+        let mut rng = Rng::new(0xACA);
+        for bits in [2u8, 4, 8] {
+            let p = ActQuantParams::new(bits, ActScalePolicy::PerToken, 1.0);
+            let mut x = vec![0f32; 96];
+            rng.fill_laplace(&mut x, 0.1, 0.7);
+            let (codes, s) = quantize_row(&x, p);
+            // Determinism: same input, same codes, same scale — bit-exact.
+            let (codes2, s2) = quantize_row(&x, p);
+            assert_eq!(codes, codes2);
+            assert_eq!(s.to_bits(), s2.to_bits());
+            // Codes respect the symmetric grid.
+            let qmax = p.qmax() as i32;
+            assert!(codes.iter().all(|&c| (c as i32).abs() <= qmax));
+            // Roundtrip error bounded by half a step per element.
+            let deq = dequantize_row(&codes, s);
+            for (a, b) in x.iter().zip(&deq) {
+                assert!((a - b).abs() <= 0.5 * s + 1e-6, "bits {bits}: {a} vs {b} (s={s})");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_row_quantizes_to_zero_scale_and_codes() {
+        let p = ActQuantParams::new(8, ActScalePolicy::PerToken, 1.0);
+        let (codes, s) = quantize_row(&[0.0; 16], p);
+        assert_eq!(s, 0.0);
+        assert!(codes.iter().all(|&c| c == 0));
+        assert!(dequantize_row(&codes, s).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn static_policy_uses_calibrated_scale_and_clips() {
+        // Static scale sized for |x| <= 1.27 at 8 bits; outliers clip.
+        let p = ActQuantParams::new(8, ActScalePolicy::Static, 0.01);
+        let (codes, s) = quantize_row(&[0.5, -0.5, 10.0, -10.0], p);
+        assert_eq!(s, p.scale);
+        assert_eq!(codes[2], 127);
+        assert_eq!(codes[3], -127);
+        assert_eq!(codes[0], 50);
+        assert_eq!(codes[1], -50);
+    }
+
+    #[test]
+    fn spec_lookup_and_bit_clamping() {
+        let ids = [
+            MatId { layer: 0, role: crate::model::weights::Role::Q },
+            MatId { layer: 1, role: crate::model::weights::Role::Down },
+        ];
+        let spec = ActQuantSpec::uniform(&ids, 8, ActScalePolicy::PerToken, 1.0);
+        assert_eq!(spec.get(ids[0]).unwrap().bits, 8);
+        assert_eq!(spec.get(MatId { layer: 2, role: crate::model::weights::Role::Q }), None);
+        assert!((spec.mean_bits() - 8.0).abs() < 1e-12);
+        // bits=1 clamps up to 2; bits=0 stays disabled.
+        assert_eq!(ActQuantParams::new(1, ActScalePolicy::PerToken, 1.0).bits, 2);
+        assert_eq!(ActQuantParams::new(0, ActScalePolicy::PerToken, 1.0).bits, 0);
     }
 }

@@ -32,8 +32,9 @@ use std::path::Path;
 use crate::error::RadioError;
 use crate::model::config::ModelConfig;
 use crate::model::weights::{MatId, Role, SideParams, Weights};
-use crate::quant::bitpack::PackedMatrix;
-use crate::util::integrity::{self, SectionWriter, SEC_MATRICES, SEC_SIDE};
+use crate::quant::activations::{ActQuantParams, ActQuantSpec, ActScalePolicy};
+use crate::quant::bitpack::{f16_to_f32, f32_to_f16, PackedMatrix};
+use crate::util::integrity::{self, SectionWriter, SEC_ACTQ, SEC_MATRICES, SEC_SIDE};
 use crate::util::json::Json;
 
 /// Record tag marking the end of a packed-matrix stream.
@@ -43,6 +44,61 @@ const END_OF_MATRICES: u32 = u32::MAX;
 pub(crate) const MAGIC_QM2: &[u8; 8] = b"RADIOQM2";
 /// Magic of the multi-rate-point `.radio` container.
 pub(crate) const MAGIC_QM3: &[u8; 8] = b"RADIOQM3";
+/// Sub-magic opening the optional activation-quantization section.
+const ACTQ_MAGIC: &[u8; 8] = b"RADIOAQ1";
+
+/// Serialize an [`ActQuantSpec`]: sub-magic, entry count, then per
+/// entry `layer u32, role u8, bits u8, policy u8, scale f16`.
+fn write_act_spec<W: Write>(f: &mut W, spec: &ActQuantSpec) -> std::io::Result<()> {
+    f.write_all(ACTQ_MAGIC)?;
+    f.write_all(&(spec.entries.len() as u32).to_le_bytes())?;
+    for (id, p) in &spec.entries {
+        f.write_all(&(id.layer as u32).to_le_bytes())?;
+        f.write_all(&[id.role.tag(), p.bits, p.policy.tag()])?;
+        f.write_all(&f32_to_f16(p.scale).to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Probe for an activation-quantization section at the current read
+/// position. `Ok(None)` on a clean EOF — the container predates the
+/// section or was written weight-only; activation quantization is then
+/// simply disabled. Anything else must parse fully.
+fn read_act_spec<R: Read>(f: &mut R) -> std::io::Result<Option<ActQuantSpec>> {
+    let mut magic = [0u8; 8];
+    if !integrity::read_or_eof(f, &mut magic)? {
+        return Ok(None);
+    }
+    if &magic != ACTQ_MAGIC {
+        return Err(inv("bad activation-spec sub-magic"));
+    }
+    let mut l4 = [0u8; 4];
+    f.read_exact(&mut l4)?;
+    let n = u32::from_le_bytes(l4) as usize;
+    let mut entries = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        f.read_exact(&mut l4)?;
+        let layer = u32::from_le_bytes(l4) as usize;
+        let mut rec = [0u8; 3];
+        f.read_exact(&mut rec)?;
+        let role = Role::from_tag(rec[0]).ok_or_else(|| inv("bad role tag in act spec"))?;
+        let policy =
+            ActScalePolicy::from_tag(rec[2]).ok_or_else(|| inv("bad act scale policy tag"))?;
+        let mut l2 = [0u8; 2];
+        f.read_exact(&mut l2)?;
+        let scale = f16_to_f32(u16::from_le_bytes(l2));
+        let p = if rec[1] == 0 {
+            ActQuantParams::full_precision()
+        } else {
+            ActQuantParams::new(rec[1], policy, scale)
+        };
+        entries.push((MatId { layer, role }, p));
+    }
+    if !entries.windows(2).all(|w| w[0].0 < w[1].0) {
+        return Err(inv("act spec entries not sorted by matrix id"));
+    }
+    Ok(Some(ActQuantSpec { entries }))
+}
 
 /// Write one self-delimiting packed-matrix record (shared by the QM2
 /// writer and the QM3 ladder writer).
@@ -111,6 +167,10 @@ pub struct QuantizedModel {
     pub base: SideParams,
     /// One packed matrix per quantizable MatId, in `matrix_ids()` order.
     pub packed: Vec<(MatId, PackedMatrix)>,
+    /// Activation-quantization spec from the joint W·A allocation.
+    /// `None` (weight-only container, or one written before the section
+    /// existed) keeps inference on the f32 activation path.
+    pub act_quant: Option<ActQuantSpec>,
 }
 
 impl QuantizedModel {
@@ -174,7 +234,7 @@ impl QuantizedModel {
         for (id, p) in &self.packed {
             w.write_matrix(*id, p)?;
         }
-        w.finish(&self.base)
+        w.finish_with(&self.base, self.act_quant.as_ref())
     }
 
     /// Load a `.radio` container. Accepts both revisions: a `RADIOQM2`
@@ -223,7 +283,9 @@ impl QuantizedModel {
             .map_err(|e| RadioError::from(e).in_section("matrix stream"))?;
         let base = SideParams::read_from(&mut f)
             .map_err(|e| RadioError::from(e).in_section("side parameters"))?;
-        Ok(QuantizedModel { base, packed })
+        let act_quant = read_act_spec(&mut f)
+            .map_err(|e| RadioError::from(e).in_section("activation quant spec"))?;
+        Ok(QuantizedModel { base, packed, act_quant })
     }
 
     /// Shape of the model this container was packed from.
@@ -284,12 +346,28 @@ impl QuantizedModelWriter {
 
     /// Seal the container: end-of-matrices sentinel, side params, then
     /// the integrity section table and trailer.
-    pub fn finish(mut self, side: &SideParams) -> std::io::Result<()> {
+    pub fn finish(self, side: &SideParams) -> std::io::Result<()> {
+        self.finish_with(side, None)
+    }
+
+    /// [`finish`](Self::finish), optionally appending an
+    /// activation-quantization section (its own integrity section, so a
+    /// flipped bit in the spec is caught before inference trusts it).
+    pub fn finish_with(
+        mut self,
+        side: &SideParams,
+        acts: Option<&ActQuantSpec>,
+    ) -> std::io::Result<()> {
         write_end_of_matrices(&mut self.f)?;
         self.f.end();
         self.f.begin(SEC_SIDE);
         side.write_to(&mut self.f)?;
         self.f.end();
+        if let Some(spec) = acts {
+            self.f.begin(SEC_ACTQ);
+            write_act_spec(&mut self.f, spec)?;
+            self.f.end();
+        }
         self.f.finish().map(|_| ())
     }
 }
@@ -318,7 +396,7 @@ mod tests {
                 )
             })
             .collect();
-        QuantizedModel { base: SideParams::from_weights(w), packed }
+        QuantizedModel { base: SideParams::from_weights(w), packed, act_quant: None }
     }
 
     #[test]
@@ -458,6 +536,46 @@ mod tests {
         let _ = std::fs::remove_file(&path);
         assert_eq!(qm.to_weights().layers[0].wq.data, back.to_weights().layers[0].wq.data);
         assert_eq!(qm.base.embed.data, back.base.embed.data);
+        assert!(back.act_quant.is_none(), "legacy containers have no act spec");
+    }
+
+    #[test]
+    fn act_spec_roundtrips_and_weight_only_container_loads_none() {
+        let cfg = ModelConfig::preset("ropt-nano").unwrap();
+        let mut rng = Rng::new(99);
+        let w = Weights::init_training(cfg, &mut rng);
+        let mut qm = quantize_all(&w, 4);
+
+        // Weight-only container: no SEC_ACTQ, loads back as None.
+        let path = std::env::temp_dir().join("radio_test_qm_noact.radio");
+        qm.save(&path).unwrap();
+        let sections = integrity::verify(&std::fs::read(&path).unwrap())
+            .unwrap()
+            .expect("checked")
+            .sections
+            .len();
+        assert_eq!(sections, 2, "weight-only container: matrices + side");
+        assert!(QuantizedModel::load(&path).unwrap().act_quant.is_none());
+        let _ = std::fs::remove_file(&path);
+
+        // Attach a spec exercising every field combination: dynamic
+        // per-token, static with a calibrated scale, full precision.
+        let ids: Vec<MatId> = qm.packed.iter().map(|(id, _)| *id).collect();
+        let mut spec = ActQuantSpec::uniform(&ids, 8, ActScalePolicy::PerToken, 1.0);
+        spec.entries[0].1 = ActQuantParams::full_precision();
+        spec.entries[1].1 = ActQuantParams::new(4, ActScalePolicy::Static, 0.03);
+        qm.act_quant = Some(spec.clone());
+        let path = std::env::temp_dir().join("radio_test_qm_act.radio");
+        qm.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let checked = integrity::verify(&bytes).unwrap().expect("checked");
+        assert_eq!(checked.sections.len(), 3, "matrices + side + act spec");
+        assert_eq!(checked.sections[2].tag, SEC_ACTQ);
+        let back = QuantizedModel::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(back.act_quant, Some(spec), "act spec must roundtrip exactly");
+        // Matrices and side params are untouched by the extra section.
+        assert_eq!(qm.to_weights().layers[0].wq.data, back.to_weights().layers[0].wq.data);
     }
 
     #[test]

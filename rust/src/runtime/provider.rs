@@ -167,7 +167,10 @@ impl GradientProvider for XlaProvider {
         }
         let zdata = to_vec_f32(&outs[2 * nq]).expect("z literal");
         let z = Tensor::from_vec(batch * seq, cfg.dim, zdata);
-        GradSample { grads, input_means, z }
+        // The AOT artifact does not export activation second moments /
+        // absmax; leaving these empty disables activation quantization
+        // for XLA-calibrated models (the f32 path — never wrong bits).
+        GradSample { grads, input_means, input_sq: Vec::new(), input_amax: Vec::new(), z }
     }
 
     fn outputs(&mut self, w: &Weights, tokens: &[u32], batch: usize, seq: usize) -> Tensor {

@@ -26,7 +26,7 @@
 //! hand the body parser a plain byte slice, so every existing parser
 //! runs unchanged on the checked payload.
 
-use std::io::{self, Write};
+use std::io::{self, Read, Write};
 
 use crate::error::RadioError;
 
@@ -55,6 +55,12 @@ pub const SEC_HEADER: u8 = 3;
 pub const SEC_POINT: u8 = 4;
 /// Section tag: the per-matrix statistics block of a `RADIOCS1`.
 pub const SEC_MATS: u8 = 5;
+/// Section tag: the per-matrix activation-moment block of a `RADIOCS1`
+/// (absent in pre-activation-quantization artifacts).
+pub const SEC_ACTS: u8 = 6;
+/// Section tag: the activation-quantization spec of a `RADIOQM2`
+/// (absent in weight-only containers).
+pub const SEC_ACTQ: u8 = 7;
 
 /// Human-readable name of a section tag, for error messages.
 pub fn section_name(tag: u8) -> &'static str {
@@ -64,8 +70,32 @@ pub fn section_name(tag: u8) -> &'static str {
         SEC_HEADER => "container header",
         SEC_POINT => "rate point",
         SEC_MATS => "calibration matrices",
+        SEC_ACTS => "calibration activations",
+        SEC_ACTQ => "activation quant spec",
         _ => "unknown section",
     }
+}
+
+/// Fill `buf` from `f`, or report a clean end-of-stream. `Ok(false)`
+/// when EOF arrives before the first byte — the probe for *optional
+/// trailing sections* (a container written before the section existed
+/// simply ends here). A partial fill is an error like any truncation.
+pub fn read_or_eof<R: Read>(f: &mut R, buf: &mut [u8]) -> io::Result<bool> {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        let n = f.read(&mut buf[filled..])?;
+        if n == 0 {
+            if filled == 0 {
+                return Ok(false);
+            }
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "truncated optional trailing section",
+            ));
+        }
+        filled += n;
+    }
+    Ok(true)
 }
 
 // ---------------------------------------------------------------------
