@@ -169,6 +169,21 @@ fn main() {
         summary.avg_bits
     );
 
+    // The eager and lazy-verified loaders must agree byte for byte on the
+    // container just streamed (CI runs this under examples-smoke).
+    let eager = QuantizedModel::load(&path).expect("eager load");
+    let mapped = QuantizedModel::load_mapped(&path).expect("mapped load");
+    assert_eq!(eager.packed.len(), mapped.packed.len(), "load/load_mapped record counts differ");
+    for ((ida, pa), (idb, pb)) in eager.packed.iter().zip(&mapped.packed) {
+        assert_eq!(ida, idb, "load/load_mapped pack order differs");
+        assert_eq!(
+            pa.to_bytes(),
+            pb.to_bytes(),
+            "load/load_mapped PackedMatrix streams differ at {ida:?}"
+        );
+    }
+    println!("verified: eager load and mapped load agree on every packed stream");
+
     let engine = Engine::from_quantized(&qm);
     let fp_engine = Engine::from_dense(&weights);
     let mk_requests = || -> Vec<Request> {

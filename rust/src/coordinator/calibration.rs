@@ -27,6 +27,8 @@ use crate::model::weights::{MatId, Role, Weights};
 use crate::quant::activations::{ActQuantParams, ActQuantSpec, ActScalePolicy};
 use crate::quant::grouping::Grouping;
 use crate::stats::distortion::{self, GroupRd};
+use crate::util::atomic_io::AtomicFile;
+use crate::util::failpoint;
 use crate::util::integrity::{self, SectionWriter, SEC_ACTS, SEC_HEADER, SEC_MATS};
 use crate::util::json::Json;
 
@@ -255,9 +257,12 @@ impl CalibrationStats {
 
     /// Write the `.radiocal` artifact (`RADIOCS1`; byte-level spec in
     /// `docs/FORMATS.md`). The integrity frame checksums the scalar
-    /// header and the per-matrix statistics as separate sections.
-    pub fn save(&self, path: &Path) -> std::io::Result<()> {
-        let mut f = BufWriter::new(std::fs::File::create(path)?);
+    /// header and the per-matrix statistics as separate sections. The
+    /// write is atomic — staged into `<path>.tmp` and renamed over the
+    /// destination only when complete — so a crash mid-save never
+    /// clobbers an existing artifact.
+    pub fn save(&self, path: &Path) -> Result<(), RadioError> {
+        let mut f = BufWriter::new(AtomicFile::create(path)?);
         f.write_all(b"RADIOCS1")?;
         f.write_all(integrity::CHECK_MAGIC)?;
         let mut f = SectionWriter::new(f);
@@ -272,6 +277,7 @@ impl CalibrationStats {
         f.write_all(&self.pca_explained.to_le_bytes())?;
         f.write_all(&(self.mats.len() as u32).to_le_bytes())?;
         f.end();
+        failpoint::fire("calibration::save::after_section", 0);
         f.begin(SEC_MATS);
         for m in &self.mats {
             f.write_all(&(m.id.layer as u32).to_le_bytes())?;
@@ -290,6 +296,7 @@ impl CalibrationStats {
             }
         }
         f.end();
+        failpoint::fire("calibration::save::after_section", 1);
         // Activation moments ride in their own trailing section so
         // pre-activation-quantization readers (which stop after the
         // matrices) and writers (which never produce it) interoperate.
@@ -303,7 +310,11 @@ impl CalibrationStats {
             }
         }
         f.end();
-        f.finish().map(|_| ())
+        failpoint::fire("calibration::save::after_section", 2);
+        let bw = f.finish()?;
+        let af = bw.into_inner().map_err(|e| RadioError::from(e.into_error()))?;
+        af.commit()?;
+        Ok(())
     }
 
     /// Read a `.radiocal` artifact; a reloaded artifact reproduces

@@ -26,13 +26,18 @@ use crate::coordinator::calibration::CalibrationStats;
 use crate::coordinator::radio::Radio;
 use crate::error::RadioError;
 use crate::infer::Engine;
+use crate::model::config::ModelConfig;
 use crate::model::weights::{MatId, Role, SideParams, Weights};
 use crate::quant::bitpack::PackedMatrix;
 use crate::quant::format::{
     read_matrix_records, write_end_of_matrices, write_matrix_record, QuantizedModel, MAGIC_QM2,
     MAGIC_QM3,
 };
-use crate::util::integrity::{self, SectionWriter, SEC_HEADER, SEC_POINT, SEC_SIDE};
+use crate::util::atomic_io::AtomicFile;
+use crate::util::failpoint;
+use crate::util::integrity::{
+    self, MappedContainer, SectionWriter, SEC_HEADER, SEC_POINT, SEC_SIDE,
+};
 
 /// One operating point of the ladder: the packed bitstreams and the
 /// rate-dependent corrected biases for a single target rate.
@@ -168,16 +173,19 @@ impl RateLadder {
     /// Write the `RADIOQM3` container: every point's packed matrices and
     /// corrected biases, then the shared side parameters once. The
     /// integrity frame checksums the header, each rate point, and the
-    /// side parameters as separate sections.
-    pub fn save(&self, path: &Path) -> std::io::Result<()> {
-        let mut f = BufWriter::new(std::fs::File::create(path)?);
+    /// side parameters as separate sections. The write is atomic: bytes
+    /// stage into `<path>.tmp` and replace `path` only once the trailer
+    /// is durable, so a crash mid-save never clobbers an existing
+    /// ladder.
+    pub fn save(&self, path: &Path) -> Result<(), RadioError> {
+        let mut f = BufWriter::new(AtomicFile::create(path)?);
         f.write_all(MAGIC_QM3)?;
         f.write_all(integrity::CHECK_MAGIC)?;
         let mut f = SectionWriter::new(f);
         f.begin(SEC_HEADER);
         f.write_all(&(self.points.len() as u32).to_le_bytes())?;
         f.end();
-        for p in &self.points {
+        for (pi, p) in self.points.iter().enumerate() {
             f.begin(SEC_POINT);
             f.write_all(&p.target_bits.to_le_bytes())?;
             for (id, pm) in &p.packed {
@@ -194,11 +202,15 @@ impl RateLadder {
                 }
             }
             f.end();
+            failpoint::fire("ladder::save::after_point", pi as u64);
         }
         f.begin(SEC_SIDE);
         self.base.write_to(&mut f)?;
         f.end();
-        f.finish().map(|_| ())
+        let bw = f.finish()?;
+        let af = bw.into_inner().map_err(|e| RadioError::from(e.into_error()))?;
+        af.commit()?;
+        Ok(())
     }
 
     /// Load a `.radio` container as a ladder. A `RADIOQM3` file yields
@@ -244,64 +256,15 @@ impl RateLadder {
     /// with `QuantizedModel::load`'s back-compat dispatch.
     pub(crate) fn read_body<R: Read>(f: &mut R) -> std::io::Result<RateLadder> {
         const PREALLOC_CAP: usize = 1 << 16;
-        let mut l1 = [0u8; 1];
         let mut l4 = [0u8; 4];
-        let mut l8 = [0u8; 8];
         f.read_exact(&mut l4)?;
         let n_points = u32::from_le_bytes(l4) as usize;
         let mut points: Vec<RatePoint> = Vec::with_capacity(n_points.min(PREALLOC_CAP));
         for _ in 0..n_points {
-            f.read_exact(&mut l8)?;
-            let target_bits = f64::from_le_bytes(l8);
-            if !target_bits.is_finite() {
-                return Err(inv("non-finite rate-point label"));
-            }
-            let packed = read_matrix_records(f)?;
-            f.read_exact(&mut l4)?;
-            let n_bias = u32::from_le_bytes(l4) as usize;
-            let mut biases = Vec::with_capacity(n_bias.min(PREALLOC_CAP));
-            for _ in 0..n_bias {
-                f.read_exact(&mut l4)?;
-                let layer = u32::from_le_bytes(l4) as usize;
-                f.read_exact(&mut l1)?;
-                let role = Role::from_tag(l1[0]).ok_or_else(|| inv("bad role tag"))?;
-                f.read_exact(&mut l4)?;
-                let blen = u32::from_le_bytes(l4) as usize;
-                let mut b = Vec::with_capacity(blen.min(PREALLOC_CAP));
-                for _ in 0..blen {
-                    f.read_exact(&mut l4)?;
-                    b.push(f32::from_le_bytes(l4));
-                }
-                biases.push((MatId { layer, role }, b));
-            }
-            points.push(RatePoint { target_bits, packed, biases });
+            points.push(read_point(f)?);
         }
         let base = SideParams::read_from(f)?;
-        // Validate bias records against the (now known) model shape:
-        // `model()` indexes layers and overwrites fixed-length vectors,
-        // so a corrupt record must fail here, not panic there.
-        let cfg = &base.config;
-        for p in &points {
-            for (id, b) in &p.biases {
-                if id.layer >= cfg.layers {
-                    return Err(inv(format!(
-                        "bias layer {} out of range for {}-layer config",
-                        id.layer, cfg.layers
-                    )));
-                }
-                let want = match id.role {
-                    Role::Up => cfg.mlp,
-                    _ => cfg.dim,
-                };
-                if b.len() != want {
-                    return Err(inv(format!(
-                        "bias length {} != expected {want} for {:?}",
-                        b.len(),
-                        id.role
-                    )));
-                }
-            }
-        }
+        validate_bias_shapes(&base.config, &points)?;
         // Restore the ascending order every consumer assumes (the
         // highest-rate point is the serving target): `points` is a
         // public field, so a hand-assembled ladder may have been saved
@@ -311,6 +274,168 @@ impl RateLadder {
         });
         Ok(RateLadder { base, points })
     }
+
+    /// Open a ladder through the *mapped*, lazily-verified path: the
+    /// integrity frame is checked eagerly (no payload reads), then each
+    /// section is read and CRC-verified on first touch.
+    ///
+    /// The header, side parameters, and the **top** (highest-rate,
+    /// serving-target) point are essential — corruption there is a hard
+    /// error. A corrupt *lower* rate point is instead dropped from the
+    /// ladder: serving degrades to the surviving points (draft
+    /// selection falls back to the nearest remaining rate) rather than
+    /// refusing to serve. Returns the ladder plus the number of
+    /// sections dropped this way, surfaced by
+    /// `infer::server::serve_ladder_mapped` as
+    /// `ServeStats::degraded_sections`. Legacy containers and
+    /// single-point `RADIOQM2` files take the resident loader
+    /// (degraded count 0).
+    pub fn load_mapped(path: &Path) -> Result<(RateLadder, usize), RadioError> {
+        let Some(mc) = MappedContainer::open(path)? else {
+            return Ok((Self::load(path)?, 0));
+        };
+        if &mc.magic == MAGIC_QM2 {
+            return Ok((Self::load(path)?, 0));
+        }
+        if &mc.magic != MAGIC_QM3 {
+            return Err(RadioError::UnknownFormat {
+                detail: format!(
+                    "magic {:?} is not a .radio container",
+                    String::from_utf8_lossy(&mc.magic)
+                ),
+            });
+        }
+        Self::from_mapped(&mc)
+    }
+
+    /// Assemble a ladder from an already-opened [`MappedContainer`] —
+    /// the degraded-mode core behind [`Self::load_mapped`] and
+    /// `QuantizedModel::load_mapped`'s QM3 dispatch.
+    pub(crate) fn from_mapped(mc: &MappedContainer) -> Result<(RateLadder, usize), RadioError> {
+        let secs = &mc.sections;
+        let table = |detail: &str| RadioError::Corrupt {
+            section: "section table".into(),
+            detail: detail.into(),
+        };
+        if secs.len() < 3
+            || secs[0].tag != SEC_HEADER
+            || secs[secs.len() - 1].tag != SEC_SIDE
+            || secs[1..secs.len() - 1].iter().any(|s| s.tag != SEC_POINT)
+        {
+            return Err(table("rate ladder must be header, rate points, side parameters"));
+        }
+        let header = mc.read_section(0)?;
+        if header.len() != 4 {
+            return Err(RadioError::Corrupt {
+                section: "container header".into(),
+                detail: "ladder header must be exactly a point count".into(),
+            });
+        }
+        let n_points = u32::from_le_bytes(header[..4].try_into().unwrap()) as usize;
+        if n_points != secs.len() - 2 {
+            return Err(table("point count disagrees with the section table"));
+        }
+        let side = mc.read_section(secs.len() - 1)?;
+        let base = SideParams::read_from(&mut Cursor::new(&side[..]))
+            .map_err(|e| RadioError::from(e).in_section("side parameters"))?;
+        let mut points: Vec<RatePoint> = Vec::with_capacity(n_points);
+        let mut degraded = 0usize;
+        for k in 0..n_points {
+            // The last (highest-rate) point is the serving target:
+            // essential. Lower points degrade away on corruption.
+            let essential = k + 1 == n_points;
+            let parsed = mc.read_section(1 + k).and_then(|bytes| {
+                let mut cur = Cursor::new(&bytes[..]);
+                let p = read_point(&mut cur)
+                    .map_err(|e| RadioError::from(e).in_section("rate point"))?;
+                if (cur.position() as usize) != bytes.len() {
+                    return Err(RadioError::Corrupt {
+                        section: "rate point".into(),
+                        detail: "trailing bytes after rate point".into(),
+                    });
+                }
+                validate_bias_shapes(&base.config, std::slice::from_ref(&p))
+                    .map_err(|e| RadioError::from(e).in_section("rate point"))?;
+                Ok(p)
+            });
+            match parsed {
+                Ok(p) => points.push(p),
+                Err(_) if !essential => degraded += 1,
+                Err(e) => return Err(e),
+            }
+        }
+        if points.is_empty() {
+            return Err(RadioError::Corrupt {
+                section: "rate ladder body".into(),
+                detail: "rate ladder carries no points".into(),
+            });
+        }
+        points.sort_by(|a, b| {
+            a.target_bits.partial_cmp(&b.target_bits).expect("labels validated finite")
+        });
+        Ok((RateLadder { base, points }, degraded))
+    }
+}
+
+/// Parse one serialized rate point: label, packed-matrix stream (with
+/// sentinel), then the corrected-bias records.
+fn read_point<R: Read>(f: &mut R) -> std::io::Result<RatePoint> {
+    const PREALLOC_CAP: usize = 1 << 16;
+    let mut l1 = [0u8; 1];
+    let mut l4 = [0u8; 4];
+    let mut l8 = [0u8; 8];
+    f.read_exact(&mut l8)?;
+    let target_bits = f64::from_le_bytes(l8);
+    if !target_bits.is_finite() {
+        return Err(inv("non-finite rate-point label"));
+    }
+    let packed = read_matrix_records(f)?;
+    f.read_exact(&mut l4)?;
+    let n_bias = u32::from_le_bytes(l4) as usize;
+    let mut biases = Vec::with_capacity(n_bias.min(PREALLOC_CAP));
+    for _ in 0..n_bias {
+        f.read_exact(&mut l4)?;
+        let layer = u32::from_le_bytes(l4) as usize;
+        f.read_exact(&mut l1)?;
+        let role = Role::from_tag(l1[0]).ok_or_else(|| inv("bad role tag"))?;
+        f.read_exact(&mut l4)?;
+        let blen = u32::from_le_bytes(l4) as usize;
+        let mut b = Vec::with_capacity(blen.min(PREALLOC_CAP));
+        for _ in 0..blen {
+            f.read_exact(&mut l4)?;
+            b.push(f32::from_le_bytes(l4));
+        }
+        biases.push((MatId { layer, role }, b));
+    }
+    Ok(RatePoint { target_bits, packed, biases })
+}
+
+/// Validate bias records against the (now known) model shape:
+/// `RateLadder::model` indexes layers and overwrites fixed-length
+/// vectors, so a corrupt record must fail at load, not panic there.
+fn validate_bias_shapes(cfg: &ModelConfig, points: &[RatePoint]) -> std::io::Result<()> {
+    for p in points {
+        for (id, b) in &p.biases {
+            if id.layer >= cfg.layers {
+                return Err(inv(format!(
+                    "bias layer {} out of range for {}-layer config",
+                    id.layer, cfg.layers
+                )));
+            }
+            let want = match id.role {
+                Role::Up => cfg.mlp,
+                _ => cfg.dim,
+            };
+            if b.len() != want {
+                return Err(inv(format!(
+                    "bias length {} != expected {want} for {:?}",
+                    b.len(),
+                    id.role
+                )));
+            }
+        }
+    }
+    Ok(())
 }
 
 fn inv<E: std::fmt::Display>(e: E) -> std::io::Error {

@@ -6,6 +6,11 @@
 //! timing splits into the expensive reusable part (calibrate) and the
 //! cheap per-rate part (allocate + pack). [`radio_sweep`] exploits that
 //! split: one calibration, N target rates.
+//!
+//! Results here are packed in memory; jobs that write containers to disk
+//! should go through [`Radio::pack_streaming`] (journaled, crash-safe,
+//! resumable) or the atomic `save` paths on the artifact types — see
+//! DESIGN.md §Durability & crash-safety.
 
 use crate::baselines::awq::{awq_quantize, AwqConfig};
 use crate::baselines::gptq::{gptq_quantize, GptqConfig};

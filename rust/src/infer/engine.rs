@@ -160,6 +160,16 @@ impl Engine {
         }
     }
 
+    /// Build an engine straight from a container on disk via the
+    /// integrity-checked lazy load
+    /// ([`QuantizedModel::load_mapped`]): the section table is verified
+    /// eagerly, payload CRCs on first touch, and for a RADIOQM3 ladder
+    /// the top (highest-rate) point is served. Legacy containers fall
+    /// back to the eager loader.
+    pub fn load_mapped(path: &std::path::Path) -> Result<Engine, crate::error::RadioError> {
+        Ok(Engine::from_quantized(&QuantizedModel::load_mapped(path)?))
+    }
+
     /// Dense-f32 engine (the FP baseline arm).
     pub fn from_dense(w: &Weights) -> Engine {
         let layers = w

@@ -23,7 +23,7 @@ pub use kv::{
 };
 pub use matvec::{dense_matmul, dense_matvec, MatvecPlan, QuantMatvec, GEMM_ROW_TILE};
 pub use server::{
-    serve, serve_ladder, serve_speculative, serve_threaded, serve_with, Request, Response,
-    ServeConfig, ServeStats,
+    serve, serve_ladder, serve_ladder_mapped, serve_speculative, serve_threaded, serve_with,
+    Request, Response, ServeConfig, ServeStats,
 };
 pub use speculative::{SpecRound, SpecStats};

@@ -308,6 +308,11 @@ pub struct ServeStats {
     /// Times the degradation ladder disabled speculation after a full
     /// acceptance window collapsed (at most once per serve call).
     pub spec_disables: usize,
+    /// Ladder sections dropped at load time because their payload failed
+    /// its CRC or parse check ([`serve_ladder_mapped`] only): the serve
+    /// ran degraded, falling back to the nearest surviving rate point.
+    /// Always 0 for eager loads, which refuse corrupt containers.
+    pub degraded_sections: usize,
 }
 
 impl ServeStats {
@@ -394,6 +399,9 @@ impl std::fmt::Display for ServeStats {
         if self.spec_disables > 0 {
             write!(f, ", speculation disabled mid-call")?;
         }
+        if self.degraded_sections > 0 {
+            write!(f, ", {} ladder sections dropped (degraded load)", self.degraded_sections)?;
+        }
         Ok(())
     }
 }
@@ -464,6 +472,7 @@ fn finalize_stats(
         chunk_shrinks: robust.chunk_shrinks,
         chunk_regrows: robust.chunk_regrows,
         spec_disables: robust.spec_disables,
+        degraded_sections: 0,
     }
 }
 
@@ -1267,6 +1276,24 @@ pub fn serve_ladder(
     };
     let draft = ladder.engine(draft_ix);
     serve_speculative(&target, &draft, requests, cfg)
+}
+
+/// [`serve_ladder`] off an integrity-checked lazy container load
+/// ([`RateLadder::load_mapped`][crate::coordinator::ladder::RateLadder::load_mapped]):
+/// non-essential rate points whose payload fails its CRC or parse check
+/// are dropped instead of failing the load, the serve proceeds on the
+/// surviving points, and [`ServeStats::degraded_sections`] reports how
+/// many were lost. A corrupt top point, side section, or header is still
+/// a hard error — there is nothing to degrade to.
+pub fn serve_ladder_mapped(
+    path: &std::path::Path,
+    requests: Vec<Request>,
+    cfg: ServeConfig,
+) -> Result<(Vec<Response>, ServeStats), RadioError> {
+    let (ladder, degraded) = crate::coordinator::ladder::RateLadder::load_mapped(path)?;
+    let (responses, mut stats) = serve_ladder(&ladder, requests, cfg);
+    stats.degraded_sections = degraded;
+    Ok((responses, stats))
 }
 
 /// The seed's thread-per-request scheduler, kept as the un-amortized

@@ -27,14 +27,18 @@
 
 use std::collections::BTreeMap;
 use std::io::{BufWriter, Cursor, Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use crate::error::RadioError;
 use crate::model::config::ModelConfig;
 use crate::model::weights::{MatId, Role, SideParams, Weights};
 use crate::quant::activations::{ActQuantParams, ActQuantSpec, ActScalePolicy};
 use crate::quant::bitpack::{f16_to_f32, f32_to_f16, PackedMatrix};
-use crate::util::integrity::{self, SectionWriter, SEC_ACTQ, SEC_MATRICES, SEC_SIDE};
+use crate::util::atomic_io::{self, AtomicFile};
+use crate::util::failpoint;
+use crate::util::integrity::{
+    self, Crc32, MappedContainer, SectionWriter, SEC_ACTQ, SEC_MATRICES, SEC_SIDE,
+};
 use crate::util::json::Json;
 
 /// Record tag marking the end of a packed-matrix stream.
@@ -228,8 +232,11 @@ impl QuantizedModel {
     }
 
     /// Save the container (via the streaming writer, so the bytes are
-    /// identical to a stream-written artifact).
-    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+    /// identical to a stream-written artifact). The write is atomic:
+    /// bytes stage into `<path>.tmp` and replace `path` only on a
+    /// successful [`QuantizedModelWriter::finish_with`], so a crash
+    /// mid-save never clobbers an existing artifact.
+    pub fn save(&self, path: &Path) -> Result<(), RadioError> {
         let mut w = QuantizedModelWriter::create(path)?;
         for (id, p) in &self.packed {
             w.write_matrix(*id, p)?;
@@ -288,6 +295,69 @@ impl QuantizedModel {
         Ok(QuantizedModel { base, packed, act_quant })
     }
 
+    /// Load a `.radio` container through the *mapped* path: the
+    /// integrity frame (trailer + section table) is verified eagerly
+    /// without reading any payload, then each section is read and
+    /// CRC-verified on first touch via positioned I/O — so opening a
+    /// large container costs table-sized reads, not a full-file
+    /// checksum pass. Produces a model identical to [`Self::load`]
+    /// (tested byte-for-byte on the packed streams).
+    ///
+    /// Legacy (pre-checksum) containers fall back to the resident
+    /// loader unchanged. A `RADIOQM3` ladder resolves to its
+    /// highest-rate point, exactly like [`Self::load`]; use
+    /// `coordinator::ladder::RateLadder::load_mapped` for the
+    /// degraded-mode (corrupt-point-tolerant) ladder path.
+    pub fn load_mapped(path: &Path) -> Result<QuantizedModel, RadioError> {
+        let Some(mc) = MappedContainer::open(path)? else {
+            return Self::load(path);
+        };
+        if &mc.magic == MAGIC_QM3 {
+            let (ladder, _) = crate::coordinator::ladder::RateLadder::from_mapped(&mc)?;
+            return ladder
+                .points
+                .len()
+                .checked_sub(1)
+                .map(|top| ladder.model(top))
+                .ok_or_else(|| RadioError::Corrupt {
+                    section: "rate ladder body".into(),
+                    detail: "rate ladder carries no points".into(),
+                });
+        }
+        if &mc.magic != MAGIC_QM2 {
+            return Err(RadioError::UnknownFormat {
+                detail: format!(
+                    "magic {:?} is not a .radio quantized model",
+                    String::from_utf8_lossy(&mc.magic)
+                ),
+            });
+        }
+        let find = |tag: u8| mc.sections.iter().position(|s| s.tag == tag);
+        let mi = find(SEC_MATRICES).ok_or_else(|| RadioError::Corrupt {
+            section: "section table".into(),
+            detail: "container has no matrix stream section".into(),
+        })?;
+        let si = find(SEC_SIDE).ok_or_else(|| RadioError::Corrupt {
+            section: "section table".into(),
+            detail: "container has no side-parameter section".into(),
+        })?;
+        let mbytes = mc.read_section(mi)?;
+        let packed = read_matrix_records(&mut Cursor::new(&mbytes[..]))
+            .map_err(|e| RadioError::from(e).in_section("matrix stream"))?;
+        let sbytes = mc.read_section(si)?;
+        let base = SideParams::read_from(&mut Cursor::new(&sbytes[..]))
+            .map_err(|e| RadioError::from(e).in_section("side parameters"))?;
+        let act_quant = match find(SEC_ACTQ) {
+            Some(ai) => {
+                let abytes = mc.read_section(ai)?;
+                read_act_spec(&mut Cursor::new(&abytes[..]))
+                    .map_err(|e| RadioError::from(e).in_section("activation quant spec"))?
+            }
+            None => None,
+        };
+        Ok(QuantizedModel { base, packed, act_quant })
+    }
+
     /// Shape of the model this container was packed from.
     pub fn config(&self) -> &ModelConfig {
         &self.base.config
@@ -306,6 +376,156 @@ impl QuantizedModel {
     }
 }
 
+// ---------------------------------------------------------------------
+// Pack journal (`<container>.journal` sidecar)
+// ---------------------------------------------------------------------
+
+/// Magic opening the `.radio.journal` pack-resume sidecar.
+const JOURNAL_MAGIC: &[u8; 8] = b"RADIOJL1";
+
+/// Sidecar-path convention for a journaled pack: `<container>.journal`
+/// (extension appended, so `model.radio` journals to
+/// `model.radio.journal`).
+pub fn journal_path(container: &Path) -> PathBuf {
+    let mut os = container.as_os_str().to_os_string();
+    os.push(".journal");
+    PathBuf::from(os)
+}
+
+/// One durably-written matrix record, as recorded in the pack journal.
+/// Byte-level spec in `docs/FORMATS.md`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JournalEntry {
+    /// Zero-based position of this record in the pack order.
+    pub index: usize,
+    /// Which matrix the record holds.
+    pub id: MatId,
+    /// Absolute container offset one past the record's last byte.
+    pub end_off: u64,
+    /// CRC32 of the container's matrix-stream bytes `[16, end_off)` —
+    /// both a torn-tail detector and the seed for the resumed section
+    /// checksum.
+    pub stream_crc: u32,
+    /// The record's payload bits (restores the pack's rate accounting).
+    pub payload_bits: u64,
+    /// The record's weight count (restores the rate denominator).
+    pub weights: u64,
+    /// Corrected bias computed for this matrix, if bias correction was
+    /// on — journaled so a resumed pack seals identical side params.
+    pub bias: Option<Vec<f32>>,
+}
+
+fn encode_journal_entry(e: &JournalEntry) -> Vec<u8> {
+    let mut body = Vec::with_capacity(38 + e.bias.as_ref().map_or(0, |b| 4 + 4 * b.len()));
+    body.extend_from_slice(&(e.index as u32).to_le_bytes());
+    body.extend_from_slice(&(e.id.layer as u32).to_le_bytes());
+    body.push(e.id.role.tag());
+    body.extend_from_slice(&e.end_off.to_le_bytes());
+    body.extend_from_slice(&e.stream_crc.to_le_bytes());
+    body.extend_from_slice(&e.payload_bits.to_le_bytes());
+    body.extend_from_slice(&e.weights.to_le_bytes());
+    match &e.bias {
+        Some(b) => {
+            body.push(1);
+            body.extend_from_slice(&(b.len() as u32).to_le_bytes());
+            for &x in b {
+                body.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        None => body.push(0),
+    }
+    let mut out = Vec::with_capacity(8 + body.len());
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    let crc = integrity::crc32(&body);
+    out.extend_from_slice(&body);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+fn decode_journal_body(body: &[u8]) -> Option<JournalEntry> {
+    if body.len() < 38 {
+        return None;
+    }
+    let u32le = |o: usize| u32::from_le_bytes(body[o..o + 4].try_into().unwrap());
+    let u64le = |o: usize| u64::from_le_bytes(body[o..o + 8].try_into().unwrap());
+    let index = u32le(0) as usize;
+    let layer = u32le(4) as usize;
+    let role = Role::from_tag(body[8])?;
+    let end_off = u64le(9);
+    let stream_crc = u32le(17);
+    let payload_bits = u64le(21);
+    let weights = u64le(29);
+    let bias = match body[37] {
+        0 if body.len() == 38 => None,
+        1 if body.len() >= 42 => {
+            let blen = u32le(38) as usize;
+            if body.len() != 42 + 4 * blen {
+                return None;
+            }
+            let mut b = Vec::with_capacity(blen);
+            for k in 0..blen {
+                b.push(f32::from_le_bytes(body[42 + 4 * k..46 + 4 * k].try_into().unwrap()));
+            }
+            Some(b)
+        }
+        _ => return None,
+    };
+    Some(JournalEntry {
+        index,
+        id: MatId { layer, role },
+        end_off,
+        stream_crc,
+        payload_bits,
+        weights,
+        bias,
+    })
+}
+
+/// Parse the longest valid entry prefix of a journal file. A torn or
+/// bit-flipped tail entry (interrupted append) is silently dropped —
+/// resume then repacks from the last intact entry. `None` when the
+/// file is unreadable or does not start with the journal magic.
+fn read_journal(path: &Path) -> Option<Vec<JournalEntry>> {
+    let bytes = std::fs::read(path).ok()?;
+    if bytes.len() < 8 || &bytes[..8] != JOURNAL_MAGIC {
+        return None;
+    }
+    let mut entries = Vec::new();
+    let mut off = 8usize;
+    loop {
+        if off + 4 > bytes.len() {
+            break;
+        }
+        let blen = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
+        let Some(end) = off.checked_add(4 + blen + 4) else {
+            break;
+        };
+        if end > bytes.len() {
+            break;
+        }
+        let body = &bytes[off + 4..off + 4 + blen];
+        let stored = u32::from_le_bytes(bytes[end - 4..end].try_into().unwrap());
+        if integrity::crc32(body) != stored {
+            break;
+        }
+        match decode_journal_body(body) {
+            Some(e) if e.index == entries.len() => entries.push(e),
+            _ => break,
+        }
+        off = end;
+    }
+    Some(entries)
+}
+
+struct Journal {
+    file: std::fs::File,
+    path: PathBuf,
+    /// Entries written to the container since the last checkpoint;
+    /// appended to the journal only after their bytes are durable.
+    pending: Vec<JournalEntry>,
+    checkpoints: u64,
+}
+
 /// Streaming `.radio` writer: emit packed matrices one at a time (each is
 /// flushed to disk immediately and can be dropped by the caller), then
 /// seal the container with the side parameters. The Pack stage of the
@@ -316,26 +536,192 @@ impl QuantizedModel {
 /// through a CRC-tracking [`SectionWriter`], and the section table plus
 /// trailer land on [`finish`](Self::finish) — no buffering, no second
 /// pass over the file.
+///
+/// **Durability.** Every byte stages into `<path>.tmp`
+/// ([`AtomicFile`]); the destination is replaced only by the rename
+/// inside `finish`, so an existing artifact is never clobbered by a
+/// partial write. The journaled variant
+/// ([`create_journaled`](Self::create_journaled)) additionally records
+/// each durably-flushed matrix record in a `<path>.journal` sidecar and
+/// can resume a crashed pack from the last checkpoint, bit-identical
+/// to an uninterrupted run.
 pub struct QuantizedModelWriter {
-    f: SectionWriter<BufWriter<std::fs::File>>,
+    f: SectionWriter<BufWriter<AtomicFile>>,
     matrices: usize,
+    journal: Option<Journal>,
 }
 
 impl QuantizedModelWriter {
-    /// Open `path` and write the `RADIOQM2` header plus integrity marker.
-    pub fn create(path: &Path) -> std::io::Result<QuantizedModelWriter> {
-        let mut f = BufWriter::new(std::fs::File::create(path)?);
+    /// Begin staging a new container: write the `RADIOQM2` header plus
+    /// integrity marker to `<path>.tmp` and open the matrix stream.
+    pub fn create(path: &Path) -> Result<QuantizedModelWriter, RadioError> {
+        let mut f = BufWriter::new(AtomicFile::create(path)?);
         f.write_all(MAGIC_QM2)?;
         f.write_all(integrity::CHECK_MAGIC)?;
         let mut f = SectionWriter::new(f);
         f.begin(SEC_MATRICES);
-        Ok(QuantizedModelWriter { f, matrices: 0 })
+        Ok(QuantizedModelWriter { f, matrices: 0, journal: None })
+    }
+
+    /// [`create`](Self::create) with a pack journal: if a crashed
+    /// journaled pack left `<path>.tmp` and `<path>.journal` behind,
+    /// verify the journal against the staging file (header, per-entry
+    /// running CRC) and resume after the last intact record; otherwise
+    /// start fresh. Returns the writer plus the already-durable entries
+    /// (empty on a fresh start) — the caller skips those records and
+    /// replays their accounting.
+    pub fn create_journaled(
+        path: &Path,
+    ) -> Result<(QuantizedModelWriter, Vec<JournalEntry>), RadioError> {
+        if let Some(resumed) = Self::try_resume(path) {
+            return Ok(resumed);
+        }
+        let jpath = journal_path(path);
+        let mut jfile = std::fs::File::create(&jpath)?;
+        jfile.write_all(JOURNAL_MAGIC)?;
+        jfile.sync_data()?;
+        let mut w = Self::create(path)?;
+        w.journal =
+            Some(Journal { file: jfile, path: jpath, pending: Vec::new(), checkpoints: 0 });
+        Ok((w, Vec::new()))
+    }
+
+    /// Attempt to resume from a surviving staging file + journal. Any
+    /// inconsistency (missing files, wrong header, CRC mismatch) yields
+    /// `None` and the pack starts fresh — resume is best-effort, never
+    /// a failure mode of its own.
+    fn try_resume(path: &Path) -> Option<(QuantizedModelWriter, Vec<JournalEntry>)> {
+        let jpath = journal_path(path);
+        let tmp = atomic_io::tmp_path(path);
+        let mut entries = read_journal(&jpath)?;
+        if entries.is_empty() {
+            return None;
+        }
+        let mut tf = std::fs::File::open(&tmp).ok()?;
+        let tmp_len = tf.metadata().ok()?.len();
+        let mut header = [0u8; integrity::HEADER_LEN];
+        tf.read_exact(&mut header).ok()?;
+        if &header[..8] != MAGIC_QM2 || &header[8..] != integrity::CHECK_MAGIC {
+            return None;
+        }
+        // Walk the staging file once, re-checksumming the matrix stream
+        // and snapshotting at every journaled boundary: keep the longest
+        // entry prefix whose running CRC matches the file's bytes.
+        let mut crc = Crc32::new();
+        let mut pos = integrity::HEADER_LEN as u64;
+        let mut good: Option<(usize, Crc32)> = None;
+        let mut buf = vec![0u8; 1 << 16];
+        for (i, e) in entries.iter().enumerate() {
+            if e.end_off < pos || e.end_off > tmp_len {
+                break;
+            }
+            let mut remaining = e.end_off - pos;
+            while remaining > 0 {
+                let take = remaining.min(buf.len() as u64) as usize;
+                tf.read_exact(&mut buf[..take]).ok()?;
+                crc.update(&buf[..take]);
+                remaining -= take as u64;
+            }
+            pos = e.end_off;
+            if crc.peek() == e.stream_crc {
+                good = Some((i + 1, crc.clone()));
+            } else {
+                break;
+            }
+        }
+        let (keep, crc) = good?;
+        entries.truncate(keep);
+        let end_off = entries.last().expect("keep >= 1").end_off;
+        drop(tf);
+        // Rewrite the journal as exactly the validated prefix, so its
+        // byte length agrees with what resume will append after.
+        let mut jfile = std::fs::File::create(&jpath).ok()?;
+        jfile.write_all(JOURNAL_MAGIC).ok()?;
+        for e in &entries {
+            jfile.write_all(&encode_journal_entry(e)).ok()?;
+        }
+        jfile.sync_data().ok()?;
+        let af = AtomicFile::resume(path, end_off).ok()?;
+        let f = SectionWriter::resume_open(BufWriter::new(af), SEC_MATRICES, end_off, crc);
+        let w = QuantizedModelWriter {
+            f,
+            matrices: entries.len(),
+            journal: Some(Journal {
+                file: jfile,
+                path: jpath,
+                pending: Vec::new(),
+                checkpoints: 0,
+            }),
+        };
+        Some((w, entries))
+    }
+
+    /// Remove any staging file and journal left behind by a crashed
+    /// pack, so the next [`create_journaled`](Self::create_journaled)
+    /// starts fresh (used when a surviving journal belongs to a
+    /// different pack order).
+    pub fn discard_partial(path: &Path) {
+        let _ = std::fs::remove_file(atomic_io::tmp_path(path));
+        let _ = std::fs::remove_file(journal_path(path));
     }
 
     /// Append one packed matrix record.
-    pub fn write_matrix(&mut self, id: MatId, p: &PackedMatrix) -> std::io::Result<()> {
+    pub fn write_matrix(&mut self, id: MatId, p: &PackedMatrix) -> Result<(), RadioError> {
         write_matrix_record(&mut self.f, id, p)?;
+        failpoint::fire("format::writer::after_matrix", self.matrices as u64);
         self.matrices += 1;
+        Ok(())
+    }
+
+    /// [`write_matrix`](Self::write_matrix), also staging a journal
+    /// entry (made durable by the next [`checkpoint`](Self::checkpoint))
+    /// that records the record's extent, running stream CRC, rate
+    /// accounting, and the matrix's corrected bias.
+    pub fn write_matrix_journaled(
+        &mut self,
+        id: MatId,
+        p: &PackedMatrix,
+        bias: Option<&[f32]>,
+    ) -> Result<(), RadioError> {
+        let index = self.matrices;
+        let payload_bits = p.payload_bits() as u64;
+        let weights = (p.rows * p.cols) as u64;
+        self.write_matrix(id, p)?;
+        if let Some(j) = self.journal.as_mut() {
+            j.pending.push(JournalEntry {
+                index,
+                id,
+                end_off: self.f.position(),
+                stream_crc: self.f.open_section_crc(),
+                payload_bits,
+                weights,
+                bias: bias.map(|b| b.to_vec()),
+            });
+        }
+        Ok(())
+    }
+
+    /// Make everything written so far durable and journal it: flush and
+    /// fsync the staging file, then append the pending entries to the
+    /// journal and fsync that too. Strictly ordered — container bytes
+    /// first, journal second — so a journal entry never describes bytes
+    /// that could still be lost. No-op for unjournaled writers.
+    pub fn checkpoint(&mut self) -> Result<(), RadioError> {
+        let Some(j) = self.journal.as_mut() else {
+            return Ok(());
+        };
+        if j.pending.is_empty() {
+            return Ok(());
+        }
+        self.f.flush()?;
+        self.f.get_ref().get_ref().sync_data()?;
+        failpoint::fire("format::writer::checkpoint", j.checkpoints);
+        for e in &j.pending {
+            j.file.write_all(&encode_journal_entry(e))?;
+        }
+        j.file.sync_data()?;
+        j.pending.clear();
+        j.checkpoints += 1;
         Ok(())
     }
 
@@ -345,19 +731,24 @@ impl QuantizedModelWriter {
     }
 
     /// Seal the container: end-of-matrices sentinel, side params, then
-    /// the integrity section table and trailer.
-    pub fn finish(self, side: &SideParams) -> std::io::Result<()> {
+    /// the integrity section table and trailer — and atomically publish
+    /// the staged file over the destination.
+    pub fn finish(self, side: &SideParams) -> Result<(), RadioError> {
         self.finish_with(side, None)
     }
 
     /// [`finish`](Self::finish), optionally appending an
     /// activation-quantization section (its own integrity section, so a
     /// flipped bit in the spec is caught before inference trusts it).
+    /// On success the staging file has replaced the destination and the
+    /// pack journal (if any) is deleted.
     pub fn finish_with(
         mut self,
         side: &SideParams,
         acts: Option<&ActQuantSpec>,
-    ) -> std::io::Result<()> {
+    ) -> Result<(), RadioError> {
+        self.checkpoint()?;
+        failpoint::fire("format::writer::before_seal", 0);
         write_end_of_matrices(&mut self.f)?;
         self.f.end();
         self.f.begin(SEC_SIDE);
@@ -368,7 +759,13 @@ impl QuantizedModelWriter {
             write_act_spec(&mut self.f, spec)?;
             self.f.end();
         }
-        self.f.finish().map(|_| ())
+        let bw = self.f.finish()?;
+        let af = bw.into_inner().map_err(|e| RadioError::from(e.into_error()))?;
+        af.commit()?;
+        if let Some(j) = self.journal {
+            let _ = std::fs::remove_file(&j.path);
+        }
+        Ok(())
     }
 }
 

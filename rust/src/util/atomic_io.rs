@@ -1,0 +1,156 @@
+//! Crash-safe file replacement: stage every byte into `<dest>.tmp`,
+//! fsync, then rename over the destination.
+//!
+//! The rename is the commit point. Until [`AtomicFile::commit`] runs,
+//! the destination path either does not exist or still holds the
+//! previous, fully intact artifact — a crash mid-write can only ever
+//! leave a stale `.tmp` beside it, never a torn final file. Commit
+//! order is the classic three-step protocol: `fsync(tmp)` so the bytes
+//! are durable before they become visible, `rename(tmp, dest)` which
+//! POSIX guarantees is atomic within a filesystem, then `fsync(parent
+//! dir)` so the directory entry itself survives power loss.
+//!
+//! A dropped (un-committed) `AtomicFile` deliberately leaves its `.tmp`
+//! on disk: the journaled pack resume path
+//! ([`crate::coordinator::Radio::pack_streaming`]) reopens exactly that
+//! partial staging file and continues from the last durable checkpoint.
+//! Callers that want no residue simply remove [`tmp_path`] themselves.
+
+use std::fs::{self, File, OpenOptions};
+use std::io::{self, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use crate::util::failpoint;
+
+/// Staging-path convention: `<dest>.tmp` (extension appended, not
+/// replaced, so `model.radio` stages as `model.radio.tmp`).
+pub fn tmp_path(dest: &Path) -> PathBuf {
+    let mut os = dest.as_os_str().to_os_string();
+    os.push(".tmp");
+    PathBuf::from(os)
+}
+
+/// A file being written under the atomic-replace protocol. Implements
+/// [`Write`]; call [`commit`](Self::commit) to publish, or drop to
+/// abandon (the staging file is left for inspection / resume).
+pub struct AtomicFile {
+    file: File,
+    dest: PathBuf,
+    tmp: PathBuf,
+}
+
+impl AtomicFile {
+    /// Begin staging a replacement for `dest`. Truncates any stale
+    /// staging file from a previous crashed attempt.
+    pub fn create(dest: &Path) -> io::Result<AtomicFile> {
+        let tmp = tmp_path(dest);
+        let file = File::create(&tmp)?;
+        Ok(AtomicFile { file, dest: dest.to_path_buf(), tmp })
+    }
+
+    /// Reopen an existing staging file for `dest` to continue a crashed
+    /// write: truncate it to `len` (discarding any bytes past the last
+    /// durable checkpoint) and position the cursor at the end.
+    pub fn resume(dest: &Path, len: u64) -> io::Result<AtomicFile> {
+        let tmp = tmp_path(dest);
+        let mut file = OpenOptions::new().read(true).write(true).open(&tmp)?;
+        file.set_len(len)?;
+        file.seek(SeekFrom::Start(len))?;
+        Ok(AtomicFile { file, dest: dest.to_path_buf(), tmp })
+    }
+
+    /// Flush staged bytes to stable storage without committing — the
+    /// durability barrier between a checkpoint's container bytes and
+    /// its journal entry.
+    pub fn sync_data(&self) -> io::Result<()> {
+        self.file.sync_data()
+    }
+
+    /// Publish: fsync the staging file, rename it over the destination,
+    /// and fsync the parent directory. After this returns, `dest` holds
+    /// the complete new artifact; before it, `dest` is untouched.
+    pub fn commit(self) -> io::Result<()> {
+        failpoint::fire("atomic_io::commit", 0);
+        self.file.sync_all()?;
+        fs::rename(&self.tmp, &self.dest)?;
+        // Durably record the rename in the directory itself. A parent
+        // of "" means dest is relative to the cwd.
+        let parent = self.dest.parent().filter(|p| !p.as_os_str().is_empty());
+        if let Some(dir) = parent {
+            File::open(dir)?.sync_all()?;
+        }
+        Ok(())
+    }
+}
+
+impl Write for AtomicFile {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        self.file.write(buf)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.file.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    fn tmp_dir() -> PathBuf {
+        let d = std::env::temp_dir().join(format!("radio_atomic_io_{}", std::process::id()));
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn commit_replaces_destination_atomically() {
+        let dest = tmp_dir().join("commit.bin");
+        fs::write(&dest, b"old artifact").unwrap();
+        let mut af = AtomicFile::create(&dest).unwrap();
+        af.write_all(b"new artifact").unwrap();
+        // Not yet committed: destination still holds the old bytes.
+        assert_eq!(fs::read(&dest).unwrap(), b"old artifact");
+        af.commit().unwrap();
+        assert_eq!(fs::read(&dest).unwrap(), b"new artifact");
+        assert!(!tmp_path(&dest).exists(), "staging file consumed by rename");
+        fs::remove_file(&dest).unwrap();
+    }
+
+    #[test]
+    fn abandoned_write_leaves_destination_intact_and_tmp_for_resume() {
+        let dest = tmp_dir().join("abandon.bin");
+        fs::write(&dest, b"previous").unwrap();
+        {
+            let mut af = AtomicFile::create(&dest).unwrap();
+            af.write_all(b"half-writ").unwrap();
+            // Dropped without commit: simulated crash.
+        }
+        assert_eq!(fs::read(&dest).unwrap(), b"previous");
+        assert_eq!(fs::read(tmp_path(&dest)).unwrap(), b"half-writ");
+        // Resume truncates to the requested checkpoint and appends.
+        let mut af = AtomicFile::resume(&dest, 4).unwrap();
+        af.write_all(b"-resumed").unwrap();
+        af.commit().unwrap();
+        assert_eq!(fs::read(&dest).unwrap(), b"half-resumed");
+        fs::remove_file(&dest).unwrap();
+    }
+
+    #[test]
+    fn crash_at_commit_failpoint_never_clobbers_destination() {
+        let dest = tmp_dir().join("fp.bin");
+        fs::write(&dest, b"survivor").unwrap();
+        let _s = failpoint::scenario();
+        failpoint::arm("atomic_io::commit", 0, 1);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let mut af = AtomicFile::create(&dest).unwrap();
+            af.write_all(b"doomed").unwrap();
+            af.commit().unwrap();
+        }));
+        assert!(r.is_err(), "armed commit failpoint must fire");
+        assert_eq!(fs::read(&dest).unwrap(), b"survivor");
+        fs::remove_file(&dest).unwrap();
+        let _ = fs::remove_file(tmp_path(&dest));
+    }
+}

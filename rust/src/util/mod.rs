@@ -3,6 +3,7 @@
 //! would normally pull from crates.io (PRNG, JSON, CLI, thread pool,
 //! logging, bench harness, property testing) live here.
 
+pub mod atomic_io;
 pub mod bench;
 pub mod check;
 pub mod cli;

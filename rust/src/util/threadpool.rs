@@ -64,6 +64,10 @@ struct JobDone {
     /// Spawned workers that have not yet finished running the closure.
     remaining: AtomicUsize,
     panicked: AtomicBool,
+    /// First worker panic payload, kept so the submitter can re-raise it
+    /// with the original message instead of a generic one (lane-fault
+    /// reports downstream depend on that message).
+    payload: Mutex<Option<Box<dyn std::any::Any + Send>>>,
     m: Mutex<()>,
     cv: Condvar,
 }
@@ -117,7 +121,15 @@ fn worker_loop(pool: &'static Pool) {
             }
         };
         let done = unsafe { &*msg.done };
-        if catch_unwind(AssertUnwindSafe(|| unsafe { (msg.call)(msg.data) })).is_err() {
+        if let Err(p) = catch_unwind(AssertUnwindSafe(|| unsafe { (msg.call)(msg.data) })) {
+            // Store the payload before the decrement critical section
+            // below: the submitter only reads it after observing
+            // `remaining == 0` under `done.m`.
+            let mut slot = lock(&done.payload);
+            if slot.is_none() {
+                *slot = Some(p);
+            }
+            drop(slot);
             done.panicked.store(true, Ordering::Relaxed);
         }
         {
@@ -197,6 +209,7 @@ fn broadcast<F: Fn() + Sync>(f: F) {
     let done = JobDone {
         remaining: AtomicUsize::new(pool.workers),
         panicked: AtomicBool::new(false),
+        payload: Mutex::new(None),
         m: Mutex::new(()),
         cv: Condvar::new(),
     };
@@ -229,6 +242,11 @@ fn broadcast<F: Fn() + Sync>(f: F) {
         resume_unwind(p);
     }
     if done.panicked.load(Ordering::Relaxed) {
+        // Re-raise the worker's own payload so panic messages (e.g.
+        // failpoint names) survive the thread hop.
+        if let Some(p) = lock(&done.payload).take() {
+            resume_unwind(p);
+        }
         panic!("worker thread panicked inside a parallel region");
     }
 }
@@ -469,6 +487,32 @@ mod tests {
                 "round {round}: coverage must be exact after recovery"
             );
         }
+    }
+
+    #[test]
+    fn worker_panic_message_survives_to_submitter() {
+        // The payload of a lane panic must reach the submitter verbatim;
+        // serve-side fault reports turn this message into a LaneFault
+        // detail, so a generic "worker thread panicked" stand-in is a
+        // regression. Panic on every lane so the panicking lane is a pool
+        // worker whenever the pool has one.
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            parallel_for_dynamic(64, 1, |s, _| {
+                panic!("distinctive lane fault at index {s}");
+            });
+        }));
+        let payload = result.expect_err("panic must propagate");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+            .expect("payload must be a string");
+        assert!(
+            msg.contains("distinctive lane fault at index"),
+            "original message must survive, got: {msg}"
+        );
+        let v = parallel_map(16, 1, |i| i);
+        assert!(v.iter().enumerate().all(|(i, x)| *x == i));
     }
 
     #[test]

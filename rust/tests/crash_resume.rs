@@ -1,0 +1,386 @@
+//! Crash-safety integration suite: torn writes, journaled pack resume,
+//! and degraded-mode ladder serving (`util::atomic_io` +
+//! `quant::format` journal + `RateLadder::load_mapped`).
+//!
+//! The contracts pinned here:
+//!
+//! - A simulated crash at ANY write/flush boundary of the three
+//!   container writers (RADIOCS1 calibration, RADIOQM2 model, RADIOQM3
+//!   ladder) never clobbers an existing artifact at the destination
+//!   path: the destination either does not exist or still verifies and
+//!   loads in full. Partial bytes live only in `<path>.tmp`.
+//! - A journaled `pack_streaming` interrupted at any failpoint resumes
+//!   on the next call and seals a container **byte-identical** to an
+//!   uninterrupted pack; the journal sidecar is deleted on success.
+//! - `serve_ladder_mapped` survives a corrupt non-top rate point: the
+//!   point is dropped at load (`ServeStats::degraded_sections` counts
+//!   it), every request still gets tokens, and eager `load` still
+//!   refuses the same bytes. A corrupt TOP point stays a hard error.
+//! - `QuantizedModel::load` and `QuantizedModel::load_mapped` produce
+//!   identical models (pinned byte-for-byte via re-serialization).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+
+use radio::coordinator::calibration::CalibrationStats;
+use radio::coordinator::gradients::NativeProvider;
+use radio::coordinator::ladder::RateLadder;
+use radio::coordinator::pipeline::rtn_quantize_model;
+use radio::coordinator::radio::{Radio, RadioConfig};
+use radio::error::RadioError;
+use radio::infer::{serve_ladder_mapped, Request, ServeConfig};
+use radio::model::corpus::{Corpus, Domain};
+use radio::model::weights::Weights;
+use radio::model::ModelConfig;
+use radio::quant::format::{journal_path, QuantizedModel};
+use radio::util::rng::Rng;
+use radio::util::{atomic_io, failpoint, integrity};
+
+fn test_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("radio_crash_{}_{}", name, std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn tiny_setup() -> (Weights, Corpus) {
+    let cfg = ModelConfig { vocab: 256, dim: 16, heads: 2, layers: 2, mlp: 32, max_seq: 16 };
+    let mut rng = Rng::new(0xC5A1);
+    let w = Weights::init_pretrained_like(cfg, &mut rng);
+    let corpus = Corpus::synthetic(0xC5A2, Domain::Calib, 8 * 1024);
+    (w, corpus)
+}
+
+fn quick_cfg(bits: f64) -> RadioConfig {
+    RadioConfig {
+        target_bits: bits,
+        rows_per_group: 8,
+        batch: 2,
+        seq: 16,
+        tokens_per_seq: 5,
+        iters: 2,
+        pca_k: 2,
+        ..Default::default()
+    }
+}
+
+/// Run `f` expecting the armed failpoint to abort it, then assert the
+/// torn-write contract at `dest`: the destination is untouched (equal
+/// to `prior`, or absent when `prior` is `None`) and the partial bytes
+/// landed in the staging file instead.
+fn assert_torn_write_contained(
+    site: &str,
+    tag: u64,
+    dest: &Path,
+    prior: Option<&[u8]>,
+    f: impl FnOnce(),
+) {
+    {
+        let _s = failpoint::scenario();
+        failpoint::arm(site, tag, 1);
+        let r = catch_unwind(AssertUnwindSafe(f));
+        assert!(r.is_err(), "{site}(tag {tag}): the armed failpoint must abort the write");
+    }
+    match prior {
+        Some(bytes) => {
+            let now = std::fs::read(dest).expect("prior artifact must survive the crash");
+            assert_eq!(now, bytes, "{site}(tag {tag}): destination bytes changed");
+        }
+        None => assert!(
+            !dest.exists(),
+            "{site}(tag {tag}): a crashed first write must not create the destination"
+        ),
+    }
+    assert!(
+        atomic_io::tmp_path(dest).exists(),
+        "{site}(tag {tag}): partial bytes must land in the staging file"
+    );
+}
+
+#[test]
+fn quantized_model_save_crash_at_every_boundary_leaves_destination_intact() {
+    let cfg = ModelConfig { vocab: 32, dim: 16, heads: 2, layers: 1, mlp: 32, max_seq: 16 };
+    let mut rng = Rng::new(0xC511);
+    let qm = rtn_quantize_model(&Weights::init_training(cfg, &mut rng), 4, 8);
+    let dir = test_dir("qm_save");
+    let path = dir.join("model.radio");
+    let n = qm.packed.len();
+
+    // First write: a crash at any boundary must not create `path`.
+    let sites: Vec<(&str, u64)> = vec![
+        ("format::writer::after_matrix", 0),
+        ("format::writer::after_matrix", (n / 2) as u64),
+        ("format::writer::after_matrix", (n - 1) as u64),
+        ("format::writer::before_seal", 0),
+        ("atomic_io::commit", 0),
+    ];
+    for &(site, tag) in &sites {
+        assert_torn_write_contained(site, tag, &path, None, || {
+            qm.save(&path).unwrap();
+        });
+        std::fs::remove_file(atomic_io::tmp_path(&path)).ok();
+    }
+
+    // Overwrite: the previous artifact must survive every crash, intact
+    // enough to verify AND load.
+    qm.save(&path).unwrap();
+    let v1 = std::fs::read(&path).unwrap();
+    for &(site, tag) in &sites {
+        assert_torn_write_contained(site, tag, &path, Some(&v1), || {
+            qm.save(&path).unwrap();
+        });
+        QuantizedModel::load(&path).expect("surviving artifact must still load");
+        std::fs::remove_file(atomic_io::tmp_path(&path)).ok();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn calibration_save_crash_at_every_section_leaves_destination_intact() {
+    let (w, corpus) = tiny_setup();
+    let radio = Radio::new(quick_cfg(3.0));
+    let mut provider = NativeProvider;
+    let (stats, _) = radio.calibrate(&w, &corpus, &mut provider, None);
+    let dir = test_dir("cal_save");
+    let path = dir.join("stats.radiocal");
+
+    stats.save(&path).unwrap();
+    let v1 = std::fs::read(&path).unwrap();
+    let sites: Vec<(&str, u64)> = vec![
+        ("calibration::save::after_section", 0),
+        ("calibration::save::after_section", 1),
+        ("calibration::save::after_section", 2),
+        ("atomic_io::commit", 0),
+    ];
+    for &(site, tag) in &sites {
+        assert_torn_write_contained(site, tag, &path, Some(&v1), || {
+            stats.save(&path).unwrap();
+        });
+        let reloaded = CalibrationStats::load(&path).expect("artifact must still load");
+        assert_eq!(reloaded.mats.len(), stats.mats.len());
+        std::fs::remove_file(atomic_io::tmp_path(&path)).ok();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn ladder_save_crash_at_every_point_leaves_destination_intact() {
+    let (w, corpus) = tiny_setup();
+    let radio = Radio::new(quick_cfg(3.0));
+    let mut provider = NativeProvider;
+    let (stats, _) = radio.calibrate(&w, &corpus, &mut provider, None);
+    let ladder = RateLadder::build(&radio, &w, &stats, &[2.0, 3.0, 4.0]);
+    let dir = test_dir("ladder_save");
+    let path = dir.join("ladder.radio");
+
+    ladder.save(&path).unwrap();
+    let v1 = std::fs::read(&path).unwrap();
+    let mut sites: Vec<(&str, u64)> = (0..ladder.points.len())
+        .map(|pi| ("ladder::save::after_point", pi as u64))
+        .collect();
+    sites.push(("atomic_io::commit", 0));
+    for &(site, tag) in &sites {
+        assert_torn_write_contained(site, tag, &path, Some(&v1), || {
+            ladder.save(&path).unwrap();
+        });
+        let reloaded = RateLadder::load(&path).expect("artifact must still load");
+        assert_eq!(reloaded.points.len(), ladder.points.len());
+        std::fs::remove_file(atomic_io::tmp_path(&path)).ok();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn interrupted_journaled_pack_resumes_bit_identical() {
+    let (w, corpus) = tiny_setup();
+    let radio = Radio::new(quick_cfg(3.0));
+    let mut provider = NativeProvider;
+    let (stats, _) = radio.calibrate(&w, &corpus, &mut provider, None);
+    let alloc = stats.allocate(3.0, radio.cfg.bmax, true);
+    let dir = test_dir("pack_resume");
+
+    // Reference: one uninterrupted pack.
+    let p_ref = dir.join("reference.radio");
+    let ref_summary = radio.pack_streaming(&w, &stats, &alloc, &p_ref).unwrap();
+    let ref_bytes = std::fs::read(&p_ref).unwrap();
+    assert_eq!(ref_summary.resumed, 0);
+    assert!(!journal_path(&p_ref).exists(), "journal must be deleted on success");
+
+    // Crash scenarios: (site, tag, matrices guaranteed journaled when it
+    // fires). `before_seal` fires after the final checkpoint, so every
+    // record is journaled; `checkpoint` tag 0 fires BEFORE the first
+    // journal append, so nothing is.
+    let n = stats.mats.len();
+    let scenarios: Vec<(&str, u64, Option<usize>)> = vec![
+        ("format::writer::checkpoint", 0, Some(0)),
+        ("format::writer::after_matrix", 0, Some(0)),
+        ("format::writer::after_matrix", (n - 1) as u64, None),
+        ("format::writer::before_seal", 0, Some(n)),
+        ("atomic_io::commit", 0, Some(n)),
+    ];
+    for (k, &(site, tag, want_resumed)) in scenarios.iter().enumerate() {
+        let path = dir.join(format!("crashed_{k}.radio"));
+        {
+            let _s = failpoint::scenario();
+            failpoint::arm(site, tag, 1);
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                radio.pack_streaming(&w, &stats, &alloc, &path).unwrap();
+            }));
+            assert!(r.is_err(), "{site}(tag {tag}): armed failpoint must abort the pack");
+        }
+        assert!(!path.exists(), "{site}(tag {tag}): no partial file at the final path");
+        // Second call resumes (or restarts) and must seal the identical
+        // container.
+        let summary = radio
+            .pack_streaming(&w, &stats, &alloc, &path)
+            .unwrap_or_else(|e| panic!("{site}(tag {tag}): resume failed: {e:?}"));
+        if let Some(want) = want_resumed {
+            assert_eq!(summary.resumed, want, "{site}(tag {tag}): resumed count");
+        }
+        assert_eq!(summary.matrices, n);
+        assert!((summary.avg_bits - ref_summary.avg_bits).abs() < 1e-12);
+        let got = std::fs::read(&path).unwrap();
+        assert_eq!(got, ref_bytes, "{site}(tag {tag}): resumed pack must be bit-identical");
+        assert!(
+            !journal_path(&path).exists(),
+            "{site}(tag {tag}): journal must be deleted after the successful seal"
+        );
+        QuantizedModel::load(&path).expect("resumed container must load");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn stale_journal_from_a_different_pack_is_discarded_not_trusted() {
+    let (w, corpus) = tiny_setup();
+    let radio = Radio::new(quick_cfg(3.0));
+    let mut provider = NativeProvider;
+    let (stats, _) = radio.calibrate(&w, &corpus, &mut provider, None);
+    let alloc = stats.allocate(3.0, radio.cfg.bmax, true);
+    let dir = test_dir("stale_journal");
+    let path = dir.join("model.radio");
+
+    // Plant garbage where a crashed pack would have left its state: a
+    // tmp/journal pair that does not describe this pack (wrong magic in
+    // the staging file kills the resume handshake).
+    std::fs::write(atomic_io::tmp_path(&path), b"not a container at all").unwrap();
+    std::fs::write(journal_path(&path), b"not a journal either").unwrap();
+    let summary = radio.pack_streaming(&w, &stats, &alloc, &path).unwrap();
+    assert_eq!(summary.resumed, 0, "garbage state must trigger a fresh pack, not a resume");
+
+    let p_ref = dir.join("reference.radio");
+    radio.pack_streaming(&w, &stats, &alloc, &p_ref).unwrap();
+    assert_eq!(
+        std::fs::read(&path).unwrap(),
+        std::fs::read(&p_ref).unwrap(),
+        "a discarded-journal pack must still be bit-identical"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn degraded_ladder_serve_survives_a_corrupt_lower_point() {
+    let (w, corpus) = tiny_setup();
+    let radio = Radio::new(quick_cfg(3.0));
+    let mut provider = NativeProvider;
+    let (stats, _) = radio.calibrate(&w, &corpus, &mut provider, None);
+    let ladder = RateLadder::build(&radio, &w, &stats, &[2.0, 3.0, 4.0]);
+    let dir = test_dir("degraded");
+    let path = dir.join("ladder.radio");
+    ladder.save(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    let checked = integrity::verify(&bytes)
+        .expect("fresh ladder must verify")
+        .expect("ladder writer emits the checked framing");
+    let points: Vec<&integrity::SectionInfo> =
+        checked.sections.iter().filter(|s| s.tag == integrity::SEC_POINT).collect();
+    assert_eq!(points.len(), 3, "one section per rate point");
+
+    // Flip a payload byte in the LOWEST point (non-essential).
+    let mut tampered = bytes.clone();
+    let mid = (points[0].off + points[0].len / 2) as usize;
+    tampered[mid] ^= 0x10;
+    let degraded_path = dir.join("degraded.radio");
+    std::fs::write(&degraded_path, &tampered).unwrap();
+
+    // Eager load refuses the container outright…
+    let err = RateLadder::load(&degraded_path).expect_err("eager load must reject corruption");
+    assert!(
+        matches!(err, RadioError::ChecksumMismatch { .. } | RadioError::Corrupt { .. }),
+        "unexpected error: {err:?}"
+    );
+    // …but the mapped serve path drops the bad point and still answers
+    // every request with tokens.
+    let reqs: Vec<Request> = (0..4)
+        .map(|id| Request { id, prompt: vec![1 + id as u32, 7, 3], max_new: 4 })
+        .collect();
+    let (resps, sstats) =
+        serve_ladder_mapped(&degraded_path, reqs.clone(), ServeConfig::new(4)).unwrap();
+    assert_eq!(sstats.degraded_sections, 1, "exactly one point dropped");
+    assert_eq!(sstats.completed, reqs.len(), "every request must finish clean");
+    assert_eq!(resps.len(), reqs.len());
+    for r in &resps {
+        assert!(r.error.is_none(), "request {}: {:?}", r.id, r.error);
+        assert_eq!(r.tokens.len(), 4, "request {} must produce every token", r.id);
+    }
+    // The degraded serve ran on the surviving points; its top point is
+    // the same engine an intact ladder would serve.
+    let (ladder2, degraded) = RateLadder::load_mapped(&degraded_path).unwrap();
+    assert_eq!(degraded, 1);
+    assert_eq!(ladder2.points.len(), 2, "the corrupt point is gone, the other two serve");
+
+    // A corrupt TOP (highest-rate) point is essential: hard error, no
+    // silent downgrade of the serving target.
+    let mut top_bad = bytes.clone();
+    let mid = (points[2].off + points[2].len / 2) as usize;
+    top_bad[mid] ^= 0x10;
+    std::fs::write(&degraded_path, &top_bad).unwrap();
+    let err = RateLadder::load_mapped(&degraded_path)
+        .expect_err("a corrupt top point must fail the load");
+    assert!(
+        matches!(err, RadioError::ChecksumMismatch { .. } | RadioError::Corrupt { .. }),
+        "unexpected error: {err:?}"
+    );
+    // An intact container reports zero degradation through the same path.
+    let (_, degraded) = RateLadder::load_mapped(&path).unwrap();
+    assert_eq!(degraded, 0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn load_and_load_mapped_produce_identical_models() {
+    let (w, corpus) = tiny_setup();
+    let radio = Radio::new(quick_cfg(3.0));
+    let mut provider = NativeProvider;
+    let (stats, _) = radio.calibrate(&w, &corpus, &mut provider, None);
+    let alloc = stats.allocate(3.0, radio.cfg.bmax, true);
+    let dir = test_dir("load_agree");
+    let path = dir.join("model.radio");
+    radio.pack_streaming(&w, &stats, &alloc, &path).unwrap();
+
+    let eager = QuantizedModel::load(&path).unwrap();
+    let mapped = QuantizedModel::load_mapped(&path).unwrap();
+    assert_eq!(eager.packed.len(), mapped.packed.len());
+    assert_eq!(eager.avg_bits(), mapped.avg_bits());
+    // Byte-level equivalence: both models re-serialize to identical
+    // containers (the writer is deterministic, so equal bytes ⇔ equal
+    // packed streams, side params, and act spec).
+    let (pa, pb) = (dir.join("eager.radio"), dir.join("mapped.radio"));
+    eager.save(&pa).unwrap();
+    mapped.save(&pb).unwrap();
+    assert_eq!(
+        std::fs::read(&pa).unwrap(),
+        std::fs::read(&pb).unwrap(),
+        "load and load_mapped must yield byte-identical models"
+    );
+
+    // Same agreement for a QM3 ladder container (top-point resolution).
+    let ladder = RateLadder::build(&radio, &w, &stats, &[2.0, 4.0]);
+    let lpath = dir.join("ladder.radio");
+    ladder.save(&lpath).unwrap();
+    let eager = QuantizedModel::load(&lpath).unwrap();
+    let mapped = QuantizedModel::load_mapped(&lpath).unwrap();
+    eager.save(&pa).unwrap();
+    mapped.save(&pb).unwrap();
+    assert_eq!(std::fs::read(&pa).unwrap(), std::fs::read(&pb).unwrap());
+    std::fs::remove_dir_all(&dir).ok();
+}

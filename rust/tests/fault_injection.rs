@@ -111,6 +111,51 @@ fn single_lane_fault_leaves_survivors_bit_identical() {
 }
 
 #[test]
+fn lane_fault_detail_carries_the_original_panic_message() {
+    // The LaneFault detail must name the actual panic site, not a
+    // generic stand-in: `panic_message` downcasts the payload, and the
+    // threadpool re-raises a worker's own payload, so the failpoint's
+    // message survives the thread hop into the typed error. Without
+    // that, every fault in a parallel region reads "worker thread
+    // panicked inside a parallel region" and the report is useless.
+    let engine = tiny_engine(0xFA61);
+    let reqs = mk_requests(4, 0xFA62);
+    {
+        let _s = failpoint::scenario();
+        failpoint::arm("serve::lane", 1, 2);
+        let (resps, stats) = serve_with(&engine, reqs.clone(), ServeConfig::new(4));
+        assert_eq!(stats.lane_faults, 1);
+        let Some(RadioError::LaneFault { detail }) = &resps[1].error else {
+            panic!("victim must carry a LaneFault, got {:?}", resps[1].error);
+        };
+        assert!(
+            detail.contains("failpoint 'serve::lane'"),
+            "detail must carry the panic site, got: {detail}"
+        );
+        assert!(detail.contains("request 1"), "detail must name the request, got: {detail}");
+    }
+    {
+        // Same contract for a panic raised inside the engine forward —
+        // the path that crosses the worker pool.
+        let _s = failpoint::scenario();
+        failpoint::arm("engine::forward_chunk::after_append", 0, 1);
+        let (resps, stats) = serve_with(&engine, reqs.clone(), ServeConfig::new(4));
+        assert!(stats.lane_faults > 0, "the armed engine fault must land");
+        let detail = resps
+            .iter()
+            .find_map(|r| match &r.error {
+                Some(RadioError::LaneFault { detail }) => Some(detail.clone()),
+                _ => None,
+            })
+            .expect("some lane must retire with a fault");
+        assert!(
+            detail.contains("engine::forward_chunk::after_append"),
+            "engine-site name must survive into the detail, got: {detail}"
+        );
+    }
+}
+
+#[test]
 fn kv_exhaustion_composes_with_lane_faults() {
     let engine = tiny_engine(0xFA21);
     let reqs = mk_requests(6, 0xFA22);
