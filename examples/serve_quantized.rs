@@ -11,8 +11,8 @@
 use radio::coordinator::{kv_spec_for, NativeProvider, Radio, RadioConfig, RateLadder};
 use radio::exp;
 use radio::infer::{
-    lane_cost_bytes, serve, serve_ladder, serve_threaded, serve_with, Engine, KvCacheConfig,
-    Request, ServeConfig,
+    lane_cost_bytes, serve, serve_ladder, serve_replicated, serve_threaded, serve_with,
+    ColumnSharded, Engine, KvCacheConfig, Request, RouterConfig, ServeConfig,
 };
 use radio::quant::activations::ActScalePolicy;
 use radio::quant::QuantMode;
@@ -187,6 +187,30 @@ fn main() {
             "activation-quantized serve must match activation-quantized generate"
         );
     }
+
+    // Sharded + replicated serving (docs/SERVING.md): the same engine
+    // behind a column-sharded backend (each GEMM's output columns split
+    // across W workers, stitched by concatenation — no cross-worker FP
+    // reduction), fronted by the admission router fanning the request
+    // list across R independent scheduler replicas. Topology is a pure
+    // latency/throughput knob: tokens stay bit-identical to the
+    // single-thread engine under every (W, R).
+    let sharded = Engine::from_quantized(&qm).with_backend(ColumnSharded::new(2));
+    let router_cfg = RouterConfig::new(2, ServeConfig::new(max_batch));
+    let (resp_shard, stats_shard) = serve_replicated(&sharded, mk_requests(), router_cfg);
+    println!(
+        "\nsharded + replicated serving ({} backend, W=2, R=2 replicas):",
+        sharded.backend_name()
+    );
+    println!(
+        "  {} completed, {} tokens, {:.1} tok/s across replicas",
+        stats_shard.completed, stats_shard.total_tokens, stats_shard.throughput_tps
+    );
+    assert_eq!(
+        resp_shard.iter().map(|r| &r.tokens).collect::<Vec<_>>(),
+        resp_q.iter().map(|r| &r.tokens).collect::<Vec<_>>(),
+        "sharded + replicated serving must produce identical tokens"
+    );
 
     // Show a couple of generations (they should look corpus-like).
     for r in resp_q.iter().take(3) {

@@ -1,0 +1,234 @@
+//! Sharded / replicated serving throughput: the single-thread engine vs
+//! the column-sharded and layer-pipeline backends at W ∈ {1, 2, 4}, and
+//! single-scheduler serving vs the admission router at R ∈ {1, 2}.
+//!
+//! Every timed arm is also an identity arm: before the stopwatch runs,
+//! each backend's tokens are asserted equal to the single-thread
+//! engine's, so the bench doubles as an end-to-end check that sharding
+//! buys (or costs) only wall clock, never tokens.
+//!
+//! Emits a paper-shaped table via `report` *and* a machine-readable
+//! `BENCH_shard.json` at the repo root so the scaling trajectory can be
+//! tracked across PRs.
+//!
+//! ```bash
+//! cargo bench --bench bench_shard            # quick
+//! RADIO_BENCH_FULL=1 cargo bench --bench bench_shard
+//! RADIO_BENCH_SMOKE=1 cargo bench --bench bench_shard   # CI smoke (tiny config)
+//! ```
+
+use radio::coordinator::pipeline::rtn_quantize_model;
+use radio::infer::{
+    serve_replicated, serve_with, ColumnSharded, Engine, LayerPipeline, Request, RouterConfig,
+    ServeConfig,
+};
+use radio::model::weights::Weights;
+use radio::model::ModelConfig;
+use radio::report;
+use radio::util::bench::{black_box, Bench, Table};
+use radio::util::json::Json;
+use radio::util::rng::Rng;
+
+fn mk_requests(n: usize, prompt_len: usize, max_new: usize, vocab: usize) -> Vec<Request> {
+    let mut rng = Rng::new(0x5AAD);
+    (0..n)
+        .map(|id| {
+            let prompt: Vec<u32> = (0..prompt_len).map(|_| rng.below(vocab) as u32).collect();
+            Request { id, prompt, max_new }
+        })
+        .collect()
+}
+
+fn ms(d: std::time::Duration) -> f64 {
+    d.as_secs_f64() * 1e3
+}
+
+fn main() {
+    let smoke = std::env::var("RADIO_BENCH_SMOKE").is_ok();
+    let full = std::env::var("RADIO_BENCH_FULL").is_ok() && !smoke;
+    let preset = if smoke {
+        "ropt-nano"
+    } else if full {
+        "ropt-med"
+    } else {
+        "ropt-micro"
+    };
+    let cfg = ModelConfig::preset(preset).unwrap();
+    let mut rng = Rng::new(0x5EAF);
+    // Synthetic pretrained-shaped weights: scaling behaviour depends on
+    // shapes and worker counts, not on what the model learned.
+    let w = Weights::init_pretrained_like(cfg, &mut rng);
+    let bits = 3u8;
+    let qm = rtn_quantize_model(&w, bits, 64);
+    let single = Engine::from_quantized(&qm);
+
+    let n_requests = if smoke {
+        4
+    } else if full {
+        24
+    } else {
+        12
+    };
+    let prompt_len = if smoke { 8 } else { 16 };
+    let max_new = if smoke {
+        6
+    } else if full {
+        32
+    } else {
+        16
+    };
+    let reqs = || mk_requests(n_requests, prompt_len, max_new, cfg.vocab);
+    let serve_cfg = ServeConfig::new(4);
+
+    let bench = if full { Bench::default() } else { Bench::quick() };
+
+    println!(
+        "shard bench: {preset} (synthetic), {bits}-bit RTN pack, {n_requests} requests × \
+         {max_new} new tokens, prompt {prompt_len}, {} layers",
+        cfg.layers
+    );
+
+    // Reference tokens: every backend / topology below must reproduce
+    // these exactly (the Backend bit-identity contract, enforced here so
+    // a regression can't hide behind a throughput number).
+    let reference: Vec<Vec<u32>> =
+        reqs().iter().map(|r| single.generate(&r.prompt, r.max_new)).collect();
+    let assert_identical = |label: &str, resps: &[radio::infer::Response]| {
+        for (r, want) in resps.iter().zip(&reference) {
+            assert_eq!(&r.tokens, want, "{label}: tokens diverged from single-thread engine");
+        }
+    };
+
+    // -------------------------------------------------- backend scaling (W)
+    let arms: Vec<(String, Engine)> = vec![
+        ("single".to_string(), Engine::from_quantized(&qm)),
+        ("col W=2".to_string(), Engine::from_quantized(&qm).with_backend(ColumnSharded::new(2))),
+        ("col W=4".to_string(), Engine::from_quantized(&qm).with_backend(ColumnSharded::new(4))),
+        (
+            "pipe W=2".to_string(),
+            Engine::from_quantized(&qm).with_backend(LayerPipeline::with_plan(&qm.shard_plan(2))),
+        ),
+    ];
+
+    let mut table =
+        Table::new(&["backend", "gen tok/s", "prompt tok/s", "ttft p50 (ms)", "vs single"]);
+    let mut rows_json: Vec<Json> = Vec::new();
+    let mut single_tps = 0.0f64;
+    for (label, engine) in &arms {
+        let (resps, _) = serve_with(engine, reqs(), serve_cfg);
+        assert_identical(label, &resps);
+        let mut stats = None;
+        let secs = bench
+            .run(label, || {
+                let (_, st) = serve_with(engine, reqs(), serve_cfg);
+                stats = Some(black_box(st));
+            })
+            .median_secs();
+        let stats = stats.expect("bench ran at least once");
+        let gen_tps = stats.total_tokens as f64 / secs.max(1e-12);
+        let prompt_tps = stats.prompt_tokens as f64 / secs.max(1e-12);
+        if label == "single" {
+            single_tps = gen_tps;
+        }
+        let speedup = gen_tps / single_tps.max(1e-12);
+        println!(
+            "  {label:>8}: {gen_tps:8.1} gen tok/s, {prompt_tps:8.1} prompt tok/s, \
+             ttft p50 {:.2?} ({speedup:.2}x vs single)",
+            stats.ttft_p50
+        );
+        table.row(vec![
+            label.clone(),
+            format!("{gen_tps:.1}"),
+            format!("{prompt_tps:.1}"),
+            format!("{:.2}", ms(stats.ttft_p50)),
+            format!("{speedup:.2}"),
+        ]);
+        rows_json.push(Json::obj(vec![
+            ("backend", Json::str(label)),
+            ("gen_tps", Json::num(gen_tps)),
+            ("prompt_tps", Json::num(prompt_tps)),
+            ("ttft_p50_ms", Json::num(ms(stats.ttft_p50))),
+            ("speedup_vs_single", Json::num(speedup)),
+        ]));
+    }
+
+    // ------------------------------------------------ replica scaling (R)
+    let mut r_table = Table::new(&["replicas", "gen tok/s", "ttft p50 (ms)", "vs R=1"]);
+    let mut r_json: Vec<Json> = Vec::new();
+    let mut r1_tps = 0.0f64;
+    for r in [1usize, 2] {
+        let label = format!("R={r}");
+        let rcfg = RouterConfig::new(r, serve_cfg);
+        let (resps, _) = serve_replicated(&single, reqs(), rcfg);
+        assert_identical(&label, &resps);
+        let mut stats = None;
+        let secs = bench
+            .run(&label, || {
+                let (_, st) = serve_replicated(&single, reqs(), rcfg);
+                stats = Some(black_box(st));
+            })
+            .median_secs();
+        let stats = stats.expect("bench ran at least once");
+        let gen_tps = stats.total_tokens as f64 / secs.max(1e-12);
+        // TTFT comes from replica 0 (replicas run the same scheduler;
+        // the router adds no admission latency of its own).
+        let ttft = stats.replicas.first().map(|s| s.ttft_p50).unwrap_or_default();
+        if r == 1 {
+            r1_tps = gen_tps;
+        }
+        let speedup = gen_tps / r1_tps.max(1e-12);
+        println!(
+            "  {label:>4}: {gen_tps:8.1} gen tok/s, ttft p50 {ttft:.2?} ({speedup:.2}x vs R=1)"
+        );
+        r_table.row(vec![
+            label.clone(),
+            format!("{gen_tps:.1}"),
+            format!("{:.2}", ms(ttft)),
+            format!("{speedup:.2}"),
+        ]);
+        r_json.push(Json::obj(vec![
+            ("replicas", Json::num(r as f64)),
+            ("gen_tps", Json::num(gen_tps)),
+            ("ttft_p50_ms", Json::num(ms(ttft))),
+            ("speedup_vs_r1", Json::num(speedup)),
+        ]));
+    }
+
+    println!("\nBackend scaling (token-identical by construction, asserted):");
+    table.print();
+    println!("\nReplica scaling via the admission router:");
+    r_table.print();
+    report::write_report(
+        "bench_shard",
+        "Sharded and replicated serving: worker/replica scaling at fixed tokens",
+        &[
+            ("execution backends: single vs column-sharded vs layer-pipeline", &table),
+            ("admission router: replica scaling", &r_table),
+        ],
+        "Column sharding splits each GEMM's output columns across W workers (concatenation, \
+         no cross-worker reduction), so per-forward latency should drop toward 1/W until \
+         per-column work no longer amortizes thread handoff; the layer pipeline instead \
+         overlaps micro-batches across layer stages, which needs enough resident lanes to \
+         fill the pipe. Replicas multiply independent schedulers over shared packed weights, \
+         so throughput should scale near-linearly in R while TTFT stays flat. Every arm is \
+         asserted token-identical to the single-thread engine before timing. Numbers from \
+         tiny synthetic configs are trajectory placeholders, not paper claims.",
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("shard")),
+        ("model", Json::str(preset)),
+        ("bits", Json::num(bits as f64)),
+        ("requests", Json::num(n_requests as f64)),
+        ("prompt_len", Json::num(prompt_len as f64)),
+        ("max_new", Json::num(max_new as f64)),
+        ("layers", Json::num(cfg.layers as f64)),
+        ("backends", Json::Arr(rows_json)),
+        ("replicas", Json::Arr(r_json)),
+    ]);
+    let path = "BENCH_shard.json";
+    match std::fs::write(path, json.to_pretty()) {
+        Ok(()) => println!("[bench] wrote {path}"),
+        Err(e) => eprintln!("[bench] FAILED to write {path}: {e}"),
+    }
+}

@@ -1,0 +1,407 @@
+//! Execution backends: how one logical forward pass maps onto OS
+//! threads. The [`Backend`] trait is the seam that lets single-thread,
+//! column-sharded (tensor-parallel), layer-pipeline, and (later)
+//! PJRT/XLA execution coexist behind one [`Engine`] — the serving
+//! scheduler, speculative decoding, and `generate` all call
+//! `Engine::forward_chunk`, which routes here.
+//!
+//! # The backend contract
+//!
+//! Implementors must guarantee, for every worker count and micro-batch
+//! shape:
+//!
+//! 1. **Bit-identity.** The returned hidden rows and all KV-cache side
+//!    effects are bit-for-bit equal to
+//!    [`SingleThread`]'s. Concretely: never introduce a
+//!    floating-point reduction whose operand order depends on the worker
+//!    count. The column-sharded backend satisfies this by construction —
+//!    each output column is decoded whole by exactly one worker through
+//!    the same per-column kernel the pooled sweep uses, and per-worker
+//!    ranges are stitched by concatenation (a memcpy, not an FP op).
+//!    The pipeline backend satisfies it because micro-batching is just
+//!    batching, and per-lane results are batch-composition-independent
+//!    (the engine's oldest invariant).
+//! 2. **Rollback discipline.** K/V rows may be appended eagerly per
+//!    layer, but lane clocks (`KvCache::len`) advance only after the
+//!    WHOLE forward succeeds (via the engine's crate-internal
+//!    `advance_clock`).
+//!    On a panic mid-forward, appended rows must be left *dangling past
+//!    `len`* so the serving scheduler's `truncate_to(pre_len)` rollback
+//!    reclaims them — never half-commit a clock.
+//! 3. **Panic transparency.** A worker panic must propagate to the
+//!    caller with its **original payload** (use
+//!    [`crate::util::threadpool::scoped_map`] or equivalent), so the
+//!    scheduler's fault containment retires only the affected lanes as
+//!    `LaneFault` with a detail message naming the real site — not
+//!    `std::thread::scope`'s generic "a scoped thread panicked".
+//!
+//! Under that contract, backend choice affects wall-clock only: serving
+//! on any backend stays token-identical to single-engine
+//! [`Engine::generate`], which the sharding test suite pins for
+//! W ∈ {1, 2, 4} on both shard axes. See `docs/SERVING.md` for how to
+//! pick a topology and size W.
+
+use crate::infer::engine::{advance_clock, row_offsets, Engine, GemmMode};
+use crate::infer::kv::KvCache;
+use crate::quant::format::ShardPlan;
+use std::sync::mpsc;
+
+/// One logical forward pass, mapped onto an execution topology.
+///
+/// See the [module docs](self) for the three-part contract
+/// (bit-identity, rollback discipline, panic transparency) every
+/// implementor must uphold.
+pub trait Backend: Send + Sync {
+    /// Run the shared transformer body for `chunks` against `caches`,
+    /// returning all N = ΣT hidden rows (lane-major, pre-final-LN).
+    /// `row_off` is `row_offsets(chunks)`, passed in so callers index
+    /// the result with the exact layout used here. Must append each
+    /// lane's K/V rows per layer and advance lane clocks once at the
+    /// end — bit-identical to [`SingleThread`] in both outputs and
+    /// cache state.
+    fn forward_chunk(
+        &self,
+        engine: &Engine,
+        chunks: &[&[u32]],
+        caches: &mut [KvCache],
+        row_off: &[usize],
+    ) -> Vec<Vec<f32>>;
+
+    /// Short stable name for diagnostics and benches.
+    fn name(&self) -> &'static str;
+}
+
+/// The classic path: one forward on the calling thread, GEMMs chunked
+/// across the shared persistent threadpool. Default for every
+/// constructor; the reference numerics all other backends must match.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SingleThread;
+
+impl Backend for SingleThread {
+    fn forward_chunk(
+        &self,
+        engine: &Engine,
+        chunks: &[&[u32]],
+        caches: &mut [KvCache],
+        row_off: &[usize],
+    ) -> Vec<Vec<f32>> {
+        engine.forward_chunk_mode(chunks, caches, row_off, GemmMode::Full)
+    }
+
+    fn name(&self) -> &'static str {
+        "single"
+    }
+}
+
+/// Tensor parallelism along the axis the decoder already iterates:
+/// every linear's output columns are split into `workers` contiguous
+/// ranges and each range is decoded by its own scoped worker, straight
+/// off the shared packed bitstreams (workers of one process share the
+/// mmap'd container — no weight duplication).
+///
+/// Bit-identity for every W: the split points (`i·cols/W`) are fixed by
+/// W alone, each output column is computed whole by one worker through
+/// the per-column kernel the pooled sweep shares
+/// ([`crate::infer::matvec::MatvecPlan::matmul_cols`]), and stitching
+/// is pure concatenation — there is no cross-worker floating-point
+/// reduction to order. Attention and layer norms run un-sharded on the
+/// calling thread, unchanged.
+///
+/// Scaling shape: decode cost per linear is ~`payload_bits / W` per
+/// worker, so W should track physical cores not already consumed by the
+/// shared pool (see `docs/SERVING.md` §Sizing).
+#[derive(Clone, Copy, Debug)]
+pub struct ColumnSharded {
+    /// Worker count W (clamped to ≥ 1; a width-`cols` linear uses at
+    /// most `cols` workers).
+    pub workers: usize,
+}
+
+impl ColumnSharded {
+    /// Backend with `workers` column shards. `ColumnSharded { workers: 1 }`
+    /// is numerically AND operationally the single path (no threads are
+    /// spawned).
+    pub fn new(workers: usize) -> ColumnSharded {
+        ColumnSharded { workers }
+    }
+}
+
+impl Backend for ColumnSharded {
+    fn forward_chunk(
+        &self,
+        engine: &Engine,
+        chunks: &[&[u32]],
+        caches: &mut [KvCache],
+        row_off: &[usize],
+    ) -> Vec<Vec<f32>> {
+        engine.forward_chunk_mode(chunks, caches, row_off, GemmMode::Sharded(self.workers.max(1)))
+    }
+
+    fn name(&self) -> &'static str {
+        "column-sharded"
+    }
+}
+
+/// One in-flight micro-batch: a contiguous lane group with its own
+/// cache sub-slice and lane-rebased row bookkeeping, flowing
+/// stage-to-stage through the pipeline's channels.
+struct MicroBatch<'a> {
+    idx: usize,
+    caches: &'a mut [KvCache],
+    row_off: Vec<usize>,
+    row_win: Vec<(usize, usize)>,
+    xs: Vec<Vec<f32>>,
+}
+
+/// Pipeline parallelism across the layer axis: the transformer blocks
+/// are partitioned into `stages` contiguous spans, each owned by one
+/// scoped worker; lanes are grouped into micro-batches of
+/// [`LayerPipeline::micro_batch`] lanes that flow stage → stage through
+/// channels, so up to `stages` micro-batches are in flight at once —
+/// riding the same chunked-prefill structure the scheduler already
+/// feeds.
+///
+/// Bit-identity: a micro-batch is just a smaller batch, and per-lane
+/// results are batch-composition-independent (the engine's oldest
+/// invariant); every lane still sees all layers in order against its
+/// own cache sub-slice (disjoint by construction), and lane clocks
+/// advance once after the whole forward — so outputs and cache state
+/// match [`SingleThread`] exactly.
+///
+/// Failure semantics: a stage panic disconnects the pipeline's
+/// channels, the remaining stages drain and exit cleanly, and the
+/// ORIGINAL panic payload is re-raised to the caller — so the serving
+/// scheduler sees the same rollback picture as a single-thread panic
+/// (appended rows dangling past un-advanced clocks) and retires only
+/// the affected lanes as `LaneFault`.
+#[derive(Clone, Debug)]
+pub struct LayerPipeline {
+    /// Stage count (clamped to the model's layer count at run time).
+    pub stages: usize,
+    /// Lanes per micro-batch. Smaller = more overlap across stages but
+    /// less GEMM amortization within each; 4 is a reasonable default
+    /// for serving batch sizes (see `docs/SERVING.md` §Sizing).
+    pub micro_batch: usize,
+    /// Optional payload-balanced stage bounds from
+    /// [`ShardPlan`] (`bounds.len() == stages + 1`); `None` = even
+    /// layer split.
+    bounds: Option<Vec<usize>>,
+}
+
+impl LayerPipeline {
+    /// Pipeline with `stages` even layer spans and the default
+    /// micro-batch of 4 lanes.
+    pub fn new(stages: usize) -> LayerPipeline {
+        LayerPipeline { stages, micro_batch: 4, bounds: None }
+    }
+
+    /// Pipeline whose stage bounds come from a payload-balanced
+    /// [`ShardPlan`] (built over the container's section table, so
+    /// stages carry near-equal packed bits rather than equal layer
+    /// counts). Bounds that don't match the engine's layer count fall
+    /// back to an even split at run time.
+    pub fn with_plan(plan: &ShardPlan) -> LayerPipeline {
+        LayerPipeline {
+            stages: plan.workers,
+            micro_batch: 4,
+            bounds: Some(plan.stage_bounds.clone()),
+        }
+    }
+
+    /// Builder: lanes per micro-batch (clamped to ≥ 1).
+    pub fn micro_batch(mut self, lanes: usize) -> LayerPipeline {
+        self.micro_batch = lanes.max(1);
+        self
+    }
+
+    /// Stage bounds for `nl` layers: the plan's if it covers exactly
+    /// `0..nl` with `stages + 1` monotone cut points, else an even
+    /// split.
+    fn stage_bounds(&self, stages: usize, nl: usize) -> Vec<usize> {
+        if let Some(b) = &self.bounds {
+            let monotone = b.windows(2).all(|w| w[0] <= w[1]);
+            if b.len() == stages + 1 && b.first() == Some(&0) && b.last() == Some(&nl) && monotone
+            {
+                return b.clone();
+            }
+        }
+        (0..=stages).map(|i| i * nl / stages).collect()
+    }
+}
+
+impl Backend for LayerPipeline {
+    fn forward_chunk(
+        &self,
+        engine: &Engine,
+        chunks: &[&[u32]],
+        caches: &mut [KvCache],
+        row_off: &[usize],
+    ) -> Vec<Vec<f32>> {
+        debug_assert_eq!(row_off, row_offsets(chunks).as_slice());
+        let n = *row_off.last().unwrap_or(&0);
+        if n == 0 {
+            return Vec::new();
+        }
+        let nl = engine.num_layers();
+        let stages = self.stages.clamp(1, nl.max(1));
+        if stages <= 1 {
+            return engine.forward_chunk_mode(chunks, caches, row_off, GemmMode::Full);
+        }
+        let bounds = self.stage_bounds(stages, nl);
+        let micro = self.micro_batch.max(1);
+
+        // Carve lanes into micro-batches: contiguous lane groups, each
+        // owning a disjoint &mut sub-slice of the caches. Embedding
+        // happens up front (it reads cache clocks, which are stable
+        // until advance_clock) so stages only run layer spans.
+        let mut batches: Vec<MicroBatch> = Vec::new();
+        let mut rest: &mut [KvCache] = &mut *caches;
+        for (idx, group) in chunks.chunks(micro).enumerate() {
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(group.len());
+            rest = tail;
+            let row_off_g = row_offsets(group);
+            let (xs, row_win) = engine.embed_rows(group, head);
+            batches.push(MicroBatch { idx, caches: head, row_off: row_off_g, row_win, xs });
+        }
+        let nmb = batches.len();
+
+        let mut results: Vec<(usize, Vec<Vec<f32>>)> = std::thread::scope(|s| {
+            let (tx0, rx0) = mpsc::channel::<MicroBatch>();
+            let mut prev_rx = rx0;
+            let mut handles = Vec::with_capacity(stages);
+            for t in 0..stages {
+                let (tx, rx) = mpsc::channel::<MicroBatch>();
+                let rx_in = std::mem::replace(&mut prev_rx, rx);
+                let (lo, hi) = (bounds[t], bounds[t + 1]);
+                handles.push(s.spawn(move || {
+                    // Drain until the upstream sender hangs up (all
+                    // micro-batches done, or an upstream stage died).
+                    while let Ok(mut mb) = rx_in.recv() {
+                        mb.xs = engine.run_layers(
+                            lo,
+                            hi,
+                            std::mem::take(&mut mb.xs),
+                            &mb.row_win,
+                            mb.caches,
+                            &mb.row_off,
+                            GemmMode::Full,
+                        );
+                        if tx.send(mb).is_err() {
+                            // Downstream died: exit cleanly — ITS panic
+                            // is the one the join below re-raises.
+                            break;
+                        }
+                    }
+                }));
+            }
+            // Feed in lane order; the channel chain preserves it, so no
+            // reordering can happen (results still carry idx for
+            // robustness).
+            for mb in batches.drain(..) {
+                if tx0.send(mb).is_err() {
+                    break; // first stage died; surfaced via join below
+                }
+            }
+            drop(tx0);
+            let mut out = Vec::with_capacity(nmb);
+            while let Ok(mb) = prev_rx.recv() {
+                out.push((mb.idx, mb.xs));
+            }
+            // Manual join so a stage panic re-raises its ORIGINAL
+            // payload (scope's implicit join would replace it with "a
+            // scoped thread panicked" and break LaneFault details).
+            let mut first_panic: Option<Box<dyn std::any::Any + Send>> = None;
+            for h in handles {
+                if let Err(p) = h.join() {
+                    if first_panic.is_none() {
+                        first_panic = Some(p);
+                    }
+                }
+            }
+            if let Some(p) = first_panic {
+                std::panic::resume_unwind(p);
+            }
+            out
+        });
+
+        // Stitch hidden rows back into lane-major order and commit the
+        // clocks — once, for the whole forward, exactly like the
+        // single path.
+        results.sort_by_key(|(idx, _)| *idx);
+        let mut xs = Vec::with_capacity(n);
+        for (_, part) in results {
+            xs.extend(part);
+        }
+        advance_clock(chunks, caches);
+        xs
+    }
+
+    fn name(&self) -> &'static str {
+        "layer-pipeline"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pipeline::rtn_quantize_model;
+    use crate::model::config::ModelConfig;
+    use crate::model::weights::Weights;
+    use crate::util::rng::Rng;
+
+    fn quad_engine(seed: u64) -> Engine {
+        let cfg = ModelConfig { vocab: 32, dim: 16, heads: 2, layers: 4, mlp: 32, max_seq: 16 };
+        let mut rng = Rng::new(seed);
+        let w = Weights::init_training(cfg, &mut rng);
+        let qm = rtn_quantize_model(&w, 3, 64);
+        Engine::from_quantized(&qm)
+    }
+
+    #[test]
+    fn backends_agree_on_logits_bit_for_bit() {
+        let prompt: Vec<u32> = vec![3, 1, 4, 1, 5, 9];
+        let base = quad_engine(7);
+        let mut c0 = base.new_cache();
+        let want = base.prefill_batch(&[&prompt], std::slice::from_mut(&mut c0));
+        for w in [1usize, 2, 4] {
+            let col = quad_engine(7).with_backend(ColumnSharded::new(w));
+            let mut c = col.new_cache();
+            let got = col.prefill_batch(&[&prompt], std::slice::from_mut(&mut c));
+            assert_eq!(got, want, "column-sharded W={w}");
+            let pipe = quad_engine(7).with_backend(LayerPipeline::new(w).micro_batch(1));
+            let mut c = pipe.new_cache();
+            let got = pipe.prefill_batch(&[&prompt], std::slice::from_mut(&mut c));
+            assert_eq!(got, want, "layer-pipeline W={w}");
+        }
+    }
+
+    #[test]
+    fn pipeline_handles_empty_and_uneven_micro_batches() {
+        let base = quad_engine(11);
+        let pipe = quad_engine(11).with_backend(LayerPipeline::new(2).micro_batch(2));
+        let prompts: Vec<Vec<u32>> = vec![vec![1, 2, 3], vec![], vec![7], vec![9, 9], vec![4]];
+        let chunks: Vec<&[u32]> = prompts.iter().map(|p| p.as_slice()).collect();
+        let mut cb: Vec<_> = (0..5).map(|_| base.new_cache()).collect();
+        let mut cp: Vec<_> = (0..5).map(|_| pipe.new_cache()).collect();
+        let want = base.prefill_batch(&chunks, &mut cb);
+        let got = pipe.prefill_batch(&chunks, &mut cp);
+        assert_eq!(got, want);
+        for (a, b) in cb.iter().zip(&cp) {
+            assert_eq!(a.len, b.len, "clocks must advance identically");
+        }
+    }
+
+    #[test]
+    fn shard_plan_bounds_are_honored_and_bad_bounds_fall_back() {
+        let pipe = LayerPipeline {
+            stages: 2,
+            micro_batch: 1,
+            bounds: Some(vec![0, 3, 4]),
+        };
+        assert_eq!(pipe.stage_bounds(2, 4), vec![0, 3, 4]);
+        // Wrong layer count → even split.
+        assert_eq!(pipe.stage_bounds(2, 6), vec![0, 3, 6]);
+        let even = LayerPipeline::new(3);
+        assert_eq!(even.stage_bounds(3, 4), vec![0, 1, 2, 4]);
+    }
+}

@@ -16,8 +16,11 @@
 //! chunked or what else is co-scheduled — the invariant the serving and
 //! prefill determinism tests pin down.
 
+use crate::infer::backend::{Backend, SingleThread};
 use crate::infer::kv::{KvCache, KvCacheConfig};
-use crate::infer::matvec::{dense_matmul, split_rows, MatvecPlan, SendMut};
+use crate::infer::matvec::{
+    dense_matmul, dense_matmul_cols, split_rows, MatvecPlan, SendMut,
+};
 use crate::model::config::ModelConfig;
 use crate::model::tensor::Tensor;
 use crate::model::transformer;
@@ -25,15 +28,31 @@ use crate::model::weights::{MatId, Role, Weights};
 use crate::quant::activations::{ActQuantParams, ActQuantSpec};
 use crate::quant::bitpack::PackedMatrix;
 use crate::quant::format::QuantizedModel;
-use crate::util::threadpool::{parallel_for_chunks, parallel_map};
+use crate::util::threadpool::{parallel_for_chunks, parallel_map, scoped_map};
+use std::sync::Arc;
 
 const LN_EPS: f32 = 1e-5;
+
+/// How a backend wants each linear executed — threaded through
+/// [`Engine::run_layers`] so every projection in a forward uses the same
+/// execution shape. `Full` is the pooled full-width GEMM; `Sharded(w)`
+/// splits the column axis across `w` scoped workers (see
+/// [`Linear::apply_sharded`]). Numerically the two are bit-identical —
+/// that is the whole point of the `_cols` kernel seam in
+/// [`crate::infer::matvec`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum GemmMode {
+    /// Pooled full-width sweep (the classic single-backend path).
+    Full,
+    /// Column-sharded across this many workers.
+    Sharded(usize),
+}
 
 /// One linear layer: dense or packed-quantized. Quantized linears also
 /// carry their input (activation) quantization parameters — bits 0 means
 /// full-precision f32 inputs, the default until a spec is installed via
 /// [`Engine::with_act_quant`].
-enum Linear {
+pub(crate) enum Linear {
     Dense(Tensor),
     Quant { pm: PackedMatrix, plan: MatvecPlan, act: ActQuantParams },
 }
@@ -51,6 +70,66 @@ impl Linear {
         match self {
             Linear::Dense(w) => dense_matmul(w, xs),
             Linear::Quant { pm, plan, act } => plan.matgem_act(pm, xs, *act),
+        }
+    }
+
+    /// Output width (columns) of this linear.
+    fn out_dim(&self) -> usize {
+        match self {
+            Linear::Dense(w) => w.cols,
+            Linear::Quant { pm, .. } => pm.cols,
+        }
+    }
+
+    /// Column-range apply: only columns `c0..c1`, computed serially via
+    /// the `_cols` kernels (bit-identical to that slice of
+    /// [`Linear::apply_gemm`]'s output — the sharding contract the
+    /// matvec stitching tests pin down).
+    fn apply_gemm_cols(&self, xs: &[Vec<f32>], c0: usize, c1: usize) -> Vec<Vec<f32>> {
+        match self {
+            Linear::Dense(w) => dense_matmul_cols(w, xs, c0, c1),
+            Linear::Quant { pm, plan, act } => plan.matgem_act_cols(pm, xs, *act, c0, c1),
+        }
+    }
+
+    /// Column-sharded apply: split the output columns into `workers`
+    /// contiguous ranges (`bounds[i] = i·cols/w`, the same fixed split
+    /// for a given `w` no matter the host), decode each range on its own
+    /// scoped worker, and stitch by concatenation.
+    ///
+    /// Bit-identity: stitching is a pure memcpy — no cross-worker FP
+    /// reduction exists, because every output column is computed whole by
+    /// exactly one worker through the same per-column kernel the pooled
+    /// sweep uses. The result is therefore bit-identical to
+    /// `apply_gemm(xs)` for EVERY worker count, which is what lets the
+    /// sharded backend honor the serve == generate token-identity
+    /// invariant.
+    ///
+    /// A worker panic propagates with its original payload
+    /// ([`scoped_map`]'s contract), so the serving scheduler's
+    /// `LaneFault` containment names the real site under sharding too.
+    fn apply_sharded(&self, xs: &[Vec<f32>], workers: usize) -> Vec<Vec<f32>> {
+        let cols = self.out_dim();
+        let w = workers.min(cols.max(1));
+        if w <= 1 || xs.is_empty() {
+            return self.apply_gemm(xs);
+        }
+        let bounds: Vec<usize> = (0..=w).map(|i| i * cols / w).collect();
+        let parts = scoped_map(w, |i| self.apply_gemm_cols(xs, bounds[i], bounds[i + 1]));
+        let mut ys: Vec<Vec<f32>> = xs.iter().map(|_| Vec::with_capacity(cols)).collect();
+        for part in parts {
+            for (lane, p) in ys.iter_mut().zip(part) {
+                lane.extend_from_slice(&p);
+            }
+        }
+        ys
+    }
+
+    /// Dispatch on the backend's execution shape.
+    fn apply(&self, xs: &[Vec<f32>], mode: GemmMode) -> Vec<Vec<f32>> {
+        match mode {
+            GemmMode::Full => self.apply_gemm(xs),
+            GemmMode::Sharded(w) => self.apply_sharded(xs, w),
         }
     }
 }
@@ -83,6 +162,11 @@ pub struct Engine {
     /// packed evaluator, so all three build identically-shaped caches
     /// (the serve == generate token-identity invariant needs this).
     kv: KvCacheConfig,
+    /// Execution backend every forward routes through — single-thread by
+    /// default; swap with [`Engine::with_backend`]. All backends are
+    /// bit-identical by contract (see [`crate::infer::backend`]), so
+    /// this choice affects wall-clock only, never tokens.
+    backend: Arc<dyn Backend>,
     embed: Tensor,
     pos: Tensor,
     layers: Vec<EngineLayer>,
@@ -145,6 +229,7 @@ impl Engine {
         let engine = Engine {
             config: w.config,
             kv: KvCacheConfig::dense(),
+            backend: Arc::new(SingleThread),
             embed: w.embed.clone(),
             pos: w.pos.clone(),
             layers,
@@ -197,6 +282,7 @@ impl Engine {
         Engine {
             config: w.config,
             kv: KvCacheConfig::dense(),
+            backend: Arc::new(SingleThread),
             embed: w.embed.clone(),
             pos: w.pos.clone(),
             layers,
@@ -213,6 +299,25 @@ impl Engine {
     pub fn with_kv_config(mut self, kv: KvCacheConfig) -> Engine {
         self.kv = kv;
         self
+    }
+
+    /// Install an execution backend (builder style): single-thread
+    /// ([`crate::infer::backend::SingleThread`], the default),
+    /// column-sharded ([`crate::infer::backend::ColumnSharded`]), or
+    /// layer-pipeline ([`crate::infer::backend::LayerPipeline`]). Every
+    /// forward — `generate`, prefill, decode, serving, speculative
+    /// verify — routes through it. Backends are bit-identical by
+    /// contract, so swapping one in changes wall-clock, never tokens;
+    /// the sharding test suite pins this for W ∈ {1, 2, 4} on both
+    /// shard axes.
+    pub fn with_backend(mut self, backend: impl Backend + 'static) -> Engine {
+        self.backend = Arc::new(backend);
+        self
+    }
+
+    /// Name of the installed execution backend (diagnostics/benches).
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     /// Install an activation-quantization spec (builder style): every
@@ -430,22 +535,53 @@ impl Engine {
     /// return all N = ΣT hidden rows (lane-major, pre-final-LN).
     /// `row_off` must be `row_offsets(chunks)` — passed in so the caller
     /// indexes the returned rows with the exact layout used here.
+    ///
+    /// Routes through the installed [`Backend`]; the pieces a backend
+    /// composes are [`Engine::embed_rows`], [`Engine::run_layers`], and
+    /// [`advance_clock`], with [`Engine::forward_chunk_mode`] as the
+    /// whole-forward shortcut.
     fn forward_chunk(
         &self,
         chunks: &[&[u32]],
         caches: &mut [KvCache],
         row_off: &[usize],
     ) -> Vec<Vec<f32>> {
-        let cfg = &self.config;
-        let (e, hds, dh) = (cfg.dim, cfg.heads, cfg.head_dim());
+        let backend = Arc::clone(&self.backend);
+        backend.forward_chunk(self, chunks, caches, row_off)
+    }
+
+    /// One whole forward (embed → all layers → clock advance) with every
+    /// linear executed under `mode` — the single-process backends are
+    /// thin wrappers over this.
+    pub(crate) fn forward_chunk_mode(
+        &self,
+        chunks: &[&[u32]],
+        caches: &mut [KvCache],
+        row_off: &[usize],
+        mode: GemmMode,
+    ) -> Vec<Vec<f32>> {
         debug_assert_eq!(row_off, row_offsets(chunks).as_slice());
         let n = *row_off.last().unwrap();
         if n == 0 {
             return Vec::new();
         }
+        let (xs, row_win) = self.embed_rows(chunks, caches);
+        let xs = self.run_layers(0, self.layers.len(), xs, &row_win, caches, row_off, mode);
+        advance_clock(chunks, caches);
+        xs
+    }
 
-        // Embedding + positions; record each row's (lane, causal window
-        // end) for attention.
+    /// Embedding + positions for every chunk position; returns the N
+    /// hidden rows and each row's `(lane, causal window end)` for
+    /// attention. Pure read of the caches (clocks advance only in
+    /// [`advance_clock`], after all layers have run).
+    pub(crate) fn embed_rows(
+        &self,
+        chunks: &[&[u32]],
+        caches: &[KvCache],
+    ) -> (Vec<Vec<f32>>, Vec<(usize, usize)>) {
+        let cfg = &self.config;
+        let n: usize = chunks.iter().map(|c| c.len()).sum();
         let mut xs: Vec<Vec<f32>> = Vec::with_capacity(n);
         let mut row_win: Vec<(usize, usize)> = Vec::with_capacity(n);
         for (b, (chunk, cache)) in chunks.iter().zip(caches.iter()).enumerate() {
@@ -476,22 +612,50 @@ impl Engine {
                 row_win.push((b, base + p + 1));
             }
         }
+        (xs, row_win)
+    }
 
-        for (li, l) in self.layers.iter().enumerate() {
+    /// Run transformer blocks `lo..hi` over the hidden rows: per-layer
+    /// LN → Q/K/V projections → K/V append (absolute layer index) →
+    /// causal attention → output/MLP projections, all linears executed
+    /// under `mode`. `row_win` must be lane-rebased to THESE
+    /// chunks/caches (the layer-pipeline backend hands each micro-batch
+    /// a cache sub-slice); `row_off` likewise. Caches' `len` clocks are
+    /// NOT advanced — a pipeline stage runs only its layer span, and
+    /// every stage's `embed`-time `cache.len` must mean the same prefix
+    /// length, so the clock moves once per forward in [`advance_clock`].
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn run_layers(
+        &self,
+        lo: usize,
+        hi: usize,
+        mut xs: Vec<Vec<f32>>,
+        row_win: &[(usize, usize)],
+        caches: &mut [KvCache],
+        row_off: &[usize],
+        mode: GemmMode,
+    ) -> Vec<Vec<f32>> {
+        let cfg = &self.config;
+        let (e, hds, dh) = (cfg.dim, cfg.heads, cfg.head_dim());
+        let n = xs.len();
+        debug_assert_eq!(n, row_win.len());
+        debug_assert!(lo <= hi && hi <= self.layers.len());
+        for (off, l) in self.layers[lo..hi].iter().enumerate() {
+            let li = lo + off;
             let a: Vec<Vec<f32>> = xs.iter().map(|x| ln_vec(x, &l.ln1_g, &l.ln1_b)).collect();
-            let mut q = l.wq.apply_gemm(&a);
+            let mut q = l.wq.apply(&a, mode);
             for qb in q.iter_mut() {
                 for (qv, &b) in qb.iter_mut().zip(&l.bq) {
                     *qv += b;
                 }
             }
-            let mut k = l.wk.apply_gemm(&a);
+            let mut k = l.wk.apply(&a, mode);
             for kb in k.iter_mut() {
                 for (kv, &b) in kb.iter_mut().zip(&l.bk) {
                     *kv += b;
                 }
             }
-            let mut v = l.wv.apply_gemm(&a);
+            let mut v = l.wv.apply(&a, mode);
             for vb in v.iter_mut() {
                 for (vv, &b) in vb.iter_mut().zip(&l.bv) {
                     *vv += b;
@@ -525,7 +689,7 @@ impl Engine {
                 transformer::attend_kv(&q[r], &krows, &vrows, win, e, hds, dh)
             });
 
-            let attn = l.wo.apply_gemm(&ctx_all);
+            let attn = l.wo.apply(&ctx_all, mode);
             for (r, x) in xs.iter_mut().enumerate() {
                 for ((xv, &av), &bias) in x.iter_mut().zip(&attn[r]).zip(&l.bo) {
                     *xv += av + bias;
@@ -533,23 +697,26 @@ impl Engine {
             }
 
             let bnorm: Vec<Vec<f32>> = xs.iter().map(|x| ln_vec(x, &l.ln2_g, &l.ln2_b)).collect();
-            let mut u = l.w1.apply_gemm(&bnorm);
+            let mut u = l.w1.apply(&bnorm, mode);
             for ub in u.iter_mut() {
                 for (uv, &b) in ub.iter_mut().zip(&l.b1) {
                     *uv = gelu(*uv + b);
                 }
             }
-            let mm = l.w2.apply_gemm(&u);
+            let mm = l.w2.apply(&u, mode);
             for (r, x) in xs.iter_mut().enumerate() {
                 for ((xv, &mv), &bias) in x.iter_mut().zip(&mm[r]).zip(&l.b2) {
                     *xv += mv + bias;
                 }
             }
         }
-        for (chunk, cache) in chunks.iter().zip(caches.iter_mut()) {
-            cache.len += chunk.len();
-        }
         xs
+    }
+
+    /// Number of transformer blocks (the layer-pipeline backend's
+    /// partition axis).
+    pub(crate) fn num_layers(&self) -> usize {
+        self.layers.len()
     }
 
     /// Admission rule shared by [`Engine::generate`] and the serving
@@ -640,9 +807,21 @@ impl Engine {
     }
 }
 
+/// Advance every lane's KV clock by its chunk length — the one place a
+/// forward commits its appended rows. Runs once per forward, after ALL
+/// layers (pipeline stages included) have appended: `cache.len` must
+/// mean "fully materialized prefix" at every layer, both for attention
+/// windows and for the scheduler's `truncate_to(pre_len)` rollback rule
+/// (rows past `len` are dangling and reclaimable).
+pub(crate) fn advance_clock(chunks: &[&[u32]], caches: &mut [KvCache]) {
+    for (chunk, cache) in chunks.iter().zip(caches.iter_mut()) {
+        cache.len += chunk.len();
+    }
+}
+
 /// Prefix sums of chunk lengths: lane `b`'s rows in a flattened
 /// lane-major chunk batch are `row_off[b]..row_off[b + 1]`.
-fn row_offsets(chunks: &[&[u32]]) -> Vec<usize> {
+pub(crate) fn row_offsets(chunks: &[&[u32]]) -> Vec<usize> {
     let mut off = Vec::with_capacity(chunks.len() + 1);
     let mut acc = 0usize;
     off.push(0);

@@ -234,48 +234,13 @@ impl MatvecPlan {
         for x in xs {
             assert_eq!(x.len(), pm.rows);
         }
-        let m = pm.grouping.m;
-        let flat = self.flat_rows.len();
-        // Permute all B activations into code-stream order (fold the AWQ
-        // row scale), interleaved batch-minor.
-        let mut xp = vec![0f32; flat * bn];
-        match &pm.row_scale {
-            Some(s) => {
-                for (i, &r) in self.flat_rows.iter().enumerate() {
-                    let inv = 1.0 / s[r as usize];
-                    for (b, x) in xs.iter().enumerate() {
-                        xp[i * bn + b] = x[r as usize] * inv;
-                    }
-                }
-            }
-            None => {
-                for (i, &r) in self.flat_rows.iter().enumerate() {
-                    for (b, x) in xs.iter().enumerate() {
-                        xp[i * bn + b] = x[r as usize];
-                    }
-                }
-            }
-        }
-        // Per-(sub-group, lane) partial sums for the factored mean term.
-        let mut sum_x = vec![0f32; m * bn];
-        for sub in 0..m {
-            let acc = &mut sum_x[sub * bn..(sub + 1) * bn];
-            for i in self.sub_offsets[sub]..self.sub_offsets[sub + 1] {
-                let row = &xp[i * bn..(i + 1) * bn];
-                for (a, &v) in acc.iter_mut().zip(row) {
-                    *a += v;
-                }
-            }
-        }
+        let (xp, sum_x) = self.prepare_f32(pm, xs);
 
         // Output, column-major × batch-minor; columns are chunked across
         // the pool with disjoint writes.
         let mut yflat = vec![0f32; pm.cols * bn];
         let y_ptr = SendMut(yflat.as_mut_ptr());
-        let words = &self.padded_words;
-        #[cfg(target_arch = "x86_64")]
-        let simd_ok = std::arch::is_x86_feature_detected!("avx2")
-            && std::arch::is_x86_feature_detected!("fma");
+        let simd_ok = simd_avx2_fma();
         // Per-column work scales with B, so shrink the minimum chunk as
         // the batch grows (chunking never affects numerics — each column
         // is computed whole by one lane).
@@ -285,85 +250,7 @@ impl MatvecPlan {
             let mut colacc = vec![0f32; bn];
             let mut dotacc = vec![0f32; bn];
             for col in c0..c1 {
-                let mut pos = pm.col_bit_offset[col];
-                colacc.iter_mut().for_each(|v| *v = 0.0);
-                for sub in 0..m {
-                    let gm = pm.meta[col * m + sub];
-                    if gm.bits == 0 {
-                        continue; // pruned: contributes nothing
-                    }
-                    let start = self.sub_offsets[sub];
-                    let end = self.sub_offsets[sub + 1];
-                    let glen = end - start;
-                    let bits = gm.bits as usize;
-                    let lut = &self.luts[bits][..];
-                    dotacc.iter_mut().for_each(|v| *v = 0.0);
-                    let group_x = &xp[start * bn..end * bn];
-                    // Widened AVX2 small-LUT path: decode 8 codes per
-                    // `vpermps`, then broadcast each dequantized weight
-                    // against all B lanes (unfused mul+add, preserving
-                    // the scalar op order per lane). The decode side is
-                    // lane-count independent, so this runs at every
-                    // batch size — B < 8 just uses the scalar lane tail.
-                    #[cfg(target_arch = "x86_64")]
-                    if bits <= 3 && simd_ok && glen >= 8 {
-                        pos = unsafe {
-                            gemm_avx2_small_lut(words, pos, group_x, bn, bits, lut, &mut dotacc)
-                        };
-                        for b in 0..bn {
-                            colacc[b] += gm.scale * dotacc[b] + gm.mean * sum_x[sub * bn + b];
-                        }
-                        continue;
-                    }
-                    // Generic path: 128-bit window decode (k = 64/bits
-                    // codes per load) + one length-B AXPY per weight.
-                    let mask = ((1u64 << bits) - 1) as u128;
-                    let k = 64 / bits;
-                    let mut i = 0usize;
-                    while i + k <= glen {
-                        let wi = pos >> 6;
-                        let off = pos & 63;
-                        // SAFETY: padded_words has 2 spare words.
-                        let lo = unsafe { *words.get_unchecked(wi) } as u128;
-                        let hi = unsafe { *words.get_unchecked(wi + 1) } as u128;
-                        let win = (lo | (hi << 64)) >> off;
-                        for j in 0..k {
-                            let c = ((win >> (j * bits)) & mask) as usize;
-                            // SAFETY: codes are < 2^bits = lut.len().
-                            let wv = unsafe { *lut.get_unchecked(c) };
-                            if bn == 1 {
-                                // Batch-1 specialization: same multiply-add
-                                // in the same order, minus the per-weight
-                                // slice bookkeeping.
-                                // SAFETY: i + j < glen and group_x has
-                                // glen elements when bn == 1.
-                                dotacc[0] += wv * unsafe { *group_x.get_unchecked(i + j) };
-                            } else {
-                                let row = &group_x[(i + j) * bn..(i + j + 1) * bn];
-                                for (a, &x) in dotacc.iter_mut().zip(row) {
-                                    *a += wv * x;
-                                }
-                            }
-                        }
-                        pos += k * bits;
-                        i += k;
-                    }
-                    // Tail.
-                    let mut cur = Cursor::new(words, pos);
-                    while i < glen {
-                        let c = cur.next(gm.bits as u32, mask as u64);
-                        let wv = lut[c];
-                        let row = &group_x[i * bn..(i + 1) * bn];
-                        for (a, &x) in dotacc.iter_mut().zip(row) {
-                            *a += wv * x;
-                        }
-                        i += 1;
-                    }
-                    pos = cur.pos;
-                    for b in 0..bn {
-                        colacc[b] += gm.scale * dotacc[b] + gm.mean * sum_x[sub * bn + b];
-                    }
-                }
+                self.gemm_col(pm, col, &xp, &sum_x, bn, simd_ok, &mut colacc, &mut dotacc);
                 for (b, &v) in colacc.iter().enumerate() {
                     // SAFETY: disjoint column ranges across chunks.
                     unsafe { *y_ptr.0.add(col * bn + b) = v };
@@ -388,6 +275,243 @@ impl MatvecPlan {
             }
         }
         ys
+    }
+
+    /// Column-range variant of [`MatvecPlan::matmul`] — the tensor-parallel
+    /// serving seam: computes only columns `c0..c1`, returning per-lane
+    /// vectors of length `c1 − c0`.
+    ///
+    /// Bit-identity contract: `matmul_cols(pm, xs, c0, c1)[b][j]` equals
+    /// `matmul(pm, xs)[b][c0 + j]` bit for bit, because every output
+    /// column is computed whole by [`MatvecPlan::gemm_col`] — the one
+    /// per-column kernel both entry points share — and the FP16
+    /// exception-row pass visits the same rows in the same order over the
+    /// `c0..c1` slice of each row. Concatenating the per-worker ranges of
+    /// a column-sharded GEMM is therefore a pure memcpy, never a
+    /// cross-worker floating-point reduction, which is what keeps sharded
+    /// serving logits independent of the worker count W.
+    pub fn matmul_cols(
+        &self,
+        pm: &PackedMatrix,
+        xs: &[Vec<f32>],
+        c0: usize,
+        c1: usize,
+    ) -> Vec<Vec<f32>> {
+        let bn = xs.len();
+        if bn == 0 {
+            return Vec::new();
+        }
+        debug_assert_eq!(pm.rows, self.rows);
+        debug_assert_eq!(pm.cols, self.cols);
+        assert!(c0 <= c1 && c1 <= pm.cols, "column range {c0}..{c1} out of 0..{}", pm.cols);
+        for x in xs {
+            assert_eq!(x.len(), pm.rows);
+        }
+        if c0 == c1 {
+            return vec![Vec::new(); bn];
+        }
+        let (xp, sum_x) = self.prepare_f32(pm, xs);
+        let simd_ok = simd_avx2_fma();
+        // Serial over the range: the workers sharing this matrix ARE the
+        // parallelism, and each column's op order is internal to
+        // `gemm_col` either way.
+        let mut ys: Vec<Vec<f32>> = vec![vec![0f32; c1 - c0]; bn];
+        let mut colacc = vec![0f32; bn];
+        let mut dotacc = vec![0f32; bn];
+        for col in c0..c1 {
+            self.gemm_col(pm, col, &xp, &sum_x, bn, simd_ok, &mut colacc, &mut dotacc);
+            for (b, &v) in colacc.iter().enumerate() {
+                ys[b][col - c0] = v;
+            }
+        }
+        // FP16 exception rows, restricted to this range's column slice
+        // (same row order and zero-skip as the full-width pass).
+        for (r, vals) in &pm.fp_rows {
+            for (b, x) in xs.iter().enumerate() {
+                let xv = x[*r as usize];
+                if xv == 0.0 {
+                    continue;
+                }
+                for (yj, &wv) in ys[b].iter_mut().zip(&vals[c0..c1]) {
+                    *yj += xv * wv;
+                }
+            }
+        }
+        ys
+    }
+
+    /// Permute all B activations into code-stream order (folding the AWQ
+    /// row scale), interleaved batch-minor (`xp[i·B + b]`), plus the
+    /// per-(sub-group, lane) partial sums for the factored mean term —
+    /// the column-independent preamble shared by [`MatvecPlan::matmul`]
+    /// and [`MatvecPlan::matmul_cols`]. Column-sharded workers each
+    /// recompute it; the values (and their op order) never depend on
+    /// which columns a worker owns.
+    fn prepare_f32(&self, pm: &PackedMatrix, xs: &[Vec<f32>]) -> (Vec<f32>, Vec<f32>) {
+        let bn = xs.len();
+        let m = pm.grouping.m;
+        let flat = self.flat_rows.len();
+        let mut xp = vec![0f32; flat * bn];
+        match &pm.row_scale {
+            Some(s) => {
+                for (i, &r) in self.flat_rows.iter().enumerate() {
+                    let inv = 1.0 / s[r as usize];
+                    for (b, x) in xs.iter().enumerate() {
+                        xp[i * bn + b] = x[r as usize] * inv;
+                    }
+                }
+            }
+            None => {
+                for (i, &r) in self.flat_rows.iter().enumerate() {
+                    for (b, x) in xs.iter().enumerate() {
+                        xp[i * bn + b] = x[r as usize];
+                    }
+                }
+            }
+        }
+        let mut sum_x = vec![0f32; m * bn];
+        for sub in 0..m {
+            let acc = &mut sum_x[sub * bn..(sub + 1) * bn];
+            for i in self.sub_offsets[sub]..self.sub_offsets[sub + 1] {
+                let row = &xp[i * bn..(i + 1) * bn];
+                for (a, &v) in acc.iter_mut().zip(row) {
+                    *a += v;
+                }
+            }
+        }
+        (xp, sum_x)
+    }
+
+    /// Decode ONE column's code stream against the prepared activations:
+    /// `colacc[b] = Σ_sub (scale·dot_b + mean·sum_x_b)`. This is THE
+    /// per-column f32 kernel — the pooled full-width sweep (`matmul`)
+    /// and the worker-sharded range sweep (`matmul_cols`) both call it,
+    /// which is what makes column sharding bit-identical: an output
+    /// column's FP op order lives entirely inside this function and
+    /// never depends on which worker, chunk, or range computed it.
+    #[allow(unused_variables)] // simd_ok is read on x86_64 only
+    fn gemm_col(
+        &self,
+        pm: &PackedMatrix,
+        col: usize,
+        xp: &[f32],
+        sum_x: &[f32],
+        bn: usize,
+        simd_ok: bool,
+        colacc: &mut [f32],
+        dotacc: &mut [f32],
+    ) {
+        let m = pm.grouping.m;
+        let words = &self.padded_words;
+        let mut pos = pm.col_bit_offset[col];
+        colacc.iter_mut().for_each(|v| *v = 0.0);
+        for sub in 0..m {
+            let gm = pm.meta[col * m + sub];
+            if gm.bits == 0 {
+                continue; // pruned: contributes nothing
+            }
+            let start = self.sub_offsets[sub];
+            let end = self.sub_offsets[sub + 1];
+            let glen = end - start;
+            let bits = gm.bits as usize;
+            let lut = &self.luts[bits][..];
+            dotacc.iter_mut().for_each(|v| *v = 0.0);
+            let group_x = &xp[start * bn..end * bn];
+            // Widened AVX2 small-LUT path: decode 8 codes per
+            // `vpermps`, then broadcast each dequantized weight
+            // against all B lanes (unfused mul+add, preserving
+            // the scalar op order per lane). The decode side is
+            // lane-count independent, so this runs at every
+            // batch size — B < 8 just uses the scalar lane tail.
+            #[cfg(target_arch = "x86_64")]
+            if bits <= 3 && simd_ok && glen >= 8 {
+                pos = unsafe {
+                    gemm_avx2_small_lut(words, pos, group_x, bn, bits, lut, dotacc)
+                };
+                for b in 0..bn {
+                    colacc[b] += gm.scale * dotacc[b] + gm.mean * sum_x[sub * bn + b];
+                }
+                continue;
+            }
+            // Generic path: 128-bit window decode (k = 64/bits
+            // codes per load) + one length-B AXPY per weight.
+            let mask = ((1u64 << bits) - 1) as u128;
+            let k = 64 / bits;
+            let mut i = 0usize;
+            while i + k <= glen {
+                let wi = pos >> 6;
+                let off = pos & 63;
+                // SAFETY: padded_words has 2 spare words.
+                let lo = unsafe { *words.get_unchecked(wi) } as u128;
+                let hi = unsafe { *words.get_unchecked(wi + 1) } as u128;
+                let win = (lo | (hi << 64)) >> off;
+                for j in 0..k {
+                    let c = ((win >> (j * bits)) & mask) as usize;
+                    // SAFETY: codes are < 2^bits = lut.len().
+                    let wv = unsafe { *lut.get_unchecked(c) };
+                    if bn == 1 {
+                        // Batch-1 specialization: same multiply-add
+                        // in the same order, minus the per-weight
+                        // slice bookkeeping.
+                        // SAFETY: i + j < glen and group_x has
+                        // glen elements when bn == 1.
+                        dotacc[0] += wv * unsafe { *group_x.get_unchecked(i + j) };
+                    } else {
+                        let row = &group_x[(i + j) * bn..(i + j + 1) * bn];
+                        for (a, &x) in dotacc.iter_mut().zip(row) {
+                            *a += wv * x;
+                        }
+                    }
+                }
+                pos += k * bits;
+                i += k;
+            }
+            // Tail.
+            let mut cur = Cursor::new(words, pos);
+            while i < glen {
+                let c = cur.next(gm.bits as u32, mask as u64);
+                let wv = lut[c];
+                let row = &group_x[i * bn..(i + 1) * bn];
+                for (a, &x) in dotacc.iter_mut().zip(row) {
+                    *a += wv * x;
+                }
+                i += 1;
+            }
+            pos = cur.pos;
+            for b in 0..bn {
+                colacc[b] += gm.scale * dotacc[b] + gm.mean * sum_x[sub * bn + b];
+            }
+        }
+    }
+}
+
+/// Runtime AVX2+FMA detection shared by the f32 GEMM entry points (the
+/// sharded and pooled sweeps must agree on the kernel they pick — they
+/// do by construction: detection is a pure function of the host).
+#[inline]
+fn simd_avx2_fma() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Runtime AVX2 detection for the integer W·A kernel (no FMA needed —
+/// and irrelevant to numerics either way, since `int_axpy`'s vector and
+/// scalar variants are exactly equal).
+#[inline]
+fn simd_avx2() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
     }
 }
 
@@ -424,6 +548,25 @@ impl MatvecPlan {
         let mut ys = Vec::with_capacity(xs.len());
         for tile in xs.chunks(GEMM_ROW_TILE) {
             ys.append(&mut self.matmul(pm, tile));
+        }
+        ys
+    }
+
+    /// Column-range variant of [`MatvecPlan::matgem`]: rows are tiled by
+    /// [`GEMM_ROW_TILE`] exactly as in the full-width sweep (tiling and
+    /// column range are independent axes), each tile computed over
+    /// `c0..c1` via [`MatvecPlan::matmul_cols`]. Bit-identical to the
+    /// `c0..c1` slice of `matgem`'s output.
+    pub fn matgem_cols(
+        &self,
+        pm: &PackedMatrix,
+        xs: &[Vec<f32>],
+        c0: usize,
+        c1: usize,
+    ) -> Vec<Vec<f32>> {
+        let mut ys = Vec::with_capacity(xs.len());
+        for tile in xs.chunks(GEMM_ROW_TILE) {
+            ys.append(&mut self.matmul_cols(pm, tile, c0, c1));
         }
         ys
     }
@@ -488,6 +631,117 @@ impl MatvecPlan {
         for x in xs {
             assert_eq!(x.len(), pm.rows);
         }
+        let (xq, s_x, sum_xc) = self.prepare_int(pm, xs, act);
+
+        let mut yflat = vec![0f32; pm.cols * bn];
+        let y_ptr = SendMut(yflat.as_mut_ptr());
+        let simd = simd_avx2();
+        let min_cols = (128 / bn).max(8);
+        parallel_for_chunks(pm.cols, min_cols, |c0, c1| {
+            let y_ptr = y_ptr;
+            let mut colacc = vec![0f32; bn];
+            let mut dotacc = vec![0i32; bn];
+            for col in c0..c1 {
+                self.gemm_int_col(pm, col, &xq, &sum_xc, bn, simd, &mut colacc, &mut dotacc);
+                for (b, &v) in colacc.iter().enumerate() {
+                    // SAFETY: disjoint column ranges across chunks.
+                    unsafe { *y_ptr.0.add(col * bn + b) = v * s_x[b] };
+                }
+            }
+        });
+        let mut ys: Vec<Vec<f32>> = (0..bn)
+            .map(|b| (0..pm.cols).map(|col| yflat[col * bn + b]).collect())
+            .collect();
+        // FP16 exception rows: dense contribution with the ORIGINAL f32 x.
+        for (r, vals) in &pm.fp_rows {
+            for (b, x) in xs.iter().enumerate() {
+                let xv = x[*r as usize];
+                if xv == 0.0 {
+                    continue;
+                }
+                for (yj, &wv) in ys[b].iter_mut().zip(vals) {
+                    *yj += xv * wv;
+                }
+            }
+        }
+        ys
+    }
+
+    /// Column-range variant of [`MatvecPlan::matmul_int`] — bit-identical
+    /// to the `c0..c1` slice of the full-width result for the same reason
+    /// as [`MatvecPlan::matmul_cols`]: activation quantization and the
+    /// factored code sums are column-independent (and exact integer),
+    /// and each output column runs whole through
+    /// [`MatvecPlan::gemm_int_col`], the kernel shared with the pooled
+    /// sweep.
+    pub fn matmul_int_cols(
+        &self,
+        pm: &PackedMatrix,
+        xs: &[Vec<f32>],
+        act: ActQuantParams,
+        c0: usize,
+        c1: usize,
+    ) -> Vec<Vec<f32>> {
+        let bn = xs.len();
+        if bn == 0 {
+            return Vec::new();
+        }
+        assert_eq!(
+            pm.mode,
+            QuantMode::Uniform,
+            "matmul_int_cols requires an affine (Uniform) code LUT"
+        );
+        assert!(act.bits >= 2, "matmul_int_cols called with a full-precision act spec");
+        debug_assert_eq!(pm.rows, self.rows);
+        debug_assert_eq!(pm.cols, self.cols);
+        assert!(c0 <= c1 && c1 <= pm.cols, "column range {c0}..{c1} out of 0..{}", pm.cols);
+        for x in xs {
+            assert_eq!(x.len(), pm.rows);
+        }
+        if c0 == c1 {
+            return vec![Vec::new(); bn];
+        }
+        let (xq, s_x, sum_xc) = self.prepare_int(pm, xs, act);
+        let simd = simd_avx2();
+        let mut ys: Vec<Vec<f32>> = vec![vec![0f32; c1 - c0]; bn];
+        let mut colacc = vec![0f32; bn];
+        let mut dotacc = vec![0i32; bn];
+        for col in c0..c1 {
+            self.gemm_int_col(pm, col, &xq, &sum_xc, bn, simd, &mut colacc, &mut dotacc);
+            for (b, &v) in colacc.iter().enumerate() {
+                ys[b][col - c0] = v * s_x[b];
+            }
+        }
+        // FP16 exception rows over this range's column slice, with the
+        // ORIGINAL f32 x (same order as the full-width pass).
+        for (r, vals) in &pm.fp_rows {
+            for (b, x) in xs.iter().enumerate() {
+                let xv = x[*r as usize];
+                if xv == 0.0 {
+                    continue;
+                }
+                for (yj, &wv) in ys[b].iter_mut().zip(&vals[c0..c1]) {
+                    *yj += xv * wv;
+                }
+            }
+        }
+        ys
+    }
+
+    /// Quantize every lane's (AWQ-folded, code-stream-permuted) row and
+    /// compute the per-(sub-group, lane) integer code sums — the
+    /// column-independent preamble shared by [`MatvecPlan::matmul_int`]
+    /// and [`MatvecPlan::matmul_int_cols`]. Returns `(xq, s_x, sum_xc)`:
+    /// batch-minor i32 codes, per-lane dequant scales, and the factored
+    /// mean/offset sums (all exact, so worker-recomputation is free of
+    /// rounding concerns by construction).
+    fn prepare_int(
+        &self,
+        pm: &PackedMatrix,
+        xs: &[Vec<f32>],
+        act: ActQuantParams,
+    ) -> (Vec<i32>, Vec<f32>, Vec<i32>) {
+        let bn = xs.len();
         let m = pm.grouping.m;
         let flat = self.flat_rows.len();
         let qmax = act.qmax();
@@ -534,98 +788,84 @@ impl MatvecPlan {
                 }
             }
         }
+        (xq, s_x, sum_xc)
+    }
 
-        let mut yflat = vec![0f32; pm.cols * bn];
-        let y_ptr = SendMut(yflat.as_mut_ptr());
+    /// Decode ONE column's code stream against the quantized activations
+    /// (integer dot + one f32 combine per group) — the per-column kernel
+    /// shared by the pooled and sharded integer sweeps, mirroring
+    /// [`MatvecPlan::gemm_col`]. `colacc` holds the un-scaled result
+    /// (caller applies the per-lane `s_x[b]`).
+    #[allow(clippy::too_many_arguments)]
+    fn gemm_int_col(
+        &self,
+        pm: &PackedMatrix,
+        col: usize,
+        xq: &[i32],
+        sum_xc: &[i32],
+        bn: usize,
+        simd: bool,
+        colacc: &mut [f32],
+        dotacc: &mut [i32],
+    ) {
+        let m = pm.grouping.m;
         let words = &self.padded_words;
-        #[cfg(target_arch = "x86_64")]
-        let simd = std::arch::is_x86_feature_detected!("avx2");
-        #[cfg(not(target_arch = "x86_64"))]
-        let simd = false;
-        let min_cols = (128 / bn).max(8);
-        parallel_for_chunks(pm.cols, min_cols, |c0, c1| {
-            let y_ptr = y_ptr;
-            let mut colacc = vec![0f32; bn];
-            let mut dotacc = vec![0i32; bn];
-            for col in c0..c1 {
-                let mut pos = pm.col_bit_offset[col];
-                colacc.iter_mut().for_each(|v| *v = 0.0);
-                for sub in 0..m {
-                    let gm = pm.meta[col * m + sub];
-                    if gm.bits == 0 {
-                        continue; // pruned: contributes nothing
-                    }
-                    let start = self.sub_offsets[sub];
-                    let end = self.sub_offsets[sub + 1];
-                    let glen = end - start;
-                    let bits = gm.bits as usize;
-                    dotacc.iter_mut().for_each(|v| *v = 0);
-                    let group_x = &xq[start * bn..end * bn];
-                    // 128-bit window decode (k = 64/bits codes per load),
-                    // then one length-B integer AXPY per weight code.
-                    let mask = ((1u64 << bits) - 1) as u128;
-                    let k = 64 / bits;
-                    let mut i = 0usize;
-                    while i + k <= glen {
-                        let wi = pos >> 6;
-                        let off = pos & 63;
-                        // SAFETY: padded_words has 2 spare words.
-                        let lo = unsafe { *words.get_unchecked(wi) } as u128;
-                        let hi = unsafe { *words.get_unchecked(wi + 1) } as u128;
-                        let win = (lo | (hi << 64)) >> off;
-                        for j in 0..k {
-                            let c = ((win >> (j * bits)) & mask) as i32;
-                            if bn == 1 {
-                                // SAFETY: i + j < glen = group_x.len().
-                                dotacc[0] += c * unsafe { *group_x.get_unchecked(i + j) };
-                            } else {
-                                let row = &group_x[(i + j) * bn..(i + j + 1) * bn];
-                                int_axpy(c, row, &mut dotacc, simd);
-                            }
-                        }
-                        pos += k * bits;
-                        i += k;
-                    }
-                    // Tail.
-                    let mut cur = Cursor::new(words, pos);
-                    while i < glen {
-                        let c = cur.next(gm.bits as u32, mask as u64) as i32;
-                        let row = &group_x[i * bn..(i + 1) * bn];
-                        int_axpy(c, row, &mut dotacc, simd);
-                        i += 1;
-                    }
-                    pos = cur.pos;
-                    // One f32 combine per (group, lane): the Uniform LUT
-                    // offset off − 0.5 = 2^(B−1) − 0.5.
-                    let offm = (1i64 << (bits - 1)) as f32 - 0.5;
-                    for b in 0..bn {
-                        let d = dotacc[b] as f32;
-                        let s = sum_xc[sub * bn + b] as f32;
-                        colacc[b] += gm.scale * (d - offm * s) + gm.mean * s;
-                    }
-                }
-                for (b, &v) in colacc.iter().enumerate() {
-                    // SAFETY: disjoint column ranges across chunks.
-                    unsafe { *y_ptr.0.add(col * bn + b) = v * s_x[b] };
-                }
+        let mut pos = pm.col_bit_offset[col];
+        colacc.iter_mut().for_each(|v| *v = 0.0);
+        for sub in 0..m {
+            let gm = pm.meta[col * m + sub];
+            if gm.bits == 0 {
+                continue; // pruned: contributes nothing
             }
-        });
-        let mut ys: Vec<Vec<f32>> = (0..bn)
-            .map(|b| (0..pm.cols).map(|col| yflat[col * bn + b]).collect())
-            .collect();
-        // FP16 exception rows: dense contribution with the ORIGINAL f32 x.
-        for (r, vals) in &pm.fp_rows {
-            for (b, x) in xs.iter().enumerate() {
-                let xv = x[*r as usize];
-                if xv == 0.0 {
-                    continue;
+            let start = self.sub_offsets[sub];
+            let end = self.sub_offsets[sub + 1];
+            let glen = end - start;
+            let bits = gm.bits as usize;
+            dotacc.iter_mut().for_each(|v| *v = 0);
+            let group_x = &xq[start * bn..end * bn];
+            // 128-bit window decode (k = 64/bits codes per load),
+            // then one length-B integer AXPY per weight code.
+            let mask = ((1u64 << bits) - 1) as u128;
+            let k = 64 / bits;
+            let mut i = 0usize;
+            while i + k <= glen {
+                let wi = pos >> 6;
+                let off = pos & 63;
+                // SAFETY: padded_words has 2 spare words.
+                let lo = unsafe { *words.get_unchecked(wi) } as u128;
+                let hi = unsafe { *words.get_unchecked(wi + 1) } as u128;
+                let win = (lo | (hi << 64)) >> off;
+                for j in 0..k {
+                    let c = ((win >> (j * bits)) & mask) as i32;
+                    if bn == 1 {
+                        // SAFETY: i + j < glen = group_x.len().
+                        dotacc[0] += c * unsafe { *group_x.get_unchecked(i + j) };
+                    } else {
+                        let row = &group_x[(i + j) * bn..(i + j + 1) * bn];
+                        int_axpy(c, row, dotacc, simd);
+                    }
                 }
-                for (yj, &wv) in ys[b].iter_mut().zip(vals) {
-                    *yj += xv * wv;
-                }
+                pos += k * bits;
+                i += k;
+            }
+            // Tail.
+            let mut cur = Cursor::new(words, pos);
+            while i < glen {
+                let c = cur.next(gm.bits as u32, mask as u64) as i32;
+                let row = &group_x[i * bn..(i + 1) * bn];
+                int_axpy(c, row, dotacc, simd);
+                i += 1;
+            }
+            pos = cur.pos;
+            // One f32 combine per (group, lane): the Uniform LUT
+            // offset off − 0.5 = 2^(B−1) − 0.5.
+            let offm = (1i64 << (bits - 1)) as f32 - 0.5;
+            for b in 0..bn {
+                let d = dotacc[b] as f32;
+                let s = sum_xc[sub * bn + b] as f32;
+                colacc[b] += gm.scale * (d - offm * s) + gm.mean * s;
             }
         }
-        ys
     }
 
     /// Sequence-parallel integer GEMM: [`MatvecPlan::matgem`] with the
@@ -700,6 +940,61 @@ impl MatvecPlan {
         let mut ys = Vec::with_capacity(xs.len());
         for tile in xs.chunks(GEMM_ROW_TILE) {
             ys.append(&mut self.matmul_act(pm, tile, act));
+        }
+        ys
+    }
+
+    /// Column-range variant of [`MatvecPlan::matmul_act`]: identical
+    /// routing (f32 / fully-integer / fake-quantized f32), each leg
+    /// dispatched to its `_cols` form. The fake-quantize step for
+    /// companded matrices is per-row and column-independent, so it
+    /// commutes with the range restriction.
+    pub fn matmul_act_cols(
+        &self,
+        pm: &PackedMatrix,
+        xs: &[Vec<f32>],
+        act: ActQuantParams,
+        c0: usize,
+        c1: usize,
+    ) -> Vec<Vec<f32>> {
+        if act.bits == 0 {
+            return self.matmul_cols(pm, xs, c0, c1);
+        }
+        if pm.mode == QuantMode::Uniform {
+            return self.matmul_int_cols(pm, xs, act, c0, c1);
+        }
+        let xf: Vec<Vec<f32>> = xs
+            .iter()
+            .map(|x| {
+                let (codes, s) = quantize_row(x, act);
+                let mut xq = dequantize_row(&codes, s);
+                for (r, _) in &pm.fp_rows {
+                    xq[*r as usize] = x[*r as usize];
+                }
+                xq
+            })
+            .collect();
+        self.matmul_cols(pm, &xf, c0, c1)
+    }
+
+    /// Column-range variant of [`MatvecPlan::matgem_act`] (same routing,
+    /// tiled by [`GEMM_ROW_TILE`] exactly as the full-width sweep). This
+    /// is the entry point a column-sharded worker calls per projection:
+    /// bit-identical to the `c0..c1` slice of `matgem_act`'s output.
+    pub fn matgem_act_cols(
+        &self,
+        pm: &PackedMatrix,
+        xs: &[Vec<f32>],
+        act: ActQuantParams,
+        c0: usize,
+        c1: usize,
+    ) -> Vec<Vec<f32>> {
+        if act.bits == 0 {
+            return self.matgem_cols(pm, xs, c0, c1);
+        }
+        let mut ys = Vec::with_capacity(xs.len());
+        for tile in xs.chunks(GEMM_ROW_TILE) {
+            ys.append(&mut self.matmul_act_cols(pm, tile, act, c0, c1));
         }
         ys
     }
@@ -1046,6 +1341,38 @@ pub fn dense_matmul(w: &Tensor, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
         }
     });
     split_rows(yflat, bn)
+}
+
+/// Column-range variant of [`dense_matmul`]: computes only columns
+/// `c0..c1` of the dense GEMM, serially (the sharded workers calling it
+/// are the parallelism). Bit-identical to the `c0..c1` slice of
+/// `dense_matmul`'s output: the per-lane row loop, zero-activation skip,
+/// and per-element multiply-add order over `w.row(i)[c0..c1]` are exactly
+/// the pooled sweep's — the pool's column chunking was already
+/// numerics-free, so restricting the range changes nothing.
+pub fn dense_matmul_cols(w: &Tensor, xs: &[Vec<f32>], c0: usize, c1: usize) -> Vec<Vec<f32>> {
+    let bn = xs.len();
+    if bn == 0 {
+        return Vec::new();
+    }
+    assert!(c0 <= c1 && c1 <= w.cols, "column range {c0}..{c1} out of 0..{}", w.cols);
+    for x in xs {
+        assert_eq!(x.len(), w.rows);
+    }
+    let mut ys: Vec<Vec<f32>> = vec![vec![0f32; c1 - c0]; bn];
+    for (b, x) in xs.iter().enumerate() {
+        let yslice = &mut ys[b][..];
+        for (i, &xv) in x.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let row = &w.row(i)[c0..c1];
+            for (yj, &wv) in yslice.iter_mut().zip(row) {
+                *yj += xv * wv;
+            }
+        }
+    }
+    ys
 }
 
 #[cfg(test)]
@@ -1514,5 +1841,87 @@ mod tests {
             assert_eq!(ys[b], y_ref, "lane {b}");
         }
         assert!(dense_matmul(&w, &[]).is_empty());
+    }
+
+    /// Stitch `[0, b1), [b1, b2), [b2, cols)` range results back together.
+    fn stitch(parts: Vec<Vec<Vec<f32>>>, bn: usize) -> Vec<Vec<f32>> {
+        let mut ys: Vec<Vec<f32>> = vec![Vec::new(); bn];
+        for part in parts {
+            for (b, lane) in part.into_iter().enumerate() {
+                ys[b].extend_from_slice(&lane);
+            }
+        }
+        ys
+    }
+
+    #[test]
+    fn matmul_cols_stitches_bit_identically() {
+        // The column-sharding contract: concatenated range results equal
+        // the full-width sweep EXACTLY, for both LUT modes, with AWQ
+        // row-scale / fp-rows / pruned groups in play (seed 176 hits
+        // those paths in random_packed), at uneven split points.
+        let mut rng = Rng::new(191);
+        for mode in [QuantMode::Companded, QuantMode::Uniform] {
+            let (_, pm) = random_packed(&mut rng, 96, 40, 3, mode);
+            let plan = MatvecPlan::new(&pm);
+            let xs = random_batch(&mut rng, 5, 96);
+            let full = plan.matmul(&pm, &xs);
+            for bounds in [vec![0, 40], vec![0, 13, 40], vec![0, 7, 29, 40]] {
+                let parts: Vec<_> = bounds
+                    .windows(2)
+                    .map(|wn| plan.matmul_cols(&pm, &xs, wn[0], wn[1]))
+                    .collect();
+                assert_eq!(stitch(parts, 5), full, "{mode:?} bounds {bounds:?}");
+            }
+            // Degenerate ranges.
+            assert_eq!(plan.matmul_cols(&pm, &xs, 17, 17), vec![Vec::<f32>::new(); 5]);
+            assert!(plan.matmul_cols(&pm, &[], 0, 40).is_empty());
+        }
+    }
+
+    #[test]
+    fn matgem_act_cols_stitches_bit_identically() {
+        // Same contract through the act-quant router (the engine's
+        // sharded entry point): integer leg on Uniform, fake-quant leg
+        // on Companded, plain leg at bits == 0 — with enough rows to
+        // cross a GEMM_ROW_TILE boundary.
+        let mut rng = Rng::new(192);
+        for (mode, bits) in [
+            (QuantMode::Uniform, 8u8),
+            (QuantMode::Companded, 8),
+            (QuantMode::Uniform, 0),
+        ] {
+            let a = if bits == 0 {
+                ActQuantParams::full_precision()
+            } else {
+                ActQuantParams::new(bits, ActScalePolicy::PerToken, 1.0)
+            };
+            let (_, pm) = random_packed(&mut rng, 64, 24, 3, mode);
+            let plan = MatvecPlan::new(&pm);
+            let xs = random_batch(&mut rng, GEMM_ROW_TILE + 3, 64);
+            let full = plan.matgem_act(&pm, &xs, a);
+            let parts = vec![
+                plan.matgem_act_cols(&pm, &xs, a, 0, 9),
+                plan.matgem_act_cols(&pm, &xs, a, 9, 24),
+            ];
+            assert_eq!(stitch(parts, xs.len()), full, "{mode:?} bits {bits}");
+        }
+    }
+
+    #[test]
+    fn dense_matmul_cols_stitches_bit_identically() {
+        let mut rng = Rng::new(193);
+        let (rows, cols) = (40, 21);
+        let mut w = Tensor::zeros(rows, cols);
+        rng.fill_gauss(&mut w.data, 0.0, 1.0);
+        let mut xs = random_batch(&mut rng, 4, rows);
+        xs[1][3] = 0.0; // exercise the zero-skip on the range path too
+        let full = dense_matmul(&w, &xs);
+        let parts = vec![
+            dense_matmul_cols(&w, &xs, 0, 8),
+            dense_matmul_cols(&w, &xs, 8, 8),
+            dense_matmul_cols(&w, &xs, 8, 21),
+        ];
+        assert_eq!(stitch(parts, 4), full);
     }
 }

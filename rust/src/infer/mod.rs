@@ -2,26 +2,33 @@
 //! kernels (paper Appendix A, CPU adaptation), the paged
 //! (optionally-quantized) KV cache with pool-budget admission
 //! accounting, the KV-cached batched decode engine with chunked prefill,
-//! and the continuous-batching request server with budgeted prefill
-//! scheduling.
+//! the execution backends (single-thread / column-sharded /
+//! layer-pipeline) behind the engine, and the continuous-batching
+//! request server with an admission router for multi-replica serving.
 
+/// Execution backends: single-thread, column-sharded, layer-pipeline.
+pub mod backend;
 /// The KV-cached batched decode engine with chunked prefill.
 pub mod engine;
 /// Paged, optionally-quantized KV cache + pool-budget accounting.
 pub mod kv;
 /// Mixed-precision bit-packed matvec/GEMM kernels.
 pub mod matvec;
+/// Admission router: continuous batching across engine replicas.
+pub mod router;
 /// Continuous-batching request server (plain and speculative).
 pub mod server;
 /// Self-speculative decoding: draft at a low rate, verify at the target.
 pub mod speculative;
 
+pub use backend::{Backend, ColumnSharded, LayerPipeline, SingleThread};
 pub use engine::Engine;
 pub use kv::{
     lane_cost_bytes, KvCache, KvCacheConfig, KvLayerQuant, KvPool, KvQuantParams, KvQuantSpec,
     KV_PAGE_ROWS,
 };
 pub use matvec::{dense_matmul, dense_matvec, MatvecPlan, QuantMatvec, GEMM_ROW_TILE};
+pub use router::{route, serve_replicated, RouterConfig, RouterStats};
 pub use server::{
     serve, serve_ladder, serve_ladder_mapped, serve_speculative, serve_threaded, serve_with,
     Request, Response, ServeConfig, ServeStats,

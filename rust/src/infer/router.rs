@@ -1,0 +1,209 @@
+//! Admission router: continuous batching across R engine replicas.
+//!
+//! One packed model, R independent serving loops. Each replica is the
+//! SAME [`Engine`] (replicas of one process share the packed weights —
+//! and, via [`Engine::load_mapped`], the mmap'd container pages — so R
+//! replicas cost one model's RSS), but gets its own request stream,
+//! its own [`crate::infer::server::serve_with`] scheduler instance,
+//! and therefore its own `KvPool` budget, shed/deadline ladder, and
+//! fault containment: a `LaneFault`, shed, or degraded section on one
+//! replica never touches another's lanes.
+//!
+//! Determinism: [`route`] assigns requests by deterministic
+//! least-loaded-first (worst-case token cost, lowest replica index on
+//! ties) over the caller's arrival order, and each replica's scheduler
+//! is FIFO over its bucket — so for a fixed request list and
+//! [`RouterConfig`], every run produces identical per-replica batches
+//! and identical tokens. Combined with the backend bit-identity
+//! contract ([`crate::infer::backend`]), replicated serving stays
+//! token-identical to single-engine [`Engine::generate`] per request —
+//! the property the router tests pin.
+//!
+//! Scaling shape: replicas multiply *throughput* for small models
+//! (independent forwards, no cross-replica synchronization), while
+//! shards ([`crate::infer::backend::ColumnSharded`] /
+//! [`crate::infer::backend::LayerPipeline`]) divide *per-forward
+//! latency* for big ones. The two compose — each replica can itself run
+//! a sharded backend — and `docs/SERVING.md` §Sizing covers how to
+//! split cores between W and R.
+
+use crate::infer::engine::Engine;
+use crate::infer::server::{serve_with, Request, Response, ServeConfig, ServeStats};
+use crate::util::threadpool::scoped_map;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Configuration for replicated serving.
+#[derive(Clone, Copy, Debug)]
+pub struct RouterConfig {
+    /// Replica count R (clamped to ≥ 1 at serve time).
+    pub replicas: usize,
+    /// Per-replica scheduler configuration — notably
+    /// [`ServeConfig::kv_budget_bytes`] is enforced per replica, so
+    /// total KV memory is `R × kv_budget_bytes`.
+    pub replica: ServeConfig,
+}
+
+impl RouterConfig {
+    /// `replicas` replicas, each running `replica`'s scheduler config.
+    pub fn new(replicas: usize, replica: ServeConfig) -> RouterConfig {
+        RouterConfig { replicas, replica }
+    }
+}
+
+/// Aggregate statistics for one [`serve_replicated`] call.
+#[derive(Clone, Debug)]
+pub struct RouterStats {
+    /// Each replica's full [`ServeStats`], in replica order (empty
+    /// buckets still produce an entry, so `replicas.len() == R`).
+    pub replicas: Vec<ServeStats>,
+    /// Sum of per-replica clean completions.
+    pub completed: usize,
+    /// Sum of per-replica sheds.
+    pub shed: usize,
+    /// Sum of per-replica deadline retirements.
+    pub timed_out: usize,
+    /// Sum of per-replica isolated lane faults.
+    pub lane_faults: usize,
+    /// Generated tokens across all replicas.
+    pub total_tokens: usize,
+    /// Wall clock for the whole replicated serve (replicas run
+    /// concurrently, so this tracks the slowest replica, not the sum).
+    pub wall: std::time::Duration,
+    /// Generated tokens per second of router wall clock.
+    pub throughput_tps: f64,
+}
+
+impl RouterStats {
+    /// Responses produced for any reason across all replicas —
+    /// `completed + shed + timed_out + lane_faults`. Equals the
+    /// submitted request count (every request is answered exactly once
+    /// by exactly one replica).
+    pub fn accounted(&self) -> usize {
+        self.completed + self.shed + self.timed_out + self.lane_faults
+    }
+}
+
+/// Deterministic replica assignment: walk `requests` in arrival order,
+/// sending each to the least-loaded replica by accumulated worst-case
+/// token cost (`prompt.len() + max_new`), breaking ties toward the
+/// lowest index. Returns one replica index per request.
+///
+/// Pure function of the request list and R — no clock, no randomness —
+/// so a fixed arrival order always yields the same assignment (the
+/// router-determinism test replays it). Worst-case cost mirrors the
+/// scheduler's own admission reservation rule, which makes the load
+/// estimate consistent with what each replica will actually reserve.
+pub fn route(requests: &[Request], replicas: usize) -> Vec<usize> {
+    let r = replicas.max(1);
+    let mut load = vec![0usize; r];
+    let mut assign = Vec::with_capacity(requests.len());
+    for req in requests {
+        let mut best = 0usize;
+        for i in 1..r {
+            if load[i] < load[best] {
+                best = i;
+            }
+        }
+        assign.push(best);
+        load[best] += req.prompt.len() + req.max_new;
+    }
+    assign
+}
+
+/// Serve `requests` across `cfg.replicas` concurrent scheduler
+/// instances sharing one engine, and merge the results.
+///
+/// Each replica runs the full [`serve_with`] machinery — continuous
+/// batching, chunked prefill, KV-budget admission, shed/deadline/
+/// degradation ladder, lane-fault containment — over its
+/// [`route`]-assigned bucket, on its own scoped worker thread (the
+/// caller's thread runs replica 0). Responses are re-merged and sorted
+/// by request id, so callers see the same shape `serve_with` returns.
+///
+/// Token identity: replica assignment only partitions the request list;
+/// each request's tokens are produced by an unmodified `serve_with`
+/// loop, which is token-identical to [`Engine::generate`] per request
+/// under every batching configuration — so routing never changes
+/// tokens, only which replica computes them. A panic inside a replica's
+/// scheduler propagates with its original payload after all replicas
+/// are joined ([`scoped_map`]'s contract); faults *within* a replica
+/// are already contained per lane by `serve_with` itself.
+pub fn serve_replicated(
+    engine: &Engine,
+    requests: Vec<Request>,
+    cfg: RouterConfig,
+) -> (Vec<Response>, RouterStats) {
+    let t0 = Instant::now();
+    let r = cfg.replicas.max(1);
+    let assign = route(&requests, r);
+    let mut buckets: Vec<Vec<Request>> = (0..r).map(|_| Vec::new()).collect();
+    for (req, &to) in requests.into_iter().zip(&assign) {
+        buckets[to].push(req);
+    }
+    // Slots let the Fn closure below take ownership of exactly its own
+    // bucket (scoped_map wants Fn, not FnOnce-per-index).
+    let slots: Vec<Mutex<Option<Vec<Request>>>> =
+        buckets.into_iter().map(|b| Mutex::new(Some(b))).collect();
+    let results: Vec<(Vec<Response>, ServeStats)> = scoped_map(r, |i| {
+        let bucket = slots[i]
+            .lock()
+            .expect("bucket mutex poisoned")
+            .take()
+            .expect("each bucket is taken exactly once");
+        serve_with(engine, bucket, cfg.replica)
+    });
+
+    let wall = t0.elapsed();
+    let mut responses = Vec::new();
+    let mut stats = RouterStats {
+        replicas: Vec::with_capacity(r),
+        completed: 0,
+        shed: 0,
+        timed_out: 0,
+        lane_faults: 0,
+        total_tokens: 0,
+        wall,
+        throughput_tps: 0.0,
+    };
+    for (resp, st) in results {
+        responses.extend(resp);
+        stats.completed += st.completed;
+        stats.shed += st.shed;
+        stats.timed_out += st.timed_out;
+        stats.lane_faults += st.lane_faults;
+        stats.total_tokens += st.total_tokens;
+        stats.replicas.push(st);
+    }
+    responses.sort_by_key(|resp| resp.id);
+    stats.throughput_tps = if wall.as_secs_f64() > 0.0 {
+        stats.total_tokens as f64 / wall.as_secs_f64()
+    } else {
+        0.0
+    };
+    (responses, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: usize, plen: usize, max_new: usize) -> Request {
+        Request { id, prompt: vec![1u32; plen], max_new }
+    }
+
+    #[test]
+    fn route_is_deterministic_least_loaded() {
+        let reqs = vec![req(0, 4, 4), req(1, 1, 1), req(2, 1, 1), req(3, 6, 2)];
+        // r0 gets 8 cost, r1 gets 2, then 2 more (still lightest), then
+        // the heavy one lands on r1 (4 < 8).
+        assert_eq!(route(&reqs, 2), vec![0, 1, 1, 1]);
+        // Replays identically.
+        assert_eq!(route(&reqs, 2), route(&reqs, 2));
+        // Ties break toward the lowest index.
+        let even = vec![req(0, 1, 1), req(1, 1, 1), req(2, 1, 1)];
+        assert_eq!(route(&even, 3), vec![0, 1, 2]);
+        // Degenerate replica counts clamp.
+        assert_eq!(route(&reqs, 0), vec![0, 0, 0, 0]);
+    }
+}

@@ -43,6 +43,14 @@
 //! and collapsed speculative acceptance turns speculation off. Neither
 //! degradation can change a single emitted token (chunking and
 //! speculation are both token-neutral by construction).
+//!
+//! **Scaling out**: the engine this scheduler drives can itself run a
+//! sharded execution backend (`infer::backend` — column-sharded or
+//! layer-pipeline, both bit-identical to the single path, so nothing
+//! here changes), and `infer::router::serve_replicated` runs R
+//! independent copies of THIS scheduler over route-partitioned request
+//! streams, each with its own KV budget and containment ladder. See
+//! `docs/SERVING.md` for topology choice and sizing.
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};

@@ -38,6 +38,13 @@
 //! one-token-per-verify — see DESIGN.md §Speculative decoding for the
 //! collapse regime and `eval::draft_agreement` for qualifying a draft
 //! rate before serving with it.
+//!
+//! Speculation composes with the execution backends (`infer::backend`)
+//! for free: draft and verify both ride `Engine::forward_chunk`, which
+//! routes through whatever backend each engine carries, and every
+//! backend is bit-identical by contract — so a column-sharded or
+//! layer-pipelined target verifies the exact tokens the single path
+//! would, and acceptance rates are backend-independent.
 
 use crate::infer::engine::{argmax, Engine};
 use crate::infer::kv::KvCache;

@@ -374,6 +374,76 @@ impl QuantizedModel {
             ("ratio_vs_fp16", Json::num(ratio)),
         ])
     }
+
+    /// Payload-balanced layer-pipeline shard plan over this container's
+    /// matrices: partition the model's layers into `workers` contiguous
+    /// spans so each span carries a near-equal share of packed bits
+    /// (payload + side metadata, per the section table's own
+    /// accounting). With rate-distortion-allocated mixed precision,
+    /// layers carry *different* bit loads, so an even layer split can be
+    /// badly skewed — the plan is what [`LayerPipeline::with_plan`]
+    /// consumes to balance stage latency.
+    ///
+    /// Greedy contiguous partition: walk the layers accumulating bits
+    /// and cut when the running share reaches the proportional target,
+    /// while always leaving at least one layer per remaining stage.
+    /// Returns exactly `workers + 1` strictly increasing bounds
+    /// (`0 = b₀ < … < b_W = layers`); `workers` is clamped to
+    /// `[1, layers]`.
+    ///
+    /// [`LayerPipeline::with_plan`]: crate::infer::backend::LayerPipeline::with_plan
+    pub fn shard_plan(&self, workers: usize) -> ShardPlan {
+        let layers = self.base.config.layers;
+        let w = workers.clamp(1, layers.max(1));
+        let mut per_layer = vec![0usize; layers];
+        for (id, pm) in &self.packed {
+            if id.layer < layers {
+                per_layer[id.layer] += pm.payload_bits() + pm.overhead_bits();
+            }
+        }
+        let total: usize = per_layer.iter().sum();
+        let mut bounds = vec![0usize];
+        let mut acc = 0usize;
+        for (li, &bits) in per_layer.iter().enumerate() {
+            acc += bits;
+            let next = bounds.len(); // index of the stage being closed
+            if next < w {
+                let remaining_layers = layers - (li + 1);
+                let remaining_stages = w - next;
+                // Forced cut: exactly one layer left per remaining stage.
+                let must = remaining_layers == remaining_stages;
+                // Proportional cut: this stage has reached its share…
+                let met = acc * w >= total * next;
+                // …and cutting still leaves every later stage a layer.
+                if must || (met && remaining_layers >= remaining_stages) {
+                    bounds.push(li + 1);
+                }
+            }
+        }
+        bounds.push(layers);
+        let stage_payload_bits = bounds
+            .windows(2)
+            .map(|wn| per_layer[wn[0]..wn[1]].iter().sum())
+            .collect();
+        ShardPlan { workers: w, stage_bounds: bounds, stage_payload_bits }
+    }
+}
+
+/// A layer-pipeline partition of a container's transformer blocks —
+/// `workers` contiguous stages balanced by packed payload size rather
+/// than layer count. Built by [`QuantizedModel::shard_plan`]; consumed
+/// by the layer-pipeline backend. The plan is advisory: an engine whose
+/// layer count doesn't match the bounds falls back to an even split.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Stage count W (after clamping to the layer count).
+    pub workers: usize,
+    /// `W + 1` strictly increasing layer cut points; stage `t` owns
+    /// layers `stage_bounds[t]..stage_bounds[t + 1]`.
+    pub stage_bounds: Vec<usize>,
+    /// Packed bits (payload + side metadata) each stage carries —
+    /// diagnostics for the operator sizing guide.
+    pub stage_payload_bits: Vec<usize>,
 }
 
 // ---------------------------------------------------------------------
@@ -808,6 +878,35 @@ mod tests {
         let _ = std::fs::remove_file(&path);
         assert_eq!(qm.to_weights().layers[0].wq.data, back.to_weights().layers[0].wq.data);
         assert!((qm.avg_bits() - back.avg_bits()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shard_plan_partitions_all_layers_contiguously() {
+        let cfg = ModelConfig::preset("ropt-nano").unwrap();
+        let mut rng = Rng::new(97);
+        let w = Weights::init_training(cfg, &mut rng);
+        let qm = quantize_all(&w, 4);
+        let layers = cfg.layers;
+        let total: usize = qm
+            .packed
+            .iter()
+            .map(|(_, pm)| pm.payload_bits() + pm.overhead_bits())
+            .sum();
+        for workers in [1usize, 2, 3, layers, layers + 5] {
+            let plan = qm.shard_plan(workers);
+            let w_eff = workers.clamp(1, layers);
+            assert_eq!(plan.workers, w_eff);
+            assert_eq!(plan.stage_bounds.len(), w_eff + 1);
+            assert_eq!(plan.stage_bounds[0], 0);
+            assert_eq!(*plan.stage_bounds.last().unwrap(), layers);
+            assert!(
+                plan.stage_bounds.windows(2).all(|b| b[0] < b[1]),
+                "bounds must be strictly increasing: {:?}",
+                plan.stage_bounds
+            );
+            assert_eq!(plan.stage_payload_bits.len(), w_eff);
+            assert_eq!(plan.stage_payload_bits.iter().sum::<usize>(), total);
+        }
     }
 
     #[test]

@@ -325,6 +325,61 @@ where
     out
 }
 
+/// Fork-join over `n` *dedicated* scoped threads: `f(i)` runs once per
+/// worker index (index 0 on the calling thread), results are returned in
+/// index order. This is the spawn primitive for the sharded serving
+/// backends and the replica router — places that need N long-lived
+/// peers running *concurrently* (each possibly submitting to the shared
+/// pool themselves), which the single-job-in-flight broadcast pool
+/// deliberately does not provide.
+///
+/// Panic contract: if any worker panics, every other worker is still
+/// joined (no detached threads), and then the FIRST panic's original
+/// payload is re-raised on the caller — not `std::thread::scope`'s
+/// generic "a scoped thread panicked" — so serve-side `LaneFault`
+/// details keep naming the real site (the same guarantee `broadcast`
+/// makes for pool workers).
+pub fn scoped_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    if n == 1 {
+        return vec![f(0)];
+    }
+    std::thread::scope(|s| {
+        let fr = &f;
+        let handles: Vec<_> = (1..n).map(|i| s.spawn(move || fr(i))).collect();
+        // The caller participates as index 0; its panic is caught so the
+        // spawned workers can be joined before anything unwinds.
+        let first = catch_unwind(AssertUnwindSafe(|| f(0)));
+        let mut results: Vec<Result<T, Box<dyn std::any::Any + Send>>> = Vec::with_capacity(n);
+        results.push(first);
+        for h in handles {
+            results.push(h.join());
+        }
+        let mut out = Vec::with_capacity(n);
+        let mut first_panic: Option<Box<dyn std::any::Any + Send>> = None;
+        for r in results {
+            match r {
+                Ok(v) => out.push(v),
+                Err(p) => {
+                    if first_panic.is_none() {
+                        first_panic = Some(p);
+                    }
+                }
+            }
+        }
+        if let Some(p) = first_panic {
+            resume_unwind(p);
+        }
+        out
+    })
+}
+
 struct SendPtr<T>(*mut T);
 // Manual impls: `derive` would wrongly require `T: Copy`.
 impl<T> Clone for SendPtr<T> {
@@ -513,6 +568,60 @@ mod tests {
         );
         let v = parallel_map(16, 1, |i| i);
         assert!(v.iter().enumerate().all(|(i, x)| *x == i));
+    }
+
+    #[test]
+    fn scoped_map_preserves_index_order() {
+        let v = scoped_map(5, |i| i * 10);
+        assert_eq!(v, vec![0, 10, 20, 30, 40]);
+        let v1 = scoped_map(1, |i| i + 7);
+        assert_eq!(v1, vec![7]);
+        let v0: Vec<usize> = scoped_map(0, |i| i);
+        assert!(v0.is_empty());
+    }
+
+    #[test]
+    fn scoped_map_worker_panic_payload_survives() {
+        // A worker panic must reach the caller with its ORIGINAL message
+        // (LaneFault details depend on it), not thread::scope's generic
+        // "a scoped thread panicked" stand-in.
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            scoped_map(4, |i| {
+                if i == 2 {
+                    panic!("distinctive shard worker fault at index {i}");
+                }
+                i
+            })
+        }));
+        let payload = result.expect_err("panic must propagate");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+            .expect("payload must be a string");
+        assert!(
+            msg.contains("distinctive shard worker fault at index 2"),
+            "original message must survive, got: {msg}"
+        );
+        // Scoped threads don't touch the pool's health.
+        let v = scoped_map(3, |i| i);
+        assert_eq!(v, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn scoped_map_caller_lane_panic_joins_workers_first() {
+        use std::sync::atomic::AtomicUsize;
+        let finished = AtomicUsize::new(0);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            scoped_map(4, |i| {
+                if i == 0 {
+                    panic!("caller lane fault");
+                }
+                finished.fetch_add(1, Ordering::SeqCst);
+            })
+        }));
+        assert!(result.is_err());
+        assert_eq!(finished.load(Ordering::SeqCst), 3, "all workers joined before unwind");
     }
 
     #[test]

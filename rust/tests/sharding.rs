@@ -1,0 +1,253 @@
+//! Multi-worker serving suite: execution backends + admission router.
+//!
+//! The contracts pinned here:
+//!
+//! - **Token identity on both shard axes.** `generate` and served
+//!   requests on a column-sharded or layer-pipeline backend are
+//!   token-identical to the single-thread engine for W ∈ {1, 2, 4} —
+//!   the Backend trait's bit-identity contract, end to end.
+//! - **Logits bit-identity at shard boundaries.** Prefill logits are
+//!   `assert_eq!`-exact (not approximately equal) across backends, so
+//!   no worker-count-dependent FP reduction can hide below the argmax.
+//! - **Router determinism.** A fixed arrival order replayed through
+//!   `serve_replicated` produces identical assignments, tokens, and
+//!   per-replica accounting — and every token matches `generate`.
+//! - **Fault containment under sharding.** A panic in one lane (or one
+//!   pipeline stage's forward) retires ONLY that lane as `LaneFault`;
+//!   survivors stay bit-identical to `generate`, on every backend.
+
+use radio::coordinator::pipeline::rtn_quantize_model;
+use radio::error::RadioError;
+use radio::infer::{
+    serve_replicated, serve_with, ColumnSharded, Engine, LayerPipeline, Request, Response,
+    RouterConfig, ServeConfig, ServeStats,
+};
+use radio::model::weights::Weights;
+use radio::model::ModelConfig;
+use radio::util::failpoint;
+use radio::util::rng::Rng;
+
+/// 4-layer quantized model: enough layers for a 4-stage pipeline and
+/// wide enough matrices (mlp 32) that W = 4 column bounds land strictly
+/// inside every projection.
+fn quad_weights(seed: u64) -> Weights {
+    let cfg = ModelConfig { vocab: 32, dim: 16, heads: 2, layers: 4, mlp: 32, max_seq: 16 };
+    let mut rng = Rng::new(seed);
+    Weights::init_training(cfg, &mut rng)
+}
+
+fn quant_engine(seed: u64) -> Engine {
+    Engine::from_quantized(&rtn_quantize_model(&quad_weights(seed), 3, 64))
+}
+
+fn dense_engine(seed: u64) -> Engine {
+    Engine::from_dense(&quad_weights(seed))
+}
+
+fn mk_requests(n: usize, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|id| {
+            let plen = 1 + rng.below(5);
+            let prompt: Vec<u32> = (0..plen).map(|_| rng.below(32) as u32).collect();
+            Request { id, prompt, max_new: 2 + rng.below(5) }
+        })
+        .collect()
+}
+
+/// Every id answered once, clean responses == `generate`, faulted ones
+/// a `generate` prefix with a typed error (the fault_injection suite's
+/// invariant, re-pinned under sharded backends).
+fn assert_contained(engine: &Engine, reqs: &[Request], resps: &[Response], stats: &ServeStats) {
+    assert_eq!(resps.len(), reqs.len());
+    assert_eq!(stats.accounted(), reqs.len());
+    for (r, req) in resps.iter().zip(reqs) {
+        assert_eq!(r.id, req.id);
+        let want = engine.generate(&req.prompt, req.max_new);
+        match &r.error {
+            None => assert_eq!(r.tokens, want, "clean request {} must match generate()", r.id),
+            Some(RadioError::Shed { .. }) => assert!(r.tokens.is_empty()),
+            Some(RadioError::LaneFault { .. }) | Some(RadioError::DeadlineExceeded { .. }) => {
+                assert_eq!(r.tokens[..], want[..r.tokens.len()]);
+            }
+            Some(other) => panic!("unexpected error on request {}: {other:?}", r.id),
+        }
+    }
+}
+
+/// The two sharded topologies at worker count `w`, for parametrized
+/// runs over both shard axes.
+fn backends(w: usize) -> [(&'static str, Engine); 2] {
+    [
+        ("column-sharded", quant_engine(21).with_backend(ColumnSharded::new(w))),
+        ("layer-pipeline", quant_engine(21).with_backend(LayerPipeline::new(w).micro_batch(2))),
+    ]
+}
+
+#[test]
+fn sharded_generate_is_token_identical_for_w_1_2_4() {
+    // Scenario guard with nothing armed: serializes against the
+    // fault-injection tests below so their armed sites can't fire in
+    // this test's lanes (failpoint state is process-global).
+    let _s = failpoint::scenario();
+    let single = quant_engine(21);
+    let mut rng = Rng::new(0x5A01);
+    let prompts: Vec<Vec<u32>> = (0..6)
+        .map(|_| (0..1 + rng.below(6)).map(|_| rng.below(32) as u32).collect())
+        .collect();
+    for w in [1usize, 2, 4] {
+        for (name, engine) in backends(w) {
+            assert_ne!(engine.backend_name(), "single", "{name}");
+            for p in &prompts {
+                assert_eq!(
+                    engine.generate(p, 6),
+                    single.generate(p, 6),
+                    "{name} W={w} prompt {p:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_logits_are_bit_identical_at_shard_boundaries() {
+    let _s = failpoint::scenario();
+    // assert_eq! on raw f32 vectors: any worker-count-dependent FP
+    // reduction — even one that preserves every argmax — fails here.
+    // Dense and quantized engines both, so the dense_matmul_cols and
+    // matgem_act_cols seams are each on the hook.
+    let prompt: Vec<u32> = vec![3, 1, 4, 1, 5, 9, 2, 6];
+    let cases: [(fn(u64) -> Engine, &str); 2] = [(quant_engine, "quant"), (dense_engine, "dense")];
+    for (mk, tag) in cases {
+        let single = mk(33);
+        let mut c = single.new_cache();
+        let want = single.prefill_batch(&[&prompt], std::slice::from_mut(&mut c));
+        for w in [2usize, 4] {
+            let col = mk(33).with_backend(ColumnSharded::new(w));
+            let mut cc = col.new_cache();
+            assert_eq!(
+                col.prefill_batch(&[&prompt], std::slice::from_mut(&mut cc)),
+                want,
+                "{tag} column-sharded W={w}"
+            );
+            let pipe = mk(33).with_backend(LayerPipeline::new(w));
+            let mut cp = pipe.new_cache();
+            assert_eq!(
+                pipe.prefill_batch(&[&prompt], std::slice::from_mut(&mut cp)),
+                want,
+                "{tag} layer-pipeline W={w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn sharded_serve_matches_single_engine_generate() {
+    let _s = failpoint::scenario();
+    let single = quant_engine(21);
+    let reqs = mk_requests(7, 0x5A21);
+    let mut cfg = ServeConfig::new(3);
+    cfg.chunk_budget = 4; // force multi-iteration prefill under sharding
+    for w in [1usize, 2, 4] {
+        for (name, engine) in backends(w) {
+            let (resps, stats) = serve_with(&engine, reqs.clone(), cfg);
+            assert_eq!(stats.completed, reqs.len(), "{name} W={w}");
+            for (r, req) in resps.iter().zip(&reqs) {
+                assert_eq!(
+                    r.tokens,
+                    single.generate(&req.prompt, req.max_new),
+                    "{name} W={w} request {}",
+                    req.id
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn replicated_serve_is_deterministic_and_matches_generate() {
+    let _s = failpoint::scenario();
+    let engine = quant_engine(21);
+    let reqs = mk_requests(10, 0x5A31);
+    let cfg = RouterConfig::new(3, ServeConfig::new(2));
+    let (r1, s1) = serve_replicated(&engine, reqs.clone(), cfg);
+    let (r2, s2) = serve_replicated(&engine, reqs.clone(), cfg);
+    assert_eq!(s1.accounted(), reqs.len());
+    assert_eq!(s1.replicas.len(), 3);
+    // Fixed arrival order ⇒ identical assignment, identical per-replica
+    // batches, identical tokens — replayable run to run.
+    let key = |s: &ServeStats| (s.completed, s.steps, s.peak_lanes, s.total_tokens);
+    for (a, b) in s1.replicas.iter().zip(&s2.replicas) {
+        assert_eq!(key(a), key(b), "per-replica schedule must replay identically");
+    }
+    for (a, b) in r1.iter().zip(&r2) {
+        assert_eq!((a.id, &a.tokens), (b.id, &b.tokens));
+    }
+    // And every token matches the single-engine reference.
+    for (r, req) in r1.iter().zip(&reqs) {
+        assert_eq!(r.id, req.id, "responses sorted by id, none lost or duplicated");
+        assert_eq!(r.tokens, engine.generate(&req.prompt, req.max_new));
+    }
+}
+
+#[test]
+fn replicated_serve_composes_with_sharded_backends() {
+    let _s = failpoint::scenario();
+    let single = quant_engine(21);
+    let reqs = mk_requests(8, 0x5A41);
+    for (name, engine) in backends(2) {
+        let (resps, stats) =
+            serve_replicated(&engine, reqs.clone(), RouterConfig::new(2, ServeConfig::new(2)));
+        assert_eq!(stats.accounted(), reqs.len(), "{name}");
+        for (r, req) in resps.iter().zip(&reqs) {
+            assert_eq!(r.tokens, single.generate(&req.prompt, req.max_new), "{name}");
+        }
+    }
+}
+
+#[test]
+fn one_faulted_lane_retires_alone_under_sharded_backends() {
+    let reqs = mk_requests(5, 0x5A51);
+    let victim = 2usize;
+    for w in [2usize, 4] {
+        for (name, engine) in backends(w) {
+            let _s = failpoint::scenario();
+            failpoint::arm("serve::lane", victim as u64, 2);
+            let (resps, stats) = serve_with(&engine, reqs.clone(), ServeConfig::new(5));
+            assert_contained(&engine, &reqs, &resps, &stats);
+            assert_eq!(stats.lane_faults, 1, "{name} W={w}: only the victim retires");
+            assert_eq!(stats.completed, reqs.len() - 1, "{name} W={w}");
+            assert!(
+                matches!(resps[victim].error, Some(RadioError::LaneFault { .. })),
+                "{name} W={w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pipeline_stage_panic_is_contained_with_the_original_payload() {
+    // The failpoint fires INSIDE a pipeline stage thread (after layer
+    // 2's K/V append — layer 2 lives on stage 2 of 2). The scheduler
+    // must survive, roll the poisoned lanes back, and the LaneFault
+    // detail must carry the failpoint's own message through the channel
+    // pipeline and scoped join — not scope's generic stand-in.
+    let engine = quant_engine(21).with_backend(LayerPipeline::new(2).micro_batch(2));
+    let reqs = mk_requests(6, 0x5A61);
+    let _s = failpoint::scenario();
+    failpoint::arm("engine::forward_chunk::after_append", 2, 3);
+    let (resps, stats) = serve_with(&engine, reqs.clone(), ServeConfig::new(3));
+    assert_contained(&engine, &reqs, &resps, &stats);
+    assert!(stats.lane_faults > 0, "the armed stage fault must land");
+    let detail = resps
+        .iter()
+        .find_map(|r| match &r.error {
+            Some(RadioError::LaneFault { detail }) => Some(detail.clone()),
+            _ => None,
+        })
+        .expect("at least one LaneFault response");
+    assert!(
+        detail.contains("failpoint"),
+        "LaneFault detail must carry the original panic message, got: {detail}"
+    );
+}
