@@ -1,0 +1,259 @@
+//! Prefix-cache bench: multi-tenant serving with Zipf-shared prompt
+//! prefixes, cache off vs on (`ServeConfig::prefix_cache`).
+//!
+//! The stream is shaped so the savings are attributable: a first wave
+//! of `max_batch` cheap "light" requests (prompt = a shared base
+//! prefix, one generated token) warms the cache, then a long tail of
+//! "heavy" requests (base prefix + unique suffix, long decode) whose
+//! prefix choice is Zipf-skewed over the bases. With the cache on,
+//! every heavy attaches its base's pages: its prefill skips the prefix
+//! (the TTFT drop) and its pool reservation shrinks to the non-shared
+//! remainder, so peak KV bytes sit measurably below the cache-off arm —
+//! the deterministic number the CI gate tracks.
+//!
+//! Both arms are asserted token-identical to `Engine::generate` per
+//! request (the tentpole contract), for dense and quantized KV pages.
+//!
+//! ```bash
+//! cargo bench --bench bench_prefix                 # quick
+//! RADIO_BENCH_FULL=1 cargo bench --bench bench_prefix
+//! RADIO_BENCH_SMOKE=1 cargo bench --bench bench_prefix   # CI smoke
+//! ```
+
+use radio::coordinator::pipeline::rtn_quantize_model;
+use radio::infer::{
+    lane_cost_bytes, serve_with, Engine, KvCacheConfig, KvQuantSpec, Request, ServeConfig,
+    ServeStats, KV_PAGE_ROWS,
+};
+use radio::model::weights::Weights;
+use radio::model::ModelConfig;
+use radio::report;
+use radio::util::bench::{black_box, Bench, Table};
+use radio::util::json::Json;
+use radio::util::rng::Rng;
+
+/// Minimal LCG so the stream shape is independent of `util::rng`.
+struct Lcg(u64);
+
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        self.0 >> 33
+    }
+
+    fn below(&mut self, n: usize) -> usize {
+        (self.next() % n as u64) as usize
+    }
+}
+
+/// Lights-then-heavies stream over `n_bases` shared prefixes of
+/// `prefix_len` tokens. The lights fill the first admission wave
+/// exactly (`lights == max_batch`), so with the cache on, the cold wave
+/// is cheap and every heavy admission is a hit.
+fn mk_stream(
+    n_bases: usize,
+    prefix_len: usize,
+    suffix_len: usize,
+    lights: usize,
+    heavies: usize,
+    heavy_new: usize,
+    vocab: usize,
+) -> Vec<Request> {
+    let mut lcg = Lcg(0x5A1F);
+    let bases: Vec<Vec<u32>> = (0..n_bases)
+        .map(|b| (0..prefix_len).map(|_| ((lcg.next() as usize + b) % vocab) as u32).collect())
+        .collect();
+    let mut reqs = Vec::with_capacity(lights + heavies);
+    for id in 0..lights {
+        reqs.push(Request { id, prompt: bases[id % n_bases].clone(), max_new: 1 });
+    }
+    for id in lights..lights + heavies {
+        // Zipf-ish skew over 3 bases: weights ~ {3, 2, 1}.
+        let pick = match lcg.below(6) {
+            0..=2 => 0,
+            3..=4 => 1,
+            _ => 2,
+        };
+        let mut prompt = bases[pick.min(n_bases - 1)].clone();
+        for _ in 0..suffix_len {
+            prompt.push(lcg.below(vocab) as u32);
+        }
+        reqs.push(Request { id, prompt, max_new: heavy_new });
+    }
+    reqs
+}
+
+fn serve_arm(engine: &Engine, reqs: &[Request], cfg: ServeConfig) -> ServeStats {
+    let expected: Vec<Vec<u32>> =
+        reqs.iter().map(|r| engine.generate(&r.prompt, r.max_new)).collect();
+    let (resps, stats) = serve_with(engine, reqs.to_vec(), cfg);
+    for (r, want) in resps.iter().zip(&expected) {
+        assert!(r.error.is_none(), "request {} errored: {:?}", r.id, r.error);
+        assert_eq!(r.tokens, *want, "request {} diverged from generate()", r.id);
+    }
+    stats
+}
+
+fn main() {
+    let smoke = std::env::var("RADIO_BENCH_SMOKE").is_ok();
+    let full = std::env::var("RADIO_BENCH_FULL").is_ok() && !smoke;
+    let preset = if smoke {
+        "ropt-nano"
+    } else if full {
+        "ropt-med"
+    } else {
+        "ropt-micro"
+    };
+    let cfg = ModelConfig::preset(preset).unwrap();
+    let mut rng = Rng::new(0x5EAF);
+    let w = Weights::init_pretrained_like(cfg, &mut rng);
+    let qm = rtn_quantize_model(&w, 4, 64);
+
+    // Geometry: 2-page shared prefixes inside the 64-row window, unique
+    // suffixes short enough to stay out of the cache (only FULL pages
+    // are published), decodes long enough that a heavy lane's worst
+    // case is twice its non-shared remainder.
+    let page_rows = KV_PAGE_ROWS;
+    let prefix_len = 2 * page_rows;
+    let suffix_len = page_rows / 2;
+    let heavy_new = cfg.max_seq - prefix_len - suffix_len - 1;
+    let n_bases = 3;
+    let max_batch = 8;
+    let heavies = if smoke {
+        8
+    } else if full {
+        24
+    } else {
+        16
+    };
+    let reqs = mk_stream(n_bases, prefix_len, suffix_len, max_batch, heavies, heavy_new, cfg.vocab);
+    println!(
+        "bench_prefix: {preset}, {} bases x {prefix_len} shared tokens, {max_batch} lights + \
+         {heavies} heavies (suffix {suffix_len}, decode {heavy_new})",
+        n_bases
+    );
+
+    let arms: Vec<(&str, Engine)> = vec![
+        ("dense", Engine::from_quantized(&qm).with_kv_config(KvCacheConfig::dense())),
+        (
+            "quant",
+            Engine::from_quantized(&qm).with_kv_config(KvCacheConfig::quantized(
+                KvQuantSpec::uniform(cfg.layers, 4, 1.0, 0.0),
+            )),
+        ),
+    ];
+    // Full-prompt prefill per iteration: the light wave retires as one
+    // block (sharpening the warm/cold phase boundary) and TTFT differs
+    // between arms only by the skipped prefix work.
+    let base_cfg = ServeConfig {
+        prefill_chunk: cfg.max_seq,
+        chunk_budget: usize::MAX,
+        ..ServeConfig::new(max_batch)
+    };
+
+    let bench = if full { Bench::default() } else { Bench::quick() };
+    let mut table =
+        Table::new(&["kv mode", "cache", "ttft p50 (ms)", "prompt tok", "hits", "peak KV (KiB)"]);
+    let mut arms_json: Vec<(&str, Json)> = Vec::new();
+    let mut gate_hi: Vec<(&str, Json)> = Vec::new();
+    for (name, engine) in &arms {
+        let on_cfg = ServeConfig { prefix_cache: true, ..base_cfg };
+        let off = serve_arm(engine, &reqs, base_cfg);
+        let on = serve_arm(engine, &reqs, on_cfg);
+        assert_eq!(
+            on.prompt_tokens + on.prefix_tokens_reused,
+            off.prompt_tokens,
+            "{name}: reused tokens must be exactly the prompt tokens not re-fed"
+        );
+        assert!(on.prefix_hits > 0, "{name}: the warmed cache must hit");
+        assert!(
+            on.peak_kv_bytes < off.peak_kv_bytes,
+            "{name}: shared pages charged once must cut peak KV bytes \
+             ({} on vs {} off)",
+            on.peak_kv_bytes,
+            off.peak_kv_bytes
+        );
+        let secs = bench
+            .run(&format!("serve {name} cache-on"), || {
+                black_box(serve_with(engine, reqs.clone(), on_cfg));
+            })
+            .median_secs();
+        let gen_tps = on.total_tokens as f64 / secs;
+        let kv_saving = 1.0 - on.peak_kv_bytes as f64 / off.peak_kv_bytes as f64;
+        for (label, s) in [("off", &off), ("on", &on)] {
+            println!(
+                "  {name:>5}/{label:<3}: ttft p50 {:>7.2} ms, {:>5} prompt tok, {:>3} hits / \
+                 {:>4} reused, peak KV {:>8.1} KiB",
+                s.ttft_p50.as_secs_f64() * 1e3,
+                s.prompt_tokens,
+                s.prefix_hits,
+                s.prefix_tokens_reused,
+                s.peak_kv_bytes as f64 / 1024.0
+            );
+            table.row(vec![
+                name.to_string(),
+                label.to_string(),
+                format!("{:.2}", s.ttft_p50.as_secs_f64() * 1e3),
+                s.prompt_tokens.to_string(),
+                s.prefix_hits.to_string(),
+                format!("{:.1}", s.peak_kv_bytes as f64 / 1024.0),
+            ]);
+        }
+        println!("  {name:>5}: peak KV saving {:.1}%, {gen_tps:.1} gen tok/s", 100.0 * kv_saving);
+        arms_json.push((
+            *name,
+            Json::obj(vec![
+                ("ttft_p50_ms_off", Json::num(off.ttft_p50.as_secs_f64() * 1e3)),
+                ("ttft_p50_ms_on", Json::num(on.ttft_p50.as_secs_f64() * 1e3)),
+                ("prompt_tokens_off", Json::num(off.prompt_tokens as f64)),
+                ("prompt_tokens_on", Json::num(on.prompt_tokens as f64)),
+                ("prefix_hits", Json::num(on.prefix_hits as f64)),
+                ("prefix_tokens_reused", Json::num(on.prefix_tokens_reused as f64)),
+                ("prefix_evictions", Json::num(on.prefix_evictions as f64)),
+                ("peak_kv_bytes_off", Json::num(off.peak_kv_bytes as f64)),
+                ("peak_kv_bytes_on", Json::num(on.peak_kv_bytes as f64)),
+                ("peak_kv_saving", Json::num(kv_saving)),
+                ("gen_tps_on", Json::num(gen_tps)),
+            ]),
+        ));
+        let key: &str =
+            if *name == "dense" { "dense_peak_kv_saving" } else { "quant_peak_kv_saving" };
+        gate_hi.push((key, Json::num(kv_saving)));
+    }
+
+    println!("\nPrefix caching under a Zipf-shared multi-tenant stream:");
+    table.print();
+    report::write_report(
+        "bench_prefix",
+        "Cross-request prefix cache: Zipf-shared prompts, cache off vs on",
+        &[("per KV mode, cache off vs on", &table)],
+        "Retiring lanes publish their prompts' full KV pages into a radix cache; later \
+         admissions attach the longest cached run, skip that prefill, and reserve only the \
+         non-shared remainder — shared pages are charged against the pool once. Peak KV bytes \
+         and prompt tokens are deterministic (no wall clock), so the saving fractions gate CI; \
+         TTFT and tok/s columns are informational. Both arms are asserted bit-identical to \
+         generate() before anything is reported.",
+    );
+
+    let lane_worst = lane_cost_bytes(&cfg, arms[0].1.kv_config(), cfg.max_seq);
+    let json = Json::obj(vec![
+        ("bench", Json::str("prefix")),
+        ("model", Json::str(preset)),
+        ("bases", Json::num(n_bases as f64)),
+        ("prefix_len", Json::num(prefix_len as f64)),
+        ("suffix_len", Json::num(suffix_len as f64)),
+        ("lights", Json::num(max_batch as f64)),
+        ("heavies", Json::num(heavies as f64)),
+        ("heavy_max_new", Json::num(heavy_new as f64)),
+        ("dense_lane_worst_bytes", Json::num(lane_worst as f64)),
+        ("arms", Json::obj(arms_json)),
+        // Deterministic fields only: the saving fractions are fixed by
+        // the stream shape and page geometry, not by timing.
+        ("gate", Json::obj(vec![("higher_better", Json::obj(gate_hi))])),
+    ]);
+    let path = "BENCH_prefix.json";
+    match std::fs::write(path, json.to_pretty()) {
+        Ok(()) => println!("[bench] wrote {path}"),
+        Err(e) => eprintln!("[bench] FAILED to write {path}: {e}"),
+    }
+}

@@ -17,7 +17,7 @@
 //! prefill determinism tests pin down.
 
 use crate::infer::backend::{Backend, SingleThread};
-use crate::infer::kv::{KvCache, KvCacheConfig};
+use crate::infer::kv::{KvCache, KvCacheConfig, KvPageSet};
 use crate::infer::matvec::{
     dense_matmul, dense_matmul_cols, split_rows, MatvecPlan, SendMut,
 };
@@ -368,6 +368,20 @@ impl Engine {
     /// tests; serving goes through [`Engine::new_cache`]).
     pub fn new_cache_with(&self, kv: &KvCacheConfig) -> KvCache {
         KvCache::new(&self.config, kv)
+    }
+
+    /// Fresh cache with its first `rows` positions attached from shared
+    /// prefix pages (`infer::prefix`) — the prefill-from-attached-pages
+    /// entry point. The scheduler then feeds the REMAINING prompt
+    /// through the ordinary chunked prefill: positional embeddings
+    /// continue from `cache.len` exactly as for a resumed lane, and
+    /// attention reads the attached rows through the same `KvRows` views
+    /// as lane-owned rows, so decode is bit-identical to a lane that
+    /// prefilled the whole prompt itself.
+    pub fn new_cache_with_prefix(&self, pages: &[Arc<KvPageSet>], rows: usize) -> KvCache {
+        let mut cache = self.new_cache();
+        cache.attach_prefix(pages, rows);
+        cache
     }
 
     /// Decode one token for one sequence. Batch-of-one wrapper around

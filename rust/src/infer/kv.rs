@@ -31,6 +31,7 @@ use crate::model::config::ModelConfig;
 use crate::model::transformer::KvRows;
 use crate::quant::bitpack::{f16_round, BitReader, BitWriter};
 use crate::quant::companding;
+use std::sync::Arc;
 
 /// Default rows per page. Small enough that a short lane wastes at most
 /// one mostly-empty page per layer per K/V tensor, large enough that
@@ -153,28 +154,170 @@ struct QuantPage {
     rows: usize,
 }
 
+/// Truncate a quantized page to `rows` in place, masking the stale bits
+/// of the final partial word. `BitWriter` appends OR into the open word,
+/// so a later `push_row` must find zeros exactly where a never-extended
+/// page would have them — the bit-identity contract both speculative
+/// rollback and prefix-cache COW splits rely on.
+fn truncate_quant_page(page: &mut QuantPage, rows: usize, width: usize, bits: u8) {
+    if page.rows <= rows {
+        return;
+    }
+    page.rows = rows;
+    let bit_len = rows * width * bits as usize;
+    page.words.truncate(bit_len.div_ceil(64));
+    let rem = bit_len & 63;
+    if rem != 0 {
+        if let Some(w) = page.words.last_mut() {
+            *w &= (1u64 << rem) - 1;
+        }
+    }
+}
+
+/// One immutable page shared between lanes (dense or quantized backing).
+/// The `Arc` keeps the payload alive while any lane's store or any
+/// cached [`KvPageSet`] still points at it; *budget* accounting (who is
+/// charged for the bytes) is the prefix cache's job, not this type's.
+#[derive(Clone, Debug)]
+enum SharedPage {
+    Dense(Arc<Vec<f32>>),
+    Quant(Arc<QuantPage>),
+}
+
+impl SharedPage {
+    /// Whole-page payload bytes — what admission accounting charges for
+    /// a page regardless of fill (pages are charged whole everywhere).
+    fn cost_bytes(&self) -> usize {
+        match self {
+            SharedPage::Dense(p) => p.len() * 4,
+            SharedPage::Quant(p) => p.words.len() * 8,
+        }
+    }
+}
+
+/// One *full* page per (layer, K|V) store, exported from a lane's cache
+/// — the immutable unit the cross-request prefix cache
+/// (`infer::prefix`) shares between lanes. Page payloads sit behind
+/// `Arc`s, so attaching a set to a new lane is a refcount bump, never a
+/// copy, and a "write" below an attached page is a copy-out-and-detach
+/// ([`KvCache::truncate_to`]) that can never disturb other readers.
+#[derive(Clone, Debug)]
+pub struct KvPageSet {
+    k: Vec<SharedPage>,
+    v: Vec<SharedPage>,
+}
+
+impl KvPageSet {
+    /// Payload bytes across every page in the set — the amount the
+    /// prefix cache charges the pool ONCE per cached set, however many
+    /// lanes attach it. For full pages this equals the per-page share
+    /// of [`lane_cost_bytes`] (both charge whole pages).
+    pub fn cost_bytes(&self) -> usize {
+        self.k.iter().chain(&self.v).map(SharedPage::cost_bytes).sum()
+    }
+}
+
 #[derive(Clone, Debug)]
 enum StoreKind {
     Dense { pages: Vec<Vec<f32>> },
     Quant { pages: Vec<QuantPage>, params: KvQuantParams, lut: Vec<f32> },
 }
 
-/// Per-(layer, K|V) page store.
+/// Per-(layer, K|V) page store. Row space is `shared` (immutable,
+/// refcounted, always full pages, always the strict prefix) followed by
+/// lane-owned pages; all mutation targets the owned run.
 #[derive(Clone, Debug)]
 struct PageStore {
     page_rows: usize,
     width: usize,
+    /// Attached prefix pages (possibly referenced by other lanes and by
+    /// the prefix cache). Invariant: every entry holds exactly
+    /// `page_rows` rows, and owned pages start page-aligned after them.
+    shared: Vec<SharedPage>,
     kind: StoreKind,
 }
 
 impl PageStore {
     fn dense(page_rows: usize, width: usize) -> PageStore {
-        PageStore { page_rows, width, kind: StoreKind::Dense { pages: Vec::new() } }
+        PageStore { page_rows, width, shared: Vec::new(), kind: StoreKind::Dense { pages: Vec::new() } }
     }
 
     fn quant(page_rows: usize, width: usize, params: KvQuantParams) -> PageStore {
         let lut = companding::base_lut(params.bits);
-        PageStore { page_rows, width, kind: StoreKind::Quant { pages: Vec::new(), params, lut } }
+        PageStore {
+            page_rows,
+            width,
+            shared: Vec::new(),
+            kind: StoreKind::Quant { pages: Vec::new(), params, lut },
+        }
+    }
+
+    /// Rows covered by the attached shared run (always page-aligned).
+    fn shared_rows(&self) -> usize {
+        self.shared.len() * self.page_rows
+    }
+
+    /// Payload bytes of the attached shared run (charged to the prefix
+    /// cache, not this lane).
+    fn shared_bytes(&self) -> usize {
+        self.shared.iter().map(SharedPage::cost_bytes).sum()
+    }
+
+    /// Attach one full shared page to the end of the shared run. Only
+    /// legal while the store holds no lane-owned rows (shared pages form
+    /// the strict prefix of the row space).
+    fn attach_full(&mut self, page: &SharedPage) {
+        debug_assert_eq!(self.rows(), self.shared_rows(), "attach after owned rows");
+        match (&self.kind, page) {
+            (StoreKind::Dense { .. }, SharedPage::Dense(p)) => {
+                debug_assert_eq!(p.len(), self.page_rows * self.width, "shared pages must be full");
+            }
+            (StoreKind::Quant { .. }, SharedPage::Quant(p)) => {
+                debug_assert_eq!(p.rows, self.page_rows, "shared pages must be full");
+            }
+            _ => panic!("shared page backing does not match the store mode"),
+        }
+        self.shared.push(page.clone());
+    }
+
+    /// Append a truncated copy of a shared page as a fresh lane-owned
+    /// page — the copy half of a COW split. Dense pages copy the kept
+    /// rows; quantized pages copy the kept words and mask the final
+    /// partial word, exactly like an owned-tail truncation, so later
+    /// appends are bit-identical to a never-shared cache. The owned run
+    /// must currently end page-aligned (it does at both call sites:
+    /// prefix attach and shared-run truncation).
+    fn copy_in_tail(&mut self, src: &SharedPage, rows: usize) {
+        debug_assert!(rows > 0 && rows <= self.page_rows);
+        let (page_rows, width) = (self.page_rows, self.width);
+        match (&mut self.kind, src) {
+            (StoreKind::Dense { pages }, SharedPage::Dense(p)) => {
+                let mut page = Vec::with_capacity(page_rows * width);
+                page.extend_from_slice(&p[..rows * width]);
+                pages.push(page);
+            }
+            (StoreKind::Quant { pages, params, .. }, SharedPage::Quant(p)) => {
+                let mut page = QuantPage { words: p.words.clone(), rows: p.rows };
+                truncate_quant_page(&mut page, rows, width, params.bits);
+                pages.push(page);
+            }
+            _ => panic!("shared page backing does not match the store mode"),
+        }
+    }
+
+    /// Export page `pi` (row-space index) as an immutable shared page:
+    /// an already-shared page is a refcount bump; an owned page's
+    /// payload is copied once, becoming the single immutable copy every
+    /// later lane attaches.
+    fn export_page(&self, pi: usize) -> SharedPage {
+        if pi < self.shared.len() {
+            return self.shared[pi].clone();
+        }
+        let oi = pi - self.shared.len();
+        match &self.kind {
+            StoreKind::Dense { pages } => SharedPage::Dense(Arc::new(pages[oi].clone())),
+            StoreKind::Quant { pages, .. } => SharedPage::Quant(Arc::new(pages[oi].clone())),
+        }
     }
 
     /// Append one e-wide row, opening a fresh page when the last is full.
@@ -212,17 +355,20 @@ impl PageStore {
         }
     }
 
-    /// Logical rows currently stored.
+    /// Logical rows currently stored (shared prefix + owned).
     fn rows(&self) -> usize {
-        match &self.kind {
+        let owned = match &self.kind {
             StoreKind::Dense { pages } => {
                 pages.iter().map(|p| p.len()).sum::<usize>() / self.width.max(1)
             }
             StoreKind::Quant { pages, .. } => pages.iter().map(|p| p.rows).sum(),
-        }
+        };
+        self.shared_rows() + owned
     }
 
-    /// Heap bytes actually allocated for page payloads.
+    /// Heap bytes actually allocated for *lane-owned* page payloads.
+    /// Attached shared pages are excluded: their bytes are charged once,
+    /// by the prefix cache, however many lanes attach them.
     fn allocated_bytes(&self) -> usize {
         match &self.kind {
             StoreKind::Dense { pages } => pages.iter().map(|p| p.capacity() * 4).sum(),
@@ -236,36 +382,46 @@ impl PageStore {
     /// the final partial word — `BitWriter` appends OR into the open
     /// word, so a later `push_row` must find zeros exactly where a
     /// never-extended page would have them (the rollback bit-identity
-    /// contract speculative decoding relies on).
+    /// contract speculative decoding relies on). A cut below the shared
+    /// run is a COW split: full shared pages below it stay attached, the
+    /// divergence page is copied out as a truncated owned tail, and the
+    /// shared suffix is detached (refcount drop) — never mutated.
     fn truncate_rows(&mut self, rows: usize) {
         if self.rows() <= rows {
             return;
         }
         let (page_rows, width) = (self.page_rows, self.width);
-        let keep_pages = rows.div_ceil(page_rows);
+        let sr = self.shared_rows();
+        if rows < sr {
+            let keep_full = rows / page_rows;
+            let tail_rows = rows % page_rows;
+            let tail_src = if tail_rows > 0 { Some(self.shared[keep_full].clone()) } else { None };
+            self.shared.truncate(keep_full);
+            match &mut self.kind {
+                StoreKind::Dense { pages } => pages.clear(),
+                StoreKind::Quant { pages, .. } => pages.clear(),
+            }
+            if let Some(src) = tail_src {
+                self.copy_in_tail(&src, tail_rows);
+            }
+            return;
+        }
+        let owned_rows = rows - sr;
+        let keep_pages = owned_rows.div_ceil(page_rows);
         match &mut self.kind {
             StoreKind::Dense { pages } => {
                 pages.truncate(keep_pages);
                 if let Some(last) = pages.last_mut() {
-                    let tail_rows = rows - (keep_pages - 1) * page_rows;
+                    let tail_rows = owned_rows - (keep_pages - 1) * page_rows;
                     last.truncate(tail_rows * width);
                 }
             }
             StoreKind::Quant { pages, params, .. } => {
+                let bits = params.bits;
                 pages.truncate(keep_pages);
                 if let Some(last) = pages.last_mut() {
-                    let tail_rows = rows - (keep_pages - 1) * page_rows;
-                    if last.rows > tail_rows {
-                        last.rows = tail_rows;
-                        let bit_len = tail_rows * width * params.bits as usize;
-                        last.words.truncate(bit_len.div_ceil(64));
-                        let rem = bit_len & 63;
-                        if rem != 0 {
-                            if let Some(w) = last.words.last_mut() {
-                                *w &= (1u64 << rem) - 1;
-                            }
-                        }
-                    }
+                    let tail_rows = owned_rows - (keep_pages - 1) * page_rows;
+                    truncate_quant_page(last, tail_rows, width, bits);
                 }
             }
         }
@@ -277,27 +433,40 @@ impl PageStore {
 
     /// Dequantized/densified logical contents, row-major — the test and
     /// calibration accessor. For dense stores this is the exact bytes
-    /// appended (pages concatenated in order).
+    /// appended (shared then owned pages, concatenated in order).
     fn flat(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.rows() * self.width);
         match &self.kind {
             StoreKind::Dense { pages } => {
-                let mut out = Vec::with_capacity(self.rows() * self.width);
+                for p in &self.shared {
+                    let SharedPage::Dense(p) = p else {
+                        panic!("shared page backing does not match the store mode")
+                    };
+                    out.extend_from_slice(p);
+                }
                 for p in pages {
                     out.extend_from_slice(p);
                 }
-                out
             }
             StoreKind::Quant { pages, params, lut } => {
-                let mut out = Vec::with_capacity(self.rows() * self.width);
-                for p in pages {
-                    let mut rd = BitReader::new(&p.words, 0);
-                    for _ in 0..p.rows * self.width {
+                let mut decode = |words: &[u64], rows: usize| {
+                    let mut rd = BitReader::new(words, 0);
+                    for _ in 0..rows * self.width {
                         out.push(params.mean + params.scale * lut[rd.read(params.bits) as usize]);
                     }
+                };
+                for p in &self.shared {
+                    let SharedPage::Quant(p) = p else {
+                        panic!("shared page backing does not match the store mode")
+                    };
+                    decode(&p.words, p.rows);
                 }
-                out
+                for p in pages {
+                    decode(&p.words, p.rows);
+                }
             }
         }
+        out
     }
 }
 
@@ -311,17 +480,35 @@ impl KvRows for KvLayerRows<'_> {
     fn head_slice<'a>(&'a self, ti: usize, h0: usize, buf: &'a mut [f32]) -> &'a [f32] {
         let s = self.store;
         let (page, row) = (ti / s.page_rows, ti % s.page_rows);
+        let shared = s.shared.len();
         match &s.kind {
             StoreKind::Dense { pages } => {
                 // Rows never straddle pages, so dense reads are zero-copy
-                // borrows out of the page — the hot path pays nothing for
-                // the paging abstraction.
+                // borrows out of the page — shared or lane-owned backing
+                // alike. This backing-independence is why token identity
+                // survives cross-request page sharing: attention never
+                // sees *where* a row lives, only its bytes.
                 let off = row * s.width + h0;
-                &pages[page][off..off + buf.len()]
+                if page < shared {
+                    let SharedPage::Dense(p) = &s.shared[page] else {
+                        panic!("shared page backing does not match the store mode")
+                    };
+                    &p[off..off + buf.len()]
+                } else {
+                    &pages[page - shared][off..off + buf.len()]
+                }
             }
             StoreKind::Quant { pages, params, lut } => {
+                let words = if page < shared {
+                    let SharedPage::Quant(p) = &s.shared[page] else {
+                        panic!("shared page backing does not match the store mode")
+                    };
+                    &p.words
+                } else {
+                    &pages[page - shared].words
+                };
                 let bit = (row * s.width + h0) * params.bits as usize;
-                let mut rd = BitReader::new(&pages[page].words, bit);
+                let mut rd = BitReader::new(words, bit);
                 for b in buf.iter_mut() {
                     *b = params.mean + params.scale * lut[rd.read(params.bits) as usize];
                 }
@@ -409,9 +596,85 @@ impl KvCache {
         self.v[layer].flat()
     }
 
-    /// Heap bytes allocated across all layers' page payloads.
+    /// Heap bytes allocated across all layers' *lane-owned* page
+    /// payloads. Attached shared pages are excluded — see
+    /// [`KvCache::shared_bytes`].
     pub fn allocated_bytes(&self) -> usize {
         self.k.iter().chain(&self.v).map(PageStore::allocated_bytes).sum()
+    }
+
+    /// Positions covered by attached shared pages — always a whole-page
+    /// prefix of the row space (0 for a never-attached cache).
+    pub fn shared_rows(&self) -> usize {
+        self.k.first().map_or(0, PageStore::shared_rows)
+    }
+
+    /// Shared pages attached per store — the page count admission
+    /// accounting discounts via [`lane_cost_bytes_shared`].
+    pub fn shared_pages(&self) -> usize {
+        self.k.first().map_or(0, |s| s.shared.len())
+    }
+
+    /// Payload bytes of attached shared pages across all stores. These
+    /// are charged to the prefix cache (once), not to this lane.
+    pub fn shared_bytes(&self) -> usize {
+        self.k.iter().chain(&self.v).map(PageStore::shared_bytes).sum()
+    }
+
+    /// Export row-space page `pi` — which must be fully populated in
+    /// every store — as an immutable [`KvPageSet`] for the prefix cache.
+    /// Already-shared pages are refcount bumps; owned pages are copied
+    /// once into their single immutable incarnation.
+    pub fn export_page_set(&self, pi: usize) -> KvPageSet {
+        let page_rows = self.k.first().map_or(1, |s| s.page_rows);
+        let rows = self.k.first().map_or(0, PageStore::rows);
+        assert!(
+            (pi + 1) * page_rows <= rows,
+            "export_page_set({pi}) needs {} rows, store has {rows}",
+            (pi + 1) * page_rows
+        );
+        KvPageSet {
+            k: self.k.iter().map(|s| s.export_page(pi)).collect(),
+            v: self.v.iter().map(|s| s.export_page(pi)).collect(),
+        }
+    }
+
+    /// Attach the first `rows` positions of a cached prefix to this
+    /// (fresh, empty) cache: whole pages covered by `rows` are shared by
+    /// refcount bump; a partial tail is copied out of the divergence
+    /// page, truncated + bit-masked exactly like [`KvCache::truncate_to`]'s
+    /// tail handling (the COW split). Subsequent appends are therefore
+    /// bit-identical to a cache that prefilled those rows itself.
+    /// `pages` must hold at least `rows.div_ceil(page_rows)` page sets
+    /// shaped for the same model/mode.
+    pub fn attach_prefix(&mut self, pages: &[Arc<KvPageSet>], rows: usize) {
+        assert_eq!(self.len, 0, "attach_prefix requires a fresh cache");
+        if rows == 0 {
+            return;
+        }
+        let page_rows = self.k.first().map_or(1, |s| s.page_rows);
+        let full = rows / page_rows;
+        let tail = rows % page_rows;
+        let need = full + usize::from(tail > 0);
+        assert!(
+            pages.len() >= need,
+            "attach_prefix: {rows} rows need {need} page sets, got {}",
+            pages.len()
+        );
+        for set in pages.iter().take(need) {
+            assert_eq!(set.k.len(), self.k.len(), "page set layer count must match the cache");
+        }
+        for li in 0..self.k.len() {
+            for set in pages.iter().take(full) {
+                self.k[li].attach_full(&set.k[li]);
+                self.v[li].attach_full(&set.v[li]);
+            }
+            if tail > 0 {
+                self.k[li].copy_in_tail(&pages[full].k[li], tail);
+                self.v[li].copy_in_tail(&pages[full].v[li], tail);
+            }
+        }
+        self.len = rows;
     }
 
     /// Roll the cache back to its first `len` positions, freeing whole
@@ -439,15 +702,11 @@ impl KvCache {
     }
 }
 
-/// Worst-case page bytes a lane occupying `rows` cache positions can
-/// consume under `kv` — the amount the scheduler reserves at admission.
-/// Pages are charged whole (a lane owns its last, partially-filled page)
-/// and `flat_reserve` charges the full positional table, reproducing the
-/// seed's accounting.
-pub fn lane_cost_bytes(model: &ModelConfig, kv: &KvCacheConfig, rows: usize) -> usize {
+/// Bytes of one full page across every (layer, K|V) store under `kv` —
+/// the shared unit both lane admission ([`lane_cost_bytes`]) and the
+/// prefix cache ([`KvPageSet::cost_bytes`]) charge in.
+pub fn page_set_bytes(model: &ModelConfig, kv: &KvCacheConfig) -> usize {
     let page_rows = kv.page_rows.max(1);
-    let rows = if kv.flat_reserve { model.max_seq } else { rows.min(model.max_seq) };
-    let pages = rows.div_ceil(page_rows);
     let dense_page = page_rows * model.dim * 4;
     let mut total = 0usize;
     for li in 0..model.layers {
@@ -458,9 +717,40 @@ pub fn lane_cost_bytes(model: &ModelConfig, kv: &KvCacheConfig, rows: usize) -> 
                 (bytes(spec.layers[li].k.bits), bytes(spec.layers[li].v.bits))
             }
         };
-        total += pages * (kb + vb);
+        total += kb + vb;
     }
     total
+}
+
+/// Worst-case page bytes a lane occupying `rows` cache positions can
+/// consume under `kv` — the amount the scheduler reserves at admission.
+/// Pages are charged whole (a lane owns its last, partially-filled page)
+/// and `flat_reserve` charges the full positional table, reproducing the
+/// seed's accounting.
+pub fn lane_cost_bytes(model: &ModelConfig, kv: &KvCacheConfig, rows: usize) -> usize {
+    lane_cost_bytes_shared(model, kv, rows, 0)
+}
+
+/// [`lane_cost_bytes`] for a lane admitted through a prefix-cache hit:
+/// `shared_pages` whole pages at the front of its row space come from
+/// refcounted shared pages whose bytes the prefix cache already charged
+/// (once), so the lane reserves only its non-shared remainder. A
+/// mid-page divergence tail is copied into lane-owned storage and so
+/// stays charged to the lane. `flat_reserve` ignores the discount — the
+/// seed accounting it emulates has no sharing.
+pub fn lane_cost_bytes_shared(
+    model: &ModelConfig,
+    kv: &KvCacheConfig,
+    rows: usize,
+    shared_pages: usize,
+) -> usize {
+    let page_rows = kv.page_rows.max(1);
+    let rows = if kv.flat_reserve { model.max_seq } else { rows.min(model.max_seq) };
+    let mut pages = rows.div_ceil(page_rows);
+    if !kv.flat_reserve {
+        pages = pages.saturating_sub(shared_pages);
+    }
+    pages * page_set_bytes(model, kv)
 }
 
 /// Byte budget for the whole KV pool with reservation accounting — the
@@ -902,5 +1192,172 @@ mod tests {
         let p = KvQuantParams::new(12, 1.0, 0.5);
         assert_eq!(p.bits, 8);
         assert_eq!(p.scale, f16_round(1.0));
+    }
+
+    /// Donor cache with 13 rows in every (layer, K|V) store plus the
+    /// three full page sets it can export (page_rows = 4).
+    fn donor_and_sets(
+        cfg: &ModelConfig,
+        kvcfg: &KvCacheConfig,
+        rows: &[Vec<f32>],
+        vals: &[Vec<f32>],
+    ) -> (KvCache, Vec<Arc<KvPageSet>>) {
+        let mut donor = KvCache::new(cfg, kvcfg);
+        for li in 0..cfg.layers {
+            donor.append_chunk(li, rows, vals);
+        }
+        donor.len = rows.len();
+        let sets: Vec<Arc<KvPageSet>> =
+            (0..rows.len() / 4).map(|pi| Arc::new(donor.export_page_set(pi))).collect();
+        (donor, sets)
+    }
+
+    #[test]
+    fn attach_prefix_matches_fresh_cache_at_every_alignment() {
+        // The prefix-cache COW keystone: a cache that attaches `keep`
+        // rows of shared pages and then appends a fresh suffix must be
+        // bit-identical — flat contents AND attention-path reads — to a
+        // cache that appended keep + suffix itself. `keep` sweeps page
+        // boundaries (4, 8, 12), one row past them (5, 9), and cuts
+        // inside the bit-packed tail word of a quantized page (7, 11:
+        // 3·8·5 = 120 bits masks mid-word at bits = 5).
+        let cfg = tiny_cfg(2);
+        let mut rng = Rng::new(401);
+        let rows = rand_rows(&mut rng, 12, cfg.dim);
+        let vals = rand_rows(&mut rng, 12, cfg.dim);
+        let ext_k = rand_rows(&mut rng, 5, cfg.dim);
+        let ext_v = rand_rows(&mut rng, 5, cfg.dim);
+        for kvcfg in [
+            KvCacheConfig { page_rows: 4, ..KvCacheConfig::dense() },
+            KvCacheConfig {
+                page_rows: 4,
+                ..KvCacheConfig::quantized(KvQuantSpec::uniform(2, 5, 1.0, 0.1))
+            },
+        ] {
+            let (_donor, sets) = donor_and_sets(&cfg, &kvcfg, &rows, &vals);
+            for keep in [4usize, 5, 7, 8, 9, 11, 12] {
+                let mut attached = KvCache::new(&cfg, &kvcfg);
+                attached.attach_prefix(&sets, keep);
+                assert_eq!(attached.len, keep);
+                assert_eq!(attached.shared_rows(), (keep / 4) * 4);
+                assert_eq!(attached.shared_pages(), keep / 4);
+                for li in 0..cfg.layers {
+                    attached.append_chunk(li, &ext_k, &ext_v);
+                }
+                attached.len = keep + 5;
+
+                let mut fresh = KvCache::new(&cfg, &kvcfg);
+                for li in 0..cfg.layers {
+                    fresh.append_chunk(li, &rows[..keep], &vals[..keep]);
+                    fresh.append_chunk(li, &ext_k, &ext_v);
+                }
+                fresh.len = keep + 5;
+
+                for li in 0..cfg.layers {
+                    assert_eq!(attached.k_flat(li), fresh.k_flat(li), "keep={keep} K layer {li}");
+                    assert_eq!(attached.v_flat(li), fresh.v_flat(li), "keep={keep} V layer {li}");
+                }
+                let (ak, av) = attached.layer_rows(0);
+                let (fk, fv) = fresh.layer_rows(0);
+                let mut ba = vec![0f32; cfg.dim / cfg.heads];
+                let mut bb = vec![0f32; cfg.dim / cfg.heads];
+                for ti in 0..keep + 5 {
+                    for h in 0..cfg.heads {
+                        assert_eq!(
+                            ak.head_slice(ti, h * ba.len(), &mut ba),
+                            fk.head_slice(ti, h * bb.len(), &mut bb),
+                            "keep={keep} K row {ti} head {h}"
+                        );
+                        assert_eq!(
+                            av.head_slice(ti, h * ba.len(), &mut ba),
+                            fv.head_slice(ti, h * bb.len(), &mut bb),
+                            "keep={keep} V row {ti} head {h}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn truncate_below_shared_run_cow_splits_without_touching_the_donor() {
+        // COW split at a page boundary (8), one row past one (5, 9), and
+        // inside the bit-packed tail word of a quantized page (7), plus
+        // to zero: the lane detaches/copies, the donor's exported pages
+        // must remain byte-identical throughout (other lanes may still
+        // be attached to them).
+        let cfg = tiny_cfg(1);
+        let mut rng = Rng::new(402);
+        let rows = rand_rows(&mut rng, 12, cfg.dim);
+        let vals = rand_rows(&mut rng, 12, cfg.dim);
+        let ext_k = rand_rows(&mut rng, 4, cfg.dim);
+        let ext_v = rand_rows(&mut rng, 4, cfg.dim);
+        for kvcfg in [
+            KvCacheConfig { page_rows: 4, ..KvCacheConfig::dense() },
+            KvCacheConfig {
+                page_rows: 4,
+                ..KvCacheConfig::quantized(KvQuantSpec::uniform(1, 5, 1.0, 0.1))
+            },
+        ] {
+            let (donor, sets) = donor_and_sets(&cfg, &kvcfg, &rows, &vals);
+            let donor_k = donor.k_flat(0);
+            for keep in [0usize, 5, 7, 8, 9] {
+                let mut lane = KvCache::new(&cfg, &kvcfg);
+                lane.attach_prefix(&sets, 12);
+                lane.truncate_to(keep);
+                assert_eq!(lane.len, keep);
+                assert_eq!(lane.shared_pages(), keep / 4, "full pages below the cut stay shared");
+                lane.append_chunk(0, &ext_k, &ext_v);
+                lane.len = keep + 4;
+
+                let mut fresh = KvCache::new(&cfg, &kvcfg);
+                fresh.append_chunk(0, &rows[..keep], &vals[..keep]);
+                fresh.append_chunk(0, &ext_k, &ext_v);
+                fresh.len = keep + 4;
+                assert_eq!(lane.k_flat(0), fresh.k_flat(0), "keep={keep} K diverged");
+                assert_eq!(lane.v_flat(0), fresh.v_flat(0), "keep={keep} V diverged");
+                // The donor (and thus every other attached lane) is
+                // untouched by this lane's COW writes.
+                assert_eq!(donor.k_flat(0), donor_k, "keep={keep} donor mutated");
+            }
+        }
+    }
+
+    #[test]
+    fn shared_pages_are_charged_to_the_cache_not_the_lane() {
+        let cfg = tiny_cfg(2);
+        let mut rng = Rng::new(403);
+        let rows = rand_rows(&mut rng, 12, cfg.dim);
+        let vals = rand_rows(&mut rng, 12, cfg.dim);
+        let kvcfg = KvCacheConfig { page_rows: 4, ..KvCacheConfig::dense() };
+        let (_donor, sets) = donor_and_sets(&cfg, &kvcfg, &rows, &vals);
+        // A page set's cost is exactly one page of lane accounting, so
+        // cache-side charges and lane-side discounts cancel.
+        let ps = page_set_bytes(&cfg, &kvcfg);
+        assert_eq!(sets[0].cost_bytes(), ps);
+        assert_eq!(lane_cost_bytes(&cfg, &kvcfg, 4), ps);
+        // Whole-page attach: the lane owns nothing, shares everything.
+        let mut lane = KvCache::new(&cfg, &kvcfg);
+        lane.attach_prefix(&sets, 8);
+        assert_eq!(lane.allocated_bytes(), 0, "attach allocates no lane-owned pages");
+        assert_eq!(lane.shared_bytes(), 2 * ps);
+        // Mid-page attach: the copied COW tail is lane-owned.
+        let mut lane = KvCache::new(&cfg, &kvcfg);
+        lane.attach_prefix(&sets, 9);
+        assert_eq!(lane.shared_bytes(), 2 * ps);
+        assert!(lane.allocated_bytes() > 0, "the COW tail is lane-owned");
+        // Admission discount mirrors the split: 9 rows = 3 pages, 2
+        // shared, so the lane reserves exactly one page set.
+        assert_eq!(lane_cost_bytes_shared(&cfg, &kvcfg, 9, 2), ps);
+        assert_eq!(
+            lane_cost_bytes_shared(&cfg, &kvcfg, 9, 0),
+            lane_cost_bytes(&cfg, &kvcfg, 9)
+        );
+        // flat_reserve emulates the seed: no sharing, no discount.
+        let flat = KvCacheConfig { page_rows: 4, ..KvCacheConfig::dense_flat() };
+        assert_eq!(
+            lane_cost_bytes_shared(&cfg, &flat, 9, 2),
+            lane_cost_bytes(&cfg, &flat, 9)
+        );
     }
 }

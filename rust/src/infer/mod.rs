@@ -3,8 +3,10 @@
 //! (optionally-quantized) KV cache with pool-budget admission
 //! accounting, the KV-cached batched decode engine with chunked prefill,
 //! the execution backends (single-thread / column-sharded /
-//! layer-pipeline) behind the engine, and the continuous-batching
-//! request server with an admission router for multi-replica serving.
+//! layer-pipeline) behind the engine, the continuous-batching
+//! request server with an admission router for multi-replica serving,
+//! and a cross-request prefix cache that shares immutable KV page runs
+//! between lanes with common prompt prefixes.
 
 /// Execution backends: single-thread, column-sharded, layer-pipeline.
 pub mod backend;
@@ -14,6 +16,8 @@ pub mod engine;
 pub mod kv;
 /// Mixed-precision bit-packed matvec/GEMM kernels.
 pub mod matvec;
+/// Cross-request radix-tree prefix cache over shared KV page runs.
+pub mod prefix;
 /// Admission router: continuous batching across engine replicas.
 pub mod router;
 /// Continuous-batching request server (plain and speculative).
@@ -24,10 +28,11 @@ pub mod speculative;
 pub use backend::{Backend, ColumnSharded, LayerPipeline, SingleThread};
 pub use engine::Engine;
 pub use kv::{
-    lane_cost_bytes, KvCache, KvCacheConfig, KvLayerQuant, KvPool, KvQuantParams, KvQuantSpec,
-    KV_PAGE_ROWS,
+    lane_cost_bytes, lane_cost_bytes_shared, page_set_bytes, KvCache, KvCacheConfig, KvLayerQuant,
+    KvPageSet, KvPool, KvQuantParams, KvQuantSpec, KV_PAGE_ROWS,
 };
 pub use matvec::{dense_matmul, dense_matvec, MatvecPlan, QuantMatvec, GEMM_ROW_TILE};
+pub use prefix::PrefixCache;
 pub use router::{route, serve_replicated, RouterConfig, RouterStats};
 pub use server::{
     serve, serve_ladder, serve_ladder_mapped, serve_speculative, serve_threaded, serve_with,

@@ -1,0 +1,445 @@
+//! Cross-request prefix cache: a radix tree over *page-sized* token
+//! chunks whose nodes hold immutable, refcounted runs of KV pages
+//! ([`KvPageSet`]). Real request streams are Zipf-shared — system
+//! prompts and few-shot preambles repeat across most requests — so the
+//! scheduler (`infer::server`) amortizes their prefill across requests:
+//!
+//! - **Insert-on-retire**: a lane whose whole prompt was fed publishes
+//!   its prompt's full pages here. Pages are exported once
+//!   ([`KvCache::export_page_set`]) and charged ONCE against the shared
+//!   [`KvPool`], however many lanes later attach them.
+//! - **Lookup-on-admit**: admission walks the tree for the longest
+//!   cached page path matching the new prompt, attaches it to the
+//!   lane's fresh cache ([`KvCache::attach_prefix`]), and skips that
+//!   part of prefill entirely — the TTFT win. The lane reserves only
+//!   its non-shared remainder (`lane_cost_bytes_shared`).
+//! - **Refcounted eviction**: [`PrefixCache::acquire`]/[`PrefixCache::release`]
+//!   pin a path for the lifetime of each attached lane; under pool
+//!   pressure [`PrefixCache::evict_lru`] frees the least-recently-used
+//!   *unreferenced leaf* back to the pool. Interior nodes are protected
+//!   by construction (children hold longer prefixes of the same pages'
+//!   run and always outlive them in LRU order — a run evicts
+//!   tail-first), and a run with live references is never touched.
+//!
+//! Keying is page-granular on purpose: a node exists only for a *full*
+//! page of prompt tokens, so every cached page is immutable and
+//! complete, and the divergence point inside a partially-matching page
+//! is handled by the lane's own COW copy, not by the tree. Token
+//! identity is unaffected by any of this — attention reads rows through
+//! `KvRows` views that are backing-independent (see DESIGN.md §Prefix
+//! caching).
+
+use crate::infer::kv::{KvCache, KvPageSet, KvPool};
+use std::sync::Arc;
+
+/// One radix node: a full page of prompt tokens and the KV pages their
+/// prefill produced.
+#[derive(Debug)]
+struct Node {
+    /// Exactly `page_rows` prompt tokens — the edge label from `parent`.
+    chunk: Vec<u32>,
+    /// The immutable page set those tokens produced (one full page per
+    /// (layer, K|V) store).
+    pages: Arc<KvPageSet>,
+    parent: Option<usize>,
+    children: Vec<usize>,
+    /// Lanes currently attached through this node. Eviction never
+    /// touches a node with live references.
+    refs: usize,
+    /// LRU clock value at the last lookup/insert touch.
+    last_used: u64,
+    /// Pool bytes charged (once) for `pages`.
+    cost: usize,
+}
+
+/// The cross-request prefix cache. One instance per scheduler call
+/// (`serve_replicated` gives each replica its own); entries hold
+/// reservations against the scheduler's [`KvPool`], so the scheduler
+/// drains the cache back into the pool before returning.
+#[derive(Debug)]
+pub struct PrefixCache {
+    page_rows: usize,
+    /// Slot-map of nodes; `None` slots are free-listed.
+    nodes: Vec<Option<Node>>,
+    free: Vec<usize>,
+    /// First-chunk nodes (depth 0).
+    roots: Vec<usize>,
+    clock: u64,
+    reserved: usize,
+}
+
+impl PrefixCache {
+    /// Empty cache keyed on `page_rows`-token chunks (must match the
+    /// engine's KV page geometry).
+    pub fn new(page_rows: usize) -> PrefixCache {
+        PrefixCache {
+            page_rows: page_rows.max(1),
+            nodes: Vec::new(),
+            free: Vec::new(),
+            roots: Vec::new(),
+            clock: 0,
+            reserved: 0,
+        }
+    }
+
+    /// Live cached nodes (page sets).
+    pub fn len(&self) -> usize {
+        self.nodes.iter().flatten().count()
+    }
+
+    /// Whether the cache holds no nodes.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Pool bytes currently reserved by cached page sets. The scheduler
+    /// subtracts this when deciding whether deferring an admission could
+    /// ever succeed (a pool holding only cache reservations frees
+    /// nothing by waiting for retirements).
+    pub fn reserved_bytes(&self) -> usize {
+        self.reserved
+    }
+
+    fn node(&self, id: usize) -> &Node {
+        self.nodes[id].as_ref().expect("live prefix node")
+    }
+
+    fn node_mut(&mut self, id: usize) -> &mut Node {
+        self.nodes[id].as_mut().expect("live prefix node")
+    }
+
+    fn touch(&mut self, id: usize) {
+        self.clock += 1;
+        let clock = self.clock;
+        self.node_mut(id).last_used = clock;
+    }
+
+    /// Longest cached page path matching `prompt`'s whole-page chunks,
+    /// root-first. Matched nodes are LRU-touched. The caller decides how
+    /// many of the path's pages to actually attach (it may cap sharing
+    /// below the full match, e.g. to keep at least one prompt token to
+    /// feed).
+    pub fn lookup(&mut self, prompt: &[u32]) -> Vec<usize> {
+        let r = self.page_rows;
+        let mut path = Vec::new();
+        let mut level = self.roots.clone();
+        let mut depth = 0usize;
+        while (depth + 1) * r <= prompt.len() {
+            let chunk = &prompt[depth * r..(depth + 1) * r];
+            let hit = level.iter().copied().find(|&id| self.node(id).chunk.as_slice() == chunk);
+            let Some(id) = hit else { break };
+            self.touch(id);
+            path.push(id);
+            level = self.node(id).children.clone();
+            depth += 1;
+        }
+        path
+    }
+
+    /// Page-set handles for a looked-up path, in path order — what
+    /// [`KvCache::attach_prefix`] consumes.
+    pub fn pages(&self, path: &[usize]) -> Vec<Arc<KvPageSet>> {
+        path.iter().map(|&id| Arc::clone(&self.node(id).pages)).collect()
+    }
+
+    /// Pin every node on `path` against eviction — one call per lane
+    /// that attaches (or is about to attach) the path.
+    pub fn acquire(&mut self, path: &[usize]) {
+        for &id in path {
+            self.node_mut(id).refs += 1;
+        }
+    }
+
+    /// Drop a lane's pins (at retirement, or when a deferred admission
+    /// gives the path back before re-queuing).
+    pub fn release(&mut self, path: &[usize]) {
+        for &id in path {
+            let n = self.node_mut(id);
+            debug_assert!(n.refs > 0, "release without matching acquire");
+            n.refs = n.refs.saturating_sub(1);
+        }
+    }
+
+    /// Publish the whole-page prefix of `prompt`, exporting pages from a
+    /// retired lane's cache. Chunks already cached are deduplicated (and
+    /// LRU-touched); each NEW node's bytes are reserved against `pool`
+    /// — this is the single place shared pages are ever charged. Under
+    /// pressure, unreferenced LRU runs are evicted to make room; if
+    /// nothing more can be freed, insertion stops early (the cache is
+    /// opportunistic). Returns `(nodes_inserted, nodes_evicted)`.
+    pub fn insert(&mut self, prompt: &[u32], cache: &KvCache, pool: &mut KvPool) -> (usize, usize) {
+        let r = self.page_rows;
+        let full = prompt.len() / r;
+        let mut parent: Option<usize> = None;
+        // Hold the path while inserting so eviction can't free an
+        // ancestor out from under the nodes we are still adding.
+        let mut held: Vec<usize> = Vec::new();
+        let (mut inserted, mut evicted) = (0usize, 0usize);
+        'pages: for pi in 0..full {
+            let chunk = &prompt[pi * r..(pi + 1) * r];
+            let level = match parent {
+                None => self.roots.clone(),
+                Some(p) => self.node(p).children.clone(),
+            };
+            let hit = level.iter().copied().find(|&id| self.node(id).chunk.as_slice() == chunk);
+            if let Some(id) = hit {
+                self.touch(id);
+                self.node_mut(id).refs += 1;
+                held.push(id);
+                parent = Some(id);
+                continue;
+            }
+            let set = cache.export_page_set(pi);
+            let cost = set.cost_bytes();
+            while !pool.try_reserve(cost) {
+                if !self.evict_lru(pool) {
+                    break 'pages;
+                }
+                evicted += 1;
+            }
+            self.clock += 1;
+            let node = Node {
+                chunk: chunk.to_vec(),
+                pages: Arc::new(set),
+                parent,
+                children: Vec::new(),
+                refs: 1, // held below until the insert completes
+                last_used: self.clock,
+                cost,
+            };
+            let id = match self.free.pop() {
+                Some(slot) => {
+                    self.nodes[slot] = Some(node);
+                    slot
+                }
+                None => {
+                    self.nodes.push(Some(node));
+                    self.nodes.len() - 1
+                }
+            };
+            match parent {
+                None => self.roots.push(id),
+                Some(p) => self.node_mut(p).children.push(id),
+            }
+            self.reserved += cost;
+            held.push(id);
+            inserted += 1;
+            parent = Some(id);
+        }
+        self.release(&held);
+        (inserted, evicted)
+    }
+
+    /// Evict the least-recently-used unreferenced *leaf* and release its
+    /// bytes to `pool`. Interior nodes are protected by their children
+    /// (a cached run evicts tail-first); nodes with live references are
+    /// never touched. Returns `false` when nothing is evictable.
+    pub fn evict_lru(&mut self, pool: &mut KvPool) -> bool {
+        let mut victim: Option<(usize, u64)> = None;
+        for (id, slot) in self.nodes.iter().enumerate() {
+            let Some(n) = slot else { continue };
+            if n.refs == 0 && n.children.is_empty() {
+                let older = match victim {
+                    None => true,
+                    Some((_, lu)) => n.last_used < lu,
+                };
+                if older {
+                    victim = Some((id, n.last_used));
+                }
+            }
+        }
+        let Some((id, _)) = victim else { return false };
+        let n = self.nodes[id].take().expect("victim is live");
+        match n.parent {
+            None => self.roots.retain(|&c| c != id),
+            Some(p) => self.node_mut(p).children.retain(|&c| c != id),
+        }
+        pool.release(n.cost);
+        self.reserved -= n.cost;
+        self.free.push(id);
+        true
+    }
+
+    /// Evict everything evictable, returning the number of nodes freed.
+    /// The scheduler calls this on exit — every lane has retired, so no
+    /// node is pinned and the pool's reservation count returns to zero.
+    pub fn drain(&mut self, pool: &mut KvPool) -> usize {
+        let mut n = 0usize;
+        while self.evict_lru(pool) {
+            n += 1;
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::kv::{lane_cost_bytes, page_set_bytes, KvCacheConfig, KvQuantSpec};
+    use crate::model::config::ModelConfig;
+    use crate::util::rng::Rng;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig { vocab: 32, dim: 8, heads: 2, layers: 1, mlp: 16, max_seq: 24 }
+    }
+
+    /// A retired lane's cache holding `prompt.len()` rows derived
+    /// deterministically from the prompt tokens, so equal prompts export
+    /// byte-identical pages and different prompts don't.
+    fn cache_for(prompt: &[u32], cfg: &ModelConfig, kvcfg: &KvCacheConfig) -> KvCache {
+        let mut cache = KvCache::new(cfg, kvcfg);
+        let rows: Vec<Vec<f32>> = prompt
+            .iter()
+            .map(|&t| {
+                let mut r = vec![0f32; cfg.dim];
+                let mut rng = Rng::new(1000 + t as u64);
+                rng.fill_gauss(&mut r, 0.0, 1.0);
+                r
+            })
+            .collect();
+        for li in 0..cfg.layers {
+            cache.append_chunk(li, &rows, &rows);
+        }
+        cache.len = prompt.len();
+        cache
+    }
+
+    fn prompt(tokens: &[u32]) -> Vec<u32> {
+        tokens.to_vec()
+    }
+
+    #[test]
+    fn insert_then_lookup_longest_match() {
+        let cfg = tiny_cfg();
+        let kvcfg = KvCacheConfig { page_rows: 4, ..KvCacheConfig::dense() };
+        let mut pc = PrefixCache::new(4);
+        let mut pool = KvPool::new(None);
+        let p = prompt(&[1, 2, 3, 4, 5, 6, 7, 8, 9, 10]);
+        let cache = cache_for(&p, &cfg, &kvcfg);
+        let (ins, ev) = pc.insert(&p, &cache, &mut pool);
+        assert_eq!((ins, ev), (2, 0), "10 tokens cache 2 full pages, partial tail skipped");
+        assert_eq!(pc.len(), 2);
+        assert_eq!(pc.reserved_bytes(), 2 * page_set_bytes(&cfg, &kvcfg));
+        assert_eq!(pool.reserved(), pc.reserved_bytes());
+
+        // Full match on both pages; sharing structure at every depth.
+        assert_eq!(pc.lookup(&p).len(), 2);
+        assert_eq!(pc.lookup(&[1, 2, 3, 4, 5, 6, 7, 8]).len(), 2);
+        assert_eq!(pc.lookup(&[1, 2, 3, 4, 99, 98, 97, 96]).len(), 1, "diverges in page 2");
+        assert_eq!(pc.lookup(&[1, 2, 3, 4, 5, 6, 7]).len(), 1, "partial page 2 can't match");
+        assert_eq!(pc.lookup(&[9, 9, 9, 9]).len(), 0);
+        // The attached pages round-trip the donor's bytes.
+        let path = pc.lookup(&p);
+        let mut lane = KvCache::new(&cfg, &kvcfg);
+        lane.attach_prefix(&pc.pages(&path), 8);
+        assert_eq!(lane.k_flat(0), cache.k_flat(0)[..8 * cfg.dim]);
+
+        // Re-inserting the same prompt dedups; a sibling prompt shares
+        // the first page and adds one node.
+        let (ins, _) = pc.insert(&p, &cache, &mut pool);
+        assert_eq!(ins, 0, "identical prompt inserts nothing");
+        let q = prompt(&[1, 2, 3, 4, 50, 51, 52, 53]);
+        let qc = cache_for(&q, &cfg, &kvcfg);
+        let (ins, _) = pc.insert(&q, &qc, &mut pool);
+        assert_eq!(ins, 1, "shared first page dedups, divergent second inserts");
+        assert_eq!(pc.len(), 3);
+        pc.drain(&mut pool);
+        assert_eq!(pool.reserved(), 0, "drain returns every cached byte");
+        assert!(pc.is_empty());
+    }
+
+    #[test]
+    fn eviction_is_lru_leaf_only_and_respects_refs() {
+        let cfg = tiny_cfg();
+        let kvcfg = KvCacheConfig { page_rows: 4, ..KvCacheConfig::dense() };
+        let ps = page_set_bytes(&cfg, &kvcfg);
+        let mut pc = PrefixCache::new(4);
+        let mut pool = KvPool::new(Some(4 * ps));
+        let a = prompt(&[1, 2, 3, 4, 5, 6, 7, 8]); // 2 nodes
+        let b = prompt(&[20, 21, 22, 23]); // 1 node
+        let ca = cache_for(&a, &cfg, &kvcfg);
+        let cb = cache_for(&b, &cfg, &kvcfg);
+        pc.insert(&a, &ca, &mut pool);
+        pc.insert(&b, &cb, &mut pool);
+        assert_eq!(pc.len(), 3);
+
+        // Pin a's path: only b is evictable even though a is older.
+        let pa = pc.lookup(&a);
+        // (lookup touched a — re-touch b's recency below it for the test)
+        let pb = pc.lookup(&b);
+        pc.acquire(&pa);
+        let freed = pc.evict_lru(&mut pool);
+        assert!(freed);
+        assert_eq!(pc.lookup(&b).len(), 0, "unpinned b evicted despite newer recency");
+        assert_eq!(pc.lookup(&a).len(), 2, "pinned run untouched");
+        assert!(!pc.evict_lru(&mut pool), "every remaining node is pinned");
+        drop(pb);
+
+        // Released runs evict tail-first (leaf before its parent), LRU
+        // across roots.
+        pc.release(&pa);
+        assert!(pc.evict_lru(&mut pool), "leaf of a's run");
+        assert_eq!(pc.lookup(&a).len(), 1, "interior node survives its child");
+        assert!(pc.evict_lru(&mut pool));
+        assert_eq!(pool.reserved(), 0, "drop-to-zero returns all bytes to the pool");
+        assert_eq!(pc.reserved_bytes(), 0);
+    }
+
+    #[test]
+    fn insert_under_pressure_evicts_then_stops_gracefully() {
+        let cfg = tiny_cfg();
+        let kvcfg = KvCacheConfig { page_rows: 4, ..KvCacheConfig::dense() };
+        let ps = page_set_bytes(&cfg, &kvcfg);
+        // Room for exactly two page sets.
+        let mut pc = PrefixCache::new(4);
+        let mut pool = KvPool::new(Some(2 * ps));
+        let a = prompt(&[1, 2, 3, 4]);
+        let b = prompt(&[5, 6, 7, 8]);
+        let c = prompt(&[9, 10, 11, 12, 13, 14, 15, 16, 17, 18, 19, 20]);
+        pc.insert(&a, &cache_for(&a, &cfg, &kvcfg), &mut pool);
+        pc.insert(&b, &cache_for(&b, &cfg, &kvcfg), &mut pool);
+        assert_eq!(pc.len(), 2);
+        // c wants 3 nodes: evicts a then b (LRU order), caches 2 of its
+        // 3 pages, and stops early without panicking or over-reserving.
+        let (ins, ev) = pc.insert(&c, &cache_for(&c, &cfg, &kvcfg), &mut pool);
+        assert_eq!(ev, 2, "both unreferenced sets evicted");
+        assert_eq!(ins, 2, "c's run is capped by the budget");
+        assert_eq!(pc.lookup(&a).len(), 0);
+        assert_eq!(pc.lookup(&c).len(), 2);
+        assert!(pool.reserved() <= 2 * ps);
+        // A fully-pinned cache rejects further inserts without evicting.
+        let par = pc.lookup(&c);
+        pc.acquire(&par);
+        let d = prompt(&[30, 31, 32, 33]);
+        let (ins, ev) = pc.insert(&d, &cache_for(&d, &cfg, &kvcfg), &mut pool);
+        assert_eq!((ins, ev), (0, 0), "nothing evictable, nothing inserted");
+        pc.release(&par);
+        pc.drain(&mut pool);
+        assert_eq!(pool.reserved(), 0);
+    }
+
+    #[test]
+    fn quantized_page_sets_cache_and_cost_correctly() {
+        let cfg = tiny_cfg();
+        let kvcfg = KvCacheConfig {
+            page_rows: 4,
+            ..KvCacheConfig::quantized(KvQuantSpec::uniform(1, 5, 1.0, 0.1))
+        };
+        let ps = page_set_bytes(&cfg, &kvcfg);
+        assert_eq!(ps, lane_cost_bytes(&cfg, &kvcfg, 4));
+        let mut pc = PrefixCache::new(4);
+        let mut pool = KvPool::new(None);
+        let p = prompt(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        let cache = cache_for(&p, &cfg, &kvcfg);
+        let (ins, _) = pc.insert(&p, &cache, &mut pool);
+        assert_eq!(ins, 2);
+        assert_eq!(pool.reserved(), 2 * ps, "quant sets charge quant bytes");
+        let path = pc.lookup(&p);
+        let mut lane = KvCache::new(&cfg, &kvcfg);
+        lane.attach_prefix(&pc.pages(&path), 8);
+        assert!(lane.is_quantized());
+        assert_eq!(lane.k_flat(0), cache.k_flat(0)[..8 * cfg.dim]);
+        pc.drain(&mut pool);
+        assert_eq!(pool.reserved(), 0);
+    }
+}

@@ -26,6 +26,18 @@
 //! latency* for big ones. The two compose — each replica can itself run
 //! a sharded backend — and `docs/SERVING.md` §Sizing covers how to
 //! split cores between W and R.
+//!
+//! Prefix caching is per replica: when
+//! [`ServeConfig::prefix_cache`] is set on [`RouterConfig::replica`],
+//! each replica's scheduler builds its own
+//! [`crate::infer::prefix::PrefixCache`] scoped to its call — caches
+//! are never shared across replicas (no cross-thread page traffic, and
+//! each cache's reservations stay inside that replica's own `KvPool`
+//! budget). Per-replica hit/reuse/eviction counters surface through
+//! [`RouterStats::replicas`]. The cost: a prefix family split across
+//! replicas by least-loaded routing warms R caches instead of one, so
+//! workloads dominated by one hot prefix may prefer fewer, larger
+//! replicas.
 
 use crate::infer::engine::Engine;
 use crate::infer::server::{serve_with, Request, Response, ServeConfig, ServeStats};

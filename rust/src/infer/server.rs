@@ -59,8 +59,9 @@ use std::time::{Duration, Instant};
 
 use crate::error::RadioError;
 use crate::infer::engine::{argmax, Engine};
-use crate::infer::kv::{lane_cost_bytes, KvCache, KvPool};
+use crate::infer::kv::{lane_cost_bytes, lane_cost_bytes_shared, KvCache, KvPool};
 use crate::infer::matvec::GEMM_ROW_TILE;
+use crate::infer::prefix::PrefixCache;
 use crate::util::failpoint;
 
 /// One generation request.
@@ -147,6 +148,18 @@ pub struct ServeConfig {
     /// (the oldest `max_queued` requests keep their FIFO service
     /// order; the newest are shed). `None` = accept everything.
     pub max_queued: Option<usize>,
+    /// Cross-request prefix caching (`infer::prefix`): retiring lanes
+    /// publish their prompts' full KV pages into a per-scheduler radix
+    /// cache; admissions attach the longest cached prefix, skip that
+    /// part of prefill (the TTFT win), and reserve only the non-shared
+    /// remainder of their worst case — shared pages are charged against
+    /// [`ServeConfig::kv_budget_bytes`] ONCE, by the cache, with
+    /// refcounted release and LRU eviction of unreferenced runs under
+    /// pool pressure. Token-neutral by construction: attention reads
+    /// rows through backing-independent `KvRows` views, so served
+    /// tokens stay identical to `generate()` (see DESIGN.md §Prefix
+    /// caching). Off by default.
+    pub prefix_cache: bool,
 }
 
 impl ServeConfig {
@@ -163,6 +176,7 @@ impl ServeConfig {
             draft_bits: None,
             deadline_steps: None,
             max_queued: None,
+            prefix_cache: false,
         }
     }
 }
@@ -321,6 +335,21 @@ pub struct ServeStats {
     /// ran degraded, falling back to the nearest surviving rate point.
     /// Always 0 for eager loads, which refuse corrupt containers.
     pub degraded_sections: usize,
+    /// Admissions that attached a cached prefix run
+    /// ([`ServeConfig::prefix_cache`]; 0 with the cache off).
+    pub prefix_hits: usize,
+    /// Prompt tokens served from shared pages instead of being
+    /// prefilled — the engine work the prefix cache saved.
+    pub prefix_tokens_reused: usize,
+    /// Cached prefix page sets LRU-evicted under KV-pool pressure (the
+    /// exit-time drain is bookkeeping, not pressure, and is not
+    /// counted).
+    pub prefix_evictions: usize,
+    /// Most bytes reserved against the KV pool in any single iteration:
+    /// admitted lanes' worst-case remainders plus cached prefix pages
+    /// (each charged once, however many lanes share them) — the number
+    /// `bench_prefix` compares across its cache-on/off arms.
+    pub peak_kv_bytes: usize,
 }
 
 impl ServeStats {
@@ -382,6 +411,13 @@ impl std::fmt::Display for ServeStats {
         if self.kv_deferrals > 0 {
             write!(f, ", {} KV-pool deferrals", self.kv_deferrals)?;
         }
+        if self.prefix_hits > 0 || self.prefix_evictions > 0 {
+            write!(
+                f,
+                ", prefix cache: {} hits / {} tokens reused / {} evictions",
+                self.prefix_hits, self.prefix_tokens_reused, self.prefix_evictions
+            )?;
+        }
         if self.spec_proposed > 0 {
             write!(
                 f,
@@ -432,6 +468,8 @@ fn finalize_stats(
     kv_deferrals: usize,
     spec: (usize, usize),
     robust: RobustCounters,
+    prefix: (usize, usize, usize),
+    peak_kv_bytes: usize,
 ) -> ServeStats {
     let mut lats: Vec<Duration> = responses.iter().map(|r| r.latency).collect();
     // TTFT percentiles cover only responses that produced a token:
@@ -481,6 +519,10 @@ fn finalize_stats(
         chunk_regrows: robust.chunk_regrows,
         spec_disables: robust.spec_disables,
         degraded_sections: 0,
+        prefix_hits: prefix.0,
+        prefix_tokens_reused: prefix.1,
+        prefix_evictions: prefix.2,
+        peak_kv_bytes,
     }
 }
 
@@ -536,8 +578,12 @@ struct ActiveSeq {
     out: Vec<u32>,
     ttft: Option<Duration>,
     /// Worst-case KV bytes reserved against the pool at admission,
-    /// released verbatim at retirement.
+    /// released verbatim at retirement. With a prefix-cache hit this is
+    /// only the non-shared remainder (`lane_cost_bytes_shared`).
     kv_cost: usize,
+    /// Prefix-cache nodes this lane holds pinned (empty without a hit);
+    /// released at retirement so eviction can reclaim the run.
+    prefix_path: Vec<usize>,
     /// Scheduler iterations this lane has been resident — the clock
     /// [`ServeConfig::deadline_steps`] is measured on.
     steps_resident: usize,
@@ -607,6 +653,14 @@ pub fn serve_with(
     // wait iterations — the head request re-checks the pool every
     // iteration and would otherwise inflate the stat by decode length.
     let mut last_deferred: Option<usize> = None;
+    // Cross-request prefix cache (one per scheduler call;
+    // serve_replicated gives each replica its own). Cached page sets
+    // hold pool reservations, so the cache is drained back into the
+    // pool before exit.
+    let page_rows = engine.kv_config().page_rows.max(1);
+    let mut prefix = cfg.prefix_cache.then(|| PrefixCache::new(page_rows));
+    let (mut prefix_hits, mut prefix_reused, mut prefix_evictions) = (0usize, 0usize, 0usize);
+    let mut peak_kv = 0usize;
     robust.shed = shed_overload(&mut queue, cfg.max_queued, &mut responses, t0);
 
     loop {
@@ -628,34 +682,86 @@ pub fn serve_with(
             // final generated token is emitted, never fed), clamped to
             // the positional table — `generate`'s stopping rule.
             let rows_worst = (keep + req.max_new.saturating_sub(1)).min(max_seq);
+            // Prefix lookup before reserving: whole pages matched in the
+            // cache are already charged (once) by it, so the lane
+            // reserves only its non-shared remainder. At least one
+            // prompt token is always fed — the lane needs logits to
+            // emit from — capping sharing at keep − 1; a cap landing
+            // mid-page becomes a lane-owned COW tail at attach.
+            let mut path: Vec<usize> = Vec::new();
+            let mut shared = 0usize;
+            if req.max_new > 0 && keep > 0 {
+                if let Some(pc) = prefix.as_mut() {
+                    path = pc.lookup(&req.prompt[..keep]);
+                    shared = (path.len() * page_rows).min(keep - 1);
+                    if shared == 0 {
+                        path.clear();
+                    } else {
+                        pc.acquire(&path); // pin against eviction
+                    }
+                }
+            }
             let kv_cost = if req.max_new == 0 {
                 0 // completes at admission; never builds a cache
             } else {
-                lane_cost_bytes(&engine.config, engine.kv_config(), rows_worst)
+                lane_cost_bytes_shared(
+                    &engine.config,
+                    engine.kv_config(),
+                    rows_worst,
+                    shared / page_rows,
+                )
             };
-            if !pool.try_reserve(kv_cost) {
-                if active.is_empty() && pool.reserved() == 0 {
-                    pool.reserve_unchecked(kv_cost); // solo over-budget lane
+            let mut admitted = pool.try_reserve(kv_cost);
+            if !admitted {
+                // Pool pressure: LRU-evict unreferenced cached runs
+                // before deferring — the cache is opportunistic,
+                // admissions are not.
+                if let Some(pc) = prefix.as_mut() {
+                    while pc.evict_lru(&mut pool) {
+                        prefix_evictions += 1;
+                        if pool.try_reserve(kv_cost) {
+                            admitted = true;
+                            break;
+                        }
+                    }
+                }
+            }
+            if !admitted {
+                let cache_held = prefix.as_ref().map_or(0, PrefixCache::reserved_bytes);
+                if active.is_empty() && pool.reserved() == cache_held {
+                    // Solo progress guarantee: every remaining reserved
+                    // byte is the cache's own (this lane's pinned path
+                    // included) — no retirement can ever free budget,
+                    // so deferring would deadlock the queue.
+                    pool.reserve_unchecked(kv_cost);
                 } else {
                     deferred_now = true;
                     if last_deferred != Some(req.id) {
                         kv_deferrals += 1;
                         last_deferred = Some(req.id);
                     }
+                    if let Some(pc) = prefix.as_mut() {
+                        pc.release(&path); // re-looked-up on retry
+                    }
                     queue.push_front(req);
                     break;
                 }
+            }
+            if shared > 0 {
+                prefix_hits += 1;
+                prefix_reused += shared;
             }
             let mut prompt = req.prompt;
             prompt.truncate(keep);
             let mut seq = ActiveSeq {
                 id: req.id,
                 prompt,
-                fed: 0,
+                fed: shared,
                 max_new: req.max_new,
                 out: Vec::new(),
                 ttft: None,
                 kv_cost,
+                prefix_path: path,
                 steps_resident: 0,
             };
             if seq.max_new == 0 {
@@ -687,8 +793,18 @@ pub fn serve_with(
                     continue;
                 }
             }
+            // A hit lane starts from the cached pages (its cache clock
+            // already at `shared`), so prefill resumes mid-prompt
+            // exactly like a resumed lane — skipping the shared rows'
+            // engine work entirely.
+            let cache = if shared > 0 {
+                let pc = prefix.as_ref().expect("prefix hit implies a cache");
+                engine.new_cache_with_prefix(&pc.pages(&seq.prefix_path), shared)
+            } else {
+                engine.new_cache()
+            };
             active.push(seq);
-            caches.push(engine.new_cache());
+            caches.push(cache);
         }
         if active.is_empty() {
             break;
@@ -706,6 +822,7 @@ pub fn serve_with(
             &mut robust,
         );
         peak_lanes = peak_lanes.max(active.len());
+        peak_kv = peak_kv.max(pool.reserved());
         for seq in active.iter_mut() {
             seq.steps_resident += 1;
         }
@@ -841,9 +958,20 @@ pub fn serve_with(
         for i in (0..active.len()).rev() {
             if retired[i] {
                 let done = active.swap_remove(i);
-                caches.swap_remove(i);
+                let cache = caches.swap_remove(i);
                 let error = exit.swap_remove(i);
                 pool.release(done.kv_cost);
+                if let Some(pc) = prefix.as_mut() {
+                    pc.release(&done.prefix_path);
+                    // Insert-on-retire: a lane whose whole prompt made
+                    // it into the cache (fed or attached) publishes its
+                    // full prompt pages for later admissions. Faulted
+                    // lanes rolled back mid-prompt publish nothing.
+                    if done.fed == done.prompt.len() && !done.prompt.is_empty() {
+                        let (_, ev) = pc.insert(&done.prompt, &cache, &mut pool);
+                        prefix_evictions += ev;
+                    }
+                }
                 let now = t0.elapsed();
                 // A lane faulted or expired before its first token has
                 // no TTFT; report completion time so percentiles stay
@@ -860,6 +988,12 @@ pub fn serve_with(
         }
     }
 
+    if let Some(pc) = prefix.as_mut() {
+        // Every lane has retired, so nothing is pinned: drain the
+        // cache's reservations back into the pool (bookkeeping, not
+        // pressure — deliberately not counted as evictions).
+        pc.drain(&mut pool);
+    }
     debug_assert_eq!(
         pool.reserved(),
         0,
@@ -876,6 +1010,8 @@ pub fn serve_with(
         kv_deferrals,
         (0, 0),
         robust,
+        (prefix_hits, prefix_reused, prefix_evictions),
+        peak_kv,
     );
     (responses, stats)
 }
@@ -896,6 +1032,10 @@ struct SpecSeq {
     /// The last element is always pending (emitted, not yet fed) — the
     /// `Engine::step_speculative` state contract.
     tokens: Vec<u32>,
+    /// Prefix-cache nodes pinned for this lane's TARGET cache (the
+    /// draft cache never shares: its pages come from draft-engine
+    /// numerics, which cached target pages cannot reproduce).
+    prefix_path: Vec<usize>,
     /// Scheduler iterations resident (the `deadline_steps` clock).
     steps_resident: usize,
 }
@@ -952,25 +1092,64 @@ pub fn serve_speculative(
     let mut spec_enabled = true;
     let (mut win_proposed, mut win_accepted) = (0usize, 0usize);
     let mut last_deferred: Option<usize> = None;
+    // Prefix cache over TARGET pages only (see SpecSeq::prefix_path);
+    // same lifecycle as in serve_with.
+    let page_rows = engine.kv_config().page_rows.max(1);
+    let mut prefix = cfg.prefix_cache.then(|| PrefixCache::new(page_rows));
+    let (mut prefix_hits, mut prefix_reused, mut prefix_evictions) = (0usize, 0usize, 0usize);
+    let mut peak_kv = 0usize;
     robust.shed = shed_overload(&mut queue, cfg.max_queued, &mut responses, t0);
 
     loop {
         // Admission: serve_with's rule, with the lane's worst case
         // covering BOTH caches. The draft cache always trails the target
-        // cache, so the same row bound covers it.
+        // cache, so the same row bound covers it. A prefix hit discounts
+        // the TARGET side only — the draft must still prefill the whole
+        // prompt with its own (low-rate) numerics, so its worst case is
+        // undiminished.
         let mut deferred_now = false;
         while active.len() < max_batch {
             let Some(req) = queue.pop_front() else { break };
             let keep = engine.admit_prompt(&req.prompt).len();
             let rows_worst = (keep + req.max_new.saturating_sub(1)).min(max_seq);
+            let mut path: Vec<usize> = Vec::new();
+            let mut shared = 0usize;
+            if req.max_new > 0 && keep > 0 {
+                if let Some(pc) = prefix.as_mut() {
+                    path = pc.lookup(&req.prompt[..keep]);
+                    shared = (path.len() * page_rows).min(keep - 1);
+                    if shared == 0 {
+                        path.clear();
+                    } else {
+                        pc.acquire(&path);
+                    }
+                }
+            }
             let kv_cost = if req.max_new == 0 {
                 0
             } else {
-                lane_cost_bytes(&engine.config, engine.kv_config(), rows_worst)
-                    + lane_cost_bytes(&draft.config, draft.kv_config(), rows_worst)
+                lane_cost_bytes_shared(
+                    &engine.config,
+                    engine.kv_config(),
+                    rows_worst,
+                    shared / page_rows,
+                ) + lane_cost_bytes(&draft.config, draft.kv_config(), rows_worst)
             };
-            if !pool.try_reserve(kv_cost) {
-                if active.is_empty() && pool.reserved() == 0 {
+            let mut admitted = pool.try_reserve(kv_cost);
+            if !admitted {
+                if let Some(pc) = prefix.as_mut() {
+                    while pc.evict_lru(&mut pool) {
+                        prefix_evictions += 1;
+                        if pool.try_reserve(kv_cost) {
+                            admitted = true;
+                            break;
+                        }
+                    }
+                }
+            }
+            if !admitted {
+                let cache_held = prefix.as_ref().map_or(0, PrefixCache::reserved_bytes);
+                if active.is_empty() && pool.reserved() == cache_held {
                     pool.reserve_unchecked(kv_cost); // solo over-budget lane
                 } else {
                     deferred_now = true;
@@ -978,21 +1157,29 @@ pub fn serve_speculative(
                         kv_deferrals += 1;
                         last_deferred = Some(req.id);
                     }
+                    if let Some(pc) = prefix.as_mut() {
+                        pc.release(&path);
+                    }
                     queue.push_front(req);
                     break;
                 }
+            }
+            if shared > 0 {
+                prefix_hits += 1;
+                prefix_reused += shared;
             }
             let mut prompt = req.prompt;
             prompt.truncate(keep);
             let mut seq = SpecSeq {
                 id: req.id,
                 prompt,
-                fed: 0,
+                fed: shared,
                 max_new: req.max_new,
                 out: Vec::new(),
                 ttft: None,
                 kv_cost,
                 tokens: Vec::new(),
+                prefix_path: path,
                 steps_resident: 0,
             };
             if seq.max_new == 0 {
@@ -1025,8 +1212,19 @@ pub fn serve_speculative(
                     continue;
                 }
             }
+            // Target cache starts from the cached prefix pages; the
+            // draft cache always starts fresh and catches up inside the
+            // first speculative round's catch-up prefill (its rows must
+            // come from draft-engine numerics for acceptance to mean
+            // anything).
+            let cache = if shared > 0 {
+                let pc = prefix.as_ref().expect("prefix hit implies a cache");
+                engine.new_cache_with_prefix(&pc.pages(&seq.prefix_path), shared)
+            } else {
+                engine.new_cache()
+            };
             active.push(seq);
-            caches.push(engine.new_cache());
+            caches.push(cache);
             draft_caches.push(draft.new_cache());
         }
         if active.is_empty() {
@@ -1041,6 +1239,7 @@ pub fn serve_speculative(
             &mut robust,
         );
         peak_lanes = peak_lanes.max(active.len());
+        peak_kv = peak_kv.max(pool.reserved());
         for seq in active.iter_mut() {
             seq.steps_resident += 1;
         }
@@ -1225,10 +1424,19 @@ pub fn serve_speculative(
         for i in (0..active.len()).rev() {
             if retired[i] {
                 let done = active.swap_remove(i);
-                caches.swap_remove(i);
+                let cache = caches.swap_remove(i);
                 draft_caches.swap_remove(i);
                 let error = exit.swap_remove(i);
                 pool.release(done.kv_cost);
+                if let Some(pc) = prefix.as_mut() {
+                    pc.release(&done.prefix_path);
+                    // Insert-on-retire publishes TARGET pages only; the
+                    // draft cache is dropped with its lane.
+                    if done.fed == done.prompt.len() && !done.prompt.is_empty() {
+                        let (_, ev) = pc.insert(&done.prompt, &cache, &mut pool);
+                        prefix_evictions += ev;
+                    }
+                }
                 let now = t0.elapsed();
                 let ttft = done.ttft.unwrap_or(now);
                 responses.push(Response {
@@ -1242,6 +1450,9 @@ pub fn serve_speculative(
         }
     }
 
+    if let Some(pc) = prefix.as_mut() {
+        pc.drain(&mut pool);
+    }
     debug_assert_eq!(
         pool.reserved(),
         0,
@@ -1258,6 +1469,8 @@ pub fn serve_speculative(
         kv_deferrals,
         (spec_proposed, spec_accepted),
         robust,
+        (prefix_hits, prefix_reused, prefix_evictions),
+        peak_kv,
     );
     (responses, stats)
 }
@@ -1356,6 +1569,8 @@ pub fn serve_threaded(
         0,
         (0, 0),
         RobustCounters::default(),
+        (0, 0, 0),
+        0,
     );
     (responses, stats)
 }
@@ -2037,5 +2252,126 @@ mod tests {
             assert!(r.error.is_none());
             assert_eq!(r.tokens, *want, "request {} must serve the target's tokens", r.id);
         }
+    }
+
+    /// Engine with 4-row KV pages so prefixes can share pages inside the
+    /// tiny 16-row context (the default page spans the whole window,
+    /// which would leave nothing page-aligned to cache).
+    fn tiny_engine_paged(kv: crate::infer::kv::KvCacheConfig) -> Engine {
+        let cfg = ModelConfig { vocab: 32, dim: 16, heads: 2, layers: 1, mlp: 32, max_seq: 16 };
+        let mut rng = Rng::new(191);
+        Engine::from_dense(&Weights::init_training(cfg, &mut rng)).with_kv_config(kv)
+    }
+
+    #[test]
+    fn prefix_cache_serving_matches_generate_and_reuses_pages() {
+        // The tentpole invariant: turning the prefix cache on changes
+        // TTFT economics (prompt tokens skipped, pages shared) but not
+        // one output token, for dense and quantized pages and under
+        // speculative decoding.
+        use crate::infer::kv::{KvCacheConfig, KvQuantSpec};
+        let kv_modes = [
+            KvCacheConfig { page_rows: 4, ..KvCacheConfig::dense() },
+            KvCacheConfig {
+                page_rows: 4,
+                ..KvCacheConfig::quantized(KvQuantSpec::uniform(1, 5, 1.0, 0.1))
+            },
+        ];
+        for kv in kv_modes {
+            let engine = tiny_engine_paged(kv);
+            // Six requests share an 8-token base (two full pages) and
+            // diverge at the ninth token.
+            let base: Vec<u32> = (0..8).map(|t| (3 + t * 2) as u32).collect();
+            let reqs: Vec<Request> = (0..6)
+                .map(|id| {
+                    let mut prompt = base.clone();
+                    prompt.push((20 + id) as u32);
+                    Request { id, prompt, max_new: 4 }
+                })
+                .collect();
+            let expected: Vec<Vec<u32>> = reqs
+                .iter()
+                .map(|r| engine.generate(&r.prompt, r.max_new))
+                .collect();
+            let off_cfg = ServeConfig::new(2);
+            let on_cfg = ServeConfig { prefix_cache: true, ..ServeConfig::new(2) };
+            let (off_resps, off) = serve_with(&engine, reqs.clone(), off_cfg);
+            let (on_resps, on) = serve_with(&engine, reqs.clone(), on_cfg);
+            for ((r_on, r_off), want) in on_resps.iter().zip(&off_resps).zip(&expected) {
+                assert_eq!(r_on.tokens, *want, "cache-on diverged from generate()");
+                assert_eq!(r_on.tokens, r_off.tokens, "cache flipped a token");
+            }
+            // max_batch 2: requests 0/1 are cold, 2..=5 land after a
+            // retirement has populated the cache — 4 hits × 8 tokens.
+            assert_eq!(on.prefix_hits, 4, "four late requests must hit the cached base");
+            assert_eq!(on.prefix_tokens_reused, 4 * 8);
+            assert_eq!(off.prefix_hits, 0);
+            assert_eq!(
+                on.prompt_tokens + on.prefix_tokens_reused,
+                off.prompt_tokens,
+                "every reused token is a prompt token not re-fed"
+            );
+            assert_eq!(on.accounted(), 6);
+            assert_eq!(off.accounted(), 6);
+        }
+        // Speculative arm: a self-rate draft over the dense paged engine;
+        // draft lanes never share so this exercises the mixed reserve.
+        let engine = tiny_engine_paged(KvCacheConfig { page_rows: 4, ..KvCacheConfig::dense() });
+        let draft = tiny_engine_paged(KvCacheConfig { page_rows: 4, ..KvCacheConfig::dense() });
+        let base: Vec<u32> = (0..8).map(|t| (3 + t * 2) as u32).collect();
+        let reqs: Vec<Request> = (0..6)
+            .map(|id| {
+                let mut prompt = base.clone();
+                prompt.push((20 + id) as u32);
+                Request { id, prompt, max_new: 4 }
+            })
+            .collect();
+        let expected: Vec<Vec<u32>> = reqs
+            .iter()
+            .map(|r| engine.generate(&r.prompt, r.max_new))
+            .collect();
+        let spec_on =
+            ServeConfig { spec_k: 3, prefix_cache: true, ..ServeConfig::new(2) };
+        let (resps, stats) = serve_speculative(&engine, &draft, reqs, spec_on);
+        for (r, want) in resps.iter().zip(&expected) {
+            assert_eq!(r.tokens, *want, "speculative + prefix cache diverged from generate()");
+        }
+        assert!(stats.prefix_hits > 0, "late speculative lanes must hit the cache");
+        assert!(stats.prefix_tokens_reused > 0);
+        assert_eq!(stats.accounted(), 6);
+    }
+
+    #[test]
+    fn prefix_hit_reserves_only_the_non_shared_remainder() {
+        // The [bugfix] satellite: a prefix hit must charge the pool only
+        // for the pages the lane actually owns. Three identical 9-token
+        // prompts under a 4-page budget serialize without the cache
+        // (3 pages each) but run concurrently with it (1 page each after
+        // the first retires and donates its two full prefix pages).
+        use crate::infer::kv::{lane_cost_bytes, KvCacheConfig};
+        let engine = tiny_engine_paged(KvCacheConfig { page_rows: 4, ..KvCacheConfig::dense() });
+        let prompt: Vec<u32> = (0..9).map(|t| (5 + t) as u32).collect();
+        let reqs: Vec<Request> =
+            (0..3).map(|id| Request { id, prompt: prompt.clone(), max_new: 3 }).collect();
+        let expected = engine.generate(&prompt, 3);
+        // One page's worth of lane cost; rows_worst = 11 → 3 pages/lane.
+        let page = lane_cost_bytes(&engine.config, engine.kv_config(), 1);
+        let budget = Some(4 * page);
+        let off_cfg = ServeConfig { kv_budget_bytes: budget, ..ServeConfig::new(4) };
+        let on_cfg =
+            ServeConfig { kv_budget_bytes: budget, prefix_cache: true, ..ServeConfig::new(4) };
+        let (off_resps, off) = serve_with(&engine, reqs.clone(), off_cfg);
+        let (on_resps, on) = serve_with(&engine, reqs, on_cfg);
+        for r in off_resps.iter().chain(&on_resps) {
+            assert_eq!(r.tokens, expected, "budget pressure must never change tokens");
+        }
+        assert_eq!(off.peak_lanes, 1, "without the cache a 4-page budget serializes 3-page lanes");
+        assert_eq!(on.prefix_hits, 2, "both followers must ride the retired leader's pages");
+        assert!(
+            on.peak_lanes >= 2,
+            "prefix hits must shrink the reserve enough to overlap lanes (peak {})",
+            on.peak_lanes
+        );
+        assert!(on.peak_kv_bytes <= 4 * page, "reserve may never exceed the budget");
     }
 }

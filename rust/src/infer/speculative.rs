@@ -45,6 +45,15 @@
 //! backend is bit-identical by contract — so a column-sharded or
 //! layer-pipelined target verifies the exact tokens the single path
 //! would, and acceptance rates are backend-independent.
+//!
+//! Prefix sharing (`infer::prefix`) composes too: a served target cache
+//! may begin with attached shared pages covering part of the prompt.
+//! Round rollbacks are safe against that run because `truncate_to`
+//! never cuts below the prompt rows — every rollback target is ≥ the
+//! fed prompt length, which is ≥ the shared row count — and the draft
+//! engine never shares pages at all (its cache is built from its own
+//! numerics via the lazy catch-up prefill above), so acceptance is
+//! identical with and without a prefix hit.
 
 use crate::infer::engine::{argmax, Engine};
 use crate::infer::kv::KvCache;

@@ -1,0 +1,224 @@
+//! Randomized differential harness for cross-request prefix caching
+//! (`infer::prefix`).
+//!
+//! A seeded LCG (no external deps, no clocks — fully deterministic)
+//! generates request streams with controlled prefix-sharing structure:
+//! a few base prefixes of different page alignments, Zipf-skewed prefix
+//! choice, and divergence suffixes of length 0..=3 so the divergence
+//! point lands exactly ON a page boundary, one row past it, and deep
+//! inside a page — including identical prompts, where sharing is capped
+//! at `keep - 1` so every lane still feeds one real token.
+//!
+//! The contract pinned here, for every cell of
+//! {prefix cache on/off} × {dense, quantized KV} × {plain, speculative}
+//! × {open pool, budget tight enough to defer}:
+//!
+//! - every response's tokens are bit-identical to `Engine::generate`
+//!   AND to the cache-off run of the same stream (the cache changes
+//!   wall-clock and bytes, never output);
+//! - `ServeStats::accounted()` covers every request exactly once;
+//! - the scheduler's own `debug_assert_eq!(pool.reserved(), 0)` at exit
+//!   is live in these debug-profile runs, so a leaked page reservation
+//!   (lane or cache) fails the suite;
+//! - on-arms actually hit (`prefix_hits > 0`) — the streams are built
+//!   so reuse is guaranteed, not incidental;
+//! - a tight budget over DISTINCT prefixes forces LRU eviction
+//!   (`prefix_evictions > 0`) and deferral, still without changing one
+//!   token.
+
+use radio::infer::{
+    lane_cost_bytes, serve_speculative, serve_with, Engine, KvCacheConfig, KvQuantSpec, Request,
+    ServeConfig,
+};
+use radio::model::weights::Weights;
+use radio::model::ModelConfig;
+use radio::util::rng::Rng;
+
+/// Minimal 64-bit LCG (Knuth MMIX constants), top-33-bit output. Local
+/// to this harness so the stream shape never shifts under changes to
+/// `util::rng`.
+struct Lcg(u64);
+
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        self.0 >> 33
+    }
+
+    fn below(&mut self, n: usize) -> usize {
+        (self.next() % n as u64) as usize
+    }
+}
+
+/// Tiny model with 4-row KV pages: max_seq 16 spans four pages, so base
+/// prefixes of 8 and 12 tokens are two- and three-page cacheable runs.
+fn paged_engine(kv: KvCacheConfig) -> Engine {
+    let cfg = ModelConfig { vocab: 32, dim: 16, heads: 2, layers: 1, mlp: 32, max_seq: 16 };
+    let mut rng = Rng::new(0x9E10);
+    Engine::from_dense(&Weights::init_training(cfg, &mut rng)).with_kv_config(kv)
+}
+
+fn dense_paged() -> KvCacheConfig {
+    KvCacheConfig { page_rows: 4, ..KvCacheConfig::dense() }
+}
+
+fn quant_paged() -> KvCacheConfig {
+    KvCacheConfig { page_rows: 4, ..KvCacheConfig::quantized(KvQuantSpec::uniform(1, 5, 1.0, 0.1)) }
+}
+
+/// A stream with heavy, skewed sharing: two base prefixes (12 tokens =
+/// three pages, 10 tokens = two pages + a partial), ~2/3 of requests on
+/// the hot one, suffixes of 0..=3 tokens. Suffix 0 repeats the prompt
+/// verbatim (mid-page reuse via the `keep - 1` cap); suffixes 1..=3
+/// walk the divergence point across a page boundary.
+fn shared_stream(n: usize, seed: u64) -> Vec<Request> {
+    let bases: [Vec<u32>; 2] = [
+        (0..12).map(|t| (2 + t) as u32).collect(),
+        (0..10).map(|t| (17 + t % 13) as u32).collect(),
+    ];
+    let mut lcg = Lcg(seed);
+    (0..n)
+        .map(|id| {
+            let base = &bases[if lcg.below(3) < 2 { 0 } else { 1 }];
+            let suffix = lcg.below(4).min(16 - base.len());
+            let mut prompt = base.clone();
+            for _ in 0..suffix {
+                prompt.push(lcg.below(32) as u32);
+            }
+            let max_new = 1 + lcg.below(4);
+            Request { id, prompt, max_new }
+        })
+        .collect()
+}
+
+/// Run one {on, off} pair under `cfg_base` and check the differential
+/// contract. `spec` switches to the speculative scheduler with a
+/// same-weights draft. Returns the on-arm hit count for the caller's
+/// stream-specific asserts.
+fn assert_differential(
+    engine: &Engine,
+    draft: Option<&Engine>,
+    reqs: &[Request],
+    cfg_base: ServeConfig,
+) -> usize {
+    let expected: Vec<Vec<u32>> =
+        reqs.iter().map(|r| engine.generate(&r.prompt, r.max_new)).collect();
+    let on_cfg = ServeConfig { prefix_cache: true, ..cfg_base };
+    let (off_resps, off) = match draft {
+        Some(d) => serve_speculative(engine, d, reqs.to_vec(), cfg_base),
+        None => serve_with(engine, reqs.to_vec(), cfg_base),
+    };
+    let (on_resps, on) = match draft {
+        Some(d) => serve_speculative(engine, d, reqs.to_vec(), on_cfg),
+        None => serve_with(engine, reqs.to_vec(), on_cfg),
+    };
+    assert_eq!(off.accounted(), reqs.len(), "off-arm must account every request");
+    assert_eq!(on.accounted(), reqs.len(), "on-arm must account every request");
+    assert_eq!(off.prefix_hits, 0, "the cache must be fully off when disabled");
+    for ((r_on, r_off), want) in on_resps.iter().zip(&off_resps).zip(&expected) {
+        assert!(r_on.error.is_none() && r_off.error.is_none());
+        assert_eq!(r_off.tokens, *want, "request {}: cache-off diverged from generate()", r_off.id);
+        assert_eq!(r_on.tokens, *want, "request {}: cache-on diverged from generate()", r_on.id);
+    }
+    assert_eq!(
+        on.prompt_tokens + on.prefix_tokens_reused,
+        off.prompt_tokens,
+        "reused tokens must be exactly the prompt tokens not re-fed"
+    );
+    on.prefix_hits
+}
+
+#[test]
+fn shared_streams_are_token_identical_across_the_full_matrix() {
+    let reqs = shared_stream(14, 0xD1FF_0001);
+    for kv in [dense_paged(), quant_paged()] {
+        let engine = paged_engine(kv.clone());
+        let draft = paged_engine(kv.clone());
+        // Budget for two worst-case lanes: tight enough to defer under
+        // max_batch 3 yet never wedge (the solo-progress guard admits
+        // an oversized lane when only cache reservations remain).
+        let worst = lane_cost_bytes(&engine.config, engine.kv_config(), engine.config.max_seq);
+        for budget in [None, Some(2 * worst)] {
+            for spec in [false, true] {
+                let cfg = ServeConfig {
+                    spec_k: if spec { 3 } else { 0 },
+                    kv_budget_bytes: budget,
+                    ..ServeConfig::new(3)
+                };
+                let d = spec.then_some(&draft);
+                let hits = assert_differential(&engine, d, &reqs, cfg);
+                assert!(
+                    hits > 0,
+                    "skewed 14-request stream must hit (quant={} spec={spec} budget={budget:?})",
+                    kv.quant.is_some()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn identical_prompts_reuse_all_but_one_token_at_every_alignment() {
+    // Prompt lengths walking the page boundary: 8 (aligned), 9 (one row
+    // past), 11 (inside the tail page), 12 (aligned again). Four
+    // identical requests each: the first is cold, the rest must reuse
+    // `keep - 1` tokens — full pages plus a COW mid-page attach.
+    let engine = paged_engine(dense_paged());
+    for plen in [8usize, 9, 11, 12] {
+        let prompt: Vec<u32> = (0..plen).map(|t| (1 + t * 2 % 31) as u32).collect();
+        let reqs: Vec<Request> =
+            (0..4).map(|id| Request { id, prompt: prompt.clone(), max_new: 3 }).collect();
+        let hits = assert_differential(&engine, None, &reqs, ServeConfig::new(2));
+        assert!(hits > 0, "identical prompts of length {plen} must hit the cache");
+    }
+}
+
+#[test]
+fn tight_budget_over_distinct_prefixes_forces_eviction_not_divergence() {
+    // Six DISTINCT 8-token prefixes (9-token prompts, 3 worst-case
+    // pages each) under a 5-page budget: each retirement caches two
+    // pages nobody else wants, so the next admission must evict them to
+    // fit. Evictions and deferrals both fire; tokens never change.
+    let engine = paged_engine(dense_paged());
+    let reqs: Vec<Request> = (0..6)
+        .map(|id| {
+            let mut prompt: Vec<u32> = (0..8).map(|t| ((id * 5 + t) % 32) as u32).collect();
+            prompt.push((31 - id) as u32);
+            Request { id, prompt, max_new: 3 }
+        })
+        .collect();
+    let expected: Vec<Vec<u32>> =
+        reqs.iter().map(|r| engine.generate(&r.prompt, r.max_new)).collect();
+    let page = lane_cost_bytes(&engine.config, engine.kv_config(), 1);
+    let cfg = ServeConfig {
+        kv_budget_bytes: Some(5 * page),
+        prefix_cache: true,
+        ..ServeConfig::new(2)
+    };
+    let (resps, stats) = serve_with(&engine, reqs, cfg);
+    for (r, want) in resps.iter().zip(&expected) {
+        assert!(r.error.is_none());
+        assert_eq!(r.tokens, *want, "request {} diverged under eviction pressure", r.id);
+    }
+    assert_eq!(stats.accounted(), 6);
+    assert_eq!(stats.prefix_hits, 0, "distinct prefixes can never hit");
+    assert!(stats.prefix_evictions > 0, "stale runs must be LRU-evicted to admit new lanes");
+    assert!(stats.kv_deferrals > 0, "the 5-page pool must defer 3-page lanes");
+    assert!(stats.peak_kv_bytes <= 5 * page, "reserve may never exceed the budget");
+}
+
+#[test]
+fn deferral_under_pressure_keeps_spec_and_quant_streams_identical() {
+    // The nastiest cell run longer: quantized pages + speculative
+    // decoding + a pool sized for one worst-case lane, over a stream
+    // with repeats. Serialization, catch-up prefills, COW attaches and
+    // cache drain all compose without changing a token.
+    let kv = quant_paged();
+    let engine = paged_engine(kv.clone());
+    let draft = paged_engine(kv);
+    let reqs = shared_stream(10, 0xD1FF_0002);
+    let worst = lane_cost_bytes(&engine.config, engine.kv_config(), engine.config.max_seq);
+    let cfg =
+        ServeConfig { spec_k: 2, kv_budget_bytes: Some(worst), ..ServeConfig::new(4) };
+    assert_differential(&engine, Some(&draft), &reqs, cfg);
+}
